@@ -1,0 +1,130 @@
+//! Shared helpers for the paper-experiment benches.
+//!
+//! Every bench binary regenerates one table/figure of the paper. They skip
+//! gracefully (exit 0 with a message) when `artifacts/` has not been built,
+//! so `cargo bench` works in a fresh checkout.
+
+#![allow(dead_code)]
+
+use sjd::coordinator::policy::DecodePolicy;
+use sjd::coordinator::sampler::{SampleOptions, Sampler};
+use sjd::runtime::Engine;
+use sjd::tensor::{Pcg64, Tensor};
+
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("SJD_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+/// Load the engine, or exit 0 with a skip message (CI without artifacts).
+pub fn engine_or_skip() -> Engine {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("SKIP: {} missing — run `make artifacts`", dir.join("manifest.json").display());
+        std::process::exit(0);
+    }
+    match Engine::new(&dir) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("engine init failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+/// `--quick` in bench argv (or SJD_QUICK=1) shrinks sample counts.
+pub fn quick() -> bool {
+    std::env::args().any(|a| a == "--quick") || std::env::var("SJD_QUICK").is_ok()
+}
+
+/// Map the repo's model names to the paper's dataset labels.
+pub fn paper_label(model: &str) -> &'static str {
+    match model {
+        "tf10" => "CIFAR-10 (synth10)",
+        "tf100" => "CIFAR-100 (synth100)",
+        "tfafhq" => "AFHQ (synthafhq)",
+        _ => "?",
+    }
+}
+
+/// Dataset name backing a tarflow model.
+pub fn dataset_for(model: &str) -> &'static str {
+    match model {
+        "tf10" => "synth10",
+        "tf100" => "synth100",
+        "tfafhq" => "synthafhq",
+        _ => panic!("unknown model {model}"),
+    }
+}
+
+/// Metric network matching a model's resolution.
+pub fn metricnet_for(model: &str) -> &'static str {
+    match model {
+        "tfafhq" => "metricnet32",
+        _ => "metricnet16",
+    }
+}
+
+/// Generate `n` images under `policy`, returning (images, wall seconds,
+/// total jacobi iters, per-position step counts accumulated).
+pub struct GenRun {
+    pub images: Vec<Tensor>,
+    pub wall: f64,
+    pub batches: usize,
+    pub per_position_steps: Vec<Vec<usize>>,
+    pub per_position_wall: Vec<Vec<f64>>,
+    pub other_wall: f64,
+}
+
+pub fn generate(
+    sampler: &Sampler<Engine>,
+    policy: DecodePolicy,
+    tau: f32,
+    n_images: usize,
+    seed: u64,
+) -> anyhow::Result<GenRun> {
+    let mut opts = SampleOptions { policy, ..Default::default() };
+    opts.jacobi.tau = tau;
+    let kk = sampler.meta.blocks;
+    let mut run = GenRun {
+        images: Vec::with_capacity(n_images),
+        wall: 0.0,
+        batches: 0,
+        per_position_steps: vec![Vec::new(); kk],
+        per_position_wall: vec![Vec::new(); kk],
+        other_wall: 0.0,
+    };
+    let mut rng = Pcg64::seed(seed);
+    while run.images.len() < n_images {
+        opts.seed = seed.wrapping_add(run.batches as u64);
+        let (imgs, out) = sampler.sample_images(&opts, &mut rng)?;
+        run.wall += out.total_wall.as_secs_f64();
+        run.other_wall += out.other_wall.as_secs_f64();
+        for t in &out.traces {
+            run.per_position_steps[t.position].push(t.steps);
+            run.per_position_wall[t.position].push(t.wall.as_secs_f64());
+        }
+        run.batches += 1;
+        for img in imgs {
+            if run.images.len() < n_images {
+                run.images.push(img);
+            }
+        }
+    }
+    Ok(run)
+}
+
+pub fn mean_usize(v: &[usize]) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    v.iter().sum::<usize>() as f64 / v.len() as f64
+}
+
+pub fn mean_f64(v: &[f64]) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    v.iter().sum::<f64>() / v.len() as f64
+}

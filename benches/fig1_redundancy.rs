@@ -1,0 +1,70 @@
+//! **Fig 1 / Fig A1**: sequential redundancy — cosine similarity and L2
+//! distance between per-layer outputs of standard inference and inference
+//! with the `o` nearest preceding dependencies masked (eq 6), o ∈ {1, 2, 5}.
+//!
+//! Paper shape: the first generation layer (decode position 0) deviates far
+//! more than subsequent layers — low redundancy at the noise-consuming layer,
+//! high redundancy in the refinement layers.
+
+mod common;
+
+use common::*;
+use sjd::benchkit::Report;
+use sjd::coordinator::jacobi::JacobiConfig;
+use sjd::coordinator::sampler::Sampler;
+use sjd::runtime::HostTensor;
+use sjd::tensor::{Pcg64, Tensor};
+
+fn to_tensor(h: &HostTensor) -> Tensor {
+    Tensor::new(h.shape(), h.as_f32().unwrap().to_vec()).unwrap()
+}
+
+fn main() -> anyhow::Result<()> {
+    let engine = engine_or_skip();
+    let model = "tf10";
+    let batch = *engine.manifest().model(model)?.batch_sizes.iter().max().unwrap();
+    let sampler = Sampler::new(&engine, model, batch)?;
+    let kk = sampler.meta.blocks;
+    let exact = JacobiConfig { tau: 1e-5, ..Default::default() };
+
+    let mut report = Report::new("Fig 1/A1 — layer-output deviation under o-masked dependencies");
+    let mut rows = Vec::new();
+
+    for o in [1usize, 2, 5] {
+        // Standard and masked inference from the same prior draw, comparing
+        // the layer outputs h_k at every decode position.
+        let mut rng = Pcg64::seed(11);
+        let z0 = sampler.sample_prior(&mut rng);
+        let mut h_std = z0.clone();
+        let mut h_msk = z0;
+        let mut cos_row = Vec::new();
+        let mut l2_row = Vec::new();
+        for pos in 0..kk {
+            let k = kk - 1 - pos;
+            let (u_std, _) = sampler.jacobi_decode(k, &h_std, &exact, 0)?;
+            let (u_msk, _) = sampler.jacobi_decode(k, &h_msk, &exact, o)?;
+            h_std = if k % 2 == 1 { sampler.reverse_tokens(&u_std)? } else { u_std };
+            h_msk = if k % 2 == 1 { sampler.reverse_tokens(&u_msk)? } else { u_msk };
+            let a = to_tensor(&h_std);
+            let b = to_tensor(&h_msk);
+            let cos = a.cosine_sim(&b)?;
+            let l2 = a.l2_dist(&b)? / (a.numel() as f32).sqrt();
+            cos_row.push(cos as f64);
+            l2_row.push(l2 as f64);
+            rows.push(vec![
+                format!("o={o}"),
+                format!("layer {}", pos + 1),
+                format!("{cos:.4}"),
+                format!("{l2:.4}"),
+            ]);
+        }
+        println!("o={o}: cosine per layer {cos_row:?}");
+        report.series(&format!("cosine_sim_o{o}"), &cos_row);
+        report.series(&format!("l2_dist_o{o}"), &l2_row);
+    }
+
+    report.table(&["Mask", "Layer (decode order)", "Cosine sim", "L2/√N"], &rows);
+    report.note("Paper shape: layer 1 (decode position 0) deviates most; later layers stay close to 1.0 cosine.");
+    report.finish();
+    Ok(())
+}

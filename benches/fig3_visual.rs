@@ -1,0 +1,50 @@
+//! **Fig 3 / A7 / A8**: visual comparison — sample sheets from sequential
+//! inference and from SJD on all three datasets, plus the wall-clock ratio.
+
+mod common;
+
+use common::*;
+use sjd::benchkit::Report;
+use sjd::coordinator::policy::DecodePolicy;
+use sjd::coordinator::sampler::Sampler;
+use sjd::imageio::{compose_grid, write_png, Image};
+
+fn main() -> anyhow::Result<()> {
+    let engine = engine_or_skip();
+    let mut report = Report::new("Fig 3/A7/A8 — visual comparison sequential vs SJD");
+    let mut rows = Vec::new();
+
+    for model in ["tf10", "tf100", "tfafhq"] {
+        if engine.manifest().model(model).is_err() {
+            continue;
+        }
+        let batch = *engine.manifest().model(model)?.batch_sizes.iter().max().unwrap();
+        let sampler = Sampler::new(&engine, model, batch)?;
+        let n = batch.min(8);
+
+        let seq = generate(&sampler, DecodePolicy::Sequential, 0.5, n, 42)?;
+        let sjd = generate(&sampler, DecodePolicy::Selective { seq_blocks: 1 }, 0.5, n, 42)?;
+
+        let mut sheet: Vec<Image> = Vec::new();
+        for t in seq.images.iter().take(8) {
+            sheet.push(Image::from_tensor_pm1(t)?);
+        }
+        for t in sjd.images.iter().take(8) {
+            sheet.push(Image::from_tensor_pm1(t)?);
+        }
+        let grid = compose_grid(&sheet, 8, 2);
+        let p = artifacts_dir().join(format!("fig3_visual_{model}.png"));
+        write_png(&grid, &p)?;
+        let speed = seq.wall / sjd.wall;
+        println!("{model}: sheet {} ({speed:.1}x acceleration)", p.display());
+        rows.push(vec![
+            paper_label(model).to_string(),
+            format!("{:.1}x", speed),
+            p.display().to_string(),
+        ]);
+    }
+    report.table(&["Dataset", "Acceleration", "Sheet"], &rows);
+    report.note("Same seeds per row: top = sequential, bottom = SJD — visually identical per the paper.");
+    report.finish();
+    Ok(())
+}

@@ -1,0 +1,115 @@
+//! §Perf micro-benches: per-call runtime overhead (marshal vs execute),
+//! jstep/seqstep unit costs, batcher formation latency, buffer pool, and RNG
+//! throughput. These feed the EXPERIMENTS.md §Perf iteration log.
+
+mod common;
+
+use common::*;
+use sjd::benchkit::{time_fn, Report};
+use sjd::coordinator::batcher::Batcher;
+use sjd::coordinator::sampler::Sampler;
+use sjd::coordinator::state::BufferPool;
+use sjd::runtime::HostTensor;
+use sjd::tensor::{Pcg64, Tensor};
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    let engine = engine_or_skip();
+    let mut report = Report::new("§Perf — microbenchmarks");
+    let mut rows = Vec::new();
+    let iters = if quick() { 5 } else { 30 };
+
+    // --- artifact call costs ---
+    let model = "tf10";
+    if engine.manifest().model(model).is_ok() {
+        let batch = *engine.manifest().model(model)?.batch_sizes.iter().max().unwrap();
+        let sampler = Sampler::new(&engine, model, batch)?;
+        let meta = &sampler.meta;
+        let (l, d) = (meta.seq_len, meta.token_dim);
+        let mut rng = Pcg64::seed(1);
+        let z = HostTensor::f32(&[batch, l, d], Tensor::randn(&[batch, l, d], &mut rng).into_data());
+        let y = z.clone();
+        let jstep = format!("{model}_block_jstep_b{batch}");
+        engine.warmup(&[&jstep])?;
+        let t = time_fn(3, iters, || {
+            let _ = engine
+                .call(&jstep, &[HostTensor::scalar_i32(0), z.clone(), y.clone(), HostTensor::scalar_i32(0)])
+                .unwrap();
+        });
+        rows.push(vec![
+            format!("jstep call ({model} b{batch})"),
+            format!("{:.2} ms", t.mean.as_secs_f64() * 1e3),
+        ]);
+
+        // Marshal vs execute split from engine stats.
+        engine.reset_stats();
+        for _ in 0..iters {
+            let _ = engine.call(
+                &jstep,
+                &[HostTensor::scalar_i32(0), z.clone(), y.clone(), HostTensor::scalar_i32(0)],
+            )?;
+        }
+        let stats = engine.stats();
+        let s = &stats[&jstep];
+        rows.push(vec![
+            "jstep exec / marshal split".into(),
+            format!(
+                "{:.2} ms exec, {:.3} ms marshal",
+                s.exec_time.as_secs_f64() * 1e3 / s.calls as f64,
+                s.marshal_time.as_secs_f64() * 1e3 / s.calls as f64
+            ),
+        ]);
+
+        let seqstep = format!("{model}_block_seqstep_b{batch}");
+        engine.warmup(&[&seqstep])?;
+        let (nl, dm) = (meta.layers_per_block, meta.model_dim);
+        let kv = HostTensor::f32(&[nl, batch, l, dm], vec![0.0; nl * batch * l * dm]);
+        let tok = HostTensor::f32(&[batch, d], vec![0.0; batch * d]);
+        let t = time_fn(3, iters, || {
+            let _ = engine
+                .call(
+                    &seqstep,
+                    &[
+                        HostTensor::scalar_i32(0),
+                        tok.clone(),
+                        tok.clone(),
+                        HostTensor::scalar_i32(5),
+                        kv.clone(),
+                        kv.clone(),
+                    ],
+                )
+                .unwrap();
+        });
+        rows.push(vec![
+            format!("seqstep call ({model} b{batch})"),
+            format!("{:.2} ms", t.mean.as_secs_f64() * 1e3),
+        ]);
+    }
+
+    // --- host-side substrates ---
+    let mut rng = Pcg64::seed(2);
+    let t = time_fn(2, 50, || {
+        let _ = std::hint::black_box(Tensor::randn(&[8, 256, 12], &mut rng));
+    });
+    rows.push(vec!["prior randn (8×256×12)".into(), format!("{:.0} µs", t.mean.as_secs_f64() * 1e6)]);
+
+    let pool = BufferPool::new();
+    let t = time_fn(2, 200, || {
+        let b = pool.take_zeroed(&[2, 8, 256, 96]);
+        pool.give_back(std::hint::black_box(b));
+    });
+    rows.push(vec!["buffer pool take+return (1.5 MB)".into(), format!("{:.0} µs", t.mean.as_secs_f64() * 1e6)]);
+
+    let batcher = Batcher::new(8, Duration::from_millis(1));
+    let t = time_fn(2, 100, || {
+        for i in 0..8 {
+            let _ = batcher.submit(i, i);
+        }
+        let _ = std::hint::black_box(batcher.next_batch());
+    });
+    rows.push(vec!["batcher 8-slot form".into(), format!("{:.0} µs", t.mean.as_secs_f64() * 1e6)]);
+
+    report.table(&["Operation", "Cost"], &rows);
+    report.finish();
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! **Table 1**: Sequential vs UJD vs SJD — generation time, speedup, and
+//! quality (proxy-FID, CLIP-IQA proxy, BRISQUE) on the three datasets.
+//!
+//! Paper shape to reproduce: SJD fastest everywhere (up to 4.7×); UJD helps
+//! on the small-L models but *loses* to sequential on the large-L AFHQ
+//! stand-in; quality metrics statistically unchanged across methods.
+
+mod common;
+
+use common::*;
+use sjd::benchkit::Report;
+use sjd::coordinator::policy::DecodePolicy;
+use sjd::coordinator::sampler::Sampler;
+use sjd::quality::evaluate_quality;
+
+fn main() -> anyhow::Result<()> {
+    let engine = engine_or_skip();
+    let quick = quick();
+    let mut report = Report::new("Table 1 — Sequential vs UJD vs SJD (time + quality)");
+    report.note(format!("quick mode: {quick}"));
+
+    let mut rows = Vec::new();
+    for model in ["tf10", "tf100", "tfafhq"] {
+        if engine.manifest().model(model).is_err() {
+            println!("skipping {model}: not in manifest");
+            continue;
+        }
+        let batch = *engine.manifest().model(model)?.batch_sizes.iter().max().unwrap();
+        let sampler = Sampler::new(&engine, model, batch)?;
+        // UJD on the large-L model runs its first block to the full L-cap
+        // (it never converges there — that's the paper's point), costing
+        // L × jstep per batch; keep the afhq sample count small.
+        let n_images = match (model, quick) {
+            ("tfafhq", true) => batch,
+            ("tfafhq", false) => 16,
+            (_, true) => batch,
+            (_, false) => 128,
+        };
+        let reference = engine.manifest().load_dataset(dataset_for(model))?;
+        let metric = metricnet_for(model);
+
+        let mut seq_wall_per_batch = None;
+        for policy in [
+            DecodePolicy::Sequential,
+            DecodePolicy::UniformJacobi,
+            DecodePolicy::Selective { seq_blocks: 1 },
+        ] {
+            let label = policy.label();
+            // Warmup: compile all artifacts before timing.
+            let _ = generate(&sampler, policy.clone(), 0.5, batch, 7)?;
+            let run = generate(&sampler, policy.clone(), 0.5, n_images, 42)?;
+            let per_batch = run.wall / run.batches as f64;
+            let speedup = match seq_wall_per_batch {
+                None => {
+                    seq_wall_per_batch = Some(per_batch);
+                    1.0
+                }
+                Some(seq) => seq / per_batch,
+            };
+            let q = evaluate_quality(&engine, metric, &run.images, &reference)?;
+            println!(
+                "{model} {label:>10}: {per_batch:.3}s/batch ({speedup:.1}x) FID {:.2} IQA {:.3} BRISQUE {:.1}",
+                q.fid, q.clip_iqa, q.brisque
+            );
+            rows.push(vec![
+                paper_label(model).to_string(),
+                label,
+                format!("{per_batch:.3}"),
+                format!("{speedup:.1}x"),
+                format!("{:.2}", q.fid),
+                format!("{:.3}", q.clip_iqa),
+                format!("{:.1}", q.brisque),
+            ]);
+        }
+    }
+    report.table(
+        &["Dataset", "Method", "Time/batch (s)", "Speedup", "FID*", "CLIP-IQA*", "BRISQUE*"],
+        &rows,
+    );
+    report.note("(*) proxy metrics — see DESIGN.md §5 for the substitutions.");
+    report.note("Paper shape: SJD fastest everywhere; UJD < Sequential on the large-L model only.");
+    report.finish();
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! **Table A5**: MAF on the Boltzmann-distribution task — sequential vs ours
+//! (all-layer Jacobi): inference time, average energy/site, average |M|.
+//! Physics observables must match the Metropolis MCMC reference.
+
+mod common;
+
+use common::*;
+use sjd::benchkit::Report;
+use sjd::coordinator::maf::{MafMode, MafSampler};
+use sjd::physics::IsingModel;
+
+fn main() -> anyhow::Result<()> {
+    let engine = engine_or_skip();
+    if engine.manifest().model("maf_ising").is_err() {
+        println!("SKIP: maf_ising not in manifest");
+        return Ok(());
+    }
+    let batch = *engine.manifest().model("maf_ising")?.batch_sizes.first().unwrap();
+    let sampler = MafSampler::new(&engine, "maf_ising", batch)?;
+    let model = IsingModel::new(8, 3.0);
+    let batches = if quick() { 2 } else { 8 };
+    let cfg = sjd::coordinator::maf::maf_config(0.05);
+
+    let mut report = Report::new("Table A5 — MAF Boltzmann approximation (8×8 Ising, T = 3.0)");
+    let mut rows = Vec::new();
+
+    // References.
+    if let Some(m) = engine.manifest().datasets.get("ising_ref") {
+        let e = m.extra.get("energy_per_site").and_then(|v| v.as_f64()).unwrap_or(f64::NAN);
+        let mag = m.extra.get("abs_magnetization").and_then(|v| v.as_f64()).unwrap_or(f64::NAN);
+        rows.push(vec!["MCMC reference".into(), "—".into(), format!("{e:.4}"), format!("{mag:.4}")]);
+    }
+
+    let mut seq_time = None;
+    for (mode, label) in [(MafMode::Sequential, "Sequential"), (MafMode::Jacobi, "Ours")] {
+        // Warmup compile.
+        let mut rng = sjd::tensor::Pcg64::seed(1);
+        let _ = sampler.sample(mode, &cfg, &mut rng)?;
+        let mut rng = sjd::tensor::Pcg64::seed(77);
+        let mut wall = 0.0;
+        let mut evals = 0;
+        let mut all = Vec::new();
+        for _ in 0..batches {
+            let out = sampler.sample(mode, &cfg, &mut rng)?;
+            wall += out.total_wall.as_secs_f64();
+            evals += out.made_evals();
+            all.extend_from_slice(out.samples.as_f32()?);
+        }
+        let stats = model.stats_from_continuous(&all);
+        let speed = match seq_time {
+            None => {
+                seq_time = Some(wall);
+                "1.0x".to_string()
+            }
+            Some(s) => format!("{:.1}x", s / wall),
+        };
+        println!(
+            "{label}: {wall:.2}s ({evals} MADE evals, {speed}) E/site {:.4} |M| {:.4}",
+            stats.energy_per_site, stats.abs_magnetization
+        );
+        rows.push(vec![
+            label.into(),
+            format!("{wall:.2}s ({speed})"),
+            format!("{:.4}", stats.energy_per_site),
+            format!("{:.4}", stats.abs_magnetization),
+        ]);
+    }
+
+    report.table(
+        &["Method", "Inference time", "Avg energy/site", "Avg |magnetization|"],
+        &rows,
+    );
+    report.note("Paper shape: large speedup (paper 15.7x on GPU), observables match MCMC within noise.");
+    report.finish();
+    Ok(())
+}

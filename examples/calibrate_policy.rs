@@ -1,0 +1,68 @@
+//! Adaptive policy calibration: measure per-block sequential vs Jacobi cost,
+//! derive a per-block policy, and compare it against the paper's static SJD.
+//!
+//! Demonstrates the `DecodePolicy::Custom` path — on models whose redundancy
+//! profile differs from "first block only", calibration can beat static SJD.
+//!
+//! ```bash
+//! cargo run --release --example calibrate_policy [artifacts] [model]
+//! ```
+
+use anyhow::Result;
+use sjd::coordinator::jacobi::JacobiConfig;
+use sjd::coordinator::policy::{calibrate, DecodePolicy};
+use sjd::coordinator::sampler::{SampleOptions, Sampler};
+use sjd::runtime::Engine;
+use sjd::tensor::Pcg64;
+
+fn main() -> Result<()> {
+    let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let model = std::env::args().nth(2).unwrap_or_else(|| "tf10".into());
+    let engine = Engine::new(&artifacts)?;
+    let batch = engine.manifest().model(&model)?.batch_sizes.iter().copied().max().unwrap_or(1);
+    let sampler = Sampler::new(&engine, &model, batch)?;
+    let kk = sampler.meta.blocks;
+
+    // --- calibration pass: decode one prior batch, measuring both paths ---
+    let mut rng = Pcg64::seed(7);
+    let mut h = sampler.sample_prior(&mut rng);
+    let mut seq_walls = Vec::new();
+    let mut jstats = Vec::new();
+    println!("calibrating {} ({} blocks)...", model, kk);
+    for pos in 0..kk {
+        let k = kk - 1 - pos;
+        let t0 = std::time::Instant::now();
+        let (u, _) = sampler.sequential_decode_block(k, &h)?;
+        seq_walls.push(t0.elapsed());
+        let (_, stats) = sampler.jacobi_decode(k, &h, &JacobiConfig::default(), 0)?;
+        println!(
+            "  pos {pos}: seq {:>6.1} ms | jacobi {:>2} iters {:>6.1} ms{}",
+            seq_walls[pos].as_secs_f64() * 1e3,
+            stats.iterations,
+            stats.wall.as_secs_f64() * 1e3,
+            if stats.converged { "" } else { " (cap hit)" }
+        );
+        jstats.push(stats);
+        h = if k % 2 == 1 { sampler.reverse_tokens(&u)? } else { u };
+    }
+    let adaptive = calibrate(&jstats, &seq_walls);
+    println!("calibrated: {adaptive:?}");
+
+    // --- compare policies end to end ---
+    for policy in [
+        DecodePolicy::Sequential,
+        DecodePolicy::UniformJacobi,
+        DecodePolicy::Selective { seq_blocks: 1 },
+        adaptive,
+    ] {
+        let label = policy.label();
+        let opts = SampleOptions { policy, ..Default::default() };
+        let mut rng = Pcg64::seed(42);
+        // Warmup + timed run.
+        let _ = sampler.sample_images(&opts, &mut rng)?;
+        let mut rng = Pcg64::seed(43);
+        let (_, out) = sampler.sample_images(&opts, &mut rng)?;
+        println!("{label:>12}: {:.3}s per batch of {batch}", out.total_wall.as_secs_f64());
+    }
+    Ok(())
+}

@@ -1,0 +1,179 @@
+//! End-to-end serving driver (the repo's E2E validation, EXPERIMENTS.md §E2E):
+//! starts the full stack — router workers (each with its own PJRT engine),
+//! dynamic batcher, HTTP server — then runs a Poisson-arrival load generator
+//! over real HTTP and reports latency percentiles + throughput for the
+//! sequential baseline vs SJD.
+//!
+//! ```bash
+//! cargo run --release --example serve_load [artifacts] [n_requests]
+//! ```
+
+use anyhow::{Context, Result};
+use sjd::coordinator::batcher::Batcher;
+use sjd::coordinator::policy::DecodePolicy;
+use sjd::coordinator::router::{Router, RouterConfig};
+use sjd::coordinator::sampler::SampleOptions;
+use sjd::coordinator::server::Server;
+use sjd::exec::ThreadPool;
+use sjd::metrics::Registry;
+use sjd::tensor::Pcg64;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+fn http_post(addr: &str, path: &str, body: &str) -> Result<String> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(Duration::from_secs(300)))?;
+    write!(
+        stream,
+        "POST {path} HTTP/1.1\r\nHost: sjd\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )?;
+    let mut resp = String::new();
+    stream.read_to_string(&mut resp)?;
+    Ok(resp)
+}
+
+struct RunStats {
+    latencies_ms: Vec<f64>,
+    wall: Duration,
+    ok: u64,
+}
+
+fn run_load(addr: &str, n_requests: usize, rps: f64, label: &str) -> Result<RunStats> {
+    let pool = ThreadPool::new(8);
+    let lat = Arc::new(Mutex::new(Vec::new()));
+    let ok = Arc::new(AtomicU64::new(0));
+    let mut rng = Pcg64::seed(999);
+    let t0 = Instant::now();
+    for i in 0..n_requests {
+        // Poisson arrivals.
+        let gap = rng.next_exp() / rps;
+        std::thread::sleep(Duration::from_secs_f64(gap));
+        let addr = addr.to_string();
+        let lat = lat.clone();
+        let ok = ok.clone();
+        pool.spawn(move || {
+            let t = Instant::now();
+            let body = format!("{{\"n\": 1, \"seed\": {i}}}");
+            if let Ok(resp) = http_post(&addr, "/generate", &body) {
+                if resp.starts_with("HTTP/1.1 200") {
+                    ok.fetch_add(1, Ordering::SeqCst);
+                }
+            }
+            lat.lock().unwrap().push(t.elapsed().as_secs_f64() * 1e3);
+        });
+    }
+    pool.wait_idle();
+    let wall = t0.elapsed();
+    let mut latencies = lat.lock().unwrap().clone();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    println!(
+        "[{label}] {} ok / {} reqs in {:.1}s ({:.2} img/s) | latency ms p50 {:.0} p95 {:.0} p99 {:.0}",
+        ok.load(Ordering::SeqCst),
+        n_requests,
+        wall.as_secs_f64(),
+        n_requests as f64 / wall.as_secs_f64(),
+        pct(&latencies, 0.50),
+        pct(&latencies, 0.95),
+        pct(&latencies, 0.99),
+    );
+    Ok(RunStats { latencies_ms: latencies, wall, ok: ok.load(Ordering::SeqCst) })
+}
+
+fn pct(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    sorted[((sorted.len() as f64 - 1.0) * q) as usize]
+}
+
+fn serve_and_measure(
+    artifacts: &str,
+    policy: DecodePolicy,
+    addr: &str,
+    n_requests: usize,
+) -> Result<RunStats> {
+    let label = policy.label();
+    let registry = Registry::new();
+    let batcher = Batcher::new(8, Duration::from_millis(30));
+    let router = Router::start(
+        RouterConfig {
+            artifacts_dir: artifacts.into(),
+            model: "tf10".into(),
+            batch_size: 8,
+            workers: 2,
+            options: SampleOptions { policy, ..Default::default() },
+        },
+        batcher.clone(),
+        registry.clone(),
+    )?;
+    let server = Server::new(addr, batcher.clone(), registry.clone());
+    let stop = server.stop_flag();
+    let addr_owned = addr.to_string();
+    let server_thread = std::thread::spawn(move || server.run());
+
+    // Wait for the listener.
+    for _ in 0..100 {
+        if TcpStream::connect(&addr_owned).is_ok() {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    // Health check.
+    let health = http_post(addr, "/healthz", "")?;
+    anyhow::ensure!(!health.is_empty(), "no health response");
+
+    let stats = run_load(addr, n_requests, 4.0, &label)?;
+
+    // Print server-side metrics.
+    let metrics = registry.render_text();
+    for line in metrics.lines() {
+        if line.starts_with("sjd_images_generated") || line.starts_with("sjd_batch_fill") {
+            println!("  {line}");
+        }
+    }
+
+    // Shut down: set stop flag and poke the listener.
+    stop.store(true, Ordering::SeqCst);
+    let _ = TcpStream::connect(addr);
+    let _ = server_thread.join();
+    router.shutdown();
+    Ok(stats)
+}
+
+fn main() -> Result<()> {
+    let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let n_requests: usize = std::env::args()
+        .nth(2)
+        .map(|s| s.parse().context("bad n_requests"))
+        .transpose()?
+        .unwrap_or(32);
+
+    println!("=== end-to-end serving: sequential baseline ===");
+    let seq = serve_and_measure(&artifacts, DecodePolicy::Sequential, "127.0.0.1:8473", n_requests)?;
+
+    println!("\n=== end-to-end serving: SJD ===");
+    let sjd = serve_and_measure(
+        &artifacts,
+        DecodePolicy::Selective { seq_blocks: 1 },
+        "127.0.0.1:8474",
+        n_requests,
+    )?;
+
+    println!("\n=== summary ===");
+    println!(
+        "throughput: seq {:.2} img/s → SJD {:.2} img/s ({:.1}x)",
+        seq.ok as f64 / seq.wall.as_secs_f64(),
+        sjd.ok as f64 / sjd.wall.as_secs_f64(),
+        (sjd.ok as f64 / sjd.wall.as_secs_f64()) / (seq.ok as f64 / seq.wall.as_secs_f64()),
+    );
+    println!(
+        "p50 latency: seq {:.0} ms → SJD {:.0} ms",
+        pct(&seq.latencies_ms, 0.5),
+        pct(&sjd.latencies_ms, 0.5)
+    );
+    Ok(())
+}

@@ -1,0 +1,6 @@
+"""Build-time compile path: JAX models, training, and AOT lowering.
+
+Nothing in this package runs on the request path — `make artifacts` invokes
+`python -m compile.aot` once, and the rust coordinator consumes the lowered
+HLO text + manifest afterwards.
+"""

@@ -1,0 +1,410 @@
+"""AOT lowering: train (or load cached) weights, lower every artifact to HLO
+**text**, and write ``artifacts/manifest.json``.
+
+HLO text — not serialized HloModuleProto — is the interchange format: jax
+≥ 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md and DESIGN.md §2).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--only tf10,maf_ising]
+                          [--force-retrain] [--quick]
+"""
+
+import argparse
+import functools
+import json
+import pathlib
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import baselines, maf, metricnet, tarflow, train
+
+# ---------------------------------------------------------------------------
+# Model zoo (paper-table mapping in DESIGN.md §4-5)
+# ---------------------------------------------------------------------------
+
+TARFLOW_MODELS = {
+    # CIFAR-10 stand-in: L = 64 tokens.
+    "tf10": tarflow.TarFlowConfig(
+        name="tf10", img_hw=16, channels=3, patch=2, blocks=4,
+        layers_per_block=2, model_dim=64, heads=4, noise_std=0.05,
+        dataset="synth10", train_steps=700, train_batch=64, lr=1e-3),
+    # CIFAR-100 stand-in.
+    "tf100": tarflow.TarFlowConfig(
+        name="tf100", img_hw=16, channels=3, patch=2, blocks=4,
+        layers_per_block=2, model_dim=64, heads=4, noise_std=0.05,
+        dataset="synth100", train_steps=700, train_batch=64, lr=1e-3),
+    # AFHQ stand-in: the large-L regime (L = 256 tokens). Its experimental
+    # role is the UJD-vs-SJD timing asymmetry at long sequence length, so the
+    # training budget is kept small (single-core CPU testbed).
+    "tfafhq": tarflow.TarFlowConfig(
+        name="tfafhq", img_hw=32, channels=3, patch=2, blocks=4,
+        layers_per_block=2, model_dim=96, heads=4, noise_std=0.05,
+        dataset="synthafhq", train_steps=150, train_batch=16, lr=7e-4),
+}
+
+MAF_MODELS = {
+    # 8×8 Ising lattice at T = 3.0 (Table A5).
+    "maf_ising": maf.MafConfig(
+        name="maf_ising", dim=64, layers=8, hidden=128,
+        dataset="ising", train_steps=800, train_batch=256, lr=1e-3),
+    # Binary digit images (Fig A3).
+    "maf_img": maf.MafConfig(
+        name="maf_img", dim=196, layers=5, hidden=256,
+        dataset="digits", train_steps=500, train_batch=128, lr=1e-3),
+}
+
+DDPM_CFG = baselines.DdpmConfig(
+    name="ddpm", img_hw=16, channels=3, hidden=48, timesteps=200,
+    dataset="synth10", train_steps=400, train_batch=64, lr=1e-3)
+
+MMDGEN_CFG = baselines.MmdGenConfig(
+    name="mmdgen", img_hw=16, channels=3, z_dim=64, hidden=64,
+    dataset="synth10", train_steps=300, train_batch=64, lr=1e-3)
+
+# Batch sizes to lower per model family.
+TF_BATCHES = {"tf10": [1, 8], "tf100": [1, 8], "tfafhq": [1, 4]}
+MAF_BATCHES = {"maf_ising": [256], "maf_img": [50]}
+
+
+# ---------------------------------------------------------------------------
+# Lowering plumbing
+# ---------------------------------------------------------------------------
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants=True is load-bearing: the default printer elides
+    # big constants as `constant({...})`, which would silently strip the
+    # baked model weights from the artifact.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+I32 = jnp.int32
+
+
+class ArtifactWriter:
+    def __init__(self, out_dir: pathlib.Path):
+        self.out_dir = out_dir
+        self.entries = []
+        self.models = []
+        self.datasets = []
+
+    def lower(self, name, fn, in_specs, in_names, model=None):
+        """Trace `fn` at `in_specs`, write HLO text, record manifest entry."""
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*[spec(s, d) for s, d in in_specs])
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        (self.out_dir / fname).write_text(text)
+        # Output signature from the traced result.
+        out_tree = lowered.out_info
+        outs = jax.tree_util.tree_leaves(out_tree)
+        entry = {
+            "name": name,
+            "file": fname,
+            "model": model,
+            "inputs": [
+                {"name": n, "dtype": _dtype_str(d), "shape": list(s)}
+                for (s, d), n in zip(in_specs, in_names)
+            ],
+            "outputs": [
+                {"name": f"out{i}", "dtype": _dtype_str(o.dtype), "shape": list(o.shape)}
+                for i, o in enumerate(outs)
+            ],
+        }
+        self.entries.append(entry)
+        print(f"  lowered {name}: {len(text) / 1e6:.2f} MB HLO in {time.time() - t0:.1f}s",
+              flush=True)
+
+    def add_model(self, meta: dict):
+        self.models.append(meta)
+
+    def add_dataset(self, name: str, array, extra=None):
+        """Write a reference sample set as raw little-endian f32 for the rust
+        quality benches (FID real-side statistics)."""
+        import numpy as np
+        arr = np.ascontiguousarray(np.asarray(array, dtype=np.float32))
+        fname = f"data_{name}.f32"
+        (self.out_dir / fname).write_bytes(arr.tobytes())
+        self.datasets.append({
+            "name": name, "file": fname, "shape": list(arr.shape),
+            "extra": extra or {},
+        })
+        print(f"  dataset {name}: shape {list(arr.shape)}", flush=True)
+
+    def write_manifest(self):
+        manifest = {"artifacts": self.entries, "models": self.models,
+                    "datasets": self.datasets}
+        (self.out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+        print(f"wrote manifest with {len(self.entries)} artifacts, "
+              f"{len(self.models)} models, {len(self.datasets)} datasets", flush=True)
+
+
+def _dtype_str(d):
+    d = jnp.dtype(d)
+    if d == jnp.float32:
+        return "f32"
+    if d == jnp.int32:
+        return "i32"
+    raise ValueError(f"unsupported dtype {d}")
+
+
+# ---------------------------------------------------------------------------
+# Per-family artifact lowering
+# ---------------------------------------------------------------------------
+
+def lower_tarflow(w: ArtifactWriter, cfg: tarflow.TarFlowConfig, params, batches):
+    L, D = cfg.seq_len, cfg.token_dim
+    NL, DM = cfg.layers_per_block, cfg.model_dim
+    hw, c = cfg.img_hw, cfg.channels
+
+    for b in batches:
+        w.lower(
+            f"{cfg.name}_fwd_b{b}",
+            lambda x: tarflow.flow_forward(params, cfg, x, use_pallas=True),
+            [((b, hw, hw, c), jnp.float32)],
+            ["x"],
+            model=cfg.name,
+        )
+        w.lower(
+            f"{cfg.name}_block_fwd_b{b}",
+            lambda k, u: tarflow.block_forward(params, cfg, k, u, use_pallas=True)[0],
+            [((), I32), ((b, L, D), jnp.float32)],
+            ["k", "u"],
+            model=cfg.name,
+        )
+        w.lower(
+            f"{cfg.name}_block_jstep_b{b}",
+            lambda k, z, y, o: tarflow.block_jacobi_step(
+                params, cfg, k, z, y, o, use_pallas=True),
+            [((), I32), ((b, L, D), jnp.float32), ((b, L, D), jnp.float32), ((), I32)],
+            ["k", "z_prev", "y", "o"],
+            model=cfg.name,
+        )
+        w.lower(
+            f"{cfg.name}_block_seqfull_b{b}",
+            lambda k, v: (tarflow.block_seq_full(params, cfg, k, v),),
+            [((), I32), ((b, L, D), jnp.float32)],
+            ["k", "v"],
+            model=cfg.name,
+        )
+        w.lower(
+            f"{cfg.name}_block_seqstep_b{b}",
+            lambda k, up, vt, pos, kk, kv: tarflow.block_seq_step(
+                params, cfg, k, up, vt, pos, kk, kv),
+            [((), I32), ((b, D), jnp.float32), ((b, D), jnp.float32), ((), I32),
+             ((NL, b, L, DM), jnp.float32), ((NL, b, L, DM), jnp.float32)],
+            ["k", "u_prev", "v_tok", "pos", "kv_k", "kv_v"],
+            model=cfg.name,
+        )
+
+    w.add_model({
+        "name": cfg.name,
+        "kind": "tarflow",
+        "seq_len": L,
+        "blocks": cfg.blocks,
+        "token_dim": D,
+        "model_dim": DM,
+        "layers_per_block": NL,
+        "image_hwc": [hw, hw, c],
+        "patch": cfg.patch,
+        "noise_std": cfg.noise_std,
+        "batch_sizes": batches,
+        "extra": {"dataset": cfg.dataset, "heads": cfg.heads,
+                  "params": tarflow.param_count(params)},
+    })
+
+
+def lower_maf(w: ArtifactWriter, cfg: maf.MafConfig, params, batches):
+    d = cfg.dim
+    for b in batches:
+        w.lower(
+            f"{cfg.name}_fwd_b{b}",
+            lambda x: maf.flow_forward(params, cfg, x),
+            [((b, d), jnp.float32)],
+            ["x"],
+            model=cfg.name,
+        )
+        w.lower(
+            f"{cfg.name}_layer_jstep_b{b}",
+            lambda k, z, y: maf.layer_jacobi_step(params, cfg, k, z, y),
+            [((), I32), ((b, d), jnp.float32), ((b, d), jnp.float32)],
+            ["k", "z_prev", "y"],
+            model=cfg.name,
+        )
+    w.add_model({
+        "name": cfg.name,
+        "kind": "maf",
+        "seq_len": d,
+        "blocks": cfg.layers,
+        "token_dim": 1,
+        "model_dim": cfg.hidden,
+        "layers_per_block": 0,
+        "image_hwc": None,
+        "patch": 1,
+        "noise_std": 0.0,
+        "batch_sizes": batches,
+        "extra": {"dataset": cfg.dataset},
+    })
+
+
+def lower_metricnet(w: ArtifactWriter, name: str, img_hw: int, batches):
+    cfg = metricnet.MetricNetConfig(name=name, img_hw=img_hw)
+    params = metricnet.init_params(cfg)
+    for b in batches:
+        w.lower(
+            f"{name}_feat_b{b}",
+            lambda x: (metricnet.features(params, x),),
+            [((b, img_hw, img_hw, 3), jnp.float32)],
+            ["x"],
+            model=name,
+        )
+    w.add_model({
+        "name": name, "kind": "metricnet", "seq_len": 0, "blocks": 0,
+        "token_dim": 3, "model_dim": cfg.features, "layers_per_block": 0,
+        "image_hwc": [img_hw, img_hw, 3], "patch": 1, "noise_std": 0.0,
+        "batch_sizes": batches, "extra": {},
+    })
+
+
+def lower_ddpm(w: ArtifactWriter, cfg: baselines.DdpmConfig, params, batches):
+    hw, c = cfg.img_hw, cfg.channels
+    for b in batches:
+        w.lower(
+            f"{cfg.name}_eps_b{b}",
+            lambda x, t: (baselines.eps_model(params, x, t),),
+            [((b, hw, hw, c), jnp.float32), ((), I32)],
+            ["x", "t"],
+            model=cfg.name,
+        )
+    w.add_model({
+        "name": cfg.name, "kind": "ddpm", "seq_len": 0, "blocks": cfg.timesteps,
+        "token_dim": c, "model_dim": cfg.hidden, "layers_per_block": 0,
+        "image_hwc": [hw, hw, c], "patch": 1, "noise_std": 0.0,
+        "batch_sizes": batches, "extra": {"timesteps": cfg.timesteps},
+    })
+
+
+def lower_mmdgen(w: ArtifactWriter, cfg: baselines.MmdGenConfig, params, batches):
+    hw, c = cfg.img_hw, cfg.channels
+    for b in batches:
+        w.lower(
+            f"{cfg.name}_gen_b{b}",
+            lambda z: (baselines.generator(params, cfg, z),),
+            [((b, cfg.z_dim), jnp.float32)],
+            ["z"],
+            model=cfg.name,
+        )
+    w.add_model({
+        "name": cfg.name, "kind": "mmdgen", "seq_len": 0, "blocks": 0,
+        "token_dim": c, "model_dim": cfg.hidden, "layers_per_block": 0,
+        "image_hwc": [hw, hw, c], "patch": 1, "noise_std": 0.0,
+        "batch_sizes": batches, "extra": {"z_dim": cfg.z_dim},
+    })
+
+
+# ---------------------------------------------------------------------------
+# Main
+# ---------------------------------------------------------------------------
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default="",
+                    help="comma-separated model names (default: all)")
+    ap.add_argument("--force-retrain", action="store_true")
+    ap.add_argument("--quick", action="store_true",
+                    help="slash train steps 10x (CI / smoke use)")
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out_dir).resolve()
+    out_dir.mkdir(parents=True, exist_ok=True)
+    weights_dir = out_dir / "weights"
+    only = set(filter(None, args.only.split(",")))
+
+    def want(name):
+        return not only or name in only
+
+    def quick(cfg):
+        if not args.quick:
+            return cfg
+        return cfg._replace(train_steps=max(30, cfg.train_steps // 10))
+
+    w = ArtifactWriter(out_dir)
+    t_start = time.time()
+
+    for name, cfg in TARFLOW_MODELS.items():
+        if not want(name):
+            continue
+        cfg = quick(cfg)
+        loss_log = []
+        params = train.train_or_load(
+            name, weights_dir,
+            lambda cfg=cfg, ll=loss_log: train.train_tarflow(cfg, loss_log=ll),
+            force=args.force_retrain)
+        if loss_log:
+            (out_dir / f"{name}_train_loss.json").write_text(json.dumps(loss_log))
+        lower_tarflow(w, cfg, params, TF_BATCHES[name])
+
+    for name, cfg in MAF_MODELS.items():
+        if not want(name):
+            continue
+        cfg = quick(cfg)
+        loss_log = []
+        params = train.train_or_load(
+            name, weights_dir,
+            lambda cfg=cfg, ll=loss_log: train.train_maf(cfg, loss_log=ll),
+            force=args.force_retrain)
+        if loss_log:
+            (out_dir / f"{name}_train_loss.json").write_text(json.dumps(loss_log))
+        lower_maf(w, cfg, params, MAF_BATCHES[name])
+
+    if want("metricnet16"):
+        lower_metricnet(w, "metricnet16", 16, [64])
+    if want("metricnet32"):
+        lower_metricnet(w, "metricnet32", 32, [32])
+
+    if want("ddpm"):
+        cfg = quick(DDPM_CFG)
+        params = train.train_or_load(
+            "ddpm", weights_dir, lambda: train.train_ddpm(cfg), force=args.force_retrain)
+        lower_ddpm(w, cfg, params, [8])
+    if want("mmdgen"):
+        cfg = quick(MMDGEN_CFG)
+        params = train.train_or_load(
+            "mmdgen", weights_dir, lambda: train.train_mmdgen(cfg), force=args.force_retrain)
+        lower_mmdgen(w, cfg, params, [8])
+
+    # Reference sample sets for the rust quality benches.
+    if want("datasets"):
+        from . import data as data_mod
+        from . import ising as ising_mod
+        for ds_name, n in [("synth10", 512), ("synth100", 512), ("synthafhq", 256)]:
+            ds = data_mod.make_dataset(ds_name)
+            w.add_dataset(ds_name, ds.batch(n, seed=123))
+        digits = data_mod.make_dataset("digits")
+        w.add_dataset("digits", digits.batch(512, seed=123))
+        ids = ising_mod.IsingDataset(side=8, temperature=3.0, n_configs=1024, seed=11)
+        e_ref, m_ref = ids.reference_stats()
+        w.add_dataset("ising_ref", ids.configs[:512],
+                      extra={"energy_per_site": e_ref, "abs_magnetization": m_ref,
+                             "side": 8, "temperature": 3.0})
+
+    w.write_manifest()
+    print(f"artifacts complete in {time.time() - t_start:.0f}s → {out_dir}", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

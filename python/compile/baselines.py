@@ -1,0 +1,156 @@
+"""Table A6 comparators: a tiny DDPM (sampled with 20-step DDIM) and an
+MMD-trained generator (FastGAN substitute — single forward pass, stable
+training without an adversary; DESIGN.md §5).
+"""
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# DDPM / DDIM
+# ---------------------------------------------------------------------------
+
+class DdpmConfig(NamedTuple):
+    name: str
+    img_hw: int
+    channels: int
+    hidden: int
+    timesteps: int
+    dataset: str
+    train_steps: int
+    train_batch: int
+    lr: float
+
+
+def ddpm_schedule(cfg: DdpmConfig):
+    """Linear beta schedule → (betas, alphas, alpha_bars)."""
+    betas = jnp.linspace(1e-4, 0.02, cfg.timesteps)
+    alphas = 1.0 - betas
+    alpha_bars = jnp.cumprod(alphas)
+    return betas, alphas, alpha_bars
+
+
+def init_ddpm_params(key, cfg: DdpmConfig):
+    c, h = cfg.channels, cfg.hidden
+    keys = jax.random.split(key, 6)
+    return {
+        "c1": jax.random.normal(keys[0], (3, 3, c, h)) / jnp.sqrt(9 * c),
+        "b1": jnp.zeros((h,)),
+        "temb_w": jax.random.normal(keys[1], (32, h)) / jnp.sqrt(32),
+        "temb_b": jnp.zeros((h,)),
+        "c2": jax.random.normal(keys[2], (3, 3, h, h)) / jnp.sqrt(9 * h),
+        "b2": jnp.zeros((h,)),
+        "c3": jax.random.normal(keys[3], (3, 3, h, h)) / jnp.sqrt(9 * h),
+        "b3": jnp.zeros((h,)),
+        "c4": jnp.zeros((3, 3, h, c)),
+        "b4": jnp.zeros((c,)),
+    }
+
+
+def _conv(x, w, b):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC")) + b
+
+
+def _time_embedding(t, dim=32):
+    """Sinusoidal timestep embedding; t: () or (B,) i32."""
+    t = jnp.asarray(t, jnp.float32)
+    half = dim // 2
+    freqs = jnp.exp(-jnp.log(1000.0) * jnp.arange(half) / half)
+    ang = t[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def eps_model(params, x, t):
+    """Predict noise ε from x_t. x: (B, H, W, C), t: i32 scalar."""
+    emb = _time_embedding(t)  # (32,)
+    temb = jax.nn.silu(emb @ params["temb_w"] + params["temb_b"])  # (hidden,)
+    h = jax.nn.silu(_conv(x, params["c1"], params["b1"]) + temb[None, None, None, :])
+    h = jax.nn.silu(_conv(h, params["c2"], params["b2"]))
+    h = jax.nn.silu(_conv(h, params["c3"], params["b3"]))
+    return _conv(h, params["c4"], params["b4"])
+
+
+def ddpm_loss(params, cfg: DdpmConfig, x0, key):
+    """Standard ε-prediction MSE at uniformly sampled timesteps."""
+    _, _, abars = ddpm_schedule(cfg)
+    kt, ke = jax.random.split(key)
+    t = jax.random.randint(kt, (), 0, cfg.timesteps)
+    eps = jax.random.normal(ke, x0.shape)
+    ab = abars[t]
+    xt = jnp.sqrt(ab) * x0 + jnp.sqrt(1 - ab) * eps
+    pred = eps_model(params, xt, t)
+    return jnp.mean((pred - eps) ** 2)
+
+
+# ---------------------------------------------------------------------------
+# MMD generator (FastGAN substitute)
+# ---------------------------------------------------------------------------
+
+class MmdGenConfig(NamedTuple):
+    name: str
+    img_hw: int
+    channels: int
+    z_dim: int
+    hidden: int
+    dataset: str
+    train_steps: int
+    train_batch: int
+    lr: float
+
+
+def init_gen_params(key, cfg: MmdGenConfig):
+    s0 = cfg.img_hw // 4
+    keys = jax.random.split(key, 4)
+    return {
+        "fc_w": jax.random.normal(keys[0], (cfg.z_dim, s0 * s0 * cfg.hidden)) / jnp.sqrt(cfg.z_dim),
+        "fc_b": jnp.zeros((s0 * s0 * cfg.hidden,)),
+        "c1": jax.random.normal(keys[1], (3, 3, cfg.hidden, cfg.hidden)) / jnp.sqrt(9 * cfg.hidden),
+        "b1": jnp.zeros((cfg.hidden,)),
+        "c2": jax.random.normal(keys[2], (3, 3, cfg.hidden, cfg.hidden // 2)) / jnp.sqrt(9 * cfg.hidden),
+        "b2": jnp.zeros((cfg.hidden // 2,)),
+        "c3": jax.random.normal(keys[3], (3, 3, cfg.hidden // 2, cfg.channels)) / jnp.sqrt(9 * cfg.hidden // 2),
+        "b3": jnp.zeros((cfg.channels,)),
+    }
+
+
+def _upsample2(x):
+    b, h, w, c = x.shape
+    return jax.image.resize(x, (b, 2 * h, 2 * w, c), "nearest")
+
+
+def generator(params, cfg: MmdGenConfig, z):
+    """z (B, z_dim) → images (B, H, W, C) in [-1, 1]."""
+    s0 = cfg.img_hw // 4
+    h = jax.nn.silu(z @ params["fc_w"] + params["fc_b"])
+    h = h.reshape(-1, s0, s0, cfg.hidden)
+    h = _upsample2(h)
+    h = jax.nn.silu(_conv(h, params["c1"], params["b1"]))
+    h = _upsample2(h)
+    h = jax.nn.silu(_conv(h, params["c2"], params["b2"]))
+    return jnp.tanh(_conv(h, params["c3"], params["b3"]))
+
+
+def mmd_loss(params, cfg: MmdGenConfig, real, key):
+    """RBF-kernel MMD² between generated and real batches (pixel space,
+    multi-bandwidth)."""
+    z = jax.random.normal(key, (real.shape[0], cfg.z_dim))
+    fake = generator(params, cfg, z)
+    x = real.reshape(real.shape[0], -1)
+    y = fake.reshape(fake.shape[0], -1)
+
+    def pdist2(a, b):
+        return jnp.sum(a * a, 1)[:, None] + jnp.sum(b * b, 1)[None, :] - 2 * a @ b.T
+
+    dxx, dyy, dxy = pdist2(x, x), pdist2(y, y), pdist2(x, y)
+    loss = 0.0
+    for bw in (10.0, 50.0, 200.0):
+        kxx = jnp.exp(-dxx / bw)
+        kyy = jnp.exp(-dyy / bw)
+        kxy = jnp.exp(-dxy / bw)
+        loss = loss + kxx.mean() + kyy.mean() - 2 * kxy.mean()
+    return loss

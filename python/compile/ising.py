@@ -1,0 +1,75 @@
+"""2-D Ising model (python side): Metropolis MCMC dataset generation for the
+MAF Boltzmann experiment (paper §E.3, Table A5).
+
+The rust `physics::ising` module mirrors the observables for evaluation; this
+module only produces *training data*: spin configurations from the T = 3.0
+disordered phase, dequantized to continuous values for MLE flow training
+(substitution for the paper's reverse-KL objective — same target
+distribution, documented in DESIGN.md §5).
+"""
+
+import numpy as np
+
+
+def energy(spins: np.ndarray, side: int) -> float:
+    """E = −Σ_<ij> s_i s_j with periodic boundaries (bonds counted once)."""
+    lat = spins.reshape(side, side)
+    return float(-(lat * np.roll(lat, -1, 0)).sum() - (lat * np.roll(lat, -1, 1)).sum())
+
+
+def metropolis_chain(side: int, temperature: float, n_samples: int,
+                     sweeps_between: int, burn_in: int, seed: int) -> np.ndarray:
+    """(n_samples, side²) of ±1 spins from single-spin-flip Metropolis."""
+    rng = np.random.default_rng(seed)
+    n = side
+    beta = 1.0 / temperature
+    spins = rng.choice(np.array([-1, 1], np.int8), size=(n, n))
+    out = np.empty((n_samples, n * n), np.float32)
+
+    def sweep():
+        # Vectorized checkerboard sweep (both parities).
+        for parity in (0, 1):
+            nb = (np.roll(spins, 1, 0) + np.roll(spins, -1, 0)
+                  + np.roll(spins, 1, 1) + np.roll(spins, -1, 1))
+            delta_e = 2.0 * spins * nb
+            accept = (delta_e <= 0) | (rng.random((n, n)) < np.exp(-beta * np.clip(delta_e, 0, None)))
+            mask = ((np.add.outer(np.arange(n), np.arange(n)) % 2) == parity)
+            spins[accept & mask] *= -1
+
+    for _ in range(burn_in):
+        sweep()
+    for i in range(n_samples):
+        for _ in range(sweeps_between):
+            sweep()
+        out[i] = spins.reshape(-1).astype(np.float32)
+    return out
+
+
+def dequantize(spins: np.ndarray, std: float, seed: int) -> np.ndarray:
+    """Continuous relaxation: x = s + N(0, std²); sign(x) recovers s w.h.p."""
+    rng = np.random.default_rng(seed)
+    return spins + std * rng.standard_normal(spins.shape).astype(np.float32)
+
+
+class IsingDataset:
+    """Pre-generated MCMC configurations served as training batches."""
+
+    def __init__(self, side: int = 8, temperature: float = 3.0,
+                 n_configs: int = 4096, seed: int = 11, dequant_std: float = 0.25):
+        self.side = side
+        self.temperature = temperature
+        self.dequant_std = dequant_std
+        self.configs = metropolis_chain(
+            side, temperature, n_configs, sweeps_between=2, burn_in=200, seed=seed)
+
+    def batch(self, n: int, seed: int) -> np.ndarray:
+        rng = np.random.default_rng(seed)
+        idx = rng.integers(0, len(self.configs), size=n)
+        return dequantize(self.configs[idx], self.dequant_std, seed + 1)
+
+    def reference_stats(self):
+        """Ground-truth ⟨E⟩/site and ⟨|M|⟩ of the MCMC configurations."""
+        sites = self.side ** 2
+        e = np.array([energy(c, self.side) for c in self.configs]) / sites
+        m = np.abs(self.configs.mean(axis=1))
+        return float(e.mean()), float(m.mean())

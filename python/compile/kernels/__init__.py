@@ -1,0 +1,5 @@
+"""L1 Pallas kernels + pure-jnp reference oracles."""
+
+from . import affine_update, attention, ref
+
+__all__ = ["affine_update", "attention", "ref"]

@@ -1,0 +1,88 @@
+"""L1 Pallas kernel: causal multi-head attention with dependency-offset mask.
+
+TPU-oriented design (see DESIGN.md §6 — Hardware Adaptation):
+
+* Grid is (B, H): one program per (batch, head). For the model sizes in this
+  repo the whole (L, Dh) tile fits comfortably in VMEM (L ≤ 256, Dh ≤ 24 →
+  Q/K/V tiles ≤ 24 KB each), so a single-tile schedule with both matmuls on
+  the MXU is already roofline-bound; no double-buffering is needed.
+* The paper's eq-6 band mask (`col <= row - o`, pad column 0 open) is built
+  from iota *inside* the kernel on the score tile — nothing is materialized
+  in HBM, unlike a (L, L) boolean mask input.
+* Softmax is computed in f32 with the usual max-subtraction, fused between
+  the two MXU matmuls — one VMEM round trip for the whole attention op.
+
+Lowered with ``interpret=True``: the CPU PJRT client cannot execute Mosaic
+custom-calls, so artifacts embed the interpreted (plain-HLO) form; the real
+TPU schedule is what the BlockSpecs above describe.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(o_ref, q_ref, k_ref, v_ref, out_ref):
+    """One (batch, head) program: full (L, Dh) attention in VMEM."""
+    q = q_ref[0, 0]  # (L, Dh)
+    k = k_ref[0, 0]
+    v = v_ref[0, 0]
+    l = q.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    # MXU matmul #1: scores.
+    scores = jnp.dot(q, k.T) * scale  # (L, L)
+    # eq-6 band mask from iota — no HBM mask tensor.
+    o = o_ref[0]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (l, l), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (l, l), 1)
+    mask = (cols <= rows - o) | (cols == 0)
+    scores = jnp.where(mask, scores, -1e30)
+    # Fused softmax (f32, max-subtracted).
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    w = jnp.exp(scores - m)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    # MXU matmul #2: weighted values.
+    out_ref[0, 0] = jnp.dot(w, v)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def causal_attention(q, k, v, o, interpret=True):
+    """Pallas causal attention with eq-6 offset masking.
+
+    Args:
+      q, k, v: (B, H, L, Dh) f32
+      o: scalar i32 (0 = plain causal) — passed as a (1,) array
+      interpret: must stay True for CPU-PJRT execution (see module doc)
+
+    Returns:
+      (B, H, L, Dh) f32
+    """
+    b, h, l, dh = q.shape
+    o_arr = jnp.asarray(o, jnp.int32).reshape((1,))
+    spec = pl.BlockSpec((1, 1, l, dh), lambda i, j: (i, j, 0, 0))
+    return pl.pallas_call(
+        _attn_kernel,
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            spec,
+            spec,
+            spec,
+        ],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, l, dh), jnp.float32),
+        interpret=interpret,
+    )(o_arr, q, k, v)
+
+
+def vmem_bytes_estimate(l: int, dh: int) -> int:
+    """Static VMEM working-set estimate for one program (DESIGN.md §Perf):
+    Q, K, V, OUT tiles (L, Dh) + the (L, L) score/weight tile, all f32."""
+    return 4 * (4 * l * dh + l * l)
+
+
+def mxu_flops_estimate(b: int, h: int, l: int, dh: int) -> int:
+    """MXU flops for the two matmuls across the grid."""
+    return b * h * (2 * l * l * dh) * 2

@@ -1,0 +1,46 @@
+"""Fixed-seed random conv feature extractor — the proxy-FID backbone.
+
+Random-projection Fréchet distances rank distribution drift monotonically
+(substitute for InceptionV3 features, DESIGN.md §5). Weights come from a
+fixed PRNG key so the metric is stable across runs and across the python /
+rust boundary.
+"""
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class MetricNetConfig(NamedTuple):
+    name: str
+    img_hw: int
+    channels: int = 3
+    features: int = 64
+
+
+def init_params(cfg: MetricNetConfig):
+    key = jax.random.PRNGKey(1234)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    c = cfg.channels
+    return {
+        "c1": jax.random.normal(k1, (3, 3, c, 16)) / jnp.sqrt(9 * c),
+        "c2": jax.random.normal(k2, (3, 3, 16, 32)) / jnp.sqrt(9 * 16),
+        "c3": jax.random.normal(k3, (3, 3, 32, 64)) / jnp.sqrt(9 * 32),
+        "proj": jax.random.normal(k4, (64, cfg.features)) / 8.0,
+    }
+
+
+def _conv(x, w, stride):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def features(params, x):
+    """(B, H, W, C) in [-1, 1] → (B, F) features."""
+    h = jax.nn.leaky_relu(_conv(x, params["c1"], 2), 0.2)
+    h = jax.nn.leaky_relu(_conv(h, params["c2"], 2), 0.2)
+    h = jax.nn.leaky_relu(_conv(h, params["c3"], 2), 0.2)
+    pooled = h.mean(axis=(1, 2))  # (B, 64)
+    return pooled @ params["proj"]

@@ -1,0 +1,331 @@
+"""L2: TarFlow-style discrete autoregressive normalizing flow in JAX.
+
+Architecture (per Zhai et al. 2025, scaled down — see DESIGN.md §5):
+
+* The image is patchified into L tokens of dim D = P·P·C.
+* K *blocks*; block k applies a masked-autoregressive affine transform
+  ``A_k`` over the token sequence (eq 4), whose (s, g) are produced by a
+  small causal ViT: in-proj → +pos-emb → NL pre-LN transformer layers
+  (causal attention + MLP) → LN → zero-init out-proj to (s, g).
+* The net input is the sequence *shifted right by one* (zero pad at
+  position 0) so the output at position l depends only on tokens < l.
+* Between blocks the token order is reversed (the paper's permutation) so
+  every position is eventually transformed. The reversal `P_k` (applied for
+  odd k) lives OUTSIDE these functions: `h_{k+1} = A_k(P_k h_k)` — the rust
+  coordinator and `flow_forward` below both apply it.
+
+Parameters for all K blocks are stacked on a leading K axis so a single
+lowered artifact serves every block via a traced ``block_idx`` gather.
+"""
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import affine_update, attention, ref
+
+
+class TarFlowConfig(NamedTuple):
+    name: str
+    img_hw: int          # square image side
+    channels: int
+    patch: int
+    blocks: int          # K
+    layers_per_block: int  # NL
+    model_dim: int       # Dm
+    heads: int
+    noise_std: float     # training dequantization noise
+    dataset: str
+    train_steps: int
+    train_batch: int
+    lr: float
+
+    @property
+    def seq_len(self) -> int:
+        return (self.img_hw // self.patch) ** 2
+
+    @property
+    def token_dim(self) -> int:
+        return self.patch * self.patch * self.channels
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def init_block_params(key, cfg: TarFlowConfig):
+    """Parameters of one block's causal ViT. Returned as a flat dict."""
+    d, dm, nl = cfg.token_dim, cfg.model_dim, cfg.layers_per_block
+    keys = jax.random.split(key, 4 + 6 * nl)
+    scale_in = 1.0 / jnp.sqrt(d)
+    params = {
+        "in_w": jax.random.normal(keys[0], (d, dm)) * scale_in,
+        "in_b": jnp.zeros((dm,)),
+        "pos": jax.random.normal(keys[1], (cfg.seq_len, dm)) * 0.02,
+        # Zero-init output projection → the flow starts as the identity.
+        "out_w": jnp.zeros((dm, 2 * d)),
+        "out_b": jnp.zeros((2 * d,)),
+        "lnf_g": jnp.ones((dm,)),
+        "lnf_b": jnp.zeros((dm,)),
+    }
+    scale = 1.0 / jnp.sqrt(dm)
+    for i in range(nl):
+        k0 = keys[4 + 6 * i:4 + 6 * (i + 1)]
+        params[f"l{i}_ln1_g"] = jnp.ones((dm,))
+        params[f"l{i}_ln1_b"] = jnp.zeros((dm,))
+        params[f"l{i}_wq"] = jax.random.normal(k0[0], (dm, dm)) * scale
+        params[f"l{i}_wk"] = jax.random.normal(k0[1], (dm, dm)) * scale
+        params[f"l{i}_wv"] = jax.random.normal(k0[2], (dm, dm)) * scale
+        params[f"l{i}_wo"] = jax.random.normal(k0[3], (dm, dm)) * scale
+        params[f"l{i}_ln2_g"] = jnp.ones((dm,))
+        params[f"l{i}_ln2_b"] = jnp.zeros((dm,))
+        params[f"l{i}_w1"] = jax.random.normal(k0[4], (dm, 4 * dm)) * scale
+        params[f"l{i}_b1"] = jnp.zeros((4 * dm,))
+        params[f"l{i}_w2"] = jax.random.normal(k0[5], (4 * dm, dm)) * (scale / 2)
+        params[f"l{i}_b2"] = jnp.zeros((dm,))
+    return params
+
+
+def init_params(key, cfg: TarFlowConfig):
+    """All-block parameters stacked on a leading K axis."""
+    block_keys = jax.random.split(key, cfg.blocks)
+    blocks = [init_block_params(k, cfg) for k in block_keys]
+    return {name: jnp.stack([b[name] for b in blocks]) for name in blocks[0]}
+
+
+def block_params(params, k):
+    """Select block k's parameters (works with traced k via gather)."""
+    return {name: v[k] for name, v in params.items()}
+
+
+def param_count(params) -> int:
+    return int(sum(v.size for v in params.values()))
+
+
+# ---------------------------------------------------------------------------
+# Network
+# ---------------------------------------------------------------------------
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _split_heads(x, heads):
+    b, l, dm = x.shape
+    return x.reshape(b, l, heads, dm // heads).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    b, h, l, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, l, h * dh)
+
+
+def sg_net(bp, cfg: TarFlowConfig, u, o=0, use_pallas=False):
+    """The causal ViT producing (s, g) from the token sequence ``u``.
+
+    Input is shifted right by one internally; output position l depends only
+    on u[:, :l] (minus the ``o`` nearest when ``o > 0``, eq 6).
+
+    Returns (s, g), each (B, L, D).
+    """
+    b, l, d = u.shape
+    shifted = jnp.concatenate([jnp.zeros((b, 1, d), u.dtype), u[:, :-1, :]], axis=1)
+    x = shifted @ bp["in_w"] + bp["in_b"] + bp["pos"][None, :, :]
+    attn_fn = attention.causal_attention if use_pallas else ref.causal_attention_ref
+    for i in range(cfg.layers_per_block):
+        h = _layernorm(x, bp[f"l{i}_ln1_g"], bp[f"l{i}_ln1_b"])
+        q = _split_heads(h @ bp[f"l{i}_wq"], cfg.heads)
+        k = _split_heads(h @ bp[f"l{i}_wk"], cfg.heads)
+        v = _split_heads(h @ bp[f"l{i}_wv"], cfg.heads)
+        a = _merge_heads(attn_fn(q, k, v, o))
+        x = x + a @ bp[f"l{i}_wo"]
+        h = _layernorm(x, bp[f"l{i}_ln2_g"], bp[f"l{i}_ln2_b"])
+        h = jax.nn.gelu(h @ bp[f"l{i}_w1"] + bp[f"l{i}_b1"]) @ bp[f"l{i}_w2"] + bp[f"l{i}_b2"]
+        x = x + h
+    x = _layernorm(x, bp["lnf_g"], bp["lnf_b"])
+    out = x @ bp["out_w"] + bp["out_b"]
+    s_raw, g = out[..., :d], out[..., d:]
+    # Bounded log-scale for stability (TarFlow clamps similarly).
+    s = 2.0 * jnp.tanh(s_raw / 2.0)
+    return s, g
+
+
+# ---------------------------------------------------------------------------
+# Block-level fwd / inverse pieces (AR domain — no permutation here)
+# ---------------------------------------------------------------------------
+
+def block_forward(params, cfg: TarFlowConfig, k, u, use_pallas=False):
+    """v = A_k(u): encode-direction transform of one block + logdet."""
+    bp = block_params(params, k)
+    s, g = sg_net(bp, cfg, u, o=0, use_pallas=use_pallas)
+    return ref.affine_forward_ref(u, s, g)
+
+
+def block_jacobi_step(params, cfg: TarFlowConfig, k, z_prev, y, o, use_pallas=True):
+    """One parallel Jacobi update of A_k(z) = y (Alg 1 body) + residual.
+
+    This is the serving hot path: the (s, g) net runs on the *previous
+    iterate* and the fused L1 kernel applies the inverse update and computes
+    the ‖·‖∞ stopping residual.
+    """
+    bp = block_params(params, k)
+    s, g = sg_net(bp, cfg, z_prev, o=o, use_pallas=use_pallas)
+    if use_pallas:
+        z_next, resid = affine_update.affine_inverse_update(z_prev, y, s, g)
+    else:
+        z_next, resid = ref.affine_inverse_update_ref(z_prev, y, s, g)
+    return z_next, resid
+
+
+def block_inverse_exact(params, cfg: TarFlowConfig, k, y, use_pallas=False):
+    """Exact sequential inverse u = A_k^{-1}(y) via L Jacobi steps
+    (Prop 3.2: the iteration is exact after L steps). Build-time only —
+    used by tests and by the encode/decode consistency checks."""
+    z = jnp.zeros_like(y)
+    for _ in range(cfg.seq_len):
+        z, _ = block_jacobi_step(params, cfg, k, z, y, 0, use_pallas=use_pallas)
+    return z
+
+
+# ---------------------------------------------------------------------------
+# Sequential decode step with KV cache
+# ---------------------------------------------------------------------------
+
+def block_seq_step(params, cfg: TarFlowConfig, k, u_prev, v_tok, pos, kv_k, kv_v):
+    """One token of the sequential (KV-cached) inverse of block k.
+
+    Net position ``pos`` holds token u_{pos-1} (``u_prev``; zeros for
+    pos = 0). Writes this position's per-layer K/V into the caches, attends
+    over cache[0..pos], and produces u_pos = v_pos·exp(−s)+g (v_pos for
+    pos = 0).
+
+    Args:
+      u_prev: (B, D)   token u_{pos-1}
+      v_tok:  (B, D)   block input y at position pos
+      pos:    i32 scalar
+      kv_k, kv_v: (NL, B, L, Dm) caches
+
+    Returns:
+      (u_tok (B, D), kv_k', kv_v')
+    """
+    bp = block_params(params, k)
+    b, d = u_prev.shape
+    nl, _, l, dm = kv_k.shape
+    heads = cfg.heads
+    dh = dm // heads
+
+    x = u_prev @ bp["in_w"] + bp["in_b"] + bp["pos"][pos][None, :]  # (B, Dm)
+    positions = jnp.arange(l)
+    attend = (positions <= pos)[None, None, :]  # (1, 1, L)
+
+    for i in range(cfg.layers_per_block):
+        h = _layernorm(x, bp[f"l{i}_ln1_g"], bp[f"l{i}_ln1_b"])
+        q = (h @ bp[f"l{i}_wq"]).reshape(b, heads, dh)
+        k_new = h @ bp[f"l{i}_wk"]  # (B, Dm)
+        v_new = h @ bp[f"l{i}_wv"]
+        kv_k = jax.lax.dynamic_update_slice(kv_k, k_new[None, :, None, :], (i, 0, pos, 0))
+        kv_v = jax.lax.dynamic_update_slice(kv_v, v_new[None, :, None, :], (i, 0, pos, 0))
+        keys = kv_k[i].reshape(b, l, heads, dh).transpose(0, 2, 1, 3)   # (B, H, L, Dh)
+        vals = kv_v[i].reshape(b, l, heads, dh).transpose(0, 2, 1, 3)
+        scores = jnp.einsum("bhd,bhld->bhl", q, keys) / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+        scores = jnp.where(attend, scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1)
+        a = jnp.einsum("bhl,bhld->bhd", w, vals).reshape(b, dm)
+        x = x + a @ bp[f"l{i}_wo"]
+        h = _layernorm(x, bp[f"l{i}_ln2_g"], bp[f"l{i}_ln2_b"])
+        h = jax.nn.gelu(h @ bp[f"l{i}_w1"] + bp[f"l{i}_b1"]) @ bp[f"l{i}_w2"] + bp[f"l{i}_b2"]
+        x = x + h
+    x = _layernorm(x, bp["lnf_g"], bp["lnf_b"])
+    out = x @ bp["out_w"] + bp["out_b"]
+    s_raw, g = out[..., :d], out[..., d:]
+    s = 2.0 * jnp.tanh(s_raw / 2.0)
+    u_tok = v_tok * jnp.exp(-s) + g
+    u_tok = jnp.where(pos == 0, v_tok, u_tok)
+    return u_tok, kv_k, kv_v
+
+
+def block_seq_full(params, cfg: TarFlowConfig, k, v):
+    """Whole-block sequential inverse as ONE lowered program (lax.scan over
+    positions, KV cache carried in the loop state).
+
+    §Perf ablation: this removes all per-token call/marshal overhead from the
+    sequential path — a *stronger* baseline than the paper's per-step eager
+    implementation (and than `block_seq_step` driven from rust). On serial
+    hardware it bounds what any sequential implementation could achieve.
+
+    Args:
+      v: (B, L, D) block input y.
+
+    Returns:
+      u: (B, L, D) = A_k^{-1}(v).
+    """
+    bp = block_params(params, k)
+    b, l, d = v.shape
+    nl, dm = cfg.layers_per_block, cfg.model_dim
+
+    kv_k0 = jnp.zeros((nl, b, l, dm))
+    kv_v0 = jnp.zeros((nl, b, l, dm))
+    u0 = jnp.zeros((b, d))
+
+    def step(carry, pos):
+        u_prev, kv_k, kv_v = carry
+        v_tok = jax.lax.dynamic_slice(v, (0, pos, 0), (b, 1, d))[:, 0, :]
+        u_tok, kv_k, kv_v = block_seq_step(params, cfg, k, u_prev, v_tok, pos, kv_k, kv_v)
+        return (u_tok, kv_k, kv_v), u_tok
+
+    (_, _, _), toks = jax.lax.scan(step, (u0, kv_k0, kv_v0), jnp.arange(l))
+    return toks.transpose(1, 0, 2)  # (L, B, D) → (B, L, D)
+
+
+# ---------------------------------------------------------------------------
+# Patchify + full-flow composition (encode direction)
+# ---------------------------------------------------------------------------
+
+def patchify(x, cfg: TarFlowConfig):
+    """(B, H, W, C) → (B, L, D); must match `Sampler::patchify` in rust."""
+    b = x.shape[0]
+    hp = cfg.img_hw // cfg.patch
+    x = x.reshape(b, hp, cfg.patch, hp, cfg.patch, cfg.channels)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, hp * hp, cfg.token_dim)
+
+
+def unpatchify(t, cfg: TarFlowConfig):
+    """(B, L, D) → (B, H, W, C)."""
+    b = t.shape[0]
+    hp = cfg.img_hw // cfg.patch
+    t = t.reshape(b, hp, hp, cfg.patch, cfg.patch, cfg.channels)
+    t = t.transpose(0, 1, 3, 2, 4, 5)
+    return t.reshape(b, cfg.img_hw, cfg.img_hw, cfg.channels)
+
+
+def flow_forward(params, cfg: TarFlowConfig, x, use_pallas=False):
+    """Full encode: images → (z tokens, total logdet).
+
+    h_{k+1} = A_k(P_k h_k), P_k = token reversal for odd k (matches the rust
+    decode composition exactly; cross-checked in integration tests).
+    """
+    h = patchify(x, cfg)
+    logdet = jnp.zeros((x.shape[0],))
+    for k in range(cfg.blocks):
+        u = h[:, ::-1, :] if k % 2 == 1 else h
+        h, ld = block_forward(params, cfg, k, u, use_pallas=use_pallas)
+        logdet = logdet + ld
+    return h, logdet
+
+
+def nll_loss(params, cfg: TarFlowConfig, x):
+    """Negative log-likelihood (nats/dim) under the standard-normal base."""
+    z, logdet = flow_forward(params, cfg, x)
+    dims = z.shape[1] * z.shape[2]
+    log_prior = -0.5 * jnp.sum(z ** 2, axis=(1, 2)) - 0.5 * dims * jnp.log(2 * jnp.pi)
+    return -(log_prior + logdet).mean() / dims
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def nll_loss_jit(params, cfg: TarFlowConfig, x):
+    return nll_loss(params, cfg, x)

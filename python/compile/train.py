@@ -1,0 +1,177 @@
+"""Training loops (build-time only). Hand-written Adam — optax is not
+available in this environment.
+
+Weights are cached under ``artifacts/weights/{model}.npz``; `aot.py` skips
+training when a cache exists (so `make artifacts` is idempotent).
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import baselines, data, ising, maf, tarflow
+
+
+# ---------------------------------------------------------------------------
+# Adam
+# ---------------------------------------------------------------------------
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": jnp.zeros(())}
+
+
+def adam_update(grads, state, params, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1.0
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1 ** t)
+    vhat_scale = 1.0 / (1 - b2 ** t)
+    new_params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params, m, v)
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def _save_npz(path, params):
+    np.savez(path, **{k: np.asarray(v) for k, v in params.items()})
+
+
+def _load_npz(path):
+    with np.load(path) as z:
+        return {k: jnp.asarray(z[k]) for k in z.files}
+
+
+# ---------------------------------------------------------------------------
+# TarFlow
+# ---------------------------------------------------------------------------
+
+def train_tarflow(cfg: tarflow.TarFlowConfig, seed: int = 0, log_every: int = 50,
+                  loss_log=None):
+    ds = data.make_dataset(cfg.dataset)
+    key = jax.random.PRNGKey(seed)
+    params = tarflow.init_params(key, cfg)
+    opt = adam_init(params)
+
+    @jax.jit
+    def step(params, opt, x):
+        loss, grads = jax.value_and_grad(tarflow.nll_loss)(params, cfg, x)
+        params, opt = adam_update(grads, opt, params, cfg.lr)
+        return params, opt, loss
+
+    t0 = time.time()
+    for i in range(cfg.train_steps):
+        x = ds.batch(cfg.train_batch, seed=1000 + i)
+        x = x + cfg.noise_std * np.random.default_rng(2000 + i).standard_normal(x.shape).astype(np.float32)
+        params, opt, loss = step(params, opt, jnp.asarray(x))
+        if loss_log is not None and (i % 10 == 0 or i == cfg.train_steps - 1):
+            loss_log.append((i, float(loss)))
+        if i % log_every == 0 or i == cfg.train_steps - 1:
+            print(f"[{cfg.name}] step {i:4d}/{cfg.train_steps} nll/dim {float(loss):.4f} "
+                  f"({time.time() - t0:.0f}s)", flush=True)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# MAF
+# ---------------------------------------------------------------------------
+
+def _maf_dataset(cfg: maf.MafConfig):
+    if cfg.dataset == "ising":
+        return ising.IsingDataset(side=int(np.sqrt(cfg.dim)))
+    if cfg.dataset == "digits":
+        ds = data.make_dataset("digits")
+
+        class _Wrap:
+            def batch(self, n, seed):
+                return ds.batch(n, seed, dequant=0.3)
+
+        return _Wrap()
+    raise ValueError(cfg.dataset)
+
+
+def train_maf(cfg: maf.MafConfig, seed: int = 0, log_every: int = 100, loss_log=None):
+    ds = _maf_dataset(cfg)
+    key = jax.random.PRNGKey(seed)
+    params = maf.init_params(key, cfg)
+    opt = adam_init(params)
+
+    @jax.jit
+    def step(params, opt, x):
+        loss, grads = jax.value_and_grad(maf.nll_loss)(params, cfg, x)
+        params, opt = adam_update(grads, opt, params, cfg.lr)
+        return params, opt, loss
+
+    t0 = time.time()
+    for i in range(cfg.train_steps):
+        x = jnp.asarray(ds.batch(cfg.train_batch, seed=3000 + i))
+        params, opt, loss = step(params, opt, x)
+        if loss_log is not None and (i % 20 == 0 or i == cfg.train_steps - 1):
+            loss_log.append((i, float(loss)))
+        if i % log_every == 0 or i == cfg.train_steps - 1:
+            print(f"[{cfg.name}] step {i:4d}/{cfg.train_steps} nll/dim {float(loss):.4f} "
+                  f"({time.time() - t0:.0f}s)", flush=True)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Baselines
+# ---------------------------------------------------------------------------
+
+def train_ddpm(cfg: baselines.DdpmConfig, seed: int = 0, log_every: int = 100):
+    ds = data.make_dataset(cfg.dataset)
+    key = jax.random.PRNGKey(seed)
+    params = baselines.init_ddpm_params(key, cfg)
+    opt = adam_init(params)
+
+    @jax.jit
+    def step(params, opt, x, key):
+        loss, grads = jax.value_and_grad(baselines.ddpm_loss)(params, cfg, x, key)
+        params, opt = adam_update(grads, opt, params, cfg.lr)
+        return params, opt, loss
+
+    for i in range(cfg.train_steps):
+        x = jnp.asarray(ds.batch(cfg.train_batch, seed=4000 + i))
+        params, opt, loss = step(params, opt, x, jax.random.PRNGKey(5000 + i))
+        if i % log_every == 0 or i == cfg.train_steps - 1:
+            print(f"[{cfg.name}] step {i}/{cfg.train_steps} mse {float(loss):.4f}", flush=True)
+    return params
+
+
+def train_mmdgen(cfg: baselines.MmdGenConfig, seed: int = 0, log_every: int = 100):
+    ds = data.make_dataset(cfg.dataset)
+    key = jax.random.PRNGKey(seed)
+    params = baselines.init_gen_params(key, cfg)
+    opt = adam_init(params)
+
+    @jax.jit
+    def step(params, opt, x, key):
+        loss, grads = jax.value_and_grad(baselines.mmd_loss)(params, cfg, x, key)
+        params, opt = adam_update(grads, opt, params, cfg.lr)
+        return params, opt, loss
+
+    for i in range(cfg.train_steps):
+        x = jnp.asarray(ds.batch(cfg.train_batch, seed=6000 + i))
+        params, opt, loss = step(params, opt, x, jax.random.PRNGKey(7000 + i))
+        if i % log_every == 0 or i == cfg.train_steps - 1:
+            print(f"[{cfg.name}] step {i}/{cfg.train_steps} mmd {float(loss):.5f}", flush=True)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Cache wrapper
+# ---------------------------------------------------------------------------
+
+def train_or_load(name, weights_dir, train_fn, force=False):
+    """Load ``{weights_dir}/{name}.npz`` if present, else train + save."""
+    path = weights_dir / f"{name}.npz"
+    if path.exists() and not force:
+        print(f"[{name}] loading cached weights from {path}", flush=True)
+        return _load_npz(path)
+    params = train_fn()
+    weights_dir.mkdir(parents=True, exist_ok=True)
+    _save_npz(path, params)
+    print(f"[{name}] saved weights to {path}", flush=True)
+    return params

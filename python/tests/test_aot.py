@@ -1,0 +1,145 @@
+"""AOT lowering pipeline: HLO text round-trips through the XLA client with
+weights intact, manifest entries are well-formed, baselines lower."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, baselines, maf, metricnet, tarflow
+
+
+@pytest.fixture(scope="module")
+def tiny_tf():
+    cfg = tarflow.TarFlowConfig(
+        name="tiny", img_hw=8, channels=3, patch=2, blocks=2, layers_per_block=1,
+        model_dim=16, heads=2, noise_std=0.05, dataset="synth10",
+        train_steps=1, train_batch=4, lr=1e-3)
+    params = tarflow.init_params(jax.random.PRNGKey(0), cfg)
+    params["out_w"] = 0.1 * jax.random.normal(jax.random.PRNGKey(1), params["out_w"].shape)
+    return cfg, params
+
+
+class TestHloText:
+    def test_large_constants_included(self, tiny_tf):
+        cfg, params = tiny_tf
+        L, D = cfg.seq_len, cfg.token_dim
+        lowered = jax.jit(
+            lambda k, z, y, o: tarflow.block_jacobi_step(params, cfg, k, z, y, o,
+                                                         use_pallas=True)
+        ).lower(aot.spec((), aot.I32), aot.spec((1, L, D)), aot.spec((1, L, D)),
+                aot.spec((), aot.I32))
+        text = aot.to_hlo_text(lowered)
+        # The elided form `constant({...})` must not appear.
+        assert "constant({...})" not in text
+        assert "parameter(3)" in text  # 4 entry params
+
+    def test_text_reparses(self, tiny_tf):
+        """The emitted text must parse back into an HloModule with the same
+        entry signature — structure-level round-trip check. (The *numeric*
+        round trip through the rust PJRT loader is covered by the rust
+        integration test `artifact_pipeline`.)"""
+        from jax._src.lib import xla_client as xc
+        cfg, params = tiny_tf
+        L, D = cfg.seq_len, cfg.token_dim
+
+        def fn(k, z, y, o):
+            return tarflow.block_jacobi_step(params, cfg, k, z, y, o, use_pallas=True)
+
+        lowered = jax.jit(fn).lower(
+            aot.spec((), aot.I32), aot.spec((1, L, D)), aot.spec((1, L, D)),
+            aot.spec((), aot.I32))
+        text = aot.to_hlo_text(lowered)
+        mod = xc._xla.hlo_module_from_text(text)
+        reparsed = mod.to_string()
+        assert "f32[1,16,12]" in reparsed  # (B, L, D) entry params survive
+        # Weight tensors survive with data (look for the stacked out_w shape).
+        assert f"f32[{cfg.blocks},{cfg.model_dim},{2 * D}]" in reparsed
+
+
+class TestArtifactWriter:
+    def test_manifest_structure(self, tiny_tf, tmp_path):
+        cfg, params = tiny_tf
+        w = aot.ArtifactWriter(tmp_path)
+        aot.lower_tarflow(w, cfg, params, [1])
+        w.write_manifest()
+        manifest = json.loads((tmp_path / "manifest.json").read_text())
+        names = {a["name"] for a in manifest["artifacts"]}
+        assert names == {
+            "tiny_fwd_b1", "tiny_block_fwd_b1", "tiny_block_jstep_b1",
+            "tiny_block_seqfull_b1", "tiny_block_seqstep_b1"}
+        for a in manifest["artifacts"]:
+            assert (tmp_path / a["file"]).exists()
+            assert all("shape" in t and "dtype" in t for t in a["inputs"])
+            assert all("shape" in t and "dtype" in t for t in a["outputs"])
+        m = manifest["models"][0]
+        assert m["seq_len"] == cfg.seq_len
+        assert m["image_hwc"] == [8, 8, 3]
+
+    def test_jstep_signature(self, tiny_tf, tmp_path):
+        cfg, params = tiny_tf
+        w = aot.ArtifactWriter(tmp_path)
+        aot.lower_tarflow(w, cfg, params, [1])
+        jstep = next(e for e in w.entries if "jstep" in e["name"])
+        assert [i["dtype"] for i in jstep["inputs"]] == ["i32", "f32", "f32", "i32"]
+        assert [o["shape"] for o in jstep["outputs"]] == [[1, cfg.seq_len, cfg.token_dim], [1]]
+
+
+class TestBaselines:
+    def test_metricnet_features_shift_sensitive(self):
+        cfg = metricnet.MetricNetConfig(name="m", img_hw=16)
+        params = metricnet.init_params(cfg)
+        a = jax.random.normal(jax.random.PRNGKey(0), (32, 16, 16, 3)) * 0.3
+        b = a + 0.5
+        fa = np.asarray(metricnet.features(params, a))
+        fb = np.asarray(metricnet.features(params, b))
+        assert fa.shape == (32, 64)
+        assert np.abs(fa.mean(0) - fb.mean(0)).max() > 0.01
+
+    def test_ddpm_eps_shape_and_t_dependence(self):
+        cfg = aot.DDPM_CFG._replace(hidden=16, train_steps=1)
+        params = baselines.init_ddpm_params(jax.random.PRNGKey(0), cfg)
+        # Non-zero output head for the test.
+        params["c4"] = 0.1 * jax.random.normal(jax.random.PRNGKey(1), params["c4"].shape)
+        x = jax.random.normal(jax.random.PRNGKey(2), (2, 16, 16, 3))
+        e1 = np.asarray(baselines.eps_model(params, x, jnp.asarray(0)))
+        e2 = np.asarray(baselines.eps_model(params, x, jnp.asarray(100)))
+        assert e1.shape == x.shape
+        assert np.abs(e1 - e2).max() > 1e-5
+
+    def test_ddim_schedule_monotone(self):
+        betas, alphas, abars = baselines.ddpm_schedule(aot.DDPM_CFG)
+        assert np.all(np.diff(np.asarray(abars)) < 0)
+        assert float(abars[0]) > 0.99 and float(abars[-1]) > 0.0
+
+    def test_mmd_generator_shape(self):
+        cfg = aot.MMDGEN_CFG._replace(hidden=16)
+        params = baselines.init_gen_params(jax.random.PRNGKey(0), cfg)
+        z = jax.random.normal(jax.random.PRNGKey(1), (4, cfg.z_dim))
+        img = np.asarray(baselines.generator(params, cfg, z))
+        assert img.shape == (4, 16, 16, 3)
+        assert img.min() >= -1.0 and img.max() <= 1.0
+
+    def test_mmd_loss_zero_for_identical(self):
+        """MMD of a distribution against itself (same samples) is ~0 after
+        the diagonal terms cancel; here just check it's small vs disjoint."""
+        cfg = aot.MMDGEN_CFG._replace(hidden=16)
+        params = baselines.init_gen_params(jax.random.PRNGKey(0), cfg)
+        real = jax.random.normal(jax.random.PRNGKey(2), (16, 16, 16, 3)) * 0.2
+        l1 = float(baselines.mmd_loss(params, cfg, real, jax.random.PRNGKey(3)))
+        assert np.isfinite(l1) and l1 >= -1e-3
+
+
+class TestMafLowering:
+    def test_maf_artifacts(self, tmp_path):
+        cfg = maf.MafConfig(name="mtest", dim=8, layers=2, hidden=16,
+                            dataset="ising", train_steps=1, train_batch=4, lr=1e-3)
+        params = maf.init_params(jax.random.PRNGKey(0), cfg)
+        w = aot.ArtifactWriter(tmp_path)
+        aot.lower_maf(w, cfg, params, [4])
+        w.write_manifest()
+        manifest = json.loads((tmp_path / "manifest.json").read_text())
+        names = {a["name"] for a in manifest["artifacts"]}
+        assert names == {"mtest_fwd_b4", "mtest_layer_jstep_b4"}

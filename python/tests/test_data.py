@@ -1,0 +1,92 @@
+"""Synthetic datasets + Ising substrate sanity."""
+
+import numpy as np
+import pytest
+
+from compile import data, ising
+
+
+class TestSynthImages:
+    def test_shapes_and_range(self):
+        ds = data.make_dataset("synth10")
+        x = ds.batch(8, seed=1)
+        assert x.shape == (8, 16, 16, 3)
+        assert x.min() >= -1.0 and x.max() <= 1.0
+
+    def test_deterministic_given_seed(self):
+        ds = data.make_dataset("synth10")
+        a = ds.batch(4, seed=7)
+        b = ds.batch(4, seed=7)
+        np.testing.assert_array_equal(a, b)
+        c = ds.batch(4, seed=8)
+        assert np.abs(a - c).max() > 0.01
+
+    def test_classes_are_distinct(self):
+        """Different class parameter sets must produce distinct statistics —
+        otherwise the dataset has no multi-modal structure to learn."""
+        ds = data.SynthImages(16, 10, seed=10, noise=0.0)
+        all_params = ds.params
+        means = []
+        for c in range(10):
+            ds.params = [all_params[c]]
+            ds.n_classes = 1
+            means.append(ds.batch(16, seed=3).mean(axis=(0, 1, 2)))
+        ds.params = all_params
+        ds.n_classes = 10
+        means = np.stack(means)
+        dists = np.linalg.norm(means[:, None] - means[None, :], axis=-1)
+        assert (dists[np.triu_indices(10, 1)] > 1e-3).mean() > 0.8
+
+    def test_synth100_has_100_classes(self):
+        ds = data.make_dataset("synth100")
+        assert ds.n_classes == 100
+
+    def test_blobfaces(self):
+        ds = data.make_dataset("synthafhq")
+        x = ds.batch(4, seed=2)
+        assert x.shape == (4, 32, 32, 3)
+        assert x.min() >= -1.0 and x.max() <= 1.0
+        # Faces have spatial structure: column variance far from uniform noise.
+        col_var = x.var(axis=1).mean()
+        assert col_var > 0.01
+
+    def test_digits_binary(self):
+        ds = data.make_dataset("digits")
+        x = ds.batch(6, seed=1)
+        assert x.shape == (6, 196)
+        assert set(np.unique(x)).issubset({-1.0, 1.0})
+        # Dequantized version is continuous.
+        xd = ds.batch(6, seed=1, dequant=0.3)
+        assert len(np.unique(xd)) > 10
+        # Glyphs have ink.
+        assert (x > 0).mean() > 0.05
+
+
+class TestIsing:
+    def test_energy_convention_matches_rust(self):
+        # All-up 4×4: E = −2·16 = −32 (each bond counted once, periodic).
+        up = np.ones(16, np.float32)
+        assert ising.energy(up, 4) == -32.0
+        cb = np.array([1, -1] * 8, np.float32)
+        cb = cb.reshape(4, 4)
+        cb[1::2] *= -1
+        assert ising.energy(cb.reshape(-1), 4) == 32.0
+
+    def test_mcmc_disordered_at_T3(self):
+        ds = ising.IsingDataset(side=8, temperature=3.0, n_configs=256, seed=5)
+        e, m = ds.reference_stats()
+        assert -0.9 < e < -0.3, e
+        assert m < 0.45, m
+
+    def test_dequantize_preserves_signs(self):
+        spins = np.random.default_rng(0).choice([-1.0, 1.0], size=(100, 64)).astype(np.float32)
+        x = ising.dequantize(spins, 0.25, seed=1)
+        agree = (np.sign(x) == spins).mean()
+        assert agree > 0.99
+
+    def test_batches_vary(self):
+        ds = ising.IsingDataset(side=4, temperature=3.0, n_configs=64, seed=2)
+        a = ds.batch(8, seed=1)
+        b = ds.batch(8, seed=2)
+        assert a.shape == (8, 16)
+        assert np.abs(a - b).max() > 0.1

@@ -1,0 +1,138 @@
+"""L1 kernel correctness: Pallas (interpret) vs pure-jnp oracle, including
+hypothesis sweeps over shapes and mask offsets."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import affine_update, attention, ref
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+class TestAttention:
+    @pytest.mark.parametrize("o", [0, 1, 2, 5])
+    def test_matches_ref(self, o):
+        b, h, l, dh = 2, 4, 32, 8
+        q, k, v = _rand(0, (b, h, l, dh)), _rand(1, (b, h, l, dh)), _rand(2, (b, h, l, dh))
+        out_p = attention.causal_attention(q, k, v, o)
+        out_r = ref.causal_attention_ref(q, k, v, o)
+        np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_r), atol=1e-5)
+
+    def test_causality(self):
+        """Output at position l must not depend on inputs at positions >= l."""
+        b, h, l, dh = 1, 2, 16, 4
+        q, k, v = _rand(3, (b, h, l, dh)), _rand(4, (b, h, l, dh)), _rand(5, (b, h, l, dh))
+        base = np.asarray(attention.causal_attention(q, k, v, 0))
+        # Perturb position 10 of k and v; outputs at positions < 10 unchanged.
+        k2 = k.at[:, :, 10, :].add(100.0)
+        v2 = v.at[:, :, 10, :].add(100.0)
+        pert = np.asarray(attention.causal_attention(q, k2, v2, 0))
+        np.testing.assert_allclose(base[:, :, :10], pert[:, :, :10], atol=1e-5)
+        assert np.abs(base[:, :, 10:] - pert[:, :, 10:]).max() > 1e-3
+
+    def test_offset_mask_blocks_nearest(self):
+        """With offset o, position l must ignore positions (l-o, l]."""
+        b, h, l, dh = 1, 1, 12, 4
+        o = 3
+        q, k, v = _rand(6, (b, h, l, dh)), _rand(7, (b, h, l, dh)), _rand(8, (b, h, l, dh))
+        base = np.asarray(attention.causal_attention(q, k, v, o))
+        # Perturbing position 8 must not affect queries at positions 8..10
+        # (they can see only <= pos-o) but may affect position 11.
+        k2 = k.at[:, :, 8, :].add(50.0)
+        v2 = v.at[:, :, 8, :].add(50.0)
+        pert = np.asarray(attention.causal_attention(q, k2, v2, o))
+        np.testing.assert_allclose(base[:, :, 8:11], pert[:, :, 8:11], atol=1e-5)
+        assert np.abs(base[:, :, 11] - pert[:, :, 11]).max() > 1e-4
+
+    def test_pad_column_always_visible(self):
+        """Column 0 stays attendable under any offset (eq-6 convention)."""
+        mask = np.asarray(ref.attention_mask(8, 7))
+        assert mask[:, 0].all()
+        # With huge offset, *only* column 0 is visible for late rows.
+        assert not mask[5, 1:6].any()
+
+    def test_rows_sum_to_one(self):
+        b, h, l, dh = 1, 1, 10, 4
+        q, k, v = _rand(9, (b, h, l, dh)), _rand(10, (b, h, l, dh)), _rand(11, (b, h, l, dh))
+        # Take v = identity-ish probe: attention output = weighted mean of v.
+        out = np.asarray(attention.causal_attention(q, k, jnp.ones_like(v), 0))
+        np.testing.assert_allclose(out, 1.0, atol=1e-5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        b=st.integers(1, 3),
+        h=st.sampled_from([1, 2, 4]),
+        l=st.sampled_from([2, 4, 16, 33]),
+        dh=st.sampled_from([2, 8]),
+        o=st.integers(0, 4),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_shapes(self, b, h, l, dh, o, seed):
+        q, k, v = (_rand(seed + i, (b, h, l, dh)) for i in range(3))
+        out_p = attention.causal_attention(q, k, v, o)
+        out_r = ref.causal_attention_ref(q, k, v, o)
+        np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_r), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Affine update
+# ---------------------------------------------------------------------------
+
+class TestAffineUpdate:
+    def test_matches_ref(self):
+        z, y, s, g = (_rand(20 + i, (3, 16, 6)) for i in range(4))
+        zp, rp = affine_update.affine_inverse_update(z, y, s, g)
+        zr, rr = ref.affine_inverse_update_ref(z, y, s, g)
+        np.testing.assert_allclose(np.asarray(zp), np.asarray(zr), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(rp), np.asarray(rr), atol=1e-5)
+
+    def test_first_token_passthrough(self):
+        z, y, s, g = (_rand(30 + i, (2, 8, 4)) for i in range(4))
+        zp, _ = affine_update.affine_inverse_update(z, y, s, g)
+        np.testing.assert_allclose(np.asarray(zp)[:, 0], np.asarray(y)[:, 0], atol=1e-6)
+
+    def test_residual_is_inf_norm(self):
+        z = jnp.zeros((1, 4, 2))
+        y = jnp.zeros((1, 4, 2))
+        s = jnp.zeros((1, 4, 2))
+        g = jnp.zeros((1, 4, 2)).at[0, 2, 1].set(-7.5)
+        _, r = affine_update.affine_inverse_update(z, y, s, g)
+        np.testing.assert_allclose(np.asarray(r), [7.5], atol=1e-6)
+
+    def test_fixed_point_zero_residual(self):
+        """If z_prev already solves the system, residual = 0."""
+        y, s, g = (_rand(40 + i, (2, 8, 4)) for i in range(3))
+        z_star, _ = ref.affine_inverse_update_ref(jnp.zeros_like(y), y, s, g)
+        # s, g computed from z_prev in the real model, but as a pure kernel
+        # test: applying the same (s, g) to z_star must reproduce z_star.
+        zp, r = affine_update.affine_inverse_update(z_star, y, s, g)
+        np.testing.assert_allclose(np.asarray(zp), np.asarray(z_star), atol=1e-6)
+        np.testing.assert_allclose(np.asarray(r), 0.0, atol=1e-6)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        b=st.integers(1, 4),
+        l=st.sampled_from([1, 2, 16, 31]),
+        d=st.sampled_from([1, 3, 12]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_shapes(self, b, l, d, seed):
+        z, y, s, g = (_rand(seed + i, (b, l, d)) for i in range(4))
+        zp, rp = affine_update.affine_inverse_update(z, y, s, g)
+        zr, rr = ref.affine_inverse_update_ref(z, y, s, g)
+        np.testing.assert_allclose(np.asarray(zp), np.asarray(zr), atol=2e-5)
+        np.testing.assert_allclose(np.asarray(rp), np.asarray(rr), atol=2e-5)
+
+    def test_vmem_estimates_positive(self):
+        assert affine_update.vmem_bytes_estimate(64, 12) > 0
+        assert attention.vmem_bytes_estimate(64, 16) > 0
+        assert attention.mxu_flops_estimate(8, 4, 64, 16) > 0

@@ -1,0 +1,225 @@
+//! Micro-benchmark harness (criterion substitute): warmup, timed iterations,
+//! robust statistics, and markdown table output shared by every bench binary
+//! under `benches/`.
+//!
+//! Benches in this repo are *experiment drivers* — each regenerates one paper
+//! table/figure — so the harness also provides a [`Report`] type that
+//! accumulates labelled rows/series and renders them like the paper does.
+
+use std::time::{Duration, Instant};
+
+/// Timing statistics over repeated runs of a closure.
+#[derive(Clone, Debug)]
+pub struct Timing {
+    pub iters: usize,
+    pub mean: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub p50: Duration,
+    pub stddev: Duration,
+}
+
+impl Timing {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+}
+
+/// Time `f` with `warmup` unmeasured runs followed by `iters` measured runs.
+pub fn time_fn(warmup: usize, iters: usize, mut f: impl FnMut()) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    summarize(&mut samples)
+}
+
+/// Summarize raw duration samples.
+pub fn summarize(samples: &mut [Duration]) -> Timing {
+    assert!(!samples.is_empty());
+    samples.sort();
+    let n = samples.len();
+    let sum: Duration = samples.iter().sum();
+    let mean = sum / n as u32;
+    let mean_s = mean.as_secs_f64();
+    let var = samples
+        .iter()
+        .map(|d| (d.as_secs_f64() - mean_s).powi(2))
+        .sum::<f64>()
+        / n as f64;
+    Timing {
+        iters: n,
+        mean,
+        min: samples[0],
+        max: samples[n - 1],
+        p50: samples[n / 2],
+        stddev: Duration::from_secs_f64(var.sqrt()),
+    }
+}
+
+/// A labelled experiment report that renders paper-style markdown tables and
+/// simple ASCII series plots, and can be appended to a results file.
+pub struct Report {
+    title: String,
+    lines: Vec<String>,
+}
+
+impl Report {
+    pub fn new(title: impl Into<String>) -> Self {
+        let title = title.into();
+        let mut lines = Vec::new();
+        lines.push(format!("\n## {title}\n"));
+        Report { title, lines }
+    }
+
+    pub fn note(&mut self, s: impl AsRef<str>) {
+        self.lines.push(format!("{}\n", s.as_ref()));
+    }
+
+    /// Add a markdown table.
+    pub fn table(&mut self, header: &[&str], rows: &[Vec<String>]) {
+        let mut line = String::from("|");
+        for h in header {
+            line.push_str(&format!(" {h} |"));
+        }
+        self.lines.push(line);
+        let mut sep = String::from("|");
+        for _ in header {
+            sep.push_str("---|");
+        }
+        self.lines.push(sep);
+        for row in rows {
+            let mut line = String::from("|");
+            for cell in row {
+                line.push_str(&format!(" {cell} |"));
+            }
+            self.lines.push(line);
+        }
+        self.lines.push(String::new());
+    }
+
+    /// Add a named numeric series rendered as `label: v1 v2 v3 ...` plus an
+    /// ASCII sparkline-style plot (figures in the paper become these).
+    pub fn series(&mut self, label: &str, xs: &[f64]) {
+        let vals: Vec<String> = xs.iter().map(|v| format!("{v:.4}")).collect();
+        self.lines.push(format!("`{label}`: [{}]", vals.join(", ")));
+        self.lines.push(format!("```\n{}\n```", ascii_plot(xs, 48, 8)));
+    }
+
+    /// Print to stdout and append to `EXPERIMENTS.out.md` next to the repo
+    /// root (aggregated into EXPERIMENTS.md manually/at the end).
+    pub fn finish(self) -> String {
+        let body = self.lines.join("\n");
+        println!("{body}");
+        let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("EXPERIMENTS.out.md");
+        if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(out) {
+            use std::io::Write as _;
+            let _ = writeln!(f, "{body}");
+        }
+        log::info!("report '{}' finished", self.title);
+        body
+    }
+}
+
+/// Tiny ASCII line plot for figure-style series.
+pub fn ascii_plot(xs: &[f64], width: usize, height: usize) -> String {
+    if xs.is_empty() {
+        return String::from("(empty)");
+    }
+    let lo = xs.iter().copied().fold(f64::INFINITY, f64::min);
+    let hi = xs.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    let span = (hi - lo).max(1e-12);
+    let w = width.min(xs.len().max(1));
+    let mut grid = vec![vec![b' '; w]; height];
+    for col in 0..w {
+        let idx = col * (xs.len() - 1).max(1) / (w - 1).max(1);
+        let v = xs[idx.min(xs.len() - 1)];
+        let r = ((v - lo) / span * (height - 1) as f64).round() as usize;
+        let row = height - 1 - r.min(height - 1);
+        grid[row][col] = b'*';
+    }
+    let mut out = String::new();
+    for (i, row) in grid.iter().enumerate() {
+        let label = if i == 0 {
+            format!("{hi:>10.3} |")
+        } else if i == height - 1 {
+            format!("{lo:>10.3} |")
+        } else {
+            format!("{:>10} |", "")
+        };
+        out.push_str(&label);
+        out.push_str(std::str::from_utf8(row).unwrap());
+        out.push('\n');
+    }
+    out
+}
+
+/// Format a duration like the paper's tables (seconds with 2 decimals).
+pub fn fmt_secs(d: Duration) -> String {
+    format!("{:.2}", d.as_secs_f64())
+}
+
+/// Format a speedup factor like the paper (e.g. "3.6x").
+pub fn fmt_speedup(base: Duration, ours: Duration) -> String {
+    format!("{:.1}x", base.as_secs_f64() / ours.as_secs_f64().max(1e-12))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_monotone_stats() {
+        let t = time_fn(1, 20, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(t.iters, 20);
+        assert!(t.min <= t.p50 && t.p50 <= t.max);
+        assert!(t.mean >= t.min && t.mean <= t.max);
+    }
+
+    #[test]
+    fn summarize_known_values() {
+        let mut s = vec![
+            Duration::from_millis(10),
+            Duration::from_millis(20),
+            Duration::from_millis(30),
+        ];
+        let t = summarize(&mut s);
+        assert_eq!(t.mean, Duration::from_millis(20));
+        assert_eq!(t.min, Duration::from_millis(10));
+        assert_eq!(t.max, Duration::from_millis(30));
+    }
+
+    #[test]
+    fn report_table_render() {
+        let mut r = Report::new("test-table");
+        r.table(
+            &["Method", "Time"],
+            &[vec!["Seq".into(), "9.5".into()], vec!["Ours".into(), "2.6".into()]],
+        );
+        let body = r.finish();
+        assert!(body.contains("| Method | Time |"));
+        assert!(body.contains("| Ours | 2.6 |"));
+    }
+
+    #[test]
+    fn plot_handles_flat_and_empty() {
+        assert_eq!(ascii_plot(&[], 10, 4), "(empty)");
+        let p = ascii_plot(&[1.0, 1.0, 1.0], 10, 4);
+        assert!(p.contains('*'));
+    }
+
+    #[test]
+    fn speedup_format() {
+        assert_eq!(
+            fmt_speedup(Duration::from_secs(9), Duration::from_secs(3)),
+            "3.0x"
+        );
+    }
+}

@@ -1,0 +1,269 @@
+//! Declarative CLI argument parser (clap substitute).
+//!
+//! Supports subcommands, `--flag value`, `--flag=value`, boolean switches,
+//! defaults, required args, and generated `--help` text.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// Specification of one option.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<String>,
+    pub required: bool,
+    pub is_switch: bool,
+}
+
+/// A command (or subcommand) specification.
+#[derive(Clone, Debug, Default)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+    pub subcommands: Vec<Command>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command { name, about, opts: Vec::new(), subcommands: Vec::new() }
+    }
+
+    /// `--name <value>` option with a default.
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: Some(default.to_string()),
+            required: false,
+            is_switch: false,
+        });
+        self
+    }
+
+    /// Required `--name <value>` option.
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, required: true, is_switch: false });
+        self
+    }
+
+    /// Boolean `--name` switch.
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: Some("false".to_string()),
+            required: false,
+            is_switch: true,
+        });
+        self
+    }
+
+    pub fn sub(mut self, cmd: Command) -> Self {
+        self.subcommands.push(cmd);
+        self
+    }
+
+    /// Render help text.
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} ", self.name, self.about, self.name);
+        if !self.subcommands.is_empty() {
+            s.push_str("<SUBCOMMAND> ");
+        }
+        s.push_str("[OPTIONS]\n");
+        if !self.subcommands.is_empty() {
+            s.push_str("\nSUBCOMMANDS:\n");
+            for c in &self.subcommands {
+                s.push_str(&format!("  {:<14} {}\n", c.name, c.about));
+            }
+        }
+        if !self.opts.is_empty() {
+            s.push_str("\nOPTIONS:\n");
+            for o in &self.opts {
+                let meta = if o.is_switch { String::new() } else { " <value>".to_string() };
+                let def = match (&o.default, o.is_switch) {
+                    (Some(d), false) => format!(" [default: {d}]"),
+                    _ => String::new(),
+                };
+                s.push_str(&format!("  --{:<18} {}{}\n", format!("{}{meta}", o.name), o.help, def));
+            }
+        }
+        s
+    }
+
+    /// Parse argv (not including the program name).
+    pub fn parse(&self, args: &[String]) -> Result<Parsed> {
+        let mut i = 0;
+        // Subcommand dispatch.
+        if !self.subcommands.is_empty() {
+            if args.is_empty() || args[0] == "--help" || args[0] == "-h" {
+                bail!("{}", self.help_text());
+            }
+            let name = &args[0];
+            let sub = self
+                .subcommands
+                .iter()
+                .find(|c| c.name == *name)
+                .ok_or_else(|| anyhow!("unknown subcommand '{name}'\n\n{}", self.help_text()))?;
+            let mut parsed = sub.parse(&args[1..])?;
+            parsed.subcommand = Some(sub.name.to_string());
+            return Ok(parsed);
+        }
+
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                values.insert(o.name.to_string(), d.clone());
+            }
+        }
+        let mut positional = Vec::new();
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                bail!("{}", self.help_text());
+            }
+            if let Some(rest) = a.strip_prefix("--") {
+                let (key, inline_val) = match rest.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (rest, None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| anyhow!("unknown option '--{key}'\n\n{}", self.help_text()))?;
+                let val = if spec.is_switch {
+                    inline_val.unwrap_or_else(|| "true".to_string())
+                } else if let Some(v) = inline_val {
+                    v
+                } else {
+                    i += 1;
+                    args.get(i)
+                        .cloned()
+                        .ok_or_else(|| anyhow!("option '--{key}' requires a value"))?
+                };
+                values.insert(key.to_string(), val);
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        for o in &self.opts {
+            if o.required && !values.contains_key(o.name) {
+                bail!("missing required option '--{}'\n\n{}", o.name, self.help_text());
+            }
+        }
+        Ok(Parsed { subcommand: None, values, positional })
+    }
+}
+
+/// Parsed arguments.
+#[derive(Debug, Clone)]
+pub struct Parsed {
+    pub subcommand: Option<String>,
+    values: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Parsed {
+    pub fn str(&self, name: &str) -> &str {
+        self.values.get(name).map(String::as_str).unwrap_or("")
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize> {
+        self.str(name)
+            .parse()
+            .map_err(|_| anyhow!("option '--{name}' must be an integer, got '{}'", self.str(name)))
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64> {
+        self.str(name)
+            .parse()
+            .map_err(|_| anyhow!("option '--{name}' must be a number, got '{}'", self.str(name)))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.str(name) == "true"
+    }
+
+    /// Comma-separated list.
+    pub fn list(&self, name: &str) -> Vec<String> {
+        self.str(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(str::to_string)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(str::to_string).collect()
+    }
+
+    fn sample_cmd() -> Command {
+        Command::new("sjd", "test").sub(
+            Command::new("sample", "generate images")
+                .opt("model", "tf10", "model name")
+                .opt("batch", "8", "batch size")
+                .opt("tau", "0.5", "stopping threshold")
+                .switch("sequential", "use sequential decoding")
+                .req("out", "output path"),
+        )
+    }
+
+    #[test]
+    fn parse_subcommand_with_options() {
+        let p = sample_cmd()
+            .parse(&argv("sample --model tfafhq --batch=4 --sequential --out /tmp/x"))
+            .unwrap();
+        assert_eq!(p.subcommand.as_deref(), Some("sample"));
+        assert_eq!(p.str("model"), "tfafhq");
+        assert_eq!(p.usize("batch").unwrap(), 4);
+        assert!((p.f64("tau").unwrap() - 0.5).abs() < 1e-9);
+        assert!(p.flag("sequential"));
+        assert_eq!(p.str("out"), "/tmp/x");
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = sample_cmd().parse(&argv("sample --out x")).unwrap();
+        assert_eq!(p.str("model"), "tf10");
+        assert!(!p.flag("sequential"));
+    }
+
+    #[test]
+    fn missing_required_rejected() {
+        assert!(sample_cmd().parse(&argv("sample --model tf10")).is_err());
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(sample_cmd().parse(&argv("sample --out x --bogus 1")).is_err());
+        assert!(sample_cmd().parse(&argv("bogus")).is_err());
+    }
+
+    #[test]
+    fn help_requested() {
+        let err = sample_cmd().parse(&argv("sample --help")).unwrap_err().to_string();
+        assert!(err.contains("OPTIONS"));
+        assert!(err.contains("--model"));
+    }
+
+    #[test]
+    fn numeric_errors() {
+        let p = sample_cmd().parse(&argv("sample --batch abc --out x")).unwrap();
+        assert!(p.usize("batch").is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let cmd = Command::new("x", "").opt("taus", "0.1,0.5,1.0", "tau list");
+        let p = cmd.parse(&[]).unwrap();
+        assert_eq!(p.list("taus"), vec!["0.1", "0.5", "1.0"]);
+    }
+}

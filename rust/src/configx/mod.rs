@@ -1,0 +1,291 @@
+//! Typed configuration system with a TOML-subset file format and environment
+//! overrides.
+//!
+//! Format (subset of TOML): `[section]` headers, `key = value` lines where
+//! value is a string (quoted), number, bool, or `[a, b, c]` array of those;
+//! `#` comments. Environment variables `SJD_<SECTION>_<KEY>` override file
+//! values; CLI-provided pairs override both.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A raw config value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CValue {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    List(Vec<CValue>),
+}
+
+impl CValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            CValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            CValue::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            CValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed configuration: `section.key -> value`.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: BTreeMap<String, CValue>,
+}
+
+impl Config {
+    /// Parse from TOML-subset text.
+    pub fn from_text(text: &str) -> Result<Self> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    bail!("line {}: malformed section header '{raw}'", lineno + 1);
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected 'key = value'", lineno + 1))?;
+            let full_key = if section.is_empty() {
+                key.trim().to_string()
+            } else {
+                format!("{section}.{}", key.trim())
+            };
+            let parsed = parse_value(val.trim())
+                .with_context(|| format!("line {}: bad value '{}'", lineno + 1, val.trim()))?;
+            values.insert(full_key, parsed);
+        }
+        Ok(Config { values })
+    }
+
+    /// Load from file, then apply `SJD_*` environment overrides.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading config {}", path.as_ref().display()))?;
+        let mut cfg = Self::from_text(&text)?;
+        cfg.apply_env_overrides(std::env::vars());
+        Ok(cfg)
+    }
+
+    /// Apply `SJD_SECTION_KEY=value` overrides from an iterator of env pairs.
+    pub fn apply_env_overrides(&mut self, vars: impl Iterator<Item = (String, String)>) {
+        for (k, v) in vars {
+            if let Some(rest) = k.strip_prefix("SJD_") {
+                // SECTION_KEY → section.key (first underscore splits).
+                if let Some((section, key)) = rest.split_once('_') {
+                    let cfg_key = format!("{}.{}", section.to_lowercase(), key.to_lowercase());
+                    let val =
+                        parse_value(&v).unwrap_or_else(|_| CValue::Str(v.clone()));
+                    self.values.insert(cfg_key, val);
+                }
+            }
+        }
+    }
+
+    /// Set an explicit override (CLI layer).
+    pub fn set(&mut self, key: &str, value: CValue) {
+        self.values.insert(key.to_string(), value);
+    }
+
+    pub fn get(&self, key: &str) -> Option<&CValue> {
+        self.values.get(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).and_then(CValue::as_str).unwrap_or(default).to_string()
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(CValue::as_f64).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(CValue::as_f64).map(|n| n as usize).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(CValue::as_bool).unwrap_or(default)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(String::as_str)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<CValue> {
+    let s = s.trim();
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if s.starts_with('"') {
+        if !s.ends_with('"') || s.len() < 2 {
+            bail!("unterminated string");
+        }
+        return Ok(CValue::Str(s[1..s.len() - 1].to_string()));
+    }
+    if s == "true" {
+        return Ok(CValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(CValue::Bool(false));
+    }
+    if s.starts_with('[') {
+        if !s.ends_with(']') {
+            bail!("unterminated list");
+        }
+        let inner = &s[1..s.len() - 1];
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in inner.split(',') {
+                items.push(parse_value(part)?);
+            }
+        }
+        return Ok(CValue::List(items));
+    }
+    s.parse::<f64>()
+        .map(CValue::Num)
+        .map_err(|_| anyhow!("cannot parse value '{s}'"))
+}
+
+/// Serving configuration assembled from file + env + CLI.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub artifacts_dir: String,
+    pub model: String,
+    pub addr: String,
+    pub workers: usize,
+    pub batch_max: usize,
+    pub batch_wait_ms: u64,
+    pub tau: f32,
+    pub policy: String,
+    pub seed: u64,
+}
+
+impl ServeConfig {
+    pub fn from_config(cfg: &Config) -> Self {
+        ServeConfig {
+            artifacts_dir: cfg.str_or("serve.artifacts_dir", "artifacts"),
+            model: cfg.str_or("serve.model", "tf10"),
+            addr: cfg.str_or("serve.addr", "127.0.0.1:8471"),
+            workers: cfg.usize_or("serve.workers", 2),
+            batch_max: cfg.usize_or("serve.batch_max", 8),
+            batch_wait_ms: cfg.usize_or("serve.batch_wait_ms", 20) as u64,
+            tau: cfg.f64_or("serve.tau", 0.5) as f32,
+            policy: cfg.str_or("serve.policy", "selective"),
+            seed: cfg.usize_or("serve.seed", 42) as u64,
+        }
+    }
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self::from_config(&Config::default())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# serving config
+[serve]
+model = "tfafhq"
+workers = 4
+tau = 0.25
+policy = "selective"   # paper default
+verbose = true
+taus = [0.1, 0.5, 1.0]
+
+[batcher]
+max = 16
+"#;
+
+    #[test]
+    fn parse_sections_and_types() {
+        let cfg = Config::from_text(SAMPLE).unwrap();
+        assert_eq!(cfg.str_or("serve.model", ""), "tfafhq");
+        assert_eq!(cfg.usize_or("serve.workers", 0), 4);
+        assert!((cfg.f64_or("serve.tau", 0.0) - 0.25).abs() < 1e-9);
+        assert!(cfg.bool_or("serve.verbose", false));
+        assert_eq!(cfg.usize_or("batcher.max", 0), 16);
+        match cfg.get("serve.taus").unwrap() {
+            CValue::List(l) => assert_eq!(l.len(), 3),
+            _ => panic!("expected list"),
+        }
+    }
+
+    #[test]
+    fn comments_and_defaults() {
+        let cfg = Config::from_text("# only a comment\n").unwrap();
+        assert_eq!(cfg.str_or("a.b", "dflt"), "dflt");
+        assert_eq!(cfg.usize_or("a.n", 7), 7);
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let cfg = Config::from_text("[s]\nv = \"a#b\"\n").unwrap();
+        assert_eq!(cfg.str_or("s.v", ""), "a#b");
+    }
+
+    #[test]
+    fn env_overrides() {
+        let mut cfg = Config::from_text("[serve]\nworkers = 1\n").unwrap();
+        cfg.apply_env_overrides(
+            vec![("SJD_SERVE_WORKERS".to_string(), "8".to_string())].into_iter(),
+        );
+        assert_eq!(cfg.usize_or("serve.workers", 0), 8);
+    }
+
+    #[test]
+    fn malformed_rejected() {
+        assert!(Config::from_text("[unclosed\n").is_err());
+        assert!(Config::from_text("keynovalue\n").is_err());
+        assert!(Config::from_text("k = \"unterminated\n").is_err());
+        assert!(Config::from_text("k = [1, 2\n").is_err());
+    }
+
+    #[test]
+    fn serve_config_assembly() {
+        let cfg = Config::from_text("[serve]\nmodel = \"tf100\"\nbatch_max = 4\n").unwrap();
+        let sc = ServeConfig::from_config(&cfg);
+        assert_eq!(sc.model, "tf100");
+        assert_eq!(sc.batch_max, 4);
+        assert_eq!(sc.policy, "selective"); // default preserved
+    }
+}

@@ -1,0 +1,181 @@
+//! Dynamic request batching.
+//!
+//! Artifacts are lowered for fixed batch sizes, so the batcher groups
+//! single-image slots from concurrent requests into one model batch of
+//! exactly `batch_size` slots, padding with throwaway slots when a deadline
+//! expires before the batch fills (vLLM-style max-wait batching).
+
+use crate::exec::OneShot;
+use crate::tensor::Tensor;
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One image slot of a request.
+pub struct Slot {
+    pub request_id: u64,
+    pub seed: u64,
+    /// Completion channel: receives the generated (H, W, C) image.
+    pub done: OneShot<Tensor>,
+    pub enqueued: Instant,
+}
+
+/// A formed batch handed to a worker.
+pub struct Batch {
+    pub slots: Vec<Slot>,
+    /// Number of padding slots added to reach the artifact batch size.
+    pub padding: usize,
+    pub formed: Instant,
+}
+
+struct QueueInner {
+    slots: VecDeque<Slot>,
+    closed: bool,
+}
+
+/// Shared batching queue.
+#[derive(Clone)]
+pub struct Batcher {
+    inner: Arc<(Mutex<QueueInner>, Condvar)>,
+    pub batch_size: usize,
+    pub max_wait: Duration,
+}
+
+impl Batcher {
+    pub fn new(batch_size: usize, max_wait: Duration) -> Self {
+        assert!(batch_size > 0);
+        Batcher {
+            inner: Arc::new((
+                Mutex::new(QueueInner { slots: VecDeque::new(), closed: false }),
+                Condvar::new(),
+            )),
+            batch_size,
+            max_wait,
+        }
+    }
+
+    /// Enqueue one slot; returns its completion handle.
+    pub fn submit(&self, request_id: u64, seed: u64) -> OneShot<Tensor> {
+        let done = OneShot::new();
+        let slot = Slot { request_id, seed, done: done.clone(), enqueued: Instant::now() };
+        let (m, cv) = &*self.inner;
+        m.lock().unwrap().slots.push_back(slot);
+        cv.notify_all();
+        done
+    }
+
+    pub fn queued(&self) -> usize {
+        self.inner.0.lock().unwrap().slots.len()
+    }
+
+    /// Close the queue: waiting workers drain remaining slots then get `None`.
+    pub fn close(&self) {
+        self.inner.0.lock().unwrap().closed = true;
+        self.inner.1.notify_all();
+    }
+
+    /// Worker side: block until a full batch is available or the oldest slot
+    /// has waited `max_wait`, then return a (possibly padded) batch. `None`
+    /// after [`Self::close`] once the queue is drained.
+    pub fn next_batch(&self) -> Option<Batch> {
+        let (m, cv) = &*self.inner;
+        let mut q = m.lock().unwrap();
+        loop {
+            if q.slots.len() >= self.batch_size {
+                break;
+            }
+            if !q.slots.is_empty() {
+                let oldest = q.slots.front().unwrap().enqueued;
+                let waited = oldest.elapsed();
+                if waited >= self.max_wait {
+                    break; // flush partial batch
+                }
+                let (nq, _timeout) = cv.wait_timeout(q, self.max_wait - waited).unwrap();
+                q = nq;
+                continue;
+            }
+            if q.closed {
+                return None;
+            }
+            q = cv.wait(q).unwrap();
+        }
+        let take = q.slots.len().min(self.batch_size);
+        let slots: Vec<Slot> = q.slots.drain(..take).collect();
+        let padding = self.batch_size - slots.len();
+        Some(Batch { slots, padding, formed: Instant::now() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_batch_formed_immediately() {
+        let b = Batcher::new(4, Duration::from_secs(10));
+        let handles: Vec<_> = (0..4).map(|i| b.submit(i, i)).collect();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.slots.len(), 4);
+        assert_eq!(batch.padding, 0);
+        assert_eq!(b.queued(), 0);
+        drop(handles);
+    }
+
+    #[test]
+    fn partial_batch_flushes_on_deadline() {
+        let b = Batcher::new(8, Duration::from_millis(30));
+        let _h = b.submit(1, 0);
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+        assert_eq!(batch.slots.len(), 1);
+        assert_eq!(batch.padding, 7);
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let b = Batcher::new(4, Duration::from_millis(5));
+        let _h = b.submit(1, 0);
+        b.close();
+        let batch = b.next_batch();
+        assert!(batch.is_some());
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let b = Batcher::new(3, Duration::from_secs(1));
+        for i in 0..3 {
+            b.submit(i, 0);
+        }
+        let batch = b.next_batch().unwrap();
+        let ids: Vec<u64> = batch.slots.iter().map(|s| s.request_id).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn oversubmission_leaves_remainder_queued() {
+        let b = Batcher::new(2, Duration::from_secs(1));
+        for i in 0..5 {
+            b.submit(i, 0);
+        }
+        let b1 = b.next_batch().unwrap();
+        assert_eq!(b1.slots.len(), 2);
+        assert_eq!(b.queued(), 3);
+    }
+
+    #[test]
+    fn cross_thread_completion() {
+        let b = Batcher::new(1, Duration::from_secs(1));
+        let h = b.submit(1, 7);
+        let b2 = b.clone();
+        std::thread::spawn(move || {
+            let batch = b2.next_batch().unwrap();
+            for slot in batch.slots {
+                slot.done.put(Tensor::full(&[2, 2, 3], slot.seed as f32));
+            }
+        });
+        let img = h.wait();
+        assert_eq!(img.data()[0], 7.0);
+    }
+}

@@ -1,0 +1,174 @@
+//! Jacobi decoding driver (paper Alg 1).
+//!
+//! One Jacobi *step* is an AOT artifact call `(k, z_t, y) → (z_{t+1}, resid)`
+//! that updates every position of the sequence in parallel from the previous
+//! iterate (the L1 Pallas hot path). This driver owns the L3 concerns: the
+//! initialization strategy, the τ stopping rule on ‖z^t − z^{t−1}‖∞, the
+//! worst-case `L` iteration guard (Prop 3.2 guarantees exactness at `t = L`),
+//! and per-layer statistics for the selective policy / paper tables.
+
+use crate::runtime::{Backend, HostTensor};
+use crate::tensor::Pcg64;
+use anyhow::Result;
+use std::time::{Duration, Instant};
+
+/// How `z⁰` is initialized (paper Fig 6 ablation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InitStrategy {
+    /// `z⁰ = 0` (paper default, Alg 1).
+    Zeros,
+    /// `z⁰ ~ N(0, I)`.
+    Normal,
+    /// `z⁰ = z_{k+1}` (previous layer's output — the Jacobi input itself).
+    PrevLayer,
+}
+
+impl InitStrategy {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "zeros" => Some(InitStrategy::Zeros),
+            "normal" => Some(InitStrategy::Normal),
+            "prev" | "prev_layer" => Some(InitStrategy::PrevLayer),
+            _ => None,
+        }
+    }
+}
+
+/// Driver configuration.
+#[derive(Clone, Debug)]
+pub struct JacobiConfig {
+    /// Stopping threshold τ on ‖z^t − z^{t−1}‖∞ (paper default 0.5).
+    pub tau: f32,
+    /// Hard iteration cap; `None` ⇒ the sequence length `L` (Prop 3.2 bound).
+    pub max_iters: Option<usize>,
+    pub init: InitStrategy,
+    /// Seed for `InitStrategy::Normal`.
+    pub seed: u64,
+}
+
+impl Default for JacobiConfig {
+    fn default() -> Self {
+        JacobiConfig { tau: 0.5, max_iters: None, init: InitStrategy::Zeros, seed: 0 }
+    }
+}
+
+/// Statistics of one Jacobi decode of one block.
+#[derive(Clone, Debug)]
+pub struct JacobiStats {
+    pub block: usize,
+    pub iterations: usize,
+    pub wall: Duration,
+    /// Residual ‖z^t − z^{t−1}‖∞ after each iteration.
+    pub residuals: Vec<f32>,
+    /// Whether the τ criterion was reached (vs hitting the iteration cap).
+    pub converged: bool,
+}
+
+/// Decode block `k` by Jacobi iteration.
+///
+/// `y` is the block input `z_{k+1}` with shape (B, L, D); the artifact
+/// `{model}_block_jstep_b{B}` computes one parallel update plus the residual
+/// max over the batch. `mask_o > 0` applies the paper's eq-6 dependency mask
+/// (used for the Fig 1/2 redundancy experiments); `mask_o = 0` is the exact
+/// update of Alg 1.
+pub fn jacobi_decode_block<B: Backend>(
+    engine: &B,
+    artifact: &str,
+    block: usize,
+    y: &HostTensor,
+    seq_len: usize,
+    cfg: &JacobiConfig,
+    mask_o: usize,
+) -> Result<(HostTensor, JacobiStats)> {
+    let t0 = Instant::now();
+    let mut z = init_iterate(y, cfg);
+    let cap = cfg.max_iters.unwrap_or(seq_len);
+    let mut residuals = Vec::new();
+    let mut converged = false;
+
+    let mut iterations = 0;
+    while iterations < cap {
+        let out = engine.call(
+            artifact,
+            &[
+                HostTensor::scalar_i32(block as i32),
+                z,
+                y.clone(),
+                HostTensor::scalar_i32(mask_o as i32),
+            ],
+        )?;
+        let mut it = out.into_iter();
+        let z_next = it.next().expect("jstep returns z'");
+        let resid_t = it.next().expect("jstep returns residual");
+        let resid = resid_t.as_f32()?.iter().copied().fold(0.0f32, f32::max);
+        residuals.push(resid);
+        z = z_next;
+        iterations += 1;
+        if resid < cfg.tau {
+            converged = true;
+            break;
+        }
+    }
+
+    Ok((
+        z,
+        JacobiStats { block, iterations, wall: t0.elapsed(), residuals, converged },
+    ))
+}
+
+/// Build the initial iterate `z⁰` per the configured strategy.
+pub fn init_iterate(y: &HostTensor, cfg: &JacobiConfig) -> HostTensor {
+    match cfg.init {
+        InitStrategy::Zeros => HostTensor::f32(y.shape(), vec![0.0; y.len()]),
+        InitStrategy::Normal => {
+            let mut rng = Pcg64::seed(cfg.seed);
+            HostTensor::f32(y.shape(), (0..y.len()).map(|_| rng.next_gaussian()).collect())
+        }
+        InitStrategy::PrevLayer => y.clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_strategies() {
+        let y = HostTensor::f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let zeros = init_iterate(&y, &JacobiConfig::default());
+        assert_eq!(zeros.as_f32().unwrap(), &[0.0; 6]);
+
+        let prev = init_iterate(
+            &y,
+            &JacobiConfig { init: InitStrategy::PrevLayer, ..Default::default() },
+        );
+        assert_eq!(prev.as_f32().unwrap(), y.as_f32().unwrap());
+
+        let n1 = init_iterate(
+            &y,
+            &JacobiConfig { init: InitStrategy::Normal, seed: 5, ..Default::default() },
+        );
+        let n2 = init_iterate(
+            &y,
+            &JacobiConfig { init: InitStrategy::Normal, seed: 5, ..Default::default() },
+        );
+        assert_eq!(n1.as_f32().unwrap(), n2.as_f32().unwrap());
+        assert_ne!(n1.as_f32().unwrap(), zeros.as_f32().unwrap());
+    }
+
+    #[test]
+    fn parse_init() {
+        assert_eq!(InitStrategy::parse("zeros"), Some(InitStrategy::Zeros));
+        assert_eq!(InitStrategy::parse("normal"), Some(InitStrategy::Normal));
+        assert_eq!(InitStrategy::parse("prev"), Some(InitStrategy::PrevLayer));
+        assert_eq!(InitStrategy::parse("bogus"), None);
+    }
+
+    #[test]
+    fn default_config_matches_paper() {
+        let c = JacobiConfig::default();
+        assert_eq!(c.tau, 0.5);
+        assert_eq!(c.init, InitStrategy::Zeros);
+        assert!(c.max_iters.is_none());
+    }
+}

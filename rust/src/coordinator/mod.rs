@@ -1,0 +1,25 @@
+//! L3 coordinator — the paper's system contribution wired as a serving stack.
+//!
+//! * [`jacobi`] — the parallel Jacobi decoding driver (Alg 1): iterate the
+//!   per-block fixed point `z ← F(z)` until `‖z^t − z^{t−1}‖∞ < τ`.
+//! * [`policy`] — where to use Jacobi (paper §3.5): sequential for the
+//!   dependency-heavy first block, Jacobi for the rest, plus uniform /
+//!   sequential / adaptive variants.
+//! * [`sampler`] — full noise→image pipeline over the AOT artifacts.
+//! * [`batcher`] — dynamic request batching onto artifact batch shapes.
+//! * [`router`] — multi-worker dispatch (one engine per worker thread).
+//! * [`server`] — HTTP/1.1 front end (`/generate`, `/metrics`, `/healthz`).
+//! * [`state`] — per-request decode state & KV-cache buffers.
+
+pub mod batcher;
+pub mod jacobi;
+pub mod maf;
+pub mod policy;
+pub mod router;
+pub mod sampler;
+pub mod server;
+pub mod state;
+
+pub use jacobi::{InitStrategy, JacobiConfig, JacobiStats};
+pub use policy::DecodePolicy;
+pub use sampler::{SampleOptions, Sampler};

@@ -1,0 +1,241 @@
+//! Decode-policy selection (paper §3.5, "Where to Use Jacobi Decoding").
+//!
+//! The flow has `K` blocks decoded in order `k = K, K−1, …, 1` during
+//! sampling (noise → data). Block index here is the *decode position*
+//! `0 .. K-1` where position 0 is the first block applied to Gaussian noise —
+//! the paper's "first layer" with low redundancy.
+
+use super::jacobi::JacobiStats;
+
+/// How each of the `K` blocks is decoded.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DecodePolicy {
+    /// Standard sequential (autoregressive, KV cache) everywhere — the
+    /// paper's baseline.
+    Sequential,
+    /// Jacobi everywhere (paper's "UJD" baseline).
+    UniformJacobi,
+    /// Paper's SJD: sequential for the first `seq_blocks` decode positions,
+    /// Jacobi for the rest. `seq_blocks = 1` is the paper's setting.
+    Selective { seq_blocks: usize },
+    /// Per-block choice learned by calibration (see [`calibrate`]).
+    Custom { jacobi_mask: Vec<bool> },
+}
+
+impl DecodePolicy {
+    /// Parse CLI string: "sequential" | "ujd" | "selective" | "selective:N".
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "sequential" | "seq" => Some(DecodePolicy::Sequential),
+            "ujd" | "uniform" | "jacobi" => Some(DecodePolicy::UniformJacobi),
+            "selective" | "sjd" => Some(DecodePolicy::Selective { seq_blocks: 1 }),
+            _ => {
+                let n = s.strip_prefix("selective:")?.parse().ok()?;
+                Some(DecodePolicy::Selective { seq_blocks: n })
+            }
+        }
+    }
+
+    /// Should decode-position `pos` (0-based, 0 = first block after noise)
+    /// use Jacobi?
+    pub fn use_jacobi(&self, pos: usize, total_blocks: usize) -> bool {
+        debug_assert!(pos < total_blocks);
+        match self {
+            DecodePolicy::Sequential => false,
+            DecodePolicy::UniformJacobi => true,
+            DecodePolicy::Selective { seq_blocks } => pos >= *seq_blocks,
+            DecodePolicy::Custom { jacobi_mask } => {
+                jacobi_mask.get(pos).copied().unwrap_or(true)
+            }
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            DecodePolicy::Sequential => "Sequential".into(),
+            DecodePolicy::UniformJacobi => "UJD".into(),
+            DecodePolicy::Selective { seq_blocks: 1 } => "SJD".into(),
+            DecodePolicy::Selective { seq_blocks } => format!("SJD(seq={seq_blocks})"),
+            DecodePolicy::Custom { .. } => "Adaptive".into(),
+        }
+    }
+}
+
+/// Calibration: decide per-block Jacobi vs sequential from measured stats.
+///
+/// A block prefers Jacobi when its measured Jacobi wall time beats the
+/// estimated sequential wall time for the same block. `seq_wall` comes from
+/// a sequential calibration pass; if a block's Jacobi decode failed to
+/// converge within the cap it is forced sequential.
+pub fn calibrate(
+    jacobi: &[JacobiStats],
+    seq_wall: &[std::time::Duration],
+) -> DecodePolicy {
+    assert_eq!(jacobi.len(), seq_wall.len());
+    let mask = jacobi
+        .iter()
+        .zip(seq_wall)
+        .map(|(j, s)| j.converged && j.wall < *s)
+        .collect();
+    DecodePolicy::Custom { jacobi_mask: mask }
+}
+
+impl DecodePolicy {
+    /// Serialize to JSON (calibration persistence: `sjd calibrate` writes
+    /// this; `sjd serve --policy @file.json` loads it).
+    pub fn to_json(&self) -> crate::jsonx::Value {
+        use crate::jsonx::Value;
+        match self {
+            DecodePolicy::Sequential => Value::obj(vec![("kind", Value::str("sequential"))]),
+            DecodePolicy::UniformJacobi => Value::obj(vec![("kind", Value::str("ujd"))]),
+            DecodePolicy::Selective { seq_blocks } => Value::obj(vec![
+                ("kind", Value::str("selective")),
+                ("seq_blocks", Value::num(*seq_blocks as f64)),
+            ]),
+            DecodePolicy::Custom { jacobi_mask } => Value::obj(vec![
+                ("kind", Value::str("custom")),
+                (
+                    "jacobi_mask",
+                    Value::Arr(jacobi_mask.iter().map(|&b| Value::Bool(b)).collect()),
+                ),
+            ]),
+        }
+    }
+
+    /// Deserialize from JSON.
+    pub fn from_json(v: &crate::jsonx::Value) -> anyhow::Result<Self> {
+        use crate::jsonx::Value;
+        match v.req_str("kind")? {
+            "sequential" => Ok(DecodePolicy::Sequential),
+            "ujd" => Ok(DecodePolicy::UniformJacobi),
+            "selective" => Ok(DecodePolicy::Selective {
+                seq_blocks: v.get("seq_blocks").and_then(Value::as_usize).unwrap_or(1),
+            }),
+            "custom" => {
+                let mask = v
+                    .req_arr("jacobi_mask")?
+                    .iter()
+                    .map(|b| b.as_bool().ok_or_else(|| anyhow::anyhow!("bad mask entry")))
+                    .collect::<anyhow::Result<Vec<bool>>>()?;
+                Ok(DecodePolicy::Custom { jacobi_mask: mask })
+            }
+            other => anyhow::bail!("unknown policy kind '{other}'"),
+        }
+    }
+
+    /// Load from a `@path.json` reference or parse as a CLI string.
+    pub fn parse_or_load(s: &str) -> anyhow::Result<Self> {
+        if let Some(path) = s.strip_prefix('@') {
+            let text = std::fs::read_to_string(path)?;
+            return Self::from_json(&crate::jsonx::parse(&text)?);
+        }
+        Self::parse(s).ok_or_else(|| anyhow::anyhow!("bad policy '{s}'"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn parse_variants() {
+        assert_eq!(DecodePolicy::parse("sequential"), Some(DecodePolicy::Sequential));
+        assert_eq!(DecodePolicy::parse("ujd"), Some(DecodePolicy::UniformJacobi));
+        assert_eq!(
+            DecodePolicy::parse("selective"),
+            Some(DecodePolicy::Selective { seq_blocks: 1 })
+        );
+        assert_eq!(
+            DecodePolicy::parse("selective:2"),
+            Some(DecodePolicy::Selective { seq_blocks: 2 })
+        );
+        assert_eq!(DecodePolicy::parse("wat"), None);
+    }
+
+    #[test]
+    fn selective_matches_paper() {
+        // Paper: sequential on the first layer only, Jacobi on the rest.
+        let p = DecodePolicy::Selective { seq_blocks: 1 };
+        assert!(!p.use_jacobi(0, 4));
+        assert!(p.use_jacobi(1, 4));
+        assert!(p.use_jacobi(3, 4));
+    }
+
+    #[test]
+    fn uniform_and_sequential() {
+        assert!(DecodePolicy::UniformJacobi.use_jacobi(0, 4));
+        assert!(!DecodePolicy::Sequential.use_jacobi(3, 4));
+    }
+
+    #[test]
+    fn custom_mask() {
+        let p = DecodePolicy::Custom { jacobi_mask: vec![false, true, false] };
+        assert!(!p.use_jacobi(0, 3));
+        assert!(p.use_jacobi(1, 3));
+        assert!(!p.use_jacobi(2, 3));
+    }
+
+    #[test]
+    fn calibrate_prefers_faster_converged() {
+        let mk = |block, iters, ms, converged| JacobiStats {
+            block,
+            iterations: iters,
+            wall: Duration::from_millis(ms),
+            residuals: vec![],
+            converged,
+        };
+        let jacobi = vec![
+            mk(0, 64, 900, true),  // slower than seq → sequential
+            mk(1, 5, 50, true),    // faster → jacobi
+            mk(2, 64, 10, false),  // failed to converge → sequential
+        ];
+        let seq = vec![
+            Duration::from_millis(500),
+            Duration::from_millis(500),
+            Duration::from_millis(500),
+        ];
+        let p = calibrate(&jacobi, &seq);
+        assert_eq!(
+            p,
+            DecodePolicy::Custom { jacobi_mask: vec![false, true, false] }
+        );
+    }
+
+    #[test]
+    fn json_roundtrip_all_variants() {
+        for p in [
+            DecodePolicy::Sequential,
+            DecodePolicy::UniformJacobi,
+            DecodePolicy::Selective { seq_blocks: 2 },
+            DecodePolicy::Custom { jacobi_mask: vec![false, true, true] },
+        ] {
+            let j = p.to_json();
+            let back = DecodePolicy::from_json(&j).unwrap();
+            assert_eq!(p, back);
+        }
+    }
+
+    #[test]
+    fn parse_or_load_file() {
+        let p = DecodePolicy::Custom { jacobi_mask: vec![false, true] };
+        let path = std::env::temp_dir().join("sjd_policy_test.json");
+        std::fs::write(&path, crate::jsonx::to_string_pretty(&p.to_json())).unwrap();
+        let loaded =
+            DecodePolicy::parse_or_load(&format!("@{}", path.display())).unwrap();
+        assert_eq!(loaded, p);
+        // Plain strings still parse.
+        assert_eq!(
+            DecodePolicy::parse_or_load("ujd").unwrap(),
+            DecodePolicy::UniformJacobi
+        );
+        assert!(DecodePolicy::parse_or_load("nope").is_err());
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(DecodePolicy::Sequential.label(), "Sequential");
+        assert_eq!(DecodePolicy::Selective { seq_blocks: 1 }.label(), "SJD");
+        assert_eq!(DecodePolicy::UniformJacobi.label(), "UJD");
+    }
+}

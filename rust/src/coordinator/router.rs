@@ -1,0 +1,137 @@
+//! Multi-worker router: each worker is a dedicated OS thread owning its own
+//! PJRT [`Engine`] + [`Sampler`] (engines are `Rc`-based and thread-pinned),
+//! all pulling batches from the shared [`Batcher`] queue — work-stealing via
+//! a single MPMC queue gives least-loaded dispatch for free.
+
+use super::batcher::Batcher;
+use super::sampler::{SampleOptions, Sampler};
+use crate::metrics::Registry;
+use crate::runtime::Engine;
+use crate::tensor::Pcg64;
+use anyhow::Result;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Router configuration.
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    pub artifacts_dir: PathBuf,
+    pub model: String,
+    pub batch_size: usize,
+    pub workers: usize,
+    pub options: SampleOptions,
+}
+
+/// Running worker fleet.
+pub struct Router {
+    pub batcher: Batcher,
+    pub registry: Registry,
+    stop: Arc<AtomicBool>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Router {
+    /// Spawn `cfg.workers` worker threads. Each validates its engine before
+    /// the router returns (fail-fast on bad artifacts).
+    pub fn start(cfg: RouterConfig, batcher: Batcher, registry: Registry) -> Result<Self> {
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut workers = Vec::with_capacity(cfg.workers);
+        let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<()>>();
+
+        for widx in 0..cfg.workers.max(1) {
+            let cfg = cfg.clone();
+            let batcher = batcher.clone();
+            let registry = registry.clone();
+            let stop = stop.clone();
+            let ready = ready_tx.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("sjd-worker-{widx}"))
+                    .spawn(move || worker_main(widx, cfg, batcher, registry, stop, ready))
+                    .expect("spawn worker"),
+            );
+        }
+        drop(ready_tx);
+        for _ in 0..cfg.workers.max(1) {
+            ready_rx.recv().expect("worker startup signal")?;
+        }
+        Ok(Router { batcher, registry, stop, workers })
+    }
+
+    /// Stop workers after the queue drains.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.batcher.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_main(
+    widx: usize,
+    cfg: RouterConfig,
+    batcher: Batcher,
+    registry: Registry,
+    stop: Arc<AtomicBool>,
+    ready: std::sync::mpsc::Sender<Result<()>>,
+) {
+    // Build the thread-pinned engine + sampler; report readiness.
+    let engine = match Engine::new(&cfg.artifacts_dir) {
+        Ok(e) => e,
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    let sampler = match Sampler::new(&engine, &cfg.model, cfg.batch_size) {
+        Ok(s) => s,
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    let _ = ready.send(Ok(()));
+
+    let lat = registry.histogram("sjd_request_latency");
+    let batch_fill = registry.histogram("sjd_batch_fill");
+    let images = registry.counter("sjd_images_generated");
+    let batches = registry.counter("sjd_batches_processed");
+    let errors = registry.counter("sjd_worker_errors");
+    let inflight = registry.gauge("sjd_batches_inflight");
+
+    while !stop.load(Ordering::SeqCst) {
+        let Some(batch) = batcher.next_batch() else { break };
+        inflight.add(1);
+        batch_fill.record(batch.slots.len() as u64);
+        // Derive the batch RNG from the first slot's seed so identical
+        // requests reproduce identical images regardless of worker.
+        let seed = batch.slots.first().map(|s| s.seed).unwrap_or(0);
+        let mut rng = Pcg64::seed_stream(seed, widx as u64 + 1);
+        match sampler.sample_images(&cfg.options, &mut rng) {
+            Ok((imgs, _trace)) => {
+                for (slot, img) in batch.slots.iter().zip(imgs.into_iter()) {
+                    lat.record_duration(slot.enqueued.elapsed());
+                    slot.done.put(img);
+                    images.inc();
+                }
+                batches.inc();
+            }
+            Err(e) => {
+                errors.inc();
+                log::error!("worker {widx} sample failed: {e:#}");
+                // Complete slots with a zero image so clients unblock.
+                if let Some([h, w, c]) = sampler.meta.image_hwc {
+                    for slot in &batch.slots {
+                        slot.done.put(crate::tensor::Tensor::zeros(&[h, w, c]));
+                    }
+                }
+            }
+        }
+        inflight.add(-1);
+        let _ = Instant::now();
+    }
+}

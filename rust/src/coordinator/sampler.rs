@@ -1,0 +1,389 @@
+//! The full sampling pipeline: prior noise → per-block decode (sequential or
+//! Jacobi per the policy) → unpatchify → images.
+//!
+//! ## Artifact ABI (must match `python/compile/aot.py`)
+//!
+//! All per-block artifacts operate in **AR domain** — the token order the
+//! block's causal transformer sees. The flow composition
+//! `h_{k+1} = A_k(P_k h_k)` (encode) / `h_k = P_k(A_k^{-1}(h_{k+1}))`
+//! (decode) applies the inter-block permutation `P_k` (token reversal for
+//! odd `k`) **in rust**, keeping the artifacts uniform:
+//!
+//! * `{m}_block_fwd_b{B}`   : `(k, u[B,L,D]) → v[B,L,D]` — `v = A_k(u)`
+//! * `{m}_block_jstep_b{B}` : `(k, z_t[B,L,D], y[B,L,D], o) → (z', resid[B])`
+//!   — one parallel Jacobi update of `A_k(z) = y`, with the `o`-nearest
+//!   dependency mask of eq 6 (`o = 0` ⇒ exact update).
+//! * `{m}_block_seqstep_b{B}`: `(k, u_prev[B,D], v_tok[B,D], pos,
+//!   kv_k[NL,B,L,Dm], kv_v[NL,B,L,Dm]) → (u_pos[B,D], kv_k', kv_v')`
+//!   — one sequential token with KV cache.
+//! * `{m}_fwd_b{B}`         : `(x[B,H,W,C]) → (z[B,L,D], logdet[B])` —
+//!   full encode (python applies its own permutations; cross-checked against
+//!   the rust composition in integration tests).
+
+use super::jacobi::{jacobi_decode_block, JacobiConfig, JacobiStats};
+use super::policy::DecodePolicy;
+use super::state::BufferPool;
+use crate::runtime::{Backend, HostTensor, ModelMeta};
+use crate::tensor::{Pcg64, Tensor};
+use anyhow::{bail, Context, Result};
+use std::time::{Duration, Instant};
+
+/// Options for one sampling run.
+#[derive(Clone, Debug)]
+pub struct SampleOptions {
+    pub policy: DecodePolicy,
+    pub jacobi: JacobiConfig,
+    /// eq-6 dependency mask offset applied to Jacobi blocks (0 = exact).
+    pub mask_o: usize,
+    /// Use the scan-fused sequential artifact (`block_seqfull`) instead of
+    /// per-token `block_seqstep` calls — the §Perf "XLA-fused sequential"
+    /// ablation, a stronger-than-paper baseline.
+    pub fused_sequential: bool,
+    pub seed: u64,
+}
+
+impl Default for SampleOptions {
+    fn default() -> Self {
+        SampleOptions {
+            policy: DecodePolicy::Selective { seq_blocks: 1 },
+            jacobi: JacobiConfig::default(),
+            mask_o: 0,
+            fused_sequential: false,
+            seed: 0,
+        }
+    }
+}
+
+/// Per-block trace of one sampling run.
+#[derive(Clone, Debug)]
+pub struct BlockTrace {
+    /// Block index `k` (flow order).
+    pub block: usize,
+    /// Decode position (0 = first block applied to noise).
+    pub position: usize,
+    pub used_jacobi: bool,
+    /// Sequential steps or Jacobi iterations.
+    pub steps: usize,
+    pub wall: Duration,
+    pub jacobi: Option<JacobiStats>,
+}
+
+/// Result of one sampling run.
+#[derive(Clone, Debug)]
+pub struct SampleOutput {
+    /// Final tokens (B, L, D) in flow domain (h_0).
+    pub tokens: HostTensor,
+    pub traces: Vec<BlockTrace>,
+    pub total_wall: Duration,
+    /// Wall time outside block decodes (noise gen, permutation, unpatchify) —
+    /// the paper's Table A4 "Other" row.
+    pub other_wall: Duration,
+}
+
+impl SampleOutput {
+    pub fn total_jacobi_iters(&self) -> usize {
+        self.traces.iter().filter(|t| t.used_jacobi).map(|t| t.steps).sum()
+    }
+}
+
+/// Model sampler bound to an execution backend + a lowered batch size.
+pub struct Sampler<'e, B: Backend> {
+    engine: &'e B,
+    pub meta: ModelMeta,
+    pub batch: usize,
+    art_fwd: String,
+    art_block_fwd: String,
+    art_jstep: String,
+    art_seqstep: String,
+    art_seqfull: String,
+    pool: BufferPool,
+}
+
+impl<'e, B: Backend> Sampler<'e, B> {
+    pub fn new(engine: &'e B, model: &str, batch: usize) -> Result<Self> {
+        let meta = engine.model_meta(model)?;
+        if !meta.batch_sizes.contains(&batch) {
+            bail!(
+                "model '{model}' has no artifacts for batch {batch} (available: {:?})",
+                meta.batch_sizes
+            );
+        }
+        Ok(Sampler {
+            engine,
+            meta,
+            batch,
+            art_fwd: format!("{model}_fwd_b{batch}"),
+            art_block_fwd: format!("{model}_block_fwd_b{batch}"),
+            art_jstep: format!("{model}_block_jstep_b{batch}"),
+            art_seqstep: format!("{model}_block_seqstep_b{batch}"),
+            art_seqfull: format!("{model}_block_seqfull_b{batch}"),
+            pool: BufferPool::new(),
+        })
+    }
+
+    pub fn engine(&self) -> &B {
+        self.engine
+    }
+
+    pub fn jstep_artifact(&self) -> &str {
+        &self.art_jstep
+    }
+
+    /// Draw the prior `z_K ~ N(0, I)` in token space.
+    pub fn sample_prior(&self, rng: &mut Pcg64) -> HostTensor {
+        let (b, l, d) = (self.batch, self.meta.seq_len, self.meta.token_dim);
+        let t = Tensor::randn(&[b, l, d], rng);
+        HostTensor::f32(&[b, l, d], t.into_data())
+    }
+
+    /// Token reversal along the sequence axis — the inter-block permutation.
+    pub fn reverse_tokens(&self, t: &HostTensor) -> Result<HostTensor> {
+        let shape = t.shape().to_vec();
+        if shape.len() != 3 {
+            bail!("reverse_tokens expects (B, L, D), got {shape:?}");
+        }
+        let (b, l, d) = (shape[0], shape[1], shape[2]);
+        let src = t.as_f32()?;
+        let mut out = vec![0.0f32; src.len()];
+        for bi in 0..b {
+            for li in 0..l {
+                let s = (bi * l + li) * d;
+                let dst = (bi * l + (l - 1 - li)) * d;
+                out[dst..dst + d].copy_from_slice(&src[s..s + d]);
+            }
+        }
+        Ok(HostTensor::f32(&shape, out))
+    }
+
+    /// Decode one block sequentially with the KV cache (paper's baseline
+    /// path). Returns `u = A_k^{-1}(v)` and the number of steps (= L).
+    pub fn sequential_decode_block(&self, k: usize, v: &HostTensor) -> Result<(HostTensor, usize)> {
+        let (b, l, d) = (self.batch, self.meta.seq_len, self.meta.token_dim);
+        let (nl, dm) = (self.meta.layers_per_block, self.meta.model_dim);
+        let v_data = v.as_f32()?;
+
+        let mut kv_k = self.pool.take_zeroed(&[nl, b, l, dm]);
+        let mut kv_v = self.pool.take_zeroed(&[nl, b, l, dm]);
+        let mut u_prev = HostTensor::f32(&[b, d], vec![0.0; b * d]);
+        let mut u_out = vec![0.0f32; b * l * d];
+
+        for pos in 0..l {
+            // Gather v[:, pos, :].
+            let mut v_tok = vec![0.0f32; b * d];
+            for bi in 0..b {
+                let s = (bi * l + pos) * d;
+                v_tok[bi * d..(bi + 1) * d].copy_from_slice(&v_data[s..s + d]);
+            }
+            let outs = self
+                .engine
+                .call(
+                    &self.art_seqstep,
+                    &[
+                        HostTensor::scalar_i32(k as i32),
+                        u_prev,
+                        HostTensor::f32(&[b, d], v_tok),
+                        HostTensor::scalar_i32(pos as i32),
+                        kv_k,
+                        kv_v,
+                    ],
+                )
+                .with_context(|| format!("seqstep block {k} pos {pos}"))?;
+            let mut it = outs.into_iter();
+            let u_tok = it.next().expect("u token");
+            kv_k = it.next().expect("kv_k");
+            kv_v = it.next().expect("kv_v");
+            let u_data = u_tok.as_f32()?;
+            for bi in 0..b {
+                let dstoff = (bi * l + pos) * d;
+                u_out[dstoff..dstoff + d].copy_from_slice(&u_data[bi * d..(bi + 1) * d]);
+            }
+            u_prev = u_tok;
+        }
+        self.pool.give_back(kv_k);
+        self.pool.give_back(kv_v);
+        Ok((HostTensor::f32(&[b, l, d], u_out), l))
+    }
+
+    /// Whole-block sequential inverse as a single scan-fused artifact call
+    /// (§Perf ablation — no per-token call/marshal overhead).
+    pub fn sequential_decode_block_fused(&self, k: usize, v: &HostTensor) -> Result<HostTensor> {
+        let outs = self
+            .engine
+            .call(&self.art_seqfull, &[HostTensor::scalar_i32(k as i32), v.clone()])?;
+        Ok(outs.into_iter().next().expect("seqfull output"))
+    }
+
+    /// Decode one block via the paper's eq-6 masked update iterated to its
+    /// fixed point (`o > 0` ⇒ approximate masked inference; `o = 0` ⇒ exact
+    /// Jacobi decode of `A_k(z) = y`).
+    pub fn jacobi_decode(
+        &self,
+        k: usize,
+        v: &HostTensor,
+        cfg: &JacobiConfig,
+        mask_o: usize,
+    ) -> Result<(HostTensor, JacobiStats)> {
+        jacobi_decode_block(self.engine, &self.art_jstep, k, v, self.meta.seq_len, cfg, mask_o)
+    }
+
+    /// Ground-truth single-block forward `v = A_k(u)` (AR domain).
+    pub fn block_forward(&self, k: usize, u: &HostTensor) -> Result<HostTensor> {
+        let outs = self
+            .engine
+            .call(&self.art_block_fwd, &[HostTensor::scalar_i32(k as i32), u.clone()])?;
+        Ok(outs.into_iter().next().expect("block_fwd output"))
+    }
+
+    /// Full encode `x → (z, logdet)` via the python-composed artifact.
+    pub fn encode(&self, images: &HostTensor) -> Result<(HostTensor, HostTensor)> {
+        let outs = self.engine.call(&self.art_fwd, &[images.clone()])?;
+        let mut it = outs.into_iter();
+        let z = it.next().expect("z");
+        let logdet = it.next().expect("logdet");
+        Ok((z, logdet))
+    }
+
+    /// Full decode: latent tokens (B, L, D) → data tokens h_0 (B, L, D),
+    /// following the configured policy. This is the serving hot path.
+    pub fn decode_tokens(&self, z_latent: HostTensor, opts: &SampleOptions) -> Result<SampleOutput> {
+        let t_start = Instant::now();
+        let kk = self.meta.blocks;
+        let mut traces = Vec::with_capacity(kk);
+        let mut decode_wall = Duration::ZERO;
+        let mut z = z_latent;
+
+        for pos in 0..kk {
+            let k = kk - 1 - pos; // block index in flow order
+            let v = z;
+            let t0 = Instant::now();
+            let (u, trace) = if opts.policy.use_jacobi(pos, kk) {
+                let mut cfg = opts.jacobi.clone();
+                cfg.seed = opts.seed.wrapping_add(pos as u64);
+                let (u, stats) = self.jacobi_decode(k, &v, &cfg, opts.mask_o)?;
+                let wall = t0.elapsed();
+                (
+                    u,
+                    BlockTrace {
+                        block: k,
+                        position: pos,
+                        used_jacobi: true,
+                        steps: stats.iterations,
+                        wall,
+                        jacobi: Some(stats),
+                    },
+                )
+            } else {
+                let (u, steps) = if opts.fused_sequential {
+                    (self.sequential_decode_block_fused(k, &v)?, self.meta.seq_len)
+                } else {
+                    self.sequential_decode_block(k, &v)?
+                };
+                let wall = t0.elapsed();
+                (
+                    u,
+                    BlockTrace {
+                        block: k,
+                        position: pos,
+                        used_jacobi: false,
+                        steps,
+                        wall,
+                        jacobi: None,
+                    },
+                )
+            };
+            decode_wall += trace.wall;
+            traces.push(trace);
+            // h_k = P_k(u): reversal for odd k.
+            z = if k % 2 == 1 { self.reverse_tokens(&u)? } else { u };
+        }
+
+        let total_wall = t_start.elapsed();
+        Ok(SampleOutput {
+            tokens: z,
+            traces,
+            total_wall,
+            other_wall: total_wall.saturating_sub(decode_wall),
+        })
+    }
+
+    /// Sample a batch of images.
+    pub fn sample_images(&self, opts: &SampleOptions, rng: &mut Pcg64) -> Result<(Vec<Tensor>, SampleOutput)> {
+        let z = self.sample_prior(rng);
+        let out = self.decode_tokens(z, opts)?;
+        let images = self.unpatchify(&out.tokens)?;
+        Ok((images, out))
+    }
+
+    /// Tokens (B, L, D) → per-sample (H, W, C) tensors.
+    ///
+    /// Inverse of python's
+    /// `x.reshape(B, H/P, P, W/P, P, C).transpose(0,1,3,2,4,5).reshape(B, L, D)`.
+    pub fn unpatchify(&self, tokens: &HostTensor) -> Result<Vec<Tensor>> {
+        let [h, w, c] = self.meta.image_hwc.context("model has no image geometry")?;
+        let p = self.meta.patch;
+        let (b, l, d) = (self.batch, self.meta.seq_len, self.meta.token_dim);
+        debug_assert_eq!(l, (h / p) * (w / p));
+        debug_assert_eq!(d, p * p * c);
+        let data = tokens.as_f32()?;
+        let gw = w / p;
+        let mut out = Vec::with_capacity(b);
+        for bi in 0..b {
+            let mut img = vec![0.0f32; h * w * c];
+            for li in 0..l {
+                let (py, px) = (li / gw, li % gw);
+                let tok = &data[(bi * l + li) * d..(bi * l + li + 1) * d];
+                for dy in 0..p {
+                    for dx in 0..p {
+                        for ch in 0..c {
+                            let v = tok[(dy * p + dx) * c + ch];
+                            img[((py * p + dy) * w + (px * p + dx)) * c + ch] = v;
+                        }
+                    }
+                }
+            }
+            out.push(Tensor::new(&[h, w, c], img)?);
+        }
+        Ok(out)
+    }
+
+    /// Images (list of (H, W, C) tensors) → tokens (B, L, D); exact inverse
+    /// of [`Self::unpatchify`].
+    pub fn patchify(&self, images: &[Tensor]) -> Result<HostTensor> {
+        let [h, w, c] = self.meta.image_hwc.context("model has no image geometry")?;
+        let p = self.meta.patch;
+        let (b, l, d) = (images.len(), self.meta.seq_len, self.meta.token_dim);
+        let gw = w / p;
+        let mut out = vec![0.0f32; b * l * d];
+        for (bi, img) in images.iter().enumerate() {
+            if img.shape() != [h, w, c] {
+                bail!("image {bi} has shape {:?}, expected ({h},{w},{c})", img.shape());
+            }
+            for li in 0..l {
+                let (py, px) = (li / gw, li % gw);
+                for dy in 0..p {
+                    for dx in 0..p {
+                        for ch in 0..c {
+                            out[(bi * l + li) * d + (dy * p + dx) * c + ch] =
+                                img.at(&[py * p + dy, px * p + dx, ch]);
+                        }
+                    }
+                }
+            }
+        }
+        Ok(HostTensor::f32(&[b, l, d], out))
+    }
+
+    /// Images stacked as one (B, H, W, C) HostTensor (for the fwd artifact).
+    pub fn stack_images(&self, images: &[Tensor]) -> Result<HostTensor> {
+        let [h, w, c] = self.meta.image_hwc.context("no image geometry")?;
+        let mut data = Vec::with_capacity(images.len() * h * w * c);
+        for img in images {
+            if img.shape() != [h, w, c] {
+                bail!("bad image shape {:?}", img.shape());
+            }
+            data.extend_from_slice(img.data());
+        }
+        Ok(HostTensor::f32(&[images.len(), h, w, c], data))
+    }
+}
+

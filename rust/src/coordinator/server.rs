@@ -1,0 +1,255 @@
+//! Minimal HTTP/1.1 server front end.
+//!
+//! Routes:
+//! * `POST /generate` — body `{"n": 4, "seed": 7}` → JSON with base64 PNGs.
+//! * `GET /metrics`   — text exposition of the metrics registry.
+//! * `GET /healthz`   — liveness.
+//!
+//! The HTTP layer is deliberately small (request line + headers +
+//! content-length bodies, one request per connection unless keep-alive) —
+//! it exists so the serving loop is exercised end-to-end, not to be a
+//! general web server.
+
+use super::batcher::Batcher;
+use crate::imageio::{self, Image};
+use crate::jsonx::{self, Value};
+use crate::metrics::Registry;
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// A parsed HTTP request.
+#[derive(Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub body: Vec<u8>,
+}
+
+/// Parse one HTTP/1.1 request from a buffered stream.
+pub fn parse_request(reader: &mut impl BufRead) -> Result<HttpRequest> {
+    let mut line = String::new();
+    if reader.read_line(&mut line)? == 0 {
+        bail!("connection closed");
+    }
+    let mut parts = line.split_whitespace();
+    let method = parts.next().context("missing method")?.to_string();
+    let path = parts.next().context("missing path")?.to_string();
+    let version = parts.next().context("missing version")?;
+    if !version.starts_with("HTTP/1.") {
+        bail!("unsupported version {version}");
+    }
+
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().context("bad content-length")?;
+            }
+        }
+    }
+    if content_length > 64 << 20 {
+        bail!("body too large");
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    Ok(HttpRequest { method, path, body })
+}
+
+/// Serialize an HTTP response.
+pub fn write_response(
+    stream: &mut impl Write,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+) -> Result<()> {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        500 => "Internal Server Error",
+        _ => "",
+    };
+    write!(
+        stream,
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    )?;
+    stream.write_all(body)?;
+    Ok(())
+}
+
+/// Standard base64 (RFC 4648) encoding for PNG payloads in JSON responses.
+pub fn base64_encode(data: &[u8]) -> String {
+    const TABLE: &[u8; 64] = b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+/";
+    let mut out = String::with_capacity(data.len().div_ceil(3) * 4);
+    for chunk in data.chunks(3) {
+        let b = [chunk[0], *chunk.get(1).unwrap_or(&0), *chunk.get(2).unwrap_or(&0)];
+        let n = ((b[0] as u32) << 16) | ((b[1] as u32) << 8) | b[2] as u32;
+        out.push(TABLE[(n >> 18) as usize & 63] as char);
+        out.push(TABLE[(n >> 12) as usize & 63] as char);
+        out.push(if chunk.len() > 1 { TABLE[(n >> 6) as usize & 63] as char } else { '=' });
+        out.push(if chunk.len() > 2 { TABLE[n as usize & 63] as char } else { '=' });
+    }
+    out
+}
+
+/// Serving front end bound to a batcher + metrics registry.
+pub struct Server {
+    pub addr: String,
+    batcher: Batcher,
+    registry: Registry,
+    next_request_id: AtomicU64,
+    stop: Arc<AtomicBool>,
+}
+
+impl Server {
+    pub fn new(addr: impl Into<String>, batcher: Batcher, registry: Registry) -> Self {
+        Server {
+            addr: addr.into(),
+            batcher,
+            registry,
+            next_request_id: AtomicU64::new(1),
+            stop: Arc::new(AtomicBool::new(false)),
+        }
+    }
+
+    pub fn stop_flag(&self) -> Arc<AtomicBool> {
+        self.stop.clone()
+    }
+
+    /// Blocking accept loop; returns when the stop flag is set (checked
+    /// between connections — pair with a dummy connection to unblock).
+    pub fn run(&self) -> Result<()> {
+        let listener = TcpListener::bind(&self.addr)
+            .with_context(|| format!("binding {}", self.addr))?;
+        log::info!("listening on {}", self.addr);
+        for conn in listener.incoming() {
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            match conn {
+                Ok(stream) => {
+                    if let Err(e) = self.handle(stream) {
+                        log::warn!("connection error: {e:#}");
+                    }
+                }
+                Err(e) => log::warn!("accept error: {e}"),
+            }
+        }
+        Ok(())
+    }
+
+    fn handle(&self, stream: TcpStream) -> Result<()> {
+        let mut reader = BufReader::new(stream.try_clone()?);
+        let req = parse_request(&mut reader)?;
+        let mut stream = stream;
+        self.registry.counter("sjd_http_requests").inc();
+        match (req.method.as_str(), req.path.as_str()) {
+            ("GET", "/healthz") => write_response(&mut stream, 200, "text/plain", b"ok"),
+            ("GET", "/metrics") => {
+                let text = self.registry.render_text();
+                write_response(&mut stream, 200, "text/plain", text.as_bytes())
+            }
+            ("POST", "/generate") => match self.generate(&req.body) {
+                Ok(json) => write_response(&mut stream, 200, "application/json", json.as_bytes()),
+                Err(e) => {
+                    self.registry.counter("sjd_http_errors").inc();
+                    let msg = format!("{{\"error\": \"{e}\"}}");
+                    write_response(&mut stream, 400, "application/json", msg.as_bytes())
+                }
+            },
+            _ => write_response(&mut stream, 404, "text/plain", b"not found"),
+        }
+    }
+
+    fn generate(&self, body: &[u8]) -> Result<String> {
+        let text = std::str::from_utf8(body).context("body not utf-8")?;
+        let v = if text.trim().is_empty() {
+            Value::obj(vec![])
+        } else {
+            jsonx::parse(text).context("bad json")?
+        };
+        let n = v.get("n").and_then(Value::as_usize).unwrap_or(1).clamp(1, 64);
+        let seed = v.get("seed").and_then(Value::as_usize).unwrap_or(0) as u64;
+        let rid = self.next_request_id.fetch_add(1, Ordering::SeqCst);
+
+        // Submit n slots and wait for completion.
+        let handles: Vec<_> =
+            (0..n).map(|i| self.batcher.submit(rid, seed.wrapping_add(i as u64))).collect();
+        let mut pngs = Vec::with_capacity(n);
+        for h in handles {
+            let img_t = h.wait();
+            let img = Image::from_tensor_pm1(&img_t)?;
+            let png = imageio::encode_png(&img)?;
+            pngs.push(Value::Str(base64_encode(&png)));
+        }
+        let resp = Value::obj(vec![
+            ("request_id", Value::num(rid as f64)),
+            ("n", Value::num(n as f64)),
+            ("images_png_b64", Value::Arr(pngs)),
+        ]);
+        Ok(jsonx::to_string_pretty(&resp))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn base64_vectors() {
+        // RFC 4648 test vectors.
+        assert_eq!(base64_encode(b""), "");
+        assert_eq!(base64_encode(b"f"), "Zg==");
+        assert_eq!(base64_encode(b"fo"), "Zm8=");
+        assert_eq!(base64_encode(b"foo"), "Zm9v");
+        assert_eq!(base64_encode(b"foobar"), "Zm9vYmFy");
+    }
+
+    #[test]
+    fn parse_simple_request() {
+        let raw = b"POST /generate HTTP/1.1\r\nHost: x\r\nContent-Length: 7\r\n\r\n{\"n\":2}";
+        let mut r = std::io::BufReader::new(&raw[..]);
+        let req = parse_request(&mut r).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/generate");
+        assert_eq!(req.body, b"{\"n\":2}");
+    }
+
+    #[test]
+    fn parse_request_without_body() {
+        let raw = b"GET /healthz HTTP/1.1\r\n\r\n";
+        let mut r = std::io::BufReader::new(&raw[..]);
+        let req = parse_request(&mut r).unwrap();
+        assert_eq!(req.method, "GET");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn rejects_bad_version_and_eof() {
+        let raw = b"GET / SPDY/3\r\n\r\n";
+        let mut r = std::io::BufReader::new(&raw[..]);
+        assert!(parse_request(&mut r).is_err());
+        let mut empty = std::io::BufReader::new(&b""[..]);
+        assert!(parse_request(&mut empty).is_err());
+    }
+
+    #[test]
+    fn response_format() {
+        let mut buf = Vec::new();
+        write_response(&mut buf, 200, "text/plain", b"hi").unwrap();
+        let s = String::from_utf8(buf).unwrap();
+        assert!(s.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(s.contains("Content-Length: 2\r\n"));
+        assert!(s.ends_with("\r\n\r\nhi"));
+    }
+}

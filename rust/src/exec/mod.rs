@@ -1,0 +1,215 @@
+//! Thread-pool + channel execution substrate (tokio substitute).
+//!
+//! The serving stack is synchronous-threaded: a fixed pool of worker threads
+//! consumes jobs from an MPMC queue built on `std::sync::mpsc` + `Mutex`.
+//! PJRT engines are thread-pinned (`Rc` internals), so model workers are
+//! *dedicated* threads created by the router, not pool workers; the pool is
+//! used for connection handling and load generation.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<QueueState>,
+    cv: Condvar,
+}
+
+struct QueueState {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+    in_flight: usize,
+}
+
+/// Fixed-size thread pool.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> Self {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(QueueState { jobs: VecDeque::new(), shutdown: false, in_flight: 0 }),
+            cv: Condvar::new(),
+        });
+        let workers = (0..threads.max(1))
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("sjd-pool-{i}"))
+                    .spawn(move || worker_loop(shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool { shared, workers }
+    }
+
+    /// Submit a job.
+    pub fn spawn(&self, job: impl FnOnce() + Send + 'static) {
+        let mut q = self.shared.queue.lock().unwrap();
+        if q.shutdown {
+            return;
+        }
+        q.jobs.push_back(Box::new(job));
+        drop(q);
+        self.shared.cv.notify_one();
+    }
+
+    /// Block until the queue is empty and no job is running.
+    pub fn wait_idle(&self) {
+        let mut q = self.shared.queue.lock().unwrap();
+        while !q.jobs.is_empty() || q.in_flight > 0 {
+            q = self.shared.cv.wait(q).unwrap();
+        }
+    }
+
+    pub fn queued(&self) -> usize {
+        self.shared.queue.lock().unwrap().jobs.len()
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(j) = q.jobs.pop_front() {
+                    q.in_flight += 1;
+                    break j;
+                }
+                if q.shutdown {
+                    return;
+                }
+                q = shared.cv.wait(q).unwrap();
+            }
+        };
+        job();
+        let mut q = shared.queue.lock().unwrap();
+        q.in_flight -= 1;
+        drop(q);
+        shared.cv.notify_all();
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.shutdown = true;
+        }
+        self.shared.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// One-shot result slot: a worker fills it, the requester blocks on `wait`.
+/// (std::sync::mpsc oneshot with a friendlier API and timeout support.)
+pub struct OneShot<T> {
+    inner: Arc<(Mutex<Option<T>>, Condvar)>,
+}
+
+impl<T> Clone for OneShot<T> {
+    fn clone(&self) -> Self {
+        OneShot { inner: self.inner.clone() }
+    }
+}
+
+impl<T> Default for OneShot<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> OneShot<T> {
+    pub fn new() -> Self {
+        OneShot { inner: Arc::new((Mutex::new(None), Condvar::new())) }
+    }
+
+    pub fn put(&self, v: T) {
+        let (m, cv) = &*self.inner;
+        *m.lock().unwrap() = Some(v);
+        cv.notify_all();
+    }
+
+    pub fn wait(&self) -> T {
+        let (m, cv) = &*self.inner;
+        let mut g = m.lock().unwrap();
+        loop {
+            if let Some(v) = g.take() {
+                return v;
+            }
+            g = cv.wait(g).unwrap();
+        }
+    }
+
+    pub fn wait_timeout(&self, d: std::time::Duration) -> Option<T> {
+        let (m, cv) = &*self.inner;
+        let deadline = std::time::Instant::now() + d;
+        let mut g = m.lock().unwrap();
+        loop {
+            if let Some(v) = g.take() {
+                return Some(v);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (ng, timeout) = cv.wait_timeout(g, deadline - now).unwrap();
+            g = ng;
+            if timeout.timed_out() {
+                return g.take();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let n = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let n = n.clone();
+            pool.spawn(move || {
+                n.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(n.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn pool_shutdown_joins() {
+        let pool = ThreadPool::new(2);
+        pool.spawn(|| std::thread::sleep(std::time::Duration::from_millis(10)));
+        drop(pool); // must not hang
+    }
+
+    #[test]
+    fn oneshot_roundtrip() {
+        let slot = OneShot::new();
+        let s2 = slot.clone();
+        std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            s2.put(42);
+        });
+        assert_eq!(slot.wait(), 42);
+    }
+
+    #[test]
+    fn oneshot_timeout() {
+        let slot: OneShot<i32> = OneShot::new();
+        assert_eq!(slot.wait_timeout(std::time::Duration::from_millis(10)), None);
+        slot.put(1);
+        assert_eq!(slot.wait_timeout(std::time::Duration::from_millis(10)), Some(1));
+    }
+}

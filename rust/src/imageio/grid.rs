@@ -1,0 +1,53 @@
+//! Sample-sheet compositor: arrange images in a padded grid (the paper's
+//! Fig 2/3/A3-style visual comparisons).
+
+use super::Image;
+
+/// Compose images into a `cols`-wide grid with `pad` px of dark separator.
+pub fn compose_grid(images: &[Image], cols: usize, pad: usize) -> Image {
+    assert!(!images.is_empty());
+    let cols = cols.max(1);
+    let rows = images.len().div_ceil(cols);
+    let tile_w = images.iter().map(|i| i.width).max().unwrap();
+    let tile_h = images.iter().map(|i| i.height).max().unwrap();
+    let out_w = cols * tile_w + (cols + 1) * pad;
+    let out_h = rows * tile_h + (rows + 1) * pad;
+    let mut out = Image::new(out_w, out_h);
+    // Dark gray background.
+    for p in out.pixels.iter_mut() {
+        *p = 24;
+    }
+    for (idx, img) in images.iter().enumerate() {
+        let (r, c) = (idx / cols, idx % cols);
+        let x0 = pad + c * (tile_w + pad);
+        let y0 = pad + r * (tile_h + pad);
+        for y in 0..img.height {
+            for x in 0..img.width {
+                out.set(x0 + x, y0 + y, img.get(x, y));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_dimensions() {
+        let imgs = vec![Image::new(4, 4); 5];
+        let g = compose_grid(&imgs, 3, 1);
+        assert_eq!(g.width, 3 * 4 + 4 * 1);
+        assert_eq!(g.height, 2 * 4 + 3 * 1);
+    }
+
+    #[test]
+    fn pixels_placed() {
+        let mut a = Image::new(2, 2);
+        a.set(0, 0, [255, 0, 0]);
+        let g = compose_grid(&[a], 1, 1);
+        assert_eq!(g.get(1, 1), [255, 0, 0]); // offset by pad
+        assert_eq!(g.get(0, 0), [24, 24, 24]); // background
+    }
+}

@@ -1,0 +1,110 @@
+//! Image output substrate: PNG encoder (zlib via the vendored `flate2`),
+//! PPM fallback, and a grid compositor for sample sheets.
+
+mod grid;
+pub mod png;
+mod ppm;
+
+pub use grid::compose_grid;
+pub use png::{encode_png, write_png};
+pub use ppm::write_ppm;
+
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+
+/// An 8-bit RGB image.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Image {
+    pub width: usize,
+    pub height: usize,
+    /// RGB, row-major, 3 bytes per pixel.
+    pub pixels: Vec<u8>,
+}
+
+impl Image {
+    pub fn new(width: usize, height: usize) -> Self {
+        Image { width, height, pixels: vec![0; width * height * 3] }
+    }
+
+    /// From an (H, W, 3) tensor with values in [-1, 1] (model output range).
+    pub fn from_tensor_pm1(t: &Tensor) -> Result<Self> {
+        if t.ndim() != 3 || t.shape()[2] != 3 {
+            bail!("expected (H, W, 3) tensor, got {:?}", t.shape());
+        }
+        let (h, w) = (t.shape()[0], t.shape()[1]);
+        let pixels = t
+            .data()
+            .iter()
+            .map(|&v| (((v.clamp(-1.0, 1.0) + 1.0) * 0.5) * 255.0).round() as u8)
+            .collect();
+        Ok(Image { width: w, height: h, pixels })
+    }
+
+    /// Back to a (H, W, 3) tensor in [-1, 1].
+    pub fn to_tensor_pm1(&self) -> Tensor {
+        let data = self
+            .pixels
+            .iter()
+            .map(|&p| (p as f32 / 255.0) * 2.0 - 1.0)
+            .collect();
+        Tensor::new(&[self.height, self.width, 3], data).unwrap()
+    }
+
+    pub fn get(&self, x: usize, y: usize) -> [u8; 3] {
+        let o = (y * self.width + x) * 3;
+        [self.pixels[o], self.pixels[o + 1], self.pixels[o + 2]]
+    }
+
+    pub fn set(&mut self, x: usize, y: usize, rgb: [u8; 3]) {
+        let o = (y * self.width + x) * 3;
+        self.pixels[o..o + 3].copy_from_slice(&rgb);
+    }
+
+    /// Luminance plane as f32 in [0, 255] (BRISQUE input).
+    pub fn luminance(&self) -> Vec<f32> {
+        self.pixels
+            .chunks_exact(3)
+            .map(|p| 0.299 * p[0] as f32 + 0.587 * p[1] as f32 + 0.114 * p[2] as f32)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_roundtrip() {
+        let t = Tensor::new(&[2, 2, 3], vec![
+            -1.0, 0.0, 1.0, 0.5, -0.5, 0.25, 1.0, 1.0, -1.0, 0.0, 0.0, 0.0,
+        ])
+        .unwrap();
+        let img = Image::from_tensor_pm1(&t).unwrap();
+        assert_eq!(img.get(0, 0), [0, 128, 255]);
+        let back = img.to_tensor_pm1();
+        for (a, b) in t.data().iter().zip(back.data()) {
+            assert!((a - b).abs() < 0.01, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn clamps_out_of_range() {
+        let t = Tensor::new(&[1, 1, 3], vec![-5.0, 0.0, 5.0]).unwrap();
+        let img = Image::from_tensor_pm1(&t).unwrap();
+        assert_eq!(img.get(0, 0), [0, 128, 255]);
+    }
+
+    #[test]
+    fn wrong_shape_rejected() {
+        let t = Tensor::zeros(&[4, 4]);
+        assert!(Image::from_tensor_pm1(&t).is_err());
+    }
+
+    #[test]
+    fn luminance_gray() {
+        let mut img = Image::new(1, 1);
+        img.set(0, 0, [100, 100, 100]);
+        let l = img.luminance();
+        assert!((l[0] - 100.0).abs() < 0.5);
+    }
+}

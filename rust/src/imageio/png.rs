@@ -1,0 +1,120 @@
+//! Minimal PNG encoder: 8-bit RGB, one IDAT chunk, zlib via flate2.
+
+use super::Image;
+use anyhow::Result;
+use flate2::write::ZlibEncoder;
+use flate2::Compression;
+use std::io::Write;
+use std::path::Path;
+
+const PNG_SIG: [u8; 8] = [0x89, b'P', b'N', b'G', b'\r', b'\n', 0x1A, b'\n'];
+
+/// CRC-32 (IEEE) for PNG chunks.
+fn crc32(data: &[u8]) -> u32 {
+    // Table-less bitwise implementation; PNG files here are small.
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+fn chunk(out: &mut Vec<u8>, kind: &[u8; 4], body: &[u8]) {
+    out.extend_from_slice(&(body.len() as u32).to_be_bytes());
+    let mut tagged = Vec::with_capacity(4 + body.len());
+    tagged.extend_from_slice(kind);
+    tagged.extend_from_slice(body);
+    out.extend_from_slice(&tagged);
+    out.extend_from_slice(&crc32(&tagged).to_be_bytes());
+}
+
+/// Encode an [`Image`] as PNG bytes.
+pub fn encode_png(img: &Image) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&PNG_SIG);
+
+    // IHDR: width, height, bit depth 8, color type 2 (RGB), defaults.
+    let mut ihdr = Vec::with_capacity(13);
+    ihdr.extend_from_slice(&(img.width as u32).to_be_bytes());
+    ihdr.extend_from_slice(&(img.height as u32).to_be_bytes());
+    ihdr.extend_from_slice(&[8, 2, 0, 0, 0]);
+    chunk(&mut out, b"IHDR", &ihdr);
+
+    // Raw scanlines with filter byte 0 (None).
+    let stride = img.width * 3;
+    let mut raw = Vec::with_capacity((stride + 1) * img.height);
+    for y in 0..img.height {
+        raw.push(0);
+        raw.extend_from_slice(&img.pixels[y * stride..(y + 1) * stride]);
+    }
+    let mut enc = ZlibEncoder::new(Vec::new(), Compression::fast());
+    enc.write_all(&raw)?;
+    let compressed = enc.finish()?;
+    chunk(&mut out, b"IDAT", &compressed);
+    chunk(&mut out, b"IEND", &[]);
+    Ok(out)
+}
+
+/// Write an [`Image`] to a `.png` file.
+pub fn write_png(img: &Image, path: impl AsRef<Path>) -> Result<()> {
+    let bytes = encode_png(img)?;
+    std::fs::write(path.as_ref(), bytes)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn signature_and_chunks() {
+        let mut img = Image::new(3, 2);
+        img.set(0, 0, [255, 0, 0]);
+        img.set(2, 1, [0, 0, 255]);
+        let bytes = encode_png(&img).unwrap();
+        assert_eq!(&bytes[..8], &PNG_SIG);
+        // IHDR must be first chunk with the right dims.
+        assert_eq!(&bytes[12..16], b"IHDR");
+        assert_eq!(u32::from_be_bytes(bytes[16..20].try_into().unwrap()), 3);
+        assert_eq!(u32::from_be_bytes(bytes[20..24].try_into().unwrap()), 2);
+        // IEND terminates.
+        assert_eq!(&bytes[bytes.len() - 8..bytes.len() - 4], b"IEND");
+    }
+
+    #[test]
+    fn crc_known_vector() {
+        // CRC32("123456789") = 0xCBF43926 (standard check value)
+        assert_eq!(crc32(b"123456789"), 0xCBF43926);
+    }
+
+    #[test]
+    fn idat_decompresses_to_scanlines() {
+        use std::io::Read;
+        let mut img = Image::new(2, 2);
+        img.set(1, 1, [1, 2, 3]);
+        let bytes = encode_png(&img).unwrap();
+        // Locate IDAT.
+        let pos = bytes.windows(4).position(|w| w == b"IDAT").unwrap();
+        let len = u32::from_be_bytes(bytes[pos - 4..pos].try_into().unwrap()) as usize;
+        let body = &bytes[pos + 4..pos + 4 + len];
+        let mut dec = flate2::read::ZlibDecoder::new(body);
+        let mut raw = Vec::new();
+        dec.read_to_end(&mut raw).unwrap();
+        assert_eq!(raw.len(), (2 * 3 + 1) * 2);
+        assert_eq!(raw[0], 0); // filter byte
+        assert_eq!(&raw[raw.len() - 3..], &[1, 2, 3]);
+    }
+
+    #[test]
+    fn file_write() {
+        let img = Image::new(4, 4);
+        let p = std::env::temp_dir().join("sjd_png_test.png");
+        write_png(&img, &p).unwrap();
+        let data = std::fs::read(&p).unwrap();
+        assert_eq!(&data[..8], &PNG_SIG);
+    }
+}

@@ -1,0 +1,30 @@
+//! Plain PPM (P6) writer — dependency-free fallback and debugging format.
+
+use super::Image;
+use anyhow::Result;
+use std::io::Write;
+use std::path::Path;
+
+/// Write an [`Image`] to a binary PPM file.
+pub fn write_ppm(img: &Image, path: impl AsRef<Path>) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path.as_ref())?);
+    write!(f, "P6\n{} {}\n255\n", img.width, img.height)?;
+    f.write_all(&img.pixels)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_and_body() {
+        let mut img = Image::new(2, 1);
+        img.set(0, 0, [9, 8, 7]);
+        let p = std::env::temp_dir().join("sjd_ppm_test.ppm");
+        write_ppm(&img, &p).unwrap();
+        let data = std::fs::read(&p).unwrap();
+        assert!(data.starts_with(b"P6\n2 1\n255\n"));
+        assert_eq!(&data[data.len() - 6..], &[9, 8, 7, 0, 0, 0]);
+    }
+}

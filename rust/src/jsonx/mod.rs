@@ -1,0 +1,16 @@
+//! Minimal JSON parser/emitter (serde_json substitute — crates.io is not
+//! reachable in this build environment, see DESIGN.md §2).
+//!
+//! Supports the full JSON grammar; `\u` surrogate pairs are combined and lone
+//! surrogates rejected. Numbers are stored as `f64`.
+
+mod parse;
+mod value;
+mod write;
+
+pub use parse::{parse, ParseError};
+pub use value::Value;
+pub use write::to_string_pretty;
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,90 @@
+use super::*;
+
+#[test]
+fn parse_scalars() {
+    assert_eq!(parse("null").unwrap(), Value::Null);
+    assert_eq!(parse("true").unwrap(), Value::Bool(true));
+    assert_eq!(parse("false").unwrap(), Value::Bool(false));
+    assert_eq!(parse("42").unwrap(), Value::Num(42.0));
+    assert_eq!(parse("-3.5e2").unwrap(), Value::Num(-350.0));
+    assert_eq!(parse("\"hi\"").unwrap(), Value::Str("hi".into()));
+}
+
+#[test]
+fn parse_nested() {
+    let v = parse(r#"{"a": [1, 2, {"b": null}], "c": "x"}"#).unwrap();
+    assert_eq!(v.get("c").unwrap().as_str().unwrap(), "x");
+    let arr = v.get("a").unwrap().as_arr().unwrap();
+    assert_eq!(arr.len(), 3);
+    assert_eq!(arr[2].get("b").unwrap(), &Value::Null);
+}
+
+#[test]
+fn parse_string_escapes() {
+    let v = parse(r#""a\n\t\"\\A""#).unwrap();
+    assert_eq!(v.as_str().unwrap(), "a\n\t\"\\A");
+}
+
+#[test]
+fn parse_surrogate_pair() {
+    let v = parse(r#""😀""#).unwrap();
+    assert_eq!(v.as_str().unwrap(), "😀");
+}
+
+#[test]
+fn parse_utf8_passthrough() {
+    let v = parse("\"héllo ✓\"").unwrap();
+    assert_eq!(v.as_str().unwrap(), "héllo ✓");
+}
+
+#[test]
+fn errors_have_offsets() {
+    let e = parse("{\"a\": }").unwrap_err();
+    assert!(e.offset > 0);
+    assert!(parse("[1,]").is_err());
+    assert!(parse("1 2").is_err());
+    assert!(parse("\"\\ud800\"").is_err(), "lone surrogate must fail");
+}
+
+#[test]
+fn roundtrip_pretty() {
+    let src = r#"{"arr": [1, 2.5, "s"], "nested": {"x": true, "y": null}, "z": -7}"#;
+    let v = parse(src).unwrap();
+    let emitted = to_string_pretty(&v);
+    let re = parse(&emitted).unwrap();
+    assert_eq!(v, re);
+}
+
+#[test]
+fn deterministic_output() {
+    let v = Value::obj(vec![("b", Value::num(1.0)), ("a", Value::num(2.0))]);
+    let s = to_string_pretty(&v);
+    // BTreeMap => sorted keys
+    assert!(s.find("\"a\"").unwrap() < s.find("\"b\"").unwrap());
+}
+
+#[test]
+fn accessor_helpers() {
+    let v = parse(r#"{"n": 5, "s": "str", "a": [1]}"#).unwrap();
+    assert_eq!(v.req_usize("n").unwrap(), 5);
+    assert_eq!(v.req_str("s").unwrap(), "str");
+    assert_eq!(v.req_arr("a").unwrap().len(), 1);
+    assert!(v.req_str("missing").is_err());
+    assert!(v.req_usize("s").is_err());
+}
+
+#[test]
+fn big_document() {
+    // Stress the parser with a generated document.
+    let mut src = String::from("[");
+    for i in 0..1000 {
+        if i > 0 {
+            src.push(',');
+        }
+        src.push_str(&format!("{{\"i\": {i}, \"f\": {}.5}}", i));
+    }
+    src.push(']');
+    let v = parse(&src).unwrap();
+    assert_eq!(v.as_arr().unwrap().len(), 1000);
+    assert_eq!(v.as_arr().unwrap()[999].req_usize("i").unwrap(), 999);
+}

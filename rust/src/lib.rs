@@ -1,0 +1,35 @@
+//! # sjd — Selective Jacobi Decoding serving stack
+//!
+//! A three-layer reproduction of *“Accelerating Inference of Discrete
+//! Autoregressive Normalizing Flows by Selective Jacobi Decoding”*:
+//!
+//! * **L1** — Pallas kernels (causal attention with dependency-offset masking,
+//!   fused affine-inverse/Jacobi update), authored in `python/compile/kernels/`
+//!   and lowered at build time.
+//! * **L2** — JAX TarFlow / MAF models, trained on synthetic data and AOT-lowered
+//!   to HLO text artifacts (`make artifacts`).
+//! * **L3** — this crate: a rust coordinator that owns the request path —
+//!   HTTP server, router, dynamic batcher, per-block decode policy
+//!   (sequential + KV cache vs parallel Jacobi iteration), metrics — and runs
+//!   the artifacts through the PJRT CPU client (`xla` crate).
+//!
+//! Python never runs on the request path; the binary is self-contained once
+//! `artifacts/` is built.
+
+pub mod benchkit;
+pub mod cli;
+pub mod configx;
+pub mod coordinator;
+pub mod exec;
+pub mod imageio;
+pub mod jsonx;
+pub mod metrics;
+pub mod physics;
+pub mod quality;
+pub mod runtime;
+pub mod tensor;
+pub mod testkit;
+
+/// Crate-wide result type (anyhow-based; library APIs that need typed errors
+/// define their own error enums).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,286 @@
+//! `sjd` — the leader binary: serve, sample, recon, calibrate, info.
+//!
+//! ```text
+//! sjd serve   --model tf10 --addr 127.0.0.1:8471 --workers 2 --policy selective
+//! sjd sample  --model tf10 --batch 8 --policy sjd --tau 0.5 --out samples.png
+//! sjd recon   --model tf10 --batch 8
+//! sjd calibrate --model tf10 --batch 8
+//! sjd info
+//! ```
+
+use anyhow::{bail, Result};
+use sjd::cli::Command;
+use sjd::configx::{CValue, Config};
+use sjd::coordinator::batcher::Batcher;
+use sjd::coordinator::jacobi::{InitStrategy, JacobiConfig};
+use sjd::coordinator::policy::{calibrate, DecodePolicy};
+use sjd::coordinator::router::{Router, RouterConfig};
+use sjd::coordinator::sampler::{SampleOptions, Sampler};
+use sjd::coordinator::server::Server;
+use sjd::imageio::{compose_grid, write_png, Image};
+use sjd::metrics::Registry;
+use sjd::runtime::Engine;
+use sjd::tensor::Pcg64;
+use std::time::Duration;
+
+fn cli() -> Command {
+    Command::new("sjd", "Selective Jacobi Decoding serving stack")
+        .sub(
+            Command::new("serve", "run the HTTP serving front end")
+                .opt("config", "", "optional config file (TOML subset)")
+                .opt("artifacts", "artifacts", "artifacts directory")
+                .opt("model", "tf10", "model name")
+                .opt("addr", "127.0.0.1:8471", "listen address")
+                .opt("workers", "2", "worker threads (one engine each)")
+                .opt("batch", "8", "model batch size")
+                .opt("batch-wait-ms", "20", "max batching delay")
+                .opt("policy", "selective", "sequential|ujd|selective[:N]")
+                .opt("tau", "0.5", "Jacobi stopping threshold")
+                .opt("init", "zeros", "zeros|normal|prev")
+                .opt("seed", "0", "RNG seed"),
+        )
+        .sub(
+            Command::new("sample", "generate a batch of images to a PNG grid")
+                .opt("artifacts", "artifacts", "artifacts directory")
+                .opt("model", "tf10", "model name")
+                .opt("batch", "8", "batch size (must be lowered)")
+                .opt("policy", "selective", "sequential|ujd|selective[:N]")
+                .opt("tau", "0.5", "Jacobi stopping threshold")
+                .opt("init", "zeros", "zeros|normal|prev")
+                .opt("seed", "0", "RNG seed")
+                .opt("out", "samples.png", "output PNG path"),
+        )
+        .sub(
+            Command::new("recon", "reconstruction-consistency check (paper §E.4)")
+                .opt("artifacts", "artifacts", "artifacts directory")
+                .opt("model", "tf10", "model name")
+                .opt("batch", "8", "batch size")
+                .opt("tau", "0.5", "Jacobi stopping threshold")
+                .opt("init", "zeros", "zeros|normal|prev")
+                .opt("seed", "0", "RNG seed"),
+        )
+        .sub(
+            Command::new("calibrate", "measure per-block decode costs, pick a policy")
+                .opt("artifacts", "artifacts", "artifacts directory")
+                .opt("model", "tf10", "model name")
+                .opt("batch", "8", "batch size")
+                .opt("tau", "0.5", "Jacobi stopping threshold"),
+        )
+        .sub(
+            Command::new("info", "list models and artifacts")
+                .opt("artifacts", "artifacts", "artifacts directory"),
+        )
+}
+
+fn jacobi_config(p: &sjd::cli::Parsed) -> JacobiConfig {
+    JacobiConfig {
+        tau: p.f64("tau").unwrap_or(0.5) as f32,
+        max_iters: None,
+        init: InitStrategy::parse(p.str("init")).unwrap_or(InitStrategy::Zeros),
+        seed: p.usize("seed").unwrap_or(0) as u64,
+    }
+}
+
+fn policy(p: &sjd::cli::Parsed) -> Result<DecodePolicy> {
+    // Accepts "sequential" | "ujd" | "selective[:N]" | "@calibrated.json".
+    DecodePolicy::parse_or_load(p.str("policy"))
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let parsed = match cli().parse(&args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+
+    match parsed.subcommand.as_deref() {
+        Some("serve") => cmd_serve(&parsed),
+        Some("sample") => cmd_sample(&parsed),
+        Some("recon") => cmd_recon(&parsed),
+        Some("calibrate") => cmd_calibrate(&parsed),
+        Some("info") => cmd_info(&parsed),
+        _ => bail!("no subcommand"),
+    }
+}
+
+fn cmd_serve(p: &sjd::cli::Parsed) -> Result<()> {
+    // Config layering: file < env < CLI flags.
+    let mut cfg = if p.str("config").is_empty() {
+        Config::default()
+    } else {
+        Config::load(p.str("config"))?
+    };
+    cfg.set("serve.model", CValue::Str(p.str("model").into()));
+    cfg.set("serve.addr", CValue::Str(p.str("addr").into()));
+
+    let options = SampleOptions {
+        policy: policy(p)?,
+        jacobi: jacobi_config(p),
+        mask_o: 0,
+        fused_sequential: false,
+        seed: 0,
+    };
+    let registry = Registry::new();
+    let batcher = Batcher::new(
+        p.usize("batch")?,
+        Duration::from_millis(p.usize("batch-wait-ms")? as u64),
+    );
+    let router = Router::start(
+        RouterConfig {
+            artifacts_dir: p.str("artifacts").into(),
+            model: p.str("model").into(),
+            batch_size: p.usize("batch")?,
+            workers: p.usize("workers")?,
+            options,
+        },
+        batcher.clone(),
+        registry.clone(),
+    )?;
+    println!(
+        "serving model {} on {} ({} workers, policy {})",
+        p.str("model"),
+        p.str("addr"),
+        p.usize("workers")?,
+        p.str("policy")
+    );
+    let server = Server::new(p.str("addr"), batcher, registry);
+    server.run()?;
+    router.shutdown();
+    Ok(())
+}
+
+fn cmd_sample(p: &sjd::cli::Parsed) -> Result<()> {
+    let engine = Engine::new(p.str("artifacts"))?;
+    let sampler = Sampler::new(&engine, p.str("model"), p.usize("batch")?)?;
+    let opts = SampleOptions {
+        policy: policy(p)?,
+        jacobi: jacobi_config(p),
+        mask_o: 0,
+        fused_sequential: false,
+        seed: p.usize("seed")? as u64,
+    };
+    let mut rng = Pcg64::seed(opts.seed);
+    let (images, out) = sampler.sample_images(&opts, &mut rng)?;
+    println!(
+        "sampled {} images in {:.3}s ({} Jacobi iters total)",
+        images.len(),
+        out.total_wall.as_secs_f64(),
+        out.total_jacobi_iters()
+    );
+    for t in &out.traces {
+        println!(
+            "  block {} (pos {}): {} × {}, {:.1} ms",
+            t.block,
+            t.position,
+            if t.used_jacobi { "jacobi" } else { "seq" },
+            t.steps,
+            t.wall.as_secs_f64() * 1e3
+        );
+    }
+    let imgs: Vec<Image> = images
+        .iter()
+        .map(Image::from_tensor_pm1)
+        .collect::<Result<_>>()?;
+    let grid = compose_grid(&imgs, 4, 2);
+    write_png(&grid, p.str("out"))?;
+    println!("wrote {}", p.str("out"));
+    Ok(())
+}
+
+fn cmd_recon(p: &sjd::cli::Parsed) -> Result<()> {
+    let engine = Engine::new(p.str("artifacts"))?;
+    let sampler = Sampler::new(&engine, p.str("model"), p.usize("batch")?)?;
+    let mut rng = Pcg64::seed(p.usize("seed")? as u64);
+
+    // "Real" images (model samples stand in for dataset images on the rust
+    // side) → encode → SJD decode → MSE (paper §E.4).
+    let b = p.usize("batch")?;
+    let mut opts = SampleOptions::default();
+    opts.jacobi = jacobi_config(p);
+    let (reals, _) = sampler.sample_images(
+        &SampleOptions { policy: DecodePolicy::Sequential, ..Default::default() },
+        &mut rng,
+    )?;
+    let x = sampler.stack_images(&reals)?;
+    let (z, logdet) = sampler.encode(&x)?;
+    let out = sampler.decode_tokens(z, &opts)?;
+    let recon = sampler.unpatchify(&out.tokens)?;
+    let mut mse = 0.0f32;
+    for (a, b_img) in reals.iter().zip(&recon) {
+        mse += a.mse(b_img)?;
+    }
+    mse /= b as f32;
+    println!("reconstruction MSE over {b} images: {mse:.6}");
+    println!(
+        "mean logdet: {:.3}",
+        logdet.as_f32()?.iter().sum::<f32>() / b as f32
+    );
+    Ok(())
+}
+
+fn cmd_calibrate(p: &sjd::cli::Parsed) -> Result<()> {
+    let engine = Engine::new(p.str("artifacts"))?;
+    let sampler = Sampler::new(&engine, p.str("model"), p.usize("batch")?)?;
+    let mut rng = Pcg64::seed(7);
+    let kk = sampler.meta.blocks;
+    let tau = p.f64("tau")? as f32;
+
+    // Measure per decode position: sequential wall vs Jacobi wall.
+    let z = sampler.sample_prior(&mut rng);
+    let mut seq_walls = Vec::new();
+    let mut jstats = Vec::new();
+    let mut h = z;
+    for pos in 0..kk {
+        let k = kk - 1 - pos;
+        let t0 = std::time::Instant::now();
+        let (u_seq, _) = sampler.sequential_decode_block(k, &h)?;
+        seq_walls.push(t0.elapsed());
+        let cfg = JacobiConfig { tau, ..Default::default() };
+        let (_u_j, stats) = sampler.jacobi_decode(k, &h, &cfg, 0)?;
+        jstats.push(stats);
+        h = if k % 2 == 1 { sampler.reverse_tokens(&u_seq)? } else { u_seq };
+    }
+    for (pos, (j, s)) in jstats.iter().zip(&seq_walls).enumerate() {
+        println!(
+            "pos {pos} (block {}): seq {:.1} ms | jacobi {} iters {:.1} ms{}",
+            j.block,
+            s.as_secs_f64() * 1e3,
+            j.iterations,
+            j.wall.as_secs_f64() * 1e3,
+            if j.converged { "" } else { " (no converge)" }
+        );
+    }
+    let pol = calibrate(&jstats, &seq_walls);
+    println!("calibrated policy: {:?}", pol);
+    let out = format!("{}_policy.json", p.str("model"));
+    std::fs::write(&out, sjd::jsonx::to_string_pretty(&pol.to_json()))?;
+    println!("wrote {out} (use with --policy @{out})");
+    Ok(())
+}
+
+fn cmd_info(p: &sjd::cli::Parsed) -> Result<()> {
+    let engine = Engine::new(p.str("artifacts"))?;
+    let m = engine.manifest();
+    println!("platform: {}", engine.platform());
+    println!("models:");
+    for model in m.models.values() {
+        println!(
+            "  {} ({}): K={} L={} D={} Dm={} batches {:?}",
+            model.name,
+            model.kind,
+            model.blocks,
+            model.seq_len,
+            model.token_dim,
+            model.model_dim,
+            model.batch_sizes
+        );
+    }
+    println!("artifacts: {}", m.artifacts.len());
+    for a in m.artifacts.values() {
+        println!("  {} ({})", a.name, a.file);
+    }
+    Ok(())
+}

@@ -1,0 +1,195 @@
+//! Log-bucketed histogram for latency/duration measurements.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of buckets: values are bucketed by `log2` with 4 sub-buckets per
+/// octave, covering ~1 ns to ~18 s of nanosecond measurements.
+const SUB_BUCKETS: usize = 4;
+const OCTAVES: usize = 35;
+const NUM_BUCKETS: usize = OCTAVES * SUB_BUCKETS;
+
+/// Lock-free histogram of u64 samples (typically nanoseconds).
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            buckets: (0..NUM_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_index(v: u64) -> usize {
+        if v == 0 {
+            return 0;
+        }
+        let octave = 63 - v.leading_zeros() as usize; // floor(log2 v)
+        let base = 1u64 << octave;
+        // Sub-bucket from the next bits.
+        let sub = (((v - base) * SUB_BUCKETS as u64) / base.max(1)) as usize;
+        (octave * SUB_BUCKETS + sub.min(SUB_BUCKETS - 1)).min(NUM_BUCKETS - 1)
+    }
+
+    /// Lower bound of a bucket (inverse of `bucket_index`).
+    fn bucket_floor(idx: usize) -> u64 {
+        let octave = idx / SUB_BUCKETS;
+        let sub = idx % SUB_BUCKETS;
+        let base = 1u64 << octave;
+        base + (base / SUB_BUCKETS as u64) * sub as u64
+    }
+
+    pub fn record(&self, v: u64) {
+        self.buckets[Self::bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn record_duration(&self, d: std::time::Duration) {
+        self.record(d.as_nanos().min(u128::from(u64::MAX)) as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Consistent-enough snapshot for reporting.
+    pub fn snapshot(&self) -> Snapshot {
+        let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        Snapshot {
+            counts,
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+            max: self.max.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time view of a [`Histogram`] with percentile queries.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    counts: Vec<u64>,
+    pub count: u64,
+    pub sum: u64,
+    pub max: u64,
+}
+
+impl Snapshot {
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Approximate quantile (bucket lower bound), q in [0, 1].
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((self.count as f64) * q).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Histogram::bucket_floor(i);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> u64 {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty() {
+        let h = Histogram::new();
+        let s = h.snapshot();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.quantile(0.5), 0);
+        assert_eq!(s.mean(), 0.0);
+    }
+
+    #[test]
+    fn bucket_floor_inverts_index() {
+        for v in [1u64, 2, 3, 5, 100, 1023, 1024, 1_000_000, u32::MAX as u64] {
+            let idx = Histogram::bucket_index(v);
+            let floor = Histogram::bucket_floor(idx);
+            assert!(floor <= v, "floor {floor} > v {v}");
+            // Bucket width is ≤ base/SUB_BUCKETS + rounding; floor within 2× of v.
+            assert!(v < floor * 2 + 2, "v {v} too far above floor {floor}");
+        }
+    }
+
+    #[test]
+    fn quantiles_ordered() {
+        let h = Histogram::new();
+        for i in 1..=10_000u64 {
+            h.record(i);
+        }
+        let s = h.snapshot();
+        assert!(s.p50() <= s.p95());
+        assert!(s.p95() <= s.p99());
+        assert!(s.p99() <= s.max);
+        // p50 of uniform 1..10000 ≈ 5000; log buckets are coarse (≤ 25%).
+        let p50 = s.p50() as f64;
+        assert!((3800.0..6200.0).contains(&p50), "p50 {p50}");
+    }
+
+    #[test]
+    fn mean_exact() {
+        let h = Histogram::new();
+        for v in [10u64, 20, 30] {
+            h.record(v);
+        }
+        assert_eq!(h.snapshot().mean(), 20.0);
+        assert_eq!(h.snapshot().max, 30);
+        assert_eq!(h.count(), 3);
+    }
+
+    #[test]
+    fn concurrent_recording() {
+        let h = std::sync::Arc::new(Histogram::new());
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let h = h.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..1000u64 {
+                    h.record(t * 1000 + i);
+                }
+            }));
+        }
+        for j in handles {
+            j.join().unwrap();
+        }
+        assert_eq!(h.count(), 4000);
+    }
+}

@@ -1,0 +1,11 @@
+//! Serving metrics: counters, gauges, log-bucketed latency histograms with
+//! percentile snapshots, and a Prometheus-style text exposition.
+//!
+//! All types are `Send + Sync` (atomics / mutex-protected) so worker threads
+//! and the HTTP `/metrics` endpoint share one [`Registry`].
+
+mod histogram;
+mod registry;
+
+pub use histogram::{Histogram, Snapshot};
+pub use registry::{Counter, Gauge, Registry};

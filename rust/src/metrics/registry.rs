@@ -1,0 +1,160 @@
+//! Named metric registry with text exposition.
+
+use super::Histogram;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Monotonic counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, v: u64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Up/down gauge.
+#[derive(Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, v: i64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Shared registry of named metrics. Cloning is cheap (Arc).
+#[derive(Clone, Default)]
+pub struct Registry {
+    inner: Arc<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        self.inner
+            .counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        self.inner.gauges.lock().unwrap().entry(name.to_string()).or_default().clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        self.inner
+            .histograms
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(Histogram::new()))
+            .clone()
+    }
+
+    /// Prometheus-style text exposition (histograms export count/mean/p50/p95/p99/max in nanoseconds).
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for (name, c) in self.inner.counters.lock().unwrap().iter() {
+            out.push_str(&format!("{name} {}\n", c.get()));
+        }
+        for (name, g) in self.inner.gauges.lock().unwrap().iter() {
+            out.push_str(&format!("{name} {}\n", g.get()));
+        }
+        for (name, h) in self.inner.histograms.lock().unwrap().iter() {
+            let s = h.snapshot();
+            out.push_str(&format!("{name}_count {}\n", s.count));
+            out.push_str(&format!("{name}_mean_ns {:.0}\n", s.mean()));
+            out.push_str(&format!("{name}_p50_ns {}\n", s.p50()));
+            out.push_str(&format!("{name}_p95_ns {}\n", s.p95()));
+            out.push_str(&format!("{name}_p99_ns {}\n", s.p99()));
+            out.push_str(&format!("{name}_max_ns {}\n", s.max));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges() {
+        let r = Registry::new();
+        r.counter("reqs").inc();
+        r.counter("reqs").add(2);
+        assert_eq!(r.counter("reqs").get(), 3);
+        r.gauge("queue").set(5);
+        r.gauge("queue").add(-2);
+        assert_eq!(r.gauge("queue").get(), 3);
+    }
+
+    #[test]
+    fn same_name_same_instance() {
+        let r = Registry::new();
+        let a = r.counter("x");
+        let b = r.counter("x");
+        a.inc();
+        assert_eq!(b.get(), 1);
+    }
+
+    #[test]
+    fn text_rendering() {
+        let r = Registry::new();
+        r.counter("a_total").add(7);
+        r.histogram("lat").record(1000);
+        let text = r.render_text();
+        assert!(text.contains("a_total 7"));
+        assert!(text.contains("lat_count 1"));
+        assert!(text.contains("lat_p99_ns"));
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        let r = Registry::new();
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let r = r.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..250 {
+                    r.counter("n").inc();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(r.counter("n").get(), 1000);
+    }
+}

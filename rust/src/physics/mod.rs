@@ -1,0 +1,7 @@
+//! 2-D Ising model substrate (Table A5): energy / magnetization observables
+//! for flow samples, plus a Metropolis MCMC reference sampler that provides
+//! the ground-truth disordered-state statistics at T = 3.0.
+
+mod ising;
+
+pub use ising::{IsingModel, IsingStats};

@@ -1,0 +1,337 @@
+//! BRISQUE-style no-reference quality score.
+//!
+//! Implements the published, training-free part of BRISQUE (Mittal et al.
+//! 2012): MSCN (mean-subtracted contrast-normalized) coefficients and
+//! asymmetric generalized Gaussian (AGGD) fits of the MSCN field and its four
+//! pairwise products, at two scales → an 18-dim feature vector. The trained
+//! SVR readout is substituted by a fixed linear model centred on natural-
+//! scene statistics (see DESIGN.md §5) — we use the score only to compare
+//! decoding strategies against each other.
+
+use crate::imageio::Image;
+
+/// Gaussian 7×7 kernel weights (σ = 7/6), separable.
+fn gaussian_kernel() -> [f32; 7] {
+    let sigma = 7.0f32 / 6.0;
+    let mut k = [0.0f32; 7];
+    let mut sum = 0.0;
+    for (i, kv) in k.iter_mut().enumerate() {
+        let x = i as f32 - 3.0;
+        *kv = (-x * x / (2.0 * sigma * sigma)).exp();
+        sum += *kv;
+    }
+    for kv in k.iter_mut() {
+        *kv /= sum;
+    }
+    k
+}
+
+/// Separable Gaussian blur with edge clamping.
+fn blur(src: &[f32], w: usize, h: usize) -> Vec<f32> {
+    let k = gaussian_kernel();
+    let mut tmp = vec![0.0f32; w * h];
+    let mut out = vec![0.0f32; w * h];
+    for y in 0..h {
+        for x in 0..w {
+            let mut s = 0.0;
+            for (i, &kv) in k.iter().enumerate() {
+                let xi = (x as isize + i as isize - 3).clamp(0, w as isize - 1) as usize;
+                s += kv * src[y * w + xi];
+            }
+            tmp[y * w + x] = s;
+        }
+    }
+    for y in 0..h {
+        for x in 0..w {
+            let mut s = 0.0;
+            for (i, &kv) in k.iter().enumerate() {
+                let yi = (y as isize + i as isize - 3).clamp(0, h as isize - 1) as usize;
+                s += kv * tmp[yi * w + x];
+            }
+            out[y * w + x] = s;
+        }
+    }
+    out
+}
+
+/// MSCN field: (I − μ) / (σ + 1).
+fn mscn(lum: &[f32], w: usize, h: usize) -> Vec<f32> {
+    let mu = blur(lum, w, h);
+    let sq: Vec<f32> = lum.iter().map(|&v| v * v).collect();
+    let musq = blur(&sq, w, h);
+    lum.iter()
+        .zip(mu.iter().zip(musq.iter()))
+        .map(|(&v, (&m, &m2))| {
+            let sigma = (m2 - m * m).max(0.0).sqrt();
+            (v - m) / (sigma + 1.0)
+        })
+        .collect()
+}
+
+/// Fit a (symmetric) generalized Gaussian to samples: returns (alpha, sigma²).
+/// Moment-matching estimator via the ratio σ²/E|x|².
+fn ggd_fit(x: &[f32]) -> (f32, f32) {
+    let n = x.len().max(1) as f64;
+    let mean_abs = x.iter().map(|&v| v.abs() as f64).sum::<f64>() / n;
+    let var = x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / n;
+    if var < 1e-12 || mean_abs < 1e-12 {
+        return (2.0, var as f32);
+    }
+    let rho = var / (mean_abs * mean_abs);
+    (inv_gamma_ratio(rho), var as f32)
+}
+
+/// AGGD fit of asymmetric samples: (alpha, mean, sigma_l², sigma_r²).
+fn aggd_fit(x: &[f32]) -> (f32, f32, f32, f32) {
+    let mut nl = 0usize;
+    let mut nr = 0usize;
+    let mut sl = 0.0f64;
+    let mut sr = 0.0f64;
+    let mut mean_abs = 0.0f64;
+    for &v in x {
+        let v = v as f64;
+        mean_abs += v.abs();
+        if v < 0.0 {
+            nl += 1;
+            sl += v * v;
+        } else {
+            nr += 1;
+            sr += v * v;
+        }
+    }
+    let n = x.len().max(1) as f64;
+    mean_abs /= n;
+    let sigma_l2 = if nl > 0 { sl / nl as f64 } else { 1e-12 };
+    let sigma_r2 = if nr > 0 { sr / nr as f64 } else { 1e-12 };
+    let gamma_hat = (sigma_l2.sqrt() / sigma_r2.sqrt()).max(1e-6);
+    let total_var = (sl + sr) / n;
+    let r_hat = if total_var > 1e-12 { mean_abs * mean_abs / total_var } else { 0.5 };
+    let rhat_norm = r_hat * (gamma_hat.powi(3) + 1.0) * (gamma_hat + 1.0)
+        / (gamma_hat.powi(2) + 1.0).powi(2);
+    let alpha = inv_gamma_ratio(1.0 / rhat_norm.max(1e-6));
+    // AGGD mean term (η in the paper).
+    let eta = (sigma_r2.sqrt() - sigma_l2.sqrt())
+        * (gamma_fn(2.0 / alpha as f64) / gamma_fn(1.0 / alpha as f64));
+    (alpha, eta as f32, sigma_l2 as f32, sigma_r2 as f32)
+}
+
+/// Solve Γ(1/α)Γ(3/α)/Γ(2/α)² = rho for α by bisection on [0.2, 10].
+fn inv_gamma_ratio(rho: f64) -> f32 {
+    let f = |a: f64| gamma_fn(1.0 / a) * gamma_fn(3.0 / a) / gamma_fn(2.0 / a).powi(2);
+    // f is decreasing in α; f(2) = Γ(.5)Γ(1.5)/Γ(1)² = π/2·(1/√π·√π/2)… just bisect.
+    let (mut lo, mut hi) = (0.2f64, 10.0f64);
+    if rho >= f(lo) {
+        return lo as f32;
+    }
+    if rho <= f(hi) {
+        return hi as f32;
+    }
+    for _ in 0..60 {
+        let mid = 0.5 * (lo + hi);
+        if f(mid) > rho {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    (0.5 * (lo + hi)) as f32
+}
+
+/// Lanczos approximation of Γ(x) for x > 0.
+fn gamma_fn(x: f64) -> f64 {
+    const G: f64 = 7.0;
+    const C: [f64; 9] = [
+        0.99999999999980993,
+        676.5203681218851,
+        -1259.1392167224028,
+        771.32342877765313,
+        -176.61502916214059,
+        12.507343278686905,
+        -0.13857109526572012,
+        9.9843695780195716e-6,
+        1.5056327351493116e-7,
+    ];
+    if x < 0.5 {
+        std::f64::consts::PI / ((std::f64::consts::PI * x).sin() * gamma_fn(1.0 - x))
+    } else {
+        let x = x - 1.0;
+        let mut a = C[0];
+        let t = x + G + 0.5;
+        for (i, &c) in C.iter().enumerate().skip(1) {
+            a += c / (x + i as f64);
+        }
+        (2.0 * std::f64::consts::PI).sqrt() * t.powf(x + 0.5) * (-t).exp() * a
+    }
+}
+
+/// 18-dim BRISQUE feature vector (2 scales × (2 GGD + 4×4 AGGD → collapsed)).
+///
+/// Per scale: GGD (α, σ²) of MSCN + for each of 4 orientations the AGGD
+/// (α, η) — 2 + 8 = 10... we keep the classic 18: per scale 2 + 4·4 = 18/2 = 9?
+/// We follow the original: per scale 2 (GGD) + 4 orientations × 4 params = 18
+/// per scale is 18; two scales → 36. For the comparative role here we keep
+/// scale-1 features plus downsampled-scale GGD: 18 + 2 = 20 dims.
+pub fn brisque_features(img: &Image) -> Vec<f32> {
+    let mut feats = Vec::with_capacity(20);
+    let lum = img.luminance();
+    push_scale_features(&mut feats, &lum, img.width, img.height);
+    // Second scale: 2× downsample (box filter).
+    let (w2, h2) = (img.width / 2, img.height / 2);
+    if w2 >= 8 && h2 >= 8 {
+        let mut small = vec![0.0f32; w2 * h2];
+        for y in 0..h2 {
+            for x in 0..w2 {
+                let s = lum[(2 * y) * img.width + 2 * x]
+                    + lum[(2 * y) * img.width + 2 * x + 1]
+                    + lum[(2 * y + 1) * img.width + 2 * x]
+                    + lum[(2 * y + 1) * img.width + 2 * x + 1];
+                small[y * w2 + x] = s / 4.0;
+            }
+        }
+        let m = mscn(&small, w2, h2);
+        let (a, v) = ggd_fit(&m);
+        feats.push(a);
+        feats.push(v);
+    } else {
+        feats.push(2.0);
+        feats.push(0.0);
+    }
+    feats
+}
+
+fn push_scale_features(feats: &mut Vec<f32>, lum: &[f32], w: usize, h: usize) {
+    let m = mscn(lum, w, h);
+    let (alpha, var) = ggd_fit(&m);
+    feats.push(alpha);
+    feats.push(var);
+    // Pairwise products along 4 orientations: H, V, D1, D2.
+    let pairs: [(isize, isize); 4] = [(0, 1), (1, 0), (1, 1), (1, -1)];
+    for (dy, dx) in pairs {
+        let mut prod = Vec::with_capacity(w * h);
+        for y in 0..h {
+            for x in 0..w {
+                let y2 = y as isize + dy;
+                let x2 = x as isize + dx;
+                if y2 >= 0 && (y2 as usize) < h && x2 >= 0 && (x2 as usize) < w {
+                    prod.push(m[y * w + x] * m[y2 as usize * w + x2 as usize]);
+                }
+            }
+        }
+        let (a, eta, sl, sr) = aggd_fit(&prod);
+        feats.push(a);
+        feats.push(eta);
+        feats.push(sl);
+        feats.push(sr);
+    }
+}
+
+/// Scalar BRISQUE-style score (higher = closer to natural-scene statistics,
+/// matching the paper's "BRISQUE ↑" table orientation).
+///
+/// Natural images have MSCN α ≈ 2 (Gaussian-ish) with moderate variance;
+/// distortions push α and the AGGD asymmetries away. The fixed readout
+/// penalizes deviation from those anchors.
+pub fn brisque(img: &Image) -> f32 {
+    let f = brisque_features(img);
+    let mut penalty = 0.0f32;
+    // GGD alpha anchors (features 0 and 18), natural ≈ 2.0.
+    penalty += (f[0] - 2.0).abs();
+    penalty += (f[18] - 2.0).abs();
+    // Variance anchors: natural MSCN variance ≈ 0.5–1.5.
+    penalty += (f[1] - 1.0).abs() * 0.5;
+    // AGGD asymmetry: |σl − σr| should be small for natural images.
+    for k in 0..4 {
+        let sl = f[2 + 4 * k + 2];
+        let sr = f[2 + 4 * k + 3];
+        penalty += (sl - sr).abs();
+    }
+    // Map to a 0–100-ish scale, higher = better.
+    100.0 / (1.0 + penalty)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Pcg64;
+
+    fn natural_ish(seed: u64) -> Image {
+        // Smooth gradient + mild noise ≈ locally-correlated "natural" patch.
+        let mut rng = Pcg64::seed(seed);
+        let mut img = Image::new(32, 32);
+        for y in 0..32 {
+            for x in 0..32 {
+                let base = 80.0 + 3.0 * x as f32 + 1.5 * y as f32;
+                let v = (base + 10.0 * rng.next_gaussian()).clamp(0.0, 255.0) as u8;
+                img.set(x, y, [v, v, v]);
+            }
+        }
+        img
+    }
+
+    fn saturated(seed: u64) -> Image {
+        // Harsh binary blocks: heavily distorted statistics.
+        let mut rng = Pcg64::seed(seed);
+        let mut img = Image::new(32, 32);
+        for y in 0..32 {
+            for x in 0..32 {
+                let v = if rng.next_f32() > 0.5 { 255 } else { 0 };
+                img.set(x, y, [v, v, v]);
+            }
+        }
+        img
+    }
+
+    #[test]
+    fn gamma_known_values() {
+        assert!((gamma_fn(1.0) - 1.0).abs() < 1e-9);
+        assert!((gamma_fn(5.0) - 24.0).abs() < 1e-6);
+        assert!((gamma_fn(0.5) - std::f64::consts::PI.sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ggd_fit_gaussian_gives_alpha_2() {
+        let mut rng = Pcg64::seed(77);
+        let x: Vec<f32> = (0..20_000).map(|_| rng.next_gaussian()).collect();
+        let (alpha, var) = ggd_fit(&x);
+        assert!((alpha - 2.0).abs() < 0.15, "alpha {alpha}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn ggd_fit_laplacian_gives_alpha_1() {
+        // Laplace via difference of exponentials.
+        let mut rng = Pcg64::seed(78);
+        let x: Vec<f32> = (0..20_000)
+            .map(|_| (rng.next_exp() - rng.next_exp()) as f32 / std::f32::consts::SQRT_2)
+            .collect();
+        let (alpha, _) = ggd_fit(&x);
+        assert!((alpha - 1.0).abs() < 0.15, "alpha {alpha}");
+    }
+
+    #[test]
+    fn feature_vector_dims() {
+        let img = natural_ish(1);
+        assert_eq!(brisque_features(&img).len(), 20);
+    }
+
+    #[test]
+    fn natural_beats_distorted() {
+        let nat = brisque(&natural_ish(2));
+        let dis = brisque(&saturated(3));
+        assert!(nat > dis, "natural {nat} must score above distorted {dis}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let img = natural_ish(4);
+        assert_eq!(brisque(&img), brisque(&img));
+    }
+
+    #[test]
+    fn mscn_roughly_standardized() {
+        let img = natural_ish(5);
+        let m = mscn(&img.luminance(), 32, 32);
+        let mean = m.iter().sum::<f32>() / m.len() as f32;
+        assert!(mean.abs() < 0.2, "MSCN mean {mean}");
+    }
+}

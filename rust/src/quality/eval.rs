@@ -1,0 +1,99 @@
+//! Batch-level quality evaluation shared by the paper-table benches:
+//! proxy-FID via the `metricnet` artifact, mean BRISQUE, mean CLIP-IQA proxy.
+
+use super::{brisque, clip_iqa_proxy, frechet_distance, FeatureStats};
+use crate::imageio::Image;
+use crate::runtime::{Engine, HostTensor};
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+
+/// Quality summary of a generated image set vs a reference set.
+#[derive(Clone, Debug)]
+pub struct QualityReport {
+    pub fid: f32,
+    pub clip_iqa: f32,
+    pub brisque: f32,
+    pub n_generated: usize,
+    pub n_reference: usize,
+}
+
+/// Extract metricnet features for a stack of images (N, H, W, C), batching
+/// to the artifact's lowered batch size.
+pub fn metric_features(
+    engine: &Engine,
+    metric_model: &str,
+    images: &Tensor,
+) -> Result<Tensor> {
+    if images.ndim() != 4 {
+        bail!("expected (N, H, W, C) image stack, got {:?}", images.shape());
+    }
+    let meta = engine.manifest().model(metric_model)?;
+    let batch = *meta
+        .batch_sizes
+        .first()
+        .context("metricnet has no lowered batch size")?;
+    let artifact = format!("{metric_model}_feat_b{batch}");
+    let n = images.shape()[0];
+    let inner: usize = images.shape()[1..].iter().product();
+    let mut feats: Vec<Tensor> = Vec::new();
+    let mut i = 0;
+    while i < n {
+        let take = batch.min(n - i);
+        // Pad the last batch by repeating the first image.
+        let mut data = Vec::with_capacity(batch * inner);
+        data.extend_from_slice(&images.data()[i * inner..(i + take) * inner]);
+        for _ in take..batch {
+            data.extend_from_slice(&images.data()[i * inner..i * inner + inner]);
+        }
+        let mut shape = vec![batch];
+        shape.extend_from_slice(&images.shape()[1..]);
+        let out = engine.call(&artifact, &[HostTensor::f32(&shape, data)])?;
+        let f = out.into_iter().next().context("features output")?;
+        let fdim = f.shape()[1];
+        let ft = Tensor::new(&[take, fdim], f.as_f32()?[..take * fdim].to_vec())?;
+        feats.push(ft);
+        i += take;
+    }
+    let refs: Vec<&Tensor> = feats.iter().collect();
+    Tensor::cat0(&refs)
+}
+
+/// Full quality evaluation: FID between generated and reference stacks plus
+/// the two no-reference scores on the generated set.
+pub fn evaluate_quality(
+    engine: &Engine,
+    metric_model: &str,
+    generated: &[Tensor],
+    reference: &Tensor,
+) -> Result<QualityReport> {
+    // Stack generated images.
+    let gen_refs: Vec<&Tensor> = generated.iter().collect();
+    let mut gen_stack_parts = Vec::with_capacity(generated.len());
+    for g in &gen_refs {
+        let mut shape = vec![1];
+        shape.extend_from_slice(g.shape());
+        gen_stack_parts.push(g.reshape(&shape)?);
+    }
+    let part_refs: Vec<&Tensor> = gen_stack_parts.iter().collect();
+    let gen_stack = Tensor::cat0(&part_refs)?;
+
+    let gen_feats = metric_features(engine, metric_model, &gen_stack)?;
+    let ref_feats = metric_features(engine, metric_model, reference)?;
+    let fid = frechet_distance(&FeatureStats::fit(&gen_feats)?, &FeatureStats::fit(&ref_feats)?)?;
+
+    let mut iqa_sum = 0.0f32;
+    let mut brisque_sum = 0.0f32;
+    for g in generated {
+        let img = Image::from_tensor_pm1(g)?;
+        iqa_sum += clip_iqa_proxy(&img);
+        brisque_sum += brisque(&img);
+    }
+    let n = generated.len().max(1) as f32;
+    Ok(QualityReport {
+        fid,
+        clip_iqa: iqa_sum / n,
+        brisque: brisque_sum / n,
+        n_generated: generated.len(),
+        n_reference: reference.shape()[0],
+    })
+}

@@ -1,0 +1,144 @@
+//! Fréchet distance between Gaussian feature fits:
+//! FID = ‖μ₁−μ₂‖² + tr(Σ₁ + Σ₂ − 2(Σ₁Σ₂)^{1/2}).
+//!
+//! `tr((Σ₁Σ₂)^{1/2})` is computed via the symmetric eigendecomposition of
+//! `S = Σ₁^{1/2} Σ₂ Σ₁^{1/2}` (similar to Σ₁Σ₂, and symmetric PSD, so its
+//! eigenvalues are real and non-negative): tr((Σ₁Σ₂)^{1/2}) = Σ √λᵢ(S).
+
+use crate::tensor::{matmul, sym_eigen, Tensor};
+use anyhow::{bail, Result};
+
+/// Mean + covariance fit of a feature set.
+#[derive(Clone, Debug)]
+pub struct FeatureStats {
+    pub mean: Tensor,
+    pub cov: Tensor,
+    pub n: usize,
+}
+
+impl FeatureStats {
+    /// Fit from an (N, D) feature matrix.
+    pub fn fit(features: &Tensor) -> Result<Self> {
+        if features.ndim() != 2 {
+            bail!("features must be (N, D), got {:?}", features.shape());
+        }
+        let n = features.shape()[0];
+        if n < 2 {
+            bail!("need at least 2 samples to fit covariance");
+        }
+        Ok(FeatureStats { mean: features.col_mean(), cov: features.covariance(), n })
+    }
+}
+
+/// Matrix square root of a symmetric PSD matrix via eigendecomposition.
+fn sqrtm_psd(a: &Tensor) -> Result<Tensor> {
+    let n = a.shape()[0];
+    let (vals, vecs) = sym_eigen(a, 60)?;
+    // A^{1/2} = V diag(√max(λ,0)) Vᵀ
+    let mut out = vec![0.0f32; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            let mut s = 0.0f64;
+            for k in 0..n {
+                let lam = vals[k].max(0.0) as f64;
+                s += vecs.at(&[i, k]) as f64 * lam.sqrt() * vecs.at(&[j, k]) as f64;
+            }
+            out[i * n + j] = s as f32;
+        }
+    }
+    Tensor::new(&[n, n], out)
+}
+
+/// Fréchet distance between two Gaussian fits.
+pub fn frechet_distance(a: &FeatureStats, b: &FeatureStats) -> Result<f32> {
+    if a.mean.shape() != b.mean.shape() {
+        bail!("feature dimensionality mismatch");
+    }
+    let d2_mean: f64 = a
+        .mean
+        .data()
+        .iter()
+        .zip(b.mean.data())
+        .map(|(&x, &y)| ((x - y) as f64).powi(2))
+        .sum();
+
+    // S = Σa^{1/2} Σb Σa^{1/2}
+    let sqrt_a = sqrtm_psd(&a.cov)?;
+    let inner = matmul(&matmul(&sqrt_a, &b.cov)?, &sqrt_a)?;
+    let (vals, _) = sym_eigen(&inner, 60)?;
+    let tr_sqrt: f64 = vals.iter().map(|&l| (l.max(0.0) as f64).sqrt()).sum();
+
+    let tr_a: f64 = (0..a.cov.shape()[0]).map(|i| a.cov.at(&[i, i]) as f64).sum();
+    let tr_b: f64 = (0..b.cov.shape()[0]).map(|i| b.cov.at(&[i, i]) as f64).sum();
+
+    Ok((d2_mean + tr_a + tr_b - 2.0 * tr_sqrt).max(0.0) as f32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Pcg64;
+
+    fn gaussian_features(n: usize, d: usize, mean: f32, std: f32, seed: u64) -> Tensor {
+        let mut rng = Pcg64::seed(seed);
+        let data = (0..n * d).map(|_| mean + std * rng.next_gaussian()).collect();
+        Tensor::new(&[n, d], data).unwrap()
+    }
+
+    #[test]
+    fn identical_distributions_near_zero() {
+        let x = gaussian_features(2000, 4, 0.0, 1.0, 1);
+        let y = gaussian_features(2000, 4, 0.0, 1.0, 2);
+        let fa = FeatureStats::fit(&x).unwrap();
+        let fb = FeatureStats::fit(&y).unwrap();
+        let d = frechet_distance(&fa, &fb).unwrap();
+        assert!(d < 0.05, "FID of same distribution should be ~0, got {d}");
+    }
+
+    #[test]
+    fn mean_shift_detected_quantitatively() {
+        // For isotropic unit Gaussians shifted by δ per dim: FID ≈ D·δ².
+        let x = gaussian_features(4000, 4, 0.0, 1.0, 3);
+        let y = gaussian_features(4000, 4, 1.0, 1.0, 4);
+        let d = frechet_distance(&FeatureStats::fit(&x).unwrap(), &FeatureStats::fit(&y).unwrap())
+            .unwrap();
+        assert!((3.0..5.0).contains(&d), "expected ≈4, got {d}");
+    }
+
+    #[test]
+    fn variance_change_detected() {
+        // Unit vs 2-std Gaussians: per-dim term (1-2)² + ... analytically
+        // FID = D (σ1−σ2)² = 4·1 = 4 for means equal.
+        let x = gaussian_features(4000, 4, 0.0, 1.0, 5);
+        let y = gaussian_features(4000, 4, 0.0, 2.0, 6);
+        let d = frechet_distance(&FeatureStats::fit(&x).unwrap(), &FeatureStats::fit(&y).unwrap())
+            .unwrap();
+        assert!((3.0..5.5).contains(&d), "expected ≈4, got {d}");
+    }
+
+    #[test]
+    fn monotone_in_shift() {
+        let base = gaussian_features(2000, 3, 0.0, 1.0, 7);
+        let fa = FeatureStats::fit(&base).unwrap();
+        let mut last = -1.0f32;
+        for (i, shift) in [0.2f32, 0.6, 1.2].iter().enumerate() {
+            let y = gaussian_features(2000, 3, *shift, 1.0, 8 + i as u64);
+            let d = frechet_distance(&fa, &FeatureStats::fit(&y).unwrap()).unwrap();
+            assert!(d > last, "FID must grow with shift: {d} after {last}");
+            last = d;
+        }
+    }
+
+    #[test]
+    fn fit_requires_2d_and_samples() {
+        assert!(FeatureStats::fit(&Tensor::zeros(&[5])).is_err());
+        assert!(FeatureStats::fit(&Tensor::zeros(&[1, 3])).is_err());
+    }
+
+    #[test]
+    fn dimension_mismatch_rejected() {
+        let a = FeatureStats::fit(&gaussian_features(100, 3, 0.0, 1.0, 11)).unwrap();
+        let b = FeatureStats::fit(&gaussian_features(100, 4, 0.0, 1.0, 12)).unwrap();
+        assert!(frechet_distance(&a, &b).is_err());
+    }
+}

@@ -1,0 +1,83 @@
+//! Generation-quality metrics (FID / CLIP-IQA / BRISQUE substitutes — see
+//! DESIGN.md §5 for the substitution rationale).
+//!
+//! * [`frechet_distance`] — Fréchet distance between two Gaussian fits of
+//!   feature sets; fed with features from the fixed-seed `metricnet`
+//!   artifact, this is the repo's "proxy-FID".
+//! * [`brisque`] — BRISQUE natural-scene-statistics features (MSCN + AGGD
+//!   fits) with a fixed linear readout.
+//! * [`clip_iqa_proxy`] — feature-space contrast/sharpness score standing in
+//!   for CLIP-IQA's no-reference quality role.
+
+mod brisque;
+mod eval;
+mod frechet;
+
+pub use brisque::{brisque, brisque_features};
+pub use eval::{evaluate_quality, metric_features, QualityReport};
+pub use frechet::{frechet_distance, FeatureStats};
+
+use crate::imageio::Image;
+
+/// No-reference quality proxy standing in for CLIP-IQA: combines local
+/// contrast (Laplacian energy) and dynamic range, mapped to (0, 1).
+///
+/// Like CLIP-IQA it is *only* used to detect relative quality drift between
+/// decoding strategies, never as an absolute score.
+pub fn clip_iqa_proxy(img: &Image) -> f32 {
+    let lum = img.luminance();
+    let (w, h) = (img.width, img.height);
+    if w < 3 || h < 3 {
+        return 0.5;
+    }
+    // Laplacian response energy (sharpness).
+    let mut lap_energy = 0.0f64;
+    for y in 1..h - 1 {
+        for x in 1..w - 1 {
+            let c = lum[y * w + x];
+            let l = 4.0 * c - lum[y * w + x - 1] - lum[y * w + x + 1] - lum[(y - 1) * w + x]
+                - lum[(y + 1) * w + x];
+            lap_energy += (l as f64) * (l as f64);
+        }
+    }
+    lap_energy /= ((w - 2) * (h - 2)) as f64;
+    // Dynamic range utilization.
+    let mn = lum.iter().copied().fold(f32::INFINITY, f32::min);
+    let mx = lum.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let range = ((mx - mn) / 255.0).clamp(0.0, 1.0) as f64;
+    // Squash sharpness to (0,1) and combine.
+    let sharp = 1.0 - (-lap_energy / 500.0).exp();
+    (0.5 * sharp + 0.5 * range) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Pcg64;
+
+    fn noise_image(w: usize, h: usize, seed: u64) -> Image {
+        let mut rng = Pcg64::seed(seed);
+        let mut img = Image::new(w, h);
+        for p in img.pixels.iter_mut() {
+            *p = (rng.next_f32() * 255.0) as u8;
+        }
+        img
+    }
+
+    #[test]
+    fn clip_iqa_flat_vs_texture() {
+        let flat = Image::new(16, 16); // all black
+        let tex = noise_image(16, 16, 1);
+        let s_flat = clip_iqa_proxy(&flat);
+        let s_tex = clip_iqa_proxy(&tex);
+        assert!(s_tex > s_flat, "texture {s_tex} should beat flat {s_flat}");
+        assert!((0.0..=1.0).contains(&s_flat));
+        assert!((0.0..=1.0).contains(&s_tex));
+    }
+
+    #[test]
+    fn clip_iqa_tiny_image_safe() {
+        let img = Image::new(2, 2);
+        assert_eq!(clip_iqa_proxy(&img), 0.5);
+    }
+}

@@ -1,0 +1,256 @@
+//! The [`Engine`]: one PJRT client + a lazy compile cache over the artifacts
+//! listed in the manifest.
+//!
+//! `PjRtClient` is `Rc`-based and therefore **thread-pinned**: an `Engine`
+//! lives on one thread. Multi-worker serving (see `coordinator::router`)
+//! gives each worker thread its own `Engine`; requests/results cross threads
+//! as [`HostTensor`]s, which are plain `Send` data.
+
+use super::manifest::{ArtifactMeta, DType, Manifest};
+use super::HostTensor;
+use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::{Duration, Instant};
+
+/// Per-artifact call statistics (compile time, call count, execute time).
+#[derive(Clone, Debug, Default)]
+pub struct CallStats {
+    pub compile_time: Duration,
+    pub calls: u64,
+    pub exec_time: Duration,
+    /// Host→literal packing + literal→host unpacking time.
+    pub marshal_time: Duration,
+}
+
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    meta: ArtifactMeta,
+}
+
+/// Input to [`Engine::call_buffers`]: host data or a device-resident buffer
+/// from a previous call.
+pub enum BufferArg<'a> {
+    Host(HostTensor),
+    Device(&'a xla::PjRtBuffer),
+}
+
+/// Loads HLO-text artifacts on demand, validates signatures, executes.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<Compiled>>>,
+    stats: RefCell<HashMap<String, CallStats>>,
+    /// When true, input shapes/dtypes are checked against the manifest on
+    /// every call (cheap; disabled only in the innermost perf benches).
+    pub validate_calls: bool,
+}
+
+impl Engine {
+    /// Create an engine over `artifacts/manifest.json` in `artifacts_dir`.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir.as_ref().join("manifest.json"))?;
+        Self::with_manifest(manifest)
+    }
+
+    pub fn with_manifest(manifest: Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(HashMap::new()),
+            validate_calls: true,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    fn compiled(&self, name: &str) -> Result<Rc<Compiled>> {
+        if let Some(c) = self.cache.borrow().get(name) {
+            return Ok(c.clone());
+        }
+        let meta = self.manifest.artifact(name)?.clone();
+        let path = self.manifest.dir.join(&meta.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact '{name}'"))?;
+        let compile_time = t0.elapsed();
+        self.stats.borrow_mut().entry(name.to_string()).or_default().compile_time = compile_time;
+        log::info!("compiled artifact '{name}' in {compile_time:?}");
+        let c = Rc::new(Compiled { exe, meta });
+        self.cache.borrow_mut().insert(name.to_string(), c.clone());
+        Ok(c)
+    }
+
+    /// Eagerly compile a set of artifacts (warmup before serving).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.compiled(n)?;
+        }
+        Ok(())
+    }
+
+    fn validate_inputs(&self, meta: &ArtifactMeta, inputs: &[HostTensor]) -> Result<()> {
+        if inputs.len() != meta.inputs.len() {
+            bail!(
+                "artifact '{}' expects {} inputs, got {}",
+                meta.name,
+                meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (spec, t) in meta.inputs.iter().zip(inputs) {
+            let ok_dtype = matches!(
+                (spec.dtype, t),
+                (DType::F32, HostTensor::F32 { .. }) | (DType::I32, HostTensor::I32 { .. })
+            );
+            if !ok_dtype {
+                bail!("artifact '{}' input '{}': dtype mismatch", meta.name, spec.name);
+            }
+            if t.shape() != spec.shape.as_slice() {
+                bail!(
+                    "artifact '{}' input '{}': shape {:?} != expected {:?}",
+                    meta.name,
+                    spec.name,
+                    t.shape(),
+                    spec.shape
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute an artifact with host inputs; returns host outputs.
+    ///
+    /// Artifacts are lowered with `return_tuple=True`, so the single result
+    /// literal is a tuple which is decomposed into one `HostTensor` per
+    /// declared output.
+    pub fn call(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let c = self.compiled(name)?;
+        if self.validate_calls {
+            self.validate_inputs(&c.meta, inputs)?;
+        }
+
+        let tm0 = Instant::now();
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let marshal_in = tm0.elapsed();
+
+        let t0 = Instant::now();
+        let result = c
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing artifact '{name}'"))?;
+        let out_lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching output of '{name}'"))?;
+        let exec_time = t0.elapsed();
+
+        let tm1 = Instant::now();
+        let parts = out_lit.to_tuple().context("decomposing output tuple")?;
+        if parts.len() != c.meta.outputs.len() {
+            bail!(
+                "artifact '{}' declared {} outputs but returned {}",
+                name,
+                c.meta.outputs.len(),
+                parts.len()
+            );
+        }
+        let outs: Vec<HostTensor> =
+            parts.iter().map(HostTensor::from_literal).collect::<Result<_>>()?;
+        let marshal_out = tm1.elapsed();
+
+        let mut stats = self.stats.borrow_mut();
+        let s = stats.entry(name.to_string()).or_default();
+        s.calls += 1;
+        s.exec_time += exec_time;
+        s.marshal_time += marshal_in + marshal_out;
+        Ok(outs)
+    }
+
+    /// Execute with a mix of host tensors and device-resident buffers.
+    ///
+    /// Positions listed in `buffers` are taken from the given
+    /// [`xla::PjRtBuffer`]s (outputs of a previous call) instead of being
+    /// marshalled from host memory — the perf-pass fast path for chained
+    /// state like sequential-decode KV caches. Returns raw output buffers;
+    /// use [`Engine::buffer_to_host`] for the ones you need on the host.
+    ///
+    /// The artifact must have been lowered WITHOUT tuple outputs flattened —
+    /// outputs come back as one tuple buffer per PJRT semantics, so this
+    /// path destructures via `to_literal_sync` only for requested outputs.
+    pub fn call_buffers(
+        &self,
+        name: &str,
+        inputs: &[BufferArg<'_>],
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        let c = self.compiled(name)?;
+        // Promote host args to device buffers (two passes so the borrows of
+        // `owned` are taken only after it stops growing).
+        let mut owned: Vec<Option<xla::PjRtBuffer>> = Vec::with_capacity(inputs.len());
+        for arg in inputs {
+            owned.push(match arg {
+                BufferArg::Host(t) => {
+                    let lit = t.to_literal()?;
+                    Some(self.client.buffer_from_host_literal(None, &lit)?)
+                }
+                BufferArg::Device(_) => None,
+            });
+        }
+        let borrowed: Vec<&xla::PjRtBuffer> = inputs
+            .iter()
+            .zip(&owned)
+            .map(|(arg, own)| match arg {
+                BufferArg::Host(_) => own.as_ref().unwrap(),
+                BufferArg::Device(b) => *b,
+            })
+            .collect();
+        let t0 = Instant::now();
+        let result = c.exe.execute_b::<&xla::PjRtBuffer>(&borrowed)?;
+        let exec_time = t0.elapsed();
+        let mut stats = self.stats.borrow_mut();
+        let s = stats.entry(name.to_string()).or_default();
+        s.calls += 1;
+        s.exec_time += exec_time;
+        drop(stats);
+        Ok(result.into_iter().next().unwrap_or_default())
+    }
+
+    /// Fetch one output buffer to the host, decomposing the result tuple.
+    pub fn tuple_outputs_to_host(&self, buf: &xla::PjRtBuffer) -> Result<Vec<HostTensor>> {
+        let lit = buf.to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        parts.iter().map(HostTensor::from_literal).collect()
+    }
+
+    /// Snapshot of per-artifact statistics.
+    pub fn stats(&self) -> HashMap<String, CallStats> {
+        self.stats.borrow().clone()
+    }
+
+    /// Reset call statistics (keeps compile times).
+    pub fn reset_stats(&self) {
+        for s in self.stats.borrow_mut().values_mut() {
+            s.calls = 0;
+            s.exec_time = Duration::ZERO;
+            s.marshal_time = Duration::ZERO;
+        }
+    }
+}

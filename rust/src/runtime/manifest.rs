@@ -1,0 +1,328 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (which
+//! writes `artifacts/manifest.json`) and the rust [`super::Engine`].
+
+use crate::jsonx::{self, Value};
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Element type of an artifact input/output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "f32" | "float32" => Ok(DType::F32),
+            "i32" | "int32" => Ok(DType::I32),
+            other => Err(anyhow!("unsupported dtype '{other}'")),
+        }
+    }
+}
+
+/// Shape + dtype + name of one artifact input or output.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    fn from_json(v: &Value) -> Result<Self> {
+        let name = v.req_str("name")?.to_string();
+        let dtype = DType::from_str(v.req_str("dtype")?)?;
+        let shape = v
+            .req_arr("shape")?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad shape dim")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSpec { name, dtype, shape })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-lowered program.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    /// HLO text file, relative to the manifest's directory.
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Model this artifact belongs to (e.g. "tf10"), if any.
+    pub model: Option<String>,
+}
+
+/// Model-level metadata (mirrors the python config that trained it).
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub name: String,
+    /// Kind: "tarflow" | "maf" | "ddpm" | "mmdgen" | "metricnet".
+    pub kind: String,
+    /// Sequence length (tokens for tarflow, dims for maf).
+    pub seq_len: usize,
+    /// Number of flow blocks K (autoregressive layers for maf).
+    pub blocks: usize,
+    /// Token dimensionality (patch dim for tarflow; 1 for maf).
+    pub token_dim: usize,
+    /// Transformer width (tarflow) or hidden width (maf).
+    pub model_dim: usize,
+    /// Attention layers per block (tarflow only).
+    pub layers_per_block: usize,
+    /// Image geometry [h, w, c] if the model generates images.
+    pub image_hwc: Option<[usize; 3]>,
+    /// Patch size (tarflow only).
+    pub patch: usize,
+    /// Noise std used during training (tarflow dequantization).
+    pub noise_std: f64,
+    /// Batch sizes this model's artifacts were lowered for.
+    pub batch_sizes: Vec<usize>,
+    /// Free-form extras (dataset name, temperature, ...).
+    pub extra: BTreeMap<String, Value>,
+}
+
+/// A reference dataset exported by the build path (raw little-endian f32).
+#[derive(Clone, Debug)]
+pub struct DatasetMeta {
+    pub name: String,
+    pub file: String,
+    pub shape: Vec<usize>,
+    pub extra: BTreeMap<String, Value>,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+    pub models: BTreeMap<String, ModelMeta>,
+    pub datasets: BTreeMap<String, DatasetMeta>,
+}
+
+impl Manifest {
+    /// Load and validate a manifest file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        let root = jsonx::parse(&text).context("parsing manifest json")?;
+        let dir = path.parent().unwrap_or_else(|| Path::new(".")).to_path_buf();
+
+        let mut artifacts = BTreeMap::new();
+        for a in root.req_arr("artifacts")? {
+            let name = a.req_str("name")?.to_string();
+            let meta = ArtifactMeta {
+                name: name.clone(),
+                file: a.req_str("file")?.to_string(),
+                inputs: a
+                    .req_arr("inputs")?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<Vec<_>>>()
+                    .with_context(|| format!("artifact '{name}' inputs"))?,
+                outputs: a
+                    .req_arr("outputs")?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<Vec<_>>>()
+                    .with_context(|| format!("artifact '{name}' outputs"))?,
+                model: a.get("model").and_then(Value::as_str).map(str::to_string),
+            };
+            artifacts.insert(name, meta);
+        }
+
+        let mut models = BTreeMap::new();
+        if let Some(arr) = root.get("models").and_then(Value::as_arr) {
+            for m in arr {
+                let name = m.req_str("name")?.to_string();
+                let image_hwc = m.get("image_hwc").and_then(Value::as_arr).map(|a| {
+                    [
+                        a[0].as_usize().unwrap_or(0),
+                        a[1].as_usize().unwrap_or(0),
+                        a[2].as_usize().unwrap_or(0),
+                    ]
+                });
+                let batch_sizes = m
+                    .get("batch_sizes")
+                    .and_then(Value::as_arr)
+                    .map(|a| a.iter().filter_map(Value::as_usize).collect())
+                    .unwrap_or_default();
+                let mut extra = BTreeMap::new();
+                if let Some(o) = m.get("extra").and_then(Value::as_obj) {
+                    extra = o.clone();
+                }
+                models.insert(
+                    name.clone(),
+                    ModelMeta {
+                        name,
+                        kind: m.req_str("kind")?.to_string(),
+                        seq_len: m.req_usize("seq_len")?,
+                        blocks: m.req_usize("blocks")?,
+                        token_dim: m.req_usize("token_dim")?,
+                        model_dim: m.req_usize("model_dim")?,
+                        layers_per_block: m.get("layers_per_block").and_then(Value::as_usize).unwrap_or(0),
+                        image_hwc,
+                        patch: m.get("patch").and_then(Value::as_usize).unwrap_or(1),
+                        noise_std: m.get("noise_std").and_then(Value::as_f64).unwrap_or(0.0),
+                        batch_sizes,
+                        extra,
+                    },
+                );
+            }
+        }
+
+        let mut datasets = BTreeMap::new();
+        if let Some(arr) = root.get("datasets").and_then(Value::as_arr) {
+            for d in arr {
+                let name = d.req_str("name")?.to_string();
+                let shape = d
+                    .req_arr("shape")?
+                    .iter()
+                    .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad dataset shape")))
+                    .collect::<Result<Vec<_>>>()?;
+                let extra = d
+                    .get("extra")
+                    .and_then(Value::as_obj)
+                    .cloned()
+                    .unwrap_or_default();
+                datasets.insert(
+                    name.clone(),
+                    DatasetMeta { name, file: d.req_str("file")?.to_string(), shape, extra },
+                );
+            }
+        }
+
+        let manifest = Manifest { dir, artifacts, models, datasets };
+        manifest.validate()?;
+        Ok(manifest)
+    }
+
+    /// Load a reference dataset exported by the build path as a [`crate::tensor::Tensor`].
+    pub fn load_dataset(&self, name: &str) -> Result<crate::tensor::Tensor> {
+        let meta = self
+            .datasets
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown dataset '{name}' (have: {:?})", self.datasets.keys().collect::<Vec<_>>()))?;
+        let bytes = std::fs::read(self.dir.join(&meta.file))
+            .with_context(|| format!("reading dataset {}", meta.file))?;
+        let numel: usize = meta.shape.iter().product();
+        if bytes.len() != numel * 4 {
+            return Err(anyhow!(
+                "dataset '{name}': file has {} bytes, shape {:?} needs {}",
+                bytes.len(),
+                meta.shape,
+                numel * 4
+            ));
+        }
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        crate::tensor::Tensor::new(&meta.shape, data)
+    }
+
+    /// Every artifact's HLO file must exist.
+    fn validate(&self) -> Result<()> {
+        for a in self.artifacts.values() {
+            let p = self.dir.join(&a.file);
+            if !p.exists() {
+                return Err(anyhow!("artifact '{}' file missing: {}", a.name, p.display()));
+            }
+            if let Some(m) = &a.model {
+                if !self.models.contains_key(m) {
+                    return Err(anyhow!("artifact '{}' references unknown model '{m}'", a.name));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}' (have: {:?})", self.artifacts.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown model '{name}' (have: {:?})", self.models.keys().collect::<Vec<_>>()))
+    }
+
+    /// Artifact names that belong to `model`.
+    pub fn artifacts_for(&self, model: &str) -> Vec<&ArtifactMeta> {
+        self.artifacts.values().filter(|a| a.model.as_deref() == Some(model)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+
+    fn write_manifest(dir: &Path, body: &str) -> PathBuf {
+        let p = dir.join("manifest.json");
+        let mut f = std::fs::File::create(&p).unwrap();
+        f.write_all(body.as_bytes()).unwrap();
+        p
+    }
+
+    #[test]
+    fn load_minimal_manifest() {
+        let dir = std::env::temp_dir().join("sjd_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("a.hlo.txt"), "HloModule m").unwrap();
+        let p = write_manifest(
+            &dir,
+            r#"{
+              "artifacts": [
+                {"name": "a", "file": "a.hlo.txt", "model": "m1",
+                 "inputs": [{"name": "x", "dtype": "f32", "shape": [2, 3]}],
+                 "outputs": [{"name": "y", "dtype": "f32", "shape": [2, 3]}]}
+              ],
+              "models": [
+                {"name": "m1", "kind": "tarflow", "seq_len": 64, "blocks": 4,
+                 "token_dim": 12, "model_dim": 64, "layers_per_block": 2,
+                 "patch": 2, "noise_std": 0.05, "image_hwc": [16, 16, 3],
+                 "batch_sizes": [1, 8]}
+              ]
+            }"#,
+        );
+        let m = Manifest::load(&p).unwrap();
+        let a = m.artifact("a").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![2, 3]);
+        assert_eq!(a.inputs[0].dtype, DType::F32);
+        let mm = m.model("m1").unwrap();
+        assert_eq!(mm.seq_len, 64);
+        assert_eq!(mm.image_hwc, Some([16, 16, 3]));
+        assert_eq!(m.artifacts_for("m1").len(), 1);
+    }
+
+    #[test]
+    fn missing_file_rejected() {
+        let dir = std::env::temp_dir().join("sjd_manifest_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = write_manifest(
+            &dir,
+            r#"{"artifacts": [{"name": "a", "file": "nope.hlo.txt", "inputs": [], "outputs": []}]}"#,
+        );
+        assert!(Manifest::load(&p).is_err());
+    }
+
+    #[test]
+    fn unknown_artifact_error_lists_names() {
+        let dir = std::env::temp_dir().join("sjd_manifest_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = write_manifest(&dir, r#"{"artifacts": []}"#);
+        let m = Manifest::load(&p).unwrap();
+        let err = m.artifact("ghost").unwrap_err().to_string();
+        assert!(err.contains("ghost"));
+    }
+}

@@ -1,0 +1,38 @@
+//! PJRT runtime: loads AOT-compiled HLO-text artifacts and executes them.
+//!
+//! The python build path (`make artifacts`) lowers every JAX/Pallas program to
+//! **HLO text** (see DESIGN.md §2 — text, not serialized protos, because the
+//! xla_extension 0.5.1 proto parser rejects jax ≥ 0.5's 64-bit instruction
+//! ids) and records each program's signature in `artifacts/manifest.json`.
+//!
+//! [`Engine`] owns one `PjRtClient` plus a lazy compile cache keyed by
+//! artifact name; [`HostTensor`] is the host-side value type that crosses the
+//! boundary.
+
+mod engine;
+mod host;
+mod manifest;
+
+pub use engine::{BufferArg, CallStats, Engine};
+pub use host::HostTensor;
+pub use manifest::{ArtifactMeta, DatasetMeta, Manifest, ModelMeta, TensorSpec};
+
+/// Execution backend abstraction: the real PJRT [`Engine`] in production,
+/// mock backends in coordinator unit tests (`rust/tests/mock_backend.rs`).
+pub trait Backend {
+    /// Execute an artifact by name.
+    fn call(&self, name: &str, inputs: &[HostTensor]) -> anyhow::Result<Vec<HostTensor>>;
+
+    /// Model metadata lookup.
+    fn model_meta(&self, model: &str) -> anyhow::Result<ModelMeta>;
+}
+
+impl Backend for Engine {
+    fn call(&self, name: &str, inputs: &[HostTensor]) -> anyhow::Result<Vec<HostTensor>> {
+        Engine::call(self, name, inputs)
+    }
+
+    fn model_meta(&self, model: &str) -> anyhow::Result<ModelMeta> {
+        self.manifest().model(model).cloned()
+    }
+}

@@ -1,0 +1,199 @@
+//! Small dense linear algebra: matmul, symmetric eigendecomposition (cyclic
+//! Jacobi rotations), Cholesky. Used by the proxy-FID metric (Fréchet distance
+//! needs `tr((Σ₁Σ₂)^{1/2})`, computed via eigendecomposition).
+
+use super::Tensor;
+use anyhow::{bail, Result};
+
+/// Dense matmul (M,K)×(K,N) → (M,N). Metrics-path only — model matmuls run
+/// inside XLA.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    if a.ndim() != 2 || b.ndim() != 2 || a.shape()[1] != b.shape()[0] {
+        bail!("matmul shape mismatch {:?} x {:?}", a.shape(), b.shape());
+    }
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let n = b.shape()[1];
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for p in 0..k {
+            let av = a.data()[i * k + p];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b.data()[p * n..(p + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    Tensor::new(&[m, n], out)
+}
+
+/// Trace of a square matrix.
+pub fn trace(a: &Tensor) -> f32 {
+    let n = a.shape()[0];
+    (0..n).map(|i| a.data()[i * n + i]).sum()
+}
+
+/// Symmetric eigendecomposition via the cyclic Jacobi rotation method.
+/// Returns (eigenvalues, eigenvectors-as-columns). Input must be symmetric.
+pub fn sym_eigen(a: &Tensor, max_sweeps: usize) -> Result<(Vec<f32>, Tensor)> {
+    if a.ndim() != 2 || a.shape()[0] != a.shape()[1] {
+        bail!("sym_eigen needs square matrix, got {:?}", a.shape());
+    }
+    let n = a.shape()[0];
+    let mut m: Vec<f64> = a.data().iter().map(|&x| x as f64).collect();
+    let mut v = vec![0.0f64; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+
+    for _sweep in 0..max_sweeps {
+        // Off-diagonal Frobenius norm.
+        let mut off = 0.0f64;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[i * n + j] * m[i * n + j];
+            }
+        }
+        if off.sqrt() < 1e-10 {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[p * n + q];
+                if apq.abs() < 1e-14 {
+                    continue;
+                }
+                let app = m[p * n + p];
+                let aqq = m[q * n + q];
+                let theta = 0.5 * (aqq - app) / apq;
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Rotate rows/cols p, q.
+                for k in 0..n {
+                    let mkp = m[k * n + p];
+                    let mkq = m[k * n + q];
+                    m[k * n + p] = c * mkp - s * mkq;
+                    m[k * n + q] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[p * n + k];
+                    let mqk = m[q * n + k];
+                    m[p * n + k] = c * mpk - s * mqk;
+                    m[q * n + k] = s * mpk + c * mqk;
+                }
+                for k in 0..n {
+                    let vkp = v[k * n + p];
+                    let vkq = v[k * n + q];
+                    v[k * n + p] = c * vkp - s * vkq;
+                    v[k * n + q] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    let eigvals: Vec<f32> = (0..n).map(|i| m[i * n + i] as f32).collect();
+    let eigvecs = Tensor::new(&[n, n], v.into_iter().map(|x| x as f32).collect())?;
+    Ok((eigvals, eigvecs))
+}
+
+/// Cholesky factor L (lower) of a positive-definite matrix: A = L Lᵀ.
+pub fn cholesky(a: &Tensor) -> Result<Tensor> {
+    if a.ndim() != 2 || a.shape()[0] != a.shape()[1] {
+        bail!("cholesky needs square matrix");
+    }
+    let n = a.shape()[0];
+    let mut l = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a.data()[i * n + j] as f64;
+            for k in 0..j {
+                s -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    bail!("matrix not positive definite at pivot {i} (s = {s})");
+                }
+                l[i * n + j] = s.sqrt();
+            } else {
+                l[i * n + j] = s / l[j * n + j];
+            }
+        }
+    }
+    Tensor::new(&[n, n], l.into_iter().map(|x| x as f32).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_basic() {
+        let a = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let b = Tensor::new(&[3, 2], vec![7., 8., 9., 10., 11., 12.]).unwrap();
+        let c = matmul(&a, &b).unwrap();
+        assert_eq!(c.data(), &[58., 64., 139., 154.]);
+        assert!(matmul(&a, &a).is_err());
+    }
+
+    #[test]
+    fn eigen_of_diagonal() {
+        let a = Tensor::new(&[2, 2], vec![3., 0., 0., 1.]).unwrap();
+        let (mut vals, _) = sym_eigen(&a, 30).unwrap();
+        vals.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        assert!((vals[0] - 1.0).abs() < 1e-5);
+        assert!((vals[1] - 3.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn eigen_reconstructs() {
+        // Symmetric matrix; check V diag(λ) Vᵀ ≈ A.
+        let a = Tensor::new(&[3, 3], vec![4., 1., 0.5, 1., 3., 0.2, 0.5, 0.2, 2.]).unwrap();
+        let (vals, vecs) = sym_eigen(&a, 50).unwrap();
+        let n = 3;
+        let mut recon = vec![0.0f32; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                for k in 0..n {
+                    recon[i * n + j] += vecs.at(&[i, k]) * vals[k] * vecs.at(&[j, k]);
+                }
+            }
+        }
+        for (r, o) in recon.iter().zip(a.data()) {
+            assert!((r - o).abs() < 1e-4, "{r} vs {o}");
+        }
+    }
+
+    #[test]
+    fn eigen_trace_preserved() {
+        let a = Tensor::new(&[3, 3], vec![2., 0.3, 0.1, 0.3, 1.5, 0.2, 0.1, 0.2, 1.0]).unwrap();
+        let (vals, _) = sym_eigen(&a, 50).unwrap();
+        let tr: f32 = vals.iter().sum();
+        assert!((tr - trace(&a)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn cholesky_roundtrip() {
+        // A = L0 L0ᵀ for a chosen L0.
+        let l0 = Tensor::new(&[2, 2], vec![2., 0., 1., 1.5]).unwrap();
+        let mut a = vec![0.0f32; 4];
+        for i in 0..2 {
+            for j in 0..2 {
+                for k in 0..2 {
+                    a[i * 2 + j] += l0.at(&[i, k]) * l0.at(&[j, k]);
+                }
+            }
+        }
+        let a = Tensor::new(&[2, 2], a).unwrap();
+        let l = cholesky(&a).unwrap();
+        for (x, y) in l.data().iter().zip(l0.data()) {
+            assert!((x - y).abs() < 1e-5);
+        }
+        // Non-PD rejected.
+        let bad = Tensor::new(&[2, 2], vec![1., 2., 2., 1.]).unwrap();
+        assert!(cholesky(&bad).is_err());
+    }
+}

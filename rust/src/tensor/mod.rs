@@ -1,0 +1,194 @@
+//! Lightweight dense tensor substrate (ndarray substitute).
+//!
+//! The coordinator needs host-side math — prior sampling, norms, per-token
+//! slicing, image (un)patchify, metric statistics — without any crates.io
+//! dependency. `Tensor` is a contiguous row-major `f32` array with shape.
+
+mod linalg;
+mod ops;
+mod rng;
+mod shape;
+
+pub use linalg::{cholesky, matmul, sym_eigen, trace};
+pub use rng::Pcg64;
+pub use shape::strides_for;
+
+use anyhow::{bail, Result};
+
+/// Contiguous row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} needs {} elements, got {}", shape, n, data.len());
+        }
+        Ok(Tensor { shape: shape.to_vec(), data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+    }
+
+    /// Standard-normal tensor (Box–Muller over PCG64).
+    pub fn randn(shape: &[usize], rng: &mut Pcg64) -> Self {
+        let n: usize = shape.iter().product();
+        let mut data = Vec::with_capacity(n);
+        for _ in 0..n {
+            data.push(rng.next_gaussian());
+        }
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    /// Uniform [0,1) tensor.
+    pub fn rand(shape: &[usize], rng: &mut Pcg64) -> Self {
+        let n: usize = shape.iter().product();
+        let mut data = Vec::with_capacity(n);
+        for _ in 0..n {
+            data.push(rng.next_f32());
+        }
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape of the same element count.
+    pub fn reshape(&self, shape: &[usize]) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            bail!("cannot reshape {:?} ({} elems) to {:?}", self.shape, self.data.len(), shape);
+        }
+        Ok(Tensor { shape: shape.to_vec(), data: self.data.clone() })
+    }
+
+    /// Row `i` of a 2-D tensor as a slice.
+    pub fn row(&self, i: usize) -> &[f32] {
+        assert_eq!(self.ndim(), 2, "row() requires 2-D tensor");
+        let w = self.shape[1];
+        &self.data[i * w..(i + 1) * w]
+    }
+
+    /// Index into an arbitrary-rank tensor.
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let strides = strides_for(&self.shape);
+        let off: usize = idx.iter().zip(&strides).map(|(i, s)| i * s).sum();
+        self.data[off]
+    }
+
+    pub fn set(&mut self, idx: &[usize], v: f32) {
+        let strides = strides_for(&self.shape);
+        let off: usize = idx.iter().zip(&strides).map(|(i, s)| i * s).sum();
+        self.data[off] = v;
+    }
+
+    /// Slice the leading axis: rows `[start, end)` of axis 0.
+    pub fn slice0(&self, start: usize, end: usize) -> Tensor {
+        assert!(end <= self.shape[0] && start <= end);
+        let inner: usize = self.shape[1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[0] = end - start;
+        Tensor { shape, data: self.data[start * inner..end * inner].to_vec() }
+    }
+
+    /// Concatenate along axis 0.
+    pub fn cat0(parts: &[&Tensor]) -> Result<Tensor> {
+        if parts.is_empty() {
+            bail!("cat0 of zero tensors");
+        }
+        let inner_shape = &parts[0].shape[1..];
+        let mut total = 0;
+        for p in parts {
+            if &p.shape[1..] != inner_shape {
+                bail!("cat0 inner shape mismatch");
+            }
+            total += p.shape[0];
+        }
+        let mut shape = parts[0].shape.clone();
+        shape[0] = total;
+        let mut data = Vec::with_capacity(shape.iter().product());
+        for p in parts {
+            data.extend_from_slice(&p.data);
+        }
+        Ok(Tensor { shape, data })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_indexing() {
+        let t = Tensor::new(&[2, 3], vec![0., 1., 2., 3., 4., 5.]).unwrap();
+        assert_eq!(t.at(&[0, 2]), 2.0);
+        assert_eq!(t.at(&[1, 0]), 3.0);
+        assert_eq!(t.row(1), &[3., 4., 5.]);
+        assert!(Tensor::new(&[2, 2], vec![0.; 3]).is_err());
+    }
+
+    #[test]
+    fn reshape_checks_count() {
+        let t = Tensor::zeros(&[4, 2]);
+        assert!(t.reshape(&[2, 4]).is_ok());
+        assert!(t.reshape(&[3, 3]).is_err());
+    }
+
+    #[test]
+    fn slice_and_cat_roundtrip() {
+        let t = Tensor::new(&[4, 2], (0..8).map(|x| x as f32).collect()).unwrap();
+        let a = t.slice0(0, 2);
+        let b = t.slice0(2, 4);
+        let back = Tensor::cat0(&[&a, &b]).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn randn_moments() {
+        let mut rng = Pcg64::seed(42);
+        let t = Tensor::randn(&[10_000], &mut rng);
+        let mean = t.data().iter().sum::<f32>() / 10_000.0;
+        let var = t.data().iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / 10_000.0;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn set_get() {
+        let mut t = Tensor::zeros(&[2, 2, 2]);
+        t.set(&[1, 0, 1], 7.0);
+        assert_eq!(t.at(&[1, 0, 1]), 7.0);
+        assert_eq!(t.data().iter().filter(|&&x| x != 0.0).count(), 1);
+    }
+}

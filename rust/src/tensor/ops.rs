@@ -1,0 +1,241 @@
+//! Elementwise ops, reductions, and distance/similarity measures on [`Tensor`].
+
+use super::Tensor;
+use anyhow::{bail, Result};
+
+impl Tensor {
+    /// Elementwise binary op; shapes must match exactly.
+    pub fn zip_map(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Result<Tensor> {
+        if self.shape() != other.shape() {
+            bail!("shape mismatch {:?} vs {:?}", self.shape(), other.shape());
+        }
+        let data = self.data().iter().zip(other.data()).map(|(&a, &b)| f(a, b)).collect();
+        Tensor::new(self.shape(), data)
+    }
+
+    pub fn add(&self, other: &Tensor) -> Result<Tensor> {
+        self.zip_map(other, |a, b| a + b)
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Result<Tensor> {
+        self.zip_map(other, |a, b| a - b)
+    }
+
+    pub fn mul(&self, other: &Tensor) -> Result<Tensor> {
+        self.zip_map(other, |a, b| a * b)
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor::new(self.shape(), self.data().iter().map(|&x| f(x)).collect()).unwrap()
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        self.map(|x| x * s)
+    }
+
+    pub fn sum(&self) -> f32 {
+        // Kahan summation: metric code feeds large flat arrays.
+        let mut sum = 0.0f64;
+        for &x in self.data() {
+            sum += x as f64;
+        }
+        sum as f32
+    }
+
+    pub fn mean(&self) -> f32 {
+        if self.numel() == 0 {
+            return 0.0;
+        }
+        self.sum() / self.numel() as f32
+    }
+
+    pub fn min(&self) -> f32 {
+        self.data().iter().copied().fold(f32::INFINITY, f32::min)
+    }
+
+    pub fn max(&self) -> f32 {
+        self.data().iter().copied().fold(f32::NEG_INFINITY, f32::max)
+    }
+
+    /// L2 norm of the flattened tensor.
+    pub fn l2_norm(&self) -> f32 {
+        (self.data().iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>()).sqrt() as f32
+    }
+
+    /// L∞ norm — the Jacobi stopping criterion ‖z^t − z^{t−1}‖∞ (Alg 1).
+    pub fn linf_norm(&self) -> f32 {
+        self.data().iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// L2 distance to another tensor.
+    pub fn l2_dist(&self, other: &Tensor) -> Result<f32> {
+        Ok(self.sub(other)?.l2_norm())
+    }
+
+    /// Cosine similarity of flattened tensors (Fig 1 metric).
+    pub fn cosine_sim(&self, other: &Tensor) -> Result<f32> {
+        if self.shape() != other.shape() {
+            bail!("shape mismatch");
+        }
+        let mut dot = 0.0f64;
+        let mut na = 0.0f64;
+        let mut nb = 0.0f64;
+        for (&a, &b) in self.data().iter().zip(other.data()) {
+            dot += (a as f64) * (b as f64);
+            na += (a as f64) * (a as f64);
+            nb += (b as f64) * (b as f64);
+        }
+        if na == 0.0 || nb == 0.0 {
+            return Ok(0.0);
+        }
+        Ok((dot / (na.sqrt() * nb.sqrt())) as f32)
+    }
+
+    /// Mean squared error (reconstruction-consistency metric, §E.4).
+    pub fn mse(&self, other: &Tensor) -> Result<f32> {
+        if self.shape() != other.shape() {
+            bail!("shape mismatch");
+        }
+        let n = self.numel().max(1) as f64;
+        let s: f64 = self
+            .data()
+            .iter()
+            .zip(other.data())
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum();
+        Ok((s / n) as f32)
+    }
+
+    /// Per-sample L∞ norms along axis 0 of a 2-D view (B, rest).
+    pub fn linf_per_row(&self) -> Vec<f32> {
+        let b = self.shape()[0];
+        let inner: usize = self.shape()[1..].iter().product();
+        (0..b)
+            .map(|i| {
+                self.data()[i * inner..(i + 1) * inner]
+                    .iter()
+                    .fold(0.0f32, |m, &x| m.max(x.abs()))
+            })
+            .collect()
+    }
+
+    /// Clamp all elements into [lo, hi].
+    pub fn clamp(&self, lo: f32, hi: f32) -> Tensor {
+        self.map(|x| x.clamp(lo, hi))
+    }
+
+    /// Column means of a 2-D tensor (N, D) → (D,).
+    pub fn col_mean(&self) -> Tensor {
+        assert_eq!(self.ndim(), 2);
+        let (n, d) = (self.shape()[0], self.shape()[1]);
+        let mut out = vec![0.0f64; d];
+        for i in 0..n {
+            for j in 0..d {
+                out[j] += self.data()[i * d + j] as f64;
+            }
+        }
+        let scale = 1.0 / n.max(1) as f64;
+        Tensor::new(&[d], out.into_iter().map(|x| (x * scale) as f32).collect()).unwrap()
+    }
+
+    /// Covariance matrix of a 2-D tensor (N, D) → (D, D), unbiased.
+    pub fn covariance(&self) -> Tensor {
+        assert_eq!(self.ndim(), 2);
+        let (n, d) = (self.shape()[0], self.shape()[1]);
+        let mu = self.col_mean();
+        let mut cov = vec![0.0f64; d * d];
+        for i in 0..n {
+            let row = self.row(i);
+            for a in 0..d {
+                let da = (row[a] - mu.data()[a]) as f64;
+                for b in a..d {
+                    let db = (row[b] - mu.data()[b]) as f64;
+                    cov[a * d + b] += da * db;
+                }
+            }
+        }
+        let scale = 1.0 / (n.max(2) - 1) as f64;
+        for a in 0..d {
+            for b in a..d {
+                let v = cov[a * d + b] * scale;
+                cov[a * d + b] = v;
+                cov[b * d + a] = v;
+            }
+        }
+        Tensor::new(&[d, d], cov.into_iter().map(|x| x as f32).collect()).unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(shape: &[usize], v: Vec<f32>) -> Tensor {
+        Tensor::new(shape, v).unwrap()
+    }
+
+    #[test]
+    fn elementwise() {
+        let a = t(&[2, 2], vec![1., 2., 3., 4.]);
+        let b = t(&[2, 2], vec![4., 3., 2., 1.]);
+        assert_eq!(a.add(&b).unwrap().data(), &[5., 5., 5., 5.]);
+        assert_eq!(a.sub(&b).unwrap().data(), &[-3., -1., 1., 3.]);
+        assert_eq!(a.mul(&b).unwrap().data(), &[4., 6., 6., 4.]);
+        assert!(a.add(&t(&[4], vec![0.; 4])).is_err());
+    }
+
+    #[test]
+    fn norms() {
+        let a = t(&[3], vec![3., -4., 0.]);
+        assert!((a.l2_norm() - 5.0).abs() < 1e-6);
+        assert_eq!(a.linf_norm(), 4.0);
+        let b = t(&[3], vec![0., 0., 0.]);
+        assert_eq!(b.linf_norm(), 0.0);
+    }
+
+    #[test]
+    fn cosine() {
+        let a = t(&[2], vec![1., 0.]);
+        let b = t(&[2], vec![0., 1.]);
+        assert!((a.cosine_sim(&b).unwrap()).abs() < 1e-6);
+        assert!((a.cosine_sim(&a).unwrap() - 1.0).abs() < 1e-6);
+        let z = t(&[2], vec![0., 0.]);
+        assert_eq!(a.cosine_sim(&z).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn mse_and_dist() {
+        let a = t(&[2], vec![1., 2.]);
+        let b = t(&[2], vec![3., 2.]);
+        assert!((a.mse(&b).unwrap() - 2.0).abs() < 1e-6);
+        assert!((a.l2_dist(&b).unwrap() - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn per_row_inf_norms() {
+        let a = t(&[2, 3], vec![1., -5., 2., 0., 0.5, -0.25]);
+        assert_eq!(a.linf_per_row(), vec![5.0, 0.5]);
+    }
+
+    #[test]
+    fn stats() {
+        // Two columns, perfectly correlated.
+        let x = t(&[4, 2], vec![1., 2., 2., 4., 3., 6., 4., 8.]);
+        let mu = x.col_mean();
+        assert_eq!(mu.data(), &[2.5, 5.0]);
+        let cov = x.covariance();
+        // var(col0) = 5/3; cov = 10/3; var(col1) = 20/3
+        assert!((cov.at(&[0, 0]) - 5.0 / 3.0).abs() < 1e-5);
+        assert!((cov.at(&[0, 1]) - 10.0 / 3.0).abs() < 1e-5);
+        assert!((cov.at(&[1, 1]) - 20.0 / 3.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn clamp_minmax() {
+        let a = t(&[4], vec![-2., 0., 0.5, 3.]);
+        let c = a.clamp(0.0, 1.0);
+        assert_eq!(c.data(), &[0., 0., 0.5, 1.]);
+        assert_eq!(a.min(), -2.0);
+        assert_eq!(a.max(), 3.0);
+    }
+}

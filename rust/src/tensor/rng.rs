@@ -1,0 +1,140 @@
+//! Deterministic RNG: PCG64 (XSL-RR variant) + cached Box–Muller gaussians.
+//!
+//! Prior noise `z_K ~ N(0, I)` is drawn in rust on the request path, so the
+//! generator must be fast, seedable, and reproducible across runs.
+
+/// PCG64 XSL-RR generator.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+    cached_gauss: Option<f32>,
+}
+
+const PCG_MULT: u128 = 0x2360ed051fc65da44385df649fccf645;
+
+impl Pcg64 {
+    /// Seed with a stream derived from the seed itself.
+    pub fn seed(seed: u64) -> Self {
+        Self::seed_stream(seed, 0xda3e39cb94b95bdb)
+    }
+
+    pub fn seed_stream(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg64 {
+            state: 0,
+            inc: ((stream as u128) << 1) | 1,
+            cached_gauss: None,
+        };
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng.state = rng.state.wrapping_add(seed as u128);
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xsl = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xsl.rotate_right(rot)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn next_f32(&mut self) -> f32 {
+        // 24 high bits → exactly representable in f32.
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn next_below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Modulo bias negligible for n << 2^64 (we use n ≤ millions).
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal via Box–Muller (caches the second variate).
+    pub fn next_gaussian(&mut self) -> f32 {
+        if let Some(g) = self.cached_gauss.take() {
+            return g;
+        }
+        loop {
+            let u1 = self.next_f64();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.next_f64();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let theta = 2.0 * std::f64::consts::PI * u2;
+            self.cached_gauss = Some((r * theta.sin()) as f32);
+            return (r * theta.cos()) as f32;
+        }
+    }
+
+    /// Exponential with rate 1 (used for Poisson arrival load generation).
+    pub fn next_exp(&mut self) -> f64 {
+        -(1.0 - self.next_f64()).ln()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Pcg64::seed(7);
+        let mut b = Pcg64::seed(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg64::seed(1);
+        let mut b = Pcg64::seed(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn uniform_range_and_mean() {
+        let mut rng = Pcg64::seed(3);
+        let mut sum = 0.0;
+        for _ in 0..10_000 {
+            let x = rng.next_f32();
+            assert!((0.0..1.0).contains(&x));
+            sum += x as f64;
+        }
+        assert!((sum / 10_000.0 - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn gaussian_tail_fraction() {
+        let mut rng = Pcg64::seed(9);
+        let n = 20_000;
+        let beyond2 = (0..n).filter(|_| rng.next_gaussian().abs() > 2.0).count();
+        let frac = beyond2 as f64 / n as f64;
+        // P(|Z| > 2) ≈ 0.0455
+        assert!((frac - 0.0455).abs() < 0.01, "frac {frac}");
+    }
+
+    #[test]
+    fn exp_mean() {
+        let mut rng = Pcg64::seed(11);
+        let mean: f64 = (0..20_000).map(|_| rng.next_exp()).sum::<f64>() / 20_000.0;
+        assert!((mean - 1.0).abs() < 0.05, "mean {mean}");
+    }
+
+    #[test]
+    fn next_below_bounds() {
+        let mut rng = Pcg64::seed(13);
+        for _ in 0..1000 {
+            assert!(rng.next_below(7) < 7);
+        }
+    }
+}

@@ -1,0 +1,279 @@
+//! Mini property-based testing framework (proptest substitute — see
+//! DESIGN.md §2: crates.io is unreachable in this environment).
+//!
+//! Provides seeded generators, a runner that reports the failing seed/case,
+//! and greedy shrinking for the built-in generator types.
+//!
+//! ```no_run
+//! // (no_run: rustdoc test binaries don't get the crate's rpath flags in
+//! // this offline environment; the same snippet runs in unit tests below.)
+//! use sjd::testkit::*;
+//! check(100, gen_vec(gen_f32(-10.0, 10.0), 1, 32), |v| {
+//!     let s: f32 = v.iter().sum();
+//!     s.is_finite()
+//! });
+//! ```
+
+use crate::tensor::Pcg64;
+use std::fmt::Debug;
+
+/// A generator of random values with an optional shrink strategy.
+pub trait Gen {
+    type Value: Clone + Debug;
+    fn generate(&self, rng: &mut Pcg64) -> Self::Value;
+    /// Candidate smaller values, largest-first. Default: no shrinking.
+    fn shrink(&self, _v: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Run `cases` random cases of `prop` over `gen`; panic with the minimized
+/// counterexample on failure.
+pub fn check<G: Gen>(cases: usize, gen: G, prop: impl Fn(&G::Value) -> bool) {
+    check_seeded(0xC0FFEE, cases, gen, prop)
+}
+
+/// Like [`check`] but with an explicit base seed (printed on failure so runs
+/// are reproducible).
+pub fn check_seeded<G: Gen>(
+    seed: u64,
+    cases: usize,
+    gen: G,
+    prop: impl Fn(&G::Value) -> bool,
+) {
+    let mut rng = Pcg64::seed(seed);
+    for case in 0..cases {
+        let v = gen.generate(&mut rng);
+        if !prop(&v) {
+            let minimized = minimize(&gen, v.clone(), &prop);
+            panic!(
+                "property failed (seed {seed:#x}, case {case}/{cases})\n  original: {v:?}\n  minimized: {minimized:?}"
+            );
+        }
+    }
+}
+
+fn minimize<G: Gen>(gen: &G, mut v: G::Value, prop: &impl Fn(&G::Value) -> bool) -> G::Value {
+    // Greedy descent: repeatedly take the first shrink candidate that still
+    // fails, up to a step budget.
+    'outer: for _ in 0..200 {
+        for cand in gen.shrink(&v) {
+            if !prop(&cand) {
+                v = cand;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    v
+}
+
+// ---------------------------------------------------------------------------
+// Built-in generators
+// ---------------------------------------------------------------------------
+
+/// Uniform usize in [lo, hi].
+pub struct GenUsize {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+pub fn gen_usize(lo: usize, hi: usize) -> GenUsize {
+    assert!(lo <= hi);
+    GenUsize { lo, hi }
+}
+
+impl Gen for GenUsize {
+    type Value = usize;
+    fn generate(&self, rng: &mut Pcg64) -> usize {
+        self.lo + rng.next_below(self.hi - self.lo + 1)
+    }
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        // Geometric ladder towards `lo`: enables bisection-like minimization
+        // under the greedy descent in `minimize`.
+        let mut out = Vec::new();
+        if *v > self.lo {
+            out.push(self.lo);
+            let mut delta = (*v - self.lo) / 2;
+            while delta > 0 {
+                out.push(*v - delta);
+                delta /= 2;
+            }
+            out.push(v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Uniform f32 in [lo, hi).
+pub struct GenF32 {
+    pub lo: f32,
+    pub hi: f32,
+}
+
+pub fn gen_f32(lo: f32, hi: f32) -> GenF32 {
+    assert!(lo < hi);
+    GenF32 { lo, hi }
+}
+
+impl Gen for GenF32 {
+    type Value = f32;
+    fn generate(&self, rng: &mut Pcg64) -> f32 {
+        self.lo + rng.next_f32() * (self.hi - self.lo)
+    }
+    fn shrink(&self, v: &f32) -> Vec<f32> {
+        let mut out = Vec::new();
+        if *v != 0.0 && (self.lo..=self.hi).contains(&0.0) {
+            out.push(0.0);
+        }
+        if v.abs() > 1e-3 {
+            out.push(v / 2.0);
+        }
+        out
+    }
+}
+
+/// Vec of inner-generated values with length in [min_len, max_len].
+pub struct GenVec<G> {
+    pub inner: G,
+    pub min_len: usize,
+    pub max_len: usize,
+}
+
+pub fn gen_vec<G: Gen>(inner: G, min_len: usize, max_len: usize) -> GenVec<G> {
+    assert!(min_len <= max_len);
+    GenVec { inner, min_len, max_len }
+}
+
+impl<G: Gen> Gen for GenVec<G> {
+    type Value = Vec<G::Value>;
+    fn generate(&self, rng: &mut Pcg64) -> Self::Value {
+        let len = self.min_len + rng.next_below(self.max_len - self.min_len + 1);
+        (0..len).map(|_| self.inner.generate(rng)).collect()
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out = Vec::new();
+        // Shorter prefixes first.
+        if v.len() > self.min_len {
+            out.push(v[..self.min_len].to_vec());
+            out.push(v[..v.len() - 1].to_vec());
+            out.push(v[..(v.len() / 2).max(self.min_len)].to_vec());
+        }
+        // Then shrink one element.
+        for (i, item) in v.iter().enumerate().take(8) {
+            for cand in self.inner.shrink(item) {
+                let mut copy = v.clone();
+                copy[i] = cand;
+                out.push(copy);
+            }
+        }
+        out
+    }
+}
+
+/// Pair generator.
+pub struct GenPair<A, B>(pub A, pub B);
+
+pub fn gen_pair<A: Gen, B: Gen>(a: A, b: B) -> GenPair<A, B> {
+    GenPair(a, b)
+}
+
+impl<A: Gen, B: Gen> Gen for GenPair<A, B> {
+    type Value = (A::Value, B::Value);
+    fn generate(&self, rng: &mut Pcg64) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> =
+            self.0.shrink(&v.0).into_iter().map(|a| (a, v.1.clone())).collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+/// Choice among a fixed set of values.
+pub struct GenChoice<T: Clone + Debug>(pub Vec<T>);
+
+pub fn gen_choice<T: Clone + Debug>(items: Vec<T>) -> GenChoice<T> {
+    assert!(!items.is_empty());
+    GenChoice(items)
+}
+
+impl<T: Clone + Debug> Gen for GenChoice<T> {
+    type Value = T;
+    fn generate(&self, rng: &mut Pcg64) -> T {
+        self.0[rng.next_below(self.0.len())].clone()
+    }
+}
+
+/// Map a generator through a function (no shrinking through the map).
+pub struct GenMap<G, F> {
+    pub inner: G,
+    pub f: F,
+}
+
+pub fn gen_map<G: Gen, T: Clone + Debug, F: Fn(G::Value) -> T>(inner: G, f: F) -> GenMap<G, F> {
+    GenMap { inner, f }
+}
+
+impl<G: Gen, T: Clone + Debug, F: Fn(G::Value) -> T> Gen for GenMap<G, F> {
+    type Value = T;
+    fn generate(&self, rng: &mut Pcg64) -> T {
+        (self.f)(self.inner.generate(rng))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check(200, gen_usize(0, 100), |&n| n <= 100);
+        check(200, gen_f32(-1.0, 1.0), |&x| (-1.0..1.0).contains(&x));
+    }
+
+    #[test]
+    fn vec_lengths_respected() {
+        check(200, gen_vec(gen_usize(0, 9), 2, 5), |v| (2..=5).contains(&v.len()));
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        check(200, gen_usize(0, 100), |&n| n < 90);
+    }
+
+    #[test]
+    fn shrinking_minimizes() {
+        // Catch the panic and assert the minimized case is the boundary.
+        let res = std::panic::catch_unwind(|| {
+            check(500, gen_usize(0, 1000), |&n| n < 500);
+        });
+        let msg = *res.unwrap_err().downcast::<String>().unwrap();
+        // Greedy shrink should land at or near the boundary 500.
+        assert!(msg.contains("minimized: 500"), "got: {msg}");
+    }
+
+    #[test]
+    fn pair_and_choice() {
+        check(100, gen_pair(gen_usize(1, 4), gen_f32(0.0, 1.0)), |(n, x)| {
+            *n >= 1 && *x < 1.0
+        });
+        check(100, gen_choice(vec!["a", "b"]), |s| *s == "a" || *s == "b");
+    }
+
+    #[test]
+    fn map_generator() {
+        check(100, gen_map(gen_usize(0, 10), |n| n * 2), |&n| n % 2 == 0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut r1 = Pcg64::seed(5);
+        let mut r2 = Pcg64::seed(5);
+        let g = gen_vec(gen_f32(0.0, 1.0), 3, 3);
+        assert_eq!(g.generate(&mut r1), g.generate(&mut r2));
+    }
+}

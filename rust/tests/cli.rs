@@ -1,0 +1,86 @@
+//! CLI binary smoke tests (run the real `sjd` binary).
+
+use std::process::Command;
+
+fn artifacts() -> Option<String> {
+    let dir = std::env::var("SJD_ARTIFACTS").unwrap_or_else(|_| {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts")
+            .display()
+            .to_string()
+    });
+    if std::path::Path::new(&dir).join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts not built");
+        None
+    }
+}
+
+fn run(args: &[&str]) -> (bool, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_sjd"))
+        .args(args)
+        .output()
+        .expect("spawn sjd");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (out.status.success(), text)
+}
+
+#[test]
+fn help_lists_subcommands() {
+    let (ok, text) = run(&["--help"]);
+    assert!(!ok); // help goes through the error path with exit 2
+    for cmd in ["serve", "sample", "recon", "calibrate", "info"] {
+        assert!(text.contains(cmd), "missing '{cmd}' in help:\n{text}");
+    }
+}
+
+#[test]
+fn unknown_subcommand_fails() {
+    let (ok, text) = run(&["frobnicate"]);
+    assert!(!ok);
+    assert!(text.contains("unknown subcommand"));
+}
+
+#[test]
+fn info_lists_models() {
+    let Some(dir) = artifacts() else { return };
+    let (ok, text) = run(&["info", "--artifacts", &dir]);
+    assert!(ok, "{text}");
+    assert!(text.contains("tf10"), "{text}");
+    assert!(text.contains("artifacts:"));
+}
+
+#[test]
+fn sample_writes_png() {
+    let Some(dir) = artifacts() else { return };
+    let out = std::env::temp_dir().join("sjd_cli_sample.png");
+    let _ = std::fs::remove_file(&out);
+    let (ok, text) = run(&[
+        "sample",
+        "--artifacts",
+        &dir,
+        "--model",
+        "tf10",
+        "--batch",
+        "1",
+        "--out",
+        out.to_str().unwrap(),
+    ]);
+    assert!(ok, "{text}");
+    let bytes = std::fs::read(&out).expect("png written");
+    assert_eq!(&bytes[1..4], b"PNG");
+    assert!(text.contains("jacobi"));
+}
+
+#[test]
+fn recon_reports_mse() {
+    let Some(dir) = artifacts() else { return };
+    let (ok, text) = run(&["recon", "--artifacts", &dir, "--model", "tf10", "--batch", "1"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("reconstruction MSE"), "{text}");
+}

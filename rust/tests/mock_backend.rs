@@ -1,0 +1,373 @@
+//! Coordinator unit tests over a **mock backend** — an analytically
+//! invertible autoregressive flow implemented in pure rust, exposing the
+//! same artifact ABI the real engine serves. Lets us test decode logic
+//! (policy routing, permutations, Jacobi semantics, trace accounting)
+//! hermetically, without artifacts or PJRT.
+//!
+//! Mock flow per block k (AR domain), with coupling strength a_k:
+//!   forward: v_0 = u_0;  v_l = u_l − a_k · mean(u_{<l})
+//!   inverse: u_l = v_l + a_k · mean(u_{<l})   (triangular ⇒ Jacobi applies)
+
+use sjd::coordinator::jacobi::{jacobi_decode_block, JacobiConfig};
+use sjd::coordinator::policy::DecodePolicy;
+use sjd::coordinator::sampler::{SampleOptions, Sampler};
+use sjd::runtime::{Backend, HostTensor, ModelMeta};
+use sjd::tensor::Pcg64;
+use std::collections::BTreeMap;
+
+const K: usize = 4;
+const L: usize = 8;
+const D: usize = 3;
+const NL: usize = 1;
+const DM: usize = 4;
+
+struct MockFlow {
+    /// Per-block coupling strengths (index = block k).
+    a: [f32; K],
+}
+
+impl MockFlow {
+    fn new() -> Self {
+        MockFlow { a: [0.9, 0.2, 0.15, 0.6] }
+    }
+
+    /// s,g conditioner: g_l = a_k · mean over tokens < l (per-dim), s = 0.
+    fn g_at(&self, k: usize, z: &[f32], b: usize, l_idx: usize) -> Vec<f32> {
+        let a = self.a[k];
+        let mut g = vec![0.0f32; D];
+        if l_idx == 0 {
+            return g;
+        }
+        for li in 0..l_idx {
+            for di in 0..D {
+                g[di] += z[(b * L + li) * D + di];
+            }
+        }
+        for gi in g.iter_mut() {
+            *gi = a * *gi / l_idx as f32;
+        }
+        g
+    }
+
+    fn fwd(&self, k: usize, u: &[f32], batch: usize) -> Vec<f32> {
+        let mut v = vec![0.0f32; u.len()];
+        for b in 0..batch {
+            for l in 0..L {
+                let g = self.g_at(k, u, b, l);
+                for di in 0..D {
+                    let idx = (b * L + l) * D + di;
+                    v[idx] = u[idx] - g[di];
+                }
+            }
+        }
+        v
+    }
+
+    /// One Jacobi update of the inverse system (masked variant shifts the
+    /// prefix bound like eq 6).
+    fn jstep(&self, k: usize, z: &[f32], y: &[f32], o: usize, batch: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut z_next = vec![0.0f32; z.len()];
+        let mut resid = vec![0.0f32; batch];
+        for b in 0..batch {
+            for l in 0..L {
+                let bound = l.saturating_sub(o);
+                let g = if l == 0 { vec![0.0; D] } else { self.g_at_masked(k, z, b, l, bound) };
+                for di in 0..D {
+                    let idx = (b * L + l) * D + di;
+                    z_next[idx] = if l == 0 { y[idx] } else { y[idx] + g[di] };
+                    resid[b] = resid[b].max((z_next[idx] - z[idx]).abs());
+                }
+            }
+        }
+        (z_next, resid)
+    }
+
+    fn g_at_masked(&self, k: usize, z: &[f32], b: usize, l_idx: usize, bound: usize) -> Vec<f32> {
+        let a = self.a[k];
+        let mut g = vec![0.0f32; D];
+        let n = bound.max(1);
+        for li in 0..bound.max(1).min(l_idx) {
+            for di in 0..D {
+                g[di] += z[(b * L + li) * D + di];
+            }
+        }
+        for gi in g.iter_mut() {
+            *gi = a * *gi / n as f32;
+        }
+        g
+    }
+}
+
+/// Backend serving the mock flow under the standard artifact names.
+struct MockBackend {
+    flow: MockFlow,
+    calls: std::cell::RefCell<BTreeMap<String, usize>>,
+}
+
+impl MockBackend {
+    fn new() -> Self {
+        MockBackend { flow: MockFlow::new(), calls: Default::default() }
+    }
+
+    fn count(&self, name: &str) -> usize {
+        self.calls.borrow().get(name).copied().unwrap_or(0)
+    }
+}
+
+impl Backend for MockBackend {
+    fn call(&self, name: &str, inputs: &[HostTensor]) -> anyhow::Result<Vec<HostTensor>> {
+        *self.calls.borrow_mut().entry(name.to_string()).or_default() += 1;
+        let batch = 2usize;
+        if name.contains("block_jstep") {
+            let k = inputs[0].as_i32()?[0] as usize;
+            let z = inputs[1].as_f32()?;
+            let y = inputs[2].as_f32()?;
+            let o = inputs[3].as_i32()?[0] as usize;
+            let (zn, r) = self.flow.jstep(k, z, y, o, batch);
+            Ok(vec![
+                HostTensor::f32(inputs[1].shape(), zn),
+                HostTensor::f32(&[batch], r),
+            ])
+        } else if name.contains("block_fwd") {
+            let k = inputs[0].as_i32()?[0] as usize;
+            let u = inputs[1].as_f32()?;
+            Ok(vec![HostTensor::f32(inputs[1].shape(), self.flow.fwd(k, u, batch))])
+        } else if name.contains("block_seqstep") {
+            // Sequential step: maintain decoded prefix in the kv_k cache
+            // (slot [0, b, pos, 0..D]), mirroring the real cache contract.
+            let k = inputs[0].as_i32()?[0] as usize;
+            let u_prev = inputs[1].as_f32()?;
+            let v_tok = inputs[2].as_f32()?;
+            let pos = inputs[3].as_i32()?[0] as usize;
+            let mut kv_k = inputs[4].as_f32()?.to_vec();
+            let kv_v = inputs[5].as_f32()?.to_vec();
+            // Write u_prev (token at net position pos, i.e. u_{pos-1}) into
+            // the cache at pos-1.
+            if pos > 0 {
+                for b in 0..batch {
+                    for di in 0..D {
+                        kv_k[(b * L + (pos - 1)) * DM + di] = u_prev[b * D + di];
+                    }
+                }
+            }
+            // u_pos = v_pos + g(prefix) with prefix read from the cache.
+            let mut u_tok = vec![0.0f32; batch * D];
+            for b in 0..batch {
+                if pos == 0 {
+                    u_tok[b * D..(b + 1) * D].copy_from_slice(&v_tok[b * D..(b + 1) * D]);
+                } else {
+                    let a = self.flow.a[k];
+                    for di in 0..D {
+                        let mut g = 0.0;
+                        for li in 0..pos {
+                            g += kv_k[(b * L + li) * DM + di];
+                        }
+                        u_tok[b * D + di] = v_tok[b * D + di] + a * g / pos as f32;
+                    }
+                }
+            }
+            Ok(vec![
+                HostTensor::f32(&[batch, D], u_tok),
+                HostTensor::f32(inputs[4].shape(), kv_k),
+                HostTensor::f32(inputs[5].shape(), kv_v),
+            ])
+        } else {
+            anyhow::bail!("mock backend: unknown artifact '{name}'")
+        }
+    }
+
+    fn model_meta(&self, model: &str) -> anyhow::Result<ModelMeta> {
+        Ok(ModelMeta {
+            name: model.to_string(),
+            kind: "tarflow".into(),
+            seq_len: L,
+            blocks: K,
+            token_dim: D,
+            model_dim: DM,
+            layers_per_block: NL,
+            image_hwc: Some([4, 6, 1]), // 4×6×1 → (4/2)·(6/2) = 6... use patch 1
+            patch: 1,
+            noise_std: 0.0,
+            batch_sizes: vec![2],
+            extra: BTreeMap::new(),
+        })
+    }
+}
+
+fn mk_sampler(backend: &MockBackend) -> Sampler<'_, MockBackend> {
+    Sampler::new(backend, "mock", 2).expect("mock sampler")
+}
+
+fn randn(shape: &[usize], seed: u64) -> HostTensor {
+    let mut rng = Pcg64::seed(seed);
+    HostTensor::f32(shape, (0..shape.iter().product()).map(|_| rng.next_gaussian()).collect())
+}
+
+#[test]
+fn jacobi_converges_to_mock_inverse() {
+    let be = MockBackend::new();
+    let u = randn(&[2, L, D], 1);
+    let v_vec = be.flow.fwd(2, u.as_f32().unwrap(), 2);
+    let v = HostTensor::f32(&[2, L, D], v_vec);
+    let cfg = JacobiConfig { tau: 1e-6, ..Default::default() };
+    let (u_rec, stats) = jacobi_decode_block(&be, "mock_block_jstep_b2", 2, &v, L, &cfg, 0).unwrap();
+    let err = u
+        .as_f32()
+        .unwrap()
+        .iter()
+        .zip(u_rec.as_f32().unwrap())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(err < 1e-4, "err {err}");
+    assert!(stats.iterations <= L);
+    assert!(stats.converged);
+    // Residuals strictly decreasing for this linear triangular system.
+    for w in stats.residuals.windows(2) {
+        assert!(w[1] <= w[0] + 1e-6, "{:?}", stats.residuals);
+    }
+}
+
+#[test]
+fn weak_coupling_converges_faster_than_strong() {
+    // Blocks differ only in coupling strength a_k: stronger coupling ⇒ more
+    // iterations (the paper's redundancy heterogeneity, distilled).
+    let be = MockBackend::new();
+    let y = randn(&[2, L, D], 2);
+    let cfg = JacobiConfig { tau: 1e-4, ..Default::default() };
+    let (_, strong) = jacobi_decode_block(&be, "m_block_jstep", 0, &y, L, &cfg, 0).unwrap(); // a=0.9
+    let (_, weak) = jacobi_decode_block(&be, "m_block_jstep", 2, &y, L, &cfg, 0).unwrap(); // a=0.15
+    assert!(
+        weak.iterations < strong.iterations,
+        "weak {} vs strong {}",
+        weak.iterations,
+        strong.iterations
+    );
+}
+
+#[test]
+fn sequential_decode_matches_jacobi_fixed_point() {
+    let be = MockBackend::new();
+    let sampler = mk_sampler(&be);
+    let u = randn(&[2, L, D], 3);
+    let v_vec = be.flow.fwd(1, u.as_f32().unwrap(), 2);
+    let v = HostTensor::f32(&[2, L, D], v_vec);
+    let (u_seq, steps) = sampler.sequential_decode_block(1, &v).unwrap();
+    assert_eq!(steps, L);
+    let err = u
+        .as_f32()
+        .unwrap()
+        .iter()
+        .zip(u_seq.as_f32().unwrap())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(err < 1e-4, "sequential inverse error {err}");
+}
+
+#[test]
+fn policy_routes_blocks_correctly() {
+    let be = MockBackend::new();
+    let sampler = mk_sampler(&be);
+    let z = randn(&[2, L, D], 4);
+    let opts = SampleOptions {
+        policy: DecodePolicy::Selective { seq_blocks: 1 },
+        ..Default::default()
+    };
+    let out = sampler.decode_tokens(z, &opts).unwrap();
+    assert_eq!(out.traces.len(), K);
+    assert!(!out.traces[0].used_jacobi, "first decode position must be sequential");
+    for t in &out.traces[1..] {
+        assert!(t.used_jacobi);
+    }
+    // Sequential position consumed exactly L seqstep calls.
+    assert_eq!(be.count("mock_block_seqstep_b2"), L);
+    // Block indices run K-1 .. 0.
+    let blocks: Vec<usize> = out.traces.iter().map(|t| t.block).collect();
+    assert_eq!(blocks, vec![3, 2, 1, 0]);
+}
+
+#[test]
+fn uniform_jacobi_never_calls_seqstep() {
+    let be = MockBackend::new();
+    let sampler = mk_sampler(&be);
+    let z = randn(&[2, L, D], 5);
+    let opts = SampleOptions { policy: DecodePolicy::UniformJacobi, ..Default::default() };
+    let _ = sampler.decode_tokens(z, &opts).unwrap();
+    assert_eq!(be.count("mock_block_seqstep_b2"), 0);
+    assert!(be.count("mock_block_jstep_b2") >= K);
+}
+
+#[test]
+fn decode_then_encode_is_identity() {
+    // Full decode (all policies exact) followed by the rust-composed forward
+    // must reproduce the prior — validates permutation handling end to end
+    // against the mock flow.
+    let be = MockBackend::new();
+    let sampler = mk_sampler(&be);
+    let z0 = randn(&[2, L, D], 6);
+    let mut opts = SampleOptions { policy: DecodePolicy::UniformJacobi, ..Default::default() };
+    opts.jacobi.tau = 1e-7;
+    let out = sampler.decode_tokens(z0.clone(), &opts).unwrap();
+
+    // Re-encode: h_{k+1} = A_k(P_k h_k).
+    let mut h = out.tokens;
+    for k in 0..K {
+        let u = if k % 2 == 1 { sampler.reverse_tokens(&h).unwrap() } else { h };
+        h = sampler.block_forward(k, &u).unwrap();
+    }
+    let err = z0
+        .as_f32()
+        .unwrap()
+        .iter()
+        .zip(h.as_f32().unwrap())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(err < 1e-3, "decode∘encode identity error {err}");
+}
+
+#[test]
+fn masked_decode_deviates_more_with_larger_o() {
+    let be = MockBackend::new();
+    let sampler = mk_sampler(&be);
+    let u = randn(&[2, L, D], 7);
+    let v = HostTensor::f32(&[2, L, D], be.flow.fwd(0, u.as_f32().unwrap(), 2));
+    let cfg = JacobiConfig { tau: 1e-7, ..Default::default() };
+    let mut errs = Vec::new();
+    for o in [0usize, 2, 5] {
+        let (u_rec, _) = sampler.jacobi_decode(0, &v, &cfg, o).unwrap();
+        let err: f32 = u
+            .as_f32()
+            .unwrap()
+            .iter()
+            .zip(u_rec.as_f32().unwrap())
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f32>()
+            .sqrt();
+        errs.push(err);
+    }
+    assert!(errs[0] < 1e-3, "o=0 must be exact: {errs:?}");
+    assert!(errs[1] > errs[0] && errs[2] > errs[1], "monotone in o: {errs:?}");
+}
+
+#[test]
+fn trace_accounting_sums() {
+    let be = MockBackend::new();
+    let sampler = mk_sampler(&be);
+    let z = randn(&[2, L, D], 8);
+    let out = sampler.decode_tokens(z, &SampleOptions::default()).unwrap();
+    let jacobi_iters: usize =
+        out.traces.iter().filter(|t| t.used_jacobi).map(|t| t.steps).sum();
+    assert_eq!(out.total_jacobi_iters(), jacobi_iters);
+    assert_eq!(be.count("mock_block_jstep_b2"), jacobi_iters);
+    let decode_total: std::time::Duration = out.traces.iter().map(|t| t.wall).sum();
+    assert!(out.total_wall >= decode_total);
+}
+
+#[test]
+fn max_iters_cap_respected() {
+    let be = MockBackend::new();
+    let y = randn(&[2, L, D], 9);
+    let cfg = JacobiConfig { tau: 0.0, max_iters: Some(3), ..Default::default() };
+    let (_, stats) = jacobi_decode_block(&be, "m_block_jstep", 0, &y, L, &cfg, 0).unwrap();
+    assert_eq!(stats.iterations, 3);
+    assert!(!stats.converged);
+}

@@ -1,0 +1,65 @@
+//! Integration test for the python-AOT → rust-runtime round trip.
+//!
+//! Uses `artifacts/smoke.hlo.txt` — a Pallas (interpret=True) kernel
+//! `f(x, y) = x @ y + 2` lowered by the same path `aot.py` uses for the real
+//! model artifacts. Skipped (with a loud message) if artifacts are missing;
+//! `make artifacts` builds them.
+
+use sjd::runtime::{Engine, HostTensor, Manifest};
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[test]
+fn smoke_pallas_kernel_roundtrip() {
+    let dir = artifacts_dir();
+    let smoke = dir.join("smoke.hlo.txt");
+    if !smoke.exists() {
+        eprintln!("SKIP: {} missing — run `make artifacts`", smoke.display());
+        return;
+    }
+    // Build a manifest in-memory via a temp file so the engine path is the
+    // same one production uses.
+    let tmp = std::env::temp_dir().join("sjd_smoke_manifest");
+    std::fs::create_dir_all(&tmp).unwrap();
+    std::fs::copy(&smoke, tmp.join("smoke.hlo.txt")).unwrap();
+    std::fs::write(
+        tmp.join("manifest.json"),
+        r#"{
+          "artifacts": [
+            {"name": "smoke", "file": "smoke.hlo.txt",
+             "inputs": [
+               {"name": "x", "dtype": "f32", "shape": [2, 2]},
+               {"name": "y", "dtype": "f32", "shape": [2, 2]}
+             ],
+             "outputs": [
+               {"name": "out", "dtype": "f32", "shape": [2, 2]}
+             ]}
+          ],
+          "models": []
+        }"#,
+    )
+    .unwrap();
+
+    let manifest = Manifest::load(tmp.join("manifest.json")).unwrap();
+    let engine = Engine::with_manifest(manifest).unwrap();
+    assert!(engine.platform().to_lowercase().contains("cpu") || !engine.platform().is_empty());
+
+    let x = HostTensor::f32(&[2, 2], vec![1., 2., 3., 4.]);
+    let y = HostTensor::f32(&[2, 2], vec![1., 1., 1., 1.]);
+    let out = engine.call("smoke", &[x, y]).unwrap();
+    assert_eq!(out.len(), 1);
+    // matmul([[1,2],[3,4]], ones) + 2 = [[5,5],[9,9]]
+    assert_eq!(out[0].as_f32().unwrap(), &[5., 5., 9., 9.]);
+
+    // Stats recorded.
+    let stats = engine.stats();
+    assert_eq!(stats["smoke"].calls, 1);
+    assert!(stats["smoke"].compile_time.as_nanos() > 0);
+
+    // Shape validation fires.
+    let bad = HostTensor::f32(&[2, 3], vec![0.; 6]);
+    let y2 = HostTensor::f32(&[2, 2], vec![1.; 4]);
+    assert!(engine.call("smoke", &[bad, y2]).is_err());
+}

@@ -1,0 +1,152 @@
+//! Serving-stack integration: batcher + router workers + HTTP server,
+//! exercised over real TCP against real artifacts. Skips when artifacts are
+//! missing.
+
+use sjd::coordinator::batcher::Batcher;
+use sjd::coordinator::router::{Router, RouterConfig};
+use sjd::coordinator::sampler::SampleOptions;
+use sjd::coordinator::server::Server;
+use sjd::metrics::Registry;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::env::var("SJD_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"));
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts not built");
+        None
+    }
+}
+
+fn post(addr: &str, path: &str, body: &str) -> String {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    write!(
+        s,
+        "POST {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).unwrap();
+    out
+}
+
+fn get(addr: &str, path: &str) -> String {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    write!(s, "GET {path} HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).unwrap();
+    out
+}
+
+#[test]
+fn serve_generate_and_metrics_end_to_end() {
+    let Some(dir) = artifacts_dir() else { return };
+    let addr = "127.0.0.1:8497";
+    let registry = Registry::new();
+    let batcher = Batcher::new(1, Duration::from_millis(5));
+    let router = Router::start(
+        RouterConfig {
+            artifacts_dir: dir,
+            model: "tf10".into(),
+            batch_size: 1,
+            workers: 1,
+            options: SampleOptions::default(),
+        },
+        batcher.clone(),
+        registry.clone(),
+    )
+    .expect("router");
+
+    let server = Server::new(addr, batcher, registry.clone());
+    let stop = server.stop_flag();
+    let t = std::thread::spawn(move || server.run());
+    for _ in 0..100 {
+        if TcpStream::connect(addr).is_ok() {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // Health.
+    let h = get(addr, "/healthz");
+    assert!(h.starts_with("HTTP/1.1 200"), "{h}");
+
+    // Generate 2 images.
+    let resp = post(addr, "/generate", r#"{"n": 2, "seed": 5}"#);
+    assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+    let body = resp.split("\r\n\r\n").nth(1).unwrap();
+    let v = sjd::jsonx::parse(body).expect("json body");
+    let imgs = v.req_arr("images_png_b64").unwrap();
+    assert_eq!(imgs.len(), 2);
+    // Base64 payloads decode to PNG magic.
+    let b64 = imgs[0].as_str().unwrap();
+    assert!(b64.len() > 100);
+    assert!(b64.starts_with("iVBOR"), "not a PNG payload: {}", &b64[..16]);
+
+    // Determinism: same seed → identical payloads.
+    let resp2 = post(addr, "/generate", r#"{"n": 2, "seed": 5}"#);
+    let body2 = resp2.split("\r\n\r\n").nth(1).unwrap();
+    let v2 = sjd::jsonx::parse(body2).unwrap();
+    assert_eq!(
+        v.req_arr("images_png_b64").unwrap()[0],
+        v2.req_arr("images_png_b64").unwrap()[0],
+        "same seed must reproduce the same image"
+    );
+
+    // Metrics advanced.
+    let m = get(addr, "/metrics");
+    assert!(m.contains("sjd_images_generated"), "{m}");
+    assert!(m.contains("sjd_http_requests"));
+
+    // Bad request handled.
+    let bad = post(addr, "/generate", "{invalid json");
+    assert!(bad.starts_with("HTTP/1.1 400"), "{bad}");
+    let nf = get(addr, "/nope");
+    assert!(nf.starts_with("HTTP/1.1 404"));
+
+    // Shutdown.
+    stop.store(true, Ordering::SeqCst);
+    let _ = TcpStream::connect(addr);
+    let _ = t.join();
+    router.shutdown();
+}
+
+#[test]
+fn batcher_groups_concurrent_requests() {
+    let Some(dir) = artifacts_dir() else { return };
+    let registry = Registry::new();
+    // Batch of 8 with generous wait: 8 concurrent submissions form 1 batch.
+    let batcher = Batcher::new(8, Duration::from_millis(500));
+    let router = Router::start(
+        RouterConfig {
+            artifacts_dir: dir,
+            model: "tf10".into(),
+            batch_size: 8,
+            workers: 1,
+            options: SampleOptions::default(),
+        },
+        batcher.clone(),
+        registry.clone(),
+    )
+    .expect("router");
+
+    let handles: Vec<_> = (0..8).map(|i| batcher.submit(i, 9)).collect();
+    for h in handles {
+        let img = h.wait();
+        assert_eq!(img.ndim(), 3);
+    }
+    // One full batch, no padding.
+    let snap = registry.histogram("sjd_batch_fill").snapshot();
+    assert_eq!(snap.count, 1);
+    assert!(snap.max == 8, "batch fill {}", snap.max);
+    router.shutdown();
+}
