@@ -1,6 +1,7 @@
 //! §Perf micro-benches: per-call runtime overhead (marshal vs execute),
-//! jstep/seqstep unit costs, batcher formation latency, buffer pool, and RNG
-//! throughput. These feed the EXPERIMENTS.md §Perf iteration log.
+//! jstep/seqstep unit costs host-marshalled vs device-resident, batcher
+//! formation latency, buffer pool, and RNG throughput. These feed the
+//! EXPERIMENTS.md §Perf iteration log.
 
 mod common;
 
@@ -9,7 +10,7 @@ use sjd::benchkit::{time_fn, Report};
 use sjd::coordinator::batcher::Batcher;
 use sjd::coordinator::sampler::Sampler;
 use sjd::coordinator::state::BufferPool;
-use sjd::runtime::HostTensor;
+use sjd::runtime::{HostTensor, Value};
 use sjd::tensor::{Pcg64, Tensor};
 use std::time::Duration;
 
@@ -41,7 +42,8 @@ fn main() -> anyhow::Result<()> {
             format!("{:.2} ms", t.mean.as_secs_f64() * 1e3),
         ]);
 
-        // Marshal vs execute split from engine stats.
+        // Marshal vs execute split from engine stats — the host-marshalled
+        // baseline the Value API is measured against.
         engine.reset_stats();
         for _ in 0..iters {
             let _ = engine.call(
@@ -51,13 +53,50 @@ fn main() -> anyhow::Result<()> {
         }
         let stats = engine.stats();
         let s = &stats[&jstep];
+        let base_marshal_ms = s.marshal_time.as_secs_f64() * 1e3 / s.calls as f64;
         rows.push(vec![
-            "jstep exec / marshal split".into(),
+            "jstep exec / marshal split (host path)".into(),
             format!(
                 "{:.2} ms exec, {:.3} ms marshal",
                 s.exec_time.as_secs_f64() * 1e3 / s.calls as f64,
-                s.marshal_time.as_secs_f64() * 1e3 / s.calls as f64
+                base_marshal_ms
             ),
+        ]);
+
+        // Device-resident jstep chain — the jacobi_decode_block_v hot-loop
+        // shape: upload y/z⁰/scalars once, chain z device→device, sync only
+        // the [B] residual per iteration.
+        engine.reset_stats();
+        let t0 = std::time::Instant::now();
+        let k0 = engine.to_device(&HostTensor::scalar_i32(0))?;
+        let o0 = engine.to_device(&HostTensor::scalar_i32(0))?;
+        let y_dev = engine.to_device(&y)?;
+        let mut zv: Value = engine.to_device(&z)?;
+        for _ in 0..iters {
+            let outs = engine.call_v(&jstep, &[k0.clone(), zv, y_dev.clone(), o0.clone()])?;
+            let mut it = outs.into_iter();
+            zv = it.next().expect("z'");
+            let resid = it.next().expect("resid");
+            let _ = engine.to_host(resid)?;
+        }
+        let _ = engine.to_host(zv)?;
+        let chain_wall = t0.elapsed();
+        let stats = engine.stats();
+        let s = &stats[&jstep];
+        let chain_marshal_ms = s.marshal_time.as_secs_f64() * 1e3 / s.calls.max(1) as f64;
+        rows.push(vec![
+            "jstep device-chain (value path)".into(),
+            format!(
+                "{:.2} ms/iter wall, {:.3} ms marshal ({} device hits, {} host marshals)",
+                chain_wall.as_secs_f64() * 1e3 / iters as f64,
+                chain_marshal_ms,
+                s.device_hits,
+                s.host_marshals
+            ),
+        ]);
+        rows.push(vec![
+            "jstep marshal Δ (host − device)".into(),
+            format!("{:.3} ms/iter", base_marshal_ms - chain_marshal_ms),
         ]);
 
         let seqstep = format!("{model}_block_seqstep_b{batch}");
@@ -65,6 +104,7 @@ fn main() -> anyhow::Result<()> {
         let (nl, dm) = (meta.layers_per_block, meta.model_dim);
         let kv = HostTensor::f32(&[nl, batch, l, dm], vec![0.0; nl * batch * l * dm]);
         let tok = HostTensor::f32(&[batch, d], vec![0.0; batch * d]);
+        engine.reset_stats();
         let t = time_fn(3, iters, || {
             let _ = engine
                 .call(
@@ -84,6 +124,57 @@ fn main() -> anyhow::Result<()> {
             format!("seqstep call ({model} b{batch})"),
             format!("{:.2} ms", t.mean.as_secs_f64() * 1e3),
         ]);
+        let stats = engine.stats();
+        let seq_base_marshal_ms = {
+            let s = &stats[&seqstep];
+            s.marshal_time.as_secs_f64() * 1e3 / s.calls.max(1) as f64
+        };
+
+        // Device-resident seqstep chain — KV caches and u_prev never leave
+        // the device; only the [B, D] token slice crosses per step.
+        engine.reset_stats();
+        let t0 = std::time::Instant::now();
+        let k0 = engine.to_device(&HostTensor::scalar_i32(0))?;
+        let mut u_prev = engine.to_device(&tok)?;
+        let mut kv_k = engine.to_device(&kv)?;
+        let mut kv_v = engine.to_device(&kv)?;
+        let steps = iters.min(l);
+        for pos in 0..steps {
+            let outs = engine.call_v(
+                &seqstep,
+                &[
+                    k0.clone(),
+                    u_prev,
+                    Value::Host(tok.clone()),
+                    Value::Host(HostTensor::scalar_i32(pos as i32)),
+                    kv_k,
+                    kv_v,
+                ],
+            )?;
+            let mut it = outs.into_iter();
+            u_prev = it.next().expect("u_tok");
+            kv_k = it.next().expect("kv_k");
+            kv_v = it.next().expect("kv_v");
+        }
+        let _ = engine.to_host(u_prev)?;
+        let seq_chain_wall = t0.elapsed();
+        let stats = engine.stats();
+        let s = &stats[&seqstep];
+        let seq_chain_marshal_ms = s.marshal_time.as_secs_f64() * 1e3 / s.calls.max(1) as f64;
+        rows.push(vec![
+            "seqstep device-chain (value path)".into(),
+            format!(
+                "{:.2} ms/step wall, {:.3} ms marshal ({} device hits, {} host marshals)",
+                seq_chain_wall.as_secs_f64() * 1e3 / steps.max(1) as f64,
+                seq_chain_marshal_ms,
+                s.device_hits,
+                s.host_marshals
+            ),
+        ]);
+        rows.push(vec![
+            "seqstep marshal Δ (host − device)".into(),
+            format!("{:.3} ms/step", seq_base_marshal_ms - seq_chain_marshal_ms),
+        ]);
     }
 
     // --- host-side substrates ---
@@ -99,6 +190,17 @@ fn main() -> anyhow::Result<()> {
         pool.give_back(std::hint::black_box(b));
     });
     rows.push(vec!["buffer pool take+return (1.5 MB)".into(), format!("{:.0} µs", t.mean.as_secs_f64() * 1e6)]);
+
+    let t = time_fn(2, 200, || {
+        let v = pool
+            .device_zeroed(&[2, 8, 256, 96], |t| Ok(Value::Host(t.clone())))
+            .unwrap();
+        let _ = std::hint::black_box(v);
+    });
+    rows.push(vec![
+        "pool device_zeroed cached hit (1.5 MB)".into(),
+        format!("{:.0} µs", t.mean.as_secs_f64() * 1e6),
+    ]);
 
     let batcher = Batcher::new(8, Duration::from_millis(1));
     let t = time_fn(2, 100, || {

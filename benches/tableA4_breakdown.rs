@@ -1,7 +1,9 @@
 //! **Table A4**: per-layer runtime breakdown, sequential vs SJD. Under SJD
 //! the sequential layer 1 dominates total cost; Jacobi layers complete in a
 //! fraction of the per-layer sequential time. "Other" = noise generation,
-//! permutations, unpatchify.
+//! permutations, unpatchify. The extra "Marshal" row reports host↔device
+//! traffic time from the engine stats — the component the device-resident
+//! Value API shrinks (paper Table A4 buckets it under "Other").
 
 mod common;
 
@@ -21,39 +23,51 @@ fn main() -> anyhow::Result<()> {
     let mut report = Report::new(format!("Table A4 — per-layer runtime breakdown ({model})"));
     let mut rows = Vec::new();
 
-    let mut data: Vec<(String, Vec<f64>, f64)> = Vec::new();
+    let mut data: Vec<(String, Vec<f64>, f64, f64)> = Vec::new();
     for policy in [DecodePolicy::Sequential, DecodePolicy::Selective { seq_blocks: 1 }] {
         let label = policy.label();
         let _ = generate(&sampler, policy.clone(), 0.5, batch, 1)?; // warmup
+        engine.reset_stats();
         let run = generate(&sampler, policy.clone(), 0.5, batch * reps, 42)?;
+        // Sum marshal time across every artifact plus explicit transfers.
+        let stats = engine.stats();
+        let xfer = engine.transfer_stats();
+        let marshal = (stats.values().map(|s| s.marshal_time).sum::<std::time::Duration>()
+            + xfer.upload_time
+            + xfer.sync_time)
+            .as_secs_f64()
+            / run.batches as f64;
         let per_layer: Vec<f64> =
             (0..kk).map(|p| mean_f64(&run.per_position_wall[p])).collect();
         let other = run.other_wall / run.batches as f64;
-        data.push((label, per_layer, other));
+        data.push((label, per_layer, other, marshal));
     }
 
     for pos in 0..kk {
         let mut row = vec![format!("Layer {}", pos + 1)];
-        for (_, per_layer, _) in &data {
+        for (_, per_layer, _, _) in &data {
             row.push(format!("{:.3}", per_layer[pos]));
         }
         rows.push(row);
     }
     let mut other_row = vec!["Other".to_string()];
+    let mut marshal_row = vec!["Marshal (within the above)".to_string()];
     let mut total_row = vec!["Total".to_string()];
-    for (_, per_layer, other) in &data {
+    for (_, per_layer, other, marshal) in &data {
         other_row.push(format!("{other:.3}"));
+        marshal_row.push(format!("{marshal:.3}"));
         total_row.push(format!("{:.3}", per_layer.iter().sum::<f64>() + other));
     }
     rows.push(other_row);
+    rows.push(marshal_row);
     rows.push(total_row);
 
     let header: Vec<String> = std::iter::once("Component".to_string())
-        .chain(data.iter().map(|(l, _, _)| format!("{l} (s)")))
+        .chain(data.iter().map(|(l, _, _, _)| format!("{l} (s)")))
         .collect();
     let header_refs: Vec<&str> = header.iter().map(String::as_str).collect();
     report.table(&header_refs, &rows);
-    report.note("Paper shape: sequential layers all cost ≈ the same; under SJD layer 1 dominates and Jacobi layers are cheap.");
+    report.note("Paper shape: sequential layers all cost ≈ the same; under SJD layer 1 dominates and Jacobi layers are cheap. Marshal = host↔device traffic inside the layer/Other times; the device-resident Value API keeps it flat as batch grows.");
     report.finish();
     Ok(())
 }

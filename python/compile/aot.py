@@ -76,10 +76,10 @@ MAF_BATCHES = {"maf_ising": [256], "maf_img": [50]}
 # Lowering plumbing
 # ---------------------------------------------------------------------------
 
-def to_hlo_text(lowered) -> str:
+def to_hlo_text(lowered, return_tuple=True) -> str:
     mlir_mod = lowered.compiler_ir("stablehlo")
     comp = xc._xla.mlir.mlir_module_to_xla_computation(
-        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple)
     # print_large_constants=True is load-bearing: the default printer elides
     # big constants as `constant({...})`, which would silently strip the
     # baked model weights from the artifact.
@@ -100,20 +100,29 @@ class ArtifactWriter:
         self.models = []
         self.datasets = []
 
-    def lower(self, name, fn, in_specs, in_names, model=None):
-        """Trace `fn` at `in_specs`, write HLO text, record manifest entry."""
+    def lower(self, name, fn, in_specs, in_names, model=None, untupled=False):
+        """Trace `fn` at `in_specs`, write HLO text, record manifest entry.
+
+        ``untupled=True`` lowers with ``return_tuple=False`` (single-output
+        programs only): the HLO root is the bare array, so the rust engine
+        can keep the result buffer device-resident with no leaf-vs-tuple
+        ambiguity (see ``Engine::call_v``).
+        """
         t0 = time.time()
         lowered = jax.jit(fn).lower(*[spec(s, d) for s, d in in_specs])
-        text = to_hlo_text(lowered)
+        text = to_hlo_text(lowered, return_tuple=not untupled)
         fname = f"{name}.hlo.txt"
         (self.out_dir / fname).write_text(text)
         # Output signature from the traced result.
         out_tree = lowered.out_info
         outs = jax.tree_util.tree_leaves(out_tree)
+        if untupled and len(outs) != 1:
+            raise ValueError(f"{name}: untupled lowering requires exactly 1 output")
         entry = {
             "name": name,
             "file": fname,
             "model": model,
+            "untupled_outputs": untupled,
             "inputs": [
                 {"name": n, "dtype": _dtype_str(d), "shape": list(s)}
                 for (s, d), n in zip(in_specs, in_names)
@@ -198,6 +207,18 @@ def lower_tarflow(w: ArtifactWriter, cfg: tarflow.TarFlowConfig, params, batches
             [((), I32), ((b, L, D), jnp.float32)],
             ["k", "v"],
             model=cfg.name,
+        )
+        # Device-side inter-block permutation P_k (token reversal): lets the
+        # rust coordinator chain block outputs device→device without the
+        # host-fallback sync point (see Sampler::reverse_tokens_v). Lowered
+        # untupled so the output buffer is a chainable leaf.
+        w.lower(
+            f"{cfg.name}_reverse_b{b}",
+            lambda t: jnp.flip(t, axis=1),
+            [((b, L, D), jnp.float32)],
+            ["t"],
+            model=cfg.name,
+            untupled=True,
         )
         w.lower(
             f"{cfg.name}_block_seqstep_b{b}",

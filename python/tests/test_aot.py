@@ -69,7 +69,7 @@ class TestArtifactWriter:
         names = {a["name"] for a in manifest["artifacts"]}
         assert names == {
             "tiny_fwd_b1", "tiny_block_fwd_b1", "tiny_block_jstep_b1",
-            "tiny_block_seqfull_b1", "tiny_block_seqstep_b1"}
+            "tiny_block_seqfull_b1", "tiny_block_seqstep_b1", "tiny_reverse_b1"}
         for a in manifest["artifacts"]:
             assert (tmp_path / a["file"]).exists()
             assert all("shape" in t and "dtype" in t for t in a["inputs"])

@@ -6,10 +6,16 @@
 //! initialization strategy, the τ stopping rule on ‖z^t − z^{t−1}‖∞, the
 //! worst-case `L` iteration guard (Prop 3.2 guarantees exactness at `t = L`),
 //! and per-layer statistics for the selective policy / paper tables.
+//!
+//! The driver is **device-resident** ([`jacobi_decode_block_v`]): the block
+//! input `y` and the loop scalars are uploaded once, the iterate `z` chains
+//! device→device across iterations, and the only per-iteration host sync is
+//! the `[B]` residual needed for the τ test. [`jacobi_decode_block`] is the
+//! host-tensor convenience wrapper.
 
-use crate::runtime::{Backend, HostTensor};
+use crate::runtime::{Backend, HostTensor, Value};
 use crate::tensor::Pcg64;
-use anyhow::Result;
+use anyhow::{Context, Result};
 use std::time::{Duration, Instant};
 
 /// How `z⁰` is initialized (paper Fig 6 ablation).
@@ -64,43 +70,80 @@ pub struct JacobiStats {
     pub converged: bool,
 }
 
-/// Decode block `k` by Jacobi iteration.
+/// Decode block `k` by Jacobi iteration, keeping the iterate device-resident.
 ///
-/// `y` is the block input `z_{k+1}` with shape (B, L, D); the artifact
+/// `y` is the block input `z_{k+1}` with shape (B, L, D) — host values are
+/// uploaded exactly once, device values are used in place (the block-chaining
+/// path of `Sampler::decode_tokens`). The artifact
 /// `{model}_block_jstep_b{B}` computes one parallel update plus the residual
-/// max over the batch. `mask_o > 0` applies the paper's eq-6 dependency mask
-/// (used for the Fig 1/2 redundancy experiments); `mask_o = 0` is the exact
-/// update of Alg 1.
-pub fn jacobi_decode_block<B: Backend>(
+/// max over the batch; per iteration only that `[B]` residual crosses to the
+/// host. The final iterate is returned still device-resident. `mask_o > 0`
+/// applies the paper's eq-6 dependency mask (used for the Fig 1/2 redundancy
+/// experiments); `mask_o = 0` is the exact update of Alg 1.
+pub fn jacobi_decode_block_v<B: Backend>(
     engine: &B,
     artifact: &str,
     block: usize,
-    y: &HostTensor,
+    y: &Value,
     seq_len: usize,
     cfg: &JacobiConfig,
     mask_o: usize,
-) -> Result<(HostTensor, JacobiStats)> {
+) -> Result<(Value, JacobiStats)> {
+    jacobi_decode_block_v_init(engine, artifact, block, y, seq_len, cfg, mask_o, None)
+}
+
+/// [`jacobi_decode_block_v`] with an optional pre-built initial iterate.
+///
+/// When `z0` is provided it is used as `z⁰` verbatim — the caller must make
+/// it consistent with `cfg.init` (the `Sampler` passes its pool's cached
+/// device zeros for `InitStrategy::Zeros`, turning the per-block z⁰ upload
+/// into one upload per process lifetime).
+#[allow(clippy::too_many_arguments)]
+pub fn jacobi_decode_block_v_init<B: Backend>(
+    engine: &B,
+    artifact: &str,
+    block: usize,
+    y: &Value,
+    seq_len: usize,
+    cfg: &JacobiConfig,
+    mask_o: usize,
+    z0: Option<Value>,
+) -> Result<(Value, JacobiStats)> {
     let t0 = Instant::now();
-    let mut z = init_iterate(y, cfg);
+    // Pin the loop constants on device once.
+    let y_dev = match y {
+        Value::Host(t) => engine.to_device(t)?,
+        Value::Device(_) => y.clone(),
+    };
+    let k_scalar = engine.to_device(&HostTensor::scalar_i32(block as i32))?;
+    let o_scalar = engine.to_device(&HostTensor::scalar_i32(mask_o as i32))?;
+    let mut z = match (z0, cfg.init) {
+        (Some(z0), _) => z0,
+        // The iterate starts as another handle on y — no upload at all.
+        (None, InitStrategy::PrevLayer) => y_dev.clone(),
+        // Zeros/Normal only need the iterate's shape: build z⁰ host-side via
+        // the shared init_iterate (one source of truth) and upload it once.
+        (None, _) => {
+            let proto = HostTensor::f32(y_dev.shape(), vec![0.0; y_dev.numel()]);
+            engine.to_device(&init_iterate(&proto, cfg))?
+        }
+    };
+
     let cap = cfg.max_iters.unwrap_or(seq_len);
     let mut residuals = Vec::new();
     let mut converged = false;
-
     let mut iterations = 0;
     while iterations < cap {
-        let out = engine.call(
+        let outs = engine.call_v(
             artifact,
-            &[
-                HostTensor::scalar_i32(block as i32),
-                z,
-                y.clone(),
-                HostTensor::scalar_i32(mask_o as i32),
-            ],
+            &[k_scalar.clone(), z, y_dev.clone(), o_scalar.clone()],
         )?;
-        let mut it = out.into_iter();
-        let z_next = it.next().expect("jstep returns z'");
-        let resid_t = it.next().expect("jstep returns residual");
-        let resid = resid_t.as_f32()?.iter().copied().fold(0.0f32, f32::max);
+        let mut it = outs.into_iter();
+        let z_next = it.next().context("jstep returns z'")?;
+        let resid_v = it.next().context("jstep returns residual")?;
+        // The τ test is the only per-iteration sync: a [B] residual vector.
+        let resid =
+            engine.to_host(resid_v)?.as_f32()?.iter().copied().fold(0.0f32, f32::max);
         residuals.push(resid);
         z = z_next;
         iterations += 1;
@@ -116,7 +159,31 @@ pub fn jacobi_decode_block<B: Backend>(
     ))
 }
 
-/// Build the initial iterate `z⁰` per the configured strategy.
+/// Host-tensor convenience wrapper over [`jacobi_decode_block_v`]: uploads
+/// `y`, decodes, and syncs the final iterate back.
+pub fn jacobi_decode_block<B: Backend>(
+    engine: &B,
+    artifact: &str,
+    block: usize,
+    y: &HostTensor,
+    seq_len: usize,
+    cfg: &JacobiConfig,
+    mask_o: usize,
+) -> Result<(HostTensor, JacobiStats)> {
+    let (z, stats) = jacobi_decode_block_v(
+        engine,
+        artifact,
+        block,
+        &Value::Host(y.clone()),
+        seq_len,
+        cfg,
+        mask_o,
+    )?;
+    Ok((engine.to_host(z)?, stats))
+}
+
+/// Build the initial iterate `z⁰` per the configured strategy (host-side;
+/// [`jacobi_decode_block_v`] uploads its result for the Zeros/Normal cases).
 pub fn init_iterate(y: &HostTensor, cfg: &JacobiConfig) -> HostTensor {
     match cfg.init {
         InitStrategy::Zeros => HostTensor::f32(y.shape(), vec![0.0; y.len()]),

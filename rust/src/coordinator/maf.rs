@@ -7,7 +7,7 @@
 use super::jacobi::{InitStrategy, JacobiConfig, JacobiStats};
 use crate::runtime::{Backend, HostTensor, ModelMeta};
 use crate::tensor::{Pcg64, Tensor};
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 use std::time::{Duration, Instant};
 
 /// How a MAF sampling run decodes its layers.
@@ -88,7 +88,10 @@ impl<'e, B: Backend> MafSampler<'e, B> {
         Ok(HostTensor::f32(&shape, out))
     }
 
-    /// One layer inverse via Jacobi iteration.
+    /// One layer inverse via Jacobi iteration, device-resident: `y` and the
+    /// layer scalar are uploaded once, the iterate chains device→device, and
+    /// per iteration only the `[B]` residual syncs for the τ test (mirrors
+    /// `jacobi_decode_block_v`; the layer artifact takes no mask argument).
     fn layer_inverse(
         &self,
         k: usize,
@@ -97,17 +100,25 @@ impl<'e, B: Backend> MafSampler<'e, B> {
         cap: usize,
     ) -> Result<(HostTensor, JacobiStats)> {
         let t0 = Instant::now();
-        let mut z = HostTensor::f32(y.shape(), vec![0.0; y.len()]);
+        let y_dev = self.engine.to_device(y)?;
+        let k_scalar = self.engine.to_device(&HostTensor::scalar_i32(k as i32))?;
+        let mut z = self.engine.to_device(&HostTensor::f32(y.shape(), vec![0.0; y.len()]))?;
         let mut residuals = Vec::new();
         let mut converged = false;
         let mut iterations = 0;
         while iterations < cap {
-            let outs = self
-                .engine
-                .call(&self.art_jstep, &[HostTensor::scalar_i32(k as i32), z, y.clone()])?;
+            let outs =
+                self.engine.call_v(&self.art_jstep, &[k_scalar.clone(), z, y_dev.clone()])?;
             let mut it = outs.into_iter();
-            let z_next = it.next().unwrap();
-            let resid = it.next().unwrap().as_f32()?.iter().copied().fold(0.0f32, f32::max);
+            let z_next = it.next().context("maf jstep returns z'")?;
+            let resid_v = it.next().context("maf jstep returns residual")?;
+            let resid = self
+                .engine
+                .to_host(resid_v)?
+                .as_f32()?
+                .iter()
+                .copied()
+                .fold(0.0f32, f32::max);
             residuals.push(resid);
             z = z_next;
             iterations += 1;
@@ -116,7 +127,8 @@ impl<'e, B: Backend> MafSampler<'e, B> {
                 break;
             }
         }
-        Ok((z, JacobiStats { block: k, iterations, wall: t0.elapsed(), residuals, converged }))
+        let z_host = self.engine.to_host(z)?;
+        Ok((z_host, JacobiStats { block: k, iterations, wall: t0.elapsed(), residuals, converged }))
     }
 
     /// Sample a batch: z ~ N(0, I) → x through all layers.

@@ -19,11 +19,40 @@
 //! * `{m}_fwd_b{B}`         : `(x[B,H,W,C]) → (z[B,L,D], logdet[B])` —
 //!   full encode (python applies its own permutations; cross-checked against
 //!   the rust composition in integration tests).
+//! * `{m}_reverse_b{B}`     : `(t[B,L,D]) → t_rev[B,L,D]` — **optional**
+//!   device-side token reversal (the gather for `P_k`). Probed via
+//!   `Backend::has_artifact`; absent ⇒ the host fallback below.
+//!
+//! ## Value lifecycle (device residency)
+//!
+//! The decode hot paths run on the value-based backend API
+//! (`crate::runtime::Backend::call_v`); see the `runtime` module docs for the
+//! full rules. What lives where during `decode_tokens`:
+//!
+//! * The latent `z` is uploaded **once** at the top; block outputs chain
+//!   device→device across all K blocks; final tokens sync to host **once** at
+//!   the end.
+//! * Jacobi blocks keep the iterate and `y` on device; per iteration only
+//!   the `[B]` residual crosses for the τ test (`jacobi_decode_block_v`).
+//! * Sequential blocks keep `u_prev` and both KV caches (the largest tensors
+//!   in the system) device-resident across all L token steps; the initial
+//!   zero caches come from the pool's one-time-upload cache. Per token only
+//!   the `[B,D]` input slice goes up and the `[B,D]` output token comes down
+//!   (needed to assemble `u` — there is no device-side scatter artifact).
+//! * **Forced sync points** (documented, deliberate): (1) a sequential block
+//!   whose input arrived device-resident syncs it once up front to gather
+//!   per-token slices; (2) odd-`k` token reversal when the model lacks the
+//!   `{m}_reverse_b{B}` artifact — fetch, permute on host, re-upload on next
+//!   use.
+//! * Device handles are `Rc`-based and thread-pinned to the engine that
+//!   minted them — a `Sampler` and its values stay on one worker thread;
+//!   everything returned to other threads (`SampleOutput::tokens`, images)
+//!   is host data.
 
-use super::jacobi::{jacobi_decode_block, JacobiConfig, JacobiStats};
+use super::jacobi::{jacobi_decode_block_v_init, InitStrategy, JacobiConfig, JacobiStats};
 use super::policy::DecodePolicy;
 use super::state::BufferPool;
-use crate::runtime::{Backend, HostTensor, ModelMeta};
+use crate::runtime::{Backend, HostTensor, ModelMeta, Value};
 use crate::tensor::{Pcg64, Tensor};
 use anyhow::{bail, Context, Result};
 use std::time::{Duration, Instant};
@@ -96,6 +125,7 @@ pub struct Sampler<'e, B: Backend> {
     art_jstep: String,
     art_seqstep: String,
     art_seqfull: String,
+    art_reverse: String,
     pool: BufferPool,
 }
 
@@ -117,6 +147,7 @@ impl<'e, B: Backend> Sampler<'e, B> {
             art_jstep: format!("{model}_block_jstep_b{batch}"),
             art_seqstep: format!("{model}_block_seqstep_b{batch}"),
             art_seqfull: format!("{model}_block_seqfull_b{batch}"),
+            art_reverse: format!("{model}_reverse_b{batch}"),
             pool: BufferPool::new(),
         })
     }
@@ -155,16 +186,49 @@ impl<'e, B: Backend> Sampler<'e, B> {
         Ok(HostTensor::f32(&shape, out))
     }
 
+    /// Token reversal on a [`Value`]: a device-resident input uses the
+    /// model's device-side gather artifact when available (no host traffic);
+    /// otherwise — host input, or no such artifact — the documented host
+    /// path (fetch if needed → permute → the next call re-uploads).
+    pub fn reverse_tokens_v(&self, t: &Value) -> Result<Value> {
+        if t.is_device() && self.engine.has_artifact(&self.art_reverse) {
+            let outs = self.engine.call_v(&self.art_reverse, &[t.clone()])?;
+            return outs.into_iter().next().context("reverse output");
+        }
+        let host = match t {
+            Value::Host(h) => self.reverse_tokens(h)?,
+            Value::Device(_) => self.reverse_tokens(&self.engine.to_host(t.clone())?)?,
+        };
+        Ok(Value::Host(host))
+    }
+
     /// Decode one block sequentially with the KV cache (paper's baseline
-    /// path). Returns `u = A_k^{-1}(v)` and the number of steps (= L).
-    pub fn sequential_decode_block(&self, k: usize, v: &HostTensor) -> Result<(HostTensor, usize)> {
+    /// path), keeping `u_prev` and both KV caches device-resident across all
+    /// L steps. Returns `u = A_k^{-1}(v)` and the number of steps (= L).
+    ///
+    /// The per-token gather `v[:, pos, :]` is host-side, so a device-resident
+    /// `v` costs one up-front sync; after that only `[B, D]` slices (plus the
+    /// `pos` scalar) cross the boundary per step, and the `[NL, B, L, Dm]`
+    /// caches never do.
+    pub fn sequential_decode_block_v(&self, k: usize, v: &Value) -> Result<(Value, usize)> {
         let (b, l, d) = (self.batch, self.meta.seq_len, self.meta.token_dim);
         let (nl, dm) = (self.meta.layers_per_block, self.meta.model_dim);
-        let v_data = v.as_f32()?;
+        let synced;
+        let v_host: &HostTensor = match v {
+            Value::Host(t) => t,
+            Value::Device(_) => {
+                synced = self.engine.to_host(v.clone())?;
+                &synced
+            }
+        };
+        let v_data = v_host.as_f32()?;
 
-        let mut kv_k = self.pool.take_zeroed(&[nl, b, l, dm]);
-        let mut kv_v = self.pool.take_zeroed(&[nl, b, l, dm]);
-        let mut u_prev = HostTensor::f32(&[b, d], vec![0.0; b * d]);
+        let mut kv_k =
+            self.pool.device_zeroed(&[nl, b, l, dm], |t| self.engine.to_device(t))?;
+        let mut kv_v =
+            self.pool.device_zeroed(&[nl, b, l, dm], |t| self.engine.to_device(t))?;
+        let mut u_prev = self.pool.device_zeroed(&[b, d], |t| self.engine.to_device(t))?;
+        let k_scalar = self.engine.to_device(&HostTensor::scalar_i32(k as i32))?;
         let mut u_out = vec![0.0f32; b * l * d];
 
         for pos in 0..l {
@@ -176,32 +240,39 @@ impl<'e, B: Backend> Sampler<'e, B> {
             }
             let outs = self
                 .engine
-                .call(
+                .call_v(
                     &self.art_seqstep,
                     &[
-                        HostTensor::scalar_i32(k as i32),
+                        k_scalar.clone(),
                         u_prev,
-                        HostTensor::f32(&[b, d], v_tok),
-                        HostTensor::scalar_i32(pos as i32),
+                        Value::Host(HostTensor::f32(&[b, d], v_tok)),
+                        Value::Host(HostTensor::scalar_i32(pos as i32)),
                         kv_k,
                         kv_v,
                     ],
                 )
                 .with_context(|| format!("seqstep block {k} pos {pos}"))?;
             let mut it = outs.into_iter();
-            let u_tok = it.next().expect("u token");
-            kv_k = it.next().expect("kv_k");
-            kv_v = it.next().expect("kv_v");
-            let u_data = u_tok.as_f32()?;
+            let u_tok = it.next().context("u token")?;
+            kv_k = it.next().context("kv_k")?;
+            kv_v = it.next().context("kv_v")?;
+            // Only the [B, D] token syncs, for output assembly; u_prev chains
+            // the same handle device→device into the next step.
+            let u_host = self.engine.to_host(u_tok.clone())?;
+            let u_data = u_host.as_f32()?;
             for bi in 0..b {
                 let dstoff = (bi * l + pos) * d;
                 u_out[dstoff..dstoff + d].copy_from_slice(&u_data[bi * d..(bi + 1) * d]);
             }
             u_prev = u_tok;
         }
-        self.pool.give_back(kv_k);
-        self.pool.give_back(kv_v);
-        Ok((HostTensor::f32(&[b, l, d], u_out), l))
+        Ok((Value::Host(HostTensor::f32(&[b, l, d], u_out)), l))
+    }
+
+    /// Host-tensor wrapper over [`Sampler::sequential_decode_block_v`].
+    pub fn sequential_decode_block(&self, k: usize, v: &HostTensor) -> Result<(HostTensor, usize)> {
+        let (u, steps) = self.sequential_decode_block_v(k, &Value::Host(v.clone()))?;
+        Ok((self.engine.to_host(u)?, steps))
     }
 
     /// Whole-block sequential inverse as a single scan-fused artifact call
@@ -215,7 +286,7 @@ impl<'e, B: Backend> Sampler<'e, B> {
 
     /// Decode one block via the paper's eq-6 masked update iterated to its
     /// fixed point (`o > 0` ⇒ approximate masked inference; `o = 0` ⇒ exact
-    /// Jacobi decode of `A_k(z) = y`).
+    /// Jacobi decode of `A_k(z) = y`). Host-tensor convenience wrapper.
     pub fn jacobi_decode(
         &self,
         k: usize,
@@ -223,7 +294,37 @@ impl<'e, B: Backend> Sampler<'e, B> {
         cfg: &JacobiConfig,
         mask_o: usize,
     ) -> Result<(HostTensor, JacobiStats)> {
-        jacobi_decode_block(self.engine, &self.art_jstep, k, v, self.meta.seq_len, cfg, mask_o)
+        let (u, stats) = self.jacobi_decode_v(k, &Value::Host(v.clone()), cfg, mask_o)?;
+        Ok((self.engine.to_host(u)?, stats))
+    }
+
+    /// Value-based Jacobi decode: `v` stays (or becomes) device-resident and
+    /// the returned iterate is still on device — the block-chaining hot path.
+    /// The default Zeros init draws `z⁰` from the pool's device-zero cache
+    /// (one upload per shape per sampler, not one per block).
+    pub fn jacobi_decode_v(
+        &self,
+        k: usize,
+        v: &Value,
+        cfg: &JacobiConfig,
+        mask_o: usize,
+    ) -> Result<(Value, JacobiStats)> {
+        let z0 = if cfg.init == InitStrategy::Zeros {
+            let (b, l, d) = (self.batch, self.meta.seq_len, self.meta.token_dim);
+            Some(self.pool.device_zeroed(&[b, l, d], |t| self.engine.to_device(t))?)
+        } else {
+            None
+        };
+        jacobi_decode_block_v_init(
+            self.engine,
+            &self.art_jstep,
+            k,
+            v,
+            self.meta.seq_len,
+            cfg,
+            mask_o,
+            z0,
+        )
     }
 
     /// Ground-truth single-block forward `v = A_k(u)` (AR domain).
@@ -244,13 +345,19 @@ impl<'e, B: Backend> Sampler<'e, B> {
     }
 
     /// Full decode: latent tokens (B, L, D) → data tokens h_0 (B, L, D),
-    /// following the configured policy. This is the serving hot path.
+    /// following the configured policy. This is the serving hot path: the
+    /// latent is uploaded once, block outputs chain device→device across all
+    /// K blocks, and the tokens come back to the host once at the end (see
+    /// the module docs for the full residency map).
     pub fn decode_tokens(&self, z_latent: HostTensor, opts: &SampleOptions) -> Result<SampleOutput> {
         let t_start = Instant::now();
         let kk = self.meta.blocks;
         let mut traces = Vec::with_capacity(kk);
         let mut decode_wall = Duration::ZERO;
-        let mut z = z_latent;
+        // Start host-side: the first block uploads it if (and only if) its
+        // decode path runs on device — a sequential first block reads it
+        // directly, with no wasted round trip.
+        let mut z: Value = Value::Host(z_latent);
 
         for pos in 0..kk {
             let k = kk - 1 - pos; // block index in flow order
@@ -259,7 +366,7 @@ impl<'e, B: Backend> Sampler<'e, B> {
             let (u, trace) = if opts.policy.use_jacobi(pos, kk) {
                 let mut cfg = opts.jacobi.clone();
                 cfg.seed = opts.seed.wrapping_add(pos as u64);
-                let (u, stats) = self.jacobi_decode(k, &v, &cfg, opts.mask_o)?;
+                let (u, stats) = self.jacobi_decode_v(k, &v, &cfg, opts.mask_o)?;
                 let wall = t0.elapsed();
                 (
                     u,
@@ -274,9 +381,16 @@ impl<'e, B: Backend> Sampler<'e, B> {
                 )
             } else {
                 let (u, steps) = if opts.fused_sequential {
-                    (self.sequential_decode_block_fused(k, &v)?, self.meta.seq_len)
+                    let v_host = match &v {
+                        Value::Host(t) => t.clone(),
+                        Value::Device(_) => self.engine.to_host(v.clone())?,
+                    };
+                    (
+                        Value::Host(self.sequential_decode_block_fused(k, &v_host)?),
+                        self.meta.seq_len,
+                    )
                 } else {
-                    self.sequential_decode_block(k, &v)?
+                    self.sequential_decode_block_v(k, &v)?
                 };
                 let wall = t0.elapsed();
                 (
@@ -294,12 +408,13 @@ impl<'e, B: Backend> Sampler<'e, B> {
             decode_wall += trace.wall;
             traces.push(trace);
             // h_k = P_k(u): reversal for odd k.
-            z = if k % 2 == 1 { self.reverse_tokens(&u)? } else { u };
+            z = if k % 2 == 1 { self.reverse_tokens_v(&u)? } else { u };
         }
 
+        let tokens = self.engine.to_host(z)?;
         let total_wall = t_start.elapsed();
         Ok(SampleOutput {
-            tokens: z,
+            tokens,
             traces,
             total_wall,
             other_wall: total_wall.saturating_sub(decode_wall),
@@ -386,4 +501,3 @@ impl<'e, B: Backend> Sampler<'e, B> {
         Ok(HostTensor::f32(&[images.len(), h, w, c], data))
     }
 }
-

@@ -8,7 +8,11 @@
 //! The HTTP layer is deliberately small (request line + headers +
 //! content-length bodies, one request per connection unless keep-alive) —
 //! it exists so the serving loop is exercised end-to-end, not to be a
-//! general web server.
+//! general web server. It is still defensive where it must be: header
+//! size/count are capped so a client streaming headers can't grow memory
+//! unboundedly, error bodies go through the `jsonx` emitter so they stay
+//! valid JSON whatever the message contains, and malformed requests (400)
+//! are distinguished from internal failures (500).
 
 use super::batcher::Batcher;
 use crate::imageio::{self, Image};
@@ -20,6 +24,13 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 
+/// Total bytes allowed for the request line + all headers.
+const MAX_HEADER_BYTES: usize = 64 << 10;
+/// Maximum number of header lines.
+const MAX_HEADERS: usize = 128;
+/// Maximum request body size.
+const MAX_BODY_BYTES: usize = 64 << 20;
+
 /// A parsed HTTP request.
 #[derive(Debug)]
 pub struct HttpRequest {
@@ -28,12 +39,53 @@ pub struct HttpRequest {
     pub body: Vec<u8>,
 }
 
+/// Read one `\n`-terminated line without buffering more than `max` bytes.
+///
+/// Returns an empty string at a clean EOF (no bytes read), mirroring
+/// `read_line`'s 0-return so callers can treat it as end-of-headers.
+fn read_line_capped(reader: &mut impl BufRead, max: usize) -> Result<String> {
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        let (done, used) = {
+            let available = reader.fill_buf()?;
+            if available.is_empty() {
+                (true, 0)
+            } else {
+                match available.iter().position(|&b| b == b'\n') {
+                    Some(i) => {
+                        buf.extend_from_slice(&available[..=i]);
+                        (true, i + 1)
+                    }
+                    None => {
+                        buf.extend_from_slice(available);
+                        (false, available.len())
+                    }
+                }
+            }
+        };
+        reader.consume(used);
+        if buf.len() > max {
+            bail!("header line exceeds {max} bytes");
+        }
+        if done {
+            break;
+        }
+    }
+    String::from_utf8(buf).context("header not utf-8")
+}
+
 /// Parse one HTTP/1.1 request from a buffered stream.
+///
+/// Header bytes (request line included) are capped at [`MAX_HEADER_BYTES`]
+/// and header count at [`MAX_HEADERS`] — a client streaming an endless
+/// header section gets an error instead of unbounded buffering.
 pub fn parse_request(reader: &mut impl BufRead) -> Result<HttpRequest> {
-    let mut line = String::new();
-    if reader.read_line(&mut line)? == 0 {
+    let mut budget = MAX_HEADER_BYTES;
+    let line = read_line_capped(reader, budget)?;
+    if line.is_empty() {
         bail!("connection closed");
     }
+    budget = budget.saturating_sub(line.len());
     let mut parts = line.split_whitespace();
     let method = parts.next().context("missing method")?.to_string();
     let path = parts.next().context("missing path")?.to_string();
@@ -43,12 +95,20 @@ pub fn parse_request(reader: &mut impl BufRead) -> Result<HttpRequest> {
     }
 
     let mut content_length = 0usize;
+    let mut n_headers = 0usize;
     loop {
-        let mut h = String::new();
-        reader.read_line(&mut h)?;
+        if budget == 0 {
+            bail!("headers exceed {MAX_HEADER_BYTES} bytes");
+        }
+        let h = read_line_capped(reader, budget)?;
+        budget = budget.saturating_sub(h.len());
         let h = h.trim_end();
         if h.is_empty() {
             break;
+        }
+        n_headers += 1;
+        if n_headers > MAX_HEADERS {
+            bail!("too many headers (> {MAX_HEADERS})");
         }
         if let Some((k, v)) = h.split_once(':') {
             if k.eq_ignore_ascii_case("content-length") {
@@ -56,7 +116,7 @@ pub fn parse_request(reader: &mut impl BufRead) -> Result<HttpRequest> {
             }
         }
     }
-    if content_length > 64 << 20 {
+    if content_length > MAX_BODY_BYTES {
         bail!("body too large");
     }
     let mut body = vec![0u8; content_length];
@@ -87,6 +147,12 @@ pub fn write_response(
     Ok(())
 }
 
+/// JSON error body built through the `jsonx` emitter, so messages containing
+/// quotes/backslashes stay valid JSON (a `format!` template would not).
+pub fn error_json(err: &anyhow::Error) -> String {
+    jsonx::to_string_pretty(&Value::obj(vec![("error", Value::str(format!("{err:#}")))]))
+}
+
 /// Standard base64 (RFC 4648) encoding for PNG payloads in JSON responses.
 pub fn base64_encode(data: &[u8]) -> String {
     const TABLE: &[u8; 64] = b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+/";
@@ -100,6 +166,20 @@ pub fn base64_encode(data: &[u8]) -> String {
         out.push(if chunk.len() > 2 { TABLE[n as usize & 63] as char } else { '=' });
     }
     out
+}
+
+/// Parse and validate a `/generate` body → `(n, seed)`. Failures here are
+/// the client's fault (HTTP 400); failures past this point are ours (500).
+fn parse_generate_body(body: &[u8]) -> Result<(usize, u64)> {
+    let text = std::str::from_utf8(body).context("body not utf-8")?;
+    let v = if text.trim().is_empty() {
+        Value::obj(vec![])
+    } else {
+        jsonx::parse(text).context("bad json")?
+    };
+    let n = v.get("n").and_then(Value::as_usize).unwrap_or(1).clamp(1, 64);
+    let seed = v.get("seed").and_then(Value::as_usize).unwrap_or(0) as u64;
+    Ok((n, seed))
 }
 
 /// Serving front end bound to a batcher + metrics registry.
@@ -150,8 +230,19 @@ impl Server {
 
     fn handle(&self, stream: TcpStream) -> Result<()> {
         let mut reader = BufReader::new(stream.try_clone()?);
-        let req = parse_request(&mut reader)?;
         let mut stream = stream;
+        let req = match parse_request(&mut reader) {
+            Ok(r) => r,
+            Err(e) => {
+                // Malformed or oversized request framing is the client's
+                // fault: answer 400 (best effort — the peer may already be
+                // gone) instead of silently resetting the connection.
+                self.registry.counter("sjd_http_errors").inc();
+                let _ =
+                    write_response(&mut stream, 400, "application/json", error_json(&e).as_bytes());
+                return Err(e);
+            }
+        };
         self.registry.counter("sjd_http_requests").inc();
         match (req.method.as_str(), req.path.as_str()) {
             ("GET", "/healthz") => write_response(&mut stream, 200, "text/plain", b"ok"),
@@ -159,27 +250,33 @@ impl Server {
                 let text = self.registry.render_text();
                 write_response(&mut stream, 200, "text/plain", text.as_bytes())
             }
-            ("POST", "/generate") => match self.generate(&req.body) {
-                Ok(json) => write_response(&mut stream, 200, "application/json", json.as_bytes()),
+            ("POST", "/generate") => match parse_generate_body(&req.body) {
+                // Malformed request: the client's fault.
                 Err(e) => {
                     self.registry.counter("sjd_http_errors").inc();
-                    let msg = format!("{{\"error\": \"{e}\"}}");
-                    write_response(&mut stream, 400, "application/json", msg.as_bytes())
+                    write_response(&mut stream, 400, "application/json", error_json(&e).as_bytes())
                 }
+                Ok((n, seed)) => match self.generate(n, seed) {
+                    Ok(json) => {
+                        write_response(&mut stream, 200, "application/json", json.as_bytes())
+                    }
+                    // Internal failure (batcher, encode, ...): ours.
+                    Err(e) => {
+                        self.registry.counter("sjd_http_errors").inc();
+                        write_response(
+                            &mut stream,
+                            500,
+                            "application/json",
+                            error_json(&e).as_bytes(),
+                        )
+                    }
+                },
             },
             _ => write_response(&mut stream, 404, "text/plain", b"not found"),
         }
     }
 
-    fn generate(&self, body: &[u8]) -> Result<String> {
-        let text = std::str::from_utf8(body).context("body not utf-8")?;
-        let v = if text.trim().is_empty() {
-            Value::obj(vec![])
-        } else {
-            jsonx::parse(text).context("bad json")?
-        };
-        let n = v.get("n").and_then(Value::as_usize).unwrap_or(1).clamp(1, 64);
-        let seed = v.get("seed").and_then(Value::as_usize).unwrap_or(0) as u64;
+    fn generate(&self, n: usize, seed: u64) -> Result<String> {
         let rid = self.next_request_id.fetch_add(1, Ordering::SeqCst);
 
         // Submit n slots and wait for completion.
@@ -241,6 +338,71 @@ mod tests {
         assert!(parse_request(&mut r).is_err());
         let mut empty = std::io::BufReader::new(&b""[..]);
         assert!(parse_request(&mut empty).is_err());
+    }
+
+    #[test]
+    fn rejects_header_flood() {
+        // More headers than MAX_HEADERS, each small: must error, not loop
+        // buffering forever.
+        let mut raw = String::from("GET / HTTP/1.1\r\n");
+        for i in 0..(MAX_HEADERS + 10) {
+            raw.push_str(&format!("X-H{i}: v\r\n"));
+        }
+        raw.push_str("\r\n");
+        let mut r = std::io::BufReader::new(raw.as_bytes());
+        let err = parse_request(&mut r).unwrap_err().to_string();
+        assert!(err.contains("too many headers"), "{err}");
+    }
+
+    #[test]
+    fn rejects_oversized_header_section() {
+        // One giant header line past the byte budget.
+        let mut raw = String::from("GET / HTTP/1.1\r\nX-Big: ");
+        raw.push_str(&"a".repeat(MAX_HEADER_BYTES + 1024));
+        raw.push_str("\r\n\r\n");
+        let mut r = std::io::BufReader::new(raw.as_bytes());
+        assert!(parse_request(&mut r).is_err());
+    }
+
+    #[test]
+    fn rejects_unterminated_header_line() {
+        // A header that never ends (no newline at all): the cap must fire
+        // even though read_line would otherwise buffer indefinitely.
+        let mut raw = String::from("GET / HTTP/1.1\r\n");
+        raw.push_str(&"b".repeat(MAX_HEADER_BYTES + 4096));
+        let mut r = std::io::BufReader::new(raw.as_bytes());
+        assert!(parse_request(&mut r).is_err());
+    }
+
+    #[test]
+    fn header_budget_counts_request_line() {
+        // Exhaust the budget with the request line itself (long path).
+        let mut raw = String::from("GET /");
+        raw.push_str(&"p".repeat(MAX_HEADER_BYTES + 16));
+        raw.push_str(" HTTP/1.1\r\n\r\n");
+        let mut r = std::io::BufReader::new(raw.as_bytes());
+        assert!(parse_request(&mut r).is_err());
+    }
+
+    #[test]
+    fn error_json_stays_valid_with_quotes_and_backslashes() {
+        let err = anyhow::anyhow!("bad \"json\" in C:\\path\nline2");
+        let body = error_json(&err);
+        let parsed = jsonx::parse(&body).expect("error body must be valid JSON");
+        assert_eq!(
+            parsed.get("error").and_then(Value::as_str),
+            Some("bad \"json\" in C:\\path\nline2")
+        );
+    }
+
+    #[test]
+    fn parse_generate_body_defaults_and_errors() {
+        assert_eq!(parse_generate_body(b"").unwrap(), (1, 0));
+        assert_eq!(parse_generate_body(br#"{"n": 3, "seed": 9}"#).unwrap(), (3, 9));
+        // Clamped to [1, 64].
+        assert_eq!(parse_generate_body(br#"{"n": 1000}"#).unwrap().0, 64);
+        assert!(parse_generate_body(b"{invalid").is_err());
+        assert!(parse_generate_body(&[0xff, 0xfe]).is_err());
     }
 
     #[test]

@@ -1,19 +1,30 @@
 //! Per-request decode state: KV-cache buffers (pooled, reused across blocks)
 //! and memory accounting for the §D memory analysis.
 
-use crate::runtime::HostTensor;
+use crate::runtime::{HostTensor, Value};
 use std::cell::RefCell;
 
 /// A pool of reusable zeroed f32 buffers keyed by shape, used for the KV
-/// cache tensors of the sequential decode path. Sequential decode allocates
+/// cache tensors of the sequential decode path. Sequential decode consumes
 /// two (NL, B, L, Dm) caches per block; pooling keeps the hot loop
 /// allocation-free after the first block.
+///
+/// The pool hands out both host buffers ([`BufferPool::take_zeroed`]) and
+/// **device-resident** zero values ([`BufferPool::device_zeroed`]): artifacts
+/// are functional (they return fresh outputs and never alias their inputs),
+/// so one uploaded zero tensor per shape is immutable and reusable across
+/// blocks and requests — the initial KV caches cost one upload for the whole
+/// process lifetime instead of two host marshals per block.
 #[derive(Default)]
 pub struct BufferPool {
     free: RefCell<Vec<(Vec<usize>, Vec<f32>)>>,
-    /// High-water mark of bytes handed out simultaneously.
+    /// Immutable device-resident zero tensors, one per shape.
+    device_zeros: RefCell<Vec<(Vec<usize>, Value)>>,
+    /// High-water mark of host bytes handed out simultaneously.
     peak_bytes: RefCell<usize>,
     live_bytes: RefCell<usize>,
+    /// Bytes pinned on device by the zero-value cache.
+    device_bytes: RefCell<usize>,
 }
 
 impl BufferPool {
@@ -49,12 +60,41 @@ impl BufferPool {
         }
     }
 
+    /// A device-resident zero tensor of `shape`, uploaded at most once per
+    /// shape via `upload` and cached for the pool's lifetime.
+    ///
+    /// Callers must treat the returned value as immutable — the contract
+    /// holds because artifacts return fresh output buffers rather than
+    /// mutating inputs. Backends without device memory get a host value from
+    /// their `to_device` default; those are cached identically.
+    pub fn device_zeroed(
+        &self,
+        shape: &[usize],
+        upload: impl FnOnce(&HostTensor) -> anyhow::Result<Value>,
+    ) -> anyhow::Result<Value> {
+        if let Some((_, v)) =
+            self.device_zeros.borrow().iter().find(|(s, _)| s.as_slice() == shape)
+        {
+            return Ok(v.clone());
+        }
+        let numel: usize = shape.iter().product();
+        let v = upload(&HostTensor::f32(shape, vec![0.0f32; numel]))?;
+        *self.device_bytes.borrow_mut() += numel * 4;
+        self.device_zeros.borrow_mut().push((shape.to_vec(), v.clone()));
+        Ok(v)
+    }
+
     pub fn peak_bytes(&self) -> usize {
         *self.peak_bytes.borrow()
     }
 
     pub fn live_bytes(&self) -> usize {
         *self.live_bytes.borrow()
+    }
+
+    /// Bytes held on device by the cached zero values.
+    pub fn device_cache_bytes(&self) -> usize {
+        *self.device_bytes.borrow()
     }
 }
 
@@ -114,6 +154,25 @@ mod tests {
         pool.give_back(b);
         let _c = pool.take_zeroed(&[10]);
         assert_eq!(pool.peak_bytes(), 80); // unchanged
+    }
+
+    #[test]
+    fn device_zeros_upload_once_per_shape() {
+        let pool = BufferPool::new();
+        let uploads = std::cell::Cell::new(0usize);
+        let mk = |t: &HostTensor| {
+            uploads.set(uploads.get() + 1);
+            Ok(Value::Host(t.clone()))
+        };
+        let a = pool.device_zeroed(&[2, 4], mk).unwrap();
+        let b = pool.device_zeroed(&[2, 4], mk).unwrap();
+        let c = pool.device_zeroed(&[3], mk).unwrap();
+        assert_eq!(uploads.get(), 2, "one upload per distinct shape");
+        assert_eq!(a.shape(), &[2, 4]);
+        assert_eq!(b.shape(), &[2, 4]);
+        assert_eq!(c.shape(), &[3]);
+        assert_eq!(a.as_host().unwrap().as_f32().unwrap(), &[0.0; 8]);
+        assert_eq!(pool.device_cache_bytes(), (8 + 3) * 4);
     }
 
     #[test]

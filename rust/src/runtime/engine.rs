@@ -2,12 +2,15 @@
 //! listed in the manifest.
 //!
 //! `PjRtClient` is `Rc`-based and therefore **thread-pinned**: an `Engine`
-//! lives on one thread. Multi-worker serving (see `coordinator::router`)
-//! gives each worker thread its own `Engine`; requests/results cross threads
-//! as [`HostTensor`]s, which are plain `Send` data.
+//! lives on one thread, and so does every device-resident [`Value`] it mints
+//! (see the [module docs](super) for the full residency rules). Multi-worker
+//! serving (see `coordinator::router`) gives each worker thread its own
+//! `Engine`; requests/results cross threads as [`HostTensor`]s, which are
+//! plain `Send` data.
 
 use super::manifest::{ArtifactMeta, DType, Manifest};
-use super::HostTensor;
+use super::value::DeviceValue;
+use super::{HostTensor, Value};
 use anyhow::{bail, Context, Result};
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -21,8 +24,25 @@ pub struct CallStats {
     pub compile_time: Duration,
     pub calls: u64,
     pub exec_time: Duration,
-    /// Host→literal packing + literal→host unpacking time.
+    /// Host→literal packing + literal→host unpacking time, including the
+    /// host-arg promotion inside [`Engine::call_v`] and its tuple-output
+    /// fallback — every byte that crosses the host boundary on behalf of this
+    /// artifact is charged here.
     pub marshal_time: Duration,
+    /// Inputs consumed directly as device-resident buffers (no host marshal).
+    pub device_hits: u64,
+    /// Host inputs promoted to device buffers on call entry.
+    pub host_marshals: u64,
+}
+
+/// Engine-wide explicit transfer statistics ([`Engine::to_device`] /
+/// [`Engine::to_host`]), outside any one artifact's ledger.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TransferStats {
+    pub uploads: u64,
+    pub upload_time: Duration,
+    pub syncs: u64,
+    pub sync_time: Duration,
 }
 
 struct Compiled {
@@ -30,11 +50,40 @@ struct Compiled {
     meta: ArtifactMeta,
 }
 
-/// Input to [`Engine::call_buffers`]: host data or a device-resident buffer
-/// from a previous call.
-pub enum BufferArg<'a> {
-    Host(HostTensor),
-    Device(&'a xla::PjRtBuffer),
+/// Decompose a synced output literal into host tensors, handling both
+/// tuple-rooted artifacts (the `return_tuple=True` legacy lowering) and
+/// untupled single-output roots — discriminated by probing the literal's
+/// shape, never by assumption.
+fn literal_to_host_outputs(
+    name: &str,
+    meta: &ArtifactMeta,
+    lit: &xla::Literal,
+) -> Result<Vec<HostTensor>> {
+    if lit.array_shape().is_ok() {
+        if meta.outputs.len() != 1 {
+            bail!(
+                "artifact '{}' returned a single array but declares {} outputs",
+                name,
+                meta.outputs.len()
+            );
+        }
+        return Ok(vec![HostTensor::from_literal(lit)?]);
+    }
+    let parts = lit.to_tuple().context("decomposing output tuple")?;
+    if parts.len() != meta.outputs.len() {
+        bail!(
+            "artifact '{}' declared {} outputs but returned {}",
+            name,
+            meta.outputs.len(),
+            parts.len()
+        );
+    }
+    parts.iter().map(HostTensor::from_literal).collect()
+}
+
+/// Device-side payload of a [`Value::Device`] minted by this engine.
+struct EngineBuffer {
+    buf: xla::PjRtBuffer,
 }
 
 /// Loads HLO-text artifacts on demand, validates signatures, executes.
@@ -43,6 +92,7 @@ pub struct Engine {
     manifest: Manifest,
     cache: RefCell<HashMap<String, Rc<Compiled>>>,
     stats: RefCell<HashMap<String, CallStats>>,
+    transfer: RefCell<TransferStats>,
     /// When true, input shapes/dtypes are checked against the manifest on
     /// every call (cheap; disabled only in the innermost perf benches).
     pub validate_calls: bool,
@@ -62,6 +112,7 @@ impl Engine {
             manifest,
             cache: RefCell::new(HashMap::new()),
             stats: RefCell::new(HashMap::new()),
+            transfer: RefCell::new(TransferStats::default()),
             validate_calls: true,
         })
     }
@@ -137,11 +188,40 @@ impl Engine {
         Ok(())
     }
 
+    /// Validate value inputs — both variants carry shape/dtype metadata, so
+    /// device-resident inputs are checked without touching the device.
+    fn validate_values(&self, meta: &ArtifactMeta, inputs: &[Value]) -> Result<()> {
+        if inputs.len() != meta.inputs.len() {
+            bail!(
+                "artifact '{}' expects {} inputs, got {}",
+                meta.name,
+                meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (spec, v) in meta.inputs.iter().zip(inputs) {
+            if v.dtype() != spec.dtype {
+                bail!("artifact '{}' input '{}': dtype mismatch", meta.name, spec.name);
+            }
+            if v.shape() != spec.shape.as_slice() {
+                bail!(
+                    "artifact '{}' input '{}': shape {:?} != expected {:?}",
+                    meta.name,
+                    spec.name,
+                    v.shape(),
+                    spec.shape
+                );
+            }
+        }
+        Ok(())
+    }
+
     /// Execute an artifact with host inputs; returns host outputs.
     ///
     /// Artifacts are lowered with `return_tuple=True`, so the single result
     /// literal is a tuple which is decomposed into one `HostTensor` per
-    /// declared output.
+    /// declared output. This is the legacy convenience path; the serving hot
+    /// loops use [`Engine::call_v`] to keep chained state device-resident.
     pub fn call(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
         let c = self.compiled(name)?;
         if self.validate_calls {
@@ -164,17 +244,7 @@ impl Engine {
         let exec_time = t0.elapsed();
 
         let tm1 = Instant::now();
-        let parts = out_lit.to_tuple().context("decomposing output tuple")?;
-        if parts.len() != c.meta.outputs.len() {
-            bail!(
-                "artifact '{}' declared {} outputs but returned {}",
-                name,
-                c.meta.outputs.len(),
-                parts.len()
-            );
-        }
-        let outs: Vec<HostTensor> =
-            parts.iter().map(HostTensor::from_literal).collect::<Result<_>>()?;
+        let outs = literal_to_host_outputs(name, &c.meta, &out_lit)?;
         let marshal_out = tm1.elapsed();
 
         let mut stats = self.stats.borrow_mut();
@@ -182,67 +252,180 @@ impl Engine {
         s.calls += 1;
         s.exec_time += exec_time;
         s.marshal_time += marshal_in + marshal_out;
+        s.host_marshals += inputs.len() as u64;
         Ok(outs)
     }
 
-    /// Execute with a mix of host tensors and device-resident buffers.
+    /// Execute an artifact on a mix of host and device-resident [`Value`]s.
     ///
-    /// Positions listed in `buffers` are taken from the given
-    /// [`xla::PjRtBuffer`]s (outputs of a previous call) instead of being
-    /// marshalled from host memory — the perf-pass fast path for chained
-    /// state like sequential-decode KV caches. Returns raw output buffers;
-    /// use [`Engine::buffer_to_host`] for the ones you need on the host.
+    /// Host inputs are promoted to device buffers on entry (counted in
+    /// [`CallStats::host_marshals`] / `marshal_time`); device inputs are used
+    /// in place (counted in [`CallStats::device_hits`], costing no marshal
+    /// time) — the perf-pass fast path for chained state like Jacobi iterates
+    /// and sequential-decode KV caches.
     ///
-    /// The artifact must have been lowered WITHOUT tuple outputs flattened —
-    /// outputs come back as one tuple buffer per PJRT semantics, so this
-    /// path destructures via `to_literal_sync` only for requested outputs.
-    pub fn call_buffers(
-        &self,
-        name: &str,
-        inputs: &[BufferArg<'_>],
-    ) -> Result<Vec<xla::PjRtBuffer>> {
+    /// Output residency is decided without guessing at tuple semantics:
+    /// an artifact marked `untupled_outputs` in the manifest (single-output,
+    /// `return_tuple=False` lowering — e.g. `{m}_reverse_b{B}`) has its one
+    /// result buffer wrapped device-resident; a multi-output artifact whose
+    /// buffers came back one-per-output (the runtime untupled the root) is
+    /// wrapped device-resident likewise. Anything else — a tuple root the
+    /// runtime did not untuple, including every legacy single-output
+    /// artifact — takes a single forced sync that destructures the result
+    /// literal (probing leaf vs tuple by shape) and returns host values,
+    /// charged to `marshal_time`, so chaining degrades gracefully instead of
+    /// breaking.
+    pub fn call_v(&self, name: &str, inputs: &[Value]) -> Result<Vec<Value>> {
         let c = self.compiled(name)?;
+        if self.validate_calls {
+            self.validate_values(&c.meta, inputs)?;
+        }
+
         // Promote host args to device buffers (two passes so the borrows of
-        // `owned` are taken only after it stops growing).
+        // `owned` are taken only after it stops growing). Only actual
+        // promotions are timed — an all-device call adds zero marshal time.
+        let mut marshal_in = Duration::ZERO;
+        let mut host_marshals = 0u64;
         let mut owned: Vec<Option<xla::PjRtBuffer>> = Vec::with_capacity(inputs.len());
-        for arg in inputs {
-            owned.push(match arg {
-                BufferArg::Host(t) => {
+        for v in inputs {
+            owned.push(match v {
+                Value::Host(t) => {
+                    host_marshals += 1;
+                    let tm0 = Instant::now();
                     let lit = t.to_literal()?;
-                    Some(self.client.buffer_from_host_literal(None, &lit)?)
+                    let buf = self
+                        .client
+                        .buffer_from_host_literal(None, &lit)
+                        .with_context(|| format!("promoting host input for '{name}'"))?;
+                    marshal_in += tm0.elapsed();
+                    Some(buf)
                 }
-                BufferArg::Device(_) => None,
+                Value::Device(_) => None,
             });
         }
-        let borrowed: Vec<&xla::PjRtBuffer> = inputs
-            .iter()
-            .zip(&owned)
-            .map(|(arg, own)| match arg {
-                BufferArg::Host(_) => own.as_ref().unwrap(),
-                BufferArg::Device(b) => *b,
-            })
-            .collect();
+
+        let mut borrowed: Vec<&xla::PjRtBuffer> = Vec::with_capacity(inputs.len());
+        for (v, own) in inputs.iter().zip(&owned) {
+            borrowed.push(match v {
+                Value::Host(_) => own.as_ref().unwrap(),
+                Value::Device(d) => {
+                    let eb = d.downcast::<EngineBuffer>().ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "artifact '{name}': device input was not minted by this engine"
+                        )
+                    })?;
+                    &eb.buf
+                }
+            });
+        }
+
         let t0 = Instant::now();
-        let result = c.exe.execute_b::<&xla::PjRtBuffer>(&borrowed)?;
+        let result = c
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(&borrowed)
+            .with_context(|| format!("executing artifact '{name}'"))?;
         let exec_time = t0.elapsed();
+        let bufs: Vec<xla::PjRtBuffer> = result.into_iter().next().unwrap_or_default();
+
+        let mut marshal_out = Duration::ZERO;
+        let wrap_device = (c.meta.untupled_outputs && c.meta.outputs.len() == 1)
+            || c.meta.outputs.len() > 1;
+        let outs: Vec<Value> = if bufs.len() == c.meta.outputs.len() && wrap_device {
+            // Unambiguously one leaf buffer per declared output (untupled
+            // root, or a runtime that untupled a multi-output root): wrap
+            // device-resident.
+            bufs.into_iter()
+                .zip(&c.meta.outputs)
+                .map(|(buf, spec)| {
+                    Value::Device(DeviceValue::new(
+                        spec.shape.clone(),
+                        spec.dtype,
+                        Rc::new(EngineBuffer { buf }),
+                    ))
+                })
+                .collect()
+        } else if bufs.len() == 1 {
+            // Tuple root the runtime did not untuple, or a legacy
+            // single-output artifact (leaf vs tuple-of-1 is undecidable
+            // without inspection): forced sync point, probed by shape.
+            let tm1 = Instant::now();
+            let lit = bufs[0]
+                .to_literal_sync()
+                .with_context(|| format!("fetching output of '{name}'"))?;
+            let host: Vec<Value> = literal_to_host_outputs(name, &c.meta, &lit)?
+                .into_iter()
+                .map(Value::Host)
+                .collect();
+            marshal_out = tm1.elapsed();
+            host
+        } else {
+            bail!(
+                "artifact '{}' returned {} buffers, expected {}",
+                name,
+                bufs.len(),
+                c.meta.outputs.len()
+            );
+        };
+
         let mut stats = self.stats.borrow_mut();
         let s = stats.entry(name.to_string()).or_default();
         s.calls += 1;
         s.exec_time += exec_time;
-        drop(stats);
-        Ok(result.into_iter().next().unwrap_or_default())
+        s.marshal_time += marshal_in + marshal_out;
+        s.host_marshals += host_marshals;
+        s.device_hits += inputs.len() as u64 - host_marshals;
+        Ok(outs)
     }
 
-    /// Fetch one output buffer to the host, decomposing the result tuple.
-    pub fn tuple_outputs_to_host(&self, buf: &xla::PjRtBuffer) -> Result<Vec<HostTensor>> {
-        let lit = buf.to_literal_sync()?;
-        let parts = lit.to_tuple()?;
-        parts.iter().map(HostTensor::from_literal).collect()
+    /// Upload a host tensor to the device once, for reuse across calls.
+    pub fn to_device(&self, t: &HostTensor) -> Result<Value> {
+        let tm0 = Instant::now();
+        let lit = t.to_literal()?;
+        let buf = self
+            .client
+            .buffer_from_host_literal(None, &lit)
+            .context("uploading host tensor")?;
+        let dtype = match t {
+            HostTensor::F32 { .. } => DType::F32,
+            HostTensor::I32 { .. } => DType::I32,
+        };
+        let mut xfer = self.transfer.borrow_mut();
+        xfer.uploads += 1;
+        xfer.upload_time += tm0.elapsed();
+        Ok(Value::Device(DeviceValue::new(
+            t.shape().to_vec(),
+            dtype,
+            Rc::new(EngineBuffer { buf }),
+        )))
+    }
+
+    /// Sync a value to the host — a forced synchronization point.
+    pub fn to_host(&self, v: Value) -> Result<HostTensor> {
+        match v {
+            Value::Host(t) => Ok(t),
+            Value::Device(d) => {
+                let eb = d
+                    .downcast::<EngineBuffer>()
+                    .context("device value was not minted by this engine")?;
+                let tm0 = Instant::now();
+                let lit = eb.buf.to_literal_sync().context("syncing device buffer")?;
+                let t = HostTensor::from_literal(&lit)?;
+                let mut xfer = self.transfer.borrow_mut();
+                xfer.syncs += 1;
+                xfer.sync_time += tm0.elapsed();
+                Ok(t)
+            }
+        }
     }
 
     /// Snapshot of per-artifact statistics.
     pub fn stats(&self) -> HashMap<String, CallStats> {
         self.stats.borrow().clone()
+    }
+
+    /// Snapshot of explicit upload/sync statistics.
+    pub fn transfer_stats(&self) -> TransferStats {
+        *self.transfer.borrow()
     }
 
     /// Reset call statistics (keeps compile times).
@@ -251,6 +434,9 @@ impl Engine {
             s.calls = 0;
             s.exec_time = Duration::ZERO;
             s.marshal_time = Duration::ZERO;
+            s.device_hits = 0;
+            s.host_marshals = 0;
         }
+        *self.transfer.borrow_mut() = TransferStats::default();
     }
 }

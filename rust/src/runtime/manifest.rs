@@ -58,6 +58,11 @@ pub struct ArtifactMeta {
     pub outputs: Vec<TensorSpec>,
     /// Model this artifact belongs to (e.g. "tf10"), if any.
     pub model: Option<String>,
+    /// Root lowered WITHOUT a result tuple (`return_tuple=False`, single
+    /// output only). Lets `Engine::call_v` wrap the output buffer as a
+    /// chainable device value with no leaf-vs-tuple ambiguity; tuple-rooted
+    /// legacy artifacts leave this false.
+    pub untupled_outputs: bool,
 }
 
 /// Model-level metadata (mirrors the python config that trained it).
@@ -134,6 +139,10 @@ impl Manifest {
                     .collect::<Result<Vec<_>>>()
                     .with_context(|| format!("artifact '{name}' outputs"))?,
                 model: a.get("model").and_then(Value::as_str).map(str::to_string),
+                untupled_outputs: a
+                    .get("untupled_outputs")
+                    .and_then(Value::as_bool)
+                    .unwrap_or(false),
             };
             artifacts.insert(name, meta);
         }
@@ -284,6 +293,7 @@ mod tests {
             r#"{
               "artifacts": [
                 {"name": "a", "file": "a.hlo.txt", "model": "m1",
+                 "untupled_outputs": true,
                  "inputs": [{"name": "x", "dtype": "f32", "shape": [2, 3]}],
                  "outputs": [{"name": "y", "dtype": "f32", "shape": [2, 3]}]}
               ],
@@ -299,6 +309,7 @@ mod tests {
         let a = m.artifact("a").unwrap();
         assert_eq!(a.inputs[0].shape, vec![2, 3]);
         assert_eq!(a.inputs[0].dtype, DType::F32);
+        assert!(a.untupled_outputs);
         let mm = m.model("m1").unwrap();
         assert_eq!(mm.seq_len, 64);
         assert_eq!(mm.image_hwc, Some([16, 16, 3]));

@@ -1,0 +1,144 @@
+//! [`Value`]: the unit of data flowing through a [`crate::runtime::Backend`].
+//!
+//! A value is either host-resident data ([`HostTensor`]) or a device-resident
+//! handle ([`DeviceValue`]) produced by a previous backend call. Device
+//! handles are opaque to the coordinator: only the backend that minted one
+//! can execute with it or sync it back (`Engine` stores a PJRT buffer, the
+//! test mock stores a plain tensor). Shape and dtype metadata ride along so
+//! drivers can validate and allocate without a device round trip.
+//!
+//! Device handles are reference-counted with [`Rc`] and therefore inherit the
+//! engine's thread pinning: a `Value::Device` must stay on the thread of the
+//! backend that created it. Cross-thread traffic (router workers, HTTP
+//! responses) goes through [`Backend::to_host`](crate::runtime::Backend),
+//! which yields plain `Send` [`HostTensor`]s.
+
+use super::manifest::DType;
+use super::HostTensor;
+use std::any::Any;
+use std::fmt;
+use std::rc::Rc;
+
+/// A device-resident tensor handle minted by a backend.
+///
+/// Cloning is cheap (one `Rc` bump) and never copies device memory; the
+/// underlying buffer is freed when the last clone drops.
+#[derive(Clone)]
+pub struct DeviceValue {
+    shape: Vec<usize>,
+    dtype: DType,
+    handle: Rc<dyn Any>,
+}
+
+impl DeviceValue {
+    /// Wrap a backend-specific handle with its tensor metadata.
+    pub fn new(shape: Vec<usize>, dtype: DType, handle: Rc<dyn Any>) -> Self {
+        DeviceValue { shape, dtype, handle }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn dtype(&self) -> DType {
+        self.dtype
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Borrow the backend-specific payload, if it is a `T`.
+    ///
+    /// Returns `None` when the value was minted by a different backend —
+    /// callers should surface that as an error rather than panic.
+    pub fn downcast<T: 'static>(&self) -> Option<&T> {
+        self.handle.downcast_ref::<T>()
+    }
+}
+
+impl fmt::Debug for DeviceValue {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("DeviceValue")
+            .field("shape", &self.shape)
+            .field("dtype", &self.dtype)
+            .finish_non_exhaustive()
+    }
+}
+
+/// Host data or a device-resident handle — what backend calls consume and
+/// produce. See the [module docs](self) for the residency rules.
+#[derive(Clone, Debug)]
+pub enum Value {
+    Host(HostTensor),
+    Device(DeviceValue),
+}
+
+impl Value {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::Host(t) => t.shape(),
+            Value::Device(d) => d.shape(),
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Value::Host(HostTensor::F32 { .. }) => DType::F32,
+            Value::Host(HostTensor::I32 { .. }) => DType::I32,
+            Value::Device(d) => d.dtype(),
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn is_device(&self) -> bool {
+        matches!(self, Value::Device(_))
+    }
+
+    /// Borrow the host tensor if this value is host-resident.
+    pub fn as_host(&self) -> Option<&HostTensor> {
+        match self {
+            Value::Host(t) => Some(t),
+            Value::Device(_) => None,
+        }
+    }
+}
+
+impl From<HostTensor> for Value {
+    fn from(t: HostTensor) -> Self {
+        Value::Host(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_value_metadata() {
+        let v = Value::from(HostTensor::f32(&[2, 3], vec![0.0; 6]));
+        assert_eq!(v.shape(), &[2, 3]);
+        assert_eq!(v.dtype(), DType::F32);
+        assert_eq!(v.numel(), 6);
+        assert!(!v.is_device());
+        assert!(v.as_host().is_some());
+    }
+
+    #[test]
+    fn device_value_downcast_and_clone() {
+        let d = DeviceValue::new(vec![4], DType::I32, Rc::new(42u32));
+        let v = Value::Device(d.clone());
+        assert_eq!(v.shape(), &[4]);
+        assert_eq!(v.dtype(), DType::I32);
+        assert!(v.is_device());
+        assert!(v.as_host().is_none());
+        assert_eq!(d.downcast::<u32>(), Some(&42));
+        assert_eq!(d.downcast::<i64>(), None);
+        // Clones share the payload.
+        let d2 = d.clone();
+        assert!(Rc::ptr_eq(&d.handle, &d2.handle));
+    }
+}

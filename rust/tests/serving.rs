@@ -121,6 +121,52 @@ fn serve_generate_and_metrics_end_to_end() {
 }
 
 #[test]
+fn server_answers_malformed_requests_without_backend() {
+    // The HTTP front end's defensive paths need no artifacts: header-cap
+    // violations and bad JSON must get a 400 response (not a silent
+    // connection reset), with a body that is itself valid JSON.
+    let addr = "127.0.0.1:8499";
+    let registry = Registry::new();
+    let batcher = Batcher::new(1, Duration::from_millis(5));
+    let server = Server::new(addr, batcher, registry);
+    let stop = server.stop_flag();
+    let t = std::thread::spawn(move || server.run());
+    for _ in 0..100 {
+        if TcpStream::connect(addr).is_ok() {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // Header flood → answered 400.
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut req = String::from("GET /healthz HTTP/1.1\r\n");
+    for i in 0..200 {
+        req.push_str(&format!("X-H{i}: v\r\n"));
+    }
+    req.push_str("\r\n");
+    s.write_all(req.as_bytes()).unwrap();
+    let mut out = String::new();
+    let _ = s.read_to_string(&mut out);
+    assert!(out.starts_with("HTTP/1.1 400"), "{out}");
+
+    // Bad JSON body → 400, and the error body parses as JSON.
+    let resp = post(addr, "/generate", "{invalid json");
+    assert!(resp.starts_with("HTTP/1.1 400"), "{resp}");
+    let body = resp.split("\r\n\r\n").nth(1).unwrap();
+    assert!(sjd::jsonx::parse(body).is_ok(), "error body must be valid JSON: {body}");
+
+    // Well-formed requests still served.
+    let h = get(addr, "/healthz");
+    assert!(h.starts_with("HTTP/1.1 200"), "{h}");
+
+    stop.store(true, Ordering::SeqCst);
+    let _ = TcpStream::connect(addr);
+    let _ = t.join();
+}
+
+#[test]
 fn batcher_groups_concurrent_requests() {
     let Some(dir) = artifacts_dir() else { return };
     let registry = Registry::new();
