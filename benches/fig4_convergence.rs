@@ -10,7 +10,8 @@ mod common;
 use common::*;
 use sjd::benchkit::Report;
 use sjd::coordinator::jacobi::{init_iterate, JacobiConfig};
-use sjd::coordinator::sampler::Sampler;
+use sjd::coordinator::policy::DecodePolicy;
+use sjd::coordinator::sampler::{SampleOptions, Sampler};
 use sjd::runtime::HostTensor;
 use sjd::tensor::Pcg64;
 
@@ -91,6 +92,39 @@ fn main() -> anyhow::Result<()> {
     }
 
     report.note("Paper shape: all layers ≪ L iterations to near-zero error; the first generation layer is markedly slower.");
+
+    // Position-update accounting at the paper-default τ: the convergence
+    // curves above translate into total work — windowed GS-Jacobi stops
+    // re-updating the converged prefix, UJD/SJD do not (detailed sweep in
+    // `benches/gs_windows.rs`).
+    let mut policies = vec![
+        DecodePolicy::UniformJacobi,
+        DecodePolicy::Selective { seq_blocks: 1 },
+    ];
+    if sampler.has_gs_artifact() {
+        policies.push(DecodePolicy::GsJacobi { windows: 4 });
+    } else {
+        report.note("(windowed jstep artifact not lowered — GS-Jacobi row skipped)");
+    }
+    let mut rows = Vec::new();
+    for policy in policies {
+        let label = policy.label();
+        let opts = SampleOptions { policy, ..Default::default() };
+        let mut rng = Pcg64::seed(22);
+        let z = sampler.sample_prior(&mut rng);
+        let out = sampler.decode_tokens(z, &opts)?;
+        let calls: usize = out.traces.iter().map(|t| t.steps).sum();
+        println!(
+            "{label:>14}: {} position-updates, {calls} step calls at τ = 0.5",
+            out.total_position_updates()
+        );
+        rows.push(vec![
+            label,
+            out.total_position_updates().to_string(),
+            calls.to_string(),
+        ]);
+    }
+    report.table(&["policy", "position-updates (τ = 0.5)", "step calls"], &rows);
     report.finish();
     Ok(())
 }

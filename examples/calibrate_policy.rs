@@ -1,8 +1,11 @@
 //! Adaptive policy calibration: measure per-block sequential vs Jacobi cost,
-//! derive a per-block policy, and compare it against the paper's static SJD.
+//! derive a per-block policy (including GS-Jacobi window counts), and
+//! compare it against the paper's static SJD.
 //!
-//! Demonstrates the `DecodePolicy::Custom` path — on models whose redundancy
-//! profile differs from "first block only", calibration can beat static SJD.
+//! Demonstrates the `DecodePolicy::Custom` and `DecodePolicy::PerBlock`
+//! paths — on models whose redundancy profile differs from "first block
+//! only", calibration can beat static SJD, and window-aware calibration cuts
+//! position-updates further on strongly coupled blocks.
 //!
 //! ```bash
 //! cargo run --release --example calibrate_policy [artifacts] [model]
@@ -10,7 +13,7 @@
 
 use anyhow::Result;
 use sjd::coordinator::jacobi::JacobiConfig;
-use sjd::coordinator::policy::{calibrate, DecodePolicy};
+use sjd::coordinator::policy::{calibrate, calibrate_windows, DecodePolicy};
 use sjd::coordinator::sampler::{SampleOptions, Sampler};
 use sjd::runtime::Engine;
 use sjd::tensor::Pcg64;
@@ -46,14 +49,18 @@ fn main() -> Result<()> {
         h = if k % 2 == 1 { sampler.reverse_tokens(&u)? } else { u };
     }
     let adaptive = calibrate(&jstats, &seq_walls);
-    println!("calibrated: {adaptive:?}");
+    println!("calibrated (binary): {adaptive:?}");
+    let adaptive_gs = calibrate_windows(&jstats, &seq_walls, sampler.meta.seq_len, 8);
+    println!("calibrated (windowed): {adaptive_gs:?}");
 
     // --- compare policies end to end ---
     for policy in [
         DecodePolicy::Sequential,
         DecodePolicy::UniformJacobi,
         DecodePolicy::Selective { seq_blocks: 1 },
+        DecodePolicy::GsJacobi { windows: 4 },
         adaptive,
+        adaptive_gs,
     ] {
         let label = policy.label();
         let opts = SampleOptions { policy, ..Default::default() };
@@ -62,7 +69,11 @@ fn main() -> Result<()> {
         let _ = sampler.sample_images(&opts, &mut rng)?;
         let mut rng = Pcg64::seed(43);
         let (_, out) = sampler.sample_images(&opts, &mut rng)?;
-        println!("{label:>12}: {:.3}s per batch of {batch}", out.total_wall.as_secs_f64());
+        println!(
+            "{label:>16}: {:.3}s per batch of {batch}, {} position-updates",
+            out.total_wall.as_secs_f64(),
+            out.total_position_updates()
+        );
     }
     Ok(())
 }

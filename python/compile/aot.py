@@ -201,6 +201,21 @@ def lower_tarflow(w: ArtifactWriter, cfg: tarflow.TarFlowConfig, params, batches
             ["k", "z_prev", "y", "o"],
             model=cfg.name,
         )
+        # Windowed GS-Jacobi inner step: like block_jstep but only positions
+        # in [off, off+len) move and the residual covers the window only —
+        # the rust coordinator sweeps windows Gauss–Seidel-style
+        # (gs_jacobi_decode_block_v) so later windows condition on converged
+        # prefixes. Optional: older drivers probe via Backend::has_artifact
+        # and fall back to the full-sequence jstep.
+        w.lower(
+            f"{cfg.name}_block_jstep_win_b{b}",
+            lambda k, z, y, off, wl: tarflow.block_jacobi_step_window(
+                params, cfg, k, z, y, off, wl, use_pallas=True),
+            [((), I32), ((b, L, D), jnp.float32), ((b, L, D), jnp.float32),
+             ((), I32), ((), I32)],
+            ["k", "z_prev", "y", "off", "len"],
+            model=cfg.name,
+        )
         w.lower(
             f"{cfg.name}_block_seqfull_b{b}",
             lambda k, v: (tarflow.block_seq_full(params, cfg, k, v),),

@@ -64,6 +64,31 @@ def affine_inverse_update_ref(z_prev, y, s, g):
     return z_next, resid
 
 
+def affine_inverse_update_window_ref(z_prev, y, s, g, off, wlen):
+    """Windowed Jacobi update (GS-Jacobi inner step) + windowed residual.
+
+    Positions outside [off, off+wlen) are copied through from ``z_prev``
+    (the frozen converged prefix on the left, the not-yet-swept suffix on
+    the right); because frozen positions contribute |z' − z| = 0, the plain
+    max-reduction equals the residual over the active window only.
+
+    Args:
+      z_prev, y, s, g: (B, L, D)
+      off, wlen: window offset / length (python ints or traced i32 scalars)
+
+    Returns:
+      (z_next (B, L, D), resid (B,))
+    """
+    l = z_prev.shape[1]
+    z_next = y * jnp.exp(-s) + g
+    rows = jnp.arange(l)[None, :, None]
+    z_next = jnp.where(rows == 0, y, z_next)
+    in_window = (rows >= off) & (rows < off + wlen)
+    z_next = jnp.where(in_window, z_next, z_prev)
+    resid = jnp.max(jnp.abs(z_next - z_prev), axis=(1, 2))
+    return z_next, resid
+
+
 def affine_forward_ref(u, s, g):
     """Forward affine transform (encode direction, eq 4) + logdet.
 

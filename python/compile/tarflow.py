@@ -181,6 +181,29 @@ def block_jacobi_step(params, cfg: TarFlowConfig, k, z_prev, y, o, use_pallas=Tr
     return z_next, resid
 
 
+def block_jacobi_step_window(params, cfg: TarFlowConfig, k, z_prev, y, off, wlen,
+                             use_pallas=True):
+    """One windowed Jacobi update of A_k(z) = y — the GS-Jacobi inner step.
+
+    Identical to :func:`block_jacobi_step` (with ``o = 0``, the exact update)
+    except that only positions in ``[off, off+wlen)`` move: positions left of
+    ``off`` are the frozen converged prefix (they still condition the (s, g)
+    net), positions right of the window are copied through untouched, and the
+    residual is taken over the active window only. Sweeping windows left to
+    right (Gauss–Seidel) while iterating this step inside each window is
+    exact after ``wlen`` iterations per window (Prop 3.2 applied to the
+    window, given an exact prefix).
+    """
+    bp = block_params(params, k)
+    s, g = sg_net(bp, cfg, z_prev, o=0, use_pallas=use_pallas)
+    if use_pallas:
+        z_next, resid = affine_update.affine_inverse_update_window(
+            z_prev, y, s, g, off, wlen)
+    else:
+        z_next, resid = ref.affine_inverse_update_window_ref(z_prev, y, s, g, off, wlen)
+    return z_next, resid
+
+
 def block_inverse_exact(params, cfg: TarFlowConfig, k, y, use_pallas=False):
     """Exact sequential inverse u = A_k^{-1}(y) via L Jacobi steps
     (Prop 3.2: the iteration is exact after L steps). Build-time only —

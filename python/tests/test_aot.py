@@ -69,7 +69,8 @@ class TestArtifactWriter:
         names = {a["name"] for a in manifest["artifacts"]}
         assert names == {
             "tiny_fwd_b1", "tiny_block_fwd_b1", "tiny_block_jstep_b1",
-            "tiny_block_seqfull_b1", "tiny_block_seqstep_b1", "tiny_reverse_b1"}
+            "tiny_block_jstep_win_b1", "tiny_block_seqfull_b1",
+            "tiny_block_seqstep_b1", "tiny_reverse_b1"}
         for a in manifest["artifacts"]:
             assert (tmp_path / a["file"]).exists()
             assert all("shape" in t and "dtype" in t for t in a["inputs"])
@@ -82,9 +83,21 @@ class TestArtifactWriter:
         cfg, params = tiny_tf
         w = aot.ArtifactWriter(tmp_path)
         aot.lower_tarflow(w, cfg, params, [1])
-        jstep = next(e for e in w.entries if "jstep" in e["name"])
+        jstep = next(e for e in w.entries if e["name"].endswith("block_jstep_b1"))
         assert [i["dtype"] for i in jstep["inputs"]] == ["i32", "f32", "f32", "i32"]
         assert [o["shape"] for o in jstep["outputs"]] == [[1, cfg.seq_len, cfg.token_dim], [1]]
+
+    def test_jstep_win_signature(self, tiny_tf, tmp_path):
+        """The windowed GS-Jacobi step: (k, z_prev, y, off, len) → (z', resid)."""
+        cfg, params = tiny_tf
+        w = aot.ArtifactWriter(tmp_path)
+        aot.lower_tarflow(w, cfg, params, [1])
+        win = next(e for e in w.entries if "jstep_win" in e["name"])
+        assert [i["name"] for i in win["inputs"]] == ["k", "z_prev", "y", "off", "len"]
+        assert [i["dtype"] for i in win["inputs"]] == ["i32", "f32", "f32", "i32", "i32"]
+        assert [o["shape"] for o in win["outputs"]] == [[1, cfg.seq_len, cfg.token_dim], [1]]
+        # Tuple-rooted (two outputs) — the untupled fast path must stay off.
+        assert win["untupled_outputs"] is False
 
 
 class TestBaselines:

@@ -123,6 +123,74 @@ class TestJacobi:
         np.testing.assert_allclose(np.asarray(rp), np.asarray(rr), atol=1e-4)
 
 
+class TestGsJacobi:
+    """Windowed GS-Jacobi sweep: Gauss–Seidel across windows, Jacobi inside —
+    exact after `wlen` iterations per window (Prop 3.2 per window), mirroring
+    the rust driver `gs_jacobi_decode_block_v`."""
+
+    def _gs_sweep(self, params, cfg, k, v, windows, use_pallas=False):
+        L = cfg.seq_len
+        base, rem = divmod(L, windows)
+        z = jnp.zeros_like(v)
+        off = 0
+        for w in range(windows):
+            wlen = base + (1 if w < rem else 0)
+            for _ in range(wlen):
+                z, _ = tarflow.block_jacobi_step_window(
+                    params, cfg, k, z, v, off, wlen, use_pallas=use_pallas)
+            off += wlen
+        return z
+
+    @pytest.mark.parametrize("windows", [1, 2, 3, 16])
+    def test_gs_sweep_is_exact(self, small, windows):
+        """Every window count (incl. non-divisible 3 for L=16 and the W=L
+        sequential-equivalent extreme) reproduces the exact inverse."""
+        cfg, params = small
+        u = jax.random.normal(jax.random.PRNGKey(20), (1, cfg.seq_len, cfg.token_dim))
+        v, _ = tarflow.block_forward(params, cfg, 1, u)
+        z = self._gs_sweep(params, cfg, 1, v, windows)
+        np.testing.assert_allclose(np.asarray(z), np.asarray(u), atol=1e-4)
+
+    def test_gs_matches_full_jacobi_bitwise(self, small):
+        """W=1 GS-Jacobi and plain Jacobi run the same arithmetic: after L
+        full-window iterations the iterates must agree exactly."""
+        cfg, params = small
+        L = cfg.seq_len
+        u = jax.random.normal(jax.random.PRNGKey(21), (1, L, cfg.token_dim))
+        v, _ = tarflow.block_forward(params, cfg, 0, u)
+        z_gs = self._gs_sweep(params, cfg, 0, v, 1)
+        z = jnp.zeros_like(v)
+        for _ in range(L):
+            z, _ = tarflow.block_jacobi_step(params, cfg, 0, z, v, 0, use_pallas=False)
+        np.testing.assert_array_equal(np.asarray(z_gs), np.asarray(z))
+
+    def test_windowed_residual_ignores_frozen_prefix(self, small):
+        """At the fixed point of a window, the windowed residual is ~0 even
+        though later (untouched) positions are far from converged."""
+        cfg, params = small
+        u = jax.random.normal(jax.random.PRNGKey(22), (1, cfg.seq_len, cfg.token_dim))
+        v, _ = tarflow.block_forward(params, cfg, 2, u)
+        wlen = 4
+        z = jnp.zeros_like(v)
+        for _ in range(wlen):
+            z, r = tarflow.block_jacobi_step_window(
+                params, cfg, 2, z, v, 0, wlen, use_pallas=False)
+        _, r = tarflow.block_jacobi_step_window(
+            params, cfg, 2, z, v, 0, wlen, use_pallas=False)
+        assert float(r.max()) < 1e-4
+        # The suffix is still the zero init, far from the solution.
+        assert float(jnp.abs(z[:, wlen:] - u[:, wlen:]).max()) > 1e-2
+
+    def test_pallas_and_ref_paths_agree(self, small):
+        cfg, params = small
+        z = jax.random.normal(jax.random.PRNGKey(23), (2, cfg.seq_len, cfg.token_dim))
+        y = jax.random.normal(jax.random.PRNGKey(24), (2, cfg.seq_len, cfg.token_dim))
+        zp, rp = tarflow.block_jacobi_step_window(params, cfg, 0, z, y, 4, 6, use_pallas=True)
+        zr, rr = tarflow.block_jacobi_step_window(params, cfg, 0, z, y, 4, 6, use_pallas=False)
+        np.testing.assert_allclose(np.asarray(zp), np.asarray(zr), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(rp), np.asarray(rr), atol=1e-4)
+
+
 class TestSeqStep:
     def test_matches_exact_inverse(self, small):
         cfg, params = small

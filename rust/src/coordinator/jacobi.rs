@@ -1,4 +1,4 @@
-//! Jacobi decoding driver (paper Alg 1).
+//! Jacobi decoding driver (paper Alg 1) and its windowed GS-Jacobi variant.
 //!
 //! One Jacobi *step* is an AOT artifact call `(k, z_t, y) → (z_{t+1}, resid)`
 //! that updates every position of the sequence in parallel from the previous
@@ -7,11 +7,36 @@
 //! worst-case `L` iteration guard (Prop 3.2 guarantees exactness at `t = L`),
 //! and per-layer statistics for the selective policy / paper tables.
 //!
-//! The driver is **device-resident** ([`jacobi_decode_block_v`]): the block
-//! input `y` and the loop scalars are uploaded once, the iterate `z` chains
-//! device→device across iterations, and the only per-iteration host sync is
-//! the `[B]` residual needed for the τ test. [`jacobi_decode_block`] is the
-//! host-tensor convenience wrapper.
+//! Both drivers are **device-resident** (see `docs/ARCHITECTURE.md` for the
+//! full residency map): the block input `y` and the loop scalars are uploaded
+//! once, the iterate `z` chains device→device across iterations, and the only
+//! per-iteration host sync is the `[B]` residual needed for the τ test.
+//! [`jacobi_decode_block`] is the host-tensor convenience wrapper.
+//!
+//! ## Windowed GS-Jacobi ([`gs_jacobi_decode_block_v`])
+//!
+//! Full-sequence Jacobi keeps re-updating positions that converged many
+//! iterations ago (early positions are exact after Prop 3.2's induction
+//! reaches them). The GS-Jacobi variant (after "Accelerate TarFlow Sampling
+//! with GS-Jacobi Iteration", arXiv 2505.12849) partitions the `L` positions
+//! into `W` contiguous windows, sweeps the windows **in order**
+//! (Gauss–Seidel: window `w` conditions on the already-converged windows
+//! `< w`) and iterates Jacobi only **inside** the active window via the
+//! `{m}_block_jstep_win_b{B}` artifact, which freezes every position outside
+//! `[off, off+len)` and reports the residual over the window only. The
+//! per-window iteration cap is the window length — Prop 3.2 applied to the
+//! window given an exact prefix — so the sweep with τ = 0 is *exact*, and
+//! `W = 1` degrades to plain Jacobi while `W = L` degrades to sequential
+//! decoding (one exact iteration per position). Total work is measured in
+//! **position-updates** (Σ over windows of `iterations × len`), with two
+//! savings regimes: strongly coupled blocks (iterations ≈ `L`) cut from
+//! `O(L²)` toward `O(L²/W)` at any window count, while weakly coupled
+//! blocks (`t ≪ L` iterations) save only once the window length drops
+//! below `t` — the per-window cap then bounds updates by `len·L < t·L`, at
+//! the price of more artifact calls. [`calibrate_windows`] picks per-block
+//! window counts along exactly this trade-off.
+//!
+//! [`calibrate_windows`]: super::policy::calibrate_windows
 
 use crate::runtime::{Backend, HostTensor, Value};
 use crate::tensor::Pcg64;
@@ -45,7 +70,10 @@ impl InitStrategy {
 pub struct JacobiConfig {
     /// Stopping threshold τ on ‖z^t − z^{t−1}‖∞ (paper default 0.5).
     pub tau: f32,
-    /// Hard iteration cap; `None` ⇒ the sequence length `L` (Prop 3.2 bound).
+    /// Hard iteration cap for the whole block; `None` ⇒ the sequence length
+    /// `L` (Prop 3.2 bound). GS-Jacobi treats it as the same *total* budget,
+    /// shared across all windows (each window is additionally capped at its
+    /// own length).
     pub max_iters: Option<usize>,
     pub init: InitStrategy,
     /// Seed for `InitStrategy::Normal`.
@@ -110,24 +138,8 @@ pub fn jacobi_decode_block_v_init<B: Backend>(
     z0: Option<Value>,
 ) -> Result<(Value, JacobiStats)> {
     let t0 = Instant::now();
-    // Pin the loop constants on device once.
-    let y_dev = match y {
-        Value::Host(t) => engine.to_device(t)?,
-        Value::Device(_) => y.clone(),
-    };
-    let k_scalar = engine.to_device(&HostTensor::scalar_i32(block as i32))?;
+    let (y_dev, k_scalar, mut z) = pin_decode_inputs(engine, block, y, cfg, z0)?;
     let o_scalar = engine.to_device(&HostTensor::scalar_i32(mask_o as i32))?;
-    let mut z = match (z0, cfg.init) {
-        (Some(z0), _) => z0,
-        // The iterate starts as another handle on y — no upload at all.
-        (None, InitStrategy::PrevLayer) => y_dev.clone(),
-        // Zeros/Normal only need the iterate's shape: build z⁰ host-side via
-        // the shared init_iterate (one source of truth) and upload it once.
-        (None, _) => {
-            let proto = HostTensor::f32(y_dev.shape(), vec![0.0; y_dev.numel()]);
-            engine.to_device(&init_iterate(&proto, cfg))?
-        }
-    };
 
     let cap = cfg.max_iters.unwrap_or(seq_len);
     let mut residuals = Vec::new();
@@ -178,6 +190,244 @@ pub fn jacobi_decode_block<B: Backend>(
         seq_len,
         cfg,
         mask_o,
+    )?;
+    Ok((engine.to_host(z)?, stats))
+}
+
+/// Pin a block decode's loop constants on device and build its initial
+/// iterate — shared by the plain and GS drivers so their init contracts
+/// cannot drift. `y` uploads at most once (device values pass through);
+/// `z0`, when supplied, is used verbatim; otherwise `PrevLayer` aliases
+/// `y`'s device handle (no upload at all) and Zeros/Normal build z⁰
+/// host-side via the shared [`init_iterate`] (one source of truth) and
+/// upload it once. Returns `(y_dev, k_scalar, z)`.
+fn pin_decode_inputs<B: Backend>(
+    engine: &B,
+    block: usize,
+    y: &Value,
+    cfg: &JacobiConfig,
+    z0: Option<Value>,
+) -> Result<(Value, Value, Value)> {
+    let y_dev = match y {
+        Value::Host(t) => engine.to_device(t)?,
+        Value::Device(_) => y.clone(),
+    };
+    let k_scalar = engine.to_device(&HostTensor::scalar_i32(block as i32))?;
+    let z = match (z0, cfg.init) {
+        (Some(z0), _) => z0,
+        (None, InitStrategy::PrevLayer) => y_dev.clone(),
+        (None, _) => {
+            let proto = HostTensor::f32(y_dev.shape(), vec![0.0; y_dev.numel()]);
+            engine.to_device(&init_iterate(&proto, cfg))?
+        }
+    };
+    Ok((y_dev, k_scalar, z))
+}
+
+/// Partition `seq_len` positions into `windows` contiguous windows, as
+/// evenly as possible (the first `seq_len % windows` windows get one extra
+/// position). `windows` is clamped to `1..=seq_len`, so `W = 0` behaves as
+/// one full-sequence window and `W > L` as one window per position.
+pub fn window_partition(seq_len: usize, windows: usize) -> Vec<(usize, usize)> {
+    if seq_len == 0 {
+        return Vec::new();
+    }
+    let w = windows.clamp(1, seq_len);
+    let (base, rem) = (seq_len / w, seq_len % w);
+    let mut out = Vec::with_capacity(w);
+    let mut off = 0;
+    for i in 0..w {
+        let len = base + usize::from(i < rem);
+        out.push((off, len));
+        off += len;
+    }
+    out
+}
+
+/// Statistics of one window of a GS-Jacobi decode.
+#[derive(Clone, Debug)]
+pub struct WindowStats {
+    /// First position of the window.
+    pub offset: usize,
+    /// Number of positions in the window.
+    pub len: usize,
+    /// Jacobi iterations spent inside the window.
+    pub iterations: usize,
+    /// Batch-max windowed residual after each iteration.
+    pub residuals: Vec<f32>,
+    /// Whether every batch element reached τ (vs hitting the `len` cap).
+    pub converged: bool,
+    /// Per batch element: the iteration (1-based) at which its windowed
+    /// residual first fell below τ; `None` = the window relied on the
+    /// exactness cap for that element.
+    pub converged_at: Vec<Option<usize>>,
+}
+
+/// Statistics of one GS-Jacobi decode of one block.
+#[derive(Clone, Debug)]
+pub struct GsJacobiStats {
+    pub block: usize,
+    /// Per-window breakdown, in sweep order.
+    pub windows: Vec<WindowStats>,
+    pub wall: Duration,
+    /// Total jstep_win artifact calls (Σ window iterations).
+    pub iterations: usize,
+    /// Total position-updates performed: Σ over windows of
+    /// `iterations × len`. Full-sequence Jacobi costs `iterations × L`; the
+    /// saving is the paper-faithful work metric (`benches/gs_windows.rs`).
+    pub position_updates: usize,
+    /// Whether every batch element's convergence front reached `L` — each
+    /// window settled either by τ (the element's final windowed residual)
+    /// or by running its full `len`-iteration exactness cap (Prop 3.2 per
+    /// window). `false` only when the `max_iters` budget ran out before a
+    /// window reached either (per-window τ-vs-cap detail:
+    /// [`WindowStats::converged`]).
+    pub converged: bool,
+    /// Per batch element: the convergence front — positions `< front[b]`
+    /// are frozen and final, certified per window by the element's final
+    /// residual under τ or by the exactness cap
+    /// ([`WindowStats::converged_at`] records first τ crossings for
+    /// observability only). The windowed artifact excludes everything left
+    /// of the active window from the residual, so a settled prefix never
+    /// re-enters the τ test.
+    pub front: Vec<usize>,
+}
+
+/// Decode block `k` by windowed GS-Jacobi iteration (module docs), keeping
+/// the iterate device-resident throughout.
+///
+/// `artifact` is the windowed step `{m}_block_jstep_win_b{B}`:
+/// `(k, z_t, y, off, len) → (z_{t+1}, resid[B])`, where positions outside
+/// `[off, off+len)` are copied through and the residual covers the window
+/// only. `y` follows the same one-upload contract as
+/// [`jacobi_decode_block_v`]; `z0`, when given, is used verbatim (the
+/// `Sampler` passes pooled device zeros). Per iteration only the `[B]`
+/// windowed residual syncs to the host.
+#[allow(clippy::too_many_arguments)]
+pub fn gs_jacobi_decode_block_v<B: Backend>(
+    engine: &B,
+    artifact: &str,
+    block: usize,
+    y: &Value,
+    seq_len: usize,
+    windows: usize,
+    cfg: &JacobiConfig,
+    z0: Option<Value>,
+) -> Result<(Value, GsJacobiStats)> {
+    let t0 = Instant::now();
+    let (y_dev, k_scalar, mut z) = pin_decode_inputs(engine, block, y, cfg, z0)?;
+
+    let mut stats = GsJacobiStats {
+        block,
+        windows: Vec::new(),
+        wall: Duration::ZERO,
+        iterations: 0,
+        position_updates: 0,
+        converged: false,
+        front: Vec::new(),
+    };
+    // `max_iters` keeps its plain-Jacobi meaning — a *total* iteration
+    // budget for the block — shared across all windows.
+    let mut budget = cfg.max_iters.unwrap_or(usize::MAX);
+    for (off, len) in window_partition(seq_len, windows) {
+        // Prop 3.2 applied to the window: with the prefix frozen, `len`
+        // iterations are exact — never iterate past that.
+        let cap = len.min(budget);
+        let mut ws = WindowStats {
+            offset: off,
+            len,
+            iterations: 0,
+            residuals: Vec::new(),
+            converged: false,
+            converged_at: Vec::new(),
+        };
+        let mut last_resid: Vec<f32> = Vec::new();
+        if cap > 0 {
+            let off_scalar = engine.to_device(&HostTensor::scalar_i32(off as i32))?;
+            let len_scalar = engine.to_device(&HostTensor::scalar_i32(len as i32))?;
+            while ws.iterations < cap {
+                let outs = engine.call_v(
+                    artifact,
+                    &[
+                        k_scalar.clone(),
+                        z,
+                        y_dev.clone(),
+                        off_scalar.clone(),
+                        len_scalar.clone(),
+                    ],
+                )?;
+                let mut it = outs.into_iter();
+                let z_next = it.next().context("jstep_win returns z'")?;
+                let resid_v = it.next().context("jstep_win returns residual")?;
+                // The τ test is the only per-iteration sync: a [B] residual.
+                let resid = engine.to_host(resid_v)?.as_f32()?.to_vec();
+                if stats.front.is_empty() {
+                    stats.front = vec![0; resid.len()];
+                }
+                if ws.converged_at.is_empty() {
+                    ws.converged_at = vec![None; resid.len()];
+                }
+                z = z_next;
+                ws.iterations += 1;
+                let mut max_r = 0.0f32;
+                for (b, &r) in resid.iter().enumerate() {
+                    if r < cfg.tau && ws.converged_at[b].is_none() {
+                        ws.converged_at[b] = Some(ws.iterations);
+                    }
+                    max_r = max_r.max(r);
+                }
+                ws.residuals.push(max_r);
+                last_resid = resid;
+                if max_r < cfg.tau {
+                    ws.converged = true;
+                    break;
+                }
+            }
+        }
+        budget -= ws.iterations;
+        stats.iterations += ws.iterations;
+        stats.position_updates += ws.iterations * len;
+        // Advance each element's front through windows it settled in,
+        // contiguously from the left: its *final* residual under τ, or the
+        // full `len`-iteration cap completed (Prop 3.2 ⇒ the window is
+        // exact given its settled prefix, even though the last movement
+        // exceeded τ). An intermediate dip below τ certifies nothing — the
+        // residual is not monotone while window positions still move.
+        let exact_stop = ws.iterations == len;
+        for (b, f) in stats.front.iter_mut().enumerate() {
+            let tau_ok = last_resid.get(b).is_some_and(|&r| r < cfg.tau);
+            if *f == off && (tau_ok || exact_stop) {
+                *f = off + len;
+            }
+        }
+        stats.windows.push(ws);
+    }
+    stats.converged =
+        !stats.front.is_empty() && stats.front.iter().all(|&f| f == seq_len);
+    stats.wall = t0.elapsed();
+    Ok((z, stats))
+}
+
+/// Host-tensor convenience wrapper over [`gs_jacobi_decode_block_v`].
+#[allow(clippy::too_many_arguments)]
+pub fn gs_jacobi_decode_block<B: Backend>(
+    engine: &B,
+    artifact: &str,
+    block: usize,
+    y: &HostTensor,
+    seq_len: usize,
+    windows: usize,
+    cfg: &JacobiConfig,
+) -> Result<(HostTensor, GsJacobiStats)> {
+    let (z, stats) = gs_jacobi_decode_block_v(
+        engine,
+        artifact,
+        block,
+        &Value::Host(y.clone()),
+        seq_len,
+        windows,
+        cfg,
+        None,
     )?;
     Ok((engine.to_host(z)?, stats))
 }
@@ -237,5 +487,39 @@ mod tests {
         assert_eq!(c.tau, 0.5);
         assert_eq!(c.init, InitStrategy::Zeros);
         assert!(c.max_iters.is_none());
+    }
+
+    #[test]
+    fn window_partition_covers_sequence() {
+        for (l, w) in [(64, 4), (64, 1), (64, 64), (7, 3), (8, 5), (1, 1)] {
+            let parts = window_partition(l, w);
+            assert_eq!(parts.len(), w.min(l));
+            assert_eq!(parts[0].0, 0);
+            let mut expect_off = 0;
+            for &(off, len) in &parts {
+                assert_eq!(off, expect_off, "windows must be contiguous");
+                assert!(len >= 1);
+                expect_off += len;
+            }
+            assert_eq!(expect_off, l, "windows must cover all {l} positions");
+            // Even split: lengths differ by at most one.
+            let lens: Vec<usize> = parts.iter().map(|p| p.1).collect();
+            let (min, max) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+            assert!(max - min <= 1, "uneven partition {lens:?}");
+        }
+    }
+
+    #[test]
+    fn window_partition_degenerate_cases() {
+        // W = 1 ⇒ one full-sequence window (plain Jacobi).
+        assert_eq!(window_partition(8, 1), vec![(0, 8)]);
+        // W = L ⇒ one window per position (sequential-equivalent).
+        assert_eq!(window_partition(3, 3), vec![(0, 1), (1, 1), (2, 1)]);
+        // W = 0 and W > L clamp rather than panic.
+        assert_eq!(window_partition(8, 0), vec![(0, 8)]);
+        assert_eq!(window_partition(2, 9), vec![(0, 1), (1, 1)]);
+        // Non-divisible: extra positions go to the leading windows.
+        assert_eq!(window_partition(7, 3), vec![(0, 3), (3, 2), (5, 2)]);
+        assert!(window_partition(0, 4).is_empty());
     }
 }

@@ -1,10 +1,17 @@
 //! L3 coordinator — the paper's system contribution wired as a serving stack.
 //!
-//! * [`jacobi`] — the parallel Jacobi decoding driver (Alg 1): iterate the
-//!   per-block fixed point `z ← F(z)` until `‖z^t − z^{t−1}‖∞ < τ`.
-//! * [`policy`] — where to use Jacobi (paper §3.5): sequential for the
-//!   dependency-heavy first block, Jacobi for the rest, plus uniform /
-//!   sequential / adaptive variants.
+//! See `docs/ARCHITECTURE.md` at the repo root for the full layer map
+//! (Pallas kernels → AOT manifest → runtime Value/Engine → this coordinator
+//! → HTTP server) and the device-residency rules the hot paths rely on.
+//!
+//! * [`jacobi`] — the parallel Jacobi decoding drivers: full-sequence
+//!   (paper Alg 1, iterate `z ← F(z)` until `‖z^t − z^{t−1}‖∞ < τ`) and
+//!   windowed GS-Jacobi with convergence-front tracking
+//!   ([`jacobi::gs_jacobi_decode_block_v`]).
+//! * [`policy`] — where/how to use Jacobi (paper §3.5): sequential for the
+//!   dependency-heavy first block, Jacobi or windowed GS-Jacobi for the
+//!   rest, plus uniform / sequential / calibrated per-block variants with
+//!   JSON persistence.
 //! * [`sampler`] — full noise→image pipeline over the AOT artifacts.
 //! * [`batcher`] — dynamic request batching onto artifact batch shapes.
 //! * [`router`] — multi-worker dispatch (one engine per worker thread).
@@ -20,6 +27,6 @@ pub mod sampler;
 pub mod server;
 pub mod state;
 
-pub use jacobi::{InitStrategy, JacobiConfig, JacobiStats};
-pub use policy::DecodePolicy;
+pub use jacobi::{GsJacobiStats, InitStrategy, JacobiConfig, JacobiStats, WindowStats};
+pub use policy::{BlockDecode, DecodePolicy};
 pub use sampler::{SampleOptions, Sampler};

@@ -4,8 +4,68 @@
 //! sampling (noise → data). Block index here is the *decode position*
 //! `0 .. K-1` where position 0 is the first block applied to Gaussian noise —
 //! the paper's "first layer" with low redundancy.
+//!
+//! Every policy reduces to a per-position [`BlockDecode`] via
+//! [`DecodePolicy::block_mode`]: sequential KV-cached decoding, full-sequence
+//! Jacobi, or windowed GS-Jacobi (see
+//! [`gs_jacobi_decode_block_v`](super::jacobi::gs_jacobi_decode_block_v)).
+//! Calibration ([`calibrate`], [`calibrate_windows`]) learns a policy from
+//! measured per-block decode traces; learned policies serialize to JSON
+//! (`sjd calibrate` writes them, `--policy @file` / `--policy-file` load
+//! them back).
 
 use super::jacobi::JacobiStats;
+
+/// Default window count for the `"gs"` policy shorthand.
+pub const DEFAULT_GS_WINDOWS: usize = 4;
+
+/// How one decode position is handled.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BlockDecode {
+    /// Autoregressive KV-cached decoding (L artifact calls).
+    Sequential,
+    /// Full-sequence Jacobi iteration (paper Alg 1).
+    Jacobi,
+    /// Windowed GS-Jacobi: Gauss–Seidel across `windows` windows, Jacobi
+    /// inside the active window.
+    GsJacobi { windows: usize },
+}
+
+impl BlockDecode {
+    fn to_json(self) -> crate::jsonx::Value {
+        use crate::jsonx::Value;
+        match self {
+            BlockDecode::Sequential => Value::obj(vec![("mode", Value::str("sequential"))]),
+            BlockDecode::Jacobi => Value::obj(vec![("mode", Value::str("jacobi"))]),
+            BlockDecode::GsJacobi { windows } => Value::obj(vec![
+                ("mode", Value::str("gs")),
+                ("windows", Value::num(windows as f64)),
+            ]),
+        }
+    }
+
+    fn from_json(v: &crate::jsonx::Value) -> anyhow::Result<Self> {
+        match v.req_str("mode")? {
+            "sequential" => Ok(BlockDecode::Sequential),
+            "jacobi" => Ok(BlockDecode::Jacobi),
+            "gs" => Ok(BlockDecode::GsJacobi { windows: windows_from_json(v)? }),
+            other => anyhow::bail!("unknown block mode '{other}'"),
+        }
+    }
+}
+
+/// Read an optional `windows` field: absent ⇒ the default, present ⇒ must be
+/// a positive integer (a malformed value is an error, never silently the
+/// default — the operator's policy file means what it says).
+fn windows_from_json(v: &crate::jsonx::Value) -> anyhow::Result<usize> {
+    match v.get("windows") {
+        None => Ok(DEFAULT_GS_WINDOWS),
+        Some(w) => w
+            .as_usize()
+            .filter(|&w| w >= 1)
+            .ok_or_else(|| anyhow::anyhow!("gs windows must be a positive integer, got {w:?}")),
+    }
+}
 
 /// How each of the `K` blocks is decoded.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -18,36 +78,71 @@ pub enum DecodePolicy {
     /// Paper's SJD: sequential for the first `seq_blocks` decode positions,
     /// Jacobi for the rest. `seq_blocks = 1` is the paper's setting.
     Selective { seq_blocks: usize },
-    /// Per-block choice learned by calibration (see [`calibrate`]).
+    /// Windowed GS-Jacobi at every decode position. `windows = 1` is
+    /// equivalent to [`DecodePolicy::UniformJacobi`]; `windows = L` is
+    /// sequential-equivalent work done through the jstep_win artifact.
+    GsJacobi { windows: usize },
+    /// Per-block Jacobi-vs-sequential choice learned by [`calibrate`].
     Custom { jacobi_mask: Vec<bool> },
+    /// Fully per-block decode modes (window counts included) learned by
+    /// [`calibrate_windows`].
+    PerBlock { modes: Vec<BlockDecode> },
 }
 
 impl DecodePolicy {
-    /// Parse CLI string: "sequential" | "ujd" | "selective" | "selective:N".
+    /// Parse CLI string:
+    /// `"sequential" | "ujd" | "selective[:N]" | "gs[:W]"`.
     pub fn parse(s: &str) -> Option<Self> {
         match s {
             "sequential" | "seq" => Some(DecodePolicy::Sequential),
             "ujd" | "uniform" | "jacobi" => Some(DecodePolicy::UniformJacobi),
             "selective" | "sjd" => Some(DecodePolicy::Selective { seq_blocks: 1 }),
+            "gs" | "gs-jacobi" => Some(DecodePolicy::GsJacobi { windows: DEFAULT_GS_WINDOWS }),
             _ => {
-                let n = s.strip_prefix("selective:")?.parse().ok()?;
-                Some(DecodePolicy::Selective { seq_blocks: n })
+                if let Some(n) = s.strip_prefix("selective:") {
+                    return Some(DecodePolicy::Selective { seq_blocks: n.parse().ok()? });
+                }
+                let w: usize = s.strip_prefix("gs:")?.parse().ok()?;
+                if w == 0 {
+                    return None;
+                }
+                Some(DecodePolicy::GsJacobi { windows: w })
             }
         }
     }
 
-    /// Should decode-position `pos` (0-based, 0 = first block after noise)
-    /// use Jacobi?
-    pub fn use_jacobi(&self, pos: usize, total_blocks: usize) -> bool {
+    /// Decode mode for decode-position `pos` (0-based, 0 = first block after
+    /// noise).
+    pub fn block_mode(&self, pos: usize, total_blocks: usize) -> BlockDecode {
         debug_assert!(pos < total_blocks);
         match self {
-            DecodePolicy::Sequential => false,
-            DecodePolicy::UniformJacobi => true,
-            DecodePolicy::Selective { seq_blocks } => pos >= *seq_blocks,
+            DecodePolicy::Sequential => BlockDecode::Sequential,
+            DecodePolicy::UniformJacobi => BlockDecode::Jacobi,
+            DecodePolicy::Selective { seq_blocks } => {
+                if pos < *seq_blocks {
+                    BlockDecode::Sequential
+                } else {
+                    BlockDecode::Jacobi
+                }
+            }
+            DecodePolicy::GsJacobi { windows } => BlockDecode::GsJacobi { windows: *windows },
             DecodePolicy::Custom { jacobi_mask } => {
-                jacobi_mask.get(pos).copied().unwrap_or(true)
+                if jacobi_mask.get(pos).copied().unwrap_or(true) {
+                    BlockDecode::Jacobi
+                } else {
+                    BlockDecode::Sequential
+                }
+            }
+            DecodePolicy::PerBlock { modes } => {
+                modes.get(pos).copied().unwrap_or(BlockDecode::Jacobi)
             }
         }
+    }
+
+    /// Should decode-position `pos` use a Jacobi-family decode? (Legacy
+    /// predicate over [`DecodePolicy::block_mode`].)
+    pub fn use_jacobi(&self, pos: usize, total_blocks: usize) -> bool {
+        self.block_mode(pos, total_blocks) != BlockDecode::Sequential
     }
 
     pub fn label(&self) -> String {
@@ -56,7 +151,9 @@ impl DecodePolicy {
             DecodePolicy::UniformJacobi => "UJD".into(),
             DecodePolicy::Selective { seq_blocks: 1 } => "SJD".into(),
             DecodePolicy::Selective { seq_blocks } => format!("SJD(seq={seq_blocks})"),
+            DecodePolicy::GsJacobi { windows } => format!("GS-Jacobi(W={windows})"),
             DecodePolicy::Custom { .. } => "Adaptive".into(),
+            DecodePolicy::PerBlock { .. } => "Adaptive-GS".into(),
         }
     }
 }
@@ -80,6 +177,50 @@ pub fn calibrate(
     DecodePolicy::Custom { jacobi_mask: mask }
 }
 
+/// Window-aware calibration: learn a per-block [`BlockDecode`] — including
+/// GS-Jacobi window counts — from full-sequence Jacobi iteration traces.
+///
+/// The window-count heuristic follows the GS-Jacobi cost model: a window of
+/// length `len` converges in ≈ `min(t, len)` iterations, where `t` is the
+/// block's measured full-sequence iteration count. A *hard* block
+/// (`t ≈ L`, sequential-like coupling) costs `L²` position-updates under
+/// plain Jacobi but `≈ L²/W` under `W` windows — more windows strictly help.
+/// An *easy* block (`t ≪ L/W`) costs `t·L` either way, so extra windows only
+/// add per-call overhead — one window (plain Jacobi) is best. Interpolating,
+/// the learned count is `round(t/L · max_windows)`, clamped to
+/// `[1, max_windows]`.
+///
+/// Blocks whose Jacobi decode failed to converge within the cap, or measured
+/// slower than their sequential pass, stay sequential (the conservative
+/// choice [`calibrate`] makes too).
+pub fn calibrate_windows(
+    jacobi: &[JacobiStats],
+    seq_wall: &[std::time::Duration],
+    seq_len: usize,
+    max_windows: usize,
+) -> DecodePolicy {
+    assert_eq!(jacobi.len(), seq_wall.len());
+    assert!(seq_len > 0 && max_windows > 0);
+    let modes = jacobi
+        .iter()
+        .zip(seq_wall)
+        .map(|(j, s)| {
+            if !j.converged || j.wall >= *s {
+                return BlockDecode::Sequential;
+            }
+            let ratio = j.iterations as f64 / seq_len as f64;
+            let windows =
+                ((ratio * max_windows as f64).round() as usize).clamp(1, max_windows);
+            if windows == 1 {
+                BlockDecode::Jacobi
+            } else {
+                BlockDecode::GsJacobi { windows }
+            }
+        })
+        .collect();
+    DecodePolicy::PerBlock { modes }
+}
+
 impl DecodePolicy {
     /// Serialize to JSON (calibration persistence: `sjd calibrate` writes
     /// this; `sjd serve --policy @file.json` loads it).
@@ -92,12 +233,20 @@ impl DecodePolicy {
                 ("kind", Value::str("selective")),
                 ("seq_blocks", Value::num(*seq_blocks as f64)),
             ]),
+            DecodePolicy::GsJacobi { windows } => Value::obj(vec![
+                ("kind", Value::str("gs")),
+                ("windows", Value::num(*windows as f64)),
+            ]),
             DecodePolicy::Custom { jacobi_mask } => Value::obj(vec![
                 ("kind", Value::str("custom")),
                 (
                     "jacobi_mask",
                     Value::Arr(jacobi_mask.iter().map(|&b| Value::Bool(b)).collect()),
                 ),
+            ]),
+            DecodePolicy::PerBlock { modes } => Value::obj(vec![
+                ("kind", Value::str("per_block")),
+                ("modes", Value::Arr(modes.iter().map(|m| m.to_json()).collect())),
             ]),
         }
     }
@@ -111,6 +260,7 @@ impl DecodePolicy {
             "selective" => Ok(DecodePolicy::Selective {
                 seq_blocks: v.get("seq_blocks").and_then(Value::as_usize).unwrap_or(1),
             }),
+            "gs" => Ok(DecodePolicy::GsJacobi { windows: windows_from_json(v)? }),
             "custom" => {
                 let mask = v
                     .req_arr("jacobi_mask")?
@@ -118,6 +268,14 @@ impl DecodePolicy {
                     .map(|b| b.as_bool().ok_or_else(|| anyhow::anyhow!("bad mask entry")))
                     .collect::<anyhow::Result<Vec<bool>>>()?;
                 Ok(DecodePolicy::Custom { jacobi_mask: mask })
+            }
+            "per_block" => {
+                let modes = v
+                    .req_arr("modes")?
+                    .iter()
+                    .map(BlockDecode::from_json)
+                    .collect::<anyhow::Result<Vec<_>>>()?;
+                Ok(DecodePolicy::PerBlock { modes })
             }
             other => anyhow::bail!("unknown policy kind '{other}'"),
         }
@@ -150,7 +308,31 @@ mod tests {
             DecodePolicy::parse("selective:2"),
             Some(DecodePolicy::Selective { seq_blocks: 2 })
         );
+        assert_eq!(
+            DecodePolicy::parse("gs"),
+            Some(DecodePolicy::GsJacobi { windows: DEFAULT_GS_WINDOWS })
+        );
+        assert_eq!(DecodePolicy::parse("gs:8"), Some(DecodePolicy::GsJacobi { windows: 8 }));
         assert_eq!(DecodePolicy::parse("wat"), None);
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        for bad in [
+            "", "Sequential", "SJD", "selective:", "selective:x", "selective:-1",
+            "selective:1.5", "gs:", "gs:0", "gs:abc", "gs:-2", "gs :4", "ujd ",
+            "@", "custom",
+        ] {
+            assert_eq!(DecodePolicy::parse(bad), None, "'{bad}' must be rejected");
+        }
+    }
+
+    #[test]
+    fn init_strategy_parse_rejects_malformed() {
+        use super::super::jacobi::InitStrategy;
+        for bad in ["", "Zeros", "NORMAL", "prev-layer", "zeros ", "random", "0"] {
+            assert_eq!(InitStrategy::parse(bad), None, "'{bad}' must be rejected");
+        }
     }
 
     #[test]
@@ -208,12 +390,97 @@ mod tests {
             DecodePolicy::Sequential,
             DecodePolicy::UniformJacobi,
             DecodePolicy::Selective { seq_blocks: 2 },
+            DecodePolicy::GsJacobi { windows: 6 },
             DecodePolicy::Custom { jacobi_mask: vec![false, true, true] },
+            DecodePolicy::PerBlock {
+                modes: vec![
+                    BlockDecode::Sequential,
+                    BlockDecode::Jacobi,
+                    BlockDecode::GsJacobi { windows: 8 },
+                ],
+            },
         ] {
             let j = p.to_json();
             let back = DecodePolicy::from_json(&j).unwrap();
             assert_eq!(p, back);
         }
+    }
+
+    #[test]
+    fn json_rejects_bad_gs_windows() {
+        use crate::jsonx::Value;
+        let v = Value::obj(vec![("kind", Value::str("gs")), ("windows", Value::num(0.0))]);
+        assert!(DecodePolicy::from_json(&v).is_err());
+        // Present-but-malformed must error, never silently default.
+        for bad in [Value::num(2.5), Value::num(-3.0), Value::str("four")] {
+            let v = Value::obj(vec![("kind", Value::str("gs")), ("windows", bad)]);
+            assert!(DecodePolicy::from_json(&v).is_err());
+        }
+        // Absent windows falls back to the documented default.
+        let v = Value::obj(vec![("kind", Value::str("gs"))]);
+        assert_eq!(
+            DecodePolicy::from_json(&v).unwrap(),
+            DecodePolicy::GsJacobi { windows: DEFAULT_GS_WINDOWS }
+        );
+        let modes = Value::Arr(vec![Value::obj(vec![("mode", Value::str("warp"))])]);
+        let v = Value::obj(vec![("kind", Value::str("per_block")), ("modes", modes)]);
+        assert!(DecodePolicy::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn block_modes_per_policy() {
+        let gs = DecodePolicy::GsJacobi { windows: 3 };
+        assert_eq!(gs.block_mode(0, 4), BlockDecode::GsJacobi { windows: 3 });
+        assert!(gs.use_jacobi(0, 4));
+
+        let pb = DecodePolicy::PerBlock {
+            modes: vec![
+                BlockDecode::Sequential,
+                BlockDecode::GsJacobi { windows: 2 },
+                BlockDecode::Jacobi,
+            ],
+        };
+        assert_eq!(pb.block_mode(0, 4), BlockDecode::Sequential);
+        assert_eq!(pb.block_mode(1, 4), BlockDecode::GsJacobi { windows: 2 });
+        assert_eq!(pb.block_mode(2, 4), BlockDecode::Jacobi);
+        // Positions past the learned vector default to Jacobi (like Custom).
+        assert_eq!(pb.block_mode(3, 4), BlockDecode::Jacobi);
+        assert!(!pb.use_jacobi(0, 4));
+        assert!(pb.use_jacobi(1, 4));
+    }
+
+    #[test]
+    fn calibrate_windows_scales_with_iteration_ratio() {
+        let mk = |block, iters, ms, converged| JacobiStats {
+            block,
+            iterations: iters,
+            wall: Duration::from_millis(ms),
+            residuals: vec![],
+            converged,
+        };
+        let seq_len = 64;
+        let jacobi = vec![
+            mk(0, 60, 100, true),  // hard: t ≈ L → max windows
+            mk(1, 4, 100, true),   // easy: t ≪ L → plain Jacobi
+            mk(2, 32, 100, true),  // middling → intermediate window count
+            mk(3, 64, 100, false), // no converge → sequential
+            mk(4, 4, 900, true),   // slower than sequential → sequential
+        ];
+        let seq = vec![Duration::from_millis(500); 5];
+        let p = calibrate_windows(&jacobi, &seq, seq_len, 8);
+        assert_eq!(
+            p,
+            DecodePolicy::PerBlock {
+                modes: vec![
+                    BlockDecode::GsJacobi { windows: 8 },
+                    BlockDecode::Jacobi,
+                    BlockDecode::GsJacobi { windows: 4 },
+                    BlockDecode::Sequential,
+                    BlockDecode::Sequential,
+                ],
+            }
+        );
+        assert_eq!(p.label(), "Adaptive-GS");
     }
 
     #[test]

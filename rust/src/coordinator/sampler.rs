@@ -13,6 +13,14 @@
 //! * `{m}_block_jstep_b{B}` : `(k, z_t[B,L,D], y[B,L,D], o) → (z', resid[B])`
 //!   — one parallel Jacobi update of `A_k(z) = y`, with the `o`-nearest
 //!   dependency mask of eq 6 (`o = 0` ⇒ exact update).
+//! * `{m}_block_jstep_win_b{B}` : `(k, z_t[B,L,D], y[B,L,D], off, len) →
+//!   (z', resid[B])` — the windowed GS-Jacobi inner step: positions outside
+//!   `[off, off+len)` are copied through from `z_t` and the residual covers
+//!   the window only — always the exact (`o = 0`) update. **Optional**:
+//!   probed via `Backend::has_artifact`; when absent, or when `mask_o > 0`
+//!   (the masked eq-6 decode has a different fixed point the windowed
+//!   artifact cannot express), GS-Jacobi block modes fall back to
+//!   full-sequence Jacobi.
 //! * `{m}_block_seqstep_b{B}`: `(k, u_prev[B,D], v_tok[B,D], pos,
 //!   kv_k[NL,B,L,Dm], kv_v[NL,B,L,Dm]) → (u_pos[B,D], kv_k', kv_v')`
 //!   — one sequential token with KV cache.
@@ -34,6 +42,8 @@
 //!   the end.
 //! * Jacobi blocks keep the iterate and `y` on device; per iteration only
 //!   the `[B]` residual crosses for the τ test (`jacobi_decode_block_v`).
+//!   GS-Jacobi blocks inherit the same contract (`gs_jacobi_decode_block_v`)
+//!   plus two scalar uploads per window (the offset/length pins).
 //! * Sequential blocks keep `u_prev` and both KV caches (the largest tensors
 //!   in the system) device-resident across all L token steps; the initial
 //!   zero caches come from the pool's one-time-upload cache. Per token only
@@ -49,8 +59,11 @@
 //!   everything returned to other threads (`SampleOutput::tokens`, images)
 //!   is host data.
 
-use super::jacobi::{jacobi_decode_block_v_init, InitStrategy, JacobiConfig, JacobiStats};
-use super::policy::DecodePolicy;
+use super::jacobi::{
+    gs_jacobi_decode_block_v, jacobi_decode_block_v_init, GsJacobiStats, InitStrategy,
+    JacobiConfig, JacobiStats,
+};
+use super::policy::{BlockDecode, DecodePolicy};
 use super::state::BufferPool;
 use crate::runtime::{Backend, HostTensor, ModelMeta, Value};
 use crate::tensor::{Pcg64, Tensor};
@@ -91,10 +104,17 @@ pub struct BlockTrace {
     /// Decode position (0 = first block applied to noise).
     pub position: usize,
     pub used_jacobi: bool,
-    /// Sequential steps or Jacobi iterations.
+    /// Sequential steps, Jacobi iterations, or GS-Jacobi jstep_win calls.
     pub steps: usize,
+    /// Positions written while decoding this block: `L` for sequential,
+    /// `iterations × L` for full-sequence Jacobi, Σ `iterations × len` per
+    /// window for GS-Jacobi — the work metric `benches/gs_windows.rs`
+    /// compares across policies.
+    pub position_updates: usize,
     pub wall: Duration,
     pub jacobi: Option<JacobiStats>,
+    /// Present when this block decoded via windowed GS-Jacobi.
+    pub gs: Option<GsJacobiStats>,
 }
 
 /// Result of one sampling run.
@@ -113,6 +133,12 @@ impl SampleOutput {
     pub fn total_jacobi_iters(&self) -> usize {
         self.traces.iter().filter(|t| t.used_jacobi).map(|t| t.steps).sum()
     }
+
+    /// Total positions written across all block decodes (see
+    /// [`BlockTrace::position_updates`]).
+    pub fn total_position_updates(&self) -> usize {
+        self.traces.iter().map(|t| t.position_updates).sum()
+    }
 }
 
 /// Model sampler bound to an execution backend + a lowered batch size.
@@ -123,6 +149,7 @@ pub struct Sampler<'e, B: Backend> {
     art_fwd: String,
     art_block_fwd: String,
     art_jstep: String,
+    art_jstep_win: String,
     art_seqstep: String,
     art_seqfull: String,
     art_reverse: String,
@@ -145,6 +172,7 @@ impl<'e, B: Backend> Sampler<'e, B> {
             art_fwd: format!("{model}_fwd_b{batch}"),
             art_block_fwd: format!("{model}_block_fwd_b{batch}"),
             art_jstep: format!("{model}_block_jstep_b{batch}"),
+            art_jstep_win: format!("{model}_block_jstep_win_b{batch}"),
             art_seqstep: format!("{model}_block_seqstep_b{batch}"),
             art_seqfull: format!("{model}_block_seqfull_b{batch}"),
             art_reverse: format!("{model}_reverse_b{batch}"),
@@ -158,6 +186,17 @@ impl<'e, B: Backend> Sampler<'e, B> {
 
     pub fn jstep_artifact(&self) -> &str {
         &self.art_jstep
+    }
+
+    pub fn jstep_win_artifact(&self) -> &str {
+        &self.art_jstep_win
+    }
+
+    /// Whether the model ships the windowed GS-Jacobi step artifact (older
+    /// artifact dirs predate it; GS block modes then fall back to
+    /// full-sequence Jacobi).
+    pub fn has_gs_artifact(&self) -> bool {
+        self.engine.has_artifact(&self.art_jstep_win)
     }
 
     /// Draw the prior `z_K ~ N(0, I)` in token space.
@@ -327,6 +366,49 @@ impl<'e, B: Backend> Sampler<'e, B> {
         )
     }
 
+    /// Value-based windowed GS-Jacobi decode (see
+    /// `jacobi::gs_jacobi_decode_block_v`): sweep `windows` windows in order,
+    /// iterating the windowed jstep inside each. Residency contract matches
+    /// [`Sampler::jacobi_decode_v`]: `v` uploads at most once, the iterate
+    /// stays device-resident, the default Zeros init draws from the pool's
+    /// device-zero cache.
+    pub fn gs_jacobi_decode_v(
+        &self,
+        k: usize,
+        v: &Value,
+        windows: usize,
+        cfg: &JacobiConfig,
+    ) -> Result<(Value, GsJacobiStats)> {
+        let z0 = if cfg.init == InitStrategy::Zeros {
+            let (b, l, d) = (self.batch, self.meta.seq_len, self.meta.token_dim);
+            Some(self.pool.device_zeroed(&[b, l, d], |t| self.engine.to_device(t))?)
+        } else {
+            None
+        };
+        gs_jacobi_decode_block_v(
+            self.engine,
+            &self.art_jstep_win,
+            k,
+            v,
+            self.meta.seq_len,
+            windows,
+            cfg,
+            z0,
+        )
+    }
+
+    /// Host-tensor convenience wrapper over [`Sampler::gs_jacobi_decode_v`].
+    pub fn gs_jacobi_decode(
+        &self,
+        k: usize,
+        v: &HostTensor,
+        windows: usize,
+        cfg: &JacobiConfig,
+    ) -> Result<(HostTensor, GsJacobiStats)> {
+        let (u, stats) = self.gs_jacobi_decode_v(k, &Value::Host(v.clone()), windows, cfg)?;
+        Ok((self.engine.to_host(u)?, stats))
+    }
+
     /// Ground-truth single-block forward `v = A_k(u)` (AR domain).
     pub fn block_forward(&self, k: usize, u: &HostTensor) -> Result<HostTensor> {
         let outs = self
@@ -363,47 +445,84 @@ impl<'e, B: Backend> Sampler<'e, B> {
             let k = kk - 1 - pos; // block index in flow order
             let v = z;
             let t0 = Instant::now();
-            let (u, trace) = if opts.policy.use_jacobi(pos, kk) {
-                let mut cfg = opts.jacobi.clone();
-                cfg.seed = opts.seed.wrapping_add(pos as u64);
-                let (u, stats) = self.jacobi_decode_v(k, &v, &cfg, opts.mask_o)?;
-                let wall = t0.elapsed();
-                (
-                    u,
-                    BlockTrace {
-                        block: k,
-                        position: pos,
-                        used_jacobi: true,
-                        steps: stats.iterations,
-                        wall,
-                        jacobi: Some(stats),
-                    },
-                )
-            } else {
-                let (u, steps) = if opts.fused_sequential {
-                    let v_host = match &v {
-                        Value::Host(t) => t.clone(),
-                        Value::Device(_) => self.engine.to_host(v.clone())?,
-                    };
+            // GS-Jacobi degrades to full-sequence Jacobi when the model's
+            // artifact set predates the windowed step (documented fallback),
+            // and whenever an eq-6 mask is requested: the windowed artifact
+            // computes the exact (o = 0) update only, and mask_o semantics
+            // must not depend on which artifacts happen to be lowered.
+            let mut mode = opts.policy.block_mode(pos, kk);
+            if matches!(mode, BlockDecode::GsJacobi { .. })
+                && (opts.mask_o != 0 || !self.has_gs_artifact())
+            {
+                mode = BlockDecode::Jacobi;
+            }
+            let (u, trace) = match mode {
+                BlockDecode::Jacobi => {
+                    let mut cfg = opts.jacobi.clone();
+                    cfg.seed = opts.seed.wrapping_add(pos as u64);
+                    let (u, stats) = self.jacobi_decode_v(k, &v, &cfg, opts.mask_o)?;
+                    let wall = t0.elapsed();
                     (
-                        Value::Host(self.sequential_decode_block_fused(k, &v_host)?),
-                        self.meta.seq_len,
+                        u,
+                        BlockTrace {
+                            block: k,
+                            position: pos,
+                            used_jacobi: true,
+                            steps: stats.iterations,
+                            position_updates: stats.iterations * self.meta.seq_len,
+                            wall,
+                            jacobi: Some(stats),
+                            gs: None,
+                        },
                     )
-                } else {
-                    self.sequential_decode_block_v(k, &v)?
-                };
-                let wall = t0.elapsed();
-                (
-                    u,
-                    BlockTrace {
-                        block: k,
-                        position: pos,
-                        used_jacobi: false,
-                        steps,
-                        wall,
-                        jacobi: None,
-                    },
-                )
+                }
+                BlockDecode::GsJacobi { windows } => {
+                    let mut cfg = opts.jacobi.clone();
+                    cfg.seed = opts.seed.wrapping_add(pos as u64);
+                    let (u, stats) = self.gs_jacobi_decode_v(k, &v, windows, &cfg)?;
+                    let wall = t0.elapsed();
+                    (
+                        u,
+                        BlockTrace {
+                            block: k,
+                            position: pos,
+                            used_jacobi: true,
+                            steps: stats.iterations,
+                            position_updates: stats.position_updates,
+                            wall,
+                            jacobi: None,
+                            gs: Some(stats),
+                        },
+                    )
+                }
+                BlockDecode::Sequential => {
+                    let (u, steps) = if opts.fused_sequential {
+                        let v_host = match &v {
+                            Value::Host(t) => t.clone(),
+                            Value::Device(_) => self.engine.to_host(v.clone())?,
+                        };
+                        (
+                            Value::Host(self.sequential_decode_block_fused(k, &v_host)?),
+                            self.meta.seq_len,
+                        )
+                    } else {
+                        self.sequential_decode_block_v(k, &v)?
+                    };
+                    let wall = t0.elapsed();
+                    (
+                        u,
+                        BlockTrace {
+                            block: k,
+                            position: pos,
+                            used_jacobi: false,
+                            steps,
+                            position_updates: self.meta.seq_len,
+                            wall,
+                            jacobi: None,
+                            gs: None,
+                        },
+                    )
+                }
             };
             decode_wall += trace.wall;
             traces.push(trace);

@@ -105,14 +105,21 @@ impl BufferPool {
 pub struct MemoryEstimate {
     pub sequential_kv_bytes: usize,
     pub jacobi_iterate_bytes: usize,
+    /// Windowed GS-Jacobi: the same iterate + block input as full Jacobi
+    /// (the jstep_win artifact masks positions, it does not slice tensors)
+    /// plus the two per-window i32 scalar pins — memory-wise GS-Jacobi
+    /// inherits Jacobi's footprint, it only redistributes *compute*.
+    pub gs_jacobi_bytes: usize,
 }
 
 pub fn estimate_memory(nl: usize, b: usize, l: usize, dm: usize, d: usize) -> MemoryEstimate {
+    let jacobi_iterate_bytes = 2 * b * l * d * 4;
     MemoryEstimate {
         // Two caches (K and V), each (NL, B, L, Dm) f32.
         sequential_kv_bytes: 2 * nl * b * l * dm * 4,
         // Jacobi holds the iterate + the block input, each (B, L, D) f32.
-        jacobi_iterate_bytes: 2 * b * l * d * 4,
+        jacobi_iterate_bytes,
+        gs_jacobi_bytes: jacobi_iterate_bytes + 2 * 4,
     }
 }
 
@@ -183,5 +190,8 @@ mod tests {
         assert!(e.sequential_kv_bytes > e.jacobi_iterate_bytes);
         assert_eq!(e.sequential_kv_bytes, 2 * 2 * 8 * 256 * 96 * 4);
         assert_eq!(e.jacobi_iterate_bytes, 2 * 8 * 256 * 12 * 4);
+        // GS-Jacobi adds only the two scalar window pins.
+        assert_eq!(e.gs_jacobi_bytes, e.jacobi_iterate_bytes + 8);
+        assert!(e.gs_jacobi_bytes < e.sequential_kv_bytes);
     }
 }

@@ -2,18 +2,24 @@
 //!
 //! ```text
 //! sjd serve   --model tf10 --addr 127.0.0.1:8471 --workers 2 --policy selective
-//! sjd sample  --model tf10 --batch 8 --policy sjd --tau 0.5 --out samples.png
+//! sjd sample  --model tf10 --batch 8 --policy gs:4 --tau 0.5 --out samples.png
 //! sjd recon   --model tf10 --batch 8
-//! sjd calibrate --model tf10 --batch 8
+//! sjd calibrate --model tf10 --batch 8 --windows 8 --out tf10_policy.json
+//! sjd serve   --model tf10 --policy-file tf10_policy.json
 //! sjd info
 //! ```
+//!
+//! Policy strings: `sequential` | `ujd` | `selective[:N]` | `gs[:W]` |
+//! `@file.json`; `--policy-file <path>` is the explicit form of `@file.json`
+//! and takes precedence over `--policy`. See the root `README.md` for the
+//! full cheat-sheet.
 
 use anyhow::{bail, Result};
 use sjd::cli::Command;
 use sjd::configx::{CValue, Config};
 use sjd::coordinator::batcher::Batcher;
 use sjd::coordinator::jacobi::{InitStrategy, JacobiConfig};
-use sjd::coordinator::policy::{calibrate, DecodePolicy};
+use sjd::coordinator::policy::{calibrate, calibrate_windows, DecodePolicy};
 use sjd::coordinator::router::{Router, RouterConfig};
 use sjd::coordinator::sampler::{SampleOptions, Sampler};
 use sjd::coordinator::server::Server;
@@ -34,7 +40,8 @@ fn cli() -> Command {
                 .opt("workers", "2", "worker threads (one engine each)")
                 .opt("batch", "8", "model batch size")
                 .opt("batch-wait-ms", "20", "max batching delay")
-                .opt("policy", "selective", "sequential|ujd|selective[:N]")
+                .opt("policy", "selective", "sequential|ujd|selective[:N]|gs[:W]|@file.json")
+                .opt("policy-file", "", "calibrated policy JSON (overrides --policy)")
                 .opt("tau", "0.5", "Jacobi stopping threshold")
                 .opt("init", "zeros", "zeros|normal|prev")
                 .opt("seed", "0", "RNG seed"),
@@ -44,7 +51,8 @@ fn cli() -> Command {
                 .opt("artifacts", "artifacts", "artifacts directory")
                 .opt("model", "tf10", "model name")
                 .opt("batch", "8", "batch size (must be lowered)")
-                .opt("policy", "selective", "sequential|ujd|selective[:N]")
+                .opt("policy", "selective", "sequential|ujd|selective[:N]|gs[:W]|@file.json")
+                .opt("policy-file", "", "calibrated policy JSON (overrides --policy)")
                 .opt("tau", "0.5", "Jacobi stopping threshold")
                 .opt("init", "zeros", "zeros|normal|prev")
                 .opt("seed", "0", "RNG seed")
@@ -55,6 +63,8 @@ fn cli() -> Command {
                 .opt("artifacts", "artifacts", "artifacts directory")
                 .opt("model", "tf10", "model name")
                 .opt("batch", "8", "batch size")
+                .opt("policy", "selective", "sequential|ujd|selective[:N]|gs[:W]|@file.json")
+                .opt("policy-file", "", "calibrated policy JSON (overrides --policy)")
                 .opt("tau", "0.5", "Jacobi stopping threshold")
                 .opt("init", "zeros", "zeros|normal|prev")
                 .opt("seed", "0", "RNG seed"),
@@ -64,7 +74,9 @@ fn cli() -> Command {
                 .opt("artifacts", "artifacts", "artifacts directory")
                 .opt("model", "tf10", "model name")
                 .opt("batch", "8", "batch size")
-                .opt("tau", "0.5", "Jacobi stopping threshold"),
+                .opt("tau", "0.5", "Jacobi stopping threshold")
+                .opt("windows", "8", "max GS-Jacobi windows the calibration may assign")
+                .opt("out", "", "policy JSON output path [default: <model>_policy.json]"),
         )
         .sub(
             Command::new("info", "list models and artifacts")
@@ -82,7 +94,12 @@ fn jacobi_config(p: &sjd::cli::Parsed) -> JacobiConfig {
 }
 
 fn policy(p: &sjd::cli::Parsed) -> Result<DecodePolicy> {
-    // Accepts "sequential" | "ujd" | "selective[:N]" | "@calibrated.json".
+    // --policy-file <path> wins; otherwise --policy accepts
+    // "sequential" | "ujd" | "selective[:N]" | "gs[:W]" | "@calibrated.json".
+    let file = p.str("policy-file");
+    if !file.is_empty() {
+        return DecodePolicy::parse_or_load(&format!("@{file}"));
+    }
     DecodePolicy::parse_or_load(p.str("policy"))
 }
 
@@ -116,8 +133,10 @@ fn cmd_serve(p: &sjd::cli::Parsed) -> Result<()> {
     cfg.set("serve.model", CValue::Str(p.str("model").into()));
     cfg.set("serve.addr", CValue::Str(p.str("addr").into()));
 
+    let pol = policy(p)?;
+    let policy_label = pol.label();
     let options = SampleOptions {
-        policy: policy(p)?,
+        policy: pol,
         jacobi: jacobi_config(p),
         mask_o: 0,
         fused_sequential: false,
@@ -140,11 +159,10 @@ fn cmd_serve(p: &sjd::cli::Parsed) -> Result<()> {
         registry.clone(),
     )?;
     println!(
-        "serving model {} on {} ({} workers, policy {})",
+        "serving model {} on {} ({} workers, policy {policy_label})",
         p.str("model"),
         p.str("addr"),
         p.usize("workers")?,
-        p.str("policy")
     );
     let server = Server::new(p.str("addr"), batcher, registry);
     server.run()?;
@@ -198,7 +216,7 @@ fn cmd_recon(p: &sjd::cli::Parsed) -> Result<()> {
     // "Real" images (model samples stand in for dataset images on the rust
     // side) → encode → SJD decode → MSE (paper §E.4).
     let b = p.usize("batch")?;
-    let mut opts = SampleOptions::default();
+    let mut opts = SampleOptions { policy: policy(p)?, ..Default::default() };
     opts.jacobi = jacobi_config(p);
     let (reals, _) = sampler.sample_images(
         &SampleOptions { policy: DecodePolicy::Sequential, ..Default::default() },
@@ -222,6 +240,10 @@ fn cmd_recon(p: &sjd::cli::Parsed) -> Result<()> {
 }
 
 fn cmd_calibrate(p: &sjd::cli::Parsed) -> Result<()> {
+    let max_windows = p.usize("windows")?;
+    if max_windows == 0 {
+        bail!("--windows must be >= 1 (1 = plain Jacobi, more enables GS windowing)");
+    }
     let engine = Engine::new(p.str("artifacts"))?;
     let sampler = Sampler::new(&engine, p.str("model"), p.usize("batch")?)?;
     let mut rng = Pcg64::seed(7);
@@ -253,11 +275,17 @@ fn cmd_calibrate(p: &sjd::cli::Parsed) -> Result<()> {
             if j.converged { "" } else { " (no converge)" }
         );
     }
-    let pol = calibrate(&jstats, &seq_walls);
+    println!("binary policy (jacobi vs seq): {:?}", calibrate(&jstats, &seq_walls));
+    // The window-aware policy is what gets persisted: it subsumes the binary
+    // choice and learns per-block GS-Jacobi window counts from the traces.
+    let pol = calibrate_windows(&jstats, &seq_walls, sampler.meta.seq_len, max_windows);
     println!("calibrated policy: {:?}", pol);
-    let out = format!("{}_policy.json", p.str("model"));
+    let out = match p.str("out") {
+        "" => format!("{}_policy.json", p.str("model")),
+        path => path.to_string(),
+    };
     std::fs::write(&out, sjd::jsonx::to_string_pretty(&pol.to_json()))?;
-    println!("wrote {out} (use with --policy @{out})");
+    println!("wrote {out} (use with --policy-file {out})");
     Ok(())
 }
 

@@ -1,5 +1,33 @@
 //! Artifact manifest: the contract between `python/compile/aot.py` (which
 //! writes `artifacts/manifest.json`) and the rust [`super::Engine`].
+//!
+//! ## The `untupled_outputs` residency contract
+//!
+//! Besides each program's input/output signatures, the manifest records per
+//! artifact how its HLO **root** was lowered — and that decides whether
+//! `Engine::call_v` may return chainable device-resident values (see
+//! `docs/ARCHITECTURE.md` §L2 for the full picture):
+//!
+//! * [`ArtifactMeta::untupled_outputs`]` == true` — lowered with
+//!   `return_tuple=False` (single-output programs only, e.g.
+//!   `{m}_reverse_b{B}`). The root is the bare array; the runtime returns
+//!   one leaf buffer and the engine wraps it as a device [`super::Value`]
+//!   with no leaf-vs-tuple ambiguity. Zero host traffic when chained into
+//!   the next call.
+//! * `false` — the root is a result tuple (every legacy and multi-output
+//!   artifact). If the runtime untuples it into one buffer per output,
+//!   those chain device-side too; if it hands back a single tuple-rooted
+//!   buffer, the engine takes **one probed forced sync** (destructuring the
+//!   result literal, leaf vs tuple judged by shape) and returns host values
+//!   — chaining degrades gracefully to a host promotion on the next call,
+//!   correctness is unaffected, and the sync time is charged to
+//!   `CallStats::marshal_time` so the perf benches stay truthful.
+//!
+//! The flag is an *assertion about the lowering*, not a preference: setting
+//! it on a tuple-rooted artifact would make the engine mis-wrap the result
+//! buffer. `python/compile/aot.py` enforces the single-output restriction
+//! at lowering time; `python/tests/test_aot.py` pins the flag per artifact
+//! and `rust/tests/roundtrip.rs` is the engine-side canary.
 
 use crate::jsonx::{self, Value};
 use anyhow::{anyhow, Context, Result};

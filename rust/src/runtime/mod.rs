@@ -9,6 +9,12 @@
 //! artifact name; [`HostTensor`] is the host-side value type that crosses the
 //! boundary.
 //!
+//! This module is the L2 layer of the stack — see `docs/ARCHITECTURE.md` at
+//! the repo root for the full layer map (Pallas kernels → AOT manifest →
+//! this runtime → coordinator → HTTP server), and the `manifest.rs` module
+//! docs for the `untupled_outputs` output-residency contract the rules
+//! below depend on.
+//!
 //! ## Value lifecycle & device residency
 //!
 //! Execution is **value-based**: [`Backend::call_v`] consumes and produces

@@ -17,9 +17,10 @@
 //!   inverse: u_l = v_l + a_k · mean(u_{<l})   (triangular ⇒ Jacobi applies)
 
 use sjd::coordinator::jacobi::{
-    jacobi_decode_block, jacobi_decode_block_v, InitStrategy, JacobiConfig,
+    gs_jacobi_decode_block, gs_jacobi_decode_block_v, jacobi_decode_block,
+    jacobi_decode_block_v, window_partition, InitStrategy, JacobiConfig,
 };
-use sjd::coordinator::policy::DecodePolicy;
+use sjd::coordinator::policy::{BlockDecode, DecodePolicy};
 use sjd::coordinator::sampler::{SampleOptions, Sampler};
 use sjd::runtime::{Backend, DType, DeviceValue, HostTensor, ModelMeta, Value};
 use sjd::tensor::{Pcg64, Tensor};
@@ -94,6 +95,35 @@ impl MockFlow {
         (z_next, resid)
     }
 
+    /// Windowed GS-Jacobi inner step: positions outside [off, off+len) are
+    /// copied through; the residual covers the window only (it equals the
+    /// full max since frozen positions contribute |z' − z| = 0). Uses the
+    /// same `g_at` arithmetic as `jstep`/`seqstep`, so a full GS sweep is
+    /// bit-exact with sequential decoding.
+    fn jstep_win(
+        &self,
+        k: usize,
+        z: &[f32],
+        y: &[f32],
+        off: usize,
+        wlen: usize,
+        batch: usize,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let mut z_next = z.to_vec();
+        let mut resid = vec![0.0f32; batch];
+        for b in 0..batch {
+            for l in off..(off + wlen).min(L) {
+                let g = self.g_at(k, z, b, l);
+                for di in 0..D {
+                    let idx = (b * L + l) * D + di;
+                    z_next[idx] = if l == 0 { y[idx] } else { y[idx] + g[di] };
+                    resid[b] = resid[b].max((z_next[idx] - z[idx]).abs());
+                }
+            }
+        }
+        (z_next, resid)
+    }
+
     fn g_at_masked(&self, k: usize, z: &[f32], b: usize, l_idx: usize, bound: usize) -> Vec<f32> {
         let a = self.a[k];
         let mut g = vec![0.0f32; D];
@@ -130,6 +160,9 @@ struct MockBackend {
     traffic: RefCell<Traffic>,
     /// Expose the optional `{m}_reverse_b{B}` device-side gather artifact.
     device_reverse: bool,
+    /// Expose the optional `{m}_block_jstep_win_b{B}` GS-Jacobi artifact
+    /// (false models a pre-windowing artifact dir → Sampler falls back).
+    windowed_jstep: bool,
 }
 
 /// Mint a mock device value: the payload is just an `Rc`'d host tensor.
@@ -157,11 +190,16 @@ impl MockBackend {
             calls: Default::default(),
             traffic: Default::default(),
             device_reverse: false,
+            windowed_jstep: true,
         }
     }
 
     fn with_device_reverse() -> Self {
         MockBackend { device_reverse: true, ..MockBackend::new() }
+    }
+
+    fn without_jstep_win() -> Self {
+        MockBackend { windowed_jstep: false, ..MockBackend::new() }
     }
 
     fn count(&self, name: &str) -> usize {
@@ -183,7 +221,18 @@ impl MockBackend {
     /// The artifact math, on host tensors (shared by every entry path).
     fn exec_host(&self, name: &str, inputs: &[HostTensor]) -> anyhow::Result<Vec<HostTensor>> {
         let batch = 2usize;
-        if name.contains("block_jstep") {
+        if name.contains("jstep_win") {
+            let k = inputs[0].as_i32()?[0] as usize;
+            let z = inputs[1].as_f32()?;
+            let y = inputs[2].as_f32()?;
+            let off = inputs[3].as_i32()?[0] as usize;
+            let wlen = inputs[4].as_i32()?[0] as usize;
+            let (zn, r) = self.flow.jstep_win(k, z, y, off, wlen, batch);
+            Ok(vec![
+                HostTensor::f32(inputs[1].shape(), zn),
+                HostTensor::f32(&[batch], r),
+            ])
+        } else if name.contains("block_jstep") {
             let k = inputs[0].as_i32()?[0] as usize;
             let z = inputs[1].as_f32()?;
             let y = inputs[2].as_f32()?;
@@ -289,6 +338,9 @@ impl Backend for MockBackend {
     fn has_artifact(&self, name: &str) -> bool {
         if name.contains("_reverse_") {
             return self.device_reverse;
+        }
+        if name.contains("jstep_win") {
+            return self.windowed_jstep;
         }
         true
     }
@@ -634,6 +686,274 @@ fn patchify_unpatchify_roundtrip_non_square() {
     let imgs2 = sampler.unpatchify(&toks2).unwrap();
     let toks2_back = sampler.patchify(&imgs2).unwrap();
     assert_eq!(toks2_back, toks2, "token roundtrip must be exact");
+}
+
+// ---------------------------------------------------------------------------
+// Windowed GS-Jacobi decoding
+// ---------------------------------------------------------------------------
+
+#[test]
+fn gs_jacobi_bit_exact_with_sequential() {
+    // With τ = 0 every window runs its exactness cap (`len` iterations,
+    // Prop 3.2 per window), so the GS sweep must reproduce the sequential
+    // decode BIT-EXACTLY — same conditioner arithmetic on exactly-converged
+    // prefixes — for every window count, including W=1 (plain Jacobi),
+    // W=L (sequential-equivalent) and non-divisible partitions.
+    let be = MockBackend::new();
+    let sampler = mk_sampler(&be);
+    let u = randn(&[2, L, D], 31);
+    let v = HostTensor::f32(&[2, L, D], be.flow.fwd(1, u.as_f32().unwrap(), 2));
+    let (u_seq, _) = sampler.sequential_decode_block(1, &v).unwrap();
+    let exact = JacobiConfig { tau: 0.0, ..Default::default() };
+    for windows in [1, 2, 3, 5, L] {
+        let (u_gs, stats) =
+            gs_jacobi_decode_block(&be, "mock_block_jstep_win_b2", 1, &v, L, windows, &exact)
+                .unwrap();
+        assert_eq!(
+            u_gs.as_f32().unwrap(),
+            u_seq.as_f32().unwrap(),
+            "W={windows} must be bit-exact with sequential decode"
+        );
+        // τ = 0 ⇒ every window ran its full exactness cap.
+        let expected: usize = window_partition(L, windows).iter().map(|(_, l)| l * l).sum();
+        assert_eq!(stats.position_updates, expected);
+        assert_eq!(stats.windows.len(), windows.min(L));
+    }
+}
+
+#[test]
+fn gs_w1_matches_plain_jacobi_bitwise() {
+    // W=1 runs the identical per-iteration arithmetic as full-sequence
+    // Jacobi (one window covering everything), so even intermediate-τ runs
+    // are bitwise interchangeable at τ = 0 / full cap.
+    let be = MockBackend::new();
+    let y = randn(&[2, L, D], 32);
+    let cfg = JacobiConfig { tau: 0.0, ..Default::default() };
+    let (z_gs, gstats) =
+        gs_jacobi_decode_block(&be, "m_jstep_win", 0, &y, L, 1, &cfg).unwrap();
+    let cfg_j = JacobiConfig { tau: 0.0, max_iters: Some(L), ..Default::default() };
+    let (z_j, jstats) = jacobi_decode_block(&be, "m_block_jstep", 0, &y, L, &cfg_j, 0).unwrap();
+    assert_eq!(z_gs.as_f32().unwrap(), z_j.as_f32().unwrap());
+    assert_eq!(gstats.iterations, jstats.iterations);
+    assert_eq!(gstats.position_updates, L * L);
+}
+
+#[test]
+fn gs_fewer_position_updates_than_ujd_at_equal_tau() {
+    // The acceptance property: at the same τ, the windowed sweep performs
+    // strictly fewer position-updates than full-sequence Jacobi on a
+    // strongly coupled block, while converging to the same fixed point.
+    let be = MockBackend::new();
+    let u = randn(&[2, L, D], 33);
+    let v = HostTensor::f32(&[2, L, D], be.flow.fwd(0, u.as_f32().unwrap(), 2));
+    let tau = 1e-5f32;
+    let cfg = JacobiConfig { tau, ..Default::default() };
+    let (z_ujd, ujd) = jacobi_decode_block(&be, "m_block_jstep", 0, &v, L, &cfg, 0).unwrap();
+    let ujd_updates = ujd.iterations * L;
+    for windows in [2, 4] {
+        let (z_gs, gs) =
+            gs_jacobi_decode_block(&be, "m_jstep_win", 0, &v, L, windows, &cfg).unwrap();
+        assert!(gs.converged, "W={windows} must converge at τ={tau}");
+        assert!(
+            gs.position_updates < ujd_updates,
+            "W={windows}: {} position-updates vs UJD's {ujd_updates}",
+            gs.position_updates
+        );
+        assert!(max_abs_diff(&z_gs, &z_ujd) < 10.0 * tau);
+        assert!(max_abs_diff(&z_gs, &u) < 10.0 * tau);
+    }
+}
+
+#[test]
+fn gs_front_tracking_and_window_stats() {
+    let be = MockBackend::new();
+    let u = randn(&[2, L, D], 34);
+    let v = HostTensor::f32(&[2, L, D], be.flow.fwd(2, u.as_f32().unwrap(), 2));
+    // Short windows at tight τ: every window runs its full exactness cap
+    // (the last movement inside a 2-position window exceeds τ), yet the
+    // front advances to L via Prop 3.2 and the result is final.
+    let cfg = JacobiConfig { tau: 1e-6, ..Default::default() };
+    let (_, stats) = gs_jacobi_decode_block(&be, "m_jstep_win", 2, &v, L, 4, &cfg).unwrap();
+    assert!(stats.converged);
+    assert_eq!(stats.front, vec![L, L]);
+    // Window bookkeeping is consistent with the partition.
+    let parts = window_partition(L, 4);
+    assert_eq!(stats.windows.len(), parts.len());
+    let mut iter_sum = 0;
+    let mut update_sum = 0;
+    for (ws, (off, len)) in stats.windows.iter().zip(parts) {
+        assert_eq!((ws.offset, ws.len), (off, len));
+        assert!(ws.iterations >= 1 && ws.iterations <= len);
+        assert_eq!(ws.residuals.len(), ws.iterations);
+        iter_sum += ws.iterations;
+        update_sum += ws.iterations * len;
+    }
+    assert_eq!(stats.iterations, iter_sum);
+    assert_eq!(stats.position_updates, update_sum);
+
+    // Weak coupling + a long window + loose τ: the movement contracts below
+    // τ before the cap, so per-element converged_at records the τ iteration
+    // and the window is τ-certified.
+    let cfg = JacobiConfig { tau: 1e-2, ..Default::default() };
+    let (_, stats) = gs_jacobi_decode_block(&be, "m_jstep_win", 2, &v, L, 1, &cfg).unwrap();
+    assert!(stats.converged);
+    assert_eq!(stats.front, vec![L, L]);
+    let ws = &stats.windows[0];
+    assert!(ws.converged, "weak coupling must τ-converge before the cap");
+    assert!(ws.iterations < L, "τ must stop the window early, got {}", ws.iterations);
+    for c in &ws.converged_at {
+        let c = c.expect("converged_at recorded per batch element");
+        assert!(c >= 1 && c <= ws.iterations);
+    }
+
+    // max_iters is a TOTAL budget shared across windows (same meaning as in
+    // plain Jacobi): one iteration overall, not one per window — and with τ
+    // never fired and the exactness cap never completed, the front must not
+    // advance.
+    let cfg = JacobiConfig { tau: 1e-9, max_iters: Some(1), ..Default::default() };
+    let (_, stats) = gs_jacobi_decode_block(&be, "m_jstep_win", 0, &v, L, 2, &cfg).unwrap();
+    assert_eq!(stats.iterations, 1, "budget of 1 must cover the whole block");
+    assert_eq!(stats.windows[1].iterations, 0, "second window gets no leftover budget");
+    assert!(!stats.converged);
+    assert_eq!(stats.front, vec![0, 0]);
+}
+
+#[test]
+fn gs_keeps_iterate_device_resident() {
+    // Same traffic contract as full-sequence Jacobi: y uploads once, the
+    // iterate chains device→device across windows AND iterations, only the
+    // [B] windowed residual syncs per iteration.
+    let be = MockBackend::new();
+    let u = randn(&[2, L, D], 35);
+    let v = HostTensor::f32(&[2, L, D], be.flow.fwd(0, u.as_f32().unwrap(), 2));
+    let cfg =
+        JacobiConfig { tau: 1e-6, init: InitStrategy::PrevLayer, ..Default::default() };
+    let (zv, stats) = gs_jacobi_decode_block_v(
+        &be,
+        "mock_block_jstep_win_b2",
+        0,
+        &Value::Host(v),
+        L,
+        4,
+        &cfg,
+        None,
+    )
+    .unwrap();
+    // PrevLayer init: z⁰ reuses y's device handle ⇒ exactly one upload.
+    assert_eq!(be.uploads_of(&[2, L, D]), 1, "y must be uploaded exactly once");
+    assert_eq!(be.promoted("mock_block_jstep_win_b2"), 0);
+    assert_eq!(be.syncs_of(&[2]), stats.iterations);
+    assert_eq!(be.syncs_of(&[2, L, D]), 0, "the iterate must stay on device");
+    assert!(zv.is_device());
+    let z = be.to_host(zv).unwrap();
+    assert_eq!(be.syncs_of(&[2, L, D]), 1);
+    assert!(max_abs_diff(&u, &z) < 1e-3);
+}
+
+#[test]
+fn decode_tokens_gs_policy_routes_and_accounts() {
+    let be = MockBackend::new();
+    let sampler = mk_sampler(&be);
+    let z0 = randn(&[2, L, D], 36);
+    let mut opts =
+        SampleOptions { policy: DecodePolicy::GsJacobi { windows: 2 }, ..Default::default() };
+    opts.jacobi.tau = 1e-7;
+    let out = sampler.decode_tokens(z0.clone(), &opts).unwrap();
+    assert_eq!(be.count("mock_block_seqstep_b2"), 0);
+    assert_eq!(be.count("mock_block_jstep_b2"), 0, "GS policy must not call plain jstep");
+    assert!(be.count("mock_block_jstep_win_b2") >= K);
+    let mut updates = 0;
+    for t in &out.traces {
+        assert!(t.used_jacobi);
+        let gs = t.gs.as_ref().expect("gs stats recorded");
+        assert!(t.jacobi.is_none());
+        assert_eq!(t.steps, gs.iterations);
+        assert_eq!(t.position_updates, gs.position_updates);
+        updates += gs.position_updates;
+    }
+    assert_eq!(out.total_position_updates(), updates);
+
+    // Decode∘encode identity holds through the GS path too.
+    let mut h = out.tokens;
+    for k in 0..K {
+        let u = if k % 2 == 1 { sampler.reverse_tokens(&h).unwrap() } else { h };
+        h = sampler.block_forward(k, &u).unwrap();
+    }
+    assert!(max_abs_diff(&z0, &h) < 1e-3, "decode∘encode identity through GS");
+}
+
+#[test]
+fn gs_policy_falls_back_to_jacobi_without_artifact() {
+    // Artifact dirs lowered before the windowed step exist: the sampler must
+    // degrade GS block modes to full-sequence Jacobi, not fail.
+    let be = MockBackend::without_jstep_win();
+    let sampler = mk_sampler(&be);
+    let z0 = randn(&[2, L, D], 37);
+    let mut opts =
+        SampleOptions { policy: DecodePolicy::GsJacobi { windows: 4 }, ..Default::default() };
+    opts.jacobi.tau = 1e-7;
+    let out = sampler.decode_tokens(z0, &opts).unwrap();
+    assert_eq!(be.count("mock_block_jstep_win_b2"), 0);
+    assert!(be.count("mock_block_jstep_b2") >= K);
+    for t in &out.traces {
+        assert!(t.used_jacobi);
+        assert!(t.gs.is_none(), "fallback must be recorded as plain Jacobi");
+        assert!(t.jacobi.is_some());
+        assert_eq!(t.position_updates, t.steps * L);
+    }
+
+    // A masked (eq-6) decode must also bypass the windowed artifact even
+    // when it exists: jstep_win computes the exact o=0 update only, and
+    // mask semantics must not depend on the lowered artifact set.
+    let be = MockBackend::new();
+    let sampler = mk_sampler(&be);
+    let z0 = randn(&[2, L, D], 39);
+    let opts = SampleOptions {
+        policy: DecodePolicy::GsJacobi { windows: 4 },
+        mask_o: 2,
+        ..Default::default()
+    };
+    let _ = sampler.decode_tokens(z0, &opts).unwrap();
+    assert_eq!(be.count("mock_block_jstep_win_b2"), 0);
+    assert!(be.count("mock_block_jstep_b2") >= K);
+}
+
+#[test]
+fn per_block_policy_mixes_all_three_modes() {
+    let be = MockBackend::new();
+    let sampler = mk_sampler(&be);
+    let z0 = randn(&[2, L, D], 38);
+    let mut opts = SampleOptions {
+        policy: DecodePolicy::PerBlock {
+            modes: vec![
+                BlockDecode::Sequential,
+                BlockDecode::GsJacobi { windows: 2 },
+                BlockDecode::Jacobi,
+                BlockDecode::GsJacobi { windows: L },
+            ],
+        },
+        ..Default::default()
+    };
+    opts.jacobi.tau = 1e-7;
+    let out = sampler.decode_tokens(z0.clone(), &opts).unwrap();
+    assert_eq!(be.count("mock_block_seqstep_b2"), L);
+    assert!(be.count("mock_block_jstep_b2") >= 1);
+    assert!(be.count("mock_block_jstep_win_b2") >= 2);
+    assert!(!out.traces[0].used_jacobi);
+    assert!(out.traces[1].gs.is_some());
+    assert!(out.traces[2].jacobi.is_some());
+    assert!(out.traces[3].gs.is_some());
+    // The W=L position got one exact update per position.
+    assert_eq!(out.traces[3].position_updates, L);
+    assert_eq!(out.traces[0].position_updates, L);
+
+    // End-to-end correctness across mixed modes.
+    let mut h = out.tokens;
+    for k in 0..K {
+        let u = if k % 2 == 1 { sampler.reverse_tokens(&h).unwrap() } else { h };
+        h = sampler.block_forward(k, &u).unwrap();
+    }
+    assert!(max_abs_diff(&z0, &h) < 1e-3);
 }
 
 #[test]
