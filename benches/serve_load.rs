@@ -1,0 +1,295 @@
+//! Serving-path load benchmark over the **mock backend** — no artifacts
+//! needed, so it runs everywhere (including the CI smoke step).
+//!
+//! Compares two configurations of the full socket→batcher→router→encode
+//! path under the same Poisson-ish open-loop workload of `n=1` requests:
+//!
+//! * **baseline** — the pre-bucketing stack shape: one decode bucket (8,
+//!   every request padded up to it) and a single connection-handling
+//!   thread (serial accept).
+//! * **bucketed** — buckets {1, 2, 4, 8} with bucket-covering dispatch and
+//!   a pooled connection handler.
+//!
+//! The mock's decode cost scales with the *bucket* batch size (each
+//! jstep/seqstep call sleeps `slot_delay × B`), so padded slots burn real
+//! wall time — exactly the waste the bucketed engine removes. Reported per
+//! run: throughput, client p50/p99, and the server-side queue-wait /
+//! decode / encode histogram breakdown. Exits non-zero if the bucketed
+//! configuration fails to beat the baseline on both throughput and p99.
+//!
+//! ```bash
+//! cargo bench --bench serve_load            # full run (256 requests)
+//! cargo bench --bench serve_load -- --quick # CI smoke (64 requests)
+//! ```
+
+use anyhow::Result;
+use sjd::coordinator::batcher::Batcher;
+use sjd::coordinator::policy::DecodePolicy;
+use sjd::coordinator::router::{Router, RouterConfig};
+use sjd::coordinator::sampler::SampleOptions;
+use sjd::coordinator::server::{Server, ServerConfig};
+use sjd::exec::ThreadPool;
+use sjd::metrics::Registry;
+use sjd::tensor::Pcg64;
+use sjd::testkit::mockflow::{MockLedger, MockServeBackend};
+use std::io::{BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Per-slot artificial decode cost (per jstep/seqstep call, × batch size).
+const SLOT_DELAY: Duration = Duration::from_micros(300);
+
+fn quick() -> bool {
+    std::env::args().any(|a| a == "--quick") || std::env::var("SJD_QUICK").is_ok()
+}
+
+struct RunStats {
+    label: &'static str,
+    wall: Duration,
+    ok: u64,
+    latencies_ms: Vec<f64>,
+    padded_slots: u64,
+    queue_p50_ms: f64,
+    decode_p50_ms: f64,
+    encode_p50_ms: f64,
+}
+
+impl RunStats {
+    fn throughput(&self) -> f64 {
+        self.ok as f64 / self.wall.as_secs_f64()
+    }
+
+    fn p50(&self) -> f64 {
+        pct(&self.latencies_ms, 0.50)
+    }
+
+    fn p99(&self) -> f64 {
+        pct(&self.latencies_ms, 0.99)
+    }
+}
+
+fn pct(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    sorted[((sorted.len() as f64 - 1.0) * q) as usize]
+}
+
+/// POST one `/generate` on an open connection and read the response by
+/// content-length (leaves the stream reusable for keep-alive clients).
+fn generate_once(
+    writer: &mut TcpStream,
+    reader: &mut BufReader<TcpStream>,
+    seed: usize,
+    keep_alive: bool,
+) -> Result<bool> {
+    let body = format!("{{\"n\": 1, \"seed\": {seed}}}");
+    let conn = if keep_alive { "keep-alive" } else { "close" };
+    write!(
+        writer,
+        "POST /generate HTTP/1.1\r\nHost: bench\r\nConnection: {conn}\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )?;
+    let (head, _body) = sjd::testkit::http::read_response(reader)?;
+    Ok(head.starts_with("HTTP/1.1 200"))
+}
+
+fn run_config(
+    label: &'static str,
+    addr: &'static str,
+    buckets: &[usize],
+    conn_threads: usize,
+    // Baseline clients mimic the pre-bucketing stack (one request per
+    // connection); bucketed clients hold keep-alive connections.
+    keep_alive: bool,
+    n_requests: usize,
+    rps: f64,
+) -> Result<RunStats> {
+    let registry = Registry::new();
+    let max_bucket = *buckets.iter().max().unwrap();
+    let batcher = Batcher::new(max_bucket, Duration::from_millis(2));
+    let bucket_vec = buckets.to_vec();
+    let ledger = MockLedger::new();
+    let router = Router::start_with(
+        RouterConfig {
+            artifacts_dir: "mock".into(),
+            model: "mock".into(),
+            buckets: Vec::new(),
+            workers: 2,
+            options: SampleOptions {
+                policy: DecodePolicy::Selective { seq_blocks: 1 },
+                ..Default::default()
+            },
+        },
+        batcher.clone(),
+        registry.clone(),
+        move |_| Ok(MockServeBackend::new(&bucket_vec, SLOT_DELAY, ledger.clone())),
+    )?;
+    let server = Server::with_config(
+        addr,
+        batcher.clone(),
+        registry.clone(),
+        ServerConfig { conn_threads, ..Default::default() },
+    );
+    let stop = server.stop_flag();
+    let server_thread = std::thread::spawn(move || server.run());
+    for _ in 0..100 {
+        if TcpStream::connect(addr).is_ok() {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // Open-loop load: Poisson arrivals dispatched to a client pool. With
+    // keep-alive, each client thread holds one persistent connection
+    // (thread-local); otherwise every request dials fresh.
+    let lat = Arc::new(Mutex::new(Vec::new()));
+    let ok = Arc::new(AtomicU64::new(0));
+    let mut rng = Pcg64::seed(999);
+    let t0 = Instant::now();
+    let wall;
+    {
+        let pool = ThreadPool::new(8);
+        for i in 0..n_requests {
+            let gap = rng.next_exp() / rps;
+            std::thread::sleep(Duration::from_secs_f64(gap));
+            let lat = lat.clone();
+            let ok = ok.clone();
+            pool.spawn(move || {
+                thread_local! {
+                    static CONN: std::cell::RefCell<Option<(TcpStream, BufReader<TcpStream>)>> =
+                        const { std::cell::RefCell::new(None) };
+                }
+                let dial = || -> Option<(TcpStream, BufReader<TcpStream>)> {
+                    let s = TcpStream::connect(addr).ok()?;
+                    s.set_read_timeout(Some(Duration::from_secs(60))).ok()?;
+                    let r = BufReader::new(s.try_clone().ok()?);
+                    Some((s, r))
+                };
+                let t = Instant::now();
+                let success = if keep_alive {
+                    CONN.with(|c| {
+                        let mut c = c.borrow_mut();
+                        // The server legitimately reaps connections idle past
+                        // its keep-alive timeout, so a send failure redials
+                        // and retries once before counting a real failure.
+                        for _attempt in 0..2 {
+                            if c.is_none() {
+                                *c = dial();
+                            }
+                            let (w, r) = c.as_mut()?;
+                            match generate_once(w, r, i, true) {
+                                Ok(okay) => return Some(okay),
+                                Err(_) => *c = None,
+                            }
+                        }
+                        None
+                    })
+                } else {
+                    dial().and_then(|(mut w, mut r)| generate_once(&mut w, &mut r, i, false).ok())
+                };
+                if success == Some(true) {
+                    ok.fetch_add(1, Ordering::SeqCst);
+                }
+                lat.lock().unwrap().push(t.elapsed().as_secs_f64() * 1e3);
+            });
+        }
+        pool.wait_idle();
+        wall = t0.elapsed();
+        // Dropping the pool closes the keep-alive client connections, so the
+        // server's handler threads see EOF and wind down promptly.
+    }
+
+    let mut latencies = lat.lock().unwrap().clone();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let stats = RunStats {
+        label,
+        wall,
+        ok: ok.load(Ordering::SeqCst),
+        latencies_ms: latencies,
+        padded_slots: registry.counter("sjd_padded_slots").get(),
+        queue_p50_ms: registry.histogram("sjd_queue_wait").snapshot().p50() as f64 / 1e6,
+        decode_p50_ms: registry.histogram("sjd_decode_time").snapshot().p50() as f64 / 1e6,
+        encode_p50_ms: registry.histogram("sjd_encode_time").snapshot().p50() as f64 / 1e6,
+    };
+
+    stop.store(true, Ordering::SeqCst);
+    let _ = TcpStream::connect(addr);
+    let _ = server_thread.join();
+    router.shutdown();
+    Ok(stats)
+}
+
+fn report(s: &RunStats, n_requests: usize) {
+    println!(
+        "[{}] {} ok / {} reqs in {:.2}s → {:.1} req/s | client ms p50 {:.1} p99 {:.1} \
+         | server p50 ms queue {:.1} decode {:.1} encode {:.2} | padded slots {}",
+        s.label,
+        s.ok,
+        n_requests,
+        s.wall.as_secs_f64(),
+        s.throughput(),
+        s.p50(),
+        s.p99(),
+        s.queue_p50_ms,
+        s.decode_p50_ms,
+        s.encode_p50_ms,
+        s.padded_slots,
+    );
+}
+
+fn main() -> Result<()> {
+    let n_requests = if quick() { 64 } else { 256 };
+    let rps = 60.0;
+    println!("=== serve_load: {n_requests} × n=1 requests at ~{rps} req/s (mock backend) ===");
+
+    let baseline = run_config(
+        "baseline  single-bucket{8} serial-accept",
+        "127.0.0.1:8511",
+        &[8],
+        1,
+        false,
+        n_requests,
+        rps,
+    )?;
+    report(&baseline, n_requests);
+
+    let bucketed = run_config(
+        "bucketed  buckets{1,2,4,8} pooled-accept",
+        "127.0.0.1:8512",
+        &[1, 2, 4, 8],
+        8,
+        true,
+        n_requests,
+        rps,
+    )?;
+    report(&bucketed, n_requests);
+
+    let thr_gain = bucketed.throughput() / baseline.throughput();
+    let p99_gain = baseline.p99() / bucketed.p99().max(1e-9);
+    println!("\n=== summary ===");
+    println!(
+        "throughput {:.1} → {:.1} req/s ({thr_gain:.2}x) | p99 {:.1} → {:.1} ms ({p99_gain:.2}x) \
+         | padded slots {} → {}",
+        baseline.throughput(),
+        bucketed.throughput(),
+        baseline.p99(),
+        bucketed.p99(),
+        baseline.padded_slots,
+        bucketed.padded_slots,
+    );
+
+    let all_ok = baseline.ok == n_requests as u64 && bucketed.ok == n_requests as u64;
+    let faster = bucketed.throughput() > baseline.throughput() && bucketed.p99() < baseline.p99();
+    if all_ok && faster {
+        println!("PASS: bucketed serving beats the single-bucket serial baseline");
+        Ok(())
+    } else {
+        println!(
+            "FAIL: all_ok={all_ok} faster={faster} — the bucketed path must dominate the baseline"
+        );
+        std::process::exit(1);
+    }
+}

@@ -28,7 +28,7 @@ fn http_post(addr: &str, path: &str, body: &str) -> Result<String> {
     stream.set_read_timeout(Some(Duration::from_secs(300)))?;
     write!(
         stream,
-        "POST {path} HTTP/1.1\r\nHost: sjd\r\nContent-Length: {}\r\n\r\n{body}",
+        "POST {path} HTTP/1.1\r\nHost: sjd\r\nConnection: close\r\nContent-Length: {}\r\n\r\n{body}",
         body.len()
     )?;
     let mut resp = String::new();
@@ -103,7 +103,9 @@ fn serve_and_measure(
         RouterConfig {
             artifacts_dir: artifacts.into(),
             model: "tf10".into(),
-            batch_size: 8,
+            // Every lowered bucket: n=1 requests ride the b1 artifacts
+            // instead of being padded to the full batch.
+            buckets: Vec::new(),
             workers: 2,
             options: SampleOptions { policy, ..Default::default() },
         },
@@ -131,7 +133,11 @@ fn serve_and_measure(
     // Print server-side metrics.
     let metrics = registry.render_text();
     for line in metrics.lines() {
-        if line.starts_with("sjd_images_generated") || line.starts_with("sjd_batch_fill") {
+        if line.starts_with("sjd_images_generated")
+            || line.starts_with("sjd_batch_fill")
+            || line.starts_with("sjd_padded_slots")
+            || line.starts_with("sjd_bucket_")
+        {
             println!("  {line}");
         }
     }

@@ -67,9 +67,34 @@ MMDGEN_CFG = baselines.MmdGenConfig(
     name="mmdgen", img_hw=16, channels=3, z_dim=64, hidden=64,
     dataset="synth10", train_steps=300, train_batch=64, lr=1e-3)
 
-# Batch sizes to lower per model family.
+# Batch sizes to lower per model family. Each tarflow batch size becomes one
+# serving *bucket*: the full per-batch artifact family
+# (fwd/block_fwd/jstep/jstep_win/seqfull/seqstep/reverse) is lowered per
+# bucket, and the rust router dispatches each formed batch to the smallest
+# bucket covering it (`Manifest::decode_buckets` groups them back). Override
+# with --batch-sizes, e.g. `--batch-sizes 1,2,4,8` for fine-grained serving.
 TF_BATCHES = {"tf10": [1, 8], "tf100": [1, 8], "tfafhq": [1, 4]}
 MAF_BATCHES = {"maf_ising": [256], "maf_img": [50]}
+
+
+def parse_batch_sizes(spec: str):
+    """Parse a `--batch-sizes` list ("1,2,4,8") into sorted unique buckets.
+
+    Empty/whitespace spec → None (use the per-model defaults above).
+    """
+    parts = [p.strip() for p in spec.split(",") if p.strip()]
+    if not parts:
+        return None
+    sizes = set()
+    for p in parts:
+        try:
+            b = int(p)
+        except ValueError:
+            raise ValueError(f"bad bucket size {p!r} in --batch-sizes") from None
+        if b < 1:
+            raise ValueError(f"bucket sizes must be >= 1, got {b}")
+        sizes.add(b)
+    return sorted(sizes)
 
 
 # ---------------------------------------------------------------------------
@@ -362,12 +387,16 @@ def main():
     ap.add_argument("--force-retrain", action="store_true")
     ap.add_argument("--quick", action="store_true",
                     help="slash train steps 10x (CI / smoke use)")
+    ap.add_argument("--batch-sizes", default="",
+                    help="comma-separated decode buckets lowered per tarflow "
+                         "model, e.g. 1,2,4,8 (default: per-model table)")
     args = ap.parse_args()
 
     out_dir = pathlib.Path(args.out_dir).resolve()
     out_dir.mkdir(parents=True, exist_ok=True)
     weights_dir = out_dir / "weights"
     only = set(filter(None, args.only.split(",")))
+    tf_buckets = parse_batch_sizes(args.batch_sizes)
 
     def want(name):
         return not only or name in only
@@ -391,7 +420,7 @@ def main():
             force=args.force_retrain)
         if loss_log:
             (out_dir / f"{name}_train_loss.json").write_text(json.dumps(loss_log))
-        lower_tarflow(w, cfg, params, TF_BATCHES[name])
+        lower_tarflow(w, cfg, params, tf_buckets or TF_BATCHES[name])
 
     for name, cfg in MAF_MODELS.items():
         if not want(name):

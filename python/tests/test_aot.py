@@ -100,6 +100,42 @@ class TestArtifactWriter:
         assert win["untupled_outputs"] is False
 
 
+class TestBatchBuckets:
+    def test_parse_batch_sizes(self):
+        assert aot.parse_batch_sizes("") is None
+        assert aot.parse_batch_sizes("  ") is None
+        assert aot.parse_batch_sizes("1,2,4,8") == [1, 2, 4, 8]
+        # Sorted, deduped, whitespace-tolerant.
+        assert aot.parse_batch_sizes("8, 1, 4, 1") == [1, 4, 8]
+        with pytest.raises(ValueError):
+            aot.parse_batch_sizes("1,x")
+        with pytest.raises(ValueError):
+            aot.parse_batch_sizes("0,2")
+
+    def test_bucketed_lowering_emits_full_family_per_bucket(self, tiny_tf, tmp_path):
+        """Every decode artifact role must exist per bucket — this is the
+        completeness invariant the rust `Manifest::decode_buckets` grouping
+        relies on when it marks a bucket routable."""
+        cfg, params = tiny_tf
+        w = aot.ArtifactWriter(tmp_path)
+        aot.lower_tarflow(w, cfg, params, [1, 2])
+        w.write_manifest()
+        manifest = json.loads((tmp_path / "manifest.json").read_text())
+        names = {a["name"] for a in manifest["artifacts"]}
+        roles = ["fwd", "block_fwd", "block_jstep", "block_jstep_win",
+                 "block_seqfull", "block_seqstep", "reverse"]
+        for b in (1, 2):
+            for role in roles:
+                assert f"tiny_{role}_b{b}" in names, f"missing {role} for bucket {b}"
+        assert manifest["models"][0]["batch_sizes"] == [1, 2]
+        # Shapes actually carry the bucket's batch dimension.
+        by_name = {a["name"]: a for a in manifest["artifacts"]}
+        for b in (1, 2):
+            jstep = by_name[f"tiny_block_jstep_b{b}"]
+            assert jstep["inputs"][1]["shape"] == [b, cfg.seq_len, cfg.token_dim]
+            assert jstep["outputs"][1]["shape"] == [b]
+
+
 class TestBaselines:
     def test_metricnet_features_shift_sensitive(self):
         cfg = metricnet.MetricNetConfig(name="m", img_hw=16)

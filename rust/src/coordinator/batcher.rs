@@ -1,30 +1,40 @@
 //! Dynamic request batching.
 //!
-//! Artifacts are lowered for fixed batch sizes, so the batcher groups
-//! single-image slots from concurrent requests into one model batch of
-//! exactly `batch_size` slots, padding with throwaway slots when a deadline
-//! expires before the batch fills (vLLM-style max-wait batching).
+//! Artifacts are lowered for a *set* of fixed batch sizes (buckets), so the
+//! batcher groups single-image slots from concurrent requests into one model
+//! batch of up to `max_batch` slots — the largest lowered bucket — flushing a
+//! partial batch when a deadline expires before it fills (vLLM-style
+//! max-wait batching). The batcher never pads: the router worker picks the
+//! smallest bucket covering the formed batch and pads only the gap to *that*
+//! bucket (tracked in the `sjd_padded_slots` counter), so an `n=1` request
+//! served by a `{1,2,4,8}` bucket set decodes zero throwaway slots.
 
 use crate::exec::OneShot;
 use crate::tensor::Tensor;
+use anyhow::{bail, Result};
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+/// What a slot's completion channel carries: the generated (H, W, C) image,
+/// or the decode error message (`String` so every slot of a failed batch
+/// gets its own copy) — the HTTP layer turns it into a 500 instead of
+/// returning a silently-black 200.
+pub type SlotResult = std::result::Result<Tensor, String>;
 
 /// One image slot of a request.
 pub struct Slot {
     pub request_id: u64,
     pub seed: u64,
-    /// Completion channel: receives the generated (H, W, C) image.
-    pub done: OneShot<Tensor>,
+    /// Completion channel: receives the image or the decode error.
+    pub done: OneShot<SlotResult>,
     pub enqueued: Instant,
 }
 
-/// A formed batch handed to a worker.
+/// A formed batch handed to a worker: between 1 and `max_batch` real slots.
+/// Bucket choice — and therefore padding — is the worker's job.
 pub struct Batch {
     pub slots: Vec<Slot>,
-    /// Number of padding slots added to reach the artifact batch size.
-    pub padding: usize,
     pub formed: Instant,
 }
 
@@ -37,54 +47,68 @@ struct QueueInner {
 #[derive(Clone)]
 pub struct Batcher {
     inner: Arc<(Mutex<QueueInner>, Condvar)>,
-    pub batch_size: usize,
+    /// Largest batch a worker will be handed (= the largest decode bucket).
+    pub max_batch: usize,
     pub max_wait: Duration,
 }
 
 impl Batcher {
-    pub fn new(batch_size: usize, max_wait: Duration) -> Self {
-        assert!(batch_size > 0);
+    pub fn new(max_batch: usize, max_wait: Duration) -> Self {
+        assert!(max_batch > 0);
         Batcher {
             inner: Arc::new((
                 Mutex::new(QueueInner { slots: VecDeque::new(), closed: false }),
                 Condvar::new(),
             )),
-            batch_size,
+            max_batch,
             max_wait,
         }
     }
 
-    /// Enqueue one slot; returns its completion handle.
-    pub fn submit(&self, request_id: u64, seed: u64) -> OneShot<Tensor> {
+    /// Enqueue one slot; returns its completion handle. Fails fast once the
+    /// queue is [`Self::close`]d — workers drain and exit after close, so a
+    /// late slot would otherwise sit in the queue forever and its completion
+    /// handle would never fire.
+    pub fn submit(&self, request_id: u64, seed: u64) -> Result<OneShot<SlotResult>> {
         let done = OneShot::new();
         let slot = Slot { request_id, seed, done: done.clone(), enqueued: Instant::now() };
         let (m, cv) = &*self.inner;
-        m.lock().unwrap().slots.push_back(slot);
+        {
+            let mut q = m.lock().unwrap();
+            if q.closed {
+                bail!("batcher is closed (server shutting down)");
+            }
+            q.slots.push_back(slot);
+        }
         cv.notify_all();
-        done
+        Ok(done)
     }
 
     pub fn queued(&self) -> usize {
         self.inner.0.lock().unwrap().slots.len()
     }
 
-    /// Close the queue: waiting workers drain remaining slots then get `None`.
+    /// Close the queue: new [`Self::submit`]s fail fast, waiting workers
+    /// drain remaining slots then get `None`.
     pub fn close(&self) {
         self.inner.0.lock().unwrap().closed = true;
         self.inner.1.notify_all();
     }
 
-    /// Worker side: block until a full batch is available or the oldest slot
-    /// has waited `max_wait`, then return a (possibly padded) batch. `None`
+    /// Worker side: block until a full `max_batch` is available or the
+    /// oldest slot has waited `max_wait`, then return the batch. `None`
     /// after [`Self::close`] once the queue is drained.
     pub fn next_batch(&self) -> Option<Batch> {
         let (m, cv) = &*self.inner;
         let mut q = m.lock().unwrap();
         loop {
-            if q.slots.len() >= self.batch_size {
+            if q.slots.len() >= self.max_batch {
                 break;
             }
             if !q.slots.is_empty() {
+                if q.closed {
+                    break; // flush the tail immediately on shutdown
+                }
                 let oldest = q.slots.front().unwrap().enqueued;
                 let waited = oldest.elapsed();
                 if waited >= self.max_wait {
@@ -99,10 +123,9 @@ impl Batcher {
             }
             q = cv.wait(q).unwrap();
         }
-        let take = q.slots.len().min(self.batch_size);
+        let take = q.slots.len().min(self.max_batch);
         let slots: Vec<Slot> = q.slots.drain(..take).collect();
-        let padding = self.batch_size - slots.len();
-        Some(Batch { slots, padding, formed: Instant::now() })
+        Some(Batch { slots, formed: Instant::now() })
     }
 }
 
@@ -113,10 +136,9 @@ mod tests {
     #[test]
     fn full_batch_formed_immediately() {
         let b = Batcher::new(4, Duration::from_secs(10));
-        let handles: Vec<_> = (0..4).map(|i| b.submit(i, i)).collect();
+        let handles: Vec<_> = (0..4).map(|i| b.submit(i, i).unwrap()).collect();
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.slots.len(), 4);
-        assert_eq!(batch.padding, 0);
         assert_eq!(b.queued(), 0);
         drop(handles);
     }
@@ -124,18 +146,17 @@ mod tests {
     #[test]
     fn partial_batch_flushes_on_deadline() {
         let b = Batcher::new(8, Duration::from_millis(30));
-        let _h = b.submit(1, 0);
+        let _h = b.submit(1, 0).unwrap();
         let t0 = Instant::now();
         let batch = b.next_batch().unwrap();
         assert!(t0.elapsed() >= Duration::from_millis(25));
         assert_eq!(batch.slots.len(), 1);
-        assert_eq!(batch.padding, 7);
     }
 
     #[test]
     fn close_drains_then_none() {
         let b = Batcher::new(4, Duration::from_millis(5));
-        let _h = b.submit(1, 0);
+        let _h = b.submit(1, 0).unwrap();
         b.close();
         let batch = b.next_batch();
         assert!(batch.is_some());
@@ -143,10 +164,37 @@ mod tests {
     }
 
     #[test]
+    fn submit_after_close_fails_fast() {
+        // A slot accepted after close() could never complete (workers have
+        // drained and exited): the submission itself must error.
+        let b = Batcher::new(4, Duration::from_millis(5));
+        b.close();
+        let err = b.submit(1, 0).unwrap_err().to_string();
+        assert!(err.contains("closed"), "{err}");
+        // Nothing was enqueued and workers still see a clean end-of-queue.
+        assert_eq!(b.queued(), 0);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn close_flushes_waiting_partial_batch_immediately() {
+        // A worker parked on a partial batch must not sit out the full
+        // max_wait once the queue closes.
+        let b = Batcher::new(8, Duration::from_secs(30));
+        let _h = b.submit(1, 0).unwrap();
+        let b2 = b.clone();
+        let t = std::thread::spawn(move || b2.next_batch());
+        std::thread::sleep(Duration::from_millis(20));
+        b.close();
+        let batch = t.join().unwrap().unwrap();
+        assert_eq!(batch.slots.len(), 1);
+    }
+
+    #[test]
     fn fifo_order_preserved() {
         let b = Batcher::new(3, Duration::from_secs(1));
         for i in 0..3 {
-            b.submit(i, 0);
+            b.submit(i, 0).unwrap();
         }
         let batch = b.next_batch().unwrap();
         let ids: Vec<u64> = batch.slots.iter().map(|s| s.request_id).collect();
@@ -157,7 +205,7 @@ mod tests {
     fn oversubmission_leaves_remainder_queued() {
         let b = Batcher::new(2, Duration::from_secs(1));
         for i in 0..5 {
-            b.submit(i, 0);
+            b.submit(i, 0).unwrap();
         }
         let b1 = b.next_batch().unwrap();
         assert_eq!(b1.slots.len(), 2);
@@ -167,15 +215,15 @@ mod tests {
     #[test]
     fn cross_thread_completion() {
         let b = Batcher::new(1, Duration::from_secs(1));
-        let h = b.submit(1, 7);
+        let h = b.submit(1, 7).unwrap();
         let b2 = b.clone();
         std::thread::spawn(move || {
             let batch = b2.next_batch().unwrap();
             for slot in batch.slots {
-                slot.done.put(Tensor::full(&[2, 2, 3], slot.seed as f32));
+                slot.done.put(Ok(Tensor::full(&[2, 2, 3], slot.seed as f32)));
             }
         });
-        let img = h.wait();
+        let img = h.wait().unwrap();
         assert_eq!(img.data()[0], 7.0);
     }
 }

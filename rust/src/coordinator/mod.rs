@@ -12,10 +12,15 @@
 //!   dependency-heavy first block, Jacobi or windowed GS-Jacobi for the
 //!   rest, plus uniform / sequential / calibrated per-block variants with
 //!   JSON persistence.
-//! * [`sampler`] — full noise→image pipeline over the AOT artifacts.
-//! * [`batcher`] — dynamic request batching onto artifact batch shapes.
-//! * [`router`] — multi-worker dispatch (one engine per worker thread).
-//! * [`server`] — HTTP/1.1 front end (`/generate`, `/metrics`, `/healthz`).
+//! * [`sampler`] — full noise→image pipeline over the AOT artifacts; a
+//!   [`sampler::SamplerSet`] holds one sampler per lowered batch bucket.
+//! * [`batcher`] — dynamic request batching up to the largest bucket.
+//! * [`router`] — multi-worker dispatch (one engine per worker thread);
+//!   each batch decodes via the smallest bucket covering it, padding only
+//!   the gap to that bucket (`sjd_padded_slots`).
+//! * [`server`] — HTTP/1.1 front end (`/generate`, `/metrics`, `/healthz`)
+//!   on a connection thread pool with keep-alive; PNG encodes run as pool
+//!   jobs that overlap decode.
 //! * [`state`] — per-request decode state & KV-cache buffers.
 
 pub mod batcher;
@@ -29,4 +34,4 @@ pub mod state;
 
 pub use jacobi::{GsJacobiStats, InitStrategy, JacobiConfig, JacobiStats, WindowStats};
 pub use policy::{BlockDecode, DecodePolicy};
-pub use sampler::{SampleOptions, Sampler};
+pub use sampler::{SampleOptions, Sampler, SamplerSet};

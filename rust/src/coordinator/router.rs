@@ -1,17 +1,33 @@
 //! Multi-worker router: each worker is a dedicated OS thread owning its own
-//! PJRT [`Engine`] + [`Sampler`] (engines are `Rc`-based and thread-pinned),
-//! all pulling batches from the shared [`Batcher`] queue — work-stealing via
-//! a single MPMC queue gives least-loaded dispatch for free.
+//! backend (PJRT engines are `Rc`-based and thread-pinned) plus a
+//! [`SamplerSet`] — one sampler per lowered batch bucket — all pulling
+//! batches from the shared [`Batcher`] queue. Work-stealing via a single
+//! MPMC queue gives least-loaded dispatch for free.
+//!
+//! ## Bucket routing
+//!
+//! The batcher forms batches of 1..=max-bucket real slots; the worker picks
+//! the **smallest bucket covering the batch** and pads only the gap to that
+//! bucket. Padding is real decode work (a padded slot costs as much as a
+//! real one), so it is tracked in the `sjd_padded_slots` counter and the
+//! per-bucket `sjd_bucket_{B}_batches` counters — the load bench and the
+//! serving tests assert on both.
+//!
+//! ## Metrics
+//!
+//! Per batch: `sjd_batch_fill` (real slots), `sjd_decode_time`,
+//! `sjd_batches_processed`, `sjd_bucket_{B}_batches`, `sjd_padded_slots`.
+//! Per slot: `sjd_queue_wait` (submit → decode start) and
+//! `sjd_request_latency` (submit → image ready). `sjd_encode_time` is
+//! recorded by the HTTP layer's encode jobs (see `coordinator::server`).
 
 use super::batcher::Batcher;
-use super::sampler::{SampleOptions, Sampler};
+use super::sampler::{SampleOptions, SamplerSet};
 use crate::metrics::Registry;
-use crate::runtime::Engine;
+use crate::runtime::{Backend, Engine, Manifest};
 use crate::tensor::Pcg64;
 use anyhow::Result;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -20,7 +36,11 @@ use std::time::Instant;
 pub struct RouterConfig {
     pub artifacts_dir: PathBuf,
     pub model: String,
-    pub batch_size: usize,
+    /// Decode buckets to serve, ascending. Empty = every *complete* lowered
+    /// per-batch artifact family ([`Router::start`] resolves it via
+    /// `Manifest::decode_buckets`; the backend-generic
+    /// [`Router::start_with`] falls back to `ModelMeta::batch_sizes`).
+    pub buckets: Vec<usize>,
     pub workers: usize,
     pub options: SampleOptions,
 }
@@ -29,15 +49,39 @@ pub struct RouterConfig {
 pub struct Router {
     pub batcher: Batcher,
     pub registry: Registry,
-    stop: Arc<AtomicBool>,
     workers: Vec<JoinHandle<()>>,
 }
 
 impl Router {
-    /// Spawn `cfg.workers` worker threads. Each validates its engine before
-    /// the router returns (fail-fast on bad artifacts).
-    pub fn start(cfg: RouterConfig, batcher: Batcher, registry: Registry) -> Result<Self> {
-        let stop = Arc::new(AtomicBool::new(false));
+    /// Spawn `cfg.workers` worker threads over real PJRT engines. Each
+    /// validates its engine before the router returns (fail-fast on bad
+    /// artifacts). Empty `cfg.buckets` resolves through
+    /// [`Manifest::decode_buckets`], so an incomplete per-batch artifact
+    /// family on disk is excluded instead of failing worker startup.
+    pub fn start(mut cfg: RouterConfig, batcher: Batcher, registry: Registry) -> Result<Self> {
+        if cfg.buckets.is_empty() {
+            let manifest = Manifest::load(cfg.artifacts_dir.join("manifest.json"))?;
+            cfg.buckets = manifest.decode_buckets(&cfg.model);
+        }
+        let dir = cfg.artifacts_dir.clone();
+        Self::start_with(cfg, batcher, registry, move |_widx| Engine::new(&dir))
+    }
+
+    /// Spawn workers over any backend. The factory runs *inside* each worker
+    /// thread (backends may be thread-pinned, like the PJRT engine), so it
+    /// must be `Send + Clone` but the backend itself need not be `Send`.
+    /// This is the seam the mock-backend serving tests and the load bench
+    /// plug into.
+    pub fn start_with<B, F>(
+        cfg: RouterConfig,
+        batcher: Batcher,
+        registry: Registry,
+        factory: F,
+    ) -> Result<Self>
+    where
+        B: Backend,
+        F: Fn(usize) -> Result<B> + Send + Clone + 'static,
+    {
         let mut workers = Vec::with_capacity(cfg.workers);
         let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<()>>();
 
@@ -45,12 +89,12 @@ impl Router {
             let cfg = cfg.clone();
             let batcher = batcher.clone();
             let registry = registry.clone();
-            let stop = stop.clone();
             let ready = ready_tx.clone();
+            let factory = factory.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("sjd-worker-{widx}"))
-                    .spawn(move || worker_main(widx, cfg, batcher, registry, stop, ready))
+                    .spawn(move || worker_main(widx, cfg, batcher, registry, ready, factory))
                     .expect("spawn worker"),
             );
         }
@@ -58,12 +102,13 @@ impl Router {
         for _ in 0..cfg.workers.max(1) {
             ready_rx.recv().expect("worker startup signal")?;
         }
-        Ok(Router { batcher, registry, stop, workers })
+        Ok(Router { batcher, registry, workers })
     }
 
-    /// Stop workers after the queue drains.
+    /// Stop workers: close the queue (new submissions fail fast, see
+    /// [`Batcher::submit`]), let workers drain what is already queued, then
+    /// join them.
     pub fn shutdown(mut self) {
-        self.stop.store(true, Ordering::SeqCst);
         self.batcher.close();
         for w in self.workers.drain(..) {
             let _ = w.join();
@@ -71,23 +116,26 @@ impl Router {
     }
 }
 
-fn worker_main(
+fn worker_main<B, F>(
     widx: usize,
     cfg: RouterConfig,
     batcher: Batcher,
     registry: Registry,
-    stop: Arc<AtomicBool>,
     ready: std::sync::mpsc::Sender<Result<()>>,
-) {
-    // Build the thread-pinned engine + sampler; report readiness.
-    let engine = match Engine::new(&cfg.artifacts_dir) {
+    factory: F,
+) where
+    B: Backend,
+    F: Fn(usize) -> Result<B>,
+{
+    // Build the thread-pinned backend + per-bucket samplers; report readiness.
+    let engine = match factory(widx) {
         Ok(e) => e,
         Err(e) => {
             let _ = ready.send(Err(e));
             return;
         }
     };
-    let sampler = match Sampler::new(&engine, &cfg.model, cfg.batch_size) {
+    let set = match SamplerSet::new(&engine, &cfg.model, &cfg.buckets) {
         Ok(s) => s,
         Err(e) => {
             let _ = ready.send(Err(e));
@@ -97,41 +145,64 @@ fn worker_main(
     let _ = ready.send(Ok(()));
 
     let lat = registry.histogram("sjd_request_latency");
+    let queue_wait = registry.histogram("sjd_queue_wait");
+    let decode_time = registry.histogram("sjd_decode_time");
     let batch_fill = registry.histogram("sjd_batch_fill");
     let images = registry.counter("sjd_images_generated");
     let batches = registry.counter("sjd_batches_processed");
+    let padded = registry.counter("sjd_padded_slots");
     let errors = registry.counter("sjd_worker_errors");
     let inflight = registry.gauge("sjd_batches_inflight");
 
-    while !stop.load(Ordering::SeqCst) {
-        let Some(batch) = batcher.next_batch() else { break };
+    // Workers exit when the closed queue drains (`next_batch` → None), so a
+    // shutdown never abandons an accepted slot.
+    while let Some(batch) = batcher.next_batch() {
         inflight.add(1);
         batch_fill.record(batch.slots.len() as u64);
-        // Derive the batch RNG from the first slot's seed so identical
-        // requests reproduce identical images regardless of worker.
-        let seed = batch.slots.first().map(|s| s.seed).unwrap_or(0);
-        let mut rng = Pcg64::seed_stream(seed, widx as u64 + 1);
-        match sampler.sample_images(&cfg.options, &mut rng) {
-            Ok((imgs, _trace)) => {
-                for (slot, img) in batch.slots.iter().zip(imgs.into_iter()) {
-                    lat.record_duration(slot.enqueued.elapsed());
-                    slot.done.put(img);
-                    images.inc();
-                }
-                batches.inc();
+        // Every slot MUST complete: an oversized batch (a batcher formed
+        // past the largest bucket — a misconfiguration, but a recoverable
+        // one) is decoded in max-bucket chunks instead of silently dropping
+        // the slots the zip below would not cover.
+        let mut slots = batch.slots;
+        while !slots.is_empty() {
+            let take = slots.len().min(set.max_bucket());
+            let chunk: Vec<_> = slots.drain(..take).collect();
+            // Smallest lowered bucket covering the chunk; pad only up to it.
+            let sampler = set.select(chunk.len());
+            padded.add(sampler.batch.saturating_sub(chunk.len()) as u64);
+            registry.counter(&format!("sjd_bucket_{}_batches", sampler.batch)).inc();
+            for slot in &chunk {
+                queue_wait.record_duration(slot.enqueued.elapsed());
             }
-            Err(e) => {
-                errors.inc();
-                log::error!("worker {widx} sample failed: {e:#}");
-                // Complete slots with a zero image so clients unblock.
-                if let Some([h, w, c]) = sampler.meta.image_hwc {
-                    for slot in &batch.slots {
-                        slot.done.put(crate::tensor::Tensor::zeros(&[h, w, c]));
+            // Derive the batch RNG from the first slot's seed alone (fixed
+            // stream) so identical requests reproduce identical images
+            // regardless of which worker picks up the batch.
+            let seed = chunk.first().map(|s| s.seed).unwrap_or(0);
+            let mut rng = Pcg64::seed_stream(seed, 1);
+            let t_decode = Instant::now();
+            match sampler.sample_images(&cfg.options, &mut rng) {
+                Ok((imgs, _trace)) => {
+                    decode_time.record_duration(t_decode.elapsed());
+                    // Padded images (if any) fall off the end of the zip.
+                    for (slot, img) in chunk.iter().zip(imgs.into_iter()) {
+                        lat.record_duration(slot.enqueued.elapsed());
+                        slot.done.put(Ok(img));
+                        images.inc();
+                    }
+                    batches.inc();
+                }
+                Err(e) => {
+                    errors.inc();
+                    log::error!("worker {widx} sample failed: {e:#}");
+                    // Complete slots with the error so clients get a 500
+                    // instead of hanging (or a silently-black 200).
+                    let msg = format!("decode failed: {e:#}");
+                    for slot in &chunk {
+                        slot.done.put(Err(msg.clone()));
                     }
                 }
             }
         }
         inflight.add(-1);
-        let _ = Instant::now();
     }
 }

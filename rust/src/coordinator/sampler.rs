@@ -141,6 +141,65 @@ impl SampleOutput {
     }
 }
 
+/// A set of [`Sampler`]s for one model, one per lowered batch bucket,
+/// ordered ascending. Serving workers route each formed batch to the
+/// smallest bucket that covers it, so an `n=1` request is decoded by the
+/// `b1` artifacts instead of being padded up to the largest lowered batch
+/// (see `coordinator::router` for the padding accounting).
+pub struct SamplerSet<'e, B: Backend> {
+    samplers: Vec<Sampler<'e, B>>,
+}
+
+impl<'e, B: Backend> SamplerSet<'e, B> {
+    /// Build one sampler per bucket. An empty `buckets` means every batch
+    /// size the model's artifacts were lowered for (`ModelMeta::batch_sizes`);
+    /// an explicit bucket that was never lowered fails fast here rather than
+    /// at decode time.
+    pub fn new(engine: &'e B, model: &str, buckets: &[usize]) -> Result<Self> {
+        let mut want: Vec<usize> = if buckets.is_empty() {
+            engine.model_meta(model)?.batch_sizes
+        } else {
+            buckets.to_vec()
+        };
+        want.sort_unstable();
+        want.dedup();
+        if want.is_empty() {
+            bail!("model '{model}' has no lowered batch sizes to serve");
+        }
+        let samplers = want
+            .into_iter()
+            .map(|b| Sampler::new(engine, model, b))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(SamplerSet { samplers })
+    }
+
+    /// Available bucket sizes, ascending.
+    pub fn buckets(&self) -> Vec<usize> {
+        self.samplers.iter().map(|s| s.batch).collect()
+    }
+
+    /// The largest bucket — what the batcher should form batches up to.
+    pub fn max_bucket(&self) -> usize {
+        self.samplers.last().expect("non-empty set").batch
+    }
+
+    /// Model metadata (shared by every bucket's sampler).
+    pub fn meta(&self) -> &ModelMeta {
+        &self.samplers[0].meta
+    }
+
+    /// The sampler for the smallest bucket with `batch >= n` — falling back
+    /// to the largest bucket for an oversized batch (the batcher caps batch
+    /// size at [`Self::max_bucket`], so that fallback only triggers on a
+    /// misconfigured batcher; decode then drops the overflow images).
+    pub fn select(&self, n: usize) -> &Sampler<'e, B> {
+        self.samplers
+            .iter()
+            .find(|s| s.batch >= n)
+            .unwrap_or_else(|| self.samplers.last().expect("non-empty set"))
+    }
+}
+
 /// Model sampler bound to an execution backend + a lowered batch size.
 pub struct Sampler<'e, B: Backend> {
     engine: &'e B,

@@ -5,16 +5,39 @@
 //! * `GET /metrics`   — text exposition of the metrics registry.
 //! * `GET /healthz`   — liveness.
 //!
+//! ## Threading model
+//!
+//! Connections are handled on a fixed [`ThreadPool`]
+//! (`ServerConfig::conn_threads`): the accept loop only hands sockets off,
+//! so `/healthz` and `/metrics` answer while `/generate` decodes are in
+//! flight, and N clients make progress concurrently. A second, independent
+//! pool (`ServerConfig::encode_threads`) runs PNG encode + base64 as one
+//! pure-CPU job per image, dispatched as each image's decode completes —
+//! so encoding image `i` overlaps decoding image `i+1` instead of
+//! serializing after the whole batch. The pools are separate on purpose:
+//! connection handlers block (on decode completions and slow clients), and
+//! a shared pool would let waiting handlers starve the encodes queued
+//! behind them.
+//!
+//! Connections are keep-alive by HTTP/1.1 default (`Connection: close`
+//! honored). The model is thread-per-connection: an **open** connection
+//! holds one conn-pool thread for its lifetime, so size
+//! `ServerConfig::conn_threads` (`--http-threads`) to the expected number
+//! of concurrent clients — beyond it, new connections queue. The
+//! `keepalive_timeout` bounds how long an *idle* connection may hold its
+//! thread; in-request reads get the larger `REQUEST_READ_TIMEOUT` so a
+//! slow-but-alive client is served rather than dropped.
+//!
 //! The HTTP layer is deliberately small (request line + headers +
-//! content-length bodies, one request per connection unless keep-alive) —
-//! it exists so the serving loop is exercised end-to-end, not to be a
-//! general web server. It is still defensive where it must be: header
-//! size/count are capped so a client streaming headers can't grow memory
-//! unboundedly, error bodies go through the `jsonx` emitter so they stay
-//! valid JSON whatever the message contains, and malformed requests (400)
-//! are distinguished from internal failures (500).
+//! content-length bodies) — it exists so the serving loop is exercised
+//! end-to-end, not to be a general web server. It is still defensive where
+//! it must be: header size/count are capped so a client streaming headers
+//! can't grow memory unboundedly, error bodies go through the `jsonx`
+//! emitter so they stay valid JSON whatever the message contains, and
+//! malformed requests (400) are distinguished from internal failures (500).
 
 use super::batcher::Batcher;
+use crate::exec::ThreadPool;
 use crate::imageio::{self, Image};
 use crate::jsonx::{self, Value};
 use crate::metrics::Registry;
@@ -23,6 +46,7 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 /// Total bytes allowed for the request line + all headers.
 const MAX_HEADER_BYTES: usize = 64 << 10;
@@ -37,7 +61,25 @@ pub struct HttpRequest {
     pub method: String,
     pub path: String,
     pub body: Vec<u8>,
+    /// Whether the connection may serve another request after this one
+    /// (HTTP/1.1 default unless `Connection: close`; HTTP/1.0 opt-in via
+    /// `Connection: keep-alive`).
+    pub keep_alive: bool,
 }
+
+/// Marker error for a connection that closed cleanly before sending a
+/// request — the normal end of a keep-alive session, not a protocol error.
+/// Callers distinguish it via `Error::is::<ConnectionClosed>()`.
+#[derive(Debug)]
+pub struct ConnectionClosed;
+
+impl std::fmt::Display for ConnectionClosed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "connection closed")
+    }
+}
+
+impl std::error::Error for ConnectionClosed {}
 
 /// Read one `\n`-terminated line without buffering more than `max` bytes.
 ///
@@ -78,12 +120,13 @@ fn read_line_capped(reader: &mut impl BufRead, max: usize) -> Result<String> {
 ///
 /// Header bytes (request line included) are capped at [`MAX_HEADER_BYTES`]
 /// and header count at [`MAX_HEADERS`] — a client streaming an endless
-/// header section gets an error instead of unbounded buffering.
+/// header section gets an error instead of unbounded buffering. A clean EOF
+/// before any byte of a request yields a [`ConnectionClosed`] error.
 pub fn parse_request(reader: &mut impl BufRead) -> Result<HttpRequest> {
     let mut budget = MAX_HEADER_BYTES;
     let line = read_line_capped(reader, budget)?;
     if line.is_empty() {
-        bail!("connection closed");
+        return Err(ConnectionClosed.into());
     }
     budget = budget.saturating_sub(line.len());
     let mut parts = line.split_whitespace();
@@ -93,6 +136,8 @@ pub fn parse_request(reader: &mut impl BufRead) -> Result<HttpRequest> {
     if !version.starts_with("HTTP/1.") {
         bail!("unsupported version {version}");
     }
+    // HTTP/1.1 defaults to keep-alive; HTTP/1.0 to close.
+    let mut keep_alive = version != "HTTP/1.0";
 
     let mut content_length = 0usize;
     let mut n_headers = 0usize;
@@ -113,6 +158,13 @@ pub fn parse_request(reader: &mut impl BufRead) -> Result<HttpRequest> {
         if let Some((k, v)) = h.split_once(':') {
             if k.eq_ignore_ascii_case("content-length") {
                 content_length = v.trim().parse().context("bad content-length")?;
+            } else if k.eq_ignore_ascii_case("connection") {
+                let v = v.trim();
+                if v.eq_ignore_ascii_case("close") {
+                    keep_alive = false;
+                } else if v.eq_ignore_ascii_case("keep-alive") {
+                    keep_alive = true;
+                }
             }
         }
     }
@@ -121,15 +173,16 @@ pub fn parse_request(reader: &mut impl BufRead) -> Result<HttpRequest> {
     }
     let mut body = vec![0u8; content_length];
     reader.read_exact(&mut body)?;
-    Ok(HttpRequest { method, path, body })
+    Ok(HttpRequest { method, path, body, keep_alive })
 }
 
-/// Serialize an HTTP response.
+/// Serialize an HTTP response; `keep_alive` picks the `Connection` header.
 pub fn write_response(
     stream: &mut impl Write,
     status: u16,
     content_type: &str,
     body: &[u8],
+    keep_alive: bool,
 ) -> Result<()> {
     let reason = match status {
         200 => "OK",
@@ -138,9 +191,10 @@ pub fn write_response(
         500 => "Internal Server Error",
         _ => "",
     };
+    let conn = if keep_alive { "keep-alive" } else { "close" };
     write!(
         stream,
-        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: {conn}\r\n\r\n",
         body.len()
     )?;
     stream.write_all(body)?;
@@ -154,18 +208,23 @@ pub fn error_json(err: &anyhow::Error) -> String {
 }
 
 /// Standard base64 (RFC 4648) encoding for PNG payloads in JSON responses.
+///
+/// Emits each 3-byte chunk as a 4-byte group straight into a pre-sized byte
+/// buffer (base64 output is pure ASCII) — no per-char `String::push` UTF-8
+/// bookkeeping on what is a multi-megabyte hot path per generated image.
 pub fn base64_encode(data: &[u8]) -> String {
     const TABLE: &[u8; 64] = b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+/";
-    let mut out = String::with_capacity(data.len().div_ceil(3) * 4);
-    for chunk in data.chunks(3) {
+    let mut out = vec![0u8; data.len().div_ceil(3) * 4];
+    for (chunk, group) in data.chunks(3).zip(out.chunks_exact_mut(4)) {
         let b = [chunk[0], *chunk.get(1).unwrap_or(&0), *chunk.get(2).unwrap_or(&0)];
         let n = ((b[0] as u32) << 16) | ((b[1] as u32) << 8) | b[2] as u32;
-        out.push(TABLE[(n >> 18) as usize & 63] as char);
-        out.push(TABLE[(n >> 12) as usize & 63] as char);
-        out.push(if chunk.len() > 1 { TABLE[(n >> 6) as usize & 63] as char } else { '=' });
-        out.push(if chunk.len() > 2 { TABLE[n as usize & 63] as char } else { '=' });
+        group[0] = TABLE[(n >> 18) as usize & 63];
+        group[1] = TABLE[(n >> 12) as usize & 63];
+        group[2] = if chunk.len() > 1 { TABLE[(n >> 6) as usize & 63] } else { b'=' };
+        group[3] = if chunk.len() > 2 { TABLE[n as usize & 63] } else { b'=' };
     }
-    out
+    // SAFETY-free: every byte written above is ASCII from TABLE or '='.
+    String::from_utf8(out).expect("base64 output is ASCII")
 }
 
 /// Parse and validate a `/generate` body → `(n, seed)`. Failures here are
@@ -182,120 +241,275 @@ fn parse_generate_body(body: &[u8]) -> Result<(usize, u64)> {
     Ok((n, seed))
 }
 
-/// Serving front end bound to a batcher + metrics registry.
-pub struct Server {
-    pub addr: String,
+/// Server tuning knobs.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Connection-handling pool size. Thread-per-connection: this caps
+    /// concurrently **open** connections, not just in-flight requests —
+    /// size it to the expected number of concurrent clients.
+    pub conn_threads: usize,
+    /// PNG-encode pool size (separate from `conn_threads`, see module docs).
+    pub encode_threads: usize,
+    /// Idle keep-alive connections (no request bytes pending) are dropped
+    /// after this long so they free their connection-pool thread.
+    pub keepalive_timeout: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            conn_threads: 8,
+            encode_threads: 4,
+            keepalive_timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+/// Handler-side server state. Deliberately does NOT own the connection
+/// pool: handler jobs clone this `Arc`, and if the pool lived inside it the
+/// last clone could drop — and therefore join — the pool from one of its
+/// own worker threads. The encode pool is safe here because encode jobs
+/// never capture the state.
+struct ServerState {
+    addr: String,
     batcher: Batcher,
     registry: Registry,
     next_request_id: AtomicU64,
     stop: Arc<AtomicBool>,
+    encode_pool: ThreadPool,
+    keepalive_timeout: Duration,
+}
+
+/// Serving front end bound to a batcher + metrics registry.
+pub struct Server {
+    state: Arc<ServerState>,
+    conn_pool: ThreadPool,
 }
 
 impl Server {
     pub fn new(addr: impl Into<String>, batcher: Batcher, registry: Registry) -> Self {
+        Self::with_config(addr, batcher, registry, ServerConfig::default())
+    }
+
+    pub fn with_config(
+        addr: impl Into<String>,
+        batcher: Batcher,
+        registry: Registry,
+        cfg: ServerConfig,
+    ) -> Self {
         Server {
-            addr: addr.into(),
-            batcher,
-            registry,
-            next_request_id: AtomicU64::new(1),
-            stop: Arc::new(AtomicBool::new(false)),
+            state: Arc::new(ServerState {
+                addr: addr.into(),
+                batcher,
+                registry,
+                next_request_id: AtomicU64::new(1),
+                stop: Arc::new(AtomicBool::new(false)),
+                encode_pool: ThreadPool::new(cfg.encode_threads),
+                keepalive_timeout: cfg.keepalive_timeout,
+            }),
+            conn_pool: ThreadPool::new(cfg.conn_threads),
         }
     }
 
+    pub fn addr(&self) -> &str {
+        &self.state.addr
+    }
+
     pub fn stop_flag(&self) -> Arc<AtomicBool> {
-        self.stop.clone()
+        self.state.stop.clone()
     }
 
     /// Blocking accept loop; returns when the stop flag is set (checked
-    /// between connections — pair with a dummy connection to unblock).
+    /// between accepts — pair with a dummy connection to unblock). Each
+    /// accepted connection is handed to the connection pool, so the loop
+    /// itself never blocks on request handling.
     pub fn run(&self) -> Result<()> {
-        let listener = TcpListener::bind(&self.addr)
-            .with_context(|| format!("binding {}", self.addr))?;
-        log::info!("listening on {}", self.addr);
+        let listener = TcpListener::bind(&self.state.addr)
+            .with_context(|| format!("binding {}", self.state.addr))?;
+        log::info!("listening on {}", self.state.addr);
         for conn in listener.incoming() {
-            if self.stop.load(Ordering::SeqCst) {
+            if self.state.stop.load(Ordering::SeqCst) {
                 break;
             }
             match conn {
                 Ok(stream) => {
-                    if let Err(e) = self.handle(stream) {
-                        log::warn!("connection error: {e:#}");
-                    }
+                    let state = self.state.clone();
+                    self.conn_pool.spawn(move || {
+                        if let Err(e) = handle_conn(&state, stream) {
+                            log::warn!("connection error: {e:#}");
+                        }
+                    });
                 }
                 Err(e) => log::warn!("accept error: {e}"),
             }
         }
         Ok(())
     }
+}
 
-    fn handle(&self, stream: TcpStream) -> Result<()> {
-        let mut reader = BufReader::new(stream.try_clone()?);
-        let mut stream = stream;
+/// Whether a parse failure is a dead/idle transport (EOF mid-request, idle
+/// keep-alive timeout, reset) rather than a protocol violation — nothing to
+/// answer, the peer is gone.
+fn is_benign_disconnect(e: &anyhow::Error) -> bool {
+    e.downcast_ref::<std::io::Error>().is_some_and(|io| {
+        matches!(
+            io.kind(),
+            std::io::ErrorKind::WouldBlock
+                | std::io::ErrorKind::TimedOut
+                | std::io::ErrorKind::UnexpectedEof
+                | std::io::ErrorKind::ConnectionReset
+                | std::io::ErrorKind::BrokenPipe
+        )
+    })
+}
+
+/// Ceiling on how long reading one request may stall once its first byte
+/// has arrived — generous (slow networks finish), but bounded so a dead
+/// mid-request peer cannot pin a connection-pool thread forever.
+const REQUEST_READ_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Handle one connection: serve requests until the client closes, asks for
+/// `Connection: close`, errors, or goes idle past the keep-alive timeout.
+///
+/// The keep-alive timeout only covers the *idle* wait for a request's first
+/// byte (probed via `peek`, so nothing is consumed); once a request has
+/// started, reads run under the much larger [`REQUEST_READ_TIMEOUT`] — a
+/// slow-but-alive client is served, not silently dropped.
+fn handle_conn(inner: &Arc<ServerState>, stream: TcpStream) -> Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut stream = stream;
+    let mut served = 0usize;
+    loop {
+        // A stopping server closes keep-alive connections between requests;
+        // otherwise a client re-requesting within the idle window would pin
+        // its handler thread — and the pool's drop/join — forever.
+        if inner.stop.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        // Idle wait — skipped when a pipelined request already sits in the
+        // read buffer (peeking the socket would wrongly block past it).
+        if reader.buffer().is_empty() {
+            stream
+                .set_read_timeout(Some(inner.keepalive_timeout))
+                .context("set idle timeout")?;
+            let mut first = [0u8; 1];
+            match stream.peek(&mut first) {
+                Ok(0) => return Ok(()), // clean close between requests
+                Ok(_) => {}
+                // Idle past the keep-alive window, or a dead transport:
+                // nothing to answer.
+                Err(_) => return Ok(()),
+            }
+        }
+        stream
+            .set_read_timeout(Some(REQUEST_READ_TIMEOUT))
+            .context("set request timeout")?;
         let req = match parse_request(&mut reader) {
             Ok(r) => r,
             Err(e) => {
+                // Clean close, or a transport death mid-request (reset, EOF,
+                // a stall past REQUEST_READ_TIMEOUT): not a protocol error,
+                // nothing to answer.
+                if e.is::<ConnectionClosed>() || is_benign_disconnect(&e) {
+                    return Ok(());
+                }
                 // Malformed or oversized request framing is the client's
                 // fault: answer 400 (best effort — the peer may already be
-                // gone) instead of silently resetting the connection.
-                self.registry.counter("sjd_http_errors").inc();
-                let _ =
-                    write_response(&mut stream, 400, "application/json", error_json(&e).as_bytes());
+                // gone) instead of silently resetting the connection, on
+                // first and reused keep-alive requests alike.
+                inner.registry.counter("sjd_http_errors").inc();
+                let _ = write_response(
+                    &mut stream,
+                    400,
+                    "application/json",
+                    error_json(&e).as_bytes(),
+                    false,
+                );
                 return Err(e);
             }
         };
-        self.registry.counter("sjd_http_requests").inc();
-        match (req.method.as_str(), req.path.as_str()) {
-            ("GET", "/healthz") => write_response(&mut stream, 200, "text/plain", b"ok"),
-            ("GET", "/metrics") => {
-                let text = self.registry.render_text();
-                write_response(&mut stream, 200, "text/plain", text.as_bytes())
-            }
-            ("POST", "/generate") => match parse_generate_body(&req.body) {
-                // Malformed request: the client's fault.
-                Err(e) => {
-                    self.registry.counter("sjd_http_errors").inc();
-                    write_response(&mut stream, 400, "application/json", error_json(&e).as_bytes())
-                }
-                Ok((n, seed)) => match self.generate(n, seed) {
-                    Ok(json) => {
-                        write_response(&mut stream, 200, "application/json", json.as_bytes())
-                    }
-                    // Internal failure (batcher, encode, ...): ours.
-                    Err(e) => {
-                        self.registry.counter("sjd_http_errors").inc();
-                        write_response(
-                            &mut stream,
-                            500,
-                            "application/json",
-                            error_json(&e).as_bytes(),
-                        )
-                    }
-                },
-            },
-            _ => write_response(&mut stream, 404, "text/plain", b"not found"),
+        if served > 0 {
+            inner.registry.counter("sjd_http_keepalive_reuses").inc();
+        }
+        served += 1;
+        let keep = req.keep_alive;
+        handle_request(inner, &req, &mut stream, keep)?;
+        if !keep {
+            return Ok(());
         }
     }
+}
 
-    fn generate(&self, n: usize, seed: u64) -> Result<String> {
-        let rid = self.next_request_id.fetch_add(1, Ordering::SeqCst);
+/// Route one parsed request and write its response.
+fn handle_request(
+    inner: &Arc<ServerState>,
+    req: &HttpRequest,
+    stream: &mut TcpStream,
+    keep: bool,
+) -> Result<()> {
+    inner.registry.counter("sjd_http_requests").inc();
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => write_response(stream, 200, "text/plain", b"ok", keep),
+        ("GET", "/metrics") => {
+            let text = inner.registry.render_text();
+            write_response(stream, 200, "text/plain", text.as_bytes(), keep)
+        }
+        ("POST", "/generate") => match parse_generate_body(&req.body) {
+            // Malformed request: the client's fault.
+            Err(e) => {
+                inner.registry.counter("sjd_http_errors").inc();
+                write_response(stream, 400, "application/json", error_json(&e).as_bytes(), keep)
+            }
+            Ok((n, seed)) => match generate(inner, n, seed) {
+                Ok(json) => write_response(stream, 200, "application/json", json.as_bytes(), keep),
+                // Internal failure (batcher, encode, ...): ours.
+                Err(e) => {
+                    inner.registry.counter("sjd_http_errors").inc();
+                    write_response(stream, 500, "application/json", error_json(&e).as_bytes(), keep)
+                }
+            },
+        },
+        _ => write_response(stream, 404, "text/plain", b"not found", keep),
+    }
+}
 
-        // Submit n slots and wait for completion.
-        let handles: Vec<_> =
-            (0..n).map(|i| self.batcher.submit(rid, seed.wrapping_add(i as u64))).collect();
-        let mut pngs = Vec::with_capacity(n);
-        for h in handles {
-            let img_t = h.wait();
+/// Submit all `n` slots up front (so the batcher can group them), then wait
+/// for each image **on this request's thread** and hand it to the encode
+/// pool as a pure-CPU PNG+base64 job. Encoding image `i` overlaps decoding
+/// image `i+1`, and encode-pool threads never block on decode — so one
+/// still-queued request cannot head-of-line-block another request's
+/// already-decoded images out of the encoder.
+fn generate(inner: &Arc<ServerState>, n: usize, seed: u64) -> Result<String> {
+    let rid = inner.next_request_id.fetch_add(1, Ordering::SeqCst);
+    let encode_time = inner.registry.histogram("sjd_encode_time");
+
+    let handles: Vec<_> = (0..n)
+        .map(|i| inner.batcher.submit(rid, seed.wrapping_add(i as u64)))
+        .collect::<Result<_>>()?;
+    let mut jobs = Vec::with_capacity(n);
+    for handle in handles {
+        // A decode failure completes the slot with its error → 500.
+        let img_t = handle.wait().map_err(|msg| anyhow::anyhow!(msg))?;
+        let encode_time = encode_time.clone();
+        jobs.push(inner.encode_pool.spawn_result(move || -> Result<String> {
+            let t0 = Instant::now();
             let img = Image::from_tensor_pm1(&img_t)?;
             let png = imageio::encode_png(&img)?;
-            pngs.push(Value::Str(base64_encode(&png)));
-        }
-        let resp = Value::obj(vec![
-            ("request_id", Value::num(rid as f64)),
-            ("n", Value::num(n as f64)),
-            ("images_png_b64", Value::Arr(pngs)),
-        ]);
-        Ok(jsonx::to_string_pretty(&resp))
+            let b64 = base64_encode(&png);
+            encode_time.record_duration(t0.elapsed());
+            Ok(b64)
+        }));
     }
+    let mut pngs = Vec::with_capacity(n);
+    for job in jobs {
+        pngs.push(Value::Str(job.wait()?));
+    }
+    let resp = Value::obj(vec![
+        ("request_id", Value::num(rid as f64)),
+        ("n", Value::num(n as f64)),
+        ("images_png_b64", Value::Arr(pngs)),
+    ]);
+    Ok(jsonx::to_string_pretty(&resp))
 }
 
 #[cfg(test)]
@@ -312,6 +526,47 @@ mod tests {
         assert_eq!(base64_encode(b"foobar"), "Zm9vYmFy");
     }
 
+    /// Test-only RFC 4648 decoder for the round-trip check.
+    fn base64_decode(s: &str) -> Vec<u8> {
+        const TABLE: &[u8; 64] =
+            b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+/";
+        let val = |c: u8| TABLE.iter().position(|&t| t == c).unwrap() as u32;
+        let mut out = Vec::new();
+        for group in s.as_bytes().chunks(4) {
+            let pad = group.iter().filter(|&&c| c == b'=').count();
+            let n = group
+                .iter()
+                .take(4 - pad)
+                .fold(0u32, |acc, &c| (acc << 6) | val(c))
+                << (6 * pad);
+            out.push((n >> 16) as u8);
+            if pad < 2 {
+                out.push((n >> 8) as u8);
+            }
+            if pad < 1 {
+                out.push(n as u8);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn base64_long_input_roundtrip() {
+        // A few-hundred-KB pseudo-random payload (PNG-sized) survives
+        // encode → decode byte-exactly, across all three length residues.
+        for extra in 0..3usize {
+            let data: Vec<u8> = (0..300_000 + extra)
+                .map(|i| {
+                    ((i as u64).wrapping_mul(6364136223846793005).wrapping_add(13) >> 32) as u8
+                })
+                .collect();
+            let enc = base64_encode(&data);
+            assert_eq!(enc.len(), data.len().div_ceil(3) * 4);
+            assert!(enc.is_ascii());
+            assert_eq!(base64_decode(&enc), data, "residue {extra}");
+        }
+    }
+
     #[test]
     fn parse_simple_request() {
         let raw = b"POST /generate HTTP/1.1\r\nHost: x\r\nContent-Length: 7\r\n\r\n{\"n\":2}";
@@ -320,6 +575,7 @@ mod tests {
         assert_eq!(req.method, "POST");
         assert_eq!(req.path, "/generate");
         assert_eq!(req.body, b"{\"n\":2}");
+        assert!(req.keep_alive, "HTTP/1.1 defaults to keep-alive");
     }
 
     #[test]
@@ -332,12 +588,28 @@ mod tests {
     }
 
     #[test]
+    fn connection_header_controls_keep_alive() {
+        let raw = b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n";
+        let mut r = std::io::BufReader::new(&raw[..]);
+        assert!(!parse_request(&mut r).unwrap().keep_alive);
+        // HTTP/1.0 defaults to close, opts back in via keep-alive.
+        let raw = b"GET / HTTP/1.0\r\n\r\n";
+        let mut r = std::io::BufReader::new(&raw[..]);
+        assert!(!parse_request(&mut r).unwrap().keep_alive);
+        let raw = b"GET / HTTP/1.0\r\nConnection: Keep-Alive\r\n\r\n";
+        let mut r = std::io::BufReader::new(&raw[..]);
+        assert!(parse_request(&mut r).unwrap().keep_alive);
+    }
+
+    #[test]
     fn rejects_bad_version_and_eof() {
         let raw = b"GET / SPDY/3\r\n\r\n";
         let mut r = std::io::BufReader::new(&raw[..]);
         assert!(parse_request(&mut r).is_err());
         let mut empty = std::io::BufReader::new(&b""[..]);
-        assert!(parse_request(&mut empty).is_err());
+        let err = parse_request(&mut empty).unwrap_err();
+        // Clean EOF is flagged with the marker type keep-alive loops check.
+        assert!(err.is::<ConnectionClosed>());
     }
 
     #[test]
@@ -408,10 +680,16 @@ mod tests {
     #[test]
     fn response_format() {
         let mut buf = Vec::new();
-        write_response(&mut buf, 200, "text/plain", b"hi").unwrap();
+        write_response(&mut buf, 200, "text/plain", b"hi", false).unwrap();
         let s = String::from_utf8(buf).unwrap();
         assert!(s.starts_with("HTTP/1.1 200 OK\r\n"));
         assert!(s.contains("Content-Length: 2\r\n"));
+        assert!(s.contains("Connection: close\r\n"));
         assert!(s.ends_with("\r\n\r\nhi"));
+
+        let mut buf = Vec::new();
+        write_response(&mut buf, 200, "text/plain", b"hi", true).unwrap();
+        let s = String::from_utf8(buf).unwrap();
+        assert!(s.contains("Connection: keep-alive\r\n"));
     }
 }

@@ -3,8 +3,10 @@
 //! The serving stack is synchronous-threaded: a fixed pool of worker threads
 //! consumes jobs from an MPMC queue built on `std::sync::mpsc` + `Mutex`.
 //! PJRT engines are thread-pinned (`Rc` internals), so model workers are
-//! *dedicated* threads created by the router, not pool workers; the pool is
-//! used for connection handling and load generation.
+//! *dedicated* threads created by the router, not pool workers; pools are
+//! used for HTTP connection handling, per-image PNG encoding
+//! (`coordinator::server` runs one of each, deliberately separate — see its
+//! module docs), and load generation.
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
@@ -56,6 +58,19 @@ impl ThreadPool {
         q.jobs.push_back(Box::new(job));
         drop(q);
         self.shared.cv.notify_one();
+    }
+
+    /// Submit a job and get a [`OneShot`] for its return value — the
+    /// building block for dispatching work (e.g. per-image PNG encodes) and
+    /// collecting results in submission order.
+    pub fn spawn_result<R: Send + 'static>(
+        &self,
+        job: impl FnOnce() -> R + Send + 'static,
+    ) -> OneShot<R> {
+        let slot = OneShot::new();
+        let out = slot.clone();
+        self.spawn(move || out.put(job()));
+        slot
     }
 
     /// Block until the queue is empty and no job is running.
@@ -192,6 +207,15 @@ mod tests {
         let pool = ThreadPool::new(2);
         pool.spawn(|| std::thread::sleep(std::time::Duration::from_millis(10)));
         drop(pool); // must not hang
+    }
+
+    #[test]
+    fn spawn_result_returns_in_submission_order() {
+        let pool = ThreadPool::new(4);
+        let slots: Vec<_> = (0..16u64).map(|i| pool.spawn_result(move || i * i)).collect();
+        for (i, s) in slots.into_iter().enumerate() {
+            assert_eq!(s.wait(), (i * i) as u64);
+        }
     }
 
     #[test]

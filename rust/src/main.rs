@@ -2,6 +2,7 @@
 //!
 //! ```text
 //! sjd serve   --model tf10 --addr 127.0.0.1:8471 --workers 2 --policy selective
+//! sjd serve   --model tf10 --batch-sizes 1,2,4,8 --http-threads 8
 //! sjd sample  --model tf10 --batch 8 --policy gs:4 --tau 0.5 --out samples.png
 //! sjd recon   --model tf10 --batch 8
 //! sjd calibrate --model tf10 --batch 8 --windows 8 --out tf10_policy.json
@@ -22,10 +23,10 @@ use sjd::coordinator::jacobi::{InitStrategy, JacobiConfig};
 use sjd::coordinator::policy::{calibrate, calibrate_windows, DecodePolicy};
 use sjd::coordinator::router::{Router, RouterConfig};
 use sjd::coordinator::sampler::{SampleOptions, Sampler};
-use sjd::coordinator::server::Server;
+use sjd::coordinator::server::{Server, ServerConfig};
 use sjd::imageio::{compose_grid, write_png, Image};
 use sjd::metrics::Registry;
-use sjd::runtime::Engine;
+use sjd::runtime::{Engine, Manifest};
 use sjd::tensor::Pcg64;
 use std::time::Duration;
 
@@ -38,7 +39,8 @@ fn cli() -> Command {
                 .opt("model", "tf10", "model name")
                 .opt("addr", "127.0.0.1:8471", "listen address")
                 .opt("workers", "2", "worker threads (one engine each)")
-                .opt("batch", "8", "model batch size")
+                .opt("batch-sizes", "", "decode buckets, e.g. 1,2,4,8 [default: all lowered]")
+                .opt("http-threads", "8", "HTTP connection-handling threads")
                 .opt("batch-wait-ms", "20", "max batching delay")
                 .opt("policy", "selective", "sequential|ujd|selective[:N]|gs[:W]|@file.json")
                 .opt("policy-file", "", "calibrated policy JSON (overrides --policy)")
@@ -142,16 +144,30 @@ fn cmd_serve(p: &sjd::cli::Parsed) -> Result<()> {
         fused_sequential: false,
         seed: 0,
     };
+    // Resolve the decode buckets: explicit --batch-sizes, or every complete
+    // per-batch artifact family the manifest carries for the model.
+    let artifacts_dir = std::path::PathBuf::from(p.str("artifacts"));
+    let buckets = match p.str("batch-sizes") {
+        "" => {
+            let manifest = Manifest::load(artifacts_dir.join("manifest.json"))?;
+            manifest.decode_buckets(p.str("model"))
+        }
+        spec => parse_buckets(spec)?,
+    };
+    let Some(&max_bucket) = buckets.last() else {
+        bail!("model {} has no lowered decode buckets", p.str("model"));
+    };
+
     let registry = Registry::new();
     let batcher = Batcher::new(
-        p.usize("batch")?,
+        max_bucket,
         Duration::from_millis(p.usize("batch-wait-ms")? as u64),
     );
     let router = Router::start(
         RouterConfig {
-            artifacts_dir: p.str("artifacts").into(),
+            artifacts_dir,
             model: p.str("model").into(),
-            batch_size: p.usize("batch")?,
+            buckets: buckets.clone(),
             workers: p.usize("workers")?,
             options,
         },
@@ -159,15 +175,35 @@ fn cmd_serve(p: &sjd::cli::Parsed) -> Result<()> {
         registry.clone(),
     )?;
     println!(
-        "serving model {} on {} ({} workers, policy {policy_label})",
+        "serving model {} on {} ({} workers, buckets {buckets:?}, policy {policy_label})",
         p.str("model"),
         p.str("addr"),
         p.usize("workers")?,
     );
-    let server = Server::new(p.str("addr"), batcher, registry);
+    let server = Server::with_config(
+        p.str("addr"),
+        batcher,
+        registry,
+        ServerConfig { conn_threads: p.usize("http-threads")?, ..Default::default() },
+    );
     server.run()?;
     router.shutdown();
     Ok(())
+}
+
+/// Parse a `--batch-sizes` list ("1,2,4,8") into sorted unique buckets.
+fn parse_buckets(spec: &str) -> Result<Vec<usize>> {
+    let mut out = Vec::new();
+    for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let b: usize = part.parse().map_err(|_| anyhow::anyhow!("bad bucket size '{part}'"))?;
+        if b == 0 {
+            bail!("bucket sizes must be >= 1");
+        }
+        out.push(b);
+    }
+    out.sort_unstable();
+    out.dedup();
+    Ok(out)
 }
 
 fn cmd_sample(p: &sjd::cli::Parsed) -> Result<()> {

@@ -3,6 +3,23 @@
 //!
 //! All types are `Send + Sync` (atomics / mutex-protected) so worker threads
 //! and the HTTP `/metrics` endpoint share one [`Registry`].
+//!
+//! ## Canonical serving metric names
+//!
+//! The request path breaks per-request latency into three histograms so the
+//! load bench (`benches/serve_load.rs`) and operators can see where time
+//! goes:
+//!
+//! | metric                    | kind      | recorded by                          |
+//! |---------------------------|-----------|--------------------------------------|
+//! | `sjd_queue_wait`          | histogram | router worker, submit → decode start |
+//! | `sjd_decode_time`         | histogram | router worker, per decoded batch     |
+//! | `sjd_encode_time`         | histogram | server encode job, per image         |
+//! | `sjd_request_latency`     | histogram | router worker, submit → image ready  |
+//! | `sjd_batch_fill`          | histogram | real (non-padded) slots per batch    |
+//! | `sjd_padded_slots`        | counter   | slots padded up to the chosen bucket |
+//! | `sjd_bucket_{B}_batches`  | counter   | batches decoded via bucket `B`       |
+//! | `sjd_http_keepalive_reuses` | counter | requests served on a reused connection |
 
 mod histogram;
 mod registry;

@@ -1,6 +1,12 @@
 //! Artifact manifest: the contract between `python/compile/aot.py` (which
 //! writes `artifacts/manifest.json`) and the rust [`super::Engine`].
 //!
+//! Per-model artifacts come in **batch-bucket families** — every role
+//! (`block_jstep`, `block_seqstep`, …) lowered once per batch size `B`
+//! under the `{m}_<role>_b{B}` naming scheme (`aot.py --batch-sizes`).
+//! [`Manifest::decode_buckets`] groups them back into the routable bucket
+//! set the serving layer selects from (see `coordinator::router`).
+//!
 //! ## The `untupled_outputs` residency contract
 //!
 //! Besides each program's input/output signatures, the manifest records per
@@ -297,6 +303,43 @@ impl Manifest {
     pub fn artifacts_for(&self, model: &str) -> Vec<&ArtifactMeta> {
         self.artifacts.values().filter(|a| a.model.as_deref() == Some(model)).collect()
     }
+
+    /// Group a model's artifacts into batch buckets: the ascending batch
+    /// sizes `B` (from the `{m}_<role>_b{B}` name suffix) that carry the
+    /// model's **complete** per-batch artifact set — a bucket missing any
+    /// role another bucket has (e.g. a `_b2` family lowered without its
+    /// `block_jstep_b2`) is excluded rather than failing at decode time.
+    /// Models with no batch-suffixed artifacts fall back to the metadata's
+    /// `batch_sizes` list. This is what the serving router treats as the
+    /// routable bucket set.
+    pub fn decode_buckets(&self, model: &str) -> Vec<usize> {
+        use std::collections::{BTreeMap as Map, BTreeSet as Set};
+        let prefix = format!("{model}_");
+        let mut roles_by_bucket: Map<usize, Set<&str>> = Map::new();
+        let mut all_roles: Set<&str> = Set::new();
+        for a in self.artifacts_for(model) {
+            let Some(rest) = a.name.strip_prefix(&prefix) else { continue };
+            let Some((role, b)) = rest.rsplit_once("_b") else { continue };
+            let Ok(b) = b.parse::<usize>() else { continue };
+            roles_by_bucket.entry(b).or_default().insert(role);
+            all_roles.insert(role);
+        }
+        if roles_by_bucket.is_empty() {
+            let mut sizes = self
+                .models
+                .get(model)
+                .map(|m| m.batch_sizes.clone())
+                .unwrap_or_default();
+            sizes.sort_unstable();
+            sizes.dedup();
+            return sizes;
+        }
+        roles_by_bucket
+            .into_iter()
+            .filter(|(_, roles)| *roles == all_roles)
+            .map(|(b, _)| b)
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -342,6 +385,56 @@ mod tests {
         assert_eq!(mm.seq_len, 64);
         assert_eq!(mm.image_hwc, Some([16, 16, 3]));
         assert_eq!(m.artifacts_for("m1").len(), 1);
+    }
+
+    #[test]
+    fn decode_buckets_require_complete_artifact_sets() {
+        let dir = std::env::temp_dir().join("sjd_manifest_buckets");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("a.hlo.txt"), "HloModule m").unwrap();
+        let art = |name: &str| {
+            format!(
+                r#"{{"name": "{name}", "file": "a.hlo.txt", "model": "m1",
+                     "inputs": [], "outputs": []}}"#
+            )
+        };
+        // Buckets 1 and 2 carry both roles; bucket 4 is missing its
+        // seqstep, so it must not be routable.
+        let arts: Vec<String> = [
+            "m1_block_jstep_b1",
+            "m1_block_seqstep_b1",
+            "m1_block_jstep_b2",
+            "m1_block_seqstep_b2",
+            "m1_block_jstep_b4",
+        ]
+        .iter()
+        .map(|n| art(n))
+        .collect();
+        let body = format!(
+            r#"{{"artifacts": [{}],
+                 "models": [{{"name": "m1", "kind": "tarflow", "seq_len": 8,
+                              "blocks": 2, "token_dim": 3, "model_dim": 4,
+                              "batch_sizes": [1, 2, 4]}}]}}"#,
+            arts.join(",")
+        );
+        let p = write_manifest(&dir, &body);
+        let m = Manifest::load(&p).unwrap();
+        assert_eq!(m.decode_buckets("m1"), vec![1, 2]);
+        // Unknown model → empty; no suffixed artifacts → metadata fallback.
+        assert!(m.decode_buckets("ghost").is_empty());
+    }
+
+    #[test]
+    fn decode_buckets_fall_back_to_model_meta() {
+        let dir = std::env::temp_dir().join("sjd_manifest_buckets2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let body = r#"{"artifacts": [],
+                       "models": [{"name": "m1", "kind": "maf", "seq_len": 8,
+                                   "blocks": 2, "token_dim": 1, "model_dim": 4,
+                                   "batch_sizes": [256, 256, 50]}]}"#;
+        let p = write_manifest(&dir, body);
+        let m = Manifest::load(&p).unwrap();
+        assert_eq!(m.decode_buckets("m1"), vec![50, 256]);
     }
 
     #[test]

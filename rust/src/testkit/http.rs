@@ -1,0 +1,61 @@
+//! Minimal blocking HTTP/1.1 response reader, shared by the serving
+//! integration tests and the load bench so the framing logic lives once.
+
+use std::io::{BufRead, Read};
+
+/// Read exactly one HTTP response (status line + headers + content-length
+/// body) off a buffered stream, leaving it usable for keep-alive reuse.
+/// Returns `(head, body)`: the status line + headers verbatim, and the raw
+/// body bytes.
+pub fn read_response(reader: &mut impl BufRead) -> std::io::Result<(String, Vec<u8>)> {
+    let mut head = String::new();
+    let mut content_length = 0usize;
+    loop {
+        let mut line = String::new();
+        if reader.read_line(&mut line)? == 0 {
+            break; // EOF mid-head: return what we have, body length 0
+        }
+        if let Some((k, v)) = line.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().unwrap_or(0);
+            }
+        }
+        let done = line.trim_end().is_empty();
+        head.push_str(&line);
+        if done {
+            break;
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    Ok((head, body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    #[test]
+    fn reads_one_response_and_leaves_the_rest() {
+        let raw = b"HTTP/1.1 200 OK\r\nContent-Length: 2\r\n\r\nhiHTTP/1.1 404";
+        let mut r = BufReader::new(&raw[..]);
+        let (head, body) = read_response(&mut r).unwrap();
+        assert!(head.starts_with("HTTP/1.1 200"));
+        assert!(head.ends_with("\r\n\r\n"));
+        assert_eq!(body, b"hi");
+        // The next response's bytes are still in the stream.
+        let mut rest = String::new();
+        r.read_to_string(&mut rest).unwrap();
+        assert_eq!(rest, "HTTP/1.1 404");
+    }
+
+    #[test]
+    fn no_body_without_content_length() {
+        let raw = b"HTTP/1.1 404 Not Found\r\n\r\n";
+        let mut r = BufReader::new(&raw[..]);
+        let (head, body) = read_response(&mut r).unwrap();
+        assert!(head.starts_with("HTTP/1.1 404"));
+        assert!(body.is_empty());
+    }
+}

@@ -1,0 +1,425 @@
+//! A batch-generic analytic mock of the TarFlow artifact ABI, shared by the
+//! hermetic coordinator tests (`rust/tests/mock_backend.rs`), the serving
+//! integration tests (`rust/tests/serving.rs`) and the mock-backend load
+//! bench (`benches/serve_load.rs`).
+//!
+//! The flow is analytically invertible and triangular (so Jacobi decoding
+//! applies). Per block `k` with coupling strength `a_k`, in AR domain:
+//!
+//! ```text
+//! forward: v_0 = u_0;  v_l = u_l − a_k · mean(u_{<l})
+//! inverse: u_l = v_l + a_k · mean(u_{<l})
+//! ```
+//!
+//! [`MockFlow`] is pure math over `&[f32]` buffers with the batch size
+//! derived per call — the same weights serve every lowered bucket, exactly
+//! like the real per-batch artifact families. [`MockServeBackend`] wraps it
+//! as a [`Backend`] suitable for the router/server stack: host-only values,
+//! a thread-shareable call ledger, an optional per-slot decode delay that
+//! scales with the batch dimension (so padded slots cost real time, the
+//! effect the bucketed serving engine exists to remove), and bucket-gated
+//! `has_artifact` so only configured batch sizes appear lowered.
+
+use crate::runtime::{Backend, HostTensor, ModelMeta, Value};
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// The analytic flow: per-block coupling strengths + geometry.
+pub struct MockFlow {
+    /// Per-block coupling strengths (index = block `k`); `len()` = K.
+    pub a: Vec<f32>,
+    /// Sequence length L.
+    pub l: usize,
+    /// Token dim D.
+    pub d: usize,
+    /// Model (KV cache) dim Dm.
+    pub dm: usize,
+}
+
+impl MockFlow {
+    /// The canonical test geometry: K=4, L=8, D=3, Dm=4, non-square 2×4
+    /// image grid at patch 1.
+    pub fn standard() -> Self {
+        MockFlow { a: vec![0.9, 0.2, 0.15, 0.6], l: 8, d: 3, dm: 4 }
+    }
+
+    /// s,g conditioner: g_l = a_k · mean over tokens < l (per-dim), s = 0.
+    fn g_at(&self, k: usize, z: &[f32], b: usize, l_idx: usize) -> Vec<f32> {
+        let (l, d) = (self.l, self.d);
+        let a = self.a[k];
+        let mut g = vec![0.0f32; d];
+        if l_idx == 0 {
+            return g;
+        }
+        for li in 0..l_idx {
+            for di in 0..d {
+                g[di] += z[(b * l + li) * d + di];
+            }
+        }
+        for gi in g.iter_mut() {
+            *gi = a * *gi / l_idx as f32;
+        }
+        g
+    }
+
+    fn g_at_masked(&self, k: usize, z: &[f32], b: usize, l_idx: usize, bound: usize) -> Vec<f32> {
+        let (l, d) = (self.l, self.d);
+        let a = self.a[k];
+        let mut g = vec![0.0f32; d];
+        let n = bound.max(1);
+        for li in 0..bound.max(1).min(l_idx) {
+            for di in 0..d {
+                g[di] += z[(b * l + li) * d + di];
+            }
+        }
+        for gi in g.iter_mut() {
+            *gi = a * *gi / n as f32;
+        }
+        g
+    }
+
+    /// Forward `v = A_k(u)` over `batch` samples.
+    pub fn fwd(&self, k: usize, u: &[f32], batch: usize) -> Vec<f32> {
+        let (l, d) = (self.l, self.d);
+        let mut v = vec![0.0f32; u.len()];
+        for b in 0..batch {
+            for li in 0..l {
+                let g = self.g_at(k, u, b, li);
+                for di in 0..d {
+                    let idx = (b * l + li) * d + di;
+                    v[idx] = u[idx] - g[di];
+                }
+            }
+        }
+        v
+    }
+
+    /// One Jacobi update of the inverse system (masked variant shifts the
+    /// prefix bound like eq 6). Returns `(z', resid[batch])`.
+    pub fn jstep(
+        &self,
+        k: usize,
+        z: &[f32],
+        y: &[f32],
+        o: usize,
+        batch: usize,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let (l, d) = (self.l, self.d);
+        let mut z_next = vec![0.0f32; z.len()];
+        let mut resid = vec![0.0f32; batch];
+        for b in 0..batch {
+            for li in 0..l {
+                let bound = li.saturating_sub(o);
+                let g = if li == 0 { vec![0.0; d] } else { self.g_at_masked(k, z, b, li, bound) };
+                for di in 0..d {
+                    let idx = (b * l + li) * d + di;
+                    z_next[idx] = if li == 0 { y[idx] } else { y[idx] + g[di] };
+                    resid[b] = resid[b].max((z_next[idx] - z[idx]).abs());
+                }
+            }
+        }
+        (z_next, resid)
+    }
+
+    /// Windowed GS-Jacobi inner step: positions outside `[off, off+len)` are
+    /// copied through; the residual covers the window only (it equals the
+    /// full max since frozen positions contribute |z' − z| = 0). Uses the
+    /// same `g_at` arithmetic as `jstep`/`seq_step`, so a full GS sweep is
+    /// bit-exact with sequential decoding.
+    pub fn jstep_win(
+        &self,
+        k: usize,
+        z: &[f32],
+        y: &[f32],
+        off: usize,
+        wlen: usize,
+        batch: usize,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let (l, d) = (self.l, self.d);
+        let mut z_next = z.to_vec();
+        let mut resid = vec![0.0f32; batch];
+        for b in 0..batch {
+            for li in off..(off + wlen).min(l) {
+                let g = self.g_at(k, z, b, li);
+                for di in 0..d {
+                    let idx = (b * l + li) * d + di;
+                    z_next[idx] = if li == 0 { y[idx] } else { y[idx] + g[di] };
+                    resid[b] = resid[b].max((z_next[idx] - z[idx]).abs());
+                }
+            }
+        }
+        (z_next, resid)
+    }
+
+    /// One sequential token step: the decoded prefix lives in the kv_k cache
+    /// (slot `[0, b, pos, 0..D]`), mirroring the real cache contract.
+    /// Returns `(u_tok[batch, D], kv_k', kv_v')`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn seq_step(
+        &self,
+        k: usize,
+        u_prev: &[f32],
+        v_tok: &[f32],
+        pos: usize,
+        kv_k: &[f32],
+        kv_v: &[f32],
+        batch: usize,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let (l, d, dm) = (self.l, self.d, self.dm);
+        let mut kv_k = kv_k.to_vec();
+        let kv_v = kv_v.to_vec();
+        // Write u_prev (token at net position pos, i.e. u_{pos-1}) into the
+        // cache at pos-1.
+        if pos > 0 {
+            for b in 0..batch {
+                for di in 0..d {
+                    kv_k[(b * l + (pos - 1)) * dm + di] = u_prev[b * d + di];
+                }
+            }
+        }
+        // u_pos = v_pos + g(prefix) with prefix read from the cache.
+        let mut u_tok = vec![0.0f32; batch * d];
+        for b in 0..batch {
+            if pos == 0 {
+                u_tok[b * d..(b + 1) * d].copy_from_slice(&v_tok[b * d..(b + 1) * d]);
+            } else {
+                let a = self.a[k];
+                for di in 0..d {
+                    let mut g = 0.0;
+                    for li in 0..pos {
+                        g += kv_k[(b * l + li) * dm + di];
+                    }
+                    u_tok[b * d + di] = v_tok[b * d + di] + a * g / pos as f32;
+                }
+            }
+        }
+        (u_tok, kv_k, kv_v)
+    }
+
+    /// Token reversal along the sequence axis (the device-side `P_k` gather).
+    pub fn reverse(&self, t: &[f32], batch: usize) -> Vec<f32> {
+        let (l, d) = (self.l, self.d);
+        let mut out = vec![0.0f32; t.len()];
+        for b in 0..batch {
+            for li in 0..l {
+                let s = (b * l + li) * d;
+                let dst = (b * l + (l - 1 - li)) * d;
+                out[dst..dst + d].copy_from_slice(&t[s..s + d]);
+            }
+        }
+        out
+    }
+
+    /// Execute an artifact by name on host tensors, with the batch size
+    /// derived from the input shapes — the single dispatch every mock
+    /// backend entry path shares.
+    pub fn exec(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        if name.contains("jstep_win") {
+            let batch = inputs[1].shape()[0];
+            let k = inputs[0].as_i32()?[0] as usize;
+            let z = inputs[1].as_f32()?;
+            let y = inputs[2].as_f32()?;
+            let off = inputs[3].as_i32()?[0] as usize;
+            let wlen = inputs[4].as_i32()?[0] as usize;
+            let (zn, r) = self.jstep_win(k, z, y, off, wlen, batch);
+            Ok(vec![HostTensor::f32(inputs[1].shape(), zn), HostTensor::f32(&[batch], r)])
+        } else if name.contains("block_jstep") {
+            let batch = inputs[1].shape()[0];
+            let k = inputs[0].as_i32()?[0] as usize;
+            let z = inputs[1].as_f32()?;
+            let y = inputs[2].as_f32()?;
+            let o = inputs[3].as_i32()?[0] as usize;
+            let (zn, r) = self.jstep(k, z, y, o, batch);
+            Ok(vec![HostTensor::f32(inputs[1].shape(), zn), HostTensor::f32(&[batch], r)])
+        } else if name.contains("block_fwd") {
+            let batch = inputs[1].shape()[0];
+            let k = inputs[0].as_i32()?[0] as usize;
+            let u = inputs[1].as_f32()?;
+            Ok(vec![HostTensor::f32(inputs[1].shape(), self.fwd(k, u, batch))])
+        } else if name.contains("_reverse_") {
+            let batch = inputs[0].shape()[0];
+            let t = inputs[0].as_f32()?;
+            Ok(vec![HostTensor::f32(inputs[0].shape(), self.reverse(t, batch))])
+        } else if name.contains("block_seqstep") {
+            let batch = inputs[1].shape()[0];
+            let k = inputs[0].as_i32()?[0] as usize;
+            let u_prev = inputs[1].as_f32()?;
+            let v_tok = inputs[2].as_f32()?;
+            let pos = inputs[3].as_i32()?[0] as usize;
+            let (u_tok, kv_k, kv_v) = self.seq_step(
+                k,
+                u_prev,
+                v_tok,
+                pos,
+                inputs[4].as_f32()?,
+                inputs[5].as_f32()?,
+                batch,
+            );
+            Ok(vec![
+                HostTensor::f32(&[batch, self.d], u_tok),
+                HostTensor::f32(inputs[4].shape(), kv_k),
+                HostTensor::f32(inputs[5].shape(), kv_v),
+            ])
+        } else {
+            bail!("mock flow: unknown artifact '{name}'")
+        }
+    }
+}
+
+/// Thread-shareable call ledger: router workers run the backend on their own
+/// threads, so tests observe calls through this `Arc` instead of poking the
+/// backend directly.
+#[derive(Default)]
+pub struct MockLedger {
+    calls: Mutex<BTreeMap<String, usize>>,
+}
+
+impl MockLedger {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    fn bump(&self, name: &str) {
+        *self.calls.lock().unwrap().entry(name.to_string()).or_default() += 1;
+    }
+
+    /// Calls recorded for one exact artifact name.
+    pub fn count(&self, name: &str) -> usize {
+        self.calls.lock().unwrap().get(name).copied().unwrap_or(0)
+    }
+
+    /// Calls summed over every artifact whose name contains `sub`.
+    pub fn count_containing(&self, sub: &str) -> usize {
+        self.calls
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|(k, _)| k.contains(sub))
+            .map(|(_, v)| v)
+            .sum()
+    }
+}
+
+/// [`Backend`] over [`MockFlow`] for the serving stack (router workers,
+/// HTTP server, load bench). Host-only values; the batch size of every call
+/// comes from the input shapes, so one backend serves all buckets.
+pub struct MockServeBackend {
+    pub flow: MockFlow,
+    /// Batch sizes this mock claims artifacts for ([`Backend::has_artifact`]
+    /// gates on the `_b{B}` name suffix, like a real bucketed manifest).
+    pub buckets: Vec<usize>,
+    /// Artificial decode cost: every jstep/seqstep call sleeps
+    /// `slot_delay × B` (batch-proportional kernel time), so a padded slot
+    /// wastes exactly as much wall time as a real one.
+    pub slot_delay: Duration,
+    pub ledger: Arc<MockLedger>,
+}
+
+impl MockServeBackend {
+    pub fn new(buckets: &[usize], slot_delay: Duration, ledger: Arc<MockLedger>) -> Self {
+        MockServeBackend {
+            flow: MockFlow::standard(),
+            buckets: buckets.to_vec(),
+            slot_delay,
+            ledger,
+        }
+    }
+
+    fn host(v: &Value) -> Result<HostTensor> {
+        match v {
+            Value::Host(t) => Ok(t.clone()),
+            Value::Device(_) => bail!("MockServeBackend mints no device values"),
+        }
+    }
+}
+
+impl Backend for MockServeBackend {
+    fn call_v(&self, name: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+        self.ledger.bump(name);
+        let host: Vec<HostTensor> = inputs.iter().map(Self::host).collect::<Result<_>>()?;
+        if !self.slot_delay.is_zero() && (name.contains("jstep") || name.contains("seqstep")) {
+            let batch = host[1].shape()[0];
+            std::thread::sleep(self.slot_delay * batch as u32);
+        }
+        Ok(self.flow.exec(name, &host)?.into_iter().map(Value::Host).collect())
+    }
+
+    fn has_artifact(&self, name: &str) -> bool {
+        // Only the configured buckets are "lowered": `{m}_<role>_b{B}`.
+        name.rsplit_once("_b")
+            .and_then(|(_, b)| b.parse::<usize>().ok())
+            .is_some_and(|b| self.buckets.contains(&b))
+    }
+
+    fn model_meta(&self, model: &str) -> Result<ModelMeta> {
+        Ok(ModelMeta {
+            name: model.to_string(),
+            kind: "tarflow".into(),
+            seq_len: self.flow.l,
+            blocks: self.flow.a.len(),
+            token_dim: self.flow.d,
+            model_dim: self.flow.dm,
+            layers_per_block: 1,
+            // Non-square 2×4 grid with patch 1: L = 2·4 = 8, D = 1·1·3 = 3.
+            image_hwc: Some([2, 4, 3]),
+            patch: 1,
+            noise_std: 0.0,
+            batch_sizes: self.buckets.clone(),
+            extra: BTreeMap::new(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fwd_inverse_roundtrip_any_batch() {
+        // The same weights serve every batch size (bucket invariance): the
+        // forward/Jacobi-fixed-point pair must close at B = 1 and B = 4.
+        let f = MockFlow::standard();
+        for batch in [1usize, 4] {
+            let n = batch * f.l * f.d;
+            let u: Vec<f32> = (0..n).map(|i| ((i * 37 + 11) % 17) as f32 / 17.0 - 0.5).collect();
+            let v = f.fwd(1, &u, batch);
+            let mut z = vec![0.0f32; n];
+            for _ in 0..f.l {
+                z = f.jstep(1, &z, &v, 0, batch).0;
+            }
+            let err = u.iter().zip(&z).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+            assert!(err < 1e-4, "batch {batch}: inverse error {err}");
+        }
+    }
+
+    #[test]
+    fn bucket_gated_artifacts() {
+        let be = MockServeBackend::new(&[1, 4], Duration::ZERO, MockLedger::new());
+        assert!(be.has_artifact("mock_block_jstep_b1"));
+        assert!(be.has_artifact("mock_reverse_b4"));
+        assert!(!be.has_artifact("mock_block_jstep_b2"));
+        assert!(!be.has_artifact("no_suffix"));
+        assert_eq!(be.model_meta("mock").unwrap().batch_sizes, vec![1, 4]);
+    }
+
+    #[test]
+    fn ledger_counts_across_threads() {
+        let ledger = MockLedger::new();
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let ledger = ledger.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..25 {
+                    ledger.bump("m_block_jstep_b2");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(ledger.count("m_block_jstep_b2"), 100);
+        assert_eq!(ledger.count_containing("jstep"), 100);
+    }
+}

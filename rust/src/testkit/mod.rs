@@ -14,6 +14,9 @@
 //! });
 //! ```
 
+pub mod http;
+pub mod mockflow;
+
 use crate::tensor::Pcg64;
 use std::fmt::Debug;
 

@@ -21,9 +21,13 @@ use sjd::coordinator::jacobi::{
     jacobi_decode_block_v, window_partition, InitStrategy, JacobiConfig,
 };
 use sjd::coordinator::policy::{BlockDecode, DecodePolicy};
-use sjd::coordinator::sampler::{SampleOptions, Sampler};
+use sjd::coordinator::sampler::{SampleOptions, Sampler, SamplerSet};
 use sjd::runtime::{Backend, DType, DeviceValue, HostTensor, ModelMeta, Value};
 use sjd::tensor::{Pcg64, Tensor};
+// The analytic flow math (batch-generic) is shared with the serving tests
+// and the load bench; this file owns the *device-simulating* backend that
+// wraps it with a traffic ledger for the residency contracts.
+use sjd::testkit::mockflow::{MockFlow, MockLedger, MockServeBackend};
 use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::rc::Rc;
@@ -33,112 +37,6 @@ const L: usize = 8;
 const D: usize = 3;
 const NL: usize = 1;
 const DM: usize = 4;
-
-struct MockFlow {
-    /// Per-block coupling strengths (index = block k).
-    a: [f32; K],
-}
-
-impl MockFlow {
-    fn new() -> Self {
-        MockFlow { a: [0.9, 0.2, 0.15, 0.6] }
-    }
-
-    /// s,g conditioner: g_l = a_k · mean over tokens < l (per-dim), s = 0.
-    fn g_at(&self, k: usize, z: &[f32], b: usize, l_idx: usize) -> Vec<f32> {
-        let a = self.a[k];
-        let mut g = vec![0.0f32; D];
-        if l_idx == 0 {
-            return g;
-        }
-        for li in 0..l_idx {
-            for di in 0..D {
-                g[di] += z[(b * L + li) * D + di];
-            }
-        }
-        for gi in g.iter_mut() {
-            *gi = a * *gi / l_idx as f32;
-        }
-        g
-    }
-
-    fn fwd(&self, k: usize, u: &[f32], batch: usize) -> Vec<f32> {
-        let mut v = vec![0.0f32; u.len()];
-        for b in 0..batch {
-            for l in 0..L {
-                let g = self.g_at(k, u, b, l);
-                for di in 0..D {
-                    let idx = (b * L + l) * D + di;
-                    v[idx] = u[idx] - g[di];
-                }
-            }
-        }
-        v
-    }
-
-    /// One Jacobi update of the inverse system (masked variant shifts the
-    /// prefix bound like eq 6).
-    fn jstep(&self, k: usize, z: &[f32], y: &[f32], o: usize, batch: usize) -> (Vec<f32>, Vec<f32>) {
-        let mut z_next = vec![0.0f32; z.len()];
-        let mut resid = vec![0.0f32; batch];
-        for b in 0..batch {
-            for l in 0..L {
-                let bound = l.saturating_sub(o);
-                let g = if l == 0 { vec![0.0; D] } else { self.g_at_masked(k, z, b, l, bound) };
-                for di in 0..D {
-                    let idx = (b * L + l) * D + di;
-                    z_next[idx] = if l == 0 { y[idx] } else { y[idx] + g[di] };
-                    resid[b] = resid[b].max((z_next[idx] - z[idx]).abs());
-                }
-            }
-        }
-        (z_next, resid)
-    }
-
-    /// Windowed GS-Jacobi inner step: positions outside [off, off+len) are
-    /// copied through; the residual covers the window only (it equals the
-    /// full max since frozen positions contribute |z' − z| = 0). Uses the
-    /// same `g_at` arithmetic as `jstep`/`seqstep`, so a full GS sweep is
-    /// bit-exact with sequential decoding.
-    fn jstep_win(
-        &self,
-        k: usize,
-        z: &[f32],
-        y: &[f32],
-        off: usize,
-        wlen: usize,
-        batch: usize,
-    ) -> (Vec<f32>, Vec<f32>) {
-        let mut z_next = z.to_vec();
-        let mut resid = vec![0.0f32; batch];
-        for b in 0..batch {
-            for l in off..(off + wlen).min(L) {
-                let g = self.g_at(k, z, b, l);
-                for di in 0..D {
-                    let idx = (b * L + l) * D + di;
-                    z_next[idx] = if l == 0 { y[idx] } else { y[idx] + g[di] };
-                    resid[b] = resid[b].max((z_next[idx] - z[idx]).abs());
-                }
-            }
-        }
-        (z_next, resid)
-    }
-
-    fn g_at_masked(&self, k: usize, z: &[f32], b: usize, l_idx: usize, bound: usize) -> Vec<f32> {
-        let a = self.a[k];
-        let mut g = vec![0.0f32; D];
-        let n = bound.max(1);
-        for li in 0..bound.max(1).min(l_idx) {
-            for di in 0..D {
-                g[di] += z[(b * L + li) * D + di];
-            }
-        }
-        for gi in g.iter_mut() {
-            *gi = a * *gi / n as f32;
-        }
-        g
-    }
-}
 
 /// Ledger of every host↔device crossing the mock observes.
 #[derive(Default)]
@@ -186,7 +84,7 @@ fn fetch(v: &Value) -> HostTensor {
 impl MockBackend {
     fn new() -> Self {
         MockBackend {
-            flow: MockFlow::new(),
+            flow: MockFlow::standard(),
             calls: Default::default(),
             traffic: Default::default(),
             device_reverse: false,
@@ -218,88 +116,10 @@ impl MockBackend {
         self.traffic.borrow().syncs.iter().filter(|s| s.as_slice() == shape).count()
     }
 
-    /// The artifact math, on host tensors (shared by every entry path).
+    /// The artifact math, on host tensors (shared by every entry path):
+    /// delegated to the batch-generic [`MockFlow`] dispatch.
     fn exec_host(&self, name: &str, inputs: &[HostTensor]) -> anyhow::Result<Vec<HostTensor>> {
-        let batch = 2usize;
-        if name.contains("jstep_win") {
-            let k = inputs[0].as_i32()?[0] as usize;
-            let z = inputs[1].as_f32()?;
-            let y = inputs[2].as_f32()?;
-            let off = inputs[3].as_i32()?[0] as usize;
-            let wlen = inputs[4].as_i32()?[0] as usize;
-            let (zn, r) = self.flow.jstep_win(k, z, y, off, wlen, batch);
-            Ok(vec![
-                HostTensor::f32(inputs[1].shape(), zn),
-                HostTensor::f32(&[batch], r),
-            ])
-        } else if name.contains("block_jstep") {
-            let k = inputs[0].as_i32()?[0] as usize;
-            let z = inputs[1].as_f32()?;
-            let y = inputs[2].as_f32()?;
-            let o = inputs[3].as_i32()?[0] as usize;
-            let (zn, r) = self.flow.jstep(k, z, y, o, batch);
-            Ok(vec![
-                HostTensor::f32(inputs[1].shape(), zn),
-                HostTensor::f32(&[batch], r),
-            ])
-        } else if name.contains("block_fwd") {
-            let k = inputs[0].as_i32()?[0] as usize;
-            let u = inputs[1].as_f32()?;
-            Ok(vec![HostTensor::f32(inputs[1].shape(), self.flow.fwd(k, u, batch))])
-        } else if name.contains("_reverse_") {
-            // Device-side token reversal (the P_k gather).
-            let t = inputs[0].as_f32()?;
-            let mut out = vec![0.0f32; t.len()];
-            for b in 0..batch {
-                for l in 0..L {
-                    let s = (b * L + l) * D;
-                    let dst = (b * L + (L - 1 - l)) * D;
-                    out[dst..dst + D].copy_from_slice(&t[s..s + D]);
-                }
-            }
-            Ok(vec![HostTensor::f32(inputs[0].shape(), out)])
-        } else if name.contains("block_seqstep") {
-            // Sequential step: maintain decoded prefix in the kv_k cache
-            // (slot [0, b, pos, 0..D]), mirroring the real cache contract.
-            let k = inputs[0].as_i32()?[0] as usize;
-            let u_prev = inputs[1].as_f32()?;
-            let v_tok = inputs[2].as_f32()?;
-            let pos = inputs[3].as_i32()?[0] as usize;
-            let mut kv_k = inputs[4].as_f32()?.to_vec();
-            let kv_v = inputs[5].as_f32()?.to_vec();
-            // Write u_prev (token at net position pos, i.e. u_{pos-1}) into
-            // the cache at pos-1.
-            if pos > 0 {
-                for b in 0..batch {
-                    for di in 0..D {
-                        kv_k[(b * L + (pos - 1)) * DM + di] = u_prev[b * D + di];
-                    }
-                }
-            }
-            // u_pos = v_pos + g(prefix) with prefix read from the cache.
-            let mut u_tok = vec![0.0f32; batch * D];
-            for b in 0..batch {
-                if pos == 0 {
-                    u_tok[b * D..(b + 1) * D].copy_from_slice(&v_tok[b * D..(b + 1) * D]);
-                } else {
-                    let a = self.flow.a[k];
-                    for di in 0..D {
-                        let mut g = 0.0;
-                        for li in 0..pos {
-                            g += kv_k[(b * L + li) * DM + di];
-                        }
-                        u_tok[b * D + di] = v_tok[b * D + di] + a * g / pos as f32;
-                    }
-                }
-            }
-            Ok(vec![
-                HostTensor::f32(&[batch, D], u_tok),
-                HostTensor::f32(inputs[4].shape(), kv_k),
-                HostTensor::f32(inputs[5].shape(), kv_v),
-            ])
-        } else {
-            anyhow::bail!("mock backend: unknown artifact '{name}'")
-        }
+        self.flow.exec(name, inputs)
     }
 }
 
@@ -954,6 +774,56 @@ fn per_block_policy_mixes_all_three_modes() {
         h = sampler.block_forward(k, &u).unwrap();
     }
     assert!(max_abs_diff(&z0, &h) < 1e-3);
+}
+
+// ---------------------------------------------------------------------------
+// Bucketed sampler sets
+// ---------------------------------------------------------------------------
+
+#[test]
+fn sampler_set_selects_smallest_covering_bucket() {
+    let be = MockServeBackend::new(&[4, 1, 2], std::time::Duration::ZERO, MockLedger::new());
+    let set = SamplerSet::new(&be, "mock", &[]).unwrap();
+    assert_eq!(set.buckets(), vec![1, 2, 4], "buckets sorted ascending");
+    assert_eq!(set.max_bucket(), 4);
+    assert_eq!(set.meta().seq_len, L);
+    assert_eq!(set.select(1).batch, 1);
+    assert_eq!(set.select(2).batch, 2);
+    assert_eq!(set.select(3).batch, 4, "3 slots need the next bucket up");
+    assert_eq!(set.select(4).batch, 4);
+    assert_eq!(set.select(9).batch, 4, "oversized batch falls back to the largest");
+    // An explicitly requested bucket that was never lowered fails fast.
+    assert!(SamplerSet::new(&be, "mock", &[3]).is_err());
+    // An explicit subset restricts routing to it.
+    let sub = SamplerSet::new(&be, "mock", &[1, 4]).unwrap();
+    assert_eq!(sub.select(2).batch, 4);
+}
+
+#[test]
+fn sampler_set_decodes_per_bucket_with_shared_weights() {
+    // The same mock weights serve every bucket: decoding the same latent
+    // content through bucket 1 and bucket 2 must agree row-for-row.
+    let be = MockServeBackend::new(&[1, 2], std::time::Duration::ZERO, MockLedger::new());
+    let set = SamplerSet::new(&be, "mock", &[]).unwrap();
+    let mut opts =
+        SampleOptions { policy: DecodePolicy::Selective { seq_blocks: 1 }, ..Default::default() };
+    opts.jacobi.tau = 1e-7;
+    let z1 = randn(&[1, L, D], 41);
+    let mut z2_data = z1.as_f32().unwrap().to_vec();
+    z2_data.extend_from_slice(z1.as_f32().unwrap());
+    let z2 = HostTensor::f32(&[2, L, D], z2_data);
+    let out1 = set.select(1).decode_tokens(z1, &opts).unwrap();
+    let out2 = set.select(2).decode_tokens(z2, &opts).unwrap();
+    let t1 = out1.tokens.as_f32().unwrap();
+    let t2 = out2.tokens.as_f32().unwrap();
+    assert_eq!(out1.tokens.shape(), &[1, L, D]);
+    assert_eq!(out2.tokens.shape(), &[2, L, D]);
+    for (a, b) in t1.iter().zip(&t2[..L * D]) {
+        assert!((a - b).abs() < 1e-5, "bucket-1 and bucket-2 decodes diverged");
+    }
+    // Decode went through the per-bucket artifact families.
+    assert!(be.ledger.count_containing("_b1") > 0);
+    assert!(be.ledger.count_containing("_b2") > 0);
 }
 
 #[test]

@@ -1,16 +1,22 @@
-//! Serving-stack integration: batcher + router workers + HTTP server,
-//! exercised over real TCP against real artifacts. Skips when artifacts are
-//! missing.
+//! Serving-stack integration: batcher + router workers + HTTP server.
+//!
+//! Two tiers: hermetic tests over the shared mock backend
+//! (`sjd::testkit::mockflow`) — bucket routing, padding accounting,
+//! concurrent request handling, keep-alive — and artifact-driven end-to-end
+//! tests over real TCP + PJRT that skip when artifacts are missing.
 
 use sjd::coordinator::batcher::Batcher;
+use sjd::coordinator::policy::DecodePolicy;
 use sjd::coordinator::router::{Router, RouterConfig};
 use sjd::coordinator::sampler::SampleOptions;
-use sjd::coordinator::server::Server;
+use sjd::coordinator::server::{Server, ServerConfig};
 use sjd::metrics::Registry;
-use std::io::{Read, Write};
+use sjd::testkit::mockflow::{MockLedger, MockServeBackend};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
-use std::sync::atomic::Ordering;
-use std::time::Duration;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 fn artifacts_dir() -> Option<std::path::PathBuf> {
     let dir = std::env::var("SJD_ARTIFACTS")
@@ -24,12 +30,14 @@ fn artifacts_dir() -> Option<std::path::PathBuf> {
     }
 }
 
+/// One-shot POST: asks the server to close the connection so the whole
+/// response can be slurped with `read_to_string`.
 fn post(addr: &str, path: &str, body: &str) -> String {
     let mut s = TcpStream::connect(addr).expect("connect");
     s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
     write!(
         s,
-        "POST {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+        "POST {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\nContent-Length: {}\r\n\r\n{body}",
         body.len()
     )
     .unwrap();
@@ -38,14 +46,265 @@ fn post(addr: &str, path: &str, body: &str) -> String {
     out
 }
 
+/// One-shot GET (`Connection: close`, see [`post`]).
 fn get(addr: &str, path: &str) -> String {
     let mut s = TcpStream::connect(addr).expect("connect");
     s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
-    write!(s, "GET {path} HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+    write!(s, "GET {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n").unwrap();
     let mut out = String::new();
     s.read_to_string(&mut out).unwrap();
     out
 }
+
+/// One HTTP response off a keep-alive connection (stream stays usable).
+fn read_response(reader: &mut impl BufRead) -> String {
+    let (head, body) = sjd::testkit::http::read_response(reader).expect("response");
+    head + &String::from_utf8_lossy(&body)
+}
+
+/// Boot a single-worker router over the shared mock backend.
+fn mock_router(
+    buckets: &[usize],
+    slot_delay: Duration,
+    policy: DecodePolicy,
+    batcher: &Batcher,
+    registry: &Registry,
+    ledger: &Arc<MockLedger>,
+) -> Router {
+    let buckets = buckets.to_vec();
+    let ledger = ledger.clone();
+    Router::start_with(
+        RouterConfig {
+            artifacts_dir: "unused-by-mock".into(),
+            model: "mock".into(),
+            buckets: Vec::new(), // = every bucket the mock claims lowered
+            workers: 1,
+            options: SampleOptions { policy, ..Default::default() },
+        },
+        batcher.clone(),
+        registry.clone(),
+        move |_widx| Ok(MockServeBackend::new(&buckets, slot_delay, ledger.clone())),
+    )
+    .expect("mock router")
+}
+
+fn start_server(server: Server) -> (Arc<AtomicBool>, std::thread::JoinHandle<anyhow::Result<()>>) {
+    let addr = server.addr().to_string();
+    let stop = server.stop_flag();
+    let t = std::thread::spawn(move || server.run());
+    for _ in 0..100 {
+        if TcpStream::connect(&addr).is_ok() {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    (stop, t)
+}
+
+fn stop_server(
+    addr: &str,
+    stop: Arc<AtomicBool>,
+    t: std::thread::JoinHandle<anyhow::Result<()>>,
+) {
+    stop.store(true, Ordering::SeqCst);
+    let _ = TcpStream::connect(addr);
+    let _ = t.join();
+}
+
+// ---------------------------------------------------------------------------
+// Hermetic mock-backend serving tests
+// ---------------------------------------------------------------------------
+
+#[test]
+fn healthz_and_metrics_respond_while_decode_in_flight() {
+    // Sequential policy + 25 ms per seqstep call ⇒ each n=1 decode takes
+    // ~K·L·25 ms = 800 ms on the single worker. With connection handling on
+    // the pool, /healthz and /metrics must answer mid-decode instead of
+    // queueing behind the generations.
+    let addr = "127.0.0.1:8501";
+    let registry = Registry::new();
+    let batcher = Batcher::new(1, Duration::from_millis(2));
+    let ledger = MockLedger::new();
+    let router = mock_router(
+        &[1],
+        Duration::from_millis(25),
+        DecodePolicy::Sequential,
+        &batcher,
+        &registry,
+        &ledger,
+    );
+    let server = Server::with_config(
+        addr,
+        batcher.clone(),
+        registry.clone(),
+        ServerConfig { conn_threads: 4, ..Default::default() },
+    );
+    let (stop, t) = start_server(server);
+
+    let gen_done = [Arc::new(AtomicBool::new(false)), Arc::new(AtomicBool::new(false))];
+    let mut gens = Vec::new();
+    for (i, done) in gen_done.iter().enumerate() {
+        let done = done.clone();
+        gens.push(std::thread::spawn(move || {
+            let resp = post(addr, "/generate", &format!("{{\"n\": 1, \"seed\": {i}}}"));
+            done.store(true, Ordering::SeqCst);
+            resp
+        }));
+    }
+
+    // Probe while the first decode is provably still running.
+    std::thread::sleep(Duration::from_millis(250));
+    let t_probe = Instant::now();
+    let h = get(addr, "/healthz");
+    let m = get(addr, "/metrics");
+    let probe_wall = t_probe.elapsed();
+    assert!(h.starts_with("HTTP/1.1 200"), "{h}");
+    assert!(m.starts_with("HTTP/1.1 200"), "{m}");
+    assert!(m.contains("sjd_http_requests"), "{m}");
+    assert!(
+        !gen_done[0].load(Ordering::SeqCst) && !gen_done[1].load(Ordering::SeqCst),
+        "probes must return before the generations finish"
+    );
+    assert!(
+        probe_wall < Duration::from_millis(500),
+        "probe took {probe_wall:?} — serialized behind a decode?"
+    );
+
+    for g in gens {
+        let resp = g.join().unwrap();
+        assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+    }
+    stop_server(addr, stop, t);
+    router.shutdown();
+}
+
+#[test]
+fn n1_generate_uses_bucket_1_with_zero_padding() {
+    // The headline property: with buckets {1,2,4,8} lowered, a lone n=1
+    // request decodes through the b1 artifacts and pads nothing.
+    let addr = "127.0.0.1:8502";
+    let registry = Registry::new();
+    let batcher = Batcher::new(8, Duration::from_millis(10));
+    let ledger = MockLedger::new();
+    let router = mock_router(
+        &[1, 2, 4, 8],
+        Duration::ZERO,
+        DecodePolicy::Selective { seq_blocks: 1 },
+        &batcher,
+        &registry,
+        &ledger,
+    );
+    let server = Server::new(addr, batcher.clone(), registry.clone());
+    let (stop, t) = start_server(server);
+
+    let resp = post(addr, "/generate", r#"{"n": 1, "seed": 3}"#);
+    assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+    let body = resp.split("\r\n\r\n").nth(1).unwrap();
+    let v = sjd::jsonx::parse(body).expect("json body");
+    assert_eq!(v.req_arr("images_png_b64").unwrap().len(), 1);
+
+    assert_eq!(registry.counter("sjd_padded_slots").get(), 0, "n=1 must pad zero slots");
+    assert_eq!(registry.counter("sjd_bucket_1_batches").get(), 1);
+    assert!(ledger.count_containing("_b1") > 0, "decode must run the b1 artifacts");
+    for b in [2usize, 4, 8] {
+        assert_eq!(ledger.count_containing(&format!("_b{b}")), 0, "bucket {b} must stay idle");
+    }
+    stop_server(addr, stop, t);
+    router.shutdown();
+}
+
+#[test]
+fn three_slot_batch_rounds_up_to_bucket_4_with_one_pad() {
+    let registry = Registry::new();
+    let batcher = Batcher::new(4, Duration::from_millis(150));
+    let ledger = MockLedger::new();
+    let router = mock_router(
+        &[1, 2, 4],
+        Duration::ZERO,
+        DecodePolicy::Selective { seq_blocks: 1 },
+        &batcher,
+        &registry,
+        &ledger,
+    );
+
+    // 3 slots land together, the 4-slot deadline lapses, the worker picks
+    // bucket 4 and pads exactly one slot.
+    let handles: Vec<_> = (0..3).map(|i| batcher.submit(7, i).unwrap()).collect();
+    for h in handles {
+        let img = h.wait().expect("decoded image");
+        assert_eq!(img.ndim(), 3);
+    }
+    assert_eq!(registry.counter("sjd_bucket_4_batches").get(), 1);
+    assert_eq!(registry.counter("sjd_padded_slots").get(), 1);
+    assert!(ledger.count_containing("_b4") > 0);
+    assert_eq!(ledger.count_containing("_b2"), 0);
+
+    // A lone follow-up slot drops to bucket 1 — no new padding.
+    batcher.submit(8, 9).unwrap().wait().expect("decoded image");
+    assert_eq!(registry.counter("sjd_bucket_1_batches").get(), 1);
+    assert_eq!(registry.counter("sjd_padded_slots").get(), 1, "bucket 1 adds no padding");
+    let fill = registry.histogram("sjd_batch_fill").snapshot();
+    assert_eq!(fill.count, 2);
+    assert_eq!(fill.max, 3, "batch fill records real slots, not the padded bucket");
+    router.shutdown();
+}
+
+#[test]
+fn keepalive_connection_serves_multiple_requests() {
+    // No router needed: /healthz and /metrics don't touch the batcher.
+    let addr = "127.0.0.1:8503";
+    let registry = Registry::new();
+    let server = Server::new(addr, Batcher::new(1, Duration::from_millis(5)), registry.clone());
+    let (stop, t) = start_server(server);
+
+    let s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut writer = s.try_clone().unwrap();
+    let mut reader = BufReader::new(s);
+    // Two requests ride the HTTP/1.1 default keep-alive; the third asks for
+    // close and the server must honor it.
+    for _ in 0..2 {
+        write!(writer, "GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+        let resp = read_response(&mut reader);
+        assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+        assert!(resp.contains("Connection: keep-alive"), "{resp}");
+    }
+    write!(writer, "GET /metrics HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n").unwrap();
+    let resp = read_response(&mut reader);
+    assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+    assert!(resp.contains("Connection: close"), "{resp}");
+    let mut rest = String::new();
+    reader.read_to_string(&mut rest).expect("server closes after Connection: close");
+    assert!(rest.is_empty());
+
+    assert_eq!(registry.counter("sjd_http_requests").get(), 3);
+    assert_eq!(registry.counter("sjd_http_keepalive_reuses").get(), 2);
+    stop_server(addr, stop, t);
+}
+
+#[test]
+fn generate_after_shutdown_returns_500_not_hang() {
+    // Post-close submissions fail fast (Batcher::submit), so a /generate
+    // racing shutdown gets an immediate 500 instead of waiting forever on a
+    // slot no worker will ever decode.
+    let addr = "127.0.0.1:8504";
+    let registry = Registry::new();
+    let batcher = Batcher::new(4, Duration::from_millis(5));
+    let server = Server::new(addr, batcher.clone(), registry.clone());
+    let (stop, t) = start_server(server);
+
+    batcher.close(); // simulates router.shutdown() while the listener lives
+    let resp = post(addr, "/generate", r#"{"n": 1}"#);
+    assert!(resp.starts_with("HTTP/1.1 500"), "{resp}");
+    let body = resp.split("\r\n\r\n").nth(1).unwrap();
+    let v = sjd::jsonx::parse(body).expect("error body is JSON");
+    assert!(v.get("error").is_some());
+    stop_server(addr, stop, t);
+}
+
+// ---------------------------------------------------------------------------
+// Artifact-driven end-to-end tests (skip without artifacts)
+// ---------------------------------------------------------------------------
 
 #[test]
 fn serve_generate_and_metrics_end_to_end() {
@@ -57,7 +316,7 @@ fn serve_generate_and_metrics_end_to_end() {
         RouterConfig {
             artifacts_dir: dir,
             model: "tf10".into(),
-            batch_size: 1,
+            buckets: vec![1],
             workers: 1,
             options: SampleOptions::default(),
         },
@@ -67,14 +326,7 @@ fn serve_generate_and_metrics_end_to_end() {
     .expect("router");
 
     let server = Server::new(addr, batcher, registry.clone());
-    let stop = server.stop_flag();
-    let t = std::thread::spawn(move || server.run());
-    for _ in 0..100 {
-        if TcpStream::connect(addr).is_ok() {
-            break;
-        }
-        std::thread::sleep(Duration::from_millis(20));
-    }
+    let (stop, t) = start_server(server);
 
     // Health.
     let h = get(addr, "/healthz");
@@ -106,6 +358,7 @@ fn serve_generate_and_metrics_end_to_end() {
     let m = get(addr, "/metrics");
     assert!(m.contains("sjd_images_generated"), "{m}");
     assert!(m.contains("sjd_http_requests"));
+    assert!(m.contains("sjd_padded_slots"));
 
     // Bad request handled.
     let bad = post(addr, "/generate", "{invalid json");
@@ -114,9 +367,7 @@ fn serve_generate_and_metrics_end_to_end() {
     assert!(nf.starts_with("HTTP/1.1 404"));
 
     // Shutdown.
-    stop.store(true, Ordering::SeqCst);
-    let _ = TcpStream::connect(addr);
-    let _ = t.join();
+    stop_server(addr, stop, t);
     router.shutdown();
 }
 
@@ -129,14 +380,7 @@ fn server_answers_malformed_requests_without_backend() {
     let registry = Registry::new();
     let batcher = Batcher::new(1, Duration::from_millis(5));
     let server = Server::new(addr, batcher, registry);
-    let stop = server.stop_flag();
-    let t = std::thread::spawn(move || server.run());
-    for _ in 0..100 {
-        if TcpStream::connect(addr).is_ok() {
-            break;
-        }
-        std::thread::sleep(Duration::from_millis(20));
-    }
+    let (stop, t) = start_server(server);
 
     // Header flood → answered 400.
     let mut s = TcpStream::connect(addr).expect("connect");
@@ -161,9 +405,7 @@ fn server_answers_malformed_requests_without_backend() {
     let h = get(addr, "/healthz");
     assert!(h.starts_with("HTTP/1.1 200"), "{h}");
 
-    stop.store(true, Ordering::SeqCst);
-    let _ = TcpStream::connect(addr);
-    let _ = t.join();
+    stop_server(addr, stop, t);
 }
 
 #[test]
@@ -176,7 +418,7 @@ fn batcher_groups_concurrent_requests() {
         RouterConfig {
             artifacts_dir: dir,
             model: "tf10".into(),
-            batch_size: 8,
+            buckets: vec![8],
             workers: 1,
             options: SampleOptions::default(),
         },
@@ -185,14 +427,15 @@ fn batcher_groups_concurrent_requests() {
     )
     .expect("router");
 
-    let handles: Vec<_> = (0..8).map(|i| batcher.submit(i, 9)).collect();
+    let handles: Vec<_> = (0..8).map(|i| batcher.submit(i, 9).unwrap()).collect();
     for h in handles {
-        let img = h.wait();
+        let img = h.wait().expect("decoded image");
         assert_eq!(img.ndim(), 3);
     }
-    // One full batch, no padding.
+    // One full batch, decoded via the 8-bucket with no padding.
     let snap = registry.histogram("sjd_batch_fill").snapshot();
     assert_eq!(snap.count, 1);
     assert!(snap.max == 8, "batch fill {}", snap.max);
+    assert_eq!(registry.counter("sjd_padded_slots").get(), 0);
     router.shutdown();
 }
