@@ -1,0 +1,145 @@
+//! **Fused multi-step Jacobi chunking**: artifact dispatches, blocking host
+//! syncs and wall time of the per-iteration UJD decode vs the chunked fused
+//! decode (`jacobi_decode_block_fused_v`), over the **mock backend** — no
+//! artifacts needed, so it runs everywhere (including the CI smoke step).
+//!
+//! The mock charges every jstep-family call a fixed dispatch/sync overhead
+//! (`CALL_OVERHEAD` — the launch + blocking round-trip latency chunking
+//! exists to amortize) plus batch- and step-proportional kernel time
+//! (`SLOT_DELAY` — fusing removes round-trips, never compute). The
+//! acceptance gate mirrors the mock-ledger test in
+//! `rust/tests/mock_backend.rs`: at τ = 0 the fused decode must produce
+//! **bit-identical tokens** while performing strictly fewer host syncs
+//! (`⌈iterations/S⌉` per block instead of `iterations`); the default-τ rows
+//! are reported for the convergent regime. Exits non-zero if chunking fails
+//! to reduce host syncs at equal output.
+//!
+//! ```bash
+//! cargo bench --bench jstep_fusion            # full run
+//! cargo bench --bench jstep_fusion -- --quick # CI smoke
+//! ```
+
+use anyhow::Result;
+use sjd::benchkit::Report;
+use sjd::coordinator::policy::DecodePolicy;
+use sjd::coordinator::sampler::{SampleOptions, Sampler};
+use sjd::runtime::HostTensor;
+use sjd::tensor::Pcg64;
+use sjd::testkit::mockflow::{MockLedger, MockServeBackend};
+use std::time::Duration;
+
+/// Per-step kernel time (× batch × fused steps — compute is never faked away).
+const SLOT_DELAY: Duration = Duration::from_micros(30);
+/// Per-call dispatch + blocking-sync overhead (what chunking amortizes).
+const CALL_OVERHEAD: Duration = Duration::from_micros(500);
+
+fn quick() -> bool {
+    std::env::args().any(|a| a == "--quick") || std::env::var("SJD_QUICK").is_ok()
+}
+
+struct Run {
+    label: String,
+    tokens: Vec<HostTensor>,
+    iters: usize,
+    syncs: usize,
+    dispatches: usize,
+    wall: f64,
+}
+
+fn run(policy: DecodePolicy, tau: f32, repeats: usize) -> Result<Run> {
+    let ledger = MockLedger::new();
+    let be = MockServeBackend::new(&[2], SLOT_DELAY, ledger.clone())
+        .with_call_overhead(CALL_OVERHEAD);
+    let sampler = Sampler::new(&be, "mock", 2)?;
+    let label = format!("{} τ={tau}", policy.label());
+    let mut opts = SampleOptions { policy, ..Default::default() };
+    opts.jacobi.tau = tau;
+    let mut out_tokens = Vec::with_capacity(repeats);
+    let (mut iters, mut syncs) = (0usize, 0usize);
+    let mut wall = 0.0f64;
+    for r in 0..repeats {
+        opts.seed = 42 + r as u64;
+        let mut rng = Pcg64::seed(opts.seed);
+        let z = sampler.sample_prior(&mut rng);
+        let out = sampler.decode_tokens(z, &opts)?;
+        iters += out.total_jacobi_iters();
+        syncs += out.total_host_syncs();
+        wall += out.total_wall.as_secs_f64();
+        out_tokens.push(out.tokens);
+    }
+    Ok(Run {
+        label,
+        tokens: out_tokens,
+        iters,
+        syncs,
+        dispatches: ledger.count_containing("jstep"),
+        wall,
+    })
+}
+
+fn main() -> Result<()> {
+    let repeats = if quick() { 2 } else { 8 };
+    println!(
+        "=== jstep_fusion: per-iteration vs chunked fused decode \
+         ({repeats} decodes per config, mock backend) ==="
+    );
+    let mut report = Report::new(
+        "Fused multi-step Jacobi — host syncs / dispatches / wall vs per-iteration UJD",
+    );
+
+    // τ = 0: every block runs its full L-iteration exactness sweep on both
+    // paths, so the outputs must be bit-identical — the equal-output gate.
+    let base0 = run(DecodePolicy::UniformJacobi, 0.0, repeats)?;
+    let fuse0 = run(DecodePolicy::Fused { chunk: 4 }, 0.0, repeats)?;
+    // Default τ = 0.5: the convergent serving regime (reported; the τ-stop
+    // iterate may carry documented overshoot steps, so the bitwise gate
+    // applies to the τ=0 rows only).
+    let base5 = run(DecodePolicy::UniformJacobi, 0.5, repeats)?;
+    let fuse5 = run(DecodePolicy::Fused { chunk: 4 }, 0.5, repeats)?;
+
+    let rows: Vec<Vec<String>> = [&base0, &fuse0, &base5, &fuse5]
+        .iter()
+        .map(|r| {
+            vec![
+                r.label.clone(),
+                r.dispatches.to_string(),
+                r.syncs.to_string(),
+                r.iters.to_string(),
+                format!("{:.3}", r.wall),
+            ]
+        })
+        .collect();
+    for r in [&base0, &fuse0, &base5, &fuse5] {
+        println!(
+            "{:>16}: {:>4} dispatches, {:>4} host syncs, {:>4} iters, {:.3}s",
+            r.label, r.dispatches, r.syncs, r.iters, r.wall
+        );
+    }
+    report.table(&["config", "jstep dispatches", "host syncs", "iterations", "wall (s)"], &rows);
+
+    let equal_output = base0.tokens == fuse0.tokens;
+    let syncs_reduced = fuse0.syncs < base0.syncs && fuse5.syncs < base5.syncs;
+    let pass = equal_output && syncs_reduced;
+    report.note(if pass {
+        "PASS: chunked fused decode produced bit-identical τ=0 output with \
+         strictly fewer host syncs (and fewer again at the default τ)."
+    } else {
+        "FAIL: chunking must reduce host syncs at equal output."
+    });
+    report.note(format!(
+        "τ=0 host syncs {} → {} ({}×, dispatches {} → {}); wall {:.3}s → {:.3}s. \
+         Per block the sync count falls from `iterations` to ⌈iterations/S⌉ \
+         (S = fused history length).",
+        base0.syncs,
+        fuse0.syncs,
+        base0.syncs / fuse0.syncs.max(1),
+        base0.dispatches,
+        fuse0.dispatches,
+        base0.wall,
+        fuse0.wall,
+    ));
+    report.finish();
+    anyhow::ensure!(equal_output, "fused τ=0 output diverged from the per-iteration decode");
+    anyhow::ensure!(syncs_reduced, "fused decode did not reduce host syncs");
+    Ok(())
+}

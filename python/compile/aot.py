@@ -76,6 +76,13 @@ MMDGEN_CFG = baselines.MmdGenConfig(
 TF_BATCHES = {"tf10": [1, 8], "tf100": [1, 8], "tfafhq": [1, 4]}
 MAF_BATCHES = {"maf_ising": [256], "maf_img": [50]}
 
+# Static residual-history length of the fused multi-step Jacobi artifacts
+# (`{m}_block_jstep_fuse_b{B}` / `{m}_block_jstep_win_fuse_b{B}`): each call
+# runs up to this many updates on device and returns one (S, B) residual
+# history, so the rust chunk scheduler syncs once per chunk instead of once
+# per iteration. The rust side discovers the cap from the output shape.
+JSTEP_FUSE_STEPS = 8
+
 
 def parse_batch_sizes(spec: str):
     """Parse a `--batch-sizes` list ("1,2,4,8") into sorted unique buckets.
@@ -239,6 +246,34 @@ def lower_tarflow(w: ArtifactWriter, cfg: tarflow.TarFlowConfig, params, batches
             [((), I32), ((b, L, D), jnp.float32), ((b, L, D), jnp.float32),
              ((), I32), ((), I32)],
             ["k", "z_prev", "y", "off", "len"],
+            model=cfg.name,
+        )
+        # Fused multi-step Jacobi: a lax.fori_loop over the jstep body that
+        # runs up to `steps` updates on device and records the residual
+        # after each — one dispatch + one (S, B) sync per *chunk* instead of
+        # per iteration (the rust chunk scheduler recovers exact τ-stopping
+        # semantics by scanning the history host-side). Optional role:
+        # Manifest::decode_buckets treats its absence as "no fused path",
+        # and the rust Sampler falls back to the per-step artifact.
+        w.lower(
+            f"{cfg.name}_block_jstep_fuse_b{b}",
+            lambda k, z, y, steps: tarflow.block_jacobi_multi_step(
+                params, cfg, k, z, y, steps, JSTEP_FUSE_STEPS, use_pallas=True),
+            [((), I32), ((b, L, D), jnp.float32), ((b, L, D), jnp.float32),
+             ((), I32)],
+            ["k", "z_prev", "y", "steps"],
+            model=cfg.name,
+        )
+        # Windowed fused multi-step: the GS-Jacobi inner loop chunked the
+        # same way, window pinned per call.
+        w.lower(
+            f"{cfg.name}_block_jstep_win_fuse_b{b}",
+            lambda k, z, y, steps, off, wl: tarflow.block_jacobi_multi_step_window(
+                params, cfg, k, z, y, steps, off, wl, JSTEP_FUSE_STEPS,
+                use_pallas=True),
+            [((), I32), ((b, L, D), jnp.float32), ((b, L, D), jnp.float32),
+             ((), I32), ((), I32), ((), I32)],
+            ["k", "z_prev", "y", "steps", "off", "len"],
             model=cfg.name,
         )
         w.lower(

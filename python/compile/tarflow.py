@@ -204,6 +204,65 @@ def block_jacobi_step_window(params, cfg: TarFlowConfig, k, z_prev, y, off, wlen
     return z_next, resid
 
 
+def block_jacobi_multi_step(params, cfg: TarFlowConfig, k, z_prev, y, steps,
+                            s_max, use_pallas=True):
+    """Up to ``steps`` fused Jacobi updates of ``A_k(z) = y`` in ONE lowered
+    program (``lax.fori_loop`` around :func:`block_jacobi_step`), recording
+    the per-iteration residual history.
+
+    This is the chunked serving hot path: instead of one artifact dispatch +
+    one ``[B]`` residual sync per iteration, the rust driver requests a whole
+    *chunk* of iterations and syncs one ``[s_max, B]`` residual history per
+    chunk, then scans it host-side to recover exact per-iteration τ-stopping
+    semantics (see ``rust/src/coordinator/jacobi.rs``). Always the exact
+    (``o = 0``) update — masked eq-6 decodes fall back to the per-step
+    artifact, like the windowed step.
+
+    Args:
+      z_prev, y: (B, L, D)
+      steps: i32 scalar (traced) — iterations to run, clamped to ``s_max``
+      s_max: python int — static history length baked into the artifact
+
+    Returns:
+      (z (B, L, D) after ``min(steps, s_max)`` updates,
+       resid_hist (s_max, B) — row ``i`` is the residual after update
+       ``i + 1``; rows ≥ ``steps`` keep the −1 "not run" sentinel)
+    """
+    b = z_prev.shape[0]
+    hist0 = jnp.full((s_max, b), -1.0, jnp.float32)
+    steps = jnp.clip(jnp.asarray(steps, jnp.int32), 0, s_max)
+
+    def body(i, carry):
+        z, hist = carry
+        z_next, resid = block_jacobi_step(params, cfg, k, z, y, 0,
+                                          use_pallas=use_pallas)
+        hist = jax.lax.dynamic_update_slice(hist, resid[None, :], (i, 0))
+        return z_next, hist
+
+    return jax.lax.fori_loop(0, steps, body, (z_prev, hist0))
+
+
+def block_jacobi_multi_step_window(params, cfg: TarFlowConfig, k, z_prev, y,
+                                   steps, off, wlen, s_max, use_pallas=True):
+    """Windowed counterpart of :func:`block_jacobi_multi_step`: up to
+    ``steps`` fused GS-Jacobi inner updates (:func:`block_jacobi_step_window`)
+    with the window pinned at ``[off, off+wlen)``, plus the per-iteration
+    windowed-residual history. Same contract as the plain fused step
+    otherwise (``steps`` clamped to ``s_max``, −1 sentinel rows)."""
+    b = z_prev.shape[0]
+    hist0 = jnp.full((s_max, b), -1.0, jnp.float32)
+    steps = jnp.clip(jnp.asarray(steps, jnp.int32), 0, s_max)
+
+    def body(i, carry):
+        z, hist = carry
+        z_next, resid = block_jacobi_step_window(params, cfg, k, z, y, off,
+                                                 wlen, use_pallas=use_pallas)
+        hist = jax.lax.dynamic_update_slice(hist, resid[None, :], (i, 0))
+        return z_next, hist
+
+    return jax.lax.fori_loop(0, steps, body, (z_prev, hist0))
+
+
 def block_inverse_exact(params, cfg: TarFlowConfig, k, y, use_pallas=False):
     """Exact sequential inverse u = A_k^{-1}(y) via L Jacobi steps
     (Prop 3.2: the iteration is exact after L steps). Build-time only —

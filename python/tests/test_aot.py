@@ -69,7 +69,8 @@ class TestArtifactWriter:
         names = {a["name"] for a in manifest["artifacts"]}
         assert names == {
             "tiny_fwd_b1", "tiny_block_fwd_b1", "tiny_block_jstep_b1",
-            "tiny_block_jstep_win_b1", "tiny_block_seqfull_b1",
+            "tiny_block_jstep_win_b1", "tiny_block_jstep_fuse_b1",
+            "tiny_block_jstep_win_fuse_b1", "tiny_block_seqfull_b1",
             "tiny_block_seqstep_b1", "tiny_reverse_b1"}
         for a in manifest["artifacts"]:
             assert (tmp_path / a["file"]).exists()
@@ -92,12 +93,38 @@ class TestArtifactWriter:
         cfg, params = tiny_tf
         w = aot.ArtifactWriter(tmp_path)
         aot.lower_tarflow(w, cfg, params, [1])
-        win = next(e for e in w.entries if "jstep_win" in e["name"])
+        win = next(e for e in w.entries
+                   if e["name"].endswith("block_jstep_win_b1"))
         assert [i["name"] for i in win["inputs"]] == ["k", "z_prev", "y", "off", "len"]
         assert [i["dtype"] for i in win["inputs"]] == ["i32", "f32", "f32", "i32", "i32"]
         assert [o["shape"] for o in win["outputs"]] == [[1, cfg.seq_len, cfg.token_dim], [1]]
         # Tuple-rooted (two outputs) — the untupled fast path must stay off.
         assert win["untupled_outputs"] is False
+
+    def test_jstep_fuse_signatures(self, tiny_tf, tmp_path):
+        """The fused multi-step artifacts: (k, z_prev, y, steps[, off, len])
+        → (z', resid_hist[S, B]) with S = aot.JSTEP_FUSE_STEPS — the rust
+        chunk scheduler reads the history cap off the output shape."""
+        cfg, params = tiny_tf
+        w = aot.ArtifactWriter(tmp_path)
+        aot.lower_tarflow(w, cfg, params, [2])
+        s = aot.JSTEP_FUSE_STEPS
+        fuse = next(e for e in w.entries
+                    if e["name"].endswith("block_jstep_fuse_b2"))
+        assert [i["name"] for i in fuse["inputs"]] == ["k", "z_prev", "y", "steps"]
+        assert [i["dtype"] for i in fuse["inputs"]] == ["i32", "f32", "f32", "i32"]
+        assert [o["shape"] for o in fuse["outputs"]] == [
+            [2, cfg.seq_len, cfg.token_dim], [s, 2]]
+        assert fuse["untupled_outputs"] is False
+        wfuse = next(e for e in w.entries
+                     if e["name"].endswith("block_jstep_win_fuse_b2"))
+        assert [i["name"] for i in wfuse["inputs"]] == [
+            "k", "z_prev", "y", "steps", "off", "len"]
+        assert [i["dtype"] for i in wfuse["inputs"]] == [
+            "i32", "f32", "f32", "i32", "i32", "i32"]
+        assert [o["shape"] for o in wfuse["outputs"]] == [
+            [2, cfg.seq_len, cfg.token_dim], [s, 2]]
+        assert wfuse["untupled_outputs"] is False
 
 
 class TestBatchBuckets:
@@ -123,6 +150,7 @@ class TestBatchBuckets:
         manifest = json.loads((tmp_path / "manifest.json").read_text())
         names = {a["name"] for a in manifest["artifacts"]}
         roles = ["fwd", "block_fwd", "block_jstep", "block_jstep_win",
+                 "block_jstep_fuse", "block_jstep_win_fuse",
                  "block_seqfull", "block_seqstep", "reverse"]
         for b in (1, 2):
             for role in roles:

@@ -191,6 +191,90 @@ class TestGsJacobi:
         np.testing.assert_allclose(np.asarray(rp), np.asarray(rr), atol=1e-4)
 
 
+class TestJacobiFused:
+    """Fused multi-step Jacobi (`block_jacobi_multi_step[_window]`): one
+    lax.fori_loop program must reproduce the per-step iteration exactly and
+    record the per-iteration residual history the rust chunk scheduler scans
+    (`jacobi_decode_block_fused_v`)."""
+
+    def test_matches_repeated_single_steps(self, small):
+        cfg, params = small
+        s_max = 8
+        u = jax.random.normal(jax.random.PRNGKey(40), (2, cfg.seq_len, cfg.token_dim))
+        v, _ = tarflow.block_forward(params, cfg, 1, u)
+        for steps in (1, 3, s_max):
+            z_f, hist = tarflow.block_jacobi_multi_step(
+                params, cfg, 1, jnp.zeros_like(v), v, steps, s_max,
+                use_pallas=False)
+            z = jnp.zeros_like(v)
+            for i in range(steps):
+                z, r = tarflow.block_jacobi_step(params, cfg, 1, z, v, 0,
+                                                 use_pallas=False)
+                np.testing.assert_allclose(
+                    np.asarray(hist)[i], np.asarray(r), atol=1e-5,
+                    err_msg=f"residual history row {i} (steps={steps})")
+            np.testing.assert_allclose(np.asarray(z_f), np.asarray(z), atol=1e-5)
+
+    def test_sentinel_rows_and_clamping(self, small):
+        cfg, params = small
+        s_max = 4
+        y = jax.random.normal(jax.random.PRNGKey(41), (1, cfg.seq_len, cfg.token_dim))
+        z0 = jnp.zeros_like(y)
+        # Rows past `steps` keep the −1 "not run" sentinel.
+        _, hist = tarflow.block_jacobi_multi_step(
+            params, cfg, 0, z0, y, 2, s_max, use_pallas=False)
+        assert np.all(np.asarray(hist)[:2] >= 0.0)
+        assert np.all(np.asarray(hist)[2:] == -1.0)
+        # steps = 0 is the identity; steps > s_max clamps to s_max.
+        z_id, hist0 = tarflow.block_jacobi_multi_step(
+            params, cfg, 0, z0, y, 0, s_max, use_pallas=False)
+        np.testing.assert_array_equal(np.asarray(z_id), np.asarray(z0))
+        assert np.all(np.asarray(hist0) == -1.0)
+        z_a, hist_a = tarflow.block_jacobi_multi_step(
+            params, cfg, 0, z0, y, s_max + 5, s_max, use_pallas=False)
+        z_b, hist_b = tarflow.block_jacobi_multi_step(
+            params, cfg, 0, z0, y, s_max, s_max, use_pallas=False)
+        np.testing.assert_array_equal(np.asarray(z_a), np.asarray(z_b))
+        np.testing.assert_array_equal(np.asarray(hist_a), np.asarray(hist_b))
+
+    def test_windowed_matches_repeated_window_steps(self, small):
+        cfg, params = small
+        s_max = 8
+        off, wlen = 4, 6
+        u = jax.random.normal(jax.random.PRNGKey(42), (2, cfg.seq_len, cfg.token_dim))
+        v, _ = tarflow.block_forward(params, cfg, 2, u)
+        steps = 4
+        z_f, hist = tarflow.block_jacobi_multi_step_window(
+            params, cfg, 2, jnp.zeros_like(v), v, steps, off, wlen, s_max,
+            use_pallas=False)
+        z = jnp.zeros_like(v)
+        for i in range(steps):
+            z, r = tarflow.block_jacobi_step_window(
+                params, cfg, 2, z, v, off, wlen, use_pallas=False)
+            np.testing.assert_allclose(np.asarray(hist)[i], np.asarray(r), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(z_f), np.asarray(z), atol=1e-5)
+        # Positions outside the window never moved.
+        np.testing.assert_array_equal(np.asarray(z_f)[:, :off], 0.0)
+        np.testing.assert_array_equal(np.asarray(z_f)[:, off + wlen:], 0.0)
+
+    def test_chunked_sweep_equals_per_step_at_tau0(self, small):
+        """Chunks summing to L reproduce the full L-step sweep (the τ=0
+        bit-exactness contract the rust mock-ledger test pins end to end)."""
+        cfg, params = small
+        L = cfg.seq_len
+        s_max = 8
+        u = jax.random.normal(jax.random.PRNGKey(43), (1, L, cfg.token_dim))
+        v, _ = tarflow.block_forward(params, cfg, 0, u)
+        z = jnp.zeros_like(v)
+        done = 0
+        while done < L:
+            chunk = min(s_max, L - done)
+            z, _ = tarflow.block_jacobi_multi_step(
+                params, cfg, 0, z, v, chunk, s_max, use_pallas=False)
+            done += chunk
+        np.testing.assert_allclose(np.asarray(z), np.asarray(u), atol=1e-4)
+
+
 class TestSeqStep:
     def test_matches_exact_inverse(self, small):
         cfg, params = small

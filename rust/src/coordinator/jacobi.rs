@@ -7,11 +7,36 @@
 //! worst-case `L` iteration guard (Prop 3.2 guarantees exactness at `t = L`),
 //! and per-layer statistics for the selective policy / paper tables.
 //!
-//! Both drivers are **device-resident** (see `docs/ARCHITECTURE.md` for the
+//! All drivers are **device-resident** (see `docs/ARCHITECTURE.md` for the
 //! full residency map): the block input `y` and the loop scalars are uploaded
 //! once, the iterate `z` chains device→device across iterations, and the only
 //! per-iteration host sync is the `[B]` residual needed for the τ test.
 //! [`jacobi_decode_block`] is the host-tensor convenience wrapper.
+//!
+//! ## Fused multi-step chunking ([`jacobi_decode_block_fused_v`])
+//!
+//! The paper's superlinear convergence (Thm 3.3) collapses iteration counts,
+//! which makes the per-iteration host round-trip — one artifact dispatch plus
+//! one blocking `[B]` residual sync per step — the dominant non-compute cost
+//! of the loops above. The fused path removes it: the
+//! `{m}_block_jstep_fuse_b{B}` artifact runs up to `steps` Jacobi updates in
+//! ONE lowered program (a `lax.fori_loop` around the jstep body) and returns
+//! the iterate plus a `[S_max, B]` **residual history**, one row per update.
+//! The driver's [`ChunkScheduler`] requests whole chunks of iterations —
+//! first chunk seeded from a calibrated per-block hint, later chunks sized
+//! from the observed contraction rate, dropping to single steps near τ — and
+//! scans each returned history host-side, so the reported per-iteration
+//! semantics (`iterations`, `residuals`, τ stopping, Prop 3.2 caps) are
+//! identical to the per-iteration driver while host syncs fall from
+//! `iterations` to `⌈iterations/S⌉` ([`JacobiStats::host_syncs`]).
+//!
+//! Exactness: τ = 0 decodes are **bit-exact** with the per-iteration driver
+//! (no early stop exists, so the chunks partition the very same update
+//! sequence). A τ > 0 stop that lands mid-chunk leaves the returned iterate
+//! up to `S − 1` cheap on-device updates *past* the τ crossing — extra
+//! contraction toward the same fixed point, never counted in `iterations`.
+//! The windowed counterpart ([`gs_jacobi_decode_block_fused_v`]) chunks the
+//! GS-Jacobi inner loop the same way via `{m}_block_jstep_win_fuse_b{B}`.
 //!
 //! ## Windowed GS-Jacobi ([`gs_jacobi_decode_block_v`])
 //!
@@ -38,9 +63,10 @@
 //!
 //! [`calibrate_windows`]: super::policy::calibrate_windows
 
+use super::state::BufferPool;
 use crate::runtime::{Backend, HostTensor, Value};
 use crate::tensor::Pcg64;
-use anyhow::{Context, Result};
+use anyhow::{ensure, Context, Result};
 use std::time::{Duration, Instant};
 
 /// How `z⁰` is initialized (paper Fig 6 ablation).
@@ -96,6 +122,12 @@ pub struct JacobiStats {
     pub residuals: Vec<f32>,
     /// Whether the τ criterion was reached (vs hitting the iteration cap).
     pub converged: bool,
+    /// Blocking host syncs the decode performed for its τ tests: one per
+    /// iteration on the per-iteration driver, one per *chunk*
+    /// (`⌈iterations/S⌉` at a fixed chunk size `S`) on the fused driver —
+    /// the quantity [`jacobi_decode_block_fused_v`] exists to shrink. The
+    /// final iterate fetch is the caller's sync and is not counted here.
+    pub host_syncs: usize,
 }
 
 /// Decode block `k` by Jacobi iteration, keeping the iterate device-resident.
@@ -117,15 +149,19 @@ pub fn jacobi_decode_block_v<B: Backend>(
     cfg: &JacobiConfig,
     mask_o: usize,
 ) -> Result<(Value, JacobiStats)> {
-    jacobi_decode_block_v_init(engine, artifact, block, y, seq_len, cfg, mask_o, None)
+    jacobi_decode_block_v_init(engine, artifact, block, y, seq_len, cfg, mask_o, None, None)
 }
 
-/// [`jacobi_decode_block_v`] with an optional pre-built initial iterate.
+/// [`jacobi_decode_block_v`] with an optional pre-built initial iterate and
+/// an optional [`BufferPool`] for pinned loop constants.
 ///
 /// When `z0` is provided it is used as `z⁰` verbatim — the caller must make
 /// it consistent with `cfg.init` (the `Sampler` passes its pool's cached
 /// device zeros for `InitStrategy::Zeros`, turning the per-block z⁰ upload
-/// into one upload per process lifetime).
+/// into one upload per process lifetime). When `pool` is provided, the
+/// scalar loop constants (`k`, `mask_o`) come from its
+/// [`BufferPool::device_scalar_i32`] cache instead of fresh per-block
+/// uploads.
 #[allow(clippy::too_many_arguments)]
 pub fn jacobi_decode_block_v_init<B: Backend>(
     engine: &B,
@@ -136,10 +172,11 @@ pub fn jacobi_decode_block_v_init<B: Backend>(
     cfg: &JacobiConfig,
     mask_o: usize,
     z0: Option<Value>,
+    pool: Option<&BufferPool>,
 ) -> Result<(Value, JacobiStats)> {
     let t0 = Instant::now();
-    let (y_dev, k_scalar, mut z) = pin_decode_inputs(engine, block, y, cfg, z0)?;
-    let o_scalar = engine.to_device(&HostTensor::scalar_i32(mask_o as i32))?;
+    let (y_dev, k_scalar, mut z) = pin_decode_inputs(engine, pool, block, y, cfg, z0)?;
+    let o_scalar = pin_scalar_i32(engine, pool, mask_o as i32)?;
 
     let cap = cfg.max_iters.unwrap_or(seq_len);
     let mut residuals = Vec::new();
@@ -167,7 +204,14 @@ pub fn jacobi_decode_block_v_init<B: Backend>(
 
     Ok((
         z,
-        JacobiStats { block, iterations, wall: t0.elapsed(), residuals, converged },
+        JacobiStats {
+            block,
+            iterations,
+            wall: t0.elapsed(),
+            residuals,
+            converged,
+            host_syncs: iterations,
+        },
     ))
 }
 
@@ -194,15 +238,32 @@ pub fn jacobi_decode_block<B: Backend>(
     Ok((engine.to_host(z)?, stats))
 }
 
+/// Pin an i32 scalar loop constant on device: through the pool's
+/// once-per-value cache when a [`BufferPool`] is supplied (the `Sampler`
+/// path — `k`, `mask_o`, window offsets/lengths and chunk sizes repeat
+/// across blocks and requests), else a fresh upload (standalone driver
+/// calls in tests/benches).
+fn pin_scalar_i32<B: Backend>(
+    engine: &B,
+    pool: Option<&BufferPool>,
+    v: i32,
+) -> Result<Value> {
+    match pool {
+        Some(p) => p.device_scalar_i32(v, |t| engine.to_device(t)),
+        None => engine.to_device(&HostTensor::scalar_i32(v)),
+    }
+}
+
 /// Pin a block decode's loop constants on device and build its initial
-/// iterate — shared by the plain and GS drivers so their init contracts
-/// cannot drift. `y` uploads at most once (device values pass through);
-/// `z0`, when supplied, is used verbatim; otherwise `PrevLayer` aliases
-/// `y`'s device handle (no upload at all) and Zeros/Normal build z⁰
-/// host-side via the shared [`init_iterate`] (one source of truth) and
-/// upload it once. Returns `(y_dev, k_scalar, z)`.
+/// iterate — shared by all four drivers so their init contracts cannot
+/// drift. `y` uploads at most once (device values pass through); `z0`,
+/// when supplied, is used verbatim; otherwise `PrevLayer` aliases `y`'s
+/// device handle (no upload at all) and Zeros/Normal build z⁰ host-side
+/// via the shared [`init_iterate`] (one source of truth) and upload it
+/// once. Returns `(y_dev, k_scalar, z)`.
 fn pin_decode_inputs<B: Backend>(
     engine: &B,
+    pool: Option<&BufferPool>,
     block: usize,
     y: &Value,
     cfg: &JacobiConfig,
@@ -212,7 +273,7 @@ fn pin_decode_inputs<B: Backend>(
         Value::Host(t) => engine.to_device(t)?,
         Value::Device(_) => y.clone(),
     };
-    let k_scalar = engine.to_device(&HostTensor::scalar_i32(block as i32))?;
+    let k_scalar = pin_scalar_i32(engine, pool, block as i32)?;
     let z = match (z0, cfg.init) {
         (Some(z0), _) => z0,
         (None, InitStrategy::PrevLayer) => y_dev.clone(),
@@ -222,6 +283,186 @@ fn pin_decode_inputs<B: Backend>(
         }
     };
     Ok((y_dev, k_scalar, z))
+}
+
+// ---------------------------------------------------------------------------
+// Fused multi-step chunking
+// ---------------------------------------------------------------------------
+
+/// Adaptive chunk sizer for the fused multi-step drivers (module docs).
+///
+/// Decides how many on-device Jacobi updates the next
+/// `{m}_block_jstep[_win]_fuse_b{B}` call should run. Inputs to the
+/// decision: the calibrated first-chunk `hint` (a measured per-block
+/// iteration count lands the very first chunk exactly on the τ crossing),
+/// the device-side history cap `S_max` (discovered from the first returned
+/// `[S, B]` history — never assumed), and the residual trajectory so far.
+/// With τ = 0 no early stop exists, so chunks are maximal; with τ > 0 the
+/// observed contraction rate ρ = r_t/r_{t−1} predicts the iterations left
+/// to τ and the scheduler approaches the crossing conservatively
+/// (prediction − 1, then single steps) so an accurate trajectory stops on
+/// the exact τ-crossing iterate; an overshoot costs at most `S − 1` cheap
+/// on-device updates but never a host round-trip.
+#[derive(Clone, Debug)]
+pub struct ChunkScheduler {
+    tau: f32,
+    hint: usize,
+    /// Device history cap; `usize::MAX` until the first history is seen.
+    s_max: usize,
+    /// Last issued chunk (geometric-ramp state).
+    last: usize,
+}
+
+impl ChunkScheduler {
+    pub fn new(first_chunk_hint: usize, tau: f32) -> Self {
+        ChunkScheduler { tau, hint: first_chunk_hint.max(1), s_max: usize::MAX, last: 0 }
+    }
+
+    /// Record the device history cap observed on a returned `[S, B]` history.
+    pub fn observe_cap(&mut self, s_max: usize) {
+        self.s_max = s_max.max(1);
+    }
+
+    /// Size of the next chunk, never exceeding `remaining` (the τ/Prop 3.2
+    /// budget left) or the device cap; 0 only when `remaining` is 0.
+    /// `residuals` is the per-iteration trajectory observed so far.
+    pub fn next_chunk(&mut self, remaining: usize, residuals: &[f32]) -> usize {
+        let cap = remaining.min(self.s_max);
+        if cap == 0 {
+            return 0;
+        }
+        let want = if residuals.is_empty() {
+            self.hint
+        } else if self.tau <= 0.0 {
+            // τ = 0 can never stop early: run maximal chunks.
+            cap
+        } else if let Some(need) = self.predict_remaining(residuals) {
+            // 1-step refinement near τ; otherwise stay one short of the
+            // prediction so an accurate trajectory finishes with an exact
+            // single-step stop instead of an overshoot.
+            if need <= 2 {
+                1
+            } else {
+                need - 1
+            }
+        } else {
+            // No contraction signal (residual flat or growing): ramp
+            // geometrically toward the cap.
+            self.last.max(1).saturating_mul(2)
+        };
+        self.last = want.clamp(1, cap);
+        self.last
+    }
+
+    /// Predicted iterations still needed to cross τ, from the last two
+    /// residuals under a geometric-contraction model; `None` when the
+    /// trajectory gives no usable signal.
+    fn predict_remaining(&self, residuals: &[f32]) -> Option<usize> {
+        let n = residuals.len();
+        if n < 2 {
+            return None;
+        }
+        let (r_prev, r_last) = (residuals[n - 2] as f64, residuals[n - 1] as f64);
+        if !(r_last > 0.0 && r_last < r_prev) {
+            return None;
+        }
+        let rho = r_last / r_prev;
+        let need = ((self.tau as f64).ln() - r_last.ln()) / rho.ln();
+        if !need.is_finite() {
+            return None;
+        }
+        Some(need.ceil().max(1.0) as usize)
+    }
+}
+
+/// Dimensions of a fused-step `[S_max, B]` residual history.
+fn hist_dims(hist: &HostTensor) -> Result<(usize, usize)> {
+    let shape = hist.shape();
+    ensure!(
+        shape.len() == 2 && shape[0] > 0 && shape[1] > 0,
+        "fused resid_hist must be [S, B] with S, B >= 1, got {shape:?}"
+    );
+    Ok((shape[0], shape[1]))
+}
+
+/// Decode block `k` via the fused multi-step artifact
+/// `{m}_block_jstep_fuse_b{B}`: `(k, z_t, y, steps) → (z', resid_hist)`
+/// (always the exact `o = 0` update — masked decodes use the per-step
+/// driver).
+///
+/// Chunked per-iteration-equivalent decode (module docs): per chunk, one
+/// dispatch and one `[S_max, B]` history sync replace up to `S_max`
+/// dispatch+sync round-trips; the history is scanned host-side so
+/// `iterations`/`residuals`/`converged` match [`jacobi_decode_block_v_init`]
+/// exactly, while [`JacobiStats::host_syncs`] counts chunks. `first_chunk`
+/// seeds the [`ChunkScheduler`] (a calibrated per-block iteration count
+/// makes single-chunk decodes the common case). Residency contract is
+/// unchanged: `y` and scalars pin once, the iterate chains device→device.
+#[allow(clippy::too_many_arguments)]
+pub fn jacobi_decode_block_fused_v<B: Backend>(
+    engine: &B,
+    artifact: &str,
+    block: usize,
+    y: &Value,
+    seq_len: usize,
+    cfg: &JacobiConfig,
+    z0: Option<Value>,
+    pool: Option<&BufferPool>,
+    first_chunk: usize,
+) -> Result<(Value, JacobiStats)> {
+    let t0 = Instant::now();
+    let (y_dev, k_scalar, mut z) = pin_decode_inputs(engine, pool, block, y, cfg, z0)?;
+
+    let cap = cfg.max_iters.unwrap_or(seq_len);
+    let mut sched = ChunkScheduler::new(first_chunk, cfg.tau);
+    let mut residuals = Vec::new();
+    let mut converged = false;
+    let mut host_syncs = 0;
+    let mut done = 0;
+    while !converged && done < cap {
+        let chunk = sched.next_chunk(cap - done, &residuals);
+        let steps_scalar = pin_scalar_i32(engine, pool, chunk as i32)?;
+        let outs = engine.call_v(
+            artifact,
+            &[k_scalar.clone(), z, y_dev.clone(), steps_scalar],
+        )?;
+        let mut it = outs.into_iter();
+        z = it.next().context("jstep_fuse returns z'")?;
+        let hist_v = it.next().context("jstep_fuse returns resid_hist")?;
+        // One [S_max, B] history sync per chunk — the only blocking host
+        // traffic of the whole decode.
+        let hist = engine.to_host(hist_v)?;
+        host_syncs += 1;
+        let (s_max, b) = hist_dims(&hist)?;
+        sched.observe_cap(s_max);
+        // The artifact clamps `steps` to its lowered history length; only
+        // rows the chunk actually ran carry residuals.
+        let ran = chunk.min(s_max);
+        ensure!(ran > 0, "fused chunk ran zero steps (artifact '{artifact}')");
+        done += ran;
+        let data = hist.as_f32()?;
+        for row in 0..ran {
+            let resid =
+                data[row * b..(row + 1) * b].iter().copied().fold(0.0f32, f32::max);
+            residuals.push(resid);
+            if resid < cfg.tau {
+                converged = true;
+                break;
+            }
+        }
+    }
+
+    Ok((
+        z,
+        JacobiStats {
+            block,
+            iterations: residuals.len(),
+            wall: t0.elapsed(),
+            residuals,
+            converged,
+            host_syncs,
+        },
+    ))
 }
 
 /// Partition `seq_len` positions into `windows` contiguous windows, as
@@ -291,6 +532,10 @@ pub struct GsJacobiStats {
     /// of the active window from the residual, so a settled prefix never
     /// re-enters the τ test.
     pub front: Vec<usize>,
+    /// Blocking host syncs across the whole sweep: one per iteration on the
+    /// per-iteration driver, one per chunk on
+    /// [`gs_jacobi_decode_block_fused_v`] (see [`JacobiStats::host_syncs`]).
+    pub host_syncs: usize,
 }
 
 /// Decode block `k` by windowed GS-Jacobi iteration (module docs), keeping
@@ -301,8 +546,9 @@ pub struct GsJacobiStats {
 /// `[off, off+len)` are copied through and the residual covers the window
 /// only. `y` follows the same one-upload contract as
 /// [`jacobi_decode_block_v`]; `z0`, when given, is used verbatim (the
-/// `Sampler` passes pooled device zeros). Per iteration only the `[B]`
-/// windowed residual syncs to the host.
+/// `Sampler` passes pooled device zeros) and `pool` pins the per-window
+/// offset/length scalars through the once-per-value cache. Per iteration
+/// only the `[B]` windowed residual syncs to the host.
 #[allow(clippy::too_many_arguments)]
 pub fn gs_jacobi_decode_block_v<B: Backend>(
     engine: &B,
@@ -313,9 +559,10 @@ pub fn gs_jacobi_decode_block_v<B: Backend>(
     windows: usize,
     cfg: &JacobiConfig,
     z0: Option<Value>,
+    pool: Option<&BufferPool>,
 ) -> Result<(Value, GsJacobiStats)> {
     let t0 = Instant::now();
-    let (y_dev, k_scalar, mut z) = pin_decode_inputs(engine, block, y, cfg, z0)?;
+    let (y_dev, k_scalar, mut z) = pin_decode_inputs(engine, pool, block, y, cfg, z0)?;
 
     let mut stats = GsJacobiStats {
         block,
@@ -325,11 +572,19 @@ pub fn gs_jacobi_decode_block_v<B: Backend>(
         position_updates: 0,
         converged: false,
         front: Vec::new(),
+        host_syncs: 0,
     };
     // `max_iters` keeps its plain-Jacobi meaning — a *total* iteration
     // budget for the block — shared across all windows.
     let mut budget = cfg.max_iters.unwrap_or(usize::MAX);
     for (off, len) in window_partition(seq_len, windows) {
+        // An exhausted budget means no remaining window can run a single
+        // iteration: stop sweeping (the decode reports unconverged via the
+        // front check below) instead of walking the remaining windows just
+        // to record empty stats.
+        if budget == 0 {
+            break;
+        }
         // Prop 3.2 applied to the window: with the prefix frozen, `len`
         // iterations are exact — never iterate past that.
         let cap = len.min(budget);
@@ -343,8 +598,8 @@ pub fn gs_jacobi_decode_block_v<B: Backend>(
         };
         let mut last_resid: Vec<f32> = Vec::new();
         if cap > 0 {
-            let off_scalar = engine.to_device(&HostTensor::scalar_i32(off as i32))?;
-            let len_scalar = engine.to_device(&HostTensor::scalar_i32(len as i32))?;
+            let off_scalar = pin_scalar_i32(engine, pool, off as i32)?;
+            let len_scalar = pin_scalar_i32(engine, pool, len as i32)?;
             while ws.iterations < cap {
                 let outs = engine.call_v(
                     artifact,
@@ -361,6 +616,7 @@ pub fn gs_jacobi_decode_block_v<B: Backend>(
                 let resid_v = it.next().context("jstep_win returns residual")?;
                 // The τ test is the only per-iteration sync: a [B] residual.
                 let resid = engine.to_host(resid_v)?.as_f32()?.to_vec();
+                stats.host_syncs += 1;
                 if stats.front.is_empty() {
                     stats.front = vec![0; resid.len()];
                 }
@@ -384,28 +640,43 @@ pub fn gs_jacobi_decode_block_v<B: Backend>(
                 }
             }
         }
-        budget -= ws.iterations;
-        stats.iterations += ws.iterations;
-        stats.position_updates += ws.iterations * len;
-        // Advance each element's front through windows it settled in,
-        // contiguously from the left: its *final* residual under τ, or the
-        // full `len`-iteration cap completed (Prop 3.2 ⇒ the window is
-        // exact given its settled prefix, even though the last movement
-        // exceeded τ). An intermediate dip below τ certifies nothing — the
-        // residual is not monotone while window positions still move.
-        let exact_stop = ws.iterations == len;
-        for (b, f) in stats.front.iter_mut().enumerate() {
-            let tau_ok = last_resid.get(b).is_some_and(|&r| r < cfg.tau);
-            if *f == off && (tau_ok || exact_stop) {
-                *f = off + len;
-            }
-        }
-        stats.windows.push(ws);
+        finish_window(&mut stats, ws, &last_resid, &mut budget, off, len, cfg.tau);
     }
     stats.converged =
         !stats.front.is_empty() && stats.front.iter().all(|&f| f == seq_len);
     stats.wall = t0.elapsed();
     Ok((z, stats))
+}
+
+/// Close out one swept window — shared by the per-iteration and fused GS
+/// drivers so the certification rule cannot drift between them. Charges the
+/// shared iteration budget and the work totals, then advances each batch
+/// element's convergence front through windows it settled in, contiguously
+/// from the left: its *final* residual under τ, or the full `len`-iteration
+/// exactness cap completed (Prop 3.2 ⇒ the window is exact given its
+/// settled prefix, even though the last movement exceeded τ). An
+/// intermediate dip below τ certifies nothing — the residual is not
+/// monotone while window positions still move.
+fn finish_window(
+    stats: &mut GsJacobiStats,
+    ws: WindowStats,
+    last_resid: &[f32],
+    budget: &mut usize,
+    off: usize,
+    len: usize,
+    tau: f32,
+) {
+    *budget -= ws.iterations;
+    stats.iterations += ws.iterations;
+    stats.position_updates += ws.iterations * len;
+    let exact_stop = ws.iterations == len;
+    for (b, f) in stats.front.iter_mut().enumerate() {
+        let tau_ok = last_resid.get(b).is_some_and(|&r| r < tau);
+        if *f == off && (tau_ok || exact_stop) {
+            *f = off + len;
+        }
+    }
+    stats.windows.push(ws);
 }
 
 /// Host-tensor convenience wrapper over [`gs_jacobi_decode_block_v`].
@@ -428,8 +699,132 @@ pub fn gs_jacobi_decode_block<B: Backend>(
         windows,
         cfg,
         None,
+        None,
     )?;
     Ok((engine.to_host(z)?, stats))
+}
+
+/// Windowed GS-Jacobi decode over the fused multi-step window artifact
+/// `{m}_block_jstep_win_fuse_b{B}`:
+/// `(k, z_t, y, steps, off, len) → (z', resid_hist[S_max, B])`.
+///
+/// Identical sweep semantics to [`gs_jacobi_decode_block_v`] — same window
+/// partition, per-window Prop 3.2 caps, shared `max_iters` budget, τ
+/// stopping, `converged_at` bookkeeping and front advancement, all
+/// recovered by scanning each chunk's residual history host-side — but the
+/// inner loop runs in chunks sized by a per-window [`ChunkScheduler`]
+/// seeded with `chunk_hint`, so host syncs per window drop from
+/// `iterations` to `⌈iterations/S⌉` ([`GsJacobiStats::host_syncs`] counts
+/// the sweep total). τ = 0 sweeps are bit-exact with the per-iteration
+/// driver; a τ > 0 stop landing mid-chunk leaves the iterate extra
+/// on-device updates *inside the still-active window* (frozen positions
+/// cannot move), which only contracts it further toward the window's fixed
+/// point and is never counted in `iterations` — budget accounting stays in
+/// reported-iteration space.
+#[allow(clippy::too_many_arguments)]
+pub fn gs_jacobi_decode_block_fused_v<B: Backend>(
+    engine: &B,
+    artifact: &str,
+    block: usize,
+    y: &Value,
+    seq_len: usize,
+    windows: usize,
+    cfg: &JacobiConfig,
+    z0: Option<Value>,
+    pool: Option<&BufferPool>,
+    chunk_hint: usize,
+) -> Result<(Value, GsJacobiStats)> {
+    let t0 = Instant::now();
+    let (y_dev, k_scalar, mut z) = pin_decode_inputs(engine, pool, block, y, cfg, z0)?;
+
+    let mut stats = GsJacobiStats {
+        block,
+        windows: Vec::new(),
+        wall: Duration::ZERO,
+        iterations: 0,
+        position_updates: 0,
+        converged: false,
+        front: Vec::new(),
+        host_syncs: 0,
+    };
+    let mut budget = cfg.max_iters.unwrap_or(usize::MAX);
+    for (off, len) in window_partition(seq_len, windows) {
+        if budget == 0 {
+            break;
+        }
+        let cap = len.min(budget);
+        let mut ws = WindowStats {
+            offset: off,
+            len,
+            iterations: 0,
+            residuals: Vec::new(),
+            converged: false,
+            converged_at: Vec::new(),
+        };
+        let mut last_resid: Vec<f32> = Vec::new();
+        if cap > 0 {
+            let off_scalar = pin_scalar_i32(engine, pool, off as i32)?;
+            let len_scalar = pin_scalar_i32(engine, pool, len as i32)?;
+            // A fresh scheduler per window: the contraction rate is a
+            // per-window property (it depends on the window's coupling),
+            // and the hint never exceeds the window's exactness cap.
+            let mut sched = ChunkScheduler::new(chunk_hint.clamp(1, cap), cfg.tau);
+            while !ws.converged && ws.iterations < cap {
+                let chunk = sched.next_chunk(cap - ws.iterations, &ws.residuals);
+                let steps_scalar = pin_scalar_i32(engine, pool, chunk as i32)?;
+                let outs = engine.call_v(
+                    artifact,
+                    &[
+                        k_scalar.clone(),
+                        z,
+                        y_dev.clone(),
+                        steps_scalar,
+                        off_scalar.clone(),
+                        len_scalar.clone(),
+                    ],
+                )?;
+                let mut it = outs.into_iter();
+                z = it.next().context("jstep_win_fuse returns z'")?;
+                let hist_v = it.next().context("jstep_win_fuse returns resid_hist")?;
+                // One [S_max, B] history sync per chunk.
+                let hist = engine.to_host(hist_v)?;
+                stats.host_syncs += 1;
+                let (s_max, b) = hist_dims(&hist)?;
+                sched.observe_cap(s_max);
+                let ran = chunk.min(s_max);
+                ensure!(ran > 0, "fused chunk ran zero steps (artifact '{artifact}')");
+                if stats.front.is_empty() {
+                    stats.front = vec![0; b];
+                }
+                if ws.converged_at.is_empty() {
+                    ws.converged_at = vec![None; b];
+                }
+                let data = hist.as_f32()?;
+                for row in 0..ran {
+                    let resid = &data[row * b..(row + 1) * b];
+                    ws.iterations += 1;
+                    let mut max_r = 0.0f32;
+                    for (bi, &r) in resid.iter().enumerate() {
+                        if r < cfg.tau && ws.converged_at[bi].is_none() {
+                            ws.converged_at[bi] = Some(ws.iterations);
+                        }
+                        max_r = max_r.max(r);
+                    }
+                    ws.residuals.push(max_r);
+                    last_resid = resid.to_vec();
+                    if max_r < cfg.tau {
+                        ws.converged = true;
+                        break;
+                    }
+                }
+            }
+        }
+        finish_window(&mut stats, ws, &last_resid, &mut budget, off, len, cfg.tau);
+    }
+    stats.converged =
+        !stats.front.is_empty() && stats.front.iter().all(|&f| f == seq_len);
+    stats.wall = t0.elapsed();
+    Ok((z, stats))
 }
 
 /// Build the initial iterate `z⁰` per the configured strategy (host-side;
@@ -487,6 +882,47 @@ mod tests {
         assert_eq!(c.tau, 0.5);
         assert_eq!(c.init, InitStrategy::Zeros);
         assert!(c.max_iters.is_none());
+    }
+
+    #[test]
+    fn chunk_scheduler_tau0_runs_maximal_chunks() {
+        let mut s = ChunkScheduler::new(3, 0.0);
+        // First chunk = the calibrated hint.
+        assert_eq!(s.next_chunk(10, &[]), 3);
+        s.observe_cap(4);
+        // τ = 0 can never stop early ⇒ maximal chunks, device-capped …
+        assert_eq!(s.next_chunk(7, &[1.0]), 4);
+        // … and bounded by the remaining iteration budget.
+        assert_eq!(s.next_chunk(3, &[1.0, 0.5]), 3);
+        assert_eq!(s.next_chunk(0, &[1.0]), 0);
+    }
+
+    #[test]
+    fn chunk_scheduler_first_chunk_clamps_to_remaining_and_cap() {
+        let mut s = ChunkScheduler::new(100, 0.5);
+        s.observe_cap(8);
+        assert_eq!(s.next_chunk(5, &[]), 5, "remaining bounds the hint");
+        let mut s = ChunkScheduler::new(100, 0.5);
+        s.observe_cap(8);
+        assert_eq!(s.next_chunk(64, &[]), 8, "device cap bounds the hint");
+        let mut s = ChunkScheduler::new(0, 0.5);
+        assert_eq!(s.next_chunk(64, &[]), 1, "hint 0 still runs one step");
+    }
+
+    #[test]
+    fn chunk_scheduler_refines_near_tau() {
+        let mut s = ChunkScheduler::new(5, 0.1);
+        s.observe_cap(8);
+        // ρ = 0.4 at residual 0.8 → ⌈2.27⌉ = 3 more steps to τ = 0.1;
+        // approach one short of the prediction so the stop lands exactly.
+        assert_eq!(s.next_chunk(64, &[2.0, 0.8]), 2);
+        // One predicted step left → 1-step refinement.
+        assert_eq!(s.next_chunk(64, &[0.4, 0.2]), 1);
+        // Flat residual gives no contraction signal → geometric ramp off
+        // the last issued chunk (1 → 2).
+        assert_eq!(s.next_chunk(64, &[0.5, 0.5]), 2);
+        // A single residual is not a trajectory either → ramp (2 → 4).
+        assert_eq!(s.next_chunk(64, &[0.5]), 4);
     }
 
     #[test]

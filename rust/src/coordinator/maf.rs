@@ -128,7 +128,17 @@ impl<'e, B: Backend> MafSampler<'e, B> {
             }
         }
         let z_host = self.engine.to_host(z)?;
-        Ok((z_host, JacobiStats { block: k, iterations, wall: t0.elapsed(), residuals, converged }))
+        Ok((
+            z_host,
+            JacobiStats {
+                block: k,
+                iterations,
+                wall: t0.elapsed(),
+                residuals,
+                converged,
+                host_syncs: iterations,
+            },
+        ))
     }
 
     /// Sample a batch: z ~ N(0, I) → x through all layers.

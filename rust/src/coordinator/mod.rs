@@ -5,13 +5,16 @@
 //! → HTTP server) and the device-residency rules the hot paths rely on.
 //!
 //! * [`jacobi`] — the parallel Jacobi decoding drivers: full-sequence
-//!   (paper Alg 1, iterate `z ← F(z)` until `‖z^t − z^{t−1}‖∞ < τ`) and
+//!   (paper Alg 1, iterate `z ← F(z)` until `‖z^t − z^{t−1}‖∞ < τ`),
 //!   windowed GS-Jacobi with convergence-front tracking
-//!   ([`jacobi::gs_jacobi_decode_block_v`]).
+//!   ([`jacobi::gs_jacobi_decode_block_v`]), and their fused **chunked**
+//!   variants ([`jacobi::jacobi_decode_block_fused_v`],
+//!   [`jacobi::gs_jacobi_decode_block_fused_v`]) that sync one residual
+//!   history per chunk instead of one residual per iteration.
 //! * [`policy`] — where/how to use Jacobi (paper §3.5): sequential for the
 //!   dependency-heavy first block, Jacobi or windowed GS-Jacobi for the
-//!   rest, plus uniform / sequential / calibrated per-block variants with
-//!   JSON persistence.
+//!   rest, plus uniform / sequential / fused-chunked (`fuse[:S]`) /
+//!   calibrated per-block variants with JSON persistence.
 //! * [`sampler`] — full noise→image pipeline over the AOT artifacts; a
 //!   [`sampler::SamplerSet`] holds one sampler per lowered batch bucket.
 //! * [`batcher`] — dynamic request batching up to the largest bucket.
@@ -32,6 +35,8 @@ pub mod sampler;
 pub mod server;
 pub mod state;
 
-pub use jacobi::{GsJacobiStats, InitStrategy, JacobiConfig, JacobiStats, WindowStats};
+pub use jacobi::{
+    ChunkScheduler, GsJacobiStats, InitStrategy, JacobiConfig, JacobiStats, WindowStats,
+};
 pub use policy::{BlockDecode, DecodePolicy};
 pub use sampler::{SampleOptions, Sampler, SamplerSet};

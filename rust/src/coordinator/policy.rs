@@ -19,6 +19,13 @@ use super::jacobi::JacobiStats;
 /// Default window count for the `"gs"` policy shorthand.
 pub const DEFAULT_GS_WINDOWS: usize = 4;
 
+/// Default first-chunk size for the `"fuse"` policy shorthand — matches the
+/// history length the python side lowers into the fused artifacts
+/// (`aot.JSTEP_FUSE_STEPS`), so a default decode runs maximal chunks. The
+/// drivers discover the real device cap from the returned history shape;
+/// this is only the scheduler seed.
+pub const DEFAULT_FUSE_CHUNK: usize = 8;
+
 /// How one decode position is handled.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum BlockDecode {
@@ -29,6 +36,17 @@ pub enum BlockDecode {
     /// Windowed GS-Jacobi: Gauss–Seidel across `windows` windows, Jacobi
     /// inside the active window.
     GsJacobi { windows: usize },
+    /// Full-sequence Jacobi through the fused multi-step artifact
+    /// (`jacobi_decode_block_fused_v`): chunked dispatch with one residual
+    /// history sync per chunk instead of per iteration. `chunk` seeds the
+    /// first chunk — a calibrated per-block iteration count makes
+    /// single-chunk decodes the common case.
+    Fused { chunk: usize },
+    /// Windowed GS-Jacobi with the fused multi-step window artifact
+    /// (`gs_jacobi_decode_block_fused_v`): GS sweep semantics of
+    /// [`BlockDecode::GsJacobi`], inner loops chunked like
+    /// [`BlockDecode::Fused`].
+    GsFused { windows: usize, chunk: usize },
 }
 
 impl BlockDecode {
@@ -41,6 +59,15 @@ impl BlockDecode {
                 ("mode", Value::str("gs")),
                 ("windows", Value::num(windows as f64)),
             ]),
+            BlockDecode::Fused { chunk } => Value::obj(vec![
+                ("mode", Value::str("fuse")),
+                ("chunk", Value::num(chunk as f64)),
+            ]),
+            BlockDecode::GsFused { windows, chunk } => Value::obj(vec![
+                ("mode", Value::str("gs_fuse")),
+                ("windows", Value::num(windows as f64)),
+                ("chunk", Value::num(chunk as f64)),
+            ]),
         }
     }
 
@@ -49,6 +76,11 @@ impl BlockDecode {
             "sequential" => Ok(BlockDecode::Sequential),
             "jacobi" => Ok(BlockDecode::Jacobi),
             "gs" => Ok(BlockDecode::GsJacobi { windows: windows_from_json(v)? }),
+            "fuse" => Ok(BlockDecode::Fused { chunk: chunk_from_json(v)? }),
+            "gs_fuse" => Ok(BlockDecode::GsFused {
+                windows: windows_from_json(v)?,
+                chunk: chunk_from_json(v)?,
+            }),
             other => anyhow::bail!("unknown block mode '{other}'"),
         }
     }
@@ -67,6 +99,19 @@ fn windows_from_json(v: &crate::jsonx::Value) -> anyhow::Result<usize> {
     }
 }
 
+/// Read an optional `chunk` field with the same strictness as
+/// [`windows_from_json`]: absent ⇒ the default, present-but-malformed ⇒ an
+/// error, never silently the default.
+fn chunk_from_json(v: &crate::jsonx::Value) -> anyhow::Result<usize> {
+    match v.get("chunk") {
+        None => Ok(DEFAULT_FUSE_CHUNK),
+        Some(c) => c
+            .as_usize()
+            .filter(|&c| c >= 1)
+            .ok_or_else(|| anyhow::anyhow!("fuse chunk must be a positive integer, got {c:?}")),
+    }
+}
+
 /// How each of the `K` blocks is decoded.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum DecodePolicy {
@@ -82,6 +127,11 @@ pub enum DecodePolicy {
     /// equivalent to [`DecodePolicy::UniformJacobi`]; `windows = L` is
     /// sequential-equivalent work done through the jstep_win artifact.
     GsJacobi { windows: usize },
+    /// Fused chunked Jacobi at every decode position
+    /// ([`BlockDecode::Fused`]) — UJD semantics with `⌈t/S⌉` host syncs per
+    /// block instead of `t`. The sampler falls back to plain Jacobi where
+    /// the fused artifact is absent.
+    Fused { chunk: usize },
     /// Per-block Jacobi-vs-sequential choice learned by [`calibrate`].
     Custom { jacobi_mask: Vec<bool> },
     /// Fully per-block decode modes (window counts included) learned by
@@ -91,16 +141,24 @@ pub enum DecodePolicy {
 
 impl DecodePolicy {
     /// Parse CLI string:
-    /// `"sequential" | "ujd" | "selective[:N]" | "gs[:W]"`.
+    /// `"sequential" | "ujd" | "selective[:N]" | "gs[:W]" | "fuse[:S]"`.
     pub fn parse(s: &str) -> Option<Self> {
         match s {
             "sequential" | "seq" => Some(DecodePolicy::Sequential),
             "ujd" | "uniform" | "jacobi" => Some(DecodePolicy::UniformJacobi),
             "selective" | "sjd" => Some(DecodePolicy::Selective { seq_blocks: 1 }),
             "gs" | "gs-jacobi" => Some(DecodePolicy::GsJacobi { windows: DEFAULT_GS_WINDOWS }),
+            "fuse" | "fused" => Some(DecodePolicy::Fused { chunk: DEFAULT_FUSE_CHUNK }),
             _ => {
                 if let Some(n) = s.strip_prefix("selective:") {
                     return Some(DecodePolicy::Selective { seq_blocks: n.parse().ok()? });
+                }
+                if let Some(c) = s.strip_prefix("fuse:") {
+                    let chunk: usize = c.parse().ok()?;
+                    if chunk == 0 {
+                        return None;
+                    }
+                    return Some(DecodePolicy::Fused { chunk });
                 }
                 let w: usize = s.strip_prefix("gs:")?.parse().ok()?;
                 if w == 0 {
@@ -126,6 +184,7 @@ impl DecodePolicy {
                 }
             }
             DecodePolicy::GsJacobi { windows } => BlockDecode::GsJacobi { windows: *windows },
+            DecodePolicy::Fused { chunk } => BlockDecode::Fused { chunk: *chunk },
             DecodePolicy::Custom { jacobi_mask } => {
                 if jacobi_mask.get(pos).copied().unwrap_or(true) {
                     BlockDecode::Jacobi
@@ -152,6 +211,7 @@ impl DecodePolicy {
             DecodePolicy::Selective { seq_blocks: 1 } => "SJD".into(),
             DecodePolicy::Selective { seq_blocks } => format!("SJD(seq={seq_blocks})"),
             DecodePolicy::GsJacobi { windows } => format!("GS-Jacobi(W={windows})"),
+            DecodePolicy::Fused { chunk } => format!("Fused(S={chunk})"),
             DecodePolicy::Custom { .. } => "Adaptive".into(),
             DecodePolicy::PerBlock { .. } => "Adaptive-GS".into(),
         }
@@ -221,6 +281,50 @@ pub fn calibrate_windows(
     DecodePolicy::PerBlock { modes }
 }
 
+/// Chunk-aware calibration (`sjd calibrate --chunks`): the per-block modes
+/// of [`calibrate_windows`], routed through the **fused multi-step**
+/// artifacts with per-block chunk schedules learned from the same iteration
+/// traces.
+///
+/// The first-chunk seed is the point of calibration: a block measured to
+/// converge in `t` iterations gets `chunk = t` (full-sequence fused decode
+/// lands its very first chunk exactly on the τ crossing — one host sync,
+/// bit-identical iterate) and a windowed block gets `⌈t/W⌉` (the expected
+/// per-window share of the trace). Both are clamped to `s_max`, the fused
+/// artifacts' lowered history length, because a chunk can never run past
+/// the device-side history. Blocks that failed to converge or measured
+/// slower than sequential stay sequential, exactly like
+/// [`calibrate_windows`].
+pub fn calibrate_chunks(
+    jacobi: &[JacobiStats],
+    seq_wall: &[std::time::Duration],
+    seq_len: usize,
+    max_windows: usize,
+    s_max: usize,
+) -> DecodePolicy {
+    assert!(s_max > 0);
+    let DecodePolicy::PerBlock { modes } =
+        calibrate_windows(jacobi, seq_wall, seq_len, max_windows)
+    else {
+        unreachable!("calibrate_windows returns PerBlock");
+    };
+    let modes = modes
+        .into_iter()
+        .zip(jacobi)
+        .map(|(m, j)| match m {
+            BlockDecode::Jacobi => {
+                BlockDecode::Fused { chunk: j.iterations.clamp(1, s_max) }
+            }
+            BlockDecode::GsJacobi { windows } => BlockDecode::GsFused {
+                windows,
+                chunk: j.iterations.div_ceil(windows).clamp(1, s_max),
+            },
+            other => other,
+        })
+        .collect();
+    DecodePolicy::PerBlock { modes }
+}
+
 impl DecodePolicy {
     /// Serialize to JSON (calibration persistence: `sjd calibrate` writes
     /// this; `sjd serve --policy @file.json` loads it).
@@ -236,6 +340,10 @@ impl DecodePolicy {
             DecodePolicy::GsJacobi { windows } => Value::obj(vec![
                 ("kind", Value::str("gs")),
                 ("windows", Value::num(*windows as f64)),
+            ]),
+            DecodePolicy::Fused { chunk } => Value::obj(vec![
+                ("kind", Value::str("fuse")),
+                ("chunk", Value::num(*chunk as f64)),
             ]),
             DecodePolicy::Custom { jacobi_mask } => Value::obj(vec![
                 ("kind", Value::str("custom")),
@@ -261,6 +369,7 @@ impl DecodePolicy {
                 seq_blocks: v.get("seq_blocks").and_then(Value::as_usize).unwrap_or(1),
             }),
             "gs" => Ok(DecodePolicy::GsJacobi { windows: windows_from_json(v)? }),
+            "fuse" => Ok(DecodePolicy::Fused { chunk: chunk_from_json(v)? }),
             "custom" => {
                 let mask = v
                     .req_arr("jacobi_mask")?
@@ -313,6 +422,11 @@ mod tests {
             Some(DecodePolicy::GsJacobi { windows: DEFAULT_GS_WINDOWS })
         );
         assert_eq!(DecodePolicy::parse("gs:8"), Some(DecodePolicy::GsJacobi { windows: 8 }));
+        assert_eq!(
+            DecodePolicy::parse("fuse"),
+            Some(DecodePolicy::Fused { chunk: DEFAULT_FUSE_CHUNK })
+        );
+        assert_eq!(DecodePolicy::parse("fuse:4"), Some(DecodePolicy::Fused { chunk: 4 }));
         assert_eq!(DecodePolicy::parse("wat"), None);
     }
 
@@ -321,7 +435,7 @@ mod tests {
         for bad in [
             "", "Sequential", "SJD", "selective:", "selective:x", "selective:-1",
             "selective:1.5", "gs:", "gs:0", "gs:abc", "gs:-2", "gs :4", "ujd ",
-            "@", "custom",
+            "@", "custom", "fuse:", "fuse:0", "fuse:x", "fuse:-3", "fuse :2",
         ] {
             assert_eq!(DecodePolicy::parse(bad), None, "'{bad}' must be rejected");
         }
@@ -358,15 +472,20 @@ mod tests {
         assert!(!p.use_jacobi(2, 3));
     }
 
-    #[test]
-    fn calibrate_prefers_faster_converged() {
-        let mk = |block, iters, ms, converged| JacobiStats {
+    fn mk_stats(block: usize, iters: usize, ms: u64, converged: bool) -> JacobiStats {
+        JacobiStats {
             block,
             iterations: iters,
             wall: Duration::from_millis(ms),
             residuals: vec![],
             converged,
-        };
+            host_syncs: iters,
+        }
+    }
+
+    #[test]
+    fn calibrate_prefers_faster_converged() {
+        let mk = mk_stats;
         let jacobi = vec![
             mk(0, 64, 900, true),  // slower than seq → sequential
             mk(1, 5, 50, true),    // faster → jacobi
@@ -391,12 +510,15 @@ mod tests {
             DecodePolicy::UniformJacobi,
             DecodePolicy::Selective { seq_blocks: 2 },
             DecodePolicy::GsJacobi { windows: 6 },
+            DecodePolicy::Fused { chunk: 5 },
             DecodePolicy::Custom { jacobi_mask: vec![false, true, true] },
             DecodePolicy::PerBlock {
                 modes: vec![
                     BlockDecode::Sequential,
                     BlockDecode::Jacobi,
                     BlockDecode::GsJacobi { windows: 8 },
+                    BlockDecode::Fused { chunk: 3 },
+                    BlockDecode::GsFused { windows: 4, chunk: 2 },
                 ],
             },
         ] {
@@ -428,6 +550,71 @@ mod tests {
     }
 
     #[test]
+    fn json_rejects_bad_fuse_chunk() {
+        use crate::jsonx::Value;
+        for bad in [Value::num(0.0), Value::num(1.5), Value::num(-2.0), Value::str("two")] {
+            let v = Value::obj(vec![("kind", Value::str("fuse")), ("chunk", bad)]);
+            assert!(DecodePolicy::from_json(&v).is_err());
+        }
+        // Absent chunk falls back to the documented default.
+        let v = Value::obj(vec![("kind", Value::str("fuse"))]);
+        assert_eq!(
+            DecodePolicy::from_json(&v).unwrap(),
+            DecodePolicy::Fused { chunk: DEFAULT_FUSE_CHUNK }
+        );
+        // Same strictness on the per-block gs_fuse mode.
+        let modes = Value::Arr(vec![Value::obj(vec![
+            ("mode", Value::str("gs_fuse")),
+            ("chunk", Value::num(0.0)),
+        ])]);
+        let v = Value::obj(vec![("kind", Value::str("per_block")), ("modes", modes)]);
+        assert!(DecodePolicy::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn fused_policy_block_mode_and_label() {
+        let p = DecodePolicy::Fused { chunk: 6 };
+        assert_eq!(p.block_mode(0, 4), BlockDecode::Fused { chunk: 6 });
+        assert!(p.use_jacobi(0, 4), "fused decode is a Jacobi-family mode");
+        assert_eq!(p.label(), "Fused(S=6)");
+    }
+
+    #[test]
+    fn calibrate_chunks_seeds_from_iteration_traces() {
+        let mk = mk_stats;
+        let seq_len = 64;
+        let jacobi = vec![
+            mk(0, 60, 100, true),  // hard: max windows, per-window chunk share
+            mk(1, 4, 100, true),   // easy: plain fused, chunk = measured iters
+            mk(2, 64, 100, false), // no converge → sequential, untouched
+            mk(3, 2, 900, true),   // slower than sequential → sequential
+        ];
+        let seq = vec![Duration::from_millis(500); 4];
+        let p = calibrate_chunks(&jacobi, &seq, seq_len, 8, 8);
+        assert_eq!(
+            p,
+            DecodePolicy::PerBlock {
+                modes: vec![
+                    // 60/64 · 8 → 8 windows; ⌈60/8⌉ = 8 chunk share.
+                    BlockDecode::GsFused { windows: 8, chunk: 8 },
+                    BlockDecode::Fused { chunk: 4 },
+                    BlockDecode::Sequential,
+                    BlockDecode::Sequential,
+                ],
+            }
+        );
+        // s_max caps every learned chunk: the same traces under a shorter
+        // fused history never schedule past the device cap.
+        let p = calibrate_chunks(&jacobi, &seq, seq_len, 8, 2);
+        let DecodePolicy::PerBlock { modes } = p else { unreachable!() };
+        assert_eq!(modes[0], BlockDecode::GsFused { windows: 8, chunk: 2 });
+        assert_eq!(modes[1], BlockDecode::Fused { chunk: 2 });
+        // JSON round-trip covers the learned fused modes.
+        let p = calibrate_chunks(&jacobi, &seq, seq_len, 8, 8);
+        assert_eq!(DecodePolicy::from_json(&p.to_json()).unwrap(), p);
+    }
+
+    #[test]
     fn block_modes_per_policy() {
         let gs = DecodePolicy::GsJacobi { windows: 3 };
         assert_eq!(gs.block_mode(0, 4), BlockDecode::GsJacobi { windows: 3 });
@@ -451,13 +638,7 @@ mod tests {
 
     #[test]
     fn calibrate_windows_scales_with_iteration_ratio() {
-        let mk = |block, iters, ms, converged| JacobiStats {
-            block,
-            iterations: iters,
-            wall: Duration::from_millis(ms),
-            residuals: vec![],
-            converged,
-        };
+        let mk = mk_stats;
         let seq_len = 64;
         let jacobi = vec![
             mk(0, 60, 100, true),  // hard: t ≈ L → max windows

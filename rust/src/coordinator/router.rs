@@ -20,6 +20,12 @@
 //! Per slot: `sjd_queue_wait` (submit → decode start) and
 //! `sjd_request_latency` (submit → image ready). `sjd_encode_time` is
 //! recorded by the HTTP layer's encode jobs (see `coordinator::server`).
+//! Per decoded block: `sjd_block_iters` (decode steps) and
+//! `sjd_host_syncs` (blocking host syncs, see `BlockTrace::host_syncs`) —
+//! together they expose per-request convergence behavior and how well the
+//! fused chunked decode is amortizing its τ-test round-trips
+//! (`⌈iters/S⌉` syncs when the fused artifacts are live, `iters` on the
+//! per-iteration fallback).
 
 use super::batcher::Batcher;
 use super::sampler::{SampleOptions, SamplerSet};
@@ -147,6 +153,8 @@ fn worker_main<B, F>(
     let lat = registry.histogram("sjd_request_latency");
     let queue_wait = registry.histogram("sjd_queue_wait");
     let decode_time = registry.histogram("sjd_decode_time");
+    let block_iters = registry.histogram("sjd_block_iters");
+    let host_syncs = registry.histogram("sjd_host_syncs");
     let batch_fill = registry.histogram("sjd_batch_fill");
     let images = registry.counter("sjd_images_generated");
     let batches = registry.counter("sjd_batches_processed");
@@ -181,8 +189,13 @@ fn worker_main<B, F>(
             let mut rng = Pcg64::seed_stream(seed, 1);
             let t_decode = Instant::now();
             match sampler.sample_images(&cfg.options, &mut rng) {
-                Ok((imgs, _trace)) => {
+                Ok((imgs, trace)) => {
                     decode_time.record_duration(t_decode.elapsed());
+                    // Per-block convergence + sync behavior of this decode.
+                    for t in &trace.traces {
+                        block_iters.record(t.steps as u64);
+                        host_syncs.record(t.host_syncs as u64);
+                    }
                     // Padded images (if any) fall off the end of the zip.
                     for (slot, img) in chunk.iter().zip(imgs.into_iter()) {
                         lat.record_duration(slot.enqueued.elapsed());

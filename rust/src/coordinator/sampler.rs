@@ -21,6 +21,19 @@
 //!   (the masked eq-6 decode has a different fixed point the windowed
 //!   artifact cannot express), GS-Jacobi block modes fall back to
 //!   full-sequence Jacobi.
+//! * `{m}_block_jstep_fuse_b{B}` : `(k, z_t[B,L,D], y[B,L,D], steps) →
+//!   (z', resid_hist[S,B])` — up to `steps` fused Jacobi updates in one
+//!   dispatch, residual history row per update (−1 sentinel on rows past
+//!   `steps`; `steps` clamps to the lowered `S`). Drives the chunked decode
+//!   of `jacobi_decode_block_fused_v`: one `[S,B]` sync per chunk replaces
+//!   per-iteration `[B]` syncs. Exact (`o = 0`) update only. **Optional**
+//!   with the same fallback rule as the windowed step: absent artifact or
+//!   `mask_o > 0` degrades [`BlockDecode::Fused`] to plain Jacobi.
+//! * `{m}_block_jstep_win_fuse_b{B}` : `(k, z_t, y, steps, off, len) →
+//!   (z', resid_hist[S,B])` — the fused windowed step
+//!   (`gs_jacobi_decode_block_fused_v`). **Optional**:
+//!   [`BlockDecode::GsFused`] degrades to per-iteration GS-Jacobi (which
+//!   itself degrades to plain Jacobi if the windowed step is absent too).
 //! * `{m}_block_seqstep_b{B}`: `(k, u_prev[B,D], v_tok[B,D], pos,
 //!   kv_k[NL,B,L,Dm], kv_v[NL,B,L,Dm]) → (u_pos[B,D], kv_k', kv_v')`
 //!   — one sequential token with KV cache.
@@ -42,8 +55,13 @@
 //!   the end.
 //! * Jacobi blocks keep the iterate and `y` on device; per iteration only
 //!   the `[B]` residual crosses for the τ test (`jacobi_decode_block_v`).
-//!   GS-Jacobi blocks inherit the same contract (`gs_jacobi_decode_block_v`)
-//!   plus two scalar uploads per window (the offset/length pins).
+//!   GS-Jacobi blocks inherit the same contract (`gs_jacobi_decode_block_v`).
+//!   Fused blocks sync one `[S,B]` residual history per *chunk* instead —
+//!   `⌈iterations/S⌉` syncs per block (`jacobi_decode_block_fused_v`).
+//! * Scalar loop constants (`k`, `mask_o`, window offsets/lengths, chunk
+//!   sizes) are pinned through the pool's once-per-value cache
+//!   (`BufferPool::device_scalar_i32`) — repeated blocks, windows and
+//!   requests re-use the same device scalars instead of re-uploading.
 //! * Sequential blocks keep `u_prev` and both KV caches (the largest tensors
 //!   in the system) device-resident across all L token steps; the initial
 //!   zero caches come from the pool's one-time-upload cache. Per token only
@@ -60,8 +78,8 @@
 //!   is host data.
 
 use super::jacobi::{
-    gs_jacobi_decode_block_v, jacobi_decode_block_v_init, GsJacobiStats, InitStrategy,
-    JacobiConfig, JacobiStats,
+    gs_jacobi_decode_block_fused_v, gs_jacobi_decode_block_v, jacobi_decode_block_fused_v,
+    jacobi_decode_block_v_init, GsJacobiStats, InitStrategy, JacobiConfig, JacobiStats,
 };
 use super::policy::{BlockDecode, DecodePolicy};
 use super::state::BufferPool;
@@ -111,6 +129,13 @@ pub struct BlockTrace {
     /// window for GS-Jacobi — the work metric `benches/gs_windows.rs`
     /// compares across policies.
     pub position_updates: usize,
+    /// Blocking host syncs this block's decode performed: `L` per-token
+    /// fetches for sequential (1 for the scan-fused ablation), one `[B]`
+    /// residual per iteration for per-iteration Jacobi/GS, one `[S,B]`
+    /// history per chunk (`⌈iterations/S⌉`) for the fused drivers — the
+    /// latency cost the fused path exists to shrink; exported per block as
+    /// the `sjd_host_syncs` histogram by the serving router.
+    pub host_syncs: usize,
     pub wall: Duration,
     pub jacobi: Option<JacobiStats>,
     /// Present when this block decoded via windowed GS-Jacobi.
@@ -138,6 +163,13 @@ impl SampleOutput {
     /// [`BlockTrace::position_updates`]).
     pub fn total_position_updates(&self) -> usize {
         self.traces.iter().map(|t| t.position_updates).sum()
+    }
+
+    /// Total blocking host syncs across all block decodes (see
+    /// [`BlockTrace::host_syncs`]) — what `benches/jstep_fusion.rs` compares
+    /// between the per-iteration and fused-chunked paths.
+    pub fn total_host_syncs(&self) -> usize {
+        self.traces.iter().map(|t| t.host_syncs).sum()
     }
 }
 
@@ -209,6 +241,8 @@ pub struct Sampler<'e, B: Backend> {
     art_block_fwd: String,
     art_jstep: String,
     art_jstep_win: String,
+    art_jstep_fuse: String,
+    art_jstep_win_fuse: String,
     art_seqstep: String,
     art_seqfull: String,
     art_reverse: String,
@@ -232,6 +266,8 @@ impl<'e, B: Backend> Sampler<'e, B> {
             art_block_fwd: format!("{model}_block_fwd_b{batch}"),
             art_jstep: format!("{model}_block_jstep_b{batch}"),
             art_jstep_win: format!("{model}_block_jstep_win_b{batch}"),
+            art_jstep_fuse: format!("{model}_block_jstep_fuse_b{batch}"),
+            art_jstep_win_fuse: format!("{model}_block_jstep_win_fuse_b{batch}"),
             art_seqstep: format!("{model}_block_seqstep_b{batch}"),
             art_seqfull: format!("{model}_block_seqfull_b{batch}"),
             art_reverse: format!("{model}_reverse_b{batch}"),
@@ -256,6 +292,24 @@ impl<'e, B: Backend> Sampler<'e, B> {
     /// full-sequence Jacobi).
     pub fn has_gs_artifact(&self) -> bool {
         self.engine.has_artifact(&self.art_jstep_win)
+    }
+
+    pub fn jstep_fuse_artifact(&self) -> &str {
+        &self.art_jstep_fuse
+    }
+
+    /// Whether the model ships the fused multi-step Jacobi artifact;
+    /// [`BlockDecode::Fused`] falls back to plain per-iteration Jacobi
+    /// without it.
+    pub fn has_fuse_artifact(&self) -> bool {
+        self.engine.has_artifact(&self.art_jstep_fuse)
+    }
+
+    /// Whether the model ships the fused multi-step *windowed* artifact;
+    /// [`BlockDecode::GsFused`] falls back to per-iteration GS-Jacobi
+    /// without it.
+    pub fn has_gs_fuse_artifact(&self) -> bool {
+        self.engine.has_artifact(&self.art_jstep_win_fuse)
     }
 
     /// Draw the prior `z_K ~ N(0, I)` in token space.
@@ -326,7 +380,9 @@ impl<'e, B: Backend> Sampler<'e, B> {
         let mut kv_v =
             self.pool.device_zeroed(&[nl, b, l, dm], |t| self.engine.to_device(t))?;
         let mut u_prev = self.pool.device_zeroed(&[b, d], |t| self.engine.to_device(t))?;
-        let k_scalar = self.engine.to_device(&HostTensor::scalar_i32(k as i32))?;
+        // The block index repeats across requests: pin it once per value.
+        let k_scalar =
+            self.pool.device_scalar_i32(k as i32, |t| self.engine.to_device(t))?;
         let mut u_out = vec![0.0f32; b * l * d];
 
         for pos in 0..l {
@@ -407,12 +463,7 @@ impl<'e, B: Backend> Sampler<'e, B> {
         cfg: &JacobiConfig,
         mask_o: usize,
     ) -> Result<(Value, JacobiStats)> {
-        let z0 = if cfg.init == InitStrategy::Zeros {
-            let (b, l, d) = (self.batch, self.meta.seq_len, self.meta.token_dim);
-            Some(self.pool.device_zeroed(&[b, l, d], |t| self.engine.to_device(t))?)
-        } else {
-            None
-        };
+        let z0 = self.pooled_zero_init(cfg)?;
         jacobi_decode_block_v_init(
             self.engine,
             &self.art_jstep,
@@ -422,7 +473,47 @@ impl<'e, B: Backend> Sampler<'e, B> {
             cfg,
             mask_o,
             z0,
+            Some(&self.pool),
         )
+    }
+
+    /// Value-based **fused chunked** Jacobi decode (see
+    /// `jacobi::jacobi_decode_block_fused_v`): per-iteration semantics of
+    /// [`Sampler::jacobi_decode_v`] with host syncs per block cut from
+    /// `iterations` to `⌈iterations/S⌉`. `chunk` seeds the first chunk
+    /// (calibrated per-block via `sjd calibrate --chunks`). Always the
+    /// exact `o = 0` decode; callers gate on
+    /// [`Sampler::has_fuse_artifact`] and `mask_o == 0` (see
+    /// [`Sampler::decode_tokens`]'s fallback).
+    pub fn jacobi_decode_fused_v(
+        &self,
+        k: usize,
+        v: &Value,
+        chunk: usize,
+        cfg: &JacobiConfig,
+    ) -> Result<(Value, JacobiStats)> {
+        let z0 = self.pooled_zero_init(cfg)?;
+        jacobi_decode_block_fused_v(
+            self.engine,
+            &self.art_jstep_fuse,
+            k,
+            v,
+            self.meta.seq_len,
+            cfg,
+            z0,
+            Some(&self.pool),
+            chunk,
+        )
+    }
+
+    /// The pooled device-zero z⁰ for the default Zeros init (one upload per
+    /// shape per sampler), shared by every Jacobi-family decode entry.
+    fn pooled_zero_init(&self, cfg: &JacobiConfig) -> Result<Option<Value>> {
+        if cfg.init != InitStrategy::Zeros {
+            return Ok(None);
+        }
+        let (b, l, d) = (self.batch, self.meta.seq_len, self.meta.token_dim);
+        Ok(Some(self.pool.device_zeroed(&[b, l, d], |t| self.engine.to_device(t))?))
     }
 
     /// Value-based windowed GS-Jacobi decode (see
@@ -438,12 +529,7 @@ impl<'e, B: Backend> Sampler<'e, B> {
         windows: usize,
         cfg: &JacobiConfig,
     ) -> Result<(Value, GsJacobiStats)> {
-        let z0 = if cfg.init == InitStrategy::Zeros {
-            let (b, l, d) = (self.batch, self.meta.seq_len, self.meta.token_dim);
-            Some(self.pool.device_zeroed(&[b, l, d], |t| self.engine.to_device(t))?)
-        } else {
-            None
-        };
+        let z0 = self.pooled_zero_init(cfg)?;
         gs_jacobi_decode_block_v(
             self.engine,
             &self.art_jstep_win,
@@ -453,6 +539,36 @@ impl<'e, B: Backend> Sampler<'e, B> {
             windows,
             cfg,
             z0,
+            Some(&self.pool),
+        )
+    }
+
+    /// Value-based **fused chunked** windowed GS-Jacobi decode (see
+    /// `jacobi::gs_jacobi_decode_block_fused_v`): sweep semantics of
+    /// [`Sampler::gs_jacobi_decode_v`], inner loops chunked through the
+    /// `{m}_block_jstep_win_fuse_b{B}` artifact with `chunk` seeding each
+    /// window's scheduler. Same residency and fallback rules as
+    /// [`Sampler::jacobi_decode_fused_v`].
+    pub fn gs_jacobi_decode_fused_v(
+        &self,
+        k: usize,
+        v: &Value,
+        windows: usize,
+        chunk: usize,
+        cfg: &JacobiConfig,
+    ) -> Result<(Value, GsJacobiStats)> {
+        let z0 = self.pooled_zero_init(cfg)?;
+        gs_jacobi_decode_block_fused_v(
+            self.engine,
+            &self.art_jstep_win_fuse,
+            k,
+            v,
+            self.meta.seq_len,
+            windows,
+            cfg,
+            z0,
+            Some(&self.pool),
+            chunk,
         )
     }
 
@@ -504,58 +620,77 @@ impl<'e, B: Backend> Sampler<'e, B> {
             let k = kk - 1 - pos; // block index in flow order
             let v = z;
             let t0 = Instant::now();
-            // GS-Jacobi degrades to full-sequence Jacobi when the model's
-            // artifact set predates the windowed step (documented fallback),
-            // and whenever an eq-6 mask is requested: the windowed artifact
-            // computes the exact (o = 0) update only, and mask_o semantics
-            // must not depend on which artifacts happen to be lowered.
+            // Degradation chain for optional artifacts and masked decodes
+            // (every fused/windowed artifact computes the exact o = 0
+            // update only, and mask_o semantics must not depend on which
+            // artifacts happen to be lowered):
+            //   GsFused → GsJacobi when the fused windowed step is absent;
+            //   Fused → Jacobi when the fused step is absent;
+            //   GsJacobi → Jacobi when the windowed step is absent;
+            //   any of them → Jacobi when an eq-6 mask is requested.
             let mut mode = opts.policy.block_mode(pos, kk);
-            if matches!(mode, BlockDecode::GsJacobi { .. })
-                && (opts.mask_o != 0 || !self.has_gs_artifact())
-            {
+            if opts.mask_o != 0 && mode != BlockDecode::Sequential {
                 mode = BlockDecode::Jacobi;
             }
+            if let BlockDecode::GsFused { windows, .. } = mode {
+                if !self.has_gs_fuse_artifact() {
+                    mode = BlockDecode::GsJacobi { windows };
+                }
+            }
+            if matches!(mode, BlockDecode::Fused { .. }) && !self.has_fuse_artifact() {
+                mode = BlockDecode::Jacobi;
+            }
+            if matches!(mode, BlockDecode::GsJacobi { .. }) && !self.has_gs_artifact() {
+                mode = BlockDecode::Jacobi;
+            }
+            let mut cfg = opts.jacobi.clone();
+            cfg.seed = opts.seed.wrapping_add(pos as u64);
+            let jacobi_trace = |stats: JacobiStats, wall: Duration| BlockTrace {
+                block: k,
+                position: pos,
+                used_jacobi: true,
+                steps: stats.iterations,
+                position_updates: stats.iterations * self.meta.seq_len,
+                host_syncs: stats.host_syncs,
+                wall,
+                jacobi: Some(stats),
+                gs: None,
+            };
+            let gs_trace = |stats: GsJacobiStats, wall: Duration| BlockTrace {
+                block: k,
+                position: pos,
+                used_jacobi: true,
+                steps: stats.iterations,
+                position_updates: stats.position_updates,
+                host_syncs: stats.host_syncs,
+                wall,
+                jacobi: None,
+                gs: Some(stats),
+            };
             let (u, trace) = match mode {
                 BlockDecode::Jacobi => {
-                    let mut cfg = opts.jacobi.clone();
-                    cfg.seed = opts.seed.wrapping_add(pos as u64);
                     let (u, stats) = self.jacobi_decode_v(k, &v, &cfg, opts.mask_o)?;
-                    let wall = t0.elapsed();
-                    (
-                        u,
-                        BlockTrace {
-                            block: k,
-                            position: pos,
-                            used_jacobi: true,
-                            steps: stats.iterations,
-                            position_updates: stats.iterations * self.meta.seq_len,
-                            wall,
-                            jacobi: Some(stats),
-                            gs: None,
-                        },
-                    )
+                    let trace = jacobi_trace(stats, t0.elapsed());
+                    (u, trace)
+                }
+                BlockDecode::Fused { chunk } => {
+                    let (u, stats) = self.jacobi_decode_fused_v(k, &v, chunk, &cfg)?;
+                    let trace = jacobi_trace(stats, t0.elapsed());
+                    (u, trace)
                 }
                 BlockDecode::GsJacobi { windows } => {
-                    let mut cfg = opts.jacobi.clone();
-                    cfg.seed = opts.seed.wrapping_add(pos as u64);
                     let (u, stats) = self.gs_jacobi_decode_v(k, &v, windows, &cfg)?;
-                    let wall = t0.elapsed();
-                    (
-                        u,
-                        BlockTrace {
-                            block: k,
-                            position: pos,
-                            used_jacobi: true,
-                            steps: stats.iterations,
-                            position_updates: stats.position_updates,
-                            wall,
-                            jacobi: None,
-                            gs: Some(stats),
-                        },
-                    )
+                    let trace = gs_trace(stats, t0.elapsed());
+                    (u, trace)
+                }
+                BlockDecode::GsFused { windows, chunk } => {
+                    let (u, stats) =
+                        self.gs_jacobi_decode_fused_v(k, &v, windows, chunk, &cfg)?;
+                    let trace = gs_trace(stats, t0.elapsed());
+                    (u, trace)
                 }
                 BlockDecode::Sequential => {
-                    let (u, steps) = if opts.fused_sequential {
+                    let (u, steps, host_syncs) = if opts.fused_sequential {
                         let v_host = match &v {
                             Value::Host(t) => t.clone(),
                             Value::Device(_) => self.engine.to_host(v.clone())?,
@@ -563,9 +698,13 @@ impl<'e, B: Backend> Sampler<'e, B> {
                         (
                             Value::Host(self.sequential_decode_block_fused(k, &v_host)?),
                             self.meta.seq_len,
+                            1,
                         )
                     } else {
-                        self.sequential_decode_block_v(k, &v)?
+                        // One [B, D] token fetch per position (see
+                        // sequential_decode_block_v).
+                        let (u, steps) = self.sequential_decode_block_v(k, &v)?;
+                        (u, steps, self.meta.seq_len)
                     };
                     let wall = t0.elapsed();
                     (
@@ -576,6 +715,7 @@ impl<'e, B: Backend> Sampler<'e, B> {
                             used_jacobi: false,
                             steps,
                             position_updates: self.meta.seq_len,
+                            host_syncs,
                             wall,
                             jacobi: None,
                             gs: None,

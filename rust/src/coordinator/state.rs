@@ -20,10 +20,15 @@ pub struct BufferPool {
     free: RefCell<Vec<(Vec<usize>, Vec<f32>)>>,
     /// Immutable device-resident zero tensors, one per shape.
     device_zeros: RefCell<Vec<(Vec<usize>, Value)>>,
+    /// Immutable device-resident i32 scalars, one per distinct value — the
+    /// decode loop constants (block index `k`, mask offset, window
+    /// offset/length, fused chunk sizes) repeat across blocks, windows and
+    /// requests, so each uploads once per sampler lifetime.
+    device_scalars: RefCell<Vec<(i32, Value)>>,
     /// High-water mark of host bytes handed out simultaneously.
     peak_bytes: RefCell<usize>,
     live_bytes: RefCell<usize>,
-    /// Bytes pinned on device by the zero-value cache.
+    /// Bytes pinned on device by the zero-value + scalar caches.
     device_bytes: RefCell<usize>,
 }
 
@@ -82,6 +87,28 @@ impl BufferPool {
         *self.device_bytes.borrow_mut() += numel * 4;
         self.device_zeros.borrow_mut().push((shape.to_vec(), v.clone()));
         Ok(v)
+    }
+
+    /// A device-resident i32 scalar, uploaded at most once per distinct
+    /// value via `upload` and cached for the pool's lifetime. Same
+    /// immutability contract as [`BufferPool::device_zeroed`]; used by the
+    /// decode drivers to pin loop constants (`k`, `mask_o`, window
+    /// offset/length, fused chunk sizes) instead of re-uploading them per
+    /// block/window/chunk.
+    pub fn device_scalar_i32(
+        &self,
+        v: i32,
+        upload: impl FnOnce(&HostTensor) -> anyhow::Result<Value>,
+    ) -> anyhow::Result<Value> {
+        if let Some((_, val)) =
+            self.device_scalars.borrow().iter().find(|(x, _)| *x == v)
+        {
+            return Ok(val.clone());
+        }
+        let val = upload(&HostTensor::scalar_i32(v))?;
+        *self.device_bytes.borrow_mut() += 4;
+        self.device_scalars.borrow_mut().push((v, val.clone()));
+        Ok(val)
     }
 
     pub fn peak_bytes(&self) -> usize {
@@ -180,6 +207,24 @@ mod tests {
         assert_eq!(c.shape(), &[3]);
         assert_eq!(a.as_host().unwrap().as_f32().unwrap(), &[0.0; 8]);
         assert_eq!(pool.device_cache_bytes(), (8 + 3) * 4);
+    }
+
+    #[test]
+    fn device_scalars_upload_once_per_value() {
+        let pool = BufferPool::new();
+        let uploads = std::cell::Cell::new(0usize);
+        let mk = |t: &HostTensor| {
+            uploads.set(uploads.get() + 1);
+            Ok(Value::Host(t.clone()))
+        };
+        let a = pool.device_scalar_i32(3, mk).unwrap();
+        let b = pool.device_scalar_i32(3, mk).unwrap();
+        let c = pool.device_scalar_i32(-1, mk).unwrap();
+        assert_eq!(uploads.get(), 2, "one upload per distinct value");
+        assert_eq!(a.as_host().unwrap().as_i32().unwrap(), &[3]);
+        assert_eq!(b.as_host().unwrap().as_i32().unwrap(), &[3]);
+        assert_eq!(c.as_host().unwrap().as_i32().unwrap(), &[-1]);
+        assert_eq!(pool.device_cache_bytes(), 8);
     }
 
     #[test]

@@ -6,21 +6,22 @@
 //! sjd sample  --model tf10 --batch 8 --policy gs:4 --tau 0.5 --out samples.png
 //! sjd recon   --model tf10 --batch 8
 //! sjd calibrate --model tf10 --batch 8 --windows 8 --out tf10_policy.json
+//! sjd calibrate --model tf10 --batch 8 --chunks --out tf10_policy.json
 //! sjd serve   --model tf10 --policy-file tf10_policy.json
 //! sjd info
 //! ```
 //!
 //! Policy strings: `sequential` | `ujd` | `selective[:N]` | `gs[:W]` |
-//! `@file.json`; `--policy-file <path>` is the explicit form of `@file.json`
-//! and takes precedence over `--policy`. See the root `README.md` for the
-//! full cheat-sheet.
+//! `fuse[:S]` | `@file.json`; `--policy-file <path>` is the explicit form of
+//! `@file.json` and takes precedence over `--policy`. See the root
+//! `README.md` for the full cheat-sheet.
 
 use anyhow::{bail, Result};
 use sjd::cli::Command;
 use sjd::configx::{CValue, Config};
 use sjd::coordinator::batcher::Batcher;
 use sjd::coordinator::jacobi::{InitStrategy, JacobiConfig};
-use sjd::coordinator::policy::{calibrate, calibrate_windows, DecodePolicy};
+use sjd::coordinator::policy::{calibrate, calibrate_chunks, calibrate_windows, DecodePolicy};
 use sjd::coordinator::router::{Router, RouterConfig};
 use sjd::coordinator::sampler::{SampleOptions, Sampler};
 use sjd::coordinator::server::{Server, ServerConfig};
@@ -42,7 +43,7 @@ fn cli() -> Command {
                 .opt("batch-sizes", "", "decode buckets, e.g. 1,2,4,8 [default: all lowered]")
                 .opt("http-threads", "8", "HTTP connection-handling threads")
                 .opt("batch-wait-ms", "20", "max batching delay")
-                .opt("policy", "selective", "sequential|ujd|selective[:N]|gs[:W]|@file.json")
+                .opt("policy", "selective", "sequential|ujd|selective[:N]|gs[:W]|fuse[:S]|@file.json")
                 .opt("policy-file", "", "calibrated policy JSON (overrides --policy)")
                 .opt("tau", "0.5", "Jacobi stopping threshold")
                 .opt("init", "zeros", "zeros|normal|prev")
@@ -53,7 +54,7 @@ fn cli() -> Command {
                 .opt("artifacts", "artifacts", "artifacts directory")
                 .opt("model", "tf10", "model name")
                 .opt("batch", "8", "batch size (must be lowered)")
-                .opt("policy", "selective", "sequential|ujd|selective[:N]|gs[:W]|@file.json")
+                .opt("policy", "selective", "sequential|ujd|selective[:N]|gs[:W]|fuse[:S]|@file.json")
                 .opt("policy-file", "", "calibrated policy JSON (overrides --policy)")
                 .opt("tau", "0.5", "Jacobi stopping threshold")
                 .opt("init", "zeros", "zeros|normal|prev")
@@ -65,7 +66,7 @@ fn cli() -> Command {
                 .opt("artifacts", "artifacts", "artifacts directory")
                 .opt("model", "tf10", "model name")
                 .opt("batch", "8", "batch size")
-                .opt("policy", "selective", "sequential|ujd|selective[:N]|gs[:W]|@file.json")
+                .opt("policy", "selective", "sequential|ujd|selective[:N]|gs[:W]|fuse[:S]|@file.json")
                 .opt("policy-file", "", "calibrated policy JSON (overrides --policy)")
                 .opt("tau", "0.5", "Jacobi stopping threshold")
                 .opt("init", "zeros", "zeros|normal|prev")
@@ -78,6 +79,11 @@ fn cli() -> Command {
                 .opt("batch", "8", "batch size")
                 .opt("tau", "0.5", "Jacobi stopping threshold")
                 .opt("windows", "8", "max GS-Jacobi windows the calibration may assign")
+                .switch(
+                    "chunks",
+                    "route learned modes through the fused multi-step artifacts \
+                     with per-block chunk schedules seeded from the traces",
+                )
                 .opt("out", "", "policy JSON output path [default: <model>_policy.json]"),
         )
         .sub(
@@ -314,7 +320,27 @@ fn cmd_calibrate(p: &sjd::cli::Parsed) -> Result<()> {
     println!("binary policy (jacobi vs seq): {:?}", calibrate(&jstats, &seq_walls));
     // The window-aware policy is what gets persisted: it subsumes the binary
     // choice and learns per-block GS-Jacobi window counts from the traces.
-    let pol = calibrate_windows(&jstats, &seq_walls, sampler.meta.seq_len, max_windows);
+    // --chunks additionally routes the learned modes through the fused
+    // multi-step artifacts, seeding each block's first chunk with its
+    // measured iteration count so serving decodes land on the τ crossing in
+    // one host sync (chunk sizes capped at the fused history length).
+    let pol = if p.flag("chunks") {
+        // The device history cap is read off the lowered fused artifact's
+        // [S, B] output shape — the python side owns S (aot.JSTEP_FUSE_STEPS)
+        // and the rust-side default only covers artifact dirs lowered
+        // without the fused role (where serving falls back per-iteration
+        // and the cap is moot).
+        let s_max = engine
+            .manifest()
+            .artifact(sampler.jstep_fuse_artifact())
+            .ok()
+            .and_then(|a| a.outputs.get(1).and_then(|o| o.shape.first().copied()))
+            .filter(|&s| s >= 1)
+            .unwrap_or(sjd::coordinator::policy::DEFAULT_FUSE_CHUNK);
+        calibrate_chunks(&jstats, &seq_walls, sampler.meta.seq_len, max_windows, s_max)
+    } else {
+        calibrate_windows(&jstats, &seq_walls, sampler.meta.seq_len, max_windows)
+    };
     println!("calibrated policy: {:?}", pol);
     let out = match p.str("out") {
         "" => format!("{}_policy.json", p.str("model")),

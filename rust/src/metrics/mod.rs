@@ -20,6 +20,8 @@
 //! | `sjd_padded_slots`        | counter   | slots padded up to the chosen bucket |
 //! | `sjd_bucket_{B}_batches`  | counter   | batches decoded via bucket `B`       |
 //! | `sjd_http_keepalive_reuses` | counter | requests served on a reused connection |
+//! | `sjd_block_iters`         | histogram | router worker, decode steps per block |
+//! | `sjd_host_syncs`          | histogram | router worker, blocking host syncs per block (`⌈iters/S⌉` on the fused decode path) |
 
 mod histogram;
 mod registry;

@@ -33,6 +33,14 @@ pub struct CallStats {
     pub device_hits: u64,
     /// Host inputs promoted to device buffers on call entry.
     pub host_marshals: u64,
+    /// Blocking output syncs charged to this artifact: the tuple-root
+    /// fallback in [`Engine::call_v`] (destructuring the result literal
+    /// host-side) and the always-synced legacy [`Engine::call`] path.
+    /// Complements [`TransferStats::syncs`], which counts the *explicit*
+    /// `to_host` sync points — together they are every blocking
+    /// device→host crossing, the quantity the fused multi-step decode path
+    /// exists to shrink.
+    pub output_syncs: u64,
 }
 
 /// Engine-wide explicit transfer statistics ([`Engine::to_device`] /
@@ -253,6 +261,7 @@ impl Engine {
         s.exec_time += exec_time;
         s.marshal_time += marshal_in + marshal_out;
         s.host_marshals += inputs.len() as u64;
+        s.output_syncs += 1;
         Ok(outs)
     }
 
@@ -328,6 +337,7 @@ impl Engine {
         let bufs: Vec<xla::PjRtBuffer> = result.into_iter().next().unwrap_or_default();
 
         let mut marshal_out = Duration::ZERO;
+        let mut output_syncs = 0u64;
         let wrap_device = (c.meta.untupled_outputs && c.meta.outputs.len() == 1)
             || c.meta.outputs.len() > 1;
         let outs: Vec<Value> = if bufs.len() == c.meta.outputs.len() && wrap_device {
@@ -357,6 +367,7 @@ impl Engine {
                 .map(Value::Host)
                 .collect();
             marshal_out = tm1.elapsed();
+            output_syncs = 1;
             host
         } else {
             bail!(
@@ -374,6 +385,7 @@ impl Engine {
         s.marshal_time += marshal_in + marshal_out;
         s.host_marshals += host_marshals;
         s.device_hits += inputs.len() as u64 - host_marshals;
+        s.output_syncs += output_syncs;
         Ok(outs)
     }
 
@@ -436,6 +448,7 @@ impl Engine {
             s.marshal_time = Duration::ZERO;
             s.device_hits = 0;
             s.host_marshals = 0;
+            s.output_syncs = 0;
         }
         *self.transfer.borrow_mut() = TransferStats::default();
     }

@@ -306,23 +306,30 @@ impl Manifest {
 
     /// Group a model's artifacts into batch buckets: the ascending batch
     /// sizes `B` (from the `{m}_<role>_b{B}` name suffix) that carry the
-    /// model's **complete** per-batch artifact set — a bucket missing any
-    /// role another bucket has (e.g. a `_b2` family lowered without its
-    /// `block_jstep_b2`) is excluded rather than failing at decode time.
-    /// Models with no batch-suffixed artifacts fall back to the metadata's
-    /// `batch_sizes` list. This is what the serving router treats as the
-    /// routable bucket set.
+    /// model's **complete** per-batch artifact set — a bucket missing a
+    /// required role another bucket has (e.g. a `_b2` family lowered
+    /// without its `block_jstep_b2`) is excluded rather than failing at
+    /// decode time. Roles in [`OPTIONAL_DECODE_ROLES`] are exempt from the
+    /// completeness requirement: they are pure fast paths the coordinator
+    /// probes via `Backend::has_artifact` and degrades without (the fused
+    /// multi-step steps fall back to their per-iteration artifacts — see
+    /// `Sampler::decode_tokens`), so a bucket lowered before they existed
+    /// stays routable. Models with no batch-suffixed artifacts fall back to
+    /// the metadata's `batch_sizes` list. This is what the serving router
+    /// treats as the routable bucket set.
     pub fn decode_buckets(&self, model: &str) -> Vec<usize> {
         use std::collections::{BTreeMap as Map, BTreeSet as Set};
         let prefix = format!("{model}_");
         let mut roles_by_bucket: Map<usize, Set<&str>> = Map::new();
-        let mut all_roles: Set<&str> = Set::new();
+        let mut required_roles: Set<&str> = Set::new();
         for a in self.artifacts_for(model) {
             let Some(rest) = a.name.strip_prefix(&prefix) else { continue };
             let Some((role, b)) = rest.rsplit_once("_b") else { continue };
             let Ok(b) = b.parse::<usize>() else { continue };
             roles_by_bucket.entry(b).or_default().insert(role);
-            all_roles.insert(role);
+            if !OPTIONAL_DECODE_ROLES.contains(&role) {
+                required_roles.insert(role);
+            }
         }
         if roles_by_bucket.is_empty() {
             let mut sizes = self
@@ -336,11 +343,17 @@ impl Manifest {
         }
         roles_by_bucket
             .into_iter()
-            .filter(|(_, roles)| *roles == all_roles)
+            .filter(|(_, roles)| required_roles.is_subset(roles))
             .map(|(b, _)| b)
             .collect()
     }
 }
+
+/// Decode-family roles a bucket may lack and still be routable: optional
+/// fast paths with a documented per-iteration fallback in the coordinator
+/// (`Sampler::decode_tokens`). Keep in sync with the fused-artifact
+/// lowering in `python/compile/aot.py`.
+pub const OPTIONAL_DECODE_ROLES: &[&str] = &["block_jstep_fuse", "block_jstep_win_fuse"];
 
 #[cfg(test)]
 mod tests {
@@ -422,6 +435,45 @@ mod tests {
         assert_eq!(m.decode_buckets("m1"), vec![1, 2]);
         // Unknown model → empty; no suffixed artifacts → metadata fallback.
         assert!(m.decode_buckets("ghost").is_empty());
+    }
+
+    #[test]
+    fn decode_buckets_treat_fused_roles_as_optional() {
+        let dir = std::env::temp_dir().join("sjd_manifest_buckets_fused");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("a.hlo.txt"), "HloModule m").unwrap();
+        let art = |name: &str| {
+            format!(
+                r#"{{"name": "{name}", "file": "a.hlo.txt", "model": "m1",
+                     "inputs": [], "outputs": []}}"#
+            )
+        };
+        // Bucket 1 predates the fused artifacts, bucket 2 has them: BOTH
+        // are routable (the fused steps are probed fast paths with a
+        // per-iteration fallback, not required roles). Bucket 4 carries
+        // only fused roles and misses required ones → excluded.
+        let arts: Vec<String> = [
+            "m1_block_jstep_b1",
+            "m1_block_seqstep_b1",
+            "m1_block_jstep_b2",
+            "m1_block_seqstep_b2",
+            "m1_block_jstep_fuse_b2",
+            "m1_block_jstep_win_fuse_b2",
+            "m1_block_jstep_fuse_b4",
+        ]
+        .iter()
+        .map(|n| art(n))
+        .collect();
+        let body = format!(
+            r#"{{"artifacts": [{}],
+                 "models": [{{"name": "m1", "kind": "tarflow", "seq_len": 8,
+                              "blocks": 2, "token_dim": 3, "model_dim": 4,
+                              "batch_sizes": [1, 2, 4]}}]}}"#,
+            arts.join(",")
+        );
+        let p = write_manifest(&dir, &body);
+        let m = Manifest::load(&p).unwrap();
+        assert_eq!(m.decode_buckets("m1"), vec![1, 2]);
     }
 
     #[test]

@@ -61,7 +61,9 @@ mod value;
 
 pub use engine::{CallStats, Engine, TransferStats};
 pub use host::HostTensor;
-pub use manifest::{ArtifactMeta, DType, DatasetMeta, Manifest, ModelMeta, TensorSpec};
+pub use manifest::{
+    ArtifactMeta, DType, DatasetMeta, Manifest, ModelMeta, TensorSpec, OPTIONAL_DECODE_ROLES,
+};
 pub use value::{DeviceValue, Value};
 
 /// Execution backend abstraction: the real PJRT [`Engine`] in production,

@@ -36,13 +36,18 @@ pub struct MockFlow {
     pub d: usize,
     /// Model (KV cache) dim Dm.
     pub dm: usize,
+    /// Residual-history length of the fused multi-step artifacts (the
+    /// lowered `S_max` — mirrors `aot.JSTEP_FUSE_STEPS`). Kept below L so
+    /// τ=0 decodes need multiple chunks, which is the case the host-sync
+    /// ledger tests pin.
+    pub fuse_s_max: usize,
 }
 
 impl MockFlow {
     /// The canonical test geometry: K=4, L=8, D=3, Dm=4, non-square 2×4
-    /// image grid at patch 1.
+    /// image grid at patch 1, fused history S_max=4.
     pub fn standard() -> Self {
-        MockFlow { a: vec![0.9, 0.2, 0.15, 0.6], l: 8, d: 3, dm: 4 }
+        MockFlow { a: vec![0.9, 0.2, 0.15, 0.6], l: 8, d: 3, dm: 4, fuse_s_max: 4 }
     }
 
     /// s,g conditioner: g_l = a_k · mean over tokens < l (per-dim), s = 0.
@@ -153,6 +158,55 @@ impl MockFlow {
         (z_next, resid)
     }
 
+    /// Fused multi-step Jacobi: up to `steps` [`MockFlow::jstep`] updates
+    /// (clamped to [`MockFlow::fuse_s_max`], exact `o = 0` arithmetic —
+    /// bit-identical to the per-step path) plus the `[S_max, batch]`
+    /// residual history; rows past the steps actually run keep the −1
+    /// "not run" sentinel, mirroring the lowered artifact.
+    pub fn jstep_fuse(
+        &self,
+        k: usize,
+        z: &[f32],
+        y: &[f32],
+        steps: usize,
+        batch: usize,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let s_max = self.fuse_s_max;
+        let mut hist = vec![-1.0f32; s_max * batch];
+        let mut z = z.to_vec();
+        for i in 0..steps.min(s_max) {
+            let (zn, r) = self.jstep(k, &z, y, 0, batch);
+            z = zn;
+            hist[i * batch..(i + 1) * batch].copy_from_slice(&r);
+        }
+        (z, hist)
+    }
+
+    /// Fused multi-step windowed Jacobi: up to `steps`
+    /// [`MockFlow::jstep_win`] updates with the same history contract as
+    /// [`MockFlow::jstep_fuse`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn jstep_win_fuse(
+        &self,
+        k: usize,
+        z: &[f32],
+        y: &[f32],
+        steps: usize,
+        off: usize,
+        wlen: usize,
+        batch: usize,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let s_max = self.fuse_s_max;
+        let mut hist = vec![-1.0f32; s_max * batch];
+        let mut z = z.to_vec();
+        for i in 0..steps.min(s_max) {
+            let (zn, r) = self.jstep_win(k, &z, y, off, wlen, batch);
+            z = zn;
+            hist[i * batch..(i + 1) * batch].copy_from_slice(&r);
+        }
+        (z, hist)
+    }
+
     /// One sequential token step: the decoded prefix lives in the kv_k cache
     /// (slot `[0, b, pos, 0..D]`), mirroring the real cache contract.
     /// Returns `(u_tok[batch, D], kv_k', kv_v')`.
@@ -216,7 +270,32 @@ impl MockFlow {
     /// derived from the input shapes — the single dispatch every mock
     /// backend entry path shares.
     pub fn exec(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
-        if name.contains("jstep_win") {
+        // Fused roles first: their names contain the per-step role names.
+        if name.contains("jstep_win_fuse") {
+            let batch = inputs[1].shape()[0];
+            let k = inputs[0].as_i32()?[0] as usize;
+            let z = inputs[1].as_f32()?;
+            let y = inputs[2].as_f32()?;
+            let steps = inputs[3].as_i32()?[0] as usize;
+            let off = inputs[4].as_i32()?[0] as usize;
+            let wlen = inputs[5].as_i32()?[0] as usize;
+            let (zn, hist) = self.jstep_win_fuse(k, z, y, steps, off, wlen, batch);
+            Ok(vec![
+                HostTensor::f32(inputs[1].shape(), zn),
+                HostTensor::f32(&[self.fuse_s_max, batch], hist),
+            ])
+        } else if name.contains("jstep_fuse") {
+            let batch = inputs[1].shape()[0];
+            let k = inputs[0].as_i32()?[0] as usize;
+            let z = inputs[1].as_f32()?;
+            let y = inputs[2].as_f32()?;
+            let steps = inputs[3].as_i32()?[0] as usize;
+            let (zn, hist) = self.jstep_fuse(k, z, y, steps, batch);
+            Ok(vec![
+                HostTensor::f32(inputs[1].shape(), zn),
+                HostTensor::f32(&[self.fuse_s_max, batch], hist),
+            ])
+        } else if name.contains("jstep_win") {
             let batch = inputs[1].shape()[0];
             let k = inputs[0].as_i32()?[0] as usize;
             let z = inputs[1].as_f32()?;
@@ -312,8 +391,16 @@ pub struct MockServeBackend {
     pub buckets: Vec<usize>,
     /// Artificial decode cost: every jstep/seqstep call sleeps
     /// `slot_delay × B` (batch-proportional kernel time), so a padded slot
-    /// wastes exactly as much wall time as a real one.
+    /// wastes exactly as much wall time as a real one. A fused multi-step
+    /// call sleeps `slot_delay × B × steps` — fusing removes round-trips,
+    /// never compute, and the mock keeps that honest.
     pub slot_delay: Duration,
+    /// Artificial per-call dispatch/sync overhead, charged to EVERY
+    /// jstep/seqstep call regardless of how many updates it fuses — the
+    /// launch + blocking-sync latency the chunked decode exists to
+    /// amortize (`benches/jstep_fusion.rs` sets it; serving tests leave it
+    /// zero).
+    pub call_overhead: Duration,
     pub ledger: Arc<MockLedger>,
 }
 
@@ -323,8 +410,15 @@ impl MockServeBackend {
             flow: MockFlow::standard(),
             buckets: buckets.to_vec(),
             slot_delay,
+            call_overhead: Duration::ZERO,
             ledger,
         }
+    }
+
+    /// Builder: set the per-call dispatch/sync overhead.
+    pub fn with_call_overhead(mut self, overhead: Duration) -> Self {
+        self.call_overhead = overhead;
+        self
     }
 
     fn host(v: &Value) -> Result<HostTensor> {
@@ -339,9 +433,19 @@ impl Backend for MockServeBackend {
     fn call_v(&self, name: &str, inputs: &[Value]) -> Result<Vec<Value>> {
         self.ledger.bump(name);
         let host: Vec<HostTensor> = inputs.iter().map(Self::host).collect::<Result<_>>()?;
-        if !self.slot_delay.is_zero() && (name.contains("jstep") || name.contains("seqstep")) {
+        let decode_call = name.contains("jstep") || name.contains("seqstep");
+        if decode_call && !self.call_overhead.is_zero() {
+            std::thread::sleep(self.call_overhead);
+        }
+        if decode_call && !self.slot_delay.is_zero() {
             let batch = host[1].shape()[0];
-            std::thread::sleep(self.slot_delay * batch as u32);
+            // Fused calls run `steps` updates' worth of kernel time.
+            let steps = if name.contains("jstep_fuse") || name.contains("jstep_win_fuse") {
+                (host[3].as_i32()?[0] as usize).clamp(1, self.flow.fuse_s_max)
+            } else {
+                1
+            };
+            std::thread::sleep(self.slot_delay * (batch * steps) as u32);
         }
         Ok(self.flow.exec(name, &host)?.into_iter().map(Value::Host).collect())
     }
@@ -392,6 +496,37 @@ mod tests {
             let err = u.iter().zip(&z).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
             assert!(err < 1e-4, "batch {batch}: inverse error {err}");
         }
+    }
+
+    #[test]
+    fn fused_steps_match_repeated_single_steps() {
+        let f = MockFlow::standard();
+        let (batch, n) = (2usize, 2 * f.l * f.d);
+        let u: Vec<f32> = (0..n).map(|i| ((i * 29 + 5) % 13) as f32 / 13.0 - 0.5).collect();
+        let y = f.fwd(0, &u, batch);
+        let z0 = vec![0.0f32; n];
+        let (z_f, hist) = f.jstep_fuse(0, &z0, &y, 3, batch);
+        let mut z = z0.clone();
+        for i in 0..3 {
+            let (zn, r) = f.jstep(0, &z, &y, 0, batch);
+            z = zn;
+            assert_eq!(&hist[i * batch..(i + 1) * batch], &r[..], "history row {i}");
+        }
+        assert_eq!(z_f, z, "fused must be bit-identical to repeated steps");
+        // Rows past `steps` keep the −1 sentinel; steps clamp to S_max.
+        assert!(hist[3 * batch..].iter().all(|&v| v == -1.0));
+        let (z_a, _) = f.jstep_fuse(0, &z0, &y, 99, batch);
+        let (z_b, _) = f.jstep_fuse(0, &z0, &y, f.fuse_s_max, batch);
+        assert_eq!(z_a, z_b);
+        // Windowed fused agrees with repeated windowed steps likewise.
+        let (zw_f, whist) = f.jstep_win_fuse(0, &z0, &y, 2, 1, 4, batch);
+        let mut zw = z0.clone();
+        for i in 0..2 {
+            let (zn, r) = f.jstep_win(0, &zw, &y, 1, 4, batch);
+            zw = zn;
+            assert_eq!(&whist[i * batch..(i + 1) * batch], &r[..]);
+        }
+        assert_eq!(zw_f, zw);
     }
 
     #[test]

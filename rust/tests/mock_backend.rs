@@ -17,8 +17,9 @@
 //!   inverse: u_l = v_l + a_k · mean(u_{<l})   (triangular ⇒ Jacobi applies)
 
 use sjd::coordinator::jacobi::{
-    gs_jacobi_decode_block, gs_jacobi_decode_block_v, jacobi_decode_block,
-    jacobi_decode_block_v, window_partition, InitStrategy, JacobiConfig,
+    gs_jacobi_decode_block, gs_jacobi_decode_block_fused_v, gs_jacobi_decode_block_v,
+    jacobi_decode_block, jacobi_decode_block_fused_v, jacobi_decode_block_v,
+    window_partition, InitStrategy, JacobiConfig,
 };
 use sjd::coordinator::policy::{BlockDecode, DecodePolicy};
 use sjd::coordinator::sampler::{SampleOptions, Sampler, SamplerSet};
@@ -61,6 +62,10 @@ struct MockBackend {
     /// Expose the optional `{m}_block_jstep_win_b{B}` GS-Jacobi artifact
     /// (false models a pre-windowing artifact dir → Sampler falls back).
     windowed_jstep: bool,
+    /// Expose the optional fused multi-step artifacts
+    /// (`{m}_block_jstep_fuse_b{B}` / `{m}_block_jstep_win_fuse_b{B}`);
+    /// false models a pre-fusion artifact dir → per-iteration fallback.
+    fused_jstep: bool,
 }
 
 /// Mint a mock device value: the payload is just an `Rc`'d host tensor.
@@ -89,6 +94,7 @@ impl MockBackend {
             traffic: Default::default(),
             device_reverse: false,
             windowed_jstep: true,
+            fused_jstep: true,
         }
     }
 
@@ -98,6 +104,10 @@ impl MockBackend {
 
     fn without_jstep_win() -> Self {
         MockBackend { windowed_jstep: false, ..MockBackend::new() }
+    }
+
+    fn without_fuse() -> Self {
+        MockBackend { fused_jstep: false, ..MockBackend::new() }
     }
 
     fn count(&self, name: &str) -> usize {
@@ -158,6 +168,9 @@ impl Backend for MockBackend {
     fn has_artifact(&self, name: &str) -> bool {
         if name.contains("_reverse_") {
             return self.device_reverse;
+        }
+        if name.contains("fuse") {
+            return self.fused_jstep;
         }
         if name.contains("jstep_win") {
             return self.windowed_jstep;
@@ -627,13 +640,18 @@ fn gs_front_tracking_and_window_stats() {
     }
 
     // max_iters is a TOTAL budget shared across windows (same meaning as in
-    // plain Jacobi): one iteration overall, not one per window — and with τ
-    // never fired and the exactness cap never completed, the front must not
-    // advance.
+    // plain Jacobi): one iteration overall, not one per window — once it is
+    // exhausted the sweep STOPS (no empty WindowStats for windows that
+    // could never run), and with τ never fired and the exactness cap never
+    // completed, the front must not advance.
     let cfg = JacobiConfig { tau: 1e-9, max_iters: Some(1), ..Default::default() };
     let (_, stats) = gs_jacobi_decode_block(&be, "m_jstep_win", 0, &v, L, 2, &cfg).unwrap();
     assert_eq!(stats.iterations, 1, "budget of 1 must cover the whole block");
-    assert_eq!(stats.windows[1].iterations, 0, "second window gets no leftover budget");
+    assert_eq!(
+        stats.windows.len(),
+        1,
+        "the sweep must stop once the budget is exhausted mid-block"
+    );
     assert!(!stats.converged);
     assert_eq!(stats.front, vec![0, 0]);
 }
@@ -656,6 +674,7 @@ fn gs_keeps_iterate_device_resident() {
         L,
         4,
         &cfg,
+        None,
         None,
     )
     .unwrap();
@@ -774,6 +793,370 @@ fn per_block_policy_mixes_all_three_modes() {
         h = sampler.block_forward(k, &u).unwrap();
     }
     assert!(max_abs_diff(&z0, &h) < 1e-3);
+}
+
+// ---------------------------------------------------------------------------
+// Fused multi-step chunked decoding
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fused_bit_exact_with_per_iteration_at_tau0_and_ledger_pins_syncs() {
+    // τ = 0 never stops early: both drivers run exactly L updates of the
+    // same arithmetic, so the iterates must agree BIT-EXACTLY for every
+    // chunk schedule — while host syncs drop from `iterations` (one [B]
+    // residual per step) to the chunk count (one [S,B] history per chunk),
+    // ⌈iterations/S⌉ when the first chunk is seeded at S.
+    let s_max = MockFlow::standard().fuse_s_max;
+    let tau0 = JacobiConfig { tau: 0.0, ..Default::default() };
+    let u = randn(&[2, L, D], 50);
+    let be_ref = MockBackend::new();
+    let v = HostTensor::f32(&[2, L, D], be_ref.flow.fwd(0, u.as_f32().unwrap(), 2));
+    let (z_ref, ref_stats) = jacobi_decode_block_v(
+        &be_ref,
+        "mock_block_jstep_b2",
+        0,
+        &Value::Host(v.clone()),
+        L,
+        &tau0,
+        0,
+    )
+    .unwrap();
+    assert_eq!(ref_stats.iterations, L);
+    assert_eq!(ref_stats.host_syncs, L, "per-iteration driver syncs every τ test");
+    let z_ref = be_ref.to_host(z_ref).unwrap();
+
+    for first_chunk in [1usize, 3, s_max, L] {
+        let be = MockBackend::new();
+        let (zv, stats) = jacobi_decode_block_fused_v(
+            &be,
+            "mock_block_jstep_fuse_b2",
+            0,
+            &Value::Host(v.clone()),
+            L,
+            &tau0,
+            None,
+            None,
+            first_chunk,
+        )
+        .unwrap();
+        assert_eq!(stats.iterations, L, "chunk={first_chunk}");
+        assert!(!stats.converged, "τ=0 never τ-converges, like the per-step driver");
+        assert_eq!(stats.residuals, ref_stats.residuals, "chunk={first_chunk}");
+        // After the seed chunk, τ=0 chunks are maximal (S_max-sized) —
+        // ⌈L/S⌉ total when seeded at S (the acceptance formula).
+        let expected_chunks = 1 + (L - first_chunk.min(s_max)).div_ceil(s_max);
+        assert_eq!(stats.host_syncs, expected_chunks, "chunk={first_chunk}");
+        assert_eq!(
+            be.syncs_of(&[s_max, 2]),
+            expected_chunks,
+            "ledger: exactly one [S,B] history sync per chunk"
+        );
+        assert_eq!(be.syncs_of(&[2]), 0, "no per-iteration [B] syncs on the fused path");
+        assert_eq!(be.syncs_of(&[2, L, D]), 0, "the iterate must stay on device");
+        assert_eq!(be.promoted("mock_block_jstep_fuse_b2"), 0);
+        let z = be.to_host(zv).unwrap();
+        assert_eq!(be.syncs_of(&[2, L, D]), 1, "+1 for the final iterate");
+        assert_eq!(
+            z.as_f32().unwrap(),
+            z_ref.as_f32().unwrap(),
+            "bit-exact with the per-iteration driver at τ=0 (chunk={first_chunk})"
+        );
+    }
+    // The acceptance numbers spelled out: seeding at S = s_max gives
+    // ⌈L/S⌉ = 2 syncs for this block instead of the per-iteration L = 8.
+    assert_eq!(1 + (L - s_max).div_ceil(s_max), L.div_ceil(s_max));
+}
+
+#[test]
+fn fused_matches_per_iteration_at_default_tau() {
+    // Default τ = 0.5: a calibrated first-chunk hint (the block's measured
+    // iteration count, what `calibrate_chunks` seeds) lands the chunk
+    // exactly on the τ crossing — ONE host sync, bit-identical iterate.
+    let cfg = JacobiConfig::default();
+    assert_eq!(cfg.tau, 0.5);
+    let u = randn(&[2, L, D], 51);
+    let be = MockBackend::new();
+    let v = HostTensor::f32(&[2, L, D], be.flow.fwd(2, u.as_f32().unwrap(), 2));
+    let (z_ref, ref_stats) = jacobi_decode_block_v(
+        &be,
+        "mock_block_jstep_b2",
+        2,
+        &Value::Host(v.clone()),
+        L,
+        &cfg,
+        0,
+    )
+    .unwrap();
+    let z_ref = be.to_host(z_ref).unwrap();
+    let t = ref_stats.iterations;
+    assert!(
+        ref_stats.converged && t >= 2 && t <= MockFlow::standard().fuse_s_max,
+        "weakly coupled mock block must τ-converge within one fused chunk, got {t}"
+    );
+
+    let be2 = MockBackend::new();
+    let (zv, stats) = jacobi_decode_block_fused_v(
+        &be2,
+        "mock_block_jstep_fuse_b2",
+        2,
+        &Value::Host(v.clone()),
+        L,
+        &cfg,
+        None,
+        None,
+        t,
+    )
+    .unwrap();
+    assert!(stats.converged);
+    assert_eq!(stats.iterations, t);
+    assert_eq!(stats.residuals, ref_stats.residuals);
+    assert_eq!(stats.host_syncs, 1, "calibrated hint ⇒ single-chunk decode");
+    let z = be2.to_host(zv).unwrap();
+    assert_eq!(
+        z.as_f32().unwrap(),
+        z_ref.as_f32().unwrap(),
+        "bit-exact at τ=0.5 with the calibrated chunk seed"
+    );
+
+    // An uncalibrated 1-step seed still recovers the exact per-iteration
+    // STATS (τ stop, residual prefix, convergence flag); the iterate may
+    // carry documented overshoot steps past τ, which only contract it
+    // further toward the same fixed point.
+    let be3 = MockBackend::new();
+    let (zv3, stats3) = jacobi_decode_block_fused_v(
+        &be3,
+        "mock_block_jstep_fuse_b2",
+        2,
+        &Value::Host(v.clone()),
+        L,
+        &cfg,
+        None,
+        None,
+        1,
+    )
+    .unwrap();
+    assert!(stats3.converged);
+    assert_eq!(stats3.iterations, t);
+    assert_eq!(stats3.residuals, ref_stats.residuals);
+    assert!(stats3.host_syncs <= ref_stats.host_syncs);
+    let z3 = be3.to_host(zv3).unwrap();
+    let err_ref = max_abs_diff(&z_ref, &u);
+    let err3 = max_abs_diff(&z3, &u);
+    assert!(err3 <= err_ref + 1e-6, "overshoot must not regress accuracy");
+}
+
+#[test]
+fn gs_fused_bit_exact_at_tau0_with_fewer_syncs() {
+    // Chunked GS sweep: τ = 0 runs every window's full exactness cap, so
+    // the fused windowed driver must reproduce sequential decode
+    // bit-exactly (like the per-iteration GS sweep) while syncing once per
+    // chunk instead of once per inner iteration.
+    let be = MockBackend::new();
+    let sampler = mk_sampler(&be);
+    let u = randn(&[2, L, D], 52);
+    let v = HostTensor::f32(&[2, L, D], be.flow.fwd(1, u.as_f32().unwrap(), 2));
+    let (u_seq, _) = sampler.sequential_decode_block(1, &v).unwrap();
+    let exact = JacobiConfig { tau: 0.0, ..Default::default() };
+    let s_max = MockFlow::standard().fuse_s_max;
+    for windows in [1usize, 2, 3, L] {
+        let be2 = MockBackend::new();
+        let (zv, stats) = gs_jacobi_decode_block_fused_v(
+            &be2,
+            "mock_block_jstep_win_fuse_b2",
+            1,
+            &Value::Host(v.clone()),
+            L,
+            windows,
+            &exact,
+            None,
+            None,
+            s_max,
+        )
+        .unwrap();
+        let z = be2.to_host(zv).unwrap();
+        assert_eq!(
+            z.as_f32().unwrap(),
+            u_seq.as_f32().unwrap(),
+            "W={windows} fused sweep must be bit-exact with sequential decode"
+        );
+        // Same per-iteration accounting as the per-iteration sweep …
+        let expected: usize = window_partition(L, windows).iter().map(|(_, l)| l * l).sum();
+        assert_eq!(stats.position_updates, expected);
+        assert!(stats.converged);
+        assert_eq!(stats.front, vec![L, L]);
+        // … with chunk-level sync accounting: Σ over windows of ⌈len/S⌉.
+        let expected_syncs: usize =
+            window_partition(L, windows).iter().map(|(_, l)| l.div_ceil(s_max)).sum();
+        assert_eq!(stats.host_syncs, expected_syncs, "W={windows}");
+        assert_eq!(be2.syncs_of(&[s_max, 2]), stats.host_syncs);
+        assert_eq!(be2.syncs_of(&[2]), 0, "no per-iteration [B] syncs");
+    }
+    // Spelled out for W=2 (window len 4 = S_max): 8 iterations, 2 syncs.
+    let be3 = MockBackend::new();
+    let (_, stats) = gs_jacobi_decode_block_fused_v(
+        &be3,
+        "mock_block_jstep_win_fuse_b2",
+        1,
+        &Value::Host(v.clone()),
+        L,
+        2,
+        &exact,
+        None,
+        None,
+        s_max,
+    )
+    .unwrap();
+    assert_eq!(stats.iterations, L);
+    assert_eq!(stats.host_syncs, 2);
+}
+
+#[test]
+fn decode_tokens_fused_policy_routes_and_accounts() {
+    let be = MockBackend::new();
+    let sampler = mk_sampler(&be);
+    let z0 = randn(&[2, L, D], 53);
+    let mut opts =
+        SampleOptions { policy: DecodePolicy::Fused { chunk: 4 }, ..Default::default() };
+    opts.jacobi.tau = 1e-7;
+    let out = sampler.decode_tokens(z0.clone(), &opts).unwrap();
+    assert_eq!(be.count("mock_block_jstep_b2"), 0, "fused policy must not call the per-step artifact");
+    assert!(be.count("mock_block_jstep_fuse_b2") >= K);
+    let mut syncs = 0;
+    for t in &out.traces {
+        assert!(t.used_jacobi);
+        let j = t.jacobi.as_ref().expect("fused decode records JacobiStats");
+        assert_eq!(t.steps, j.iterations);
+        assert_eq!(t.host_syncs, j.host_syncs);
+        assert!(t.host_syncs <= t.steps);
+        syncs += t.host_syncs;
+    }
+    assert_eq!(out.total_host_syncs(), syncs);
+    assert!(
+        out.total_host_syncs() < out.total_jacobi_iters(),
+        "chunking must reduce host syncs ({} vs {} iters)",
+        out.total_host_syncs(),
+        out.total_jacobi_iters()
+    );
+
+    // decode∘encode identity holds through the fused path.
+    let mut h = out.tokens;
+    for k in 0..K {
+        let u = if k % 2 == 1 { sampler.reverse_tokens(&h).unwrap() } else { h };
+        h = sampler.block_forward(k, &u).unwrap();
+    }
+    assert!(max_abs_diff(&z0, &h) < 1e-3, "decode∘encode identity through fused decode");
+}
+
+#[test]
+fn decode_tokens_gs_fused_policy_routes() {
+    let be = MockBackend::new();
+    let sampler = mk_sampler(&be);
+    let z0 = randn(&[2, L, D], 57);
+    let mut opts = SampleOptions {
+        policy: DecodePolicy::PerBlock {
+            modes: vec![BlockDecode::GsFused { windows: 2, chunk: 4 }; K],
+        },
+        ..Default::default()
+    };
+    opts.jacobi.tau = 1e-7;
+    let out = sampler.decode_tokens(z0.clone(), &opts).unwrap();
+    assert!(be.count("mock_block_jstep_win_fuse_b2") >= K);
+    assert_eq!(be.count("mock_block_jstep_win_b2"), 0);
+    assert_eq!(be.count("mock_block_jstep_b2"), 0);
+    for t in &out.traces {
+        let gs = t.gs.as_ref().expect("gs stats recorded");
+        assert_eq!(t.host_syncs, gs.host_syncs);
+        assert!(t.host_syncs <= t.steps);
+    }
+    let mut h = out.tokens;
+    for k in 0..K {
+        let u = if k % 2 == 1 { sampler.reverse_tokens(&h).unwrap() } else { h };
+        h = sampler.block_forward(k, &u).unwrap();
+    }
+    assert!(max_abs_diff(&z0, &h) < 1e-3);
+}
+
+#[test]
+fn fused_policy_falls_back_without_artifacts_and_for_masked_decodes() {
+    // Pre-fusion artifact dir: Fused degrades to plain per-iteration Jacobi.
+    let be = MockBackend::without_fuse();
+    let sampler = mk_sampler(&be);
+    let z0 = randn(&[2, L, D], 54);
+    let opts =
+        SampleOptions { policy: DecodePolicy::Fused { chunk: 4 }, ..Default::default() };
+    let out = sampler.decode_tokens(z0.clone(), &opts).unwrap();
+    assert_eq!(be.count("mock_block_jstep_fuse_b2"), 0);
+    assert!(be.count("mock_block_jstep_b2") >= K);
+    for t in &out.traces {
+        assert_eq!(t.host_syncs, t.steps, "per-iteration fallback syncs every iteration");
+    }
+
+    // A masked eq-6 decode bypasses the fused artifact even when present:
+    // it computes the exact o = 0 update only.
+    let be = MockBackend::new();
+    let sampler = mk_sampler(&be);
+    let z0 = randn(&[2, L, D], 55);
+    let opts = SampleOptions {
+        policy: DecodePolicy::Fused { chunk: 4 },
+        mask_o: 2,
+        ..Default::default()
+    };
+    let _ = sampler.decode_tokens(z0, &opts).unwrap();
+    assert_eq!(be.count("mock_block_jstep_fuse_b2"), 0);
+    assert!(be.count("mock_block_jstep_b2") >= K);
+
+    // GsFused degrades one step at a time: no win_fuse → per-iteration GS;
+    // no windowed step either → plain Jacobi.
+    let modes = vec![BlockDecode::GsFused { windows: 2, chunk: 4 }; K];
+    let be = MockBackend::without_fuse();
+    let sampler = mk_sampler(&be);
+    let z0 = randn(&[2, L, D], 56);
+    let opts = SampleOptions {
+        policy: DecodePolicy::PerBlock { modes: modes.clone() },
+        ..Default::default()
+    };
+    let _ = sampler.decode_tokens(z0.clone(), &opts).unwrap();
+    assert_eq!(be.count("mock_block_jstep_win_fuse_b2"), 0);
+    assert!(be.count("mock_block_jstep_win_b2") >= K);
+
+    let be = MockBackend { windowed_jstep: false, ..MockBackend::without_fuse() };
+    let sampler = mk_sampler(&be);
+    let opts = SampleOptions { policy: DecodePolicy::PerBlock { modes }, ..Default::default() };
+    let _ = sampler.decode_tokens(z0, &opts).unwrap();
+    assert_eq!(be.count("mock_block_jstep_win_fuse_b2"), 0);
+    assert_eq!(be.count("mock_block_jstep_win_b2"), 0);
+    assert!(be.count("mock_block_jstep_b2") >= K);
+}
+
+#[test]
+fn scalar_loop_constants_upload_once_per_value() {
+    // Satellite contract: the pool pins i32 loop constants (k, mask_o,
+    // window off/len, chunk sizes) once per distinct value — a second
+    // decode through the same sampler re-uploads NO scalars at all.
+    let be = MockBackend::new();
+    let sampler = mk_sampler(&be);
+    let mut opts = SampleOptions {
+        policy: DecodePolicy::PerBlock {
+            modes: vec![
+                BlockDecode::Sequential,
+                BlockDecode::Jacobi,
+                BlockDecode::GsJacobi { windows: 2 },
+                BlockDecode::Fused { chunk: 3 },
+            ],
+        },
+        ..Default::default()
+    };
+    opts.jacobi.tau = 1e-7;
+    let z0 = randn(&[2, L, D], 58);
+    let _ = sampler.decode_tokens(z0.clone(), &opts).unwrap();
+    let scalars_after_first = be.uploads_of(&[]);
+    assert!(scalars_after_first > 0, "first decode pins its scalar constants");
+    let _ = sampler.decode_tokens(z0, &opts).unwrap();
+    assert_eq!(
+        be.uploads_of(&[]),
+        scalars_after_first,
+        "second decode must reuse every pinned scalar"
+    );
 }
 
 // ---------------------------------------------------------------------------

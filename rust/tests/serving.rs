@@ -206,6 +206,11 @@ fn n1_generate_uses_bucket_1_with_zero_padding() {
     assert_eq!(registry.counter("sjd_padded_slots").get(), 0, "n=1 must pad zero slots");
     assert_eq!(registry.counter("sjd_bucket_1_batches").get(), 1);
     assert!(ledger.count_containing("_b1") > 0, "decode must run the b1 artifacts");
+    // Per-block convergence observability: one sjd_block_iters +
+    // sjd_host_syncs sample per decoded block (mock flow has 4 blocks).
+    assert_eq!(registry.histogram("sjd_block_iters").count(), 4);
+    assert_eq!(registry.histogram("sjd_host_syncs").count(), 4);
+    assert!(registry.histogram("sjd_host_syncs").snapshot().max >= 1);
     for b in [2usize, 4, 8] {
         assert_eq!(ledger.count_containing(&format!("_b{b}")), 0, "bucket {b} must stay idle");
     }
