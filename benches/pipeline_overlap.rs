@@ -1,0 +1,162 @@
+//! **Stage-graph pipelining**: throughput and latency of 2-deep inter-batch
+//! block overlap vs single-in-flight decode, over the **mock backend** — no
+//! artifacts needed, so it runs everywhere (including the CI smoke step).
+//!
+//! Both configurations drive the same `DecodePipeline` (one stage thread
+//! per flow block, each charging batch-proportional kernel time per jstep
+//! call); only the depth gate differs. At depth 1 a batch must clear all K
+//! stages before the next enters — the monolithic worker's schedule. At
+//! depth 2, batch B occupies stage 0 while batch A is in stage 1, so with
+//! roughly balanced stages steady-state throughput approaches 2×.
+//!
+//! The acceptance gate mirrors the equivalence test in
+//! `rust/tests/mock_backend.rs`: at τ = 0 both depths must produce
+//! **bit-identical tokens**, the 2-deep run must beat single-in-flight on
+//! throughput by ≥ 1.3×, and per-batch decode latency (p99) must stay
+//! within 1.5× — overlap must come from the stage graph, not from queueing
+//! batches deeper. Exits non-zero otherwise.
+//!
+//! ```bash
+//! cargo bench --bench pipeline_overlap            # full run (24 batches)
+//! cargo bench --bench pipeline_overlap -- --quick # CI smoke (12 batches)
+//! ```
+
+use anyhow::Result;
+use sjd::benchkit::Report;
+use sjd::coordinator::pipeline::{DecodePipeline, PipelineConfig, PipelineJob};
+use sjd::coordinator::policy::DecodePolicy;
+use sjd::coordinator::sampler::SampleOptions;
+use sjd::metrics::Registry;
+use sjd::runtime::HostTensor;
+use sjd::testkit::mockflow::{MockLedger, MockServeBackend};
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Per-step kernel time (× batch size per jstep call) — makes stage
+/// occupancy real wall time the overlap can reclaim.
+const SLOT_DELAY: Duration = Duration::from_micros(500);
+
+fn quick() -> bool {
+    std::env::args().any(|a| a == "--quick") || std::env::var("SJD_QUICK").is_ok()
+}
+
+struct RunStats {
+    wall: Duration,
+    /// Per-batch decode latency (stage-0 start → completion), ms, sorted.
+    latencies_ms: Vec<f64>,
+    tokens: BTreeMap<u64, HostTensor>,
+    stage_waits: u64,
+}
+
+fn pct(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    sorted[((sorted.len() as f64 - 1.0) * q) as usize]
+}
+
+fn run(depth: usize, n_batches: u64) -> Result<RunStats> {
+    let registry = Registry::new();
+    let cfg = PipelineConfig { depth, stage_threads: 0 };
+    let factory =
+        move |_stage: usize| Ok(MockServeBackend::new(&[2], SLOT_DELAY, MockLedger::new()));
+    let pipeline = DecodePipeline::start("mock", &[2], cfg, registry.clone(), factory)?;
+
+    // τ = 0: every block runs its full L-iteration exactness sweep, so the
+    // stages are balanced AND the outputs are bit-comparable across depths.
+    let mut opts = SampleOptions { policy: DecodePolicy::UniformJacobi, ..Default::default() };
+    opts.jacobi.tau = 0.0;
+
+    let results: Arc<Mutex<BTreeMap<u64, (HostTensor, f64)>>> =
+        Arc::new(Mutex::new(BTreeMap::new()));
+    let t0 = Instant::now();
+    for seed in 0..n_batches {
+        let results = results.clone();
+        let job = PipelineJob {
+            seed,
+            n: 2,
+            opts: opts.clone(),
+            done: Box::new(move |res| {
+                let (_imgs, out) = res.expect("pipeline decode");
+                let lat_ms = out.total_wall.as_secs_f64() * 1e3;
+                results.lock().unwrap().insert(seed, (out.tokens, lat_ms));
+            }),
+        };
+        if pipeline.submit(job).is_err() {
+            anyhow::bail!("pipeline rejected a submission");
+        }
+    }
+    pipeline.shutdown(); // drains the in-flight tail
+    let wall = t0.elapsed();
+
+    let results = Arc::try_unwrap(results).ok().expect("all callbacks done").into_inner().unwrap();
+    anyhow::ensure!(results.len() == n_batches as usize, "every batch must complete");
+    let mut latencies_ms: Vec<f64> = results.values().map(|(_, l)| *l).collect();
+    latencies_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let tokens = results.into_iter().map(|(s, (t, _))| (s, t)).collect();
+    Ok(RunStats {
+        wall,
+        latencies_ms,
+        tokens,
+        stage_waits: registry.histogram("sjd_stage_wait").count(),
+    })
+}
+
+fn main() -> Result<()> {
+    let n_batches: u64 = if quick() { 12 } else { 24 };
+    println!(
+        "=== pipeline_overlap: {n_batches} batches, depth 1 vs depth 2 \
+         (mock backend, 4 stage threads) ==="
+    );
+    let mut report = Report::new("Stage-graph pipelining — 2-deep block overlap vs monolithic");
+
+    let mono = run(1, n_batches)?;
+    let piped = run(2, n_batches)?;
+
+    let thr = |s: &RunStats| n_batches as f64 / s.wall.as_secs_f64();
+    let rows: Vec<Vec<String>> = [("depth 1", &mono), ("depth 2", &piped)]
+        .iter()
+        .map(|&(label, s)| {
+            vec![
+                label.to_string(),
+                format!("{:.2}", s.wall.as_secs_f64()),
+                format!("{:.1}", thr(s)),
+                format!("{:.1}", pct(&s.latencies_ms, 0.5)),
+                format!("{:.1}", pct(&s.latencies_ms, 0.99)),
+                s.stage_waits.to_string(),
+            ]
+        })
+        .collect();
+    for r in &rows {
+        println!(
+            "{:>8}: {}s wall, {} batches/s, batch ms p50 {} p99 {}, {} stage-queue passes",
+            r[0], r[1], r[2], r[3], r[4], r[5]
+        );
+    }
+    report.table(
+        &["config", "wall (s)", "batches/s", "batch p50 (ms)", "batch p99 (ms)", "stage passes"],
+        &rows,
+    );
+
+    let equal_output = mono.tokens == piped.tokens;
+    let thr_gain = thr(&piped) / thr(&mono);
+    let p99_ratio = pct(&piped.latencies_ms, 0.99) / pct(&mono.latencies_ms, 0.99).max(1e-9);
+    let pass = equal_output && thr_gain >= 1.3 && p99_ratio <= 1.5;
+    report.note(if pass {
+        "PASS: 2 batches in flight beat single-in-flight on throughput (≥1.3×) \
+         with bit-identical τ=0 output at comparable per-batch latency."
+    } else {
+        "FAIL: block pipelining must raise throughput at equal output without \
+         inflating per-batch latency."
+    });
+    report.note(format!(
+        "throughput ×{thr_gain:.2} (gate ≥1.3), batch p99 ratio {p99_ratio:.2} (gate ≤1.5), \
+         equal output: {equal_output}"
+    ));
+    report.finish();
+    anyhow::ensure!(equal_output, "depth-2 τ=0 output diverged from depth-1");
+    anyhow::ensure!(thr_gain >= 1.3, "block pipelining gained only {thr_gain:.2}x throughput");
+    anyhow::ensure!(p99_ratio <= 1.5, "depth-2 p99 inflated {p99_ratio:.2}x");
+    Ok(())
+}

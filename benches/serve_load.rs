@@ -122,6 +122,9 @@ fn run_config(
                 policy: DecodePolicy::Selective { seq_blocks: 1 },
                 ..Default::default()
             },
+            pipeline_depth: 1,
+            stage_threads: 0,
+            tuner: None,
         },
         batcher.clone(),
         registry.clone(),

@@ -108,6 +108,9 @@ fn serve_and_measure(
             buckets: Vec::new(),
             workers: 2,
             options: SampleOptions { policy, ..Default::default() },
+            pipeline_depth: 1,
+            stage_threads: 0,
+            tuner: None,
         },
         batcher.clone(),
         registry.clone(),

@@ -107,7 +107,12 @@ impl Command {
                 .find(|c| c.name == *name)
                 .ok_or_else(|| anyhow!("unknown subcommand '{name}'\n\n{}", self.help_text()))?;
             let mut parsed = sub.parse(&args[1..])?;
-            parsed.subcommand = Some(sub.name.to_string());
+            // Nested subcommands compose into a space-separated path
+            // ("policy show"), so dispatchers match on the full route.
+            parsed.subcommand = Some(match parsed.subcommand.take() {
+                Some(inner) => format!("{} {inner}", sub.name),
+                None => sub.name.to_string(),
+            });
             return Ok(parsed);
         }
 
@@ -227,6 +232,21 @@ mod tests {
         assert!((p.f64("tau").unwrap() - 0.5).abs() < 1e-9);
         assert!(p.flag("sequential"));
         assert_eq!(p.str("out"), "/tmp/x");
+    }
+
+    #[test]
+    fn nested_subcommands_compose_a_path() {
+        let cmd = Command::new("sjd", "test").sub(
+            Command::new("policy", "inspect policies")
+                .sub(Command::new("show", "print the mode table").opt("blocks", "8", "K")),
+        );
+        let p = cmd.parse(&argv("policy show --blocks 4")).unwrap();
+        assert_eq!(p.subcommand.as_deref(), Some("policy show"));
+        assert_eq!(p.usize("blocks").unwrap(), 4);
+        // The intermediate command alone surfaces its help (error path).
+        let err = cmd.parse(&argv("policy")).unwrap_err().to_string();
+        assert!(err.contains("show"), "{err}");
+        assert!(cmd.parse(&argv("policy frobnicate")).is_err());
     }
 
     #[test]

@@ -17,10 +17,18 @@
 //!   calibrated per-block variants with JSON persistence.
 //! * [`sampler`] — full noise→image pipeline over the AOT artifacts; a
 //!   [`sampler::SamplerSet`] holds one sampler per lowered batch bucket.
+//! * [`pipeline`] — the decode restructured as a **stage graph**: one
+//!   [`pipeline::BlockStage`] per flow block, executed by a
+//!   [`pipeline::DecodePipeline`] that keeps ≥ 2 batches in flight at
+//!   different stages (inter-batch block overlap with per-stage queues,
+//!   backpressure and `sjd_stage_*` metrics).
 //! * [`batcher`] — dynamic request batching up to the largest bucket.
-//! * [`router`] — multi-worker dispatch (one engine per worker thread);
-//!   each batch decodes via the smallest bucket covering it, padding only
-//!   the gap to that bucket (`sjd_padded_slots`).
+//! * [`router`] — multi-worker dispatch (one engine per worker thread,
+//!   or one per *stage* thread under `--pipeline-depth ≥ 2`); each batch
+//!   decodes via the smallest bucket covering it, padding only the gap to
+//!   that bucket (`sjd_padded_slots`). With `--tune`, workers route every
+//!   batch through the live [`policy::PolicyTuner`] policy and feed their
+//!   decode traces back to it.
 //! * [`server`] — HTTP/1.1 front end (`/generate`, `/metrics`, `/healthz`)
 //!   on a connection thread pool with keep-alive; PNG encodes run as pool
 //!   jobs that overlap decode.
@@ -29,6 +37,7 @@
 pub mod batcher;
 pub mod jacobi;
 pub mod maf;
+pub mod pipeline;
 pub mod policy;
 pub mod router;
 pub mod sampler;
@@ -38,5 +47,6 @@ pub mod state;
 pub use jacobi::{
     ChunkScheduler, GsJacobiStats, InitStrategy, JacobiConfig, JacobiStats, WindowStats,
 };
-pub use policy::{BlockDecode, DecodePolicy};
+pub use pipeline::{BlockStage, DecodePipeline, PipelineConfig, PipelineJob};
+pub use policy::{BlockDecode, DecodePolicy, PolicyTuner, TunerConfig};
 pub use sampler::{SampleOptions, Sampler, SamplerSet};

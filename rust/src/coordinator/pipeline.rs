@@ -1,0 +1,586 @@
+//! Stage-graph decode pipeline: inter-batch block overlap.
+//!
+//! SeJD's per-layer redundancy argument cuts the decode into `K`
+//! independent **stages** — one flow block each, with disjoint artifacts —
+//! yet the monolithic loop in `Sampler::decode_tokens` forces a serving
+//! worker to run them strictly serially, one batch at a time. This module
+//! restructures that loop into an explicit stage graph: a [`BlockStage`]
+//! describes one stage's contract (decode position, flow block, policy
+//! mode, output permutation), and a [`DecodePipeline`] walks batches
+//! through the stages while keeping up to [`PipelineConfig::depth`] batches
+//! in flight at *different* stages — batch B enters stage 0 while batch A
+//! is in stage 1, because block `k` of A and block `k−1` of B touch
+//! disjoint artifacts.
+//!
+//! ## Execution model
+//!
+//! The pipeline spawns [`PipelineConfig::stage_threads`] stage-executor
+//! threads; each owns its **own backend** (device values are thread-pinned,
+//! see the `runtime` docs) plus a per-bucket `SamplerSet`, and runs a
+//! contiguous span of decode positions. Batches flow through bounded
+//! per-stage queues (capacity 1 — a stage can hold at most one waiting
+//! batch, so a slow stage backpressures its upstream immediately), and a
+//! global depth gate bounds total in-flight batches, which bounds memory
+//! and keeps tail latency honest.
+//!
+//! ## Device-value handoff
+//!
+//! *Within* a stage span, block outputs chain device→device exactly like
+//! the monolithic loop — the span runs through `Sampler::decode_block_at`
+//! over one backend, so nothing new crosses the host boundary. *Between*
+//! stage threads the handoff must be host data (device handles are
+//! `Rc`-pinned to the minting backend), so each span ends with one
+//! documented forced sync. A single-threaded pipeline (`stage_threads = 1`)
+//! therefore reproduces the monolithic residency map bit for bit: one
+//! upload, K chained blocks, one final sync. With one thread per block the
+//! per-stage sync cost is `K − 1` extra `[B, L, D]` round-trips per batch —
+//! the price of overlap, paid only when overlap is enabled.
+//!
+//! Results are **bit-exact** with the monolithic path regardless of depth
+//! or thread count: stages never share mutable state, every batch's prior
+//! comes from its own seeded RNG stream, and host↔device crossings
+//! preserve bits (`rust/tests/mock_backend.rs` pins the equivalence at
+//! τ = 0; `benches/pipeline_overlap.rs` gates the throughput win in CI).
+//!
+//! ## Metrics
+//!
+//! Per stage thread `t`: `sjd_stage_{t}_occupancy` (gauge, batches being
+//! processed — 0/1 per pipeline, and its time-average is the stage's
+//! utilization) and the shared `sjd_stage_wait` histogram (time a batch
+//! sat in a stage queue before the stage picked it up — non-zero waits
+//! mean the pipeline is genuinely overlapping). When several pipelines
+//! share one registry (`serve --workers N --pipeline-depth ≥2` runs one
+//! pipeline per worker), both metrics aggregate across them: stage `t`'s
+//! occupancy reads `0..=N` and `sjd_stage_wait` pools every worker's
+//! queue waits.
+
+use super::policy::{BlockDecode, DecodePolicy};
+use super::sampler::{BlockTrace, SampleOptions, SampleOutput, SamplerSet};
+use crate::metrics::Registry;
+use crate::runtime::{Backend, HostTensor, Value};
+use crate::tensor::{Pcg64, Tensor};
+use anyhow::Result;
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// One stage of the decode stage graph: a single flow block with its decode
+/// mode and in/out contract. Purely descriptive — execution is
+/// `Sampler::decode_block_at` — used by `sjd policy show`, the `/policy`
+/// endpoint and pipeline observability.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BlockStage {
+    /// Decode position (0 = first block applied to noise).
+    pub position: usize,
+    /// Flow-order block index `k = K − 1 − position` — the index the
+    /// stage's artifacts are keyed by.
+    pub block: usize,
+    /// Policy decode mode (before the sampler's per-bucket artifact
+    /// degradation chain).
+    pub mode: BlockDecode,
+    /// Whether the stage output is token-reversed (`P_k`, odd `k`) before
+    /// handoff to the next stage.
+    pub reversed: bool,
+}
+
+/// The stage graph a policy induces over a `K`-block flow, in decode order.
+pub fn stage_plan(policy: &DecodePolicy, blocks: usize) -> Vec<BlockStage> {
+    (0..blocks)
+        .map(|pos| {
+            let block = blocks - 1 - pos;
+            BlockStage {
+                position: pos,
+                block,
+                mode: policy.block_mode(pos, blocks),
+                reversed: block % 2 == 1,
+            }
+        })
+        .collect()
+}
+
+/// Pipeline shape knobs.
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    /// Maximum batches in flight across the whole pipeline (≥ 1). Depth 1
+    /// is the monolithic serial decode expressed through the pipeline;
+    /// depth ≥ 2 enables inter-batch block overlap.
+    pub depth: usize,
+    /// Stage-executor threads, each owning a backend and a contiguous span
+    /// of decode positions; clamped to `[1, K]`, and `0` means one thread
+    /// per block (maximum overlap).
+    pub stage_threads: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig { depth: 2, stage_threads: 0 }
+    }
+}
+
+/// What a completed batch resolves to: the per-sample images plus the same
+/// [`SampleOutput`] a monolithic `sample_images` returns, or the decode
+/// error message (`String`, like `batcher::SlotResult`, so every slot of a
+/// failed batch can carry its own copy).
+pub type PipelineResult = std::result::Result<(Vec<Tensor>, SampleOutput), String>;
+
+/// Completion callback of one submitted batch.
+pub type DoneFn = Box<dyn FnOnce(PipelineResult) + Send + 'static>;
+
+/// One batch submitted to the pipeline.
+pub struct PipelineJob {
+    /// Seed of the batch RNG stream (`Pcg64::seed_stream(seed, 1)`, the
+    /// router's fixed-stream convention) — stage 0 draws the prior from it.
+    pub seed: u64,
+    /// Real slots in the batch; stages route it to the smallest covering
+    /// bucket exactly like a monolithic worker.
+    pub n: usize,
+    pub opts: SampleOptions,
+    /// Completion callback, invoked on the final stage's thread (keep it
+    /// light — it runs on the decode path).
+    pub done: DoneFn,
+}
+
+/// A batch moving through the stage graph.
+struct InFlight {
+    seed: u64,
+    n: usize,
+    opts: SampleOptions,
+    done: DoneFn,
+    /// Host tokens between stage spans (`None` until stage 0 draws the
+    /// prior). Cross-thread handoff is host data by contract.
+    tokens: Option<HostTensor>,
+    traces: Vec<BlockTrace>,
+    decode_wall: Duration,
+    /// Time spent waiting in stage queues *after* stage 0 started — the
+    /// depth-≥2 interleaving cost, kept out of `other_wall` so that field
+    /// retains its documented meaning.
+    queued: Duration,
+    /// When stage 0 started processing (anchor of `total_wall`).
+    started: Option<Instant>,
+    /// When the batch entered its current queue (stage-wait accounting).
+    enqueued: Instant,
+}
+
+/// Bounded channel with blocking send — the per-stage queue + backpressure
+/// primitive.
+struct StageQueue<T> {
+    inner: Mutex<StageQueueInner<T>>,
+    cv: Condvar,
+    cap: usize,
+}
+
+struct StageQueueInner<T> {
+    q: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> StageQueue<T> {
+    fn new(cap: usize) -> Arc<Self> {
+        Arc::new(StageQueue {
+            inner: Mutex::new(StageQueueInner { q: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+            cap: cap.max(1),
+        })
+    }
+
+    /// Blocking send; a closed queue hands the item back so the caller can
+    /// complete it with an error instead of silently dropping it.
+    fn send(&self, item: T) -> std::result::Result<(), T> {
+        let mut g = self.inner.lock().unwrap();
+        while g.q.len() >= self.cap && !g.closed {
+            g = self.cv.wait(g).unwrap();
+        }
+        if g.closed {
+            return Err(item);
+        }
+        g.q.push_back(item);
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    /// Blocking receive; `None` once closed and drained.
+    fn recv(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.q.pop_front() {
+                self.cv.notify_all();
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+}
+
+/// Counting gate bounding total in-flight batches (acquired on submit,
+/// released at completion).
+struct DepthGate {
+    count: Mutex<usize>,
+    cv: Condvar,
+    depth: usize,
+}
+
+impl DepthGate {
+    fn new(depth: usize) -> Arc<Self> {
+        Arc::new(DepthGate { count: Mutex::new(0), cv: Condvar::new(), depth: depth.max(1) })
+    }
+
+    fn acquire(&self) {
+        let mut c = self.count.lock().unwrap();
+        while *c >= self.depth {
+            c = self.cv.wait(c).unwrap();
+        }
+        *c += 1;
+    }
+
+    fn release(&self) {
+        let mut c = self.count.lock().unwrap();
+        *c -= 1;
+        self.cv.notify_all();
+    }
+
+    fn current(&self) -> usize {
+        *self.count.lock().unwrap()
+    }
+}
+
+/// Running stage-graph pipeline (see the module docs).
+pub struct DecodePipeline {
+    entry: Arc<StageQueue<InFlight>>,
+    gate: Arc<DepthGate>,
+    threads: Vec<JoinHandle<()>>,
+    /// Bucket sizes the stage samplers serve, ascending.
+    pub buckets: Vec<usize>,
+    /// Flow blocks `K` (= number of stages in the graph).
+    pub blocks: usize,
+}
+
+/// Everything one stage-executor thread needs besides its backend factory.
+struct StageArgs {
+    idx: usize,
+    /// Decode positions `[lo, hi)` this stage runs.
+    span: (usize, usize),
+    model: String,
+    buckets: Vec<usize>,
+    rx: Arc<StageQueue<InFlight>>,
+    tx: Option<Arc<StageQueue<InFlight>>>,
+    gate: Arc<DepthGate>,
+    registry: Registry,
+    ready: std::sync::mpsc::Sender<Result<Vec<usize>>>,
+}
+
+impl DecodePipeline {
+    /// Spawn the stage-executor threads. `factory` runs inside each stage
+    /// thread (backends may be thread-pinned) and is also invoked once on
+    /// the calling thread to discover the model geometry; like
+    /// `Router::start_with`, every stage validates its backend + samplers
+    /// before this returns (fail-fast on bad artifacts).
+    pub fn start<B, F>(
+        model: &str,
+        buckets: &[usize],
+        cfg: PipelineConfig,
+        registry: Registry,
+        factory: F,
+    ) -> Result<Self>
+    where
+        B: Backend,
+        F: Fn(usize) -> Result<B> + Send + Clone + 'static,
+    {
+        // Geometry probe, dropped immediately — stage threads build their
+        // own thread-pinned backends. The spans and queues must be sized
+        // before any stage thread exists, so K cannot ride the readiness
+        // channel; the extra backend is cheap because `Engine` construction
+        // only parses the manifest (artifact compilation is lazy, and the
+        // probe never calls anything).
+        let blocks = factory(0)?.model_meta(model)?.blocks;
+        let n_threads = if cfg.stage_threads == 0 {
+            blocks
+        } else {
+            cfg.stage_threads.clamp(1, blocks)
+        };
+        // Contiguous, as-even-as-possible spans of decode positions — the
+        // same partition law the GS windows use.
+        let spans: Vec<(usize, usize)> = super::jacobi::window_partition(blocks, n_threads)
+            .into_iter()
+            .map(|(off, len)| (off, off + len))
+            .collect();
+        let queues: Vec<Arc<StageQueue<InFlight>>> =
+            spans.iter().map(|_| StageQueue::new(1)).collect();
+        let gate = DepthGate::new(cfg.depth);
+        let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<Vec<usize>>>();
+
+        let mut threads = Vec::with_capacity(spans.len());
+        for (idx, &span) in spans.iter().enumerate() {
+            let args = StageArgs {
+                idx,
+                span,
+                model: model.to_string(),
+                buckets: buckets.to_vec(),
+                rx: queues[idx].clone(),
+                tx: queues.get(idx + 1).cloned(),
+                gate: gate.clone(),
+                registry: registry.clone(),
+                ready: ready_tx.clone(),
+            };
+            let factory = factory.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("sjd-stage-{idx}"))
+                    .spawn(move || stage_main(args, factory))
+                    .expect("spawn stage thread"),
+            );
+        }
+        drop(ready_tx);
+        // Collect every stage's readiness before returning: on any failure,
+        // close the queues and join the healthy stages too, so a failed
+        // startup never leaves threads (each pinning a backend) blocked on
+        // queues nobody will feed.
+        let mut bucket_set = Vec::new();
+        let mut startup_err = None;
+        for _ in &spans {
+            match ready_rx.recv().expect("stage startup signal") {
+                Ok(buckets) => bucket_set = buckets,
+                Err(e) => startup_err = Some(e),
+            }
+        }
+        if let Some(e) = startup_err {
+            for q in &queues {
+                q.close();
+            }
+            for t in threads.drain(..) {
+                let _ = t.join();
+            }
+            return Err(e);
+        }
+        Ok(DecodePipeline { entry: queues[0].clone(), gate, threads, buckets: bucket_set, blocks })
+    }
+
+    /// Submit a batch, blocking while [`PipelineConfig::depth`] batches are
+    /// already in flight (backpressure toward the batcher queue). A
+    /// shut-down pipeline hands the job back so the caller can complete its
+    /// slots.
+    pub fn submit(&self, job: PipelineJob) -> std::result::Result<(), PipelineJob> {
+        self.gate.acquire();
+        let item = InFlight {
+            seed: job.seed,
+            n: job.n,
+            opts: job.opts,
+            done: job.done,
+            tokens: None,
+            traces: Vec::new(),
+            decode_wall: Duration::ZERO,
+            queued: Duration::ZERO,
+            started: None,
+            enqueued: Instant::now(),
+        };
+        match self.entry.send(item) {
+            Ok(()) => Ok(()),
+            Err(item) => {
+                self.gate.release();
+                Err(PipelineJob { seed: item.seed, n: item.n, opts: item.opts, done: item.done })
+            }
+        }
+    }
+
+    /// Batches currently in flight (submitted, not yet completed).
+    pub fn in_flight(&self) -> usize {
+        self.gate.current()
+    }
+
+    /// Close the entry queue, drain every in-flight batch to completion,
+    /// and join the stage threads.
+    pub fn shutdown(mut self) {
+        self.entry.close();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// One stage-executor thread: own backend + samplers, a contiguous span of
+/// decode positions, and the stage queue protocol.
+fn stage_main<B, F>(args: StageArgs, factory: F)
+where
+    B: Backend,
+    F: Fn(usize) -> Result<B>,
+{
+    let StageArgs { idx, span, model, buckets, rx, tx, gate, registry, ready } = args;
+    let engine = match factory(idx) {
+        Ok(e) => e,
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    let set = match SamplerSet::new(&engine, &model, &buckets) {
+        Ok(s) => s,
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    let _ = ready.send(Ok(set.buckets()));
+
+    let occupancy = registry.gauge(&format!("sjd_stage_{idx}_occupancy"));
+    let stage_wait = registry.histogram("sjd_stage_wait");
+
+    while let Some(mut item) = rx.recv() {
+        let waited = item.enqueued.elapsed();
+        stage_wait.record_duration(waited);
+        // Waits before stage 0 are ordinary queueing (not yet started);
+        // waits between stages are the pipelining cost `finish` subtracts.
+        if item.started.is_some() {
+            item.queued += waited;
+        }
+        occupancy.add(1);
+        let outcome = run_span(&set, span, &mut item);
+        occupancy.add(-1);
+        match outcome {
+            Err(msg) => {
+                // Fail the batch here; downstream stages never see it.
+                (item.done)(Err(msg));
+                gate.release();
+            }
+            Ok(()) => match &tx {
+                Some(tx) => {
+                    item.enqueued = Instant::now();
+                    if let Err(item) = tx.send(item) {
+                        // Downstream closed mid-shutdown: complete the batch
+                        // so its slots cannot hang, and free its slot.
+                        (item.done)(Err("pipeline shut down mid-decode".into()));
+                        gate.release();
+                    }
+                }
+                None => finish(&set, item, &gate),
+            },
+        }
+    }
+    // Cascade the close downstream so later stages drain and exit too.
+    if let Some(tx) = &tx {
+        tx.close();
+    }
+}
+
+/// Run one span of decode positions over one batch. Stage 0 draws the
+/// prior from the job's seeded stream; every span chains device-resident
+/// values internally and syncs to host once at its end (the cross-thread
+/// handoff contract).
+fn run_span<B: Backend>(
+    set: &SamplerSet<'_, B>,
+    (lo, hi): (usize, usize),
+    item: &mut InFlight,
+) -> std::result::Result<(), String> {
+    let sampler = set.select(item.n);
+    if lo == 0 {
+        item.started = Some(Instant::now());
+        let mut rng = Pcg64::seed_stream(item.seed, 1);
+        item.tokens = Some(sampler.sample_prior(&mut rng));
+    }
+    let mut z = Value::Host(item.tokens.take().expect("pipeline handoff carries tokens"));
+    for pos in lo..hi {
+        let (z_next, trace) = sampler
+            .decode_block_at(pos, &z, &item.opts)
+            .map_err(|e| format!("decode failed at position {pos}: {e:#}"))?;
+        item.decode_wall += trace.wall;
+        item.traces.push(trace);
+        z = z_next;
+    }
+    let host = sampler
+        .engine()
+        .to_host(z)
+        .map_err(|e| format!("stage handoff sync failed: {e:#}"))?;
+    item.tokens = Some(host);
+    Ok(())
+}
+
+/// Final-stage completion: assemble the [`SampleOutput`], unpatchify, and
+/// resolve the job.
+///
+/// `total_wall` is the true in-pipeline latency (stage-0 start →
+/// completion, inter-stage queue waits included — what the overlap bench's
+/// p99 gate measures); `other_wall` excludes those waits so it keeps its
+/// documented meaning (prior draw, permutations, handoff syncs).
+fn finish<B: Backend>(set: &SamplerSet<'_, B>, mut item: InFlight, gate: &Arc<DepthGate>) {
+    let sampler = set.select(item.n);
+    let tokens = item.tokens.take().expect("completed batch has tokens");
+    let total_wall = item.started.map(|s| s.elapsed()).unwrap_or_default();
+    let busy = total_wall.saturating_sub(item.queued);
+    let out = SampleOutput {
+        tokens,
+        traces: std::mem::take(&mut item.traces),
+        total_wall,
+        other_wall: busy.saturating_sub(item.decode_wall),
+    };
+    let done = item.done;
+    match sampler.unpatchify(&out.tokens) {
+        Ok(images) => done(Ok((images, out))),
+        Err(e) => done(Err(format!("unpatchify failed: {e:#}"))),
+    }
+    gate.release();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_plan_maps_positions_modes_and_permutations() {
+        let plan = stage_plan(&DecodePolicy::Selective { seq_blocks: 1 }, 4);
+        assert_eq!(plan.len(), 4);
+        // Position 0 decodes block K-1 = 3 (odd ⇒ reversed output).
+        assert_eq!(plan[0].position, 0);
+        assert_eq!(plan[0].block, 3);
+        assert_eq!(plan[0].mode, BlockDecode::Sequential);
+        assert!(plan[0].reversed);
+        assert_eq!(plan[1].block, 2);
+        assert_eq!(plan[1].mode, BlockDecode::Jacobi);
+        assert!(!plan[1].reversed);
+        assert_eq!(plan[3].position, 3);
+        assert_eq!(plan[3].block, 0);
+        assert!(!plan[3].reversed);
+    }
+
+    #[test]
+    fn stage_queue_bounds_and_closes() {
+        let q: Arc<StageQueue<u32>> = StageQueue::new(1);
+        assert!(q.send(1).is_ok());
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || q2.send(2));
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(!t.is_finished(), "send past capacity must block");
+        assert_eq!(q.recv(), Some(1));
+        assert!(t.join().unwrap().is_ok());
+        assert_eq!(q.recv(), Some(2));
+        q.close();
+        // A closed queue hands the item back instead of dropping it.
+        assert_eq!(q.send(3).unwrap_err(), 3);
+        assert_eq!(q.recv(), None);
+    }
+
+    #[test]
+    fn depth_gate_blocks_at_depth() {
+        let g = DepthGate::new(2);
+        g.acquire();
+        g.acquire();
+        assert_eq!(g.current(), 2);
+        let g2 = g.clone();
+        let t = std::thread::spawn(move || {
+            g2.acquire();
+            g2.release();
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(!t.is_finished(), "third acquire must block at depth 2");
+        g.release();
+        t.join().unwrap();
+        g.release();
+        assert_eq!(g.current(), 0);
+    }
+}

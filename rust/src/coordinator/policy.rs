@@ -15,6 +15,9 @@
 //! them back).
 
 use super::jacobi::JacobiStats;
+use super::sampler::SampleOutput;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
 
 /// Default window count for the `"gs"` policy shorthand.
 pub const DEFAULT_GS_WINDOWS: usize = 4;
@@ -50,7 +53,22 @@ pub enum BlockDecode {
 }
 
 impl BlockDecode {
-    fn to_json(self) -> crate::jsonx::Value {
+    /// Short human-readable form for mode tables (`sjd policy show`,
+    /// `/policy` endpoint): `sequential`, `jacobi`, `gs W=4`, `fuse S=3`,
+    /// `gs_fuse W=8 S=4`.
+    pub fn describe(&self) -> String {
+        match self {
+            BlockDecode::Sequential => "sequential".into(),
+            BlockDecode::Jacobi => "jacobi".into(),
+            BlockDecode::GsJacobi { windows } => format!("gs W={windows}"),
+            BlockDecode::Fused { chunk } => format!("fuse S={chunk}"),
+            BlockDecode::GsFused { windows, chunk } => format!("gs_fuse W={windows} S={chunk}"),
+        }
+    }
+
+    /// Serialize one block mode (the per-mode half of the policy-JSON
+    /// format `sjd calibrate` writes and the tuner snapshot reuses).
+    pub fn to_json(self) -> crate::jsonx::Value {
         use crate::jsonx::Value;
         match self {
             BlockDecode::Sequential => Value::obj(vec![("mode", Value::str("sequential"))]),
@@ -71,7 +89,8 @@ impl BlockDecode {
         }
     }
 
-    fn from_json(v: &crate::jsonx::Value) -> anyhow::Result<Self> {
+    /// Inverse of [`BlockDecode::to_json`].
+    pub fn from_json(v: &crate::jsonx::Value) -> anyhow::Result<Self> {
         match v.req_str("mode")? {
             "sequential" => Ok(BlockDecode::Sequential),
             "jacobi" => Ok(BlockDecode::Jacobi),
@@ -237,10 +256,14 @@ pub fn calibrate(
     DecodePolicy::Custom { jacobi_mask: mask }
 }
 
-/// Window-aware calibration: learn a per-block [`BlockDecode`] — including
-/// GS-Jacobi window counts — from full-sequence Jacobi iteration traces.
+/// The shared window/chunk law: the [`BlockDecode`] a block whose
+/// full-sequence Jacobi decode converges in `iters` iterations should use.
 ///
-/// The window-count heuristic follows the GS-Jacobi cost model: a window of
+/// One formula serves both the offline calibrators below and the online
+/// [`PolicyTuner`], so "converges to the calibrated answer" is a statement
+/// about iteration *estimates*, never about two drifting heuristics.
+///
+/// The window-count half follows the GS-Jacobi cost model: a window of
 /// length `len` converges in ≈ `min(t, len)` iterations, where `t` is the
 /// block's measured full-sequence iteration count. A *hard* block
 /// (`t ≈ L`, sequential-like coupling) costs `L²` position-updates under
@@ -249,6 +272,35 @@ pub fn calibrate(
 /// add per-call overhead — one window (plain Jacobi) is best. Interpolating,
 /// the learned count is `round(t/L · max_windows)`, clamped to
 /// `[1, max_windows]`.
+///
+/// With `fused_s_max = Some(S)` the mode routes through the fused multi-step
+/// artifacts and the chunk half applies: the first-chunk seed is the
+/// measured iteration count (`t` full-sequence, `⌈t/W⌉` per window), clamped
+/// to the lowered history length `S` — a calibrated block then decodes in a
+/// single chunk, one host sync.
+pub fn mode_for_iters(
+    iters: usize,
+    seq_len: usize,
+    max_windows: usize,
+    fused_s_max: Option<usize>,
+) -> BlockDecode {
+    assert!(seq_len > 0 && max_windows > 0);
+    let iters = iters.max(1);
+    let ratio = iters as f64 / seq_len as f64;
+    let windows = ((ratio * max_windows as f64).round() as usize).clamp(1, max_windows);
+    match (windows, fused_s_max) {
+        (1, None) => BlockDecode::Jacobi,
+        (1, Some(s)) => BlockDecode::Fused { chunk: iters.clamp(1, s) },
+        (w, None) => BlockDecode::GsJacobi { windows: w },
+        (w, Some(s)) => {
+            BlockDecode::GsFused { windows: w, chunk: iters.div_ceil(w).clamp(1, s) }
+        }
+    }
+}
+
+/// Window-aware calibration: learn a per-block [`BlockDecode`] — including
+/// GS-Jacobi window counts — from full-sequence Jacobi iteration traces,
+/// through the shared [`mode_for_iters`] law.
 ///
 /// Blocks whose Jacobi decode failed to converge within the cap, or measured
 /// slower than their sequential pass, stay sequential (the conservative
@@ -260,21 +312,14 @@ pub fn calibrate_windows(
     max_windows: usize,
 ) -> DecodePolicy {
     assert_eq!(jacobi.len(), seq_wall.len());
-    assert!(seq_len > 0 && max_windows > 0);
     let modes = jacobi
         .iter()
         .zip(seq_wall)
         .map(|(j, s)| {
             if !j.converged || j.wall >= *s {
-                return BlockDecode::Sequential;
-            }
-            let ratio = j.iterations as f64 / seq_len as f64;
-            let windows =
-                ((ratio * max_windows as f64).round() as usize).clamp(1, max_windows);
-            if windows == 1 {
-                BlockDecode::Jacobi
+                BlockDecode::Sequential
             } else {
-                BlockDecode::GsJacobi { windows }
+                mode_for_iters(j.iterations, seq_len, max_windows, None)
             }
         })
         .collect();
@@ -284,7 +329,7 @@ pub fn calibrate_windows(
 /// Chunk-aware calibration (`sjd calibrate --chunks`): the per-block modes
 /// of [`calibrate_windows`], routed through the **fused multi-step**
 /// artifacts with per-block chunk schedules learned from the same iteration
-/// traces.
+/// traces — [`mode_for_iters`] with the fused history cap supplied.
 ///
 /// The first-chunk seed is the point of calibration: a block measured to
 /// converge in `t` iterations gets `chunk = t` (full-sequence fused decode
@@ -303,23 +348,16 @@ pub fn calibrate_chunks(
     s_max: usize,
 ) -> DecodePolicy {
     assert!(s_max > 0);
-    let DecodePolicy::PerBlock { modes } =
-        calibrate_windows(jacobi, seq_wall, seq_len, max_windows)
-    else {
-        unreachable!("calibrate_windows returns PerBlock");
-    };
-    let modes = modes
-        .into_iter()
-        .zip(jacobi)
-        .map(|(m, j)| match m {
-            BlockDecode::Jacobi => {
-                BlockDecode::Fused { chunk: j.iterations.clamp(1, s_max) }
+    assert_eq!(jacobi.len(), seq_wall.len());
+    let modes = jacobi
+        .iter()
+        .zip(seq_wall)
+        .map(|(j, s)| {
+            if !j.converged || j.wall >= *s {
+                BlockDecode::Sequential
+            } else {
+                mode_for_iters(j.iterations, seq_len, max_windows, Some(s_max))
             }
-            BlockDecode::GsJacobi { windows } => BlockDecode::GsFused {
-                windows,
-                chunk: j.iterations.div_ceil(windows).clamp(1, s_max),
-            },
-            other => other,
         })
         .collect();
     DecodePolicy::PerBlock { modes }
@@ -397,6 +435,267 @@ impl DecodePolicy {
             return Self::from_json(&crate::jsonx::parse(&text)?);
         }
         Self::parse(s).ok_or_else(|| anyhow::anyhow!("bad policy '{s}'"))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Online policy autotuner
+// ---------------------------------------------------------------------------
+
+/// Knobs of the online [`PolicyTuner`].
+#[derive(Clone, Debug)]
+pub struct TunerConfig {
+    /// EWMA weight of the newest iteration observation (0 < α ≤ 1).
+    pub alpha: f64,
+    /// Window-count ceiling, like `sjd calibrate --windows`.
+    pub max_windows: usize,
+    /// Fused-artifact history length `S` — caps learned chunk sizes and
+    /// sizes the full-sequence probe mode.
+    pub s_max: usize,
+    /// Full-sequence observations required per (bucket, block) before the
+    /// tuner leaves the bootstrap policy for that block.
+    pub min_obs: usize,
+    /// Probe cadence: every `probe_every`-th decode of a tuned block runs in
+    /// the full-sequence measuring mode to refresh its estimate (0 disables
+    /// re-probing; blocks tuned into full-sequence modes measure for free on
+    /// every decode regardless).
+    pub probe_every: usize,
+    /// Hysteresis dwell: a newly derived mode must recur on this many
+    /// consecutive measurements before it replaces the applied mode, so
+    /// boundary-straddling iteration estimates cannot flap the policy.
+    pub dwell: usize,
+}
+
+impl Default for TunerConfig {
+    fn default() -> Self {
+        TunerConfig {
+            alpha: 0.25,
+            max_windows: 8,
+            s_max: DEFAULT_FUSE_CHUNK,
+            min_obs: 3,
+            probe_every: 16,
+            dwell: 3,
+        }
+    }
+}
+
+/// Per-(bucket, block) tuner state.
+#[derive(Clone, Debug, Default)]
+struct TunerCell {
+    /// EWMA of measured full-sequence Jacobi iteration counts.
+    ewma_iters: Option<f64>,
+    /// Full-sequence observations folded into the EWMA.
+    obs: usize,
+    /// Decodes routed through this cell (probe-cadence clock).
+    decodes: usize,
+    /// Currently applied mode; `None` while still bootstrapping.
+    mode: Option<BlockDecode>,
+    /// Hysteresis state: a candidate mode and how many consecutive
+    /// measurements have derived it.
+    candidate: Option<(BlockDecode, usize)>,
+}
+
+/// Online policy autotuner (`sjd serve --tune`): closes the calibration loop
+/// from live traffic instead of an offline `sjd calibrate` run.
+///
+/// Every decode already produces per-block iteration/residual/host-sync
+/// stats ([`SampleOutput`] traces); the tuner folds them into EWMA iteration
+/// estimates per **(bucket, block)** — convergence behavior genuinely varies
+/// with the batch size, so buckets tune independently — and derives each
+/// block's mode through the same [`mode_for_iters`] law the offline
+/// calibrators use. Mode changes apply under hysteresis
+/// ([`TunerConfig::dwell`]) so noisy boundary estimates cannot flap the
+/// policy, and the derived modes stay inside the documented degradation
+/// chain (`gs_fuse → gs → jacobi`, `fuse → jacobi`): the tuner always emits
+/// the fused variants and the `Sampler` degrades them wherever the artifacts
+/// are missing.
+///
+/// **Measurement.** Only *full-sequence* Jacobi-family traces measure a
+/// block's dependency redundancy `t` (windowed GS iterations are per-window
+/// quantities). Blocks tuned into full-sequence modes (`jacobi`/`fuse`)
+/// therefore measure for free on every decode; blocks tuned into windowed
+/// modes are re-measured by routing every [`TunerConfig::probe_every`]-th
+/// decode through the full-sequence probe mode (`fuse` with a maximal
+/// chunk — `⌈t/S⌉` host syncs, the cheapest exact measurement available).
+/// A probe that fails to converge within the Prop 3.2 cap derives
+/// `Sequential`, mirroring the offline calibrators' conservative choice.
+///
+/// Blocks the bootstrap policy pins `Sequential` (e.g. the paper's
+/// dependency-heavy first decode position under the default `selective`) are
+/// never tuned — SeJD's "where to use Jacobi" law stays an operator
+/// decision; the tuner optimizes *how* the Jacobi-family blocks decode.
+///
+/// Shared across router workers behind an `Arc`; all state sits behind one
+/// mutex (two short critical sections per decoded batch).
+#[derive(Debug)]
+pub struct PolicyTuner {
+    cfg: TunerConfig,
+    blocks: usize,
+    seq_len: usize,
+    bootstrap: DecodePolicy,
+    cells: Mutex<BTreeMap<usize, Vec<TunerCell>>>,
+}
+
+impl PolicyTuner {
+    pub fn new(blocks: usize, seq_len: usize, bootstrap: DecodePolicy, cfg: TunerConfig) -> Self {
+        assert!(blocks > 0 && seq_len > 0);
+        assert!(cfg.alpha > 0.0 && cfg.alpha <= 1.0);
+        assert!(cfg.max_windows > 0 && cfg.s_max > 0 && cfg.min_obs > 0 && cfg.dwell > 0);
+        PolicyTuner { cfg, blocks, seq_len, bootstrap, cells: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// The full-sequence measuring mode: fused chunked UJD sized to the
+    /// device history, degrading to plain per-iteration Jacobi where the
+    /// fused artifact is absent — either way the trace reports the exact
+    /// τ-stopped iteration count the calibration law needs.
+    fn probe_mode(&self) -> BlockDecode {
+        BlockDecode::Fused { chunk: self.cfg.s_max }
+    }
+
+    fn bootstrap_mode(&self, pos: usize) -> BlockDecode {
+        self.bootstrap.block_mode(pos, self.blocks)
+    }
+
+    fn fresh_cells(&self) -> Vec<TunerCell> {
+        vec![TunerCell::default(); self.blocks]
+    }
+
+    /// The policy the next decode of `bucket` should run — the router calls
+    /// this before every batch. Advances the probe clock: bootstrapping or
+    /// probe-due blocks come back in the measuring mode.
+    pub fn policy_for(&self, bucket: usize) -> DecodePolicy {
+        let mut map = self.cells.lock().unwrap();
+        let cells = map.entry(bucket).or_insert_with(|| self.fresh_cells());
+        let modes = (0..self.blocks)
+            .map(|pos| {
+                if self.bootstrap_mode(pos) == BlockDecode::Sequential {
+                    return BlockDecode::Sequential;
+                }
+                let cell = &mut cells[pos];
+                cell.decodes += 1;
+                let probe_due = cell.obs < self.cfg.min_obs
+                    || (self.cfg.probe_every > 0 && cell.decodes % self.cfg.probe_every == 0);
+                match (cell.mode, probe_due) {
+                    (Some(mode), false) => mode,
+                    _ => self.probe_mode(),
+                }
+            })
+            .collect();
+        DecodePolicy::PerBlock { modes }
+    }
+
+    /// Fold one decode's traces into the estimates — the router calls this
+    /// with every [`SampleOutput`]. Only full-sequence Jacobi-family traces
+    /// carry usable measurements (see the type docs); everything else is
+    /// skipped, so feeding every decode unconditionally is correct.
+    pub fn observe(&self, bucket: usize, out: &SampleOutput) {
+        let mut map = self.cells.lock().unwrap();
+        let cells = map.entry(bucket).or_insert_with(|| self.fresh_cells());
+        for trace in &out.traces {
+            let pos = trace.position;
+            if pos >= cells.len() || self.bootstrap_mode(pos) == BlockDecode::Sequential {
+                continue;
+            }
+            // Full-sequence measurement: plain or fused Jacobi (GS traces
+            // report per-window iterations, not the block's t).
+            let Some(stats) = &trace.jacobi else { continue };
+            let cell = &mut cells[pos];
+            let t = stats.iterations.max(1) as f64;
+            let ewma = match cell.ewma_iters {
+                None => t,
+                Some(prev) => self.cfg.alpha * t + (1.0 - self.cfg.alpha) * prev,
+            };
+            cell.ewma_iters = Some(ewma);
+            cell.obs += 1;
+            if cell.obs < self.cfg.min_obs {
+                continue;
+            }
+            let derived = if stats.converged {
+                mode_for_iters(
+                    ewma.round() as usize,
+                    self.seq_len,
+                    self.cfg.max_windows,
+                    Some(self.cfg.s_max),
+                )
+            } else {
+                BlockDecode::Sequential
+            };
+            match cell.mode {
+                // First derivation leaves the bootstrap directly.
+                None => cell.mode = Some(derived),
+                Some(applied) if applied == derived => cell.candidate = None,
+                Some(_) => {
+                    let count = match cell.candidate.take() {
+                        Some((m, c)) if m == derived => c + 1,
+                        _ => 1,
+                    };
+                    if count >= self.cfg.dwell {
+                        cell.mode = Some(derived);
+                    } else {
+                        cell.candidate = Some((derived, count));
+                    }
+                }
+            }
+        }
+    }
+
+    /// The effective per-block policy for one bucket (applied modes, with
+    /// still-bootstrapping blocks at their bootstrap mode); `None` if the
+    /// bucket has never decoded.
+    pub fn snapshot(&self, bucket: usize) -> Option<DecodePolicy> {
+        let map = self.cells.lock().unwrap();
+        let cells = map.get(&bucket)?;
+        let modes = (0..self.blocks)
+            .map(|pos| cells[pos].mode.unwrap_or_else(|| self.bootstrap_mode(pos)))
+            .collect();
+        Some(DecodePolicy::PerBlock { modes })
+    }
+
+    /// The most-observed bucket and its snapshot — what `serve --tune`
+    /// persists to the policy-JSON format on shutdown.
+    pub fn snapshot_best(&self) -> Option<(usize, DecodePolicy)> {
+        let bucket = {
+            let map = self.cells.lock().unwrap();
+            map.iter()
+                .max_by_key(|(_, cells)| cells.iter().map(|c| c.obs).sum::<usize>())
+                .map(|(&b, _)| b)?
+        };
+        Some((bucket, self.snapshot(bucket)?))
+    }
+
+    /// Full live state as JSON — the `/policy` endpoint body.
+    pub fn to_json(&self) -> crate::jsonx::Value {
+        use crate::jsonx::Value;
+        let map = self.cells.lock().unwrap();
+        let buckets: BTreeMap<String, Value> = map
+            .iter()
+            .map(|(bucket, cells)| {
+                let rows = cells
+                    .iter()
+                    .enumerate()
+                    .map(|(pos, c)| {
+                        let mode = c.mode.unwrap_or_else(|| self.bootstrap_mode(pos));
+                        Value::obj(vec![
+                            ("position", Value::num(pos as f64)),
+                            ("block", Value::num((self.blocks - 1 - pos) as f64)),
+                            ("mode", mode.to_json()),
+                            ("tuned", Value::Bool(c.mode.is_some())),
+                            ("ewma_iters", c.ewma_iters.map_or(Value::Null, Value::num)),
+                            ("observations", Value::num(c.obs as f64)),
+                            ("decodes", Value::num(c.decodes as f64)),
+                        ])
+                    })
+                    .collect();
+                (bucket.to_string(), Value::Arr(rows))
+            })
+            .collect();
+        Value::obj(vec![
+            ("source", Value::str("tuner")),
+            ("blocks", Value::num(self.blocks as f64)),
+            ("seq_len", Value::num(self.seq_len as f64)),
+            ("bootstrap", self.bootstrap.to_json()),
+            ("buckets", Value::Obj(buckets)),
+        ])
     }
 }
 
@@ -685,5 +984,277 @@ mod tests {
         assert_eq!(DecodePolicy::Sequential.label(), "Sequential");
         assert_eq!(DecodePolicy::Selective { seq_blocks: 1 }.label(), "SJD");
         assert_eq!(DecodePolicy::UniformJacobi.label(), "UJD");
+    }
+
+    #[test]
+    fn mode_for_iters_shared_law() {
+        assert_eq!(mode_for_iters(1, 64, 8, None), BlockDecode::Jacobi);
+        assert_eq!(mode_for_iters(4, 64, 8, None), BlockDecode::Jacobi); // 0.5 rounds up to W=1
+        assert_eq!(mode_for_iters(32, 64, 8, None), BlockDecode::GsJacobi { windows: 4 });
+        assert_eq!(mode_for_iters(60, 64, 8, None), BlockDecode::GsJacobi { windows: 8 });
+        assert_eq!(mode_for_iters(4, 64, 8, Some(8)), BlockDecode::Fused { chunk: 4 });
+        assert_eq!(
+            mode_for_iters(60, 64, 8, Some(8)),
+            BlockDecode::GsFused { windows: 8, chunk: 8 }
+        );
+        // s_max caps the chunk; 0 iterations clamp to 1.
+        assert_eq!(mode_for_iters(6, 64, 8, Some(2)), BlockDecode::Fused { chunk: 2 });
+        assert_eq!(mode_for_iters(0, 64, 8, None), BlockDecode::Jacobi);
+    }
+
+    /// Property-style sweep (satellite contract): pseudo-random policies —
+    /// every variant, nested `PerBlock` fused modes included — round-trip
+    /// through JSON, have total non-empty labels, and (where a CLI spelling
+    /// exists) round-trip through `parse`; malformed strings are rejected.
+    #[test]
+    fn property_random_policies_roundtrip_json_parse_and_label() {
+        use crate::tensor::Pcg64;
+
+        fn rand_mode(rng: &mut Pcg64) -> BlockDecode {
+            match rng.next_below(5) {
+                0 => BlockDecode::Sequential,
+                1 => BlockDecode::Jacobi,
+                2 => BlockDecode::GsJacobi { windows: 1 + rng.next_below(16) },
+                3 => BlockDecode::Fused { chunk: 1 + rng.next_below(8) },
+                _ => BlockDecode::GsFused {
+                    windows: 1 + rng.next_below(16),
+                    chunk: 1 + rng.next_below(8),
+                },
+            }
+        }
+
+        let mut rng = Pcg64::seed(0xA11CE);
+        for case in 0..300 {
+            let p = match rng.next_below(7) {
+                0 => DecodePolicy::Sequential,
+                1 => DecodePolicy::UniformJacobi,
+                2 => DecodePolicy::Selective { seq_blocks: rng.next_below(9) },
+                3 => DecodePolicy::GsJacobi { windows: 1 + rng.next_below(32) },
+                4 => DecodePolicy::Fused { chunk: 1 + rng.next_below(8) },
+                5 => DecodePolicy::Custom {
+                    jacobi_mask: (0..rng.next_below(9)).map(|_| rng.next_below(2) == 1).collect(),
+                },
+                _ => DecodePolicy::PerBlock {
+                    modes: (0..1 + rng.next_below(9)).map(|_| rand_mode(&mut rng)).collect(),
+                },
+            };
+            assert_eq!(
+                DecodePolicy::from_json(&p.to_json()).unwrap(),
+                p,
+                "JSON round-trip, case {case}"
+            );
+            assert!(!p.label().is_empty(), "label must be total, case {case}");
+            let spelling = match &p {
+                DecodePolicy::Sequential => Some("sequential".to_string()),
+                DecodePolicy::UniformJacobi => Some("ujd".into()),
+                DecodePolicy::Selective { seq_blocks } => Some(format!("selective:{seq_blocks}")),
+                DecodePolicy::GsJacobi { windows } => Some(format!("gs:{windows}")),
+                DecodePolicy::Fused { chunk } => Some(format!("fuse:{chunk}")),
+                _ => None, // calibrated policies have no CLI spelling (JSON only)
+            };
+            if let Some(s) = spelling {
+                assert_eq!(DecodePolicy::parse(&s), Some(p.clone()), "parse('{s}')");
+            }
+        }
+        for bad in ["gs:4x", "fuse:8 ", "per_block", "selective::2", "gs::", "jacobi:2"] {
+            assert_eq!(DecodePolicy::parse(bad), None, "'{bad}' must be rejected");
+        }
+    }
+
+    #[test]
+    fn block_decode_describe() {
+        assert_eq!(BlockDecode::Sequential.describe(), "sequential");
+        assert_eq!(BlockDecode::Jacobi.describe(), "jacobi");
+        assert_eq!(BlockDecode::GsJacobi { windows: 4 }.describe(), "gs W=4");
+        assert_eq!(BlockDecode::Fused { chunk: 3 }.describe(), "fuse S=3");
+        assert_eq!(
+            BlockDecode::GsFused { windows: 8, chunk: 4 }.describe(),
+            "gs_fuse W=8 S=4"
+        );
+    }
+
+    // -- PolicyTuner ---------------------------------------------------------
+
+    use super::super::sampler::BlockTrace;
+    use crate::runtime::HostTensor;
+
+    /// One synthetic decode output: full-sequence Jacobi traces with the
+    /// given per-position iteration counts (L = 8 to match the mock flow).
+    fn mk_output(iters_per_pos: &[usize], converged: bool) -> SampleOutput {
+        let blocks = iters_per_pos.len();
+        let traces = iters_per_pos
+            .iter()
+            .enumerate()
+            .map(|(pos, &it)| BlockTrace {
+                block: blocks - 1 - pos,
+                position: pos,
+                used_jacobi: true,
+                steps: it,
+                position_updates: it * 8,
+                host_syncs: it,
+                wall: Duration::from_millis(1),
+                jacobi: Some(JacobiStats {
+                    block: blocks - 1 - pos,
+                    iterations: it,
+                    wall: Duration::from_millis(1),
+                    residuals: vec![],
+                    converged,
+                    host_syncs: it,
+                }),
+                gs: None,
+            })
+            .collect();
+        SampleOutput {
+            tokens: HostTensor::f32(&[1], vec![0.0]),
+            traces,
+            total_wall: Duration::ZERO,
+            other_wall: Duration::ZERO,
+        }
+    }
+
+    fn tuner_cfg() -> TunerConfig {
+        TunerConfig {
+            alpha: 0.5,
+            max_windows: 8,
+            s_max: 4,
+            min_obs: 2,
+            probe_every: 0,
+            dwell: 2,
+        }
+    }
+
+    #[test]
+    fn tuner_bootstraps_probes_then_applies_the_calibration_law() {
+        let t = PolicyTuner::new(4, 8, DecodePolicy::Selective { seq_blocks: 1 }, tuner_cfg());
+        // Before any observation: pinned-sequential position 0, probe mode
+        // (full-sequence fused measurement) everywhere else.
+        let p = t.policy_for(2);
+        assert_eq!(p.block_mode(0, 4), BlockDecode::Sequential);
+        for pos in 1..4 {
+            assert_eq!(p.block_mode(pos, 4), BlockDecode::Fused { chunk: 4 });
+        }
+        // Stable traffic: pos 1 converges in 2 iters, pos 2 in 6, pos 3 in 3.
+        for _ in 0..4 {
+            let _ = t.policy_for(2);
+            t.observe(2, &mk_output(&[8, 2, 6, 3], true));
+        }
+        let DecodePolicy::PerBlock { modes } = t.snapshot(2).unwrap() else { unreachable!() };
+        // L = 8, W_max = 8 ⇒ windows = t; chunk = ⌈t/W⌉ = 1 — exactly
+        // mode_for_iters, the law calibrate_chunks uses offline.
+        assert_eq!(
+            modes,
+            vec![
+                BlockDecode::Sequential, // bootstrap-pinned, never tuned
+                BlockDecode::GsFused { windows: 2, chunk: 1 },
+                BlockDecode::GsFused { windows: 6, chunk: 1 },
+                BlockDecode::GsFused { windows: 3, chunk: 1 },
+            ]
+        );
+        // Tuned policy now routes decodes (probing disabled in this config).
+        let p = t.policy_for(2);
+        assert_eq!(p.block_mode(1, 4), BlockDecode::GsFused { windows: 2, chunk: 1 });
+        // Buckets tune independently: a fresh bucket is still bootstrapping.
+        assert_eq!(t.policy_for(8).block_mode(1, 4), BlockDecode::Fused { chunk: 4 });
+    }
+
+    #[test]
+    fn tuner_probe_cadence_remeasure_tuned_blocks() {
+        let cfg = TunerConfig { min_obs: 1, dwell: 1, probe_every: 4, ..tuner_cfg() };
+        let t = PolicyTuner::new(2, 8, DecodePolicy::UniformJacobi, cfg);
+        let _ = t.policy_for(1); // decodes = 1 (bootstrap probe)
+        t.observe(1, &mk_output(&[6, 6], true));
+        let tuned = BlockDecode::GsFused { windows: 6, chunk: 1 };
+        // decodes 2, 3 → tuned; decode 4 → probe; 5..=7 tuned; 8 → probe.
+        let mut saw = Vec::new();
+        for _ in 0..7 {
+            saw.push(t.policy_for(1).block_mode(0, 2));
+        }
+        assert_eq!(
+            saw,
+            vec![
+                tuned,
+                tuned,
+                BlockDecode::Fused { chunk: 4 },
+                tuned,
+                tuned,
+                tuned,
+                BlockDecode::Fused { chunk: 4 },
+            ]
+        );
+    }
+
+    #[test]
+    fn tuner_hysteresis_requires_dwell_consecutive_derivations() {
+        let cfg = TunerConfig { alpha: 1.0, min_obs: 1, dwell: 3, ..tuner_cfg() };
+        let t = PolicyTuner::new(1, 8, DecodePolicy::UniformJacobi, cfg);
+        t.observe(4, &mk_output(&[2], true));
+        let first = BlockDecode::GsFused { windows: 2, chunk: 1 };
+        assert_eq!(t.snapshot(4).unwrap().block_mode(0, 1), first);
+        // A changed regime (t = 8) must persist for `dwell` measurements
+        // before the applied mode moves.
+        t.observe(4, &mk_output(&[8], true));
+        assert_eq!(t.snapshot(4).unwrap().block_mode(0, 1), first);
+        t.observe(4, &mk_output(&[8], true));
+        assert_eq!(t.snapshot(4).unwrap().block_mode(0, 1), first);
+        t.observe(4, &mk_output(&[8], true));
+        assert_eq!(
+            t.snapshot(4).unwrap().block_mode(0, 1),
+            BlockDecode::GsFused { windows: 8, chunk: 1 }
+        );
+        // A single flicker back does not flap the policy …
+        t.observe(4, &mk_output(&[2], true));
+        assert_eq!(
+            t.snapshot(4).unwrap().block_mode(0, 1),
+            BlockDecode::GsFused { windows: 8, chunk: 1 }
+        );
+        // … and an interrupted candidate streak starts counting over.
+        t.observe(4, &mk_output(&[8], true));
+        t.observe(4, &mk_output(&[2], true));
+        t.observe(4, &mk_output(&[2], true));
+        t.observe(4, &mk_output(&[2], true));
+        assert_eq!(t.snapshot(4).unwrap().block_mode(0, 1), first);
+    }
+
+    #[test]
+    fn tuner_nonconverged_probes_derive_sequential() {
+        let cfg = TunerConfig { min_obs: 1, dwell: 1, ..tuner_cfg() };
+        let t = PolicyTuner::new(1, 8, DecodePolicy::UniformJacobi, cfg);
+        t.observe(2, &mk_output(&[8], false));
+        assert_eq!(t.snapshot(2).unwrap().block_mode(0, 1), BlockDecode::Sequential);
+    }
+
+    #[test]
+    fn tuner_ignores_windowed_and_sequential_traces() {
+        let t = PolicyTuner::new(2, 8, DecodePolicy::UniformJacobi, tuner_cfg());
+        let mut out = mk_output(&[4, 4], true);
+        out.traces[0].jacobi = None; // e.g. a GS trace: no full-sequence stats
+        out.traces[1].used_jacobi = false;
+        out.traces[1].jacobi = None;
+        t.observe(2, &out);
+        // Nothing measurable arrived: still bootstrapping (probe mode).
+        assert_eq!(t.policy_for(2).block_mode(0, 2), BlockDecode::Fused { chunk: 4 });
+        assert_eq!(t.snapshot(2).unwrap().block_mode(0, 2), BlockDecode::Jacobi);
+    }
+
+    #[test]
+    fn tuner_snapshot_best_and_json() {
+        let cfg = TunerConfig { min_obs: 1, dwell: 1, ..tuner_cfg() };
+        let t = PolicyTuner::new(2, 8, DecodePolicy::UniformJacobi, cfg);
+        t.observe(2, &mk_output(&[3, 5], true));
+        t.observe(4, &mk_output(&[3, 5], true));
+        t.observe(4, &mk_output(&[3, 5], true));
+        let (bucket, policy) = t.snapshot_best().unwrap();
+        assert_eq!(bucket, 4, "most-observed bucket wins");
+        // The snapshot is the existing policy-JSON format — it loads back.
+        assert_eq!(DecodePolicy::from_json(&policy.to_json()).unwrap(), policy);
+        let j = t.to_json();
+        assert_eq!(j.req_str("source").unwrap(), "tuner");
+        assert_eq!(j.req_usize("blocks").unwrap(), 2);
+        let buckets = j.get("buckets").and_then(crate::jsonx::Value::as_obj).unwrap();
+        assert_eq!(buckets.len(), 2);
+        let rows = buckets.get("4").and_then(crate::jsonx::Value::as_arr).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].req_usize("observations").unwrap(), 2);
+        assert!(rows[0].get("ewma_iters").and_then(crate::jsonx::Value::as_f64).is_some());
     }
 }

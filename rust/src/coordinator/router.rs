@@ -13,29 +13,52 @@
 //! per-bucket `sjd_bucket_{B}_batches` counters — the load bench and the
 //! serving tests assert on both.
 //!
+//! ## Multi-in-flight scheduling (`RouterConfig::pipeline_depth`)
+//!
+//! At depth ≤ 1 a worker is the classic monolithic loop: pull a batch,
+//! decode it end to end, complete its slots, repeat — one batch in flight
+//! per worker. At depth ≥ 2 the worker becomes a **feeder** over a
+//! `coordinator::pipeline::DecodePipeline`: it keeps pulling batches while
+//! earlier ones are still mid-decode, so batch B occupies stage 0 while
+//! batch A is in stage 1 (block-level pipelining; the pipeline's depth gate
+//! backpressures the feeder, which backpressures the batcher queue). Slot
+//! completion then happens on the pipeline's final-stage thread via the
+//! job's completion callback. Output bits are identical either way.
+//!
+//! ## Online tuning (`RouterConfig::tuner`)
+//!
+//! With a [`PolicyTuner`] attached (`serve --tune`), every batch decodes
+//! under `tuner.policy_for(bucket)` instead of the static configured
+//! policy, and every decode's per-block traces feed `tuner.observe` — the
+//! measurement the decode already produced, so closing the calibration
+//! loop costs nothing extra on the hot path.
+//!
 //! ## Metrics
 //!
 //! Per batch: `sjd_batch_fill` (real slots), `sjd_decode_time`,
 //! `sjd_batches_processed`, `sjd_bucket_{B}_batches`, `sjd_padded_slots`.
-//! Per slot: `sjd_queue_wait` (submit → decode start) and
-//! `sjd_request_latency` (submit → image ready). `sjd_encode_time` is
-//! recorded by the HTTP layer's encode jobs (see `coordinator::server`).
-//! Per decoded block: `sjd_block_iters` (decode steps) and
-//! `sjd_host_syncs` (blocking host syncs, see `BlockTrace::host_syncs`) —
-//! together they expose per-request convergence behavior and how well the
-//! fused chunked decode is amortizing its τ-test round-trips
-//! (`⌈iters/S⌉` syncs when the fused artifacts are live, `iters` on the
-//! per-iteration fallback).
+//! Per slot: `sjd_queue_wait` (submit → decode start; submit → pipeline
+//! entry at depth ≥ 2) and `sjd_request_latency` (submit → image ready).
+//! `sjd_encode_time` is recorded by the HTTP layer's encode jobs (see
+//! `coordinator::server`). Per decoded block: `sjd_block_iters` (decode
+//! steps) and `sjd_host_syncs` (blocking host syncs, see
+//! `BlockTrace::host_syncs`) — together they expose per-request convergence
+//! behavior and how well the fused chunked decode is amortizing its τ-test
+//! round-trips. The pipelined path adds `sjd_stage_{t}_occupancy` and
+//! `sjd_stage_wait` (see `coordinator::pipeline`).
 
-use super::batcher::Batcher;
+use super::batcher::{Batcher, Slot};
+use super::pipeline::{DecodePipeline, PipelineConfig, PipelineJob, PipelineResult};
+use super::policy::PolicyTuner;
 use super::sampler::{SampleOptions, SamplerSet};
-use crate::metrics::Registry;
+use crate::metrics::{Counter, Gauge, Histogram, Registry};
 use crate::runtime::{Backend, Engine, Manifest};
 use crate::tensor::Pcg64;
 use anyhow::Result;
 use std::path::PathBuf;
+use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Router configuration.
 #[derive(Clone, Debug)]
@@ -49,6 +72,17 @@ pub struct RouterConfig {
     pub buckets: Vec<usize>,
     pub workers: usize,
     pub options: SampleOptions,
+    /// Batches each worker keeps in flight: ≤ 1 = monolithic single-batch
+    /// decode (one engine per worker); ≥ 2 = stage-graph pipelining with
+    /// this depth (one engine per *stage* thread — see the module docs).
+    pub pipeline_depth: usize,
+    /// Stage-executor threads per pipelined worker (0 = one per flow
+    /// block, the maximum overlap; fewer threads bound the per-worker
+    /// engine count at the cost of coarser overlap). Ignored at depth ≤ 1.
+    pub stage_threads: usize,
+    /// Online policy autotuner shared by every worker (`serve --tune`);
+    /// `None` serves the static `options.policy`.
+    pub tuner: Option<Arc<PolicyTuner>>,
 }
 
 /// Running worker fleet.
@@ -91,16 +125,24 @@ impl Router {
         let mut workers = Vec::with_capacity(cfg.workers);
         let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<()>>();
 
+        let pipelined = cfg.pipeline_depth >= 2;
         for widx in 0..cfg.workers.max(1) {
             let cfg = cfg.clone();
             let batcher = batcher.clone();
             let registry = registry.clone();
             let ready = ready_tx.clone();
             let factory = factory.clone();
+            let body = move || {
+                if pipelined {
+                    worker_pipelined(widx, cfg, batcher, registry, ready, factory)
+                } else {
+                    worker_main(widx, cfg, batcher, registry, ready, factory)
+                }
+            };
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("sjd-worker-{widx}"))
-                    .spawn(move || worker_main(widx, cfg, batcher, registry, ready, factory))
+                    .spawn(body)
                     .expect("spawn worker"),
             );
         }
@@ -187,10 +229,20 @@ fn worker_main<B, F>(
             // regardless of which worker picks up the batch.
             let seed = chunk.first().map(|s| s.seed).unwrap_or(0);
             let mut rng = Pcg64::seed_stream(seed, 1);
+            // Live-tuned policy (serve --tune): decode this batch under the
+            // tuner's current per-block modes for its bucket; the traces
+            // feed back below — the measurement is the decode itself.
+            let mut options = cfg.options.clone();
+            if let Some(tuner) = &cfg.tuner {
+                options.policy = tuner.policy_for(sampler.batch);
+            }
             let t_decode = Instant::now();
-            match sampler.sample_images(&cfg.options, &mut rng) {
+            match sampler.sample_images(&options, &mut rng) {
                 Ok((imgs, trace)) => {
                     decode_time.record_duration(t_decode.elapsed());
+                    if let Some(tuner) = &cfg.tuner {
+                        tuner.observe(sampler.batch, &trace);
+                    }
                     // Per-block convergence + sync behavior of this decode.
                     for t in &trace.traces {
                         block_iters.record(t.steps as u64);
@@ -218,4 +270,163 @@ fn worker_main<B, F>(
         }
         inflight.add(-1);
     }
+}
+
+/// Pipelined worker (depth ≥ 2): a feeder loop over a stage-graph
+/// [`DecodePipeline`]. Bucket selection, padding accounting and the RNG
+/// convention match [`worker_main`] exactly — the outputs are bit-identical
+/// — but slot completion moves into per-job completion callbacks running on
+/// the pipeline's final-stage thread, so the feeder can keep pulling
+/// batches while earlier ones are still mid-decode.
+fn worker_pipelined<B, F>(
+    widx: usize,
+    cfg: RouterConfig,
+    batcher: Batcher,
+    registry: Registry,
+    ready: std::sync::mpsc::Sender<Result<()>>,
+    factory: F,
+) where
+    B: Backend,
+    F: Fn(usize) -> Result<B> + Send + Clone + 'static,
+{
+    // Stage threads of this worker share its factory index, so a
+    // per-worker factory seam (tests, engine caches) behaves as before.
+    let stage_factory = {
+        let factory = factory.clone();
+        move |_stage: usize| factory(widx)
+    };
+    let pipeline_cfg =
+        PipelineConfig { depth: cfg.pipeline_depth, stage_threads: cfg.stage_threads };
+    let pipeline = match DecodePipeline::start(
+        &cfg.model,
+        &cfg.buckets,
+        pipeline_cfg,
+        registry.clone(),
+        stage_factory,
+    ) {
+        Ok(p) => p,
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    let _ = ready.send(Ok(()));
+
+    let queue_wait = registry.histogram("sjd_queue_wait");
+    let batch_fill = registry.histogram("sjd_batch_fill");
+    let padded = registry.counter("sjd_padded_slots");
+    // Completion-side handles resolved once, off the submit hot path; each
+    // chunk's callback clones the Arcs.
+    let metrics = ChunkMetrics {
+        lat: registry.histogram("sjd_request_latency"),
+        decode_time: registry.histogram("sjd_decode_time"),
+        block_iters: registry.histogram("sjd_block_iters"),
+        host_syncs: registry.histogram("sjd_host_syncs"),
+        images: registry.counter("sjd_images_generated"),
+        batches: registry.counter("sjd_batches_processed"),
+        errors: registry.counter("sjd_worker_errors"),
+        inflight: registry.gauge("sjd_batches_inflight"),
+    };
+    let max_bucket = pipeline.buckets.last().copied().unwrap_or(1);
+
+    while let Some(batch) = batcher.next_batch() {
+        batch_fill.record(batch.slots.len() as u64);
+        let mut slots = batch.slots;
+        while !slots.is_empty() {
+            let take = slots.len().min(max_bucket);
+            let chunk: Vec<Slot> = slots.drain(..take).collect();
+            // Smallest lowered bucket covering the chunk (the same
+            // `covering_bucket` law the stage samplers select by); pad only
+            // up to it.
+            let bucket = super::sampler::covering_bucket(&pipeline.buckets, chunk.len())
+                .unwrap_or(max_bucket);
+            padded.add(bucket.saturating_sub(chunk.len()) as u64);
+            registry.counter(&format!("sjd_bucket_{bucket}_batches")).inc();
+            let seed = chunk.first().map(|s| s.seed).unwrap_or(0);
+            let enqueued: Vec<Instant> = chunk.iter().map(|s| s.enqueued).collect();
+            let mut opts = cfg.options.clone();
+            if let Some(tuner) = &cfg.tuner {
+                opts.policy = tuner.policy_for(bucket);
+            }
+            metrics.inflight.add(1);
+            let n = chunk.len();
+            let done = completion(widx, bucket, chunk, cfg.tuner.clone(), metrics.clone());
+            let job = PipelineJob { seed, n, opts, done };
+            match pipeline.submit(job) {
+                Ok(()) => {
+                    // Recorded *after* submit so the histogram covers the
+                    // depth-gate backpressure wait too (its documented
+                    // "submit → pipeline entry" meaning at depth ≥ 2).
+                    for e in &enqueued {
+                        queue_wait.record_duration(e.elapsed());
+                    }
+                }
+                // The completion callback owns the inflight decrement.
+                Err(job) => (job.done)(Err("pipeline shut down".into())),
+            }
+        }
+    }
+    // Drain the in-flight tail (completion callbacks fire during join),
+    // then tear the stage threads down.
+    pipeline.shutdown();
+}
+
+/// Completion-side metric handles of the pipelined worker, resolved once
+/// per worker instead of once per chunk.
+#[derive(Clone)]
+struct ChunkMetrics {
+    lat: Arc<Histogram>,
+    decode_time: Arc<Histogram>,
+    block_iters: Arc<Histogram>,
+    host_syncs: Arc<Histogram>,
+    images: Arc<Counter>,
+    batches: Arc<Counter>,
+    errors: Arc<Counter>,
+    inflight: Arc<Gauge>,
+}
+
+/// Build the completion callback for one pipelined chunk: records the batch
+/// metrics, feeds the tuner, and completes every slot (images on success,
+/// the shared error message on failure — HTTP 500, never a hang).
+fn completion(
+    widx: usize,
+    bucket: usize,
+    chunk: Vec<Slot>,
+    tuner: Option<Arc<PolicyTuner>>,
+    m: ChunkMetrics,
+) -> Box<dyn FnOnce(PipelineResult) + Send + 'static> {
+    Box::new(move |result: PipelineResult| {
+        match result {
+            Ok((imgs, out)) => {
+                // Comparable with the monolithic histogram: charge the
+                // batch's *busy* wall (block decodes + prior/permutation/
+                // sync work), not the inter-stage queue waits that
+                // total_wall also contains under depth ≥ 2.
+                let busy = out.traces.iter().map(|t| t.wall).sum::<Duration>() + out.other_wall;
+                m.decode_time.record_duration(busy);
+                if let Some(tuner) = &tuner {
+                    tuner.observe(bucket, &out);
+                }
+                for t in &out.traces {
+                    m.block_iters.record(t.steps as u64);
+                    m.host_syncs.record(t.host_syncs as u64);
+                }
+                // Padded images (if any) fall off the end of the zip.
+                for (slot, img) in chunk.iter().zip(imgs.into_iter()) {
+                    m.lat.record_duration(slot.enqueued.elapsed());
+                    slot.done.put(Ok(img));
+                    m.images.inc();
+                }
+                m.batches.inc();
+            }
+            Err(msg) => {
+                m.errors.inc();
+                log::error!("worker {widx} pipelined decode failed: {msg}");
+                for slot in &chunk {
+                    slot.done.put(Err(msg.clone()));
+                }
+            }
+        }
+        m.inflight.add(-1);
+    })
 }

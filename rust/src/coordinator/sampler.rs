@@ -173,6 +173,15 @@ impl SampleOutput {
     }
 }
 
+/// The bucket-selection law: the smallest bucket covering `n`, falling back
+/// to the largest for an oversized batch; `None` only on an empty bucket
+/// set. [`SamplerSet::select`] and the pipelined router feeder both route
+/// through this single definition, so padding accounting, tuner bucket keys
+/// and the stage samplers can never disagree on which bucket a batch uses.
+pub fn covering_bucket(buckets: &[usize], n: usize) -> Option<usize> {
+    buckets.iter().copied().find(|&b| b >= n).or_else(|| buckets.last().copied())
+}
+
 /// A set of [`Sampler`]s for one model, one per lowered batch bucket,
 /// ordered ascending. Serving workers route each formed batch to the
 /// smallest bucket that covers it, so an `n=1` request is decoded by the
@@ -180,6 +189,7 @@ impl SampleOutput {
 /// (see `coordinator::router` for the padding accounting).
 pub struct SamplerSet<'e, B: Backend> {
     samplers: Vec<Sampler<'e, B>>,
+    buckets: Vec<usize>,
 }
 
 impl<'e, B: Backend> SamplerSet<'e, B> {
@@ -199,15 +209,15 @@ impl<'e, B: Backend> SamplerSet<'e, B> {
             bail!("model '{model}' has no lowered batch sizes to serve");
         }
         let samplers = want
-            .into_iter()
-            .map(|b| Sampler::new(engine, model, b))
+            .iter()
+            .map(|&b| Sampler::new(engine, model, b))
             .collect::<Result<Vec<_>>>()?;
-        Ok(SamplerSet { samplers })
+        Ok(SamplerSet { samplers, buckets: want })
     }
 
     /// Available bucket sizes, ascending.
     pub fn buckets(&self) -> Vec<usize> {
-        self.samplers.iter().map(|s| s.batch).collect()
+        self.buckets.clone()
     }
 
     /// The largest bucket — what the batcher should form batches up to.
@@ -224,11 +234,13 @@ impl<'e, B: Backend> SamplerSet<'e, B> {
     /// to the largest bucket for an oversized batch (the batcher caps batch
     /// size at [`Self::max_bucket`], so that fallback only triggers on a
     /// misconfigured batcher; decode then drops the overflow images).
+    /// Selection goes through [`covering_bucket`], the shared law.
     pub fn select(&self, n: usize) -> &Sampler<'e, B> {
+        let bucket = covering_bucket(&self.buckets, n).expect("non-empty set");
         self.samplers
             .iter()
-            .find(|s| s.batch >= n)
-            .unwrap_or_else(|| self.samplers.last().expect("non-empty set"))
+            .find(|s| s.batch == bucket)
+            .expect("bucket comes from this set")
     }
 }
 
@@ -601,11 +613,155 @@ impl<'e, B: Backend> Sampler<'e, B> {
         Ok((z, logdet))
     }
 
+    /// Resolve the decode mode the block at decode position `pos` will
+    /// actually run: the policy's mode pushed through the degradation chain
+    /// for optional artifacts and masked decodes (every fused/windowed
+    /// artifact computes the exact `o = 0` update only, and `mask_o`
+    /// semantics must not depend on which artifacts happen to be lowered):
+    ///
+    /// * `GsFused → GsJacobi` when the fused windowed step is absent;
+    /// * `Fused → Jacobi` when the fused step is absent;
+    /// * `GsJacobi → Jacobi` when the windowed step is absent;
+    /// * any of them `→ Jacobi` when an eq-6 mask is requested.
+    ///
+    /// The chain is per-sampler, so partially lowered buckets route
+    /// per-block to the best mode *they* have while richer buckets keep
+    /// their fused paths.
+    pub fn effective_block_mode(&self, mode: BlockDecode, mask_o: usize) -> BlockDecode {
+        let mut mode = mode;
+        if mask_o != 0 && mode != BlockDecode::Sequential {
+            mode = BlockDecode::Jacobi;
+        }
+        if let BlockDecode::GsFused { windows, .. } = mode {
+            if !self.has_gs_fuse_artifact() {
+                mode = BlockDecode::GsJacobi { windows };
+            }
+        }
+        if matches!(mode, BlockDecode::Fused { .. }) && !self.has_fuse_artifact() {
+            mode = BlockDecode::Jacobi;
+        }
+        if matches!(mode, BlockDecode::GsJacobi { .. }) && !self.has_gs_artifact() {
+            mode = BlockDecode::Jacobi;
+        }
+        mode
+    }
+
+    /// Decode the single block at decode position `pos` (block
+    /// `k = K−1−pos`) and apply its inter-block permutation: `v` is the
+    /// block input `h_{k+1}`, the result is `h_k = P_k(A_k^{-1}(v))` plus
+    /// the block's trace. This is one **stage** of the decode stage graph
+    /// (`coordinator::pipeline`); [`Sampler::decode_tokens`] is the thin
+    /// driver that folds a batch through all `K` of them in order.
+    ///
+    /// Residency: `v` may be host or device; the output chains
+    /// device-resident wherever the decode path and the reversal support it
+    /// (see the module docs). `BlockTrace::wall` covers the block decode
+    /// only — the permutation is accounted to `SampleOutput::other_wall`,
+    /// exactly as the monolithic loop always did.
+    pub fn decode_block_at(
+        &self,
+        pos: usize,
+        v: &Value,
+        opts: &SampleOptions,
+    ) -> Result<(Value, BlockTrace)> {
+        let kk = self.meta.blocks;
+        debug_assert!(pos < kk);
+        let k = kk - 1 - pos; // block index in flow order
+        let t0 = Instant::now();
+        let mode = self.effective_block_mode(opts.policy.block_mode(pos, kk), opts.mask_o);
+        let mut cfg = opts.jacobi.clone();
+        cfg.seed = opts.seed.wrapping_add(pos as u64);
+        let jacobi_trace = |stats: JacobiStats, wall: Duration| BlockTrace {
+            block: k,
+            position: pos,
+            used_jacobi: true,
+            steps: stats.iterations,
+            position_updates: stats.iterations * self.meta.seq_len,
+            host_syncs: stats.host_syncs,
+            wall,
+            jacobi: Some(stats),
+            gs: None,
+        };
+        let gs_trace = |stats: GsJacobiStats, wall: Duration| BlockTrace {
+            block: k,
+            position: pos,
+            used_jacobi: true,
+            steps: stats.iterations,
+            position_updates: stats.position_updates,
+            host_syncs: stats.host_syncs,
+            wall,
+            jacobi: None,
+            gs: Some(stats),
+        };
+        let (u, trace) = match mode {
+            BlockDecode::Jacobi => {
+                let (u, stats) = self.jacobi_decode_v(k, v, &cfg, opts.mask_o)?;
+                let trace = jacobi_trace(stats, t0.elapsed());
+                (u, trace)
+            }
+            BlockDecode::Fused { chunk } => {
+                let (u, stats) = self.jacobi_decode_fused_v(k, v, chunk, &cfg)?;
+                let trace = jacobi_trace(stats, t0.elapsed());
+                (u, trace)
+            }
+            BlockDecode::GsJacobi { windows } => {
+                let (u, stats) = self.gs_jacobi_decode_v(k, v, windows, &cfg)?;
+                let trace = gs_trace(stats, t0.elapsed());
+                (u, trace)
+            }
+            BlockDecode::GsFused { windows, chunk } => {
+                let (u, stats) = self.gs_jacobi_decode_fused_v(k, v, windows, chunk, &cfg)?;
+                let trace = gs_trace(stats, t0.elapsed());
+                (u, trace)
+            }
+            BlockDecode::Sequential => {
+                let (u, steps, host_syncs) = if opts.fused_sequential {
+                    let v_host = match v {
+                        Value::Host(t) => t.clone(),
+                        Value::Device(_) => self.engine.to_host(v.clone())?,
+                    };
+                    (
+                        Value::Host(self.sequential_decode_block_fused(k, &v_host)?),
+                        self.meta.seq_len,
+                        1,
+                    )
+                } else {
+                    // One [B, D] token fetch per position (see
+                    // sequential_decode_block_v).
+                    let (u, steps) = self.sequential_decode_block_v(k, v)?;
+                    (u, steps, self.meta.seq_len)
+                };
+                let wall = t0.elapsed();
+                (
+                    u,
+                    BlockTrace {
+                        block: k,
+                        position: pos,
+                        used_jacobi: false,
+                        steps,
+                        position_updates: self.meta.seq_len,
+                        host_syncs,
+                        wall,
+                        jacobi: None,
+                        gs: None,
+                    },
+                )
+            }
+        };
+        // h_k = P_k(u): reversal for odd k.
+        let z = if k % 2 == 1 { self.reverse_tokens_v(&u)? } else { u };
+        Ok((z, trace))
+    }
+
     /// Full decode: latent tokens (B, L, D) → data tokens h_0 (B, L, D),
-    /// following the configured policy. This is the serving hot path: the
-    /// latent is uploaded once, block outputs chain device→device across all
-    /// K blocks, and the tokens come back to the host once at the end (see
-    /// the module docs for the full residency map).
+    /// following the configured policy — a thin driver folding the batch
+    /// through [`Sampler::decode_block_at`] for every decode position. This
+    /// is the single-in-flight serving path: the latent is uploaded once,
+    /// block outputs chain device→device across all K blocks, and the
+    /// tokens come back to the host once at the end (see the module docs
+    /// for the full residency map). The stage-graph pipeline
+    /// (`coordinator::pipeline`) walks the same per-block stages with ≥2
+    /// batches in flight.
     pub fn decode_tokens(&self, z_latent: HostTensor, opts: &SampleOptions) -> Result<SampleOutput> {
         let t_start = Instant::now();
         let kk = self.meta.blocks;
@@ -617,116 +773,10 @@ impl<'e, B: Backend> Sampler<'e, B> {
         let mut z: Value = Value::Host(z_latent);
 
         for pos in 0..kk {
-            let k = kk - 1 - pos; // block index in flow order
-            let v = z;
-            let t0 = Instant::now();
-            // Degradation chain for optional artifacts and masked decodes
-            // (every fused/windowed artifact computes the exact o = 0
-            // update only, and mask_o semantics must not depend on which
-            // artifacts happen to be lowered):
-            //   GsFused → GsJacobi when the fused windowed step is absent;
-            //   Fused → Jacobi when the fused step is absent;
-            //   GsJacobi → Jacobi when the windowed step is absent;
-            //   any of them → Jacobi when an eq-6 mask is requested.
-            let mut mode = opts.policy.block_mode(pos, kk);
-            if opts.mask_o != 0 && mode != BlockDecode::Sequential {
-                mode = BlockDecode::Jacobi;
-            }
-            if let BlockDecode::GsFused { windows, .. } = mode {
-                if !self.has_gs_fuse_artifact() {
-                    mode = BlockDecode::GsJacobi { windows };
-                }
-            }
-            if matches!(mode, BlockDecode::Fused { .. }) && !self.has_fuse_artifact() {
-                mode = BlockDecode::Jacobi;
-            }
-            if matches!(mode, BlockDecode::GsJacobi { .. }) && !self.has_gs_artifact() {
-                mode = BlockDecode::Jacobi;
-            }
-            let mut cfg = opts.jacobi.clone();
-            cfg.seed = opts.seed.wrapping_add(pos as u64);
-            let jacobi_trace = |stats: JacobiStats, wall: Duration| BlockTrace {
-                block: k,
-                position: pos,
-                used_jacobi: true,
-                steps: stats.iterations,
-                position_updates: stats.iterations * self.meta.seq_len,
-                host_syncs: stats.host_syncs,
-                wall,
-                jacobi: Some(stats),
-                gs: None,
-            };
-            let gs_trace = |stats: GsJacobiStats, wall: Duration| BlockTrace {
-                block: k,
-                position: pos,
-                used_jacobi: true,
-                steps: stats.iterations,
-                position_updates: stats.position_updates,
-                host_syncs: stats.host_syncs,
-                wall,
-                jacobi: None,
-                gs: Some(stats),
-            };
-            let (u, trace) = match mode {
-                BlockDecode::Jacobi => {
-                    let (u, stats) = self.jacobi_decode_v(k, &v, &cfg, opts.mask_o)?;
-                    let trace = jacobi_trace(stats, t0.elapsed());
-                    (u, trace)
-                }
-                BlockDecode::Fused { chunk } => {
-                    let (u, stats) = self.jacobi_decode_fused_v(k, &v, chunk, &cfg)?;
-                    let trace = jacobi_trace(stats, t0.elapsed());
-                    (u, trace)
-                }
-                BlockDecode::GsJacobi { windows } => {
-                    let (u, stats) = self.gs_jacobi_decode_v(k, &v, windows, &cfg)?;
-                    let trace = gs_trace(stats, t0.elapsed());
-                    (u, trace)
-                }
-                BlockDecode::GsFused { windows, chunk } => {
-                    let (u, stats) =
-                        self.gs_jacobi_decode_fused_v(k, &v, windows, chunk, &cfg)?;
-                    let trace = gs_trace(stats, t0.elapsed());
-                    (u, trace)
-                }
-                BlockDecode::Sequential => {
-                    let (u, steps, host_syncs) = if opts.fused_sequential {
-                        let v_host = match &v {
-                            Value::Host(t) => t.clone(),
-                            Value::Device(_) => self.engine.to_host(v.clone())?,
-                        };
-                        (
-                            Value::Host(self.sequential_decode_block_fused(k, &v_host)?),
-                            self.meta.seq_len,
-                            1,
-                        )
-                    } else {
-                        // One [B, D] token fetch per position (see
-                        // sequential_decode_block_v).
-                        let (u, steps) = self.sequential_decode_block_v(k, &v)?;
-                        (u, steps, self.meta.seq_len)
-                    };
-                    let wall = t0.elapsed();
-                    (
-                        u,
-                        BlockTrace {
-                            block: k,
-                            position: pos,
-                            used_jacobi: false,
-                            steps,
-                            position_updates: self.meta.seq_len,
-                            host_syncs,
-                            wall,
-                            jacobi: None,
-                            gs: None,
-                        },
-                    )
-                }
-            };
+            let (z_next, trace) = self.decode_block_at(pos, &z, opts)?;
             decode_wall += trace.wall;
             traces.push(trace);
-            // h_k = P_k(u): reversal for odd k.
-            z = if k % 2 == 1 { self.reverse_tokens_v(&u)? } else { u };
+            z = z_next;
         }
 
         let tokens = self.engine.to_host(z)?;

@@ -4,6 +4,10 @@
 //! * `POST /generate` — body `{"n": 4, "seed": 7}` → JSON with base64 PNGs.
 //! * `GET /metrics`   — text exposition of the metrics registry.
 //! * `GET /healthz`   — liveness.
+//! * `GET /policy`    — the effective decode policy as JSON: the live
+//!   [`PolicyTuner`] state under `serve --tune`, else the static configured
+//!   policy (404 when no [`PolicySource`] was wired in). `sjd policy show
+//!   --addr` pretty-prints it.
 //!
 //! ## Threading model
 //!
@@ -37,6 +41,7 @@
 //! malformed requests (400) are distinguished from internal failures (500).
 
 use super::batcher::Batcher;
+use super::policy::PolicyTuner;
 use crate::exec::ThreadPool;
 use crate::imageio::{self, Image};
 use crate::jsonx::{self, Value};
@@ -241,6 +246,30 @@ fn parse_generate_body(body: &[u8]) -> Result<(usize, u64)> {
     Ok((n, seed))
 }
 
+/// What `GET /policy` serves: the statically configured policy, overridden
+/// by the live tuner state whenever one is attached (`serve --tune`).
+#[derive(Clone, Debug)]
+pub struct PolicySource {
+    /// JSON of the configured policy (`DecodePolicy::to_json`).
+    pub configured: jsonx::Value,
+    /// Live tuner; its `to_json` state wins over `configured` when present.
+    pub tuner: Option<Arc<PolicyTuner>>,
+}
+
+impl PolicySource {
+    /// The `/policy` response body.
+    fn body(&self) -> String {
+        let v = match &self.tuner {
+            Some(t) => t.to_json(),
+            None => Value::obj(vec![
+                ("source", Value::str("static")),
+                ("policy", self.configured.clone()),
+            ]),
+        };
+        jsonx::to_string_pretty(&v)
+    }
+}
+
 /// Server tuning knobs.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
@@ -253,6 +282,8 @@ pub struct ServerConfig {
     /// Idle keep-alive connections (no request bytes pending) are dropped
     /// after this long so they free their connection-pool thread.
     pub keepalive_timeout: Duration,
+    /// Backing data of the `/policy` endpoint; `None` answers it 404.
+    pub policy: Option<PolicySource>,
 }
 
 impl Default for ServerConfig {
@@ -261,6 +292,7 @@ impl Default for ServerConfig {
             conn_threads: 8,
             encode_threads: 4,
             keepalive_timeout: Duration::from_secs(5),
+            policy: None,
         }
     }
 }
@@ -278,6 +310,7 @@ struct ServerState {
     stop: Arc<AtomicBool>,
     encode_pool: ThreadPool,
     keepalive_timeout: Duration,
+    policy: Option<PolicySource>,
 }
 
 /// Serving front end bound to a batcher + metrics registry.
@@ -306,6 +339,7 @@ impl Server {
                 stop: Arc::new(AtomicBool::new(false)),
                 encode_pool: ThreadPool::new(cfg.encode_threads),
                 keepalive_timeout: cfg.keepalive_timeout,
+                policy: cfg.policy,
             }),
             conn_pool: ThreadPool::new(cfg.conn_threads),
         }
@@ -454,6 +488,15 @@ fn handle_request(
             let text = inner.registry.render_text();
             write_response(stream, 200, "text/plain", text.as_bytes(), keep)
         }
+        ("GET", "/policy") => match &inner.policy {
+            Some(src) => {
+                write_response(stream, 200, "application/json", src.body().as_bytes(), keep)
+            }
+            None => {
+                let e = anyhow::anyhow!("no policy endpoint configured");
+                write_response(stream, 404, "application/json", error_json(&e).as_bytes(), keep)
+            }
+        },
         ("POST", "/generate") => match parse_generate_body(&req.body) {
             // Malformed request: the client's fault.
             Err(e) => {

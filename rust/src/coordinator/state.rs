@@ -4,6 +4,14 @@
 use crate::runtime::{HostTensor, Value};
 use std::cell::RefCell;
 
+/// Capacity of the [`BufferPool::device_scalar_i32`] cache: enough for every
+/// loop constant a steady-state decode re-uses (block indices, window
+/// offsets/lengths, calibrated chunk sizes are all small sets), small enough
+/// that a pathological stream of distinct values — e.g. adaptive chunk
+/// schedules reacting to per-request residual trajectories — cannot pin
+/// unbounded device memory.
+pub const SCALAR_CACHE_CAP: usize = 64;
+
 /// A pool of reusable zeroed f32 buffers keyed by shape, used for the KV
 /// cache tensors of the sequential decode path. Sequential decode consumes
 /// two (NL, B, L, Dm) caches per block; pooling keeps the hot loop
@@ -23,7 +31,11 @@ pub struct BufferPool {
     /// Immutable device-resident i32 scalars, one per distinct value — the
     /// decode loop constants (block index `k`, mask offset, window
     /// offset/length, fused chunk sizes) repeat across blocks, windows and
-    /// requests, so each uploads once per sampler lifetime.
+    /// requests, so each uploads once while it stays hot. Capped at
+    /// [`SCALAR_CACHE_CAP`] entries with LRU eviction (most recently used
+    /// last): adaptive chunk schedules can emit a long tail of distinct
+    /// step counts over a server's lifetime, and an uncapped cache would
+    /// pin one device buffer per value forever.
     device_scalars: RefCell<Vec<(i32, Value)>>,
     /// High-water mark of host bytes handed out simultaneously.
     peak_bytes: RefCell<usize>,
@@ -90,25 +102,47 @@ impl BufferPool {
     }
 
     /// A device-resident i32 scalar, uploaded at most once per distinct
-    /// value via `upload` and cached for the pool's lifetime. Same
-    /// immutability contract as [`BufferPool::device_zeroed`]; used by the
-    /// decode drivers to pin loop constants (`k`, `mask_o`, window
-    /// offset/length, fused chunk sizes) instead of re-uploading them per
+    /// value via `upload` and cached while it stays among the
+    /// [`SCALAR_CACHE_CAP`] most recently used values. Same immutability
+    /// contract as [`BufferPool::device_zeroed`]; used by the decode
+    /// drivers to pin loop constants (`k`, `mask_o`, window offset/length,
+    /// fused chunk sizes) instead of re-uploading them per
     /// block/window/chunk.
+    ///
+    /// Eviction drops the pool's clone of the value; the device buffer is
+    /// freed once every outstanding handle drops, and a later request for
+    /// the same value simply re-uploads it.
     pub fn device_scalar_i32(
         &self,
         v: i32,
         upload: impl FnOnce(&HostTensor) -> anyhow::Result<Value>,
     ) -> anyhow::Result<Value> {
-        if let Some((_, val)) =
-            self.device_scalars.borrow().iter().find(|(x, _)| *x == v)
         {
-            return Ok(val.clone());
+            let mut cache = self.device_scalars.borrow_mut();
+            if let Some(idx) = cache.iter().position(|(x, _)| *x == v) {
+                // Refresh recency: most recently used entries live at the
+                // back, evictions pop the front.
+                let entry = cache.remove(idx);
+                let val = entry.1.clone();
+                cache.push(entry);
+                return Ok(val);
+            }
         }
         let val = upload(&HostTensor::scalar_i32(v))?;
+        let mut cache = self.device_scalars.borrow_mut();
+        if cache.len() >= SCALAR_CACHE_CAP {
+            cache.remove(0);
+            *self.device_bytes.borrow_mut() -= 4;
+        }
         *self.device_bytes.borrow_mut() += 4;
-        self.device_scalars.borrow_mut().push((v, val.clone()));
+        cache.push((v, val.clone()));
         Ok(val)
+    }
+
+    /// Distinct scalar values currently pinned — always `<=`
+    /// [`SCALAR_CACHE_CAP`].
+    pub fn scalar_cache_len(&self) -> usize {
+        self.device_scalars.borrow().len()
     }
 
     pub fn peak_bytes(&self) -> usize {
@@ -225,6 +259,53 @@ mod tests {
         assert_eq!(b.as_host().unwrap().as_i32().unwrap(), &[3]);
         assert_eq!(c.as_host().unwrap().as_i32().unwrap(), &[-1]);
         assert_eq!(pool.device_cache_bytes(), 8);
+    }
+
+    #[test]
+    fn scalar_cache_is_bounded_with_lru_eviction() {
+        let pool = BufferPool::new();
+        let uploads = std::cell::Cell::new(0usize);
+        let mk = |t: &HostTensor| {
+            uploads.set(uploads.get() + 1);
+            Ok(Value::Host(t.clone()))
+        };
+        // Overfill by 10: every distinct value uploads once, but the cache
+        // (and its device-byte accounting) stays at the cap.
+        for v in 0..(SCALAR_CACHE_CAP + 10) as i32 {
+            pool.device_scalar_i32(v, mk).unwrap();
+        }
+        assert_eq!(uploads.get(), SCALAR_CACHE_CAP + 10);
+        assert_eq!(pool.scalar_cache_len(), SCALAR_CACHE_CAP);
+        assert_eq!(pool.device_cache_bytes(), SCALAR_CACHE_CAP * 4);
+        // The oldest values were evicted — re-pinning one re-uploads.
+        pool.device_scalar_i32(0, mk).unwrap();
+        assert_eq!(uploads.get(), SCALAR_CACHE_CAP + 11);
+        // The newest survived — re-pinning it is a cache hit.
+        pool.device_scalar_i32((SCALAR_CACHE_CAP + 9) as i32, mk).unwrap();
+        assert_eq!(uploads.get(), SCALAR_CACHE_CAP + 11);
+        assert_eq!(pool.scalar_cache_len(), SCALAR_CACHE_CAP);
+    }
+
+    #[test]
+    fn scalar_cache_hit_refreshes_recency() {
+        let pool = BufferPool::new();
+        let uploads = std::cell::Cell::new(0usize);
+        let mk = |t: &HostTensor| {
+            uploads.set(uploads.get() + 1);
+            Ok(Value::Host(t.clone()))
+        };
+        for v in 0..SCALAR_CACHE_CAP as i32 {
+            pool.device_scalar_i32(v, mk).unwrap();
+        }
+        // Touch the oldest entry, then insert one new value: the eviction
+        // must hit the now-least-recently-used value 1, not the refreshed 0.
+        pool.device_scalar_i32(0, mk).unwrap();
+        pool.device_scalar_i32(-1, mk).unwrap();
+        let before = uploads.get();
+        pool.device_scalar_i32(0, mk).unwrap();
+        assert_eq!(uploads.get(), before, "refreshed value must still be cached");
+        pool.device_scalar_i32(1, mk).unwrap();
+        assert_eq!(uploads.get(), before + 1, "stale value must have been evicted");
     }
 
     #[test]

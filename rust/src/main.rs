@@ -3,11 +3,14 @@
 //! ```text
 //! sjd serve   --model tf10 --addr 127.0.0.1:8471 --workers 2 --policy selective
 //! sjd serve   --model tf10 --batch-sizes 1,2,4,8 --http-threads 8
+//! sjd serve   --model tf10 --tune --pipeline-depth 2
 //! sjd sample  --model tf10 --batch 8 --policy gs:4 --tau 0.5 --out samples.png
 //! sjd recon   --model tf10 --batch 8
 //! sjd calibrate --model tf10 --batch 8 --windows 8 --out tf10_policy.json
 //! sjd calibrate --model tf10 --batch 8 --chunks --out tf10_policy.json
 //! sjd serve   --model tf10 --policy-file tf10_policy.json
+//! sjd policy show --policy-file tf10_policy.json
+//! sjd policy show --addr 127.0.0.1:8471
 //! sjd info
 //! ```
 //!
@@ -16,19 +19,22 @@
 //! `@file.json` and takes precedence over `--policy`. See the root
 //! `README.md` for the full cheat-sheet.
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 use sjd::cli::Command;
 use sjd::configx::{CValue, Config};
 use sjd::coordinator::batcher::Batcher;
 use sjd::coordinator::jacobi::{InitStrategy, JacobiConfig};
-use sjd::coordinator::policy::{calibrate, calibrate_chunks, calibrate_windows, DecodePolicy};
+use sjd::coordinator::policy::{
+    calibrate, calibrate_chunks, calibrate_windows, DecodePolicy, PolicyTuner, TunerConfig,
+};
 use sjd::coordinator::router::{Router, RouterConfig};
 use sjd::coordinator::sampler::{SampleOptions, Sampler};
-use sjd::coordinator::server::{Server, ServerConfig};
+use sjd::coordinator::server::{PolicySource, Server, ServerConfig};
 use sjd::imageio::{compose_grid, write_png, Image};
 use sjd::metrics::Registry;
 use sjd::runtime::{Engine, Manifest};
 use sjd::tensor::Pcg64;
+use std::sync::Arc;
 use std::time::Duration;
 
 fn cli() -> Command {
@@ -47,7 +53,30 @@ fn cli() -> Command {
                 .opt("policy-file", "", "calibrated policy JSON (overrides --policy)")
                 .opt("tau", "0.5", "Jacobi stopping threshold")
                 .opt("init", "zeros", "zeros|normal|prev")
-                .opt("seed", "0", "RNG seed"),
+                .opt("seed", "0", "RNG seed")
+                .switch(
+                    "tune",
+                    "enable the online policy autotuner (per-bucket per-block \
+                     windows/chunks learned from live traffic; /policy shows it)",
+                )
+                .opt(
+                    "tune-snapshot",
+                    "",
+                    "where --tune persists its learned policy JSON, every 30 s and on \
+                     shutdown [default: <model>_tuned_policy.json]",
+                )
+                .opt(
+                    "pipeline-depth",
+                    "1",
+                    "batches each worker keeps in flight; >=2 enables stage-graph \
+                     block pipelining (one engine per stage thread)",
+                )
+                .opt(
+                    "stage-threads",
+                    "0",
+                    "stage threads per pipelined worker (0 = one per flow block; \
+                     fewer bounds the engine count at coarser overlap)",
+                ),
         )
         .sub(
             Command::new("sample", "generate a batch of images to a PNG grid")
@@ -85,6 +114,15 @@ fn cli() -> Command {
                      with per-block chunk schedules seeded from the traces",
                 )
                 .opt("out", "", "policy JSON output path [default: <model>_policy.json]"),
+        )
+        .sub(
+            Command::new("policy", "inspect decode policies").sub(
+                Command::new("show", "print the resolved per-block mode table")
+                    .opt("policy", "selective", "sequential|ujd|selective[:N]|gs[:W]|fuse[:S]")
+                    .opt("policy-file", "", "calibrated policy JSON (overrides --policy)")
+                    .opt("blocks", "8", "flow blocks K (parametric policies only)")
+                    .opt("addr", "", "fetch the live policy from a serving /policy endpoint"),
+            ),
         )
         .sub(
             Command::new("info", "list models and artifacts")
@@ -126,6 +164,7 @@ fn main() -> Result<()> {
         Some("sample") => cmd_sample(&parsed),
         Some("recon") => cmd_recon(&parsed),
         Some("calibrate") => cmd_calibrate(&parsed),
+        Some("policy show") => cmd_policy_show(&parsed),
         Some("info") => cmd_info(&parsed),
         _ => bail!("no subcommand"),
     }
@@ -144,24 +183,34 @@ fn cmd_serve(p: &sjd::cli::Parsed) -> Result<()> {
     let pol = policy(p)?;
     let policy_label = pol.label();
     let options = SampleOptions {
-        policy: pol,
+        policy: pol.clone(),
         jacobi: jacobi_config(p),
         mask_o: 0,
         fused_sequential: false,
         seed: 0,
     };
-    // Resolve the decode buckets: explicit --batch-sizes, or every complete
-    // per-batch artifact family the manifest carries for the model.
+    // The manifest drives bucket resolution and (under --tune) the model
+    // geometry + fused history length the tuner needs.
+    let model = p.str("model").to_string();
     let artifacts_dir = std::path::PathBuf::from(p.str("artifacts"));
+    let manifest = Manifest::load(artifacts_dir.join("manifest.json"))?;
     let buckets = match p.str("batch-sizes") {
-        "" => {
-            let manifest = Manifest::load(artifacts_dir.join("manifest.json"))?;
-            manifest.decode_buckets(p.str("model"))
-        }
+        "" => manifest.decode_buckets(&model),
         spec => parse_buckets(spec)?,
     };
     let Some(&max_bucket) = buckets.last() else {
-        bail!("model {} has no lowered decode buckets", p.str("model"));
+        bail!("model {model} has no lowered decode buckets");
+    };
+
+    // Online autotuner (--tune): bootstraps from the configured policy and
+    // learns per-bucket per-block modes from live decode traces.
+    let tuner = if p.flag("tune") {
+        let meta = manifest.model(&model)?;
+        let s_max = fused_history_len(&manifest, &model, max_bucket);
+        let cfg = TunerConfig { s_max, ..Default::default() };
+        Some(Arc::new(PolicyTuner::new(meta.blocks, meta.seq_len, pol.clone(), cfg)))
+    } else {
+        None
     };
 
     let registry = Registry::new();
@@ -172,29 +221,139 @@ fn cmd_serve(p: &sjd::cli::Parsed) -> Result<()> {
     let router = Router::start(
         RouterConfig {
             artifacts_dir,
-            model: p.str("model").into(),
+            model: model.clone(),
             buckets: buckets.clone(),
             workers: p.usize("workers")?,
             options,
+            pipeline_depth: p.usize("pipeline-depth")?,
+            stage_threads: p.usize("stage-threads")?,
+            tuner: tuner.clone(),
         },
         batcher.clone(),
         registry.clone(),
     )?;
     println!(
-        "serving model {} on {} ({} workers, buckets {buckets:?}, policy {policy_label})",
-        p.str("model"),
+        "serving model {model} on {} ({} workers, buckets {buckets:?}, policy {policy_label}{})",
         p.str("addr"),
         p.usize("workers")?,
+        if tuner.is_some() { ", tuned" } else { "" },
     );
     let server = Server::with_config(
         p.str("addr"),
         batcher,
         registry,
-        ServerConfig { conn_threads: p.usize("http-threads")?, ..Default::default() },
+        ServerConfig {
+            conn_threads: p.usize("http-threads")?,
+            policy: Some(PolicySource { configured: pol.to_json(), tuner: tuner.clone() }),
+            ..Default::default()
+        },
     );
+    // Persist what the tuner learns, in the policy-JSON format calibrate
+    // writes, so the next (even untuned) serve can start from it. The
+    // serve process usually dies by signal — which cannot unwind past the
+    // accept loop — so a detached thread snapshots periodically and the
+    // orderly-shutdown path below writes once more.
+    let snapshot_path = match p.str("tune-snapshot") {
+        "" => format!("{model}_tuned_policy.json"),
+        s => s.to_string(),
+    };
+    if let Some(tuner) = &tuner {
+        let tuner = tuner.clone();
+        let path = snapshot_path.clone();
+        std::thread::Builder::new()
+            .name("sjd-tune-snapshot".into())
+            .spawn(move || loop {
+                std::thread::sleep(TUNE_SNAPSHOT_PERIOD);
+                write_tuner_snapshot(&tuner, &path);
+            })
+            .expect("spawn snapshot thread");
+    }
     server.run()?;
     router.shutdown();
+    if let Some(tuner) = &tuner {
+        if write_tuner_snapshot(tuner, &snapshot_path) {
+            println!("wrote tuned policy snapshot to {snapshot_path}");
+        }
+    }
     Ok(())
+}
+
+/// Cadence of the background tuner-snapshot writer.
+const TUNE_SNAPSHOT_PERIOD: Duration = Duration::from_secs(30);
+
+/// Best-effort write of the tuner's learned policy (most-observed bucket)
+/// in the ordinary policy-JSON format; `false` when there is nothing to
+/// persist yet or the write failed. Writes go through a temp file + rename
+/// so the periodic writer and the shutdown writer can never leave a torn
+/// snapshot behind, whatever instant the process dies.
+fn write_tuner_snapshot(tuner: &PolicyTuner, path: &str) -> bool {
+    // One writer at a time: the periodic thread and the shutdown path
+    // share the temp file, and a torn temp renamed into place would defeat
+    // the atomicity.
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    let _guard = LOCK.lock().unwrap();
+    let Some((_bucket, learned)) = tuner.snapshot_best() else {
+        return false;
+    };
+    let tmp = format!("{path}.tmp");
+    std::fs::write(&tmp, sjd::jsonx::to_string_pretty(&learned.to_json())).is_ok()
+        && std::fs::rename(&tmp, path).is_ok()
+}
+
+/// The fused artifacts' lowered history length for one bucket, read off the
+/// manifest's `[S, B]` output shape — the python side owns S
+/// (`aot.JSTEP_FUSE_STEPS`); the default only covers artifact dirs lowered
+/// without the fused role, where serving falls back per-iteration anyway.
+fn fused_history_len(manifest: &Manifest, model: &str, bucket: usize) -> usize {
+    manifest
+        .artifact(&format!("{model}_block_jstep_fuse_b{bucket}"))
+        .ok()
+        .and_then(|a| a.outputs.get(1).and_then(|o| o.shape.first().copied()))
+        .filter(|&s| s >= 1)
+        .unwrap_or(sjd::coordinator::policy::DEFAULT_FUSE_CHUNK)
+}
+
+/// `sjd policy show`: print the per-block mode table of a policy string /
+/// file, or fetch the live policy JSON from a `--tune`d server.
+fn cmd_policy_show(p: &sjd::cli::Parsed) -> Result<()> {
+    let addr = p.str("addr");
+    if !addr.is_empty() {
+        println!("{}", fetch_policy(addr)?);
+        return Ok(());
+    }
+    let pol = policy(p)?;
+    // Calibrated policies carry their own length; parametric ones span
+    // whatever K the operator asks about.
+    let blocks = match &pol {
+        DecodePolicy::PerBlock { modes } => modes.len(),
+        DecodePolicy::Custom { jacobi_mask } => jacobi_mask.len(),
+        _ => p.usize("blocks")?,
+    };
+    if blocks == 0 {
+        bail!("--blocks must be >= 1");
+    }
+    println!("policy: {}", pol.label());
+    println!("{:<5} {:<6} mode", "pos", "block");
+    for stage in sjd::coordinator::pipeline::stage_plan(&pol, blocks) {
+        println!("{:<5} {:<6} {}", stage.position, stage.block, stage.mode.describe());
+    }
+    Ok(())
+}
+
+/// One-shot `GET /policy` against a running server.
+fn fetch_policy(addr: &str) -> Result<String> {
+    use std::io::{Read, Write};
+    let mut s = std::net::TcpStream::connect(addr)
+        .with_context(|| format!("connecting to {addr}"))?;
+    s.set_read_timeout(Some(Duration::from_secs(10)))?;
+    write!(s, "GET /policy HTTP/1.1\r\nHost: sjd\r\nConnection: close\r\n\r\n")?;
+    let mut resp = String::new();
+    s.read_to_string(&mut resp)?;
+    let (head, body) = resp.split_once("\r\n\r\n").context("malformed HTTP response")?;
+    if !head.starts_with("HTTP/1.1 200") {
+        bail!("server answered: {}", head.lines().next().unwrap_or(head));
+    }
+    Ok(body.to_string())
 }
 
 /// Parse a `--batch-sizes` list ("1,2,4,8") into sorted unique buckets.
@@ -326,17 +485,8 @@ fn cmd_calibrate(p: &sjd::cli::Parsed) -> Result<()> {
     // one host sync (chunk sizes capped at the fused history length).
     let pol = if p.flag("chunks") {
         // The device history cap is read off the lowered fused artifact's
-        // [S, B] output shape — the python side owns S (aot.JSTEP_FUSE_STEPS)
-        // and the rust-side default only covers artifact dirs lowered
-        // without the fused role (where serving falls back per-iteration
-        // and the cap is moot).
-        let s_max = engine
-            .manifest()
-            .artifact(sampler.jstep_fuse_artifact())
-            .ok()
-            .and_then(|a| a.outputs.get(1).and_then(|o| o.shape.first().copied()))
-            .filter(|&s| s >= 1)
-            .unwrap_or(sjd::coordinator::policy::DEFAULT_FUSE_CHUNK);
+        // [S, B] output shape (shared helper with serve --tune).
+        let s_max = fused_history_len(engine.manifest(), p.str("model"), p.usize("batch")?);
         calibrate_chunks(&jstats, &seq_walls, sampler.meta.seq_len, max_windows, s_max)
     } else {
         calibrate_windows(&jstats, &seq_walls, sampler.meta.seq_len, max_windows)

@@ -22,6 +22,8 @@
 //! | `sjd_http_keepalive_reuses` | counter | requests served on a reused connection |
 //! | `sjd_block_iters`         | histogram | router worker, decode steps per block |
 //! | `sjd_host_syncs`          | histogram | router worker, blocking host syncs per block (`⌈iters/S⌉` on the fused decode path) |
+//! | `sjd_stage_{t}_occupancy` | gauge     | stage thread `t` of the decode pipeline: batches being processed (0/1 per pipeline; summed across workers when several pipelines share the registry) |
+//! | `sjd_stage_wait`          | histogram | decode pipeline, time a batch waited in a stage queue before its stage picked it up (pooled across workers) |
 
 mod histogram;
 mod registry;

@@ -401,6 +401,13 @@ pub struct MockServeBackend {
     /// amortize (`benches/jstep_fusion.rs` sets it; serving tests leave it
     /// zero).
     pub call_overhead: Duration,
+    /// Roles hidden from [`Backend::has_artifact`] — `(role, bucket)` with
+    /// `bucket = None` meaning every bucket. Models *partially* lowered
+    /// artifact dirs (e.g. a bucket whose fused windowed step predates the
+    /// lowering) so tests can pin the per-block degradation chain. Roles
+    /// match exactly on the `_{role}_b` segment, so hiding
+    /// `block_jstep_win` leaves `block_jstep_win_fuse` visible.
+    pub missing: Vec<(String, Option<usize>)>,
     pub ledger: Arc<MockLedger>,
 }
 
@@ -411,6 +418,7 @@ impl MockServeBackend {
             buckets: buckets.to_vec(),
             slot_delay,
             call_overhead: Duration::ZERO,
+            missing: Vec::new(),
             ledger,
         }
     }
@@ -418,6 +426,20 @@ impl MockServeBackend {
     /// Builder: set the per-call dispatch/sync overhead.
     pub fn with_call_overhead(mut self, overhead: Duration) -> Self {
         self.call_overhead = overhead;
+        self
+    }
+
+    /// Builder: hide one artifact role (`block_jstep_win_fuse`, …) in every
+    /// bucket.
+    pub fn without_role(mut self, role: &str) -> Self {
+        self.missing.push((role.to_string(), None));
+        self
+    }
+
+    /// Builder: hide one artifact role in a single bucket — the partial
+    /// manifest case the degradation-chain tests pin.
+    pub fn without_role_in_bucket(mut self, role: &str, bucket: usize) -> Self {
+        self.missing.push((role.to_string(), Some(bucket)));
         self
     }
 
@@ -431,6 +453,11 @@ impl MockServeBackend {
 
 impl Backend for MockServeBackend {
     fn call_v(&self, name: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+        // Calling an artifact the manifest does not claim is a routing bug
+        // (the degradation chain should have steered around it): fail loud.
+        if !self.has_artifact(name) {
+            bail!("mock: artifact '{name}' is not lowered");
+        }
         self.ledger.bump(name);
         let host: Vec<HostTensor> = inputs.iter().map(Self::host).collect::<Result<_>>()?;
         let decode_call = name.contains("jstep") || name.contains("seqstep");
@@ -451,10 +478,19 @@ impl Backend for MockServeBackend {
     }
 
     fn has_artifact(&self, name: &str) -> bool {
-        // Only the configured buckets are "lowered": `{m}_<role>_b{B}`.
-        name.rsplit_once("_b")
-            .and_then(|(_, b)| b.parse::<usize>().ok())
-            .is_some_and(|b| self.buckets.contains(&b))
+        // Only the configured buckets are "lowered": `{m}_<role>_b{B}` —
+        // minus any roles the builder explicitly hid (partial manifests).
+        let Some(bucket) =
+            name.rsplit_once("_b").and_then(|(_, b)| b.parse::<usize>().ok())
+        else {
+            return false;
+        };
+        if !self.buckets.contains(&bucket) {
+            return false;
+        }
+        !self.missing.iter().any(|(role, in_bucket)| {
+            name.contains(&format!("_{role}_b")) && in_bucket.is_none_or(|b| b == bucket)
+        })
     }
 
     fn model_meta(&self, model: &str) -> Result<ModelMeta> {

@@ -34,9 +34,38 @@ fn run(args: &[&str]) -> (bool, String) {
 fn help_lists_subcommands() {
     let (ok, text) = run(&["--help"]);
     assert!(!ok); // help goes through the error path with exit 2
-    for cmd in ["serve", "sample", "recon", "calibrate", "info"] {
+    for cmd in ["serve", "sample", "recon", "calibrate", "policy", "info"] {
         assert!(text.contains(cmd), "missing '{cmd}' in help:\n{text}");
     }
+}
+
+#[test]
+fn policy_show_prints_mode_table_without_artifacts() {
+    // Parametric policy: one row per block at the requested K.
+    let (ok, text) = run(&["policy", "show", "--policy", "gs:4", "--blocks", "4"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("GS-Jacobi(W=4)"), "{text}");
+    assert_eq!(text.matches("gs W=4").count(), 4, "{text}");
+    // Decode position 0 maps to flow block K-1 = 3.
+    assert!(text.lines().any(|l| l.starts_with('0') && l.contains('3')), "{text}");
+
+    // Calibrated per-block policies carry their own K and mode table.
+    let path = std::env::temp_dir().join("sjd_cli_policy_show.json");
+    let json = r#"{"kind": "per_block", "modes": [
+        {"mode": "sequential"},
+        {"mode": "gs_fuse", "windows": 8, "chunk": 4},
+        {"mode": "fuse", "chunk": 2}
+    ]}"#;
+    std::fs::write(&path, json).unwrap();
+    let (ok, text) = run(&["policy", "show", "--policy-file", path.to_str().unwrap()]);
+    assert!(ok, "{text}");
+    assert!(text.contains("sequential"), "{text}");
+    assert!(text.contains("gs_fuse W=8 S=4"), "{text}");
+    assert!(text.contains("fuse S=2"), "{text}");
+
+    // Malformed policies are rejected, not silently defaulted.
+    let (ok, text) = run(&["policy", "show", "--policy", "warp:9"]);
+    assert!(!ok, "{text}");
 }
 
 #[test]

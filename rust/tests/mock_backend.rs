@@ -21,8 +21,10 @@ use sjd::coordinator::jacobi::{
     jacobi_decode_block, jacobi_decode_block_fused_v, jacobi_decode_block_v,
     window_partition, InitStrategy, JacobiConfig,
 };
+use sjd::coordinator::pipeline::{DecodePipeline, PipelineConfig, PipelineJob};
 use sjd::coordinator::policy::{BlockDecode, DecodePolicy};
 use sjd::coordinator::sampler::{SampleOptions, Sampler, SamplerSet};
+use sjd::coordinator::state::{BufferPool, SCALAR_CACHE_CAP};
 use sjd::runtime::{Backend, DType, DeviceValue, HostTensor, ModelMeta, Value};
 use sjd::tensor::{Pcg64, Tensor};
 // The analytic flow math (batch-generic) is shared with the serving tests
@@ -1207,6 +1209,222 @@ fn sampler_set_decodes_per_bucket_with_shared_weights() {
     // Decode went through the per-bucket artifact families.
     assert!(be.ledger.count_containing("_b1") > 0);
     assert!(be.ledger.count_containing("_b2") > 0);
+}
+
+// ---------------------------------------------------------------------------
+// Stage-graph pipeline
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pipeline_bit_exact_with_monolithic_decode() {
+    use std::collections::BTreeMap;
+    use std::sync::{Arc, Mutex};
+
+    // Acceptance contract: the stage-graph pipeline (2 batches in flight,
+    // one stage thread per block) produces bit-identical tokens, traces and
+    // images to the monolithic Sampler::decode_tokens at τ = 0, across
+    // policies covering every decode mode.
+    let policies = vec![
+        DecodePolicy::UniformJacobi,
+        DecodePolicy::Selective { seq_blocks: 1 },
+        DecodePolicy::PerBlock {
+            modes: vec![
+                BlockDecode::Sequential,
+                BlockDecode::GsFused { windows: 2, chunk: 2 },
+                BlockDecode::Fused { chunk: 3 },
+                BlockDecode::GsJacobi { windows: 4 },
+            ],
+        },
+    ];
+    for policy in policies {
+        let mut opts = SampleOptions { policy: policy.clone(), ..Default::default() };
+        opts.jacobi.tau = 0.0; // exactness sweeps — the bit-exact regime
+
+        // Pipelined decode over the shared serve mock (host-only values).
+        let cfg = PipelineConfig { depth: 2, stage_threads: 0 };
+        let factory = move |_stage: usize| {
+            Ok(MockServeBackend::new(&[2], std::time::Duration::ZERO, MockLedger::new()))
+        };
+        let pipeline =
+            DecodePipeline::start("mock", &[2], cfg, sjd::metrics::Registry::new(), factory)
+                .unwrap();
+        assert_eq!(pipeline.blocks, K);
+        let results = Arc::new(Mutex::new(BTreeMap::new()));
+        for seed in 0..4u64 {
+            let results = results.clone();
+            let job = PipelineJob {
+                seed,
+                n: 2,
+                opts: opts.clone(),
+                done: Box::new(move |res| {
+                    results.lock().unwrap().insert(seed, res.expect("pipeline decode"));
+                }),
+            };
+            pipeline.submit(job).map_err(|_| "submit").unwrap();
+        }
+        pipeline.shutdown(); // drains all four batches
+        let results = results.lock().unwrap();
+        assert_eq!(results.len(), 4);
+
+        // Monolithic reference, same RNG convention as pipeline stage 0.
+        let be = MockServeBackend::new(&[2], std::time::Duration::ZERO, MockLedger::new());
+        let sampler = Sampler::new(&be, "mock", 2).unwrap();
+        for seed in 0..4u64 {
+            let mut rng = Pcg64::seed_stream(seed, 1);
+            let z = sampler.sample_prior(&mut rng);
+            let want = sampler.decode_tokens(z, &opts).unwrap();
+            let want_imgs = sampler.unpatchify(&want.tokens).unwrap();
+            let (imgs, out) = &results[&seed];
+            assert_eq!(out.tokens, want.tokens, "{} seed {seed}", policy.label());
+            assert_eq!(out.traces.len(), want.traces.len());
+            for (a, b) in out.traces.iter().zip(&want.traces) {
+                assert_eq!(a.block, b.block);
+                assert_eq!(a.steps, b.steps, "per-block steps must match");
+                assert_eq!(a.position_updates, b.position_updates);
+                assert_eq!(a.host_syncs, b.host_syncs);
+            }
+            assert_eq!(imgs.len(), want_imgs.len());
+            for (a, b) in imgs.iter().zip(&want_imgs) {
+                assert_eq!(a.data(), b.data(), "images must be bit-identical");
+            }
+        }
+    }
+}
+
+#[test]
+fn pipeline_reports_stage_metrics_and_inflight_bound() {
+    let cfg = PipelineConfig { depth: 1, stage_threads: 2 };
+    let factory = move |_stage: usize| {
+        Ok(MockServeBackend::new(&[2], std::time::Duration::ZERO, MockLedger::new()))
+    };
+    let registry = sjd::metrics::Registry::new();
+    let pipeline = DecodePipeline::start("mock", &[2], cfg, registry.clone(), factory).unwrap();
+    assert_eq!(pipeline.buckets, vec![2]);
+    let done = std::sync::Arc::new(std::sync::atomic::AtomicUsize::new(0));
+    for seed in 0..3u64 {
+        let done = done.clone();
+        let job = PipelineJob {
+            seed,
+            n: 2,
+            opts: SampleOptions::default(),
+            done: Box::new(move |res| {
+                res.expect("pipeline decode");
+                done.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+            }),
+        };
+        pipeline.submit(job).map_err(|_| "submit").unwrap();
+        // Depth 1: the previous batch fully completed before submit returned
+        // a second time, so in-flight can never exceed the gate.
+        assert!(pipeline.in_flight() <= 1);
+    }
+    pipeline.shutdown();
+    assert_eq!(done.load(std::sync::atomic::Ordering::SeqCst), 3);
+    // Both stage threads processed work and the wait histogram saw every
+    // batch at every stage.
+    assert_eq!(registry.histogram("sjd_stage_wait").count(), 6);
+    let g0 = registry.gauge("sjd_stage_0_occupancy").get();
+    let g1 = registry.gauge("sjd_stage_1_occupancy").get();
+    assert_eq!((g0, g1), (0, 0), "occupancy gauges must return to zero");
+}
+
+#[test]
+fn pipeline_startup_failure_errors_without_leaking_stages() {
+    // One stage's backend fails to build: start() must surface the error
+    // AND join the already-spawned healthy stages (this test hangs if a
+    // stage is left blocked on its queue).
+    let cfg = PipelineConfig { depth: 2, stage_threads: 0 };
+    let factory = move |stage: usize| {
+        if stage == 2 {
+            anyhow::bail!("stage 2 backend exploded");
+        }
+        Ok(MockServeBackend::new(&[2], std::time::Duration::ZERO, MockLedger::new()))
+    };
+    let err = DecodePipeline::start("mock", &[2], cfg, sjd::metrics::Registry::new(), factory)
+        .map(|_| ())
+        .unwrap_err();
+    assert!(err.to_string().contains("exploded"), "{err}");
+}
+
+// ---------------------------------------------------------------------------
+// Degradation chain under partial manifests
+// ---------------------------------------------------------------------------
+
+#[test]
+fn partial_manifest_routes_each_bucket_to_its_best_mode() {
+    // Bucket 1's fused windowed step predates the lowering; bucket 2 is
+    // fully lowered. A gs_fuse policy must route bucket 1 through the
+    // per-iteration GS driver and bucket 2 through the fused one — per
+    // block, per bucket, never all-or-nothing.
+    let ledger = MockLedger::new();
+    let be = MockServeBackend::new(&[1, 2], std::time::Duration::ZERO, ledger.clone())
+        .without_role_in_bucket("block_jstep_win_fuse", 1);
+    let set = SamplerSet::new(&be, "mock", &[]).unwrap();
+    let gsf = BlockDecode::GsFused { windows: 2, chunk: 2 };
+    assert_eq!(set.select(1).effective_block_mode(gsf, 0), BlockDecode::GsJacobi { windows: 2 });
+    assert_eq!(set.select(2).effective_block_mode(gsf, 0), gsf);
+    // The full-sequence fused role is still present in bucket 1.
+    let fused = BlockDecode::Fused { chunk: 3 };
+    assert_eq!(set.select(1).effective_block_mode(fused, 0), fused);
+
+    let opts = SampleOptions {
+        policy: DecodePolicy::PerBlock { modes: vec![gsf; K] },
+        ..Default::default()
+    };
+    let _ = set.select(1).decode_tokens(randn(&[1, L, D], 7), &opts).unwrap();
+    assert!(ledger.count("mock_block_jstep_win_b1") > 0, "bucket 1 degrades to gs");
+    assert_eq!(ledger.count("mock_block_jstep_win_fuse_b1"), 0);
+    let _ = set.select(2).decode_tokens(randn(&[2, L, D], 8), &opts).unwrap();
+    assert!(ledger.count("mock_block_jstep_win_fuse_b2") > 0, "bucket 2 stays fused");
+    assert_eq!(ledger.count("mock_block_jstep_win_b2"), 0);
+}
+
+#[test]
+fn partial_manifest_degrades_transitively_to_plain_jacobi() {
+    // Every optional role missing: gs_fuse falls through gs to plain
+    // Jacobi, fuse falls to Jacobi — and only the base jstep is called.
+    let ledger = MockLedger::new();
+    let be = MockServeBackend::new(&[1], std::time::Duration::ZERO, ledger.clone())
+        .without_role("block_jstep_win_fuse")
+        .without_role("block_jstep_win")
+        .without_role("block_jstep_fuse");
+    let sampler = Sampler::new(&be, "mock", 1).unwrap();
+    let gsf = BlockDecode::GsFused { windows: 4, chunk: 2 };
+    let fused3 = BlockDecode::Fused { chunk: 3 };
+    assert_eq!(sampler.effective_block_mode(gsf, 0), BlockDecode::Jacobi);
+    assert_eq!(sampler.effective_block_mode(fused3, 0), BlockDecode::Jacobi);
+    assert_eq!(
+        sampler.effective_block_mode(BlockDecode::GsJacobi { windows: 4 }, 0),
+        BlockDecode::Jacobi
+    );
+    let opts = SampleOptions {
+        policy: DecodePolicy::PerBlock { modes: vec![gsf; K] },
+        ..Default::default()
+    };
+    let _ = sampler.decode_tokens(randn(&[1, L, D], 9), &opts).unwrap();
+    assert!(ledger.count("mock_block_jstep_b1") >= K);
+    assert_eq!(ledger.count_containing("win"), 0);
+    assert_eq!(ledger.count_containing("fuse"), 0);
+}
+
+#[test]
+fn scalar_cache_bound_holds_under_mock_uploads() {
+    // Satellite bugfix: the pool must not pin one device scalar per
+    // distinct value forever — the mock's upload ledger sees re-uploads
+    // only for values that were LRU-evicted past the cap.
+    let be = MockBackend::new();
+    let pool = BufferPool::new();
+    let n = SCALAR_CACHE_CAP + 20;
+    for v in 0..n as i32 {
+        pool.device_scalar_i32(v, |t| be.to_device(t)).unwrap();
+    }
+    assert_eq!(pool.scalar_cache_len(), SCALAR_CACHE_CAP, "cache is bounded");
+    assert_eq!(be.uploads_of(&[]), n);
+    // A hot value is served from cache; an evicted one re-uploads.
+    pool.device_scalar_i32(n as i32 - 1, |t| be.to_device(t)).unwrap();
+    assert_eq!(be.uploads_of(&[]), n);
+    pool.device_scalar_i32(0, |t| be.to_device(t)).unwrap();
+    assert_eq!(be.uploads_of(&[]), n + 1);
+    assert_eq!(pool.scalar_cache_len(), SCALAR_CACHE_CAP);
 }
 
 #[test]

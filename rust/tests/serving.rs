@@ -6,11 +6,15 @@
 //! tests over real TCP + PJRT that skip when artifacts are missing.
 
 use sjd::coordinator::batcher::Batcher;
-use sjd::coordinator::policy::DecodePolicy;
+use sjd::coordinator::jacobi::{JacobiConfig, JacobiStats};
+use sjd::coordinator::policy::{
+    calibrate_chunks, BlockDecode, DecodePolicy, PolicyTuner, TunerConfig,
+};
 use sjd::coordinator::router::{Router, RouterConfig};
-use sjd::coordinator::sampler::SampleOptions;
-use sjd::coordinator::server::{Server, ServerConfig};
+use sjd::coordinator::sampler::{SampleOptions, Sampler};
+use sjd::coordinator::server::{PolicySource, Server, ServerConfig};
 use sjd::metrics::Registry;
+use sjd::tensor::Pcg64;
 use sjd::testkit::mockflow::{MockLedger, MockServeBackend};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
@@ -80,6 +84,9 @@ fn mock_router(
             buckets: Vec::new(), // = every bucket the mock claims lowered
             workers: 1,
             options: SampleOptions { policy, ..Default::default() },
+            pipeline_depth: 1,
+            stage_threads: 0,
+            tuner: None,
         },
         batcher.clone(),
         registry.clone(),
@@ -307,6 +314,225 @@ fn generate_after_shutdown_returns_500_not_hang() {
     stop_server(addr, stop, t);
 }
 
+#[test]
+fn pipelined_router_matches_monolithic_images() {
+    // The stage-graph path (pipeline_depth 2: one engine per stage thread,
+    // ≥2 batches in flight) must produce bit-identical images to the
+    // monolithic worker for identical submissions.
+    let run = |depth: usize| -> (Vec<Vec<f32>>, Registry) {
+        let registry = Registry::new();
+        let batcher = Batcher::new(1, Duration::from_millis(2));
+        let ledger = MockLedger::new();
+        let router = Router::start_with(
+            RouterConfig {
+                artifacts_dir: "unused-by-mock".into(),
+                model: "mock".into(),
+                buckets: Vec::new(),
+                workers: 1,
+                options: SampleOptions::default(),
+                pipeline_depth: depth,
+                stage_threads: 0,
+                tuner: None,
+            },
+            batcher.clone(),
+            registry.clone(),
+            move |_| Ok(MockServeBackend::new(&[1], Duration::ZERO, ledger.clone())),
+        )
+        .expect("router");
+        let mut images = Vec::new();
+        for seed in 0..4u64 {
+            let img = batcher.submit(seed, seed * 3 + 1).unwrap().wait().expect("image");
+            images.push(img.data().to_vec());
+        }
+        router.shutdown();
+        (images, registry)
+    };
+    let (mono, _) = run(1);
+    let (piped, registry) = run(2);
+    assert_eq!(mono, piped, "pipelined decode must be bit-exact with monolithic");
+    // The pipelined run exposes the stage-graph metrics (4 mock blocks ⇒
+    // stages 0..=3, each touched by all 4 batches).
+    assert_eq!(registry.histogram("sjd_stage_wait").count(), 16);
+    assert_eq!(registry.gauge("sjd_stage_3_occupancy").get(), 0);
+    assert_eq!(registry.histogram("sjd_decode_time").snapshot().count, 4);
+    assert_eq!(registry.counter("sjd_bucket_1_batches").get(), 4);
+}
+
+/// Offline-vs-online agreement is compared in (windows, chunk) space — the
+/// knobs the tuner adjusts.
+fn windows_chunk(mode: &BlockDecode) -> (usize, usize) {
+    match mode {
+        BlockDecode::Sequential => (0, 0),
+        BlockDecode::Jacobi => (1, 0),
+        BlockDecode::Fused { chunk } => (1, *chunk),
+        BlockDecode::GsJacobi { windows } => (*windows, 0),
+        BlockDecode::GsFused { windows, chunk } => (*windows, *chunk),
+    }
+}
+
+#[test]
+fn tuned_router_converges_to_offline_calibration() {
+    // Acceptance contract: a --tune'd serve run, with NO calibration file,
+    // converges to within ±1 window/chunk of the offline `sjd calibrate
+    // --chunks` answer on the mock flow.
+    let kk = 4usize;
+    let seq_len = 8usize;
+    let (max_windows, s_max) = (8usize, 4usize);
+
+    // Offline reference: the cmd_calibrate measurement loop (sequential
+    // chain + per-block full-sequence Jacobi at the default τ), averaged
+    // over several priors for a stable iteration estimate. Sequential walls
+    // are pinned large: on a real accelerator sequential decode is the slow
+    // baseline, and hermetic wall-clock noise must not flip blocks.
+    let be = MockServeBackend::new(&[2], Duration::ZERO, MockLedger::new());
+    let sampler = Sampler::new(&be, "mock", 2).unwrap();
+    let draws = 8u64;
+    let mut mean_iters = vec![0f64; kk];
+    for d in 0..draws {
+        let mut rng = Pcg64::seed(100 + d);
+        let mut h = sampler.sample_prior(&mut rng);
+        for (pos, mean) in mean_iters.iter_mut().enumerate() {
+            let k = kk - 1 - pos;
+            let (_z, stats) = sampler.jacobi_decode(k, &h, &JacobiConfig::default(), 0).unwrap();
+            assert!(stats.converged, "mock blocks converge at the default τ");
+            *mean += stats.iterations as f64 / draws as f64;
+            let (u, _) = sampler.sequential_decode_block(k, &h).unwrap();
+            h = if k % 2 == 1 { sampler.reverse_tokens(&u).unwrap() } else { u };
+        }
+    }
+    let jstats: Vec<JacobiStats> = mean_iters
+        .iter()
+        .enumerate()
+        .map(|(pos, &m)| JacobiStats {
+            block: kk - 1 - pos,
+            iterations: m.round() as usize,
+            wall: Duration::from_millis(1),
+            residuals: vec![],
+            converged: true,
+            host_syncs: 0,
+        })
+        .collect();
+    let seq_walls = vec![Duration::from_secs(1); kk];
+    let offline = calibrate_chunks(&jstats, &seq_walls, seq_len, max_windows, s_max);
+
+    // Online: a tuned router (stage-pipelined, depth 2) over live traffic.
+    let tuner = Arc::new(PolicyTuner::new(
+        kk,
+        seq_len,
+        DecodePolicy::UniformJacobi,
+        TunerConfig { s_max, max_windows, alpha: 0.3, min_obs: 3, probe_every: 8, dwell: 2 },
+    ));
+    let registry = Registry::new();
+    let batcher = Batcher::new(2, Duration::from_millis(100));
+    let ledger = MockLedger::new();
+    let router = Router::start_with(
+        RouterConfig {
+            artifacts_dir: "unused-by-mock".into(),
+            model: "mock".into(),
+            buckets: Vec::new(),
+            workers: 1,
+            options: SampleOptions { policy: DecodePolicy::UniformJacobi, ..Default::default() },
+            pipeline_depth: 2,
+            stage_threads: 0,
+            tuner: Some(tuner.clone()),
+        },
+        batcher.clone(),
+        registry.clone(),
+        move |_| Ok(MockServeBackend::new(&[2], Duration::ZERO, ledger.clone())),
+    )
+    .expect("tuned router");
+    for round in 0..24u64 {
+        let a = batcher.submit(round, 1000 + round * 2).unwrap();
+        let b = batcher.submit(round, 1001 + round * 2).unwrap();
+        a.wait().expect("image");
+        b.wait().expect("image");
+    }
+    router.shutdown();
+
+    let DecodePolicy::PerBlock { modes: tuned } = tuner.snapshot(2).expect("bucket 2 tuned")
+    else {
+        panic!("tuner snapshot is per-block");
+    };
+    let DecodePolicy::PerBlock { modes: want } = offline else { unreachable!() };
+    for pos in 0..kk {
+        let (w_off, c_off) = windows_chunk(&want[pos]);
+        let (w_on, c_on) = windows_chunk(&tuned[pos]);
+        assert!(
+            w_off.abs_diff(w_on) <= 1,
+            "pos {pos}: windows {w_on} vs offline {w_off} ({:?} vs {:?})",
+            tuned[pos],
+            want[pos]
+        );
+        assert!(
+            c_off.abs_diff(c_on) <= 1,
+            "pos {pos}: chunk {c_on} vs offline {c_off} ({:?} vs {:?})",
+            tuned[pos],
+            want[pos]
+        );
+    }
+}
+
+#[test]
+fn policy_endpoint_serves_static_and_tuner_state() {
+    // /policy with a static source answers the configured policy; with a
+    // tuner attached it answers the live state; without either it is 404.
+    let addr = "127.0.0.1:8506";
+    let registry = Registry::new();
+    let pol = DecodePolicy::GsJacobi { windows: 4 };
+    let tuner = Arc::new(PolicyTuner::new(
+        4,
+        8,
+        DecodePolicy::UniformJacobi,
+        TunerConfig::default(),
+    ));
+    let _ = tuner.policy_for(2); // touch one bucket so state is non-empty
+    let server = Server::with_config(
+        addr,
+        Batcher::new(1, Duration::from_millis(5)),
+        registry.clone(),
+        ServerConfig {
+            policy: Some(PolicySource { configured: pol.to_json(), tuner: Some(tuner) }),
+            ..Default::default()
+        },
+    );
+    let (stop, t) = start_server(server);
+    let resp = get(addr, "/policy");
+    assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+    let body = resp.split("\r\n\r\n").nth(1).unwrap();
+    let v = sjd::jsonx::parse(body).expect("policy body is JSON");
+    assert_eq!(v.req_str("source").unwrap(), "tuner");
+    assert!(v.get("buckets").is_some());
+    stop_server(addr, stop, t);
+
+    // Static fallback (no tuner).
+    let addr = "127.0.0.1:8507";
+    let server = Server::with_config(
+        addr,
+        Batcher::new(1, Duration::from_millis(5)),
+        Registry::new(),
+        ServerConfig {
+            policy: Some(PolicySource { configured: pol.to_json(), tuner: None }),
+            ..Default::default()
+        },
+    );
+    let (stop, t) = start_server(server);
+    let resp = get(addr, "/policy");
+    assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+    let body = resp.split("\r\n\r\n").nth(1).unwrap();
+    let v = sjd::jsonx::parse(body).unwrap();
+    assert_eq!(v.req_str("source").unwrap(), "static");
+    assert_eq!(v.get("policy").and_then(|p| p.req_str("kind").ok()), Some("gs"));
+    stop_server(addr, stop, t);
+
+    // No source wired in → 404.
+    let addr = "127.0.0.1:8508";
+    let server = Server::new(addr, Batcher::new(1, Duration::from_millis(5)), Registry::new());
+    let (stop, t) = start_server(server);
+    let resp = get(addr, "/policy");
+    assert!(resp.starts_with("HTTP/1.1 404"), "{resp}");
+    stop_server(addr, stop, t);
+}
+
 // ---------------------------------------------------------------------------
 // Artifact-driven end-to-end tests (skip without artifacts)
 // ---------------------------------------------------------------------------
@@ -324,6 +550,9 @@ fn serve_generate_and_metrics_end_to_end() {
             buckets: vec![1],
             workers: 1,
             options: SampleOptions::default(),
+            pipeline_depth: 1,
+            stage_threads: 0,
+            tuner: None,
         },
         batcher.clone(),
         registry.clone(),
@@ -426,6 +655,9 @@ fn batcher_groups_concurrent_requests() {
             buckets: vec![8],
             workers: 1,
             options: SampleOptions::default(),
+            pipeline_depth: 1,
+            stage_threads: 0,
+            tuner: None,
         },
         batcher.clone(),
         registry.clone(),
