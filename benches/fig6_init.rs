@@ -1,6 +1,13 @@
-//! **Fig 6**: initialization ablation — zeros vs N(0, I) vs previous-layer
-//! output as the Jacobi starting point. Paper shape: acceleration is
-//! insensitive to initialization (superlinear local convergence dominates).
+//! **Fig 6**: initialization ablation — the full `--init` provider sweep
+//! (zeros, N(0, I), previous-layer, projection, draft-then-refine,
+//! warm-start) as the Jacobi starting point, on real artifacts. Paper
+//! shape: acceleration is insensitive to the *statistical* initializations
+//! (superlinear local convergence dominates); the speculative providers
+//! are judged on `total_updates_with_spec()` — refine updates plus the
+//! speculation's own cost — which is what the serving tuner gates on.
+//!
+//! Every rep decodes the same seed so the warm-start row sees the
+//! repeat-traffic regime it exists for (its first rep is the cold fill).
 
 mod common;
 
@@ -25,32 +32,59 @@ fn main() -> anyhow::Result<()> {
         (InitStrategy::Zeros, "zeros"),
         (InitStrategy::Normal, "N(0, I)"),
         (InitStrategy::PrevLayer, "prev layer"),
+        (InitStrategy::Proj, "projection"),
+        (InitStrategy::Draft, "draft-refine"),
+        (InitStrategy::Warm, "warm-start"),
     ] {
         let mut opts = SampleOptions {
             policy: DecodePolicy::Selective { seq_blocks: 1 },
             ..Default::default()
         };
         opts.jacobi.init = init;
-        // Warmup.
+        // Warmup (for the warm-start row this is also the cache fill —
+        // opts.seed stays fixed so every timed rep replays the same keys).
         let mut rng = Pcg64::seed(1);
         let _ = sampler.sample_images(&opts, &mut rng)?;
         let mut wall = 0.0;
         let mut iters = 0usize;
-        for rep in 0..reps {
-            opts.seed = rep as u64;
-            let mut rng = Pcg64::seed(100 + rep as u64);
+        let mut updates = 0usize;
+        let mut hits = 0usize;
+        for _ in 0..reps {
+            // Identical request every rep — the repeat-traffic regime —
+            // so the warm row's cached iterates are genuine fixed points.
+            let mut rng = Pcg64::seed(100);
             let (_, out) = sampler.sample_images(&opts, &mut rng)?;
             wall += out.total_wall.as_secs_f64();
             iters += out.total_jacobi_iters();
+            updates += out.total_updates_with_spec();
+            hits += out.spec_hits();
         }
         let per_batch = wall / reps as f64;
         let mean_iters = iters as f64 / reps as f64;
-        println!("{label}: {per_batch:.3}s/batch, {mean_iters:.1} jacobi iters");
-        rows.push(vec![label.into(), format!("{per_batch:.3}"), format!("{mean_iters:.1}")]);
+        let mean_updates = updates as f64 / reps as f64;
+        println!(
+            "{label}: {per_batch:.3}s/batch, {mean_iters:.1} jacobi iters, \
+             {mean_updates:.0} updates (+spec), {hits} spec hits"
+        );
+        rows.push(vec![
+            label.into(),
+            format!("{per_batch:.3}"),
+            format!("{mean_iters:.1}"),
+            format!("{mean_updates:.0}"),
+            hits.to_string(),
+        ]);
     }
 
-    report.table(&["Initialization", "Time/batch (s)", "Mean Jacobi iters"], &rows);
-    report.note("Paper shape: all initializations give similar acceleration.");
+    report.table(
+        &["Initialization", "Time/batch (s)", "Mean Jacobi iters", "Updates (+spec)", "Spec hits"],
+        &rows,
+    );
+    report.note(
+        "Paper shape: the statistical initializations give similar acceleration; \
+         the speculative providers only pay when their updates (+spec) column \
+         beats zeros — the serving tuner measures exactly this and falls back \
+         otherwise (benches/spec_init.rs gates it on the mock).",
+    );
     report.finish();
     Ok(())
 }

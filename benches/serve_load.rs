@@ -125,6 +125,7 @@ fn run_config(
             pipeline_depth: 1,
             stage_threads: 0,
             tuner: None,
+            warm_cap: 0,
         },
         batcher.clone(),
         registry.clone(),

@@ -111,6 +111,7 @@ fn serve_and_measure(
             pipeline_depth: 1,
             stage_threads: 0,
             tuner: None,
+            warm_cap: 0,
         },
         batcher.clone(),
         registry.clone(),

@@ -276,6 +276,20 @@ def lower_tarflow(w: ArtifactWriter, cfg: tarflow.TarFlowConfig, params, batches
             ["k", "z_prev", "y", "steps", "off", "len"],
             model=cfg.name,
         )
+        # Speculative-init projection: truncated conditioner + one affine
+        # extrapolation predicting a z⁰ for the Jacobi solve from the block
+        # input alone. Optional role (like the fused family): drivers that
+        # don't find it start from zeros. Untupled so the prediction chains
+        # straight into the jstep inputs with zero host traffic — the
+        # speculative path must never round-trip through the CPU.
+        w.lower(
+            f"{cfg.name}_init_proj_b{b}",
+            lambda k, y: tarflow.block_init_proj(params, cfg, k, y, use_pallas=True),
+            [((), I32), ((b, L, D), jnp.float32)],
+            ["k", "y"],
+            model=cfg.name,
+            untupled=True,
+        )
         w.lower(
             f"{cfg.name}_block_seqfull_b{b}",
             lambda k, v: (tarflow.block_seq_full(params, cfg, k, v),),

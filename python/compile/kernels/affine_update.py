@@ -116,6 +116,42 @@ def affine_inverse_update_window(z_prev, y, s, g, off, wlen, interpret=True):
     )(win, z_prev, y, s, g)
 
 
+def _init_kernel(y_ref, s_ref, g_ref, out_ref):
+    """Speculative z⁰ extrapolation: the Alg 1 affine body evaluated once
+    with the conditioner run on the block input ``y`` itself. No residual
+    output — the result seeds the Jacobi solve, it is not an iterate under
+    the τ test — so the program lowers with a single (chainable) root."""
+    y = y_ref[0]  # (L, D)
+    s = s_ref[0]
+    g = g_ref[0]
+    z0 = y * jnp.exp(-s) + g
+    l, d = z0.shape
+    rows = jax.lax.broadcasted_iota(jnp.int32, (l, d), 0)
+    out_ref[0] = jnp.where(rows == 0, y, z0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def init_extrapolate(y, s, g, interpret=True):
+    """Fused speculative-init extrapolation (see :func:`ref.init_extrapolate_ref`).
+
+    Args:
+      y, s, g: (B, L, D) f32
+
+    Returns:
+      z0 (B, L, D) with z0[:, 0] = y[:, 0]
+    """
+    b, l, d = y.shape
+    spec = pl.BlockSpec((1, l, d), lambda i: (i, 0, 0))
+    return pl.pallas_call(
+        _init_kernel,
+        grid=(b,),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((b, l, d), jnp.float32),
+        interpret=interpret,
+    )(y, s, g)
+
+
 def vmem_bytes_estimate(l: int, d: int) -> int:
     """Per-program VMEM working set: four input tiles + output tile, f32."""
     return 4 * (5 * l * d)

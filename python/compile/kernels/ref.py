@@ -89,6 +89,26 @@ def affine_inverse_update_window_ref(z_prev, y, s, g, off, wlen):
     return z_next, resid
 
 
+def init_extrapolate_ref(y, s, g):
+    """Speculative z⁰ extrapolation (cross-block init provider).
+
+    One affine inverse update evaluated at ``z = y`` — i.e. the Alg 1 body
+    with the (s, g) conditioner run on the block *input* instead of a prior
+    iterate — producing a predicted starting iterate for the Jacobi solve.
+    Unlike :func:`affine_inverse_update_ref` there is no residual output:
+    the prediction is a seed, not an iterate under the τ test.
+
+    Args:
+      y:    (B, L, D) block input z_{k+1}
+      s, g: (B, L, D) shift/scale predicted from y
+
+    Returns:
+      z0: (B, L, D) with z0[:, 0] = y[:, 0]
+    """
+    z0 = y * jnp.exp(-s) + g
+    return z0.at[:, 0, :].set(y[:, 0, :])
+
+
 def affine_forward_ref(u, s, g):
     """Forward affine transform (encode direction, eq 4) + logdet.
 

@@ -70,8 +70,8 @@ class TestArtifactWriter:
         assert names == {
             "tiny_fwd_b1", "tiny_block_fwd_b1", "tiny_block_jstep_b1",
             "tiny_block_jstep_win_b1", "tiny_block_jstep_fuse_b1",
-            "tiny_block_jstep_win_fuse_b1", "tiny_block_seqfull_b1",
-            "tiny_block_seqstep_b1", "tiny_reverse_b1"}
+            "tiny_block_jstep_win_fuse_b1", "tiny_init_proj_b1",
+            "tiny_block_seqfull_b1", "tiny_block_seqstep_b1", "tiny_reverse_b1"}
         for a in manifest["artifacts"]:
             assert (tmp_path / a["file"]).exists()
             assert all("shape" in t and "dtype" in t for t in a["inputs"])
@@ -127,6 +127,21 @@ class TestArtifactWriter:
         assert wfuse["untupled_outputs"] is False
 
 
+    def test_init_proj_signature(self, tiny_tf, tmp_path):
+        """The speculative-init projection: (k, y) → z0, single output and
+        lowered untupled — the prediction must be a chainable device leaf so
+        the speculative path never round-trips through the host."""
+        cfg, params = tiny_tf
+        w = aot.ArtifactWriter(tmp_path)
+        aot.lower_tarflow(w, cfg, params, [1])
+        proj = next(e for e in w.entries if e["name"].endswith("init_proj_b1"))
+        assert [i["name"] for i in proj["inputs"]] == ["k", "y"]
+        assert [i["dtype"] for i in proj["inputs"]] == ["i32", "f32"]
+        assert [o["shape"] for o in proj["outputs"]] == [
+            [1, cfg.seq_len, cfg.token_dim]]
+        assert proj["untupled_outputs"] is True
+
+
 class TestBatchBuckets:
     def test_parse_batch_sizes(self):
         assert aot.parse_batch_sizes("") is None
@@ -150,7 +165,7 @@ class TestBatchBuckets:
         manifest = json.loads((tmp_path / "manifest.json").read_text())
         names = {a["name"] for a in manifest["artifacts"]}
         roles = ["fwd", "block_fwd", "block_jstep", "block_jstep_win",
-                 "block_jstep_fuse", "block_jstep_win_fuse",
+                 "block_jstep_fuse", "block_jstep_win_fuse", "init_proj",
                  "block_seqfull", "block_seqstep", "reverse"]
         for b in (1, 2):
             for role in roles:

@@ -155,6 +155,46 @@ class TestAffineUpdate:
 
 
 # ---------------------------------------------------------------------------
+# Speculative-init extrapolation
+# ---------------------------------------------------------------------------
+
+
+class TestInitExtrapolate:
+    def test_matches_ref(self):
+        y, s, g = (_rand(90 + i, (3, 16, 6)) for i in range(3))
+        zp = affine_update.init_extrapolate(y, s, g)
+        zr = ref.init_extrapolate_ref(y, s, g)
+        np.testing.assert_allclose(np.asarray(zp), np.asarray(zr), atol=1e-5)
+
+    def test_first_token_passthrough(self):
+        y, s, g = (_rand(95 + i, (2, 8, 4)) for i in range(3))
+        z0 = affine_update.init_extrapolate(y, s, g)
+        np.testing.assert_allclose(np.asarray(z0)[:, 0], np.asarray(y)[:, 0], atol=1e-6)
+
+    def test_equals_update_body_without_residual(self):
+        """The extrapolation IS the Alg 1 body — same z' as the fused update
+        kernel applied to any iterate (the body never reads z_prev except
+        for the residual)."""
+        z, y, s, g = (_rand(100 + i, (2, 8, 4)) for i in range(4))
+        z0 = affine_update.init_extrapolate(y, s, g)
+        z_next, _ = affine_update.affine_inverse_update(z, y, s, g)
+        np.testing.assert_allclose(np.asarray(z0), np.asarray(z_next), atol=0)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        b=st.integers(1, 4),
+        l=st.sampled_from([1, 2, 16, 31]),
+        d=st.sampled_from([1, 3, 12]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_shapes(self, b, l, d, seed):
+        y, s, g = (_rand(seed + i, (b, l, d)) for i in range(3))
+        zp = affine_update.init_extrapolate(y, s, g)
+        zr = ref.init_extrapolate_ref(y, s, g)
+        np.testing.assert_allclose(np.asarray(zp), np.asarray(zr), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
 # Windowed affine update (GS-Jacobi inner step)
 # ---------------------------------------------------------------------------
 

@@ -275,6 +275,50 @@ class TestJacobiFused:
         np.testing.assert_allclose(np.asarray(z), np.asarray(u), atol=1e-4)
 
 
+class TestInitProj:
+    """Speculative-init projection: a cheap z⁰ predictor whose only
+    correctness obligation is that the exact Jacobi iteration started from
+    it reaches the same fixed point (Prop 3.2 from any z⁰)."""
+
+    def test_pallas_and_ref_paths_agree(self, small):
+        cfg, params = small
+        y = jax.random.normal(jax.random.PRNGKey(50), (2, cfg.seq_len, cfg.token_dim))
+        zp = tarflow.block_init_proj(params, cfg, 1, y, use_pallas=True)
+        zr = tarflow.block_init_proj(params, cfg, 1, y, use_pallas=False)
+        np.testing.assert_allclose(np.asarray(zp), np.asarray(zr), atol=1e-4)
+
+    def test_first_token_passthrough(self, small):
+        cfg, params = small
+        y = jax.random.normal(jax.random.PRNGKey(51), (1, cfg.seq_len, cfg.token_dim))
+        z0 = tarflow.block_init_proj(params, cfg, 0, y, use_pallas=False)
+        np.testing.assert_allclose(np.asarray(z0)[:, 0], np.asarray(y)[:, 0], atol=1e-6)
+
+    def test_jacobi_from_prediction_reaches_exact_inverse(self, small):
+        """L Jacobi steps from the predicted z⁰ land on the same solution as
+        from zeros — the seed can never change the decoded output at τ=0."""
+        cfg, params = small
+        L = cfg.seq_len
+        u = jax.random.normal(jax.random.PRNGKey(52), (1, L, cfg.token_dim))
+        v, _ = tarflow.block_forward(params, cfg, 1, u)
+        z = tarflow.block_init_proj(params, cfg, 1, v, use_pallas=False)
+        for _ in range(L):
+            z, _ = tarflow.block_jacobi_step(params, cfg, 1, z, v, 0, use_pallas=False)
+        np.testing.assert_allclose(np.asarray(z), np.asarray(u), atol=1e-4)
+
+    def test_prediction_beats_zeros_on_first_residual(self, small):
+        """The point of the provider: the first exact Jacobi step from the
+        prediction should see a smaller residual than from the zero init
+        (the conditioner shares the in/out projections with the exact net)."""
+        cfg, params = small
+        u = jax.random.normal(jax.random.PRNGKey(53), (2, cfg.seq_len, cfg.token_dim))
+        v, _ = tarflow.block_forward(params, cfg, 2, u)
+        z0 = tarflow.block_init_proj(params, cfg, 2, v, use_pallas=False)
+        _, r_pred = tarflow.block_jacobi_step(params, cfg, 2, z0, v, 0, use_pallas=False)
+        _, r_zero = tarflow.block_jacobi_step(
+            params, cfg, 2, jnp.zeros_like(v), v, 0, use_pallas=False)
+        assert float(r_pred.max()) < float(r_zero.max())
+
+
 class TestSeqStep:
     def test_matches_exact_inverse(self, small):
         cfg, params = small

@@ -69,7 +69,16 @@ use crate::tensor::Pcg64;
 use anyhow::{ensure, Context, Result};
 use std::time::{Duration, Instant};
 
-/// How `z⁰` is initialized (paper Fig 6 ablation).
+/// How `z⁰` is initialized: the paper's Fig 6 ablation strategies plus the
+/// speculative *init providers* (predicted z⁰, per PJD's observation that
+/// iteration counts are mostly an initialization-quality effect).
+///
+/// Prop 3.2 holds from **any** starting iterate, so every variant decodes
+/// bit-exactly at τ = 0 — a bad prediction costs iterations, never
+/// correctness. The speculative variants' predictions are produced by the
+/// `Sampler` (which owns the artifacts and warm cache) and threaded into
+/// the drivers through the `z0: Option<Value>` hook; when no prediction is
+/// available the drivers fall back to Zeros.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum InitStrategy {
     /// `z⁰ = 0` (paper default, Alg 1).
@@ -78,6 +87,17 @@ pub enum InitStrategy {
     Normal,
     /// `z⁰ = z_{k+1}` (previous layer's output — the Jacobi input itself).
     PrevLayer,
+    /// Cross-block extrapolation: `z⁰` predicted from the block input by the
+    /// lowered `{m}_init_proj_b{B}` projection artifact (truncated
+    /// conditioner + one affine extrapolation, device-resident end to end).
+    Proj,
+    /// Draft-then-refine: a coarse-τ fused draft pass produces a
+    /// full-sequence guess whose per-block states seed the exact refine
+    /// pass.
+    Draft,
+    /// Warm-start: `z⁰` from the per-bucket LRU cache of converged latents
+    /// keyed by (seed family, decode position); miss ⇒ Zeros.
+    Warm,
 }
 
 impl InitStrategy {
@@ -86,8 +106,31 @@ impl InitStrategy {
             "zeros" => Some(InitStrategy::Zeros),
             "normal" => Some(InitStrategy::Normal),
             "prev" | "prev_layer" => Some(InitStrategy::PrevLayer),
+            "proj" | "extrapolate" => Some(InitStrategy::Proj),
+            "draft" => Some(InitStrategy::Draft),
+            "warm" | "cache" => Some(InitStrategy::Warm),
             _ => None,
         }
+    }
+
+    /// Canonical spelling — the inverse of [`InitStrategy::parse`], used by
+    /// the policy JSON round trip and the metrics/CLI surfaces.
+    pub fn label(&self) -> &'static str {
+        match self {
+            InitStrategy::Zeros => "zeros",
+            InitStrategy::Normal => "normal",
+            InitStrategy::PrevLayer => "prev",
+            InitStrategy::Proj => "proj",
+            InitStrategy::Draft => "draft",
+            InitStrategy::Warm => "warm",
+        }
+    }
+
+    /// Whether this strategy predicts z⁰ from prior decode state (and is
+    /// therefore subject to the tuner's payoff gating), as opposed to the
+    /// Fig 6 constant initializations.
+    pub fn is_speculative(&self) -> bool {
+        matches!(self, InitStrategy::Proj | InitStrategy::Draft | InitStrategy::Warm)
     }
 }
 
@@ -257,10 +300,15 @@ fn pin_scalar_i32<B: Backend>(
 /// Pin a block decode's loop constants on device and build its initial
 /// iterate — shared by all four drivers so their init contracts cannot
 /// drift. `y` uploads at most once (device values pass through); `z0`,
-/// when supplied, is used verbatim; otherwise `PrevLayer` aliases `y`'s
-/// device handle (no upload at all) and Zeros/Normal build z⁰ host-side
-/// via the shared [`init_iterate`] (one source of truth) and upload it
-/// once. Returns `(y_dev, k_scalar, z)`.
+/// when supplied, is used verbatim (the `Sampler` passes pooled zeros,
+/// speculative predictions, or warm-cache hits here); otherwise
+/// `PrevLayer` aliases `y`'s device handle (no upload at all) and
+/// Zeros/Normal build z⁰ host-side via the shared [`init_iterate`] (one
+/// source of truth). With a [`BufferPool`] the built z⁰ pins through the
+/// pool's per-shape zero cache / per-(shape, seed) init cache, so repeated
+/// block decodes cost one upload instead of one per decode; speculative
+/// strategies with no prediction fall back to the Zeros init. Returns
+/// `(y_dev, k_scalar, z)`.
 fn pin_decode_inputs<B: Backend>(
     engine: &B,
     pool: Option<&BufferPool>,
@@ -277,10 +325,24 @@ fn pin_decode_inputs<B: Backend>(
     let z = match (z0, cfg.init) {
         (Some(z0), _) => z0,
         (None, InitStrategy::PrevLayer) => y_dev.clone(),
-        (None, _) => {
-            let proto = HostTensor::f32(y_dev.shape(), vec![0.0; y_dev.numel()]);
-            engine.to_device(&init_iterate(&proto, cfg))?
+        (None, InitStrategy::Normal) => {
+            let build = || {
+                let proto = HostTensor::f32(y_dev.shape(), vec![0.0; y_dev.numel()]);
+                engine.to_device(&init_iterate(&proto, cfg))
+            };
+            match pool {
+                Some(p) => p.device_init(y_dev.shape(), cfg.seed, build)?,
+                None => build()?,
+            }
         }
+        // Zeros, and the speculative strategies' documented fallback when
+        // the caller produced no prediction.
+        (None, _) => match pool {
+            Some(p) => p.device_zeroed(y_dev.shape(), |t| engine.to_device(t))?,
+            None => {
+                engine.to_device(&HostTensor::f32(y_dev.shape(), vec![0.0; y_dev.numel()]))?
+            }
+        },
     };
     Ok((y_dev, k_scalar, z))
 }
@@ -829,14 +891,17 @@ pub fn gs_jacobi_decode_block_fused_v<B: Backend>(
 
 /// Build the initial iterate `z⁰` per the configured strategy (host-side;
 /// [`jacobi_decode_block_v`] uploads its result for the Zeros/Normal cases).
+/// The speculative strategies are provider-driven — their predictions enter
+/// the drivers through the `z0` hook — so host-side they build the Zeros
+/// fallback.
 pub fn init_iterate(y: &HostTensor, cfg: &JacobiConfig) -> HostTensor {
     match cfg.init {
-        InitStrategy::Zeros => HostTensor::f32(y.shape(), vec![0.0; y.len()]),
         InitStrategy::Normal => {
             let mut rng = Pcg64::seed(cfg.seed);
             HostTensor::f32(y.shape(), (0..y.len()).map(|_| rng.next_gaussian()).collect())
         }
         InitStrategy::PrevLayer => y.clone(),
+        _ => HostTensor::f32(y.shape(), vec![0.0; y.len()]),
     }
 }
 
@@ -873,7 +938,40 @@ mod tests {
         assert_eq!(InitStrategy::parse("zeros"), Some(InitStrategy::Zeros));
         assert_eq!(InitStrategy::parse("normal"), Some(InitStrategy::Normal));
         assert_eq!(InitStrategy::parse("prev"), Some(InitStrategy::PrevLayer));
+        assert_eq!(InitStrategy::parse("proj"), Some(InitStrategy::Proj));
+        assert_eq!(InitStrategy::parse("extrapolate"), Some(InitStrategy::Proj));
+        assert_eq!(InitStrategy::parse("draft"), Some(InitStrategy::Draft));
+        assert_eq!(InitStrategy::parse("warm"), Some(InitStrategy::Warm));
+        assert_eq!(InitStrategy::parse("cache"), Some(InitStrategy::Warm));
         assert_eq!(InitStrategy::parse("bogus"), None);
+    }
+
+    #[test]
+    fn init_labels_round_trip_through_parse() {
+        for s in [
+            InitStrategy::Zeros,
+            InitStrategy::Normal,
+            InitStrategy::PrevLayer,
+            InitStrategy::Proj,
+            InitStrategy::Draft,
+            InitStrategy::Warm,
+        ] {
+            assert_eq!(InitStrategy::parse(s.label()), Some(s), "label {}", s.label());
+        }
+        assert!(InitStrategy::Proj.is_speculative());
+        assert!(InitStrategy::Warm.is_speculative());
+        assert!(InitStrategy::Draft.is_speculative());
+        assert!(!InitStrategy::Zeros.is_speculative());
+        assert!(!InitStrategy::PrevLayer.is_speculative());
+    }
+
+    #[test]
+    fn speculative_init_iterate_falls_back_to_zeros() {
+        let y = HostTensor::f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        for init in [InitStrategy::Proj, InitStrategy::Draft, InitStrategy::Warm] {
+            let z0 = init_iterate(&y, &JacobiConfig { init, ..Default::default() });
+            assert_eq!(z0.as_f32().unwrap(), &[0.0; 6], "{init:?}");
+        }
     }
 
     #[test]

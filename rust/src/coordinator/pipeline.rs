@@ -42,6 +42,32 @@
 //! preserve bits (`rust/tests/mock_backend.rs` pins the equivalence at
 //! τ = 0; `benches/pipeline_overlap.rs` gates the throughput win in CI).
 //!
+//! ## Cross-stage z⁰ edge (speculative init under pipelining)
+//!
+//! Speculative init providers (`--init proj|warm|draft`, see
+//! `coordinator::jacobi::InitStrategy`) add one more conceptual edge to the
+//! stage graph: the z⁰ a block starts its fixed-point iteration from may
+//! depend on state produced by an *earlier* stage. Device handles are
+//! thread-pinned, so that state cannot ride the stage queue as a device
+//! value — and syncing a speculative guess to host would break the
+//! device-residency rule (speculation must never add host crossings). The
+//! edge is therefore **receiver-materialized**:
+//!
+//! * **`proj`** — the projection input is exactly the handed-off tokens the
+//!   receiving span uploads anyway, so the receiving stage re-derives z⁰ on
+//!   its *own* backend (`Sampler::decode_block_at` resolves the provider
+//!   per block). The edge carries the recipe, not the value: one upload
+//!   (already paid by the handoff contract), zero extra syncs.
+//! * **`warm`** — converged latents are keyed `(seed, position)` and decode
+//!   positions are pinned to stages, so each stage thread's own
+//!   `BufferPool` warm cache serves repeat-seed traffic for its span
+//!   without anything crossing the edge. [`PipelineConfig::warm_cap`]
+//!   bounds each stage's cache.
+//! * **`draft`** — needs a full-sequence monolithic pass before refinement,
+//!   which no single stage span can run; [`DecodePipeline::submit`] demotes
+//!   it to `zeros` explicitly (documented, not silent) rather than letting
+//!   the per-block resolver quietly ignore it.
+//!
 //! ## Metrics
 //!
 //! Per stage thread `t`: `sjd_stage_{t}_occupancy` (gauge, batches being
@@ -54,6 +80,7 @@
 //! occupancy reads `0..=N` and `sjd_stage_wait` pools every worker's
 //! queue waits.
 
+use super::jacobi::InitStrategy;
 use super::policy::{BlockDecode, DecodePolicy};
 use super::sampler::{BlockTrace, SampleOptions, SampleOutput, SamplerSet};
 use crate::metrics::Registry;
@@ -110,11 +137,16 @@ pub struct PipelineConfig {
     /// of decode positions; clamped to `[1, K]`, and `0` means one thread
     /// per block (maximum overlap).
     pub stage_threads: usize,
+    /// Warm-start cache bound applied to every stage sampler's buffer pool
+    /// (`--init warm:N`); `0` keeps the pool's built-in default. Each stage
+    /// thread owns its own cache, so the effective pipeline-wide bound is
+    /// `stage_threads × warm_cap` entries.
+    pub warm_cap: usize,
 }
 
 impl Default for PipelineConfig {
     fn default() -> Self {
-        PipelineConfig { depth: 2, stage_threads: 0 }
+        PipelineConfig { depth: 2, stage_threads: 0, warm_cap: 0 }
     }
 }
 
@@ -274,6 +306,8 @@ struct StageArgs {
     tx: Option<Arc<StageQueue<InFlight>>>,
     gate: Arc<DepthGate>,
     registry: Registry,
+    /// Warm-start cache bound for this stage's samplers (0 = default).
+    warm_cap: usize,
     ready: std::sync::mpsc::Sender<Result<Vec<usize>>>,
 }
 
@@ -328,6 +362,7 @@ impl DecodePipeline {
                 tx: queues.get(idx + 1).cloned(),
                 gate: gate.clone(),
                 registry: registry.clone(),
+                warm_cap: cfg.warm_cap,
                 ready: ready_tx.clone(),
             };
             let factory = factory.clone();
@@ -369,10 +404,19 @@ impl DecodePipeline {
     /// slots.
     pub fn submit(&self, job: PipelineJob) -> std::result::Result<(), PipelineJob> {
         self.gate.acquire();
+        // Draft-then-refine needs a full-sequence pass before refinement —
+        // no single stage span can run it (see "Cross-stage z⁰ edge" in the
+        // module docs). Demote to zeros here, explicitly, so traces report
+        // what actually ran instead of the per-block resolver quietly
+        // ignoring the strategy.
+        let mut opts = job.opts;
+        if opts.jacobi.init == InitStrategy::Draft {
+            opts.jacobi.init = InitStrategy::Zeros;
+        }
         let item = InFlight {
             seed: job.seed,
             n: job.n,
-            opts: job.opts,
+            opts,
             done: job.done,
             tokens: None,
             traces: Vec::new(),
@@ -412,7 +456,7 @@ where
     B: Backend,
     F: Fn(usize) -> Result<B>,
 {
-    let StageArgs { idx, span, model, buckets, rx, tx, gate, registry, ready } = args;
+    let StageArgs { idx, span, model, buckets, rx, tx, gate, registry, warm_cap, ready } = args;
     let engine = match factory(idx) {
         Ok(e) => e,
         Err(e) => {
@@ -427,6 +471,7 @@ where
             return;
         }
     };
+    set.set_warm_cap(warm_cap);
     let _ = ready.send(Ok(set.buckets()));
 
     let occupancy = registry.gauge(&format!("sjd_stage_{idx}_occupancy"));

@@ -14,7 +14,7 @@
 //! (`sjd calibrate` writes them, `--policy @file` / `--policy-file` load
 //! them back).
 
-use super::jacobi::JacobiStats;
+use super::jacobi::{InitStrategy, JacobiStats};
 use super::sampler::SampleOutput;
 use std::collections::BTreeMap;
 use std::sync::Mutex;
@@ -439,6 +439,85 @@ impl DecodePolicy {
 }
 
 // ---------------------------------------------------------------------------
+// Init policy (speculative z⁰ providers)
+// ---------------------------------------------------------------------------
+
+/// Default warm-start cache capacity for the `warm[:N]` spelling — mirrors
+/// the `BufferPool` default so a bare `--init warm` and an unconfigured pool
+/// agree on the bound.
+pub const DEFAULT_WARM_CAP: usize = 32;
+
+/// How Jacobi iterates are seeded (`--init`): a parsed [`InitStrategy`] plus
+/// the provider knobs that ride along in policy JSON. Round-trips through
+/// [`InitPolicy::parse`]/[`InitPolicy::label`] and `to_json`/`from_json`
+/// with the same strictness as the decode-policy spellings: absent fields
+/// default, present-but-malformed fields are errors.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct InitPolicy {
+    pub strategy: InitStrategy,
+    /// Warm-start cache capacity in entries — the `N` of `warm:N`.
+    pub warm_cap: usize,
+}
+
+impl Default for InitPolicy {
+    fn default() -> Self {
+        InitPolicy { strategy: InitStrategy::Zeros, warm_cap: DEFAULT_WARM_CAP }
+    }
+}
+
+impl InitPolicy {
+    /// Parse CLI string:
+    /// `"zeros" | "normal" | "prev" | "proj" | "draft" | "warm[:N]"` —
+    /// every [`InitStrategy`] spelling, plus the capacity argument on the
+    /// warm-start provider.
+    pub fn parse(s: &str) -> Option<Self> {
+        if let Some(n) = s.strip_prefix("warm:") {
+            let cap: usize = n.parse().ok()?;
+            if cap == 0 {
+                return None;
+            }
+            return Some(InitPolicy { strategy: InitStrategy::Warm, warm_cap: cap });
+        }
+        Some(InitPolicy { strategy: InitStrategy::parse(s)?, ..Default::default() })
+    }
+
+    /// Canonical spelling — parses back to itself.
+    pub fn label(&self) -> String {
+        match self.strategy {
+            InitStrategy::Warm if self.warm_cap != DEFAULT_WARM_CAP => {
+                format!("warm:{}", self.warm_cap)
+            }
+            s => s.label().to_string(),
+        }
+    }
+
+    /// Serialize (the `"init"` half of a policy file `sjd calibrate` writes).
+    pub fn to_json(&self) -> crate::jsonx::Value {
+        use crate::jsonx::Value;
+        let mut fields = vec![("strategy", Value::str(self.strategy.label()))];
+        if self.strategy == InitStrategy::Warm {
+            fields.push(("warm_cap", Value::num(self.warm_cap as f64)));
+        }
+        Value::obj(fields)
+    }
+
+    /// Inverse of [`InitPolicy::to_json`]: an unknown strategy or a
+    /// malformed `warm_cap` is an error, never silently the default.
+    pub fn from_json(v: &crate::jsonx::Value) -> anyhow::Result<Self> {
+        let s = v.req_str("strategy")?;
+        let strategy = InitStrategy::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("unknown init strategy '{s}'"))?;
+        let warm_cap = match v.get("warm_cap") {
+            None => DEFAULT_WARM_CAP,
+            Some(c) => c.as_usize().filter(|&c| c >= 1).ok_or_else(|| {
+                anyhow::anyhow!("init warm_cap must be a positive integer, got {c:?}")
+            })?,
+        };
+        Ok(InitPolicy { strategy, warm_cap })
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Online policy autotuner
 // ---------------------------------------------------------------------------
 
@@ -477,6 +556,33 @@ impl Default for TunerConfig {
             dwell: 3,
         }
     }
+}
+
+/// Per-(bucket, position) speculative-init evidence: EWMAs of the total
+/// position-updates one decode of this block costs under the Zeros baseline
+/// vs. under the requested provider (refine updates **plus** the provider's
+/// own speculation cost, so a draft pass that merely moves work around
+/// cannot look like savings).
+#[derive(Clone, Debug, Default)]
+struct SpecCell {
+    /// EWMA of `position_updates` on Zeros-init decodes.
+    base: Option<f64>,
+    /// EWMA of `position_updates + spec_cost_updates` on provider decodes.
+    spec: Option<f64>,
+}
+
+/// Per-bucket speculative-init state.
+#[derive(Clone, Debug, Default)]
+struct SpecBucket {
+    cells: Vec<SpecCell>,
+    /// Decodes observed under the Zeros baseline / the provider.
+    base_obs: usize,
+    spec_obs: usize,
+    /// Decodes routed through [`PolicyTuner::init_for`] (probe clock).
+    decodes: usize,
+    /// Realized savings went negative: the bucket runs Zeros, re-probing the
+    /// provider on the probe cadence so a regime change can win it back.
+    reverted: bool,
 }
 
 /// Per-(bucket, block) tuner state.
@@ -534,6 +640,10 @@ pub struct PolicyTuner {
     seq_len: usize,
     bootstrap: DecodePolicy,
     cells: Mutex<BTreeMap<usize, Vec<TunerCell>>>,
+    /// Operator-requested init provider (`--init`); tuner-gated per bucket
+    /// when speculative.
+    init: InitStrategy,
+    spec: Mutex<BTreeMap<usize, SpecBucket>>,
 }
 
 impl PolicyTuner {
@@ -541,7 +651,49 @@ impl PolicyTuner {
         assert!(blocks > 0 && seq_len > 0);
         assert!(cfg.alpha > 0.0 && cfg.alpha <= 1.0);
         assert!(cfg.max_windows > 0 && cfg.s_max > 0 && cfg.min_obs > 0 && cfg.dwell > 0);
-        PolicyTuner { cfg, blocks, seq_len, bootstrap, cells: Mutex::new(BTreeMap::new()) }
+        PolicyTuner {
+            cfg,
+            blocks,
+            seq_len,
+            bootstrap,
+            cells: Mutex::new(BTreeMap::new()),
+            init: InitStrategy::Zeros,
+            spec: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Set the operator-requested init provider (`serve --tune --init …`).
+    /// Non-speculative strategies pass through [`PolicyTuner::init_for`]
+    /// unchanged; speculative providers become tuner-gated — applied only
+    /// while their realized position-update savings stay non-negative.
+    pub fn with_init(mut self, init: InitStrategy) -> Self {
+        self.init = init;
+        self
+    }
+
+    /// The init strategy the next decode of `bucket` should run — the router
+    /// calls this beside [`PolicyTuner::policy_for`]. Advances the per-bucket
+    /// probe clock: while the baseline estimate is still forming the bucket
+    /// alternates provider/Zeros decodes, an established provider yields a
+    /// Zeros baseline probe every [`TunerConfig::probe_every`]-th decode, and
+    /// a reverted bucket re-probes the provider on the same cadence.
+    pub fn init_for(&self, bucket: usize) -> InitStrategy {
+        if !self.init.is_speculative() {
+            return self.init;
+        }
+        let mut map = self.spec.lock().unwrap();
+        let sb = map.entry(bucket).or_default();
+        sb.decodes += 1;
+        if sb.base_obs < self.cfg.min_obs && sb.decodes % 2 == 0 {
+            return InitStrategy::Zeros;
+        }
+        let probe = self.cfg.probe_every > 0 && sb.decodes % self.cfg.probe_every == 0;
+        match (sb.reverted, probe) {
+            (false, false) => self.init,
+            (false, true) => InitStrategy::Zeros,
+            (true, false) => InitStrategy::Zeros,
+            (true, true) => self.init,
+        }
     }
 
     /// The full-sequence measuring mode: fused chunked UJD sized to the
@@ -588,9 +740,22 @@ impl PolicyTuner {
     /// with every [`SampleOutput`]. Only full-sequence Jacobi-family traces
     /// carry usable measurements (see the type docs); everything else is
     /// skipped, so feeding every decode unconditionally is correct.
-    pub fn observe(&self, bucket: usize, out: &SampleOutput) {
-        let mut map = self.cells.lock().unwrap();
-        let cells = map.entry(bucket).or_insert_with(|| self.fresh_cells());
+    ///
+    /// Returns the **wasted speculative updates** this decode contributed —
+    /// position-updates spent above the bucket's Zeros baseline estimate on
+    /// provider-initialized blocks (0 whenever the provider paid, or no init
+    /// provider is active). The router exports the running sum as the
+    /// `sjd_spec_wasted_updates` counter.
+    pub fn observe(&self, bucket: usize, out: &SampleOutput) -> usize {
+        {
+            let mut map = self.cells.lock().unwrap();
+            let cells = map.entry(bucket).or_insert_with(|| self.fresh_cells());
+            self.observe_modes(cells, out);
+        }
+        self.observe_init(bucket, out)
+    }
+
+    fn observe_modes(&self, cells: &mut [TunerCell], out: &SampleOutput) {
         for trace in &out.traces {
             let pos = trace.position;
             if pos >= cells.len() || self.bootstrap_mode(pos) == BlockDecode::Sequential {
@@ -637,6 +802,59 @@ impl PolicyTuner {
                 }
             }
         }
+    }
+
+    /// The speculative-payoff half of [`PolicyTuner::observe`]: fold Zeros
+    /// decodes into the baseline EWMAs, provider decodes (refine cost + the
+    /// provider's own speculation cost) into the provider EWMAs, and gate —
+    /// once both sides carry [`TunerConfig::min_obs`] decodes, the bucket
+    /// reverts to Zeros exactly while the summed provider estimate exceeds
+    /// the summed baseline (realized savings negative).
+    fn observe_init(&self, bucket: usize, out: &SampleOutput) -> usize {
+        if !self.init.is_speculative() {
+            return 0;
+        }
+        let fold = |prev: Option<f64>, x: f64| match prev {
+            None => x,
+            Some(p) => self.cfg.alpha * x + (1.0 - self.cfg.alpha) * p,
+        };
+        let mut map = self.spec.lock().unwrap();
+        let sb = map.entry(bucket).or_default();
+        if sb.cells.len() < self.blocks {
+            sb.cells.resize(self.blocks, SpecCell::default());
+        }
+        let (mut saw_base, mut saw_spec) = (false, false);
+        let mut wasted = 0.0_f64;
+        for trace in &out.traces {
+            let Some(cell) = sb.cells.get_mut(trace.position) else { continue };
+            if trace.init == self.init {
+                let total = (trace.position_updates + trace.spec_cost_updates) as f64;
+                if let Some(base) = cell.base {
+                    wasted += (total - base).max(0.0);
+                }
+                cell.spec = Some(fold(cell.spec, total));
+                saw_spec = true;
+            } else if trace.init == InitStrategy::Zeros {
+                cell.base = Some(fold(cell.base, trace.position_updates as f64));
+                saw_base = true;
+            }
+        }
+        sb.base_obs += saw_base as usize;
+        sb.spec_obs += saw_spec as usize;
+        if sb.base_obs >= self.cfg.min_obs && sb.spec_obs >= self.cfg.min_obs {
+            let (mut base, mut spec, mut have) = (0.0, 0.0, false);
+            for c in &sb.cells {
+                if let (Some(b), Some(s)) = (c.base, c.spec) {
+                    base += b;
+                    spec += s;
+                    have = true;
+                }
+            }
+            if have {
+                sb.reverted = spec > base;
+            }
+        }
+        wasted.round() as usize
     }
 
     /// The effective per-block policy for one bucket (applied modes, with
@@ -689,12 +907,34 @@ impl PolicyTuner {
                 (bucket.to_string(), Value::Arr(rows))
             })
             .collect();
+        let spec = self.spec.lock().unwrap();
+        let init_buckets: BTreeMap<String, Value> = spec
+            .iter()
+            .map(|(bucket, sb)| {
+                (
+                    bucket.to_string(),
+                    Value::obj(vec![
+                        ("active", Value::Bool(!sb.reverted)),
+                        ("base_obs", Value::num(sb.base_obs as f64)),
+                        ("spec_obs", Value::num(sb.spec_obs as f64)),
+                        ("decodes", Value::num(sb.decodes as f64)),
+                    ]),
+                )
+            })
+            .collect();
         Value::obj(vec![
             ("source", Value::str("tuner")),
             ("blocks", Value::num(self.blocks as f64)),
             ("seq_len", Value::num(self.seq_len as f64)),
             ("bootstrap", self.bootstrap.to_json()),
             ("buckets", Value::Obj(buckets)),
+            (
+                "init",
+                Value::obj(vec![
+                    ("requested", Value::str(self.init.label())),
+                    ("buckets", Value::Obj(init_buckets)),
+                ]),
+            ),
         ])
     }
 }
@@ -1102,6 +1342,9 @@ mod tests {
                     host_syncs: it,
                 }),
                 gs: None,
+                init: InitStrategy::Zeros,
+                spec_hit: false,
+                spec_cost_updates: 0,
             })
             .collect();
         SampleOutput {
@@ -1234,6 +1477,126 @@ mod tests {
         // Nothing measurable arrived: still bootstrapping (probe mode).
         assert_eq!(t.policy_for(2).block_mode(0, 2), BlockDecode::Fused { chunk: 4 });
         assert_eq!(t.snapshot(2).unwrap().block_mode(0, 2), BlockDecode::Jacobi);
+    }
+
+    /// One synthetic decode under a given init provider: same iteration
+    /// shape as [`mk_output`], with every trace stamped with the provider
+    /// and its per-block speculation cost.
+    fn mk_output_init(
+        iters_per_pos: &[usize],
+        init: InitStrategy,
+        spec_cost: usize,
+    ) -> SampleOutput {
+        let mut out = mk_output(iters_per_pos, true);
+        for t in &mut out.traces {
+            t.init = init;
+            t.spec_hit = init.is_speculative();
+            t.spec_cost_updates = spec_cost;
+        }
+        out
+    }
+
+    #[test]
+    fn init_policy_parse_label_roundtrip() {
+        for s in ["zeros", "normal", "prev", "proj", "draft", "warm", "warm:8"] {
+            let p = InitPolicy::parse(s).unwrap_or_else(|| panic!("'{s}' must parse"));
+            assert_eq!(InitPolicy::parse(&p.label()), Some(p), "label('{s}') must re-parse");
+        }
+        assert_eq!(
+            InitPolicy::parse("warm:8"),
+            Some(InitPolicy { strategy: InitStrategy::Warm, warm_cap: 8 })
+        );
+        assert_eq!(InitPolicy::parse("warm").unwrap().warm_cap, DEFAULT_WARM_CAP);
+        for bad in ["", "warm:", "warm:0", "warm:x", "warm:-2", "proj:4", "spec", "Zeros"] {
+            assert_eq!(InitPolicy::parse(bad), None, "'{bad}' must be rejected");
+        }
+    }
+
+    #[test]
+    fn init_policy_json_roundtrip_and_strictness() {
+        use crate::jsonx::Value;
+        for s in ["zeros", "normal", "prev", "proj", "draft", "warm", "warm:5"] {
+            let p = InitPolicy::parse(s).unwrap();
+            assert_eq!(InitPolicy::from_json(&p.to_json()).unwrap(), p, "round-trip '{s}'");
+        }
+        // Absent warm_cap falls back to the documented default …
+        let v = Value::obj(vec![("strategy", Value::str("warm"))]);
+        assert_eq!(InitPolicy::from_json(&v).unwrap().warm_cap, DEFAULT_WARM_CAP);
+        // … but a present-and-malformed one is an error, and so is an
+        // unknown strategy.
+        for bad in [Value::num(0.0), Value::num(2.5), Value::num(-1.0), Value::str("big")] {
+            let v = Value::obj(vec![("strategy", Value::str("warm")), ("warm_cap", bad)]);
+            assert!(InitPolicy::from_json(&v).is_err());
+        }
+        let v = Value::obj(vec![("strategy", Value::str("psychic"))]);
+        assert!(InitPolicy::from_json(&v).is_err());
+        assert!(InitPolicy::from_json(&Value::obj(vec![])).is_err());
+    }
+
+    #[test]
+    fn tuner_init_passthrough_for_non_speculative_strategies() {
+        let t = PolicyTuner::new(1, 8, DecodePolicy::UniformJacobi, tuner_cfg())
+            .with_init(InitStrategy::Normal);
+        for _ in 0..5 {
+            assert_eq!(t.init_for(2), InitStrategy::Normal);
+        }
+        // Default construction gates nothing and wastes nothing.
+        let t = PolicyTuner::new(1, 8, DecodePolicy::UniformJacobi, tuner_cfg());
+        assert_eq!(t.init_for(2), InitStrategy::Zeros);
+        assert_eq!(t.observe(2, &mk_output(&[4], true)), 0);
+    }
+
+    #[test]
+    fn tuner_init_reverts_bucket_when_savings_go_negative() {
+        let cfg = TunerConfig { min_obs: 2, probe_every: 0, ..tuner_cfg() };
+        let t = PolicyTuner::new(1, 8, DecodePolicy::UniformJacobi, cfg)
+            .with_init(InitStrategy::Draft);
+        // Bootstrap: the provider is applied while evidence accumulates.
+        assert_eq!(t.init_for(3), InitStrategy::Draft);
+        // Zeros baseline: 8 iterations → 64 position-updates.
+        assert_eq!(t.observe(3, &mk_output_init(&[8], InitStrategy::Zeros, 0)), 0);
+        t.observe(3, &mk_output_init(&[8], InitStrategy::Zeros, 0));
+        // Draft decodes: the same 64 refine updates plus a 72-update draft
+        // pass — realized savings are negative and the waste is reported.
+        let wasted = t.observe(3, &mk_output_init(&[8], InitStrategy::Draft, 72));
+        assert_eq!(wasted, 72, "cost above the baseline estimate is waste");
+        t.observe(3, &mk_output_init(&[8], InitStrategy::Draft, 72));
+        assert_eq!(t.init_for(3), InitStrategy::Zeros, "bucket reverted to Zeros");
+        // Buckets gate independently: a fresh bucket still runs the provider.
+        assert_eq!(t.init_for(5), InitStrategy::Draft);
+    }
+
+    #[test]
+    fn tuner_init_keeps_paying_provider_and_probes_baseline() {
+        let cfg = TunerConfig { min_obs: 1, probe_every: 4, ..tuner_cfg() };
+        let t = PolicyTuner::new(1, 8, DecodePolicy::UniformJacobi, cfg)
+            .with_init(InitStrategy::Proj);
+        t.observe(2, &mk_output_init(&[8], InitStrategy::Zeros, 0)); // 64 baseline
+        let w = t.observe(2, &mk_output_init(&[7], InitStrategy::Proj, 0)); // 56: pays
+        assert_eq!(w, 0, "a paying provider wastes nothing");
+        let seen: Vec<_> = (0..8).map(|_| t.init_for(2)).collect();
+        assert_eq!(
+            seen,
+            vec![
+                InitStrategy::Proj,
+                InitStrategy::Proj,
+                InitStrategy::Proj,
+                InitStrategy::Zeros, // every 4th decode: baseline probe
+                InitStrategy::Proj,
+                InitStrategy::Proj,
+                InitStrategy::Proj,
+                InitStrategy::Zeros,
+            ]
+        );
+        // The /policy body reports the gate state.
+        let j = t.to_json();
+        let init = j.get("init").unwrap();
+        assert_eq!(init.req_str("requested").unwrap(), "proj");
+        let buckets = init.get("buckets").and_then(crate::jsonx::Value::as_obj).unwrap();
+        assert_eq!(
+            buckets.get("2").unwrap().get("active").and_then(crate::jsonx::Value::as_bool),
+            Some(true)
+        );
     }
 
     #[test]

@@ -46,6 +46,15 @@
 //! behavior and how well the fused chunked decode is amortizing its τ-test
 //! round-trips. The pipelined path adds `sjd_stage_{t}_occupancy` and
 //! `sjd_stage_wait` (see `coordinator::pipeline`).
+//!
+//! Speculative init (`--init proj|warm|draft`) adds `sjd_spec_init_hits`
+//! (blocks whose fixed-point iteration started from a provider guess
+//! instead of zeros) and, when tuned, `sjd_spec_wasted_updates` (position
+//! updates a speculative decode spent *beyond* the tuner's zeros baseline —
+//! the realized cost of speculation that did not pay; see
+//! `PolicyTuner::observe`). With a tuner attached, each batch's init
+//! strategy comes from `tuner.init_for(bucket)`, which falls back to zeros
+//! per bucket when realized savings go negative.
 
 use super::batcher::{Batcher, Slot};
 use super::pipeline::{DecodePipeline, PipelineConfig, PipelineJob, PipelineResult};
@@ -83,6 +92,9 @@ pub struct RouterConfig {
     /// Online policy autotuner shared by every worker (`serve --tune`);
     /// `None` serves the static `options.policy`.
     pub tuner: Option<Arc<PolicyTuner>>,
+    /// Warm-start cache bound per sampler (`--init warm:N`); `0` keeps the
+    /// buffer pool's built-in default.
+    pub warm_cap: usize,
 }
 
 /// Running worker fleet.
@@ -190,6 +202,7 @@ fn worker_main<B, F>(
             return;
         }
     };
+    set.set_warm_cap(cfg.warm_cap);
     let _ = ready.send(Ok(()));
 
     let lat = registry.histogram("sjd_request_latency");
@@ -203,6 +216,8 @@ fn worker_main<B, F>(
     let padded = registry.counter("sjd_padded_slots");
     let errors = registry.counter("sjd_worker_errors");
     let inflight = registry.gauge("sjd_batches_inflight");
+    let spec_hits = registry.counter("sjd_spec_init_hits");
+    let spec_wasted = registry.counter("sjd_spec_wasted_updates");
 
     // Workers exit when the closed queue drains (`next_batch` → None), so a
     // shutdown never abandons an accepted slot.
@@ -235,13 +250,17 @@ fn worker_main<B, F>(
             let mut options = cfg.options.clone();
             if let Some(tuner) = &cfg.tuner {
                 options.policy = tuner.policy_for(sampler.batch);
+                // Tuner-gated speculation: the bucket's init provider, or
+                // zeros while the bucket is reverted / being baselined.
+                options.jacobi.init = tuner.init_for(sampler.batch);
             }
             let t_decode = Instant::now();
             match sampler.sample_images(&options, &mut rng) {
                 Ok((imgs, trace)) => {
                     decode_time.record_duration(t_decode.elapsed());
+                    spec_hits.add(trace.spec_hits() as u64);
                     if let Some(tuner) = &cfg.tuner {
-                        tuner.observe(sampler.batch, &trace);
+                        spec_wasted.add(tuner.observe(sampler.batch, &trace) as u64);
                     }
                     // Per-block convergence + sync behavior of this decode.
                     for t in &trace.traces {
@@ -295,8 +314,11 @@ fn worker_pipelined<B, F>(
         let factory = factory.clone();
         move |_stage: usize| factory(widx)
     };
-    let pipeline_cfg =
-        PipelineConfig { depth: cfg.pipeline_depth, stage_threads: cfg.stage_threads };
+    let pipeline_cfg = PipelineConfig {
+        depth: cfg.pipeline_depth,
+        stage_threads: cfg.stage_threads,
+        warm_cap: cfg.warm_cap,
+    };
     let pipeline = match DecodePipeline::start(
         &cfg.model,
         &cfg.buckets,
@@ -326,6 +348,8 @@ fn worker_pipelined<B, F>(
         batches: registry.counter("sjd_batches_processed"),
         errors: registry.counter("sjd_worker_errors"),
         inflight: registry.gauge("sjd_batches_inflight"),
+        spec_hits: registry.counter("sjd_spec_init_hits"),
+        spec_wasted: registry.counter("sjd_spec_wasted_updates"),
     };
     let max_bucket = pipeline.buckets.last().copied().unwrap_or(1);
 
@@ -347,6 +371,7 @@ fn worker_pipelined<B, F>(
             let mut opts = cfg.options.clone();
             if let Some(tuner) = &cfg.tuner {
                 opts.policy = tuner.policy_for(bucket);
+                opts.jacobi.init = tuner.init_for(bucket);
             }
             metrics.inflight.add(1);
             let n = chunk.len();
@@ -383,6 +408,8 @@ struct ChunkMetrics {
     batches: Arc<Counter>,
     errors: Arc<Counter>,
     inflight: Arc<Gauge>,
+    spec_hits: Arc<Counter>,
+    spec_wasted: Arc<Counter>,
 }
 
 /// Build the completion callback for one pipelined chunk: records the batch
@@ -404,8 +431,9 @@ fn completion(
                 // total_wall also contains under depth ≥ 2.
                 let busy = out.traces.iter().map(|t| t.wall).sum::<Duration>() + out.other_wall;
                 m.decode_time.record_duration(busy);
+                m.spec_hits.add(out.spec_hits() as u64);
                 if let Some(tuner) = &tuner {
-                    tuner.observe(bucket, &out);
+                    m.spec_wasted.add(tuner.observe(bucket, &out) as u64);
                 }
                 for t in &out.traces {
                     m.block_iters.record(t.steps as u64);

@@ -81,7 +81,7 @@ use super::jacobi::{
     gs_jacobi_decode_block_fused_v, gs_jacobi_decode_block_v, jacobi_decode_block_fused_v,
     jacobi_decode_block_v_init, GsJacobiStats, InitStrategy, JacobiConfig, JacobiStats,
 };
-use super::policy::{BlockDecode, DecodePolicy};
+use super::policy::{BlockDecode, DecodePolicy, DEFAULT_FUSE_CHUNK};
 use super::state::BufferPool;
 use crate::runtime::{Backend, HostTensor, ModelMeta, Value};
 use crate::tensor::{Pcg64, Tensor};
@@ -140,6 +140,20 @@ pub struct BlockTrace {
     pub jacobi: Option<JacobiStats>,
     /// Present when this block decoded via windowed GS-Jacobi.
     pub gs: Option<GsJacobiStats>,
+    /// The init strategy that governed this block's z⁰ (the requested
+    /// `--init` provider, or Zeros) — recorded so the tuner can separate
+    /// baseline decodes from provider decodes when judging payoff.
+    pub init: InitStrategy,
+    /// A speculative provider actually supplied this block's z⁰ (warm-cache
+    /// hit, projection applied, draft state reused) — exported as the
+    /// `sjd_spec_init_hits` counter by the serving router.
+    pub spec_hit: bool,
+    /// Position-updates spent *producing* this block's speculation (its
+    /// share of the draft pass, or the one projected update) — added on top
+    /// of [`BlockTrace::position_updates`] when judging whether the
+    /// provider paid, so speculation that merely moves work around cannot
+    /// masquerade as savings.
+    pub spec_cost_updates: usize,
 }
 
 /// Result of one sampling run.
@@ -170,6 +184,19 @@ impl SampleOutput {
     /// between the per-iteration and fused-chunked paths.
     pub fn total_host_syncs(&self) -> usize {
         self.traces.iter().map(|t| t.host_syncs).sum()
+    }
+
+    /// Total position updates **including** speculation cost — the honest
+    /// cross-provider comparison metric (`benches/spec_init.rs` gates on
+    /// this, not on the refine cost alone).
+    pub fn total_updates_with_spec(&self) -> usize {
+        self.traces.iter().map(|t| t.position_updates + t.spec_cost_updates).sum()
+    }
+
+    /// Blocks whose z⁰ came from a speculative provider (see
+    /// [`BlockTrace::spec_hit`]).
+    pub fn spec_hits(&self) -> usize {
+        self.traces.iter().filter(|t| t.spec_hit).count()
     }
 }
 
@@ -230,6 +257,17 @@ impl<'e, B: Backend> SamplerSet<'e, B> {
         &self.samplers[0].meta
     }
 
+    /// Apply a warm-start cache bound to every bucket's sampler (see
+    /// [`Sampler::set_warm_cap`]); `0` leaves the built-in default.
+    pub fn set_warm_cap(&self, cap: usize) {
+        if cap == 0 {
+            return;
+        }
+        for s in &self.samplers {
+            s.set_warm_cap(cap);
+        }
+    }
+
     /// The sampler for the smallest bucket with `batch >= n` — falling back
     /// to the largest bucket for an oversized batch (the batcher caps batch
     /// size at [`Self::max_bucket`], so that fallback only triggers on a
@@ -258,6 +296,7 @@ pub struct Sampler<'e, B: Backend> {
     art_seqstep: String,
     art_seqfull: String,
     art_reverse: String,
+    art_init_proj: String,
     pool: BufferPool,
 }
 
@@ -283,6 +322,7 @@ impl<'e, B: Backend> Sampler<'e, B> {
             art_seqstep: format!("{model}_block_seqstep_b{batch}"),
             art_seqfull: format!("{model}_block_seqfull_b{batch}"),
             art_reverse: format!("{model}_reverse_b{batch}"),
+            art_init_proj: format!("{model}_init_proj_b{batch}"),
             pool: BufferPool::new(),
         })
     }
@@ -322,6 +362,38 @@ impl<'e, B: Backend> Sampler<'e, B> {
     /// without it.
     pub fn has_gs_fuse_artifact(&self) -> bool {
         self.engine.has_artifact(&self.art_jstep_win_fuse)
+    }
+
+    pub fn init_proj_artifact(&self) -> &str {
+        &self.art_init_proj
+    }
+
+    /// Whether the model ships the speculative-init projection artifact
+    /// (`{m}_init_proj_b{B}`); [`InitStrategy::Proj`] falls back to the
+    /// Zeros init without it.
+    pub fn has_init_proj_artifact(&self) -> bool {
+        self.engine.has_artifact(&self.art_init_proj)
+    }
+
+    /// Bound the warm-start z⁰ cache (the `N` of `--init warm:N`).
+    pub fn set_warm_cap(&self, cap: usize) {
+        self.pool.set_warm_cap(cap);
+    }
+
+    /// Device-side speculative z⁰ projection for block `k` of `A_k(z) = y`:
+    /// one `{m}_init_proj_b{B}` call — a cheap truncated-conditioner update
+    /// evaluated at `z = y`. Input and output both stay device-resident
+    /// (the artifact is lowered `untupled`, so its result is a chainable
+    /// device leaf); a host `y` is uploaded once and the uploaded handle is
+    /// what the caller should keep feeding the decode.
+    pub fn project_init_v(&self, k: usize, y: &Value) -> Result<Value> {
+        let k_scalar =
+            self.pool.device_scalar_i32(k as i32, |t| self.engine.to_device(t))?;
+        let outs = self
+            .engine
+            .call_v(&self.art_init_proj, &[k_scalar, y.clone()])
+            .with_context(|| format!("init_proj block {k}"))?;
+        outs.into_iter().next().context("init_proj output")
     }
 
     /// Draw the prior `z_K ~ N(0, I)` in token space.
@@ -475,7 +547,22 @@ impl<'e, B: Backend> Sampler<'e, B> {
         cfg: &JacobiConfig,
         mask_o: usize,
     ) -> Result<(Value, JacobiStats)> {
-        let z0 = self.pooled_zero_init(cfg)?;
+        self.jacobi_decode_seeded_v(k, v, cfg, mask_o, None)
+    }
+
+    /// [`Sampler::jacobi_decode_v`] with an explicit speculative z⁰ —
+    /// `Some` wins over the strategy-resolved init, `None` is the plain
+    /// path. Every init provider (projection, draft state, warm-cache hit,
+    /// cross-stage pipeline edge) threads through here.
+    pub fn jacobi_decode_seeded_v(
+        &self,
+        k: usize,
+        v: &Value,
+        cfg: &JacobiConfig,
+        mask_o: usize,
+        z0: Option<Value>,
+    ) -> Result<(Value, JacobiStats)> {
+        let z0 = self.resolve_z0(cfg, z0)?;
         jacobi_decode_block_v_init(
             self.engine,
             &self.art_jstep,
@@ -504,7 +591,20 @@ impl<'e, B: Backend> Sampler<'e, B> {
         chunk: usize,
         cfg: &JacobiConfig,
     ) -> Result<(Value, JacobiStats)> {
-        let z0 = self.pooled_zero_init(cfg)?;
+        self.jacobi_decode_fused_seeded_v(k, v, chunk, cfg, None)
+    }
+
+    /// [`Sampler::jacobi_decode_fused_v`] with an explicit speculative z⁰
+    /// (see [`Sampler::jacobi_decode_seeded_v`]).
+    pub fn jacobi_decode_fused_seeded_v(
+        &self,
+        k: usize,
+        v: &Value,
+        chunk: usize,
+        cfg: &JacobiConfig,
+        z0: Option<Value>,
+    ) -> Result<(Value, JacobiStats)> {
+        let z0 = self.resolve_z0(cfg, z0)?;
         jacobi_decode_block_fused_v(
             self.engine,
             &self.art_jstep_fuse,
@@ -528,6 +628,16 @@ impl<'e, B: Backend> Sampler<'e, B> {
         Ok(Some(self.pool.device_zeroed(&[b, l, d], |t| self.engine.to_device(t))?))
     }
 
+    /// A provider-supplied z⁰ wins; otherwise fall back to the
+    /// strategy-resolved init ([`Sampler::pooled_zero_init`] for Zeros, the
+    /// drivers' own handling for the rest).
+    fn resolve_z0(&self, cfg: &JacobiConfig, z0: Option<Value>) -> Result<Option<Value>> {
+        match z0 {
+            Some(z) => Ok(Some(z)),
+            None => self.pooled_zero_init(cfg),
+        }
+    }
+
     /// Value-based windowed GS-Jacobi decode (see
     /// `jacobi::gs_jacobi_decode_block_v`): sweep `windows` windows in order,
     /// iterating the windowed jstep inside each. Residency contract matches
@@ -541,7 +651,20 @@ impl<'e, B: Backend> Sampler<'e, B> {
         windows: usize,
         cfg: &JacobiConfig,
     ) -> Result<(Value, GsJacobiStats)> {
-        let z0 = self.pooled_zero_init(cfg)?;
+        self.gs_jacobi_decode_seeded_v(k, v, windows, cfg, None)
+    }
+
+    /// [`Sampler::gs_jacobi_decode_v`] with an explicit speculative z⁰
+    /// (see [`Sampler::jacobi_decode_seeded_v`]).
+    pub fn gs_jacobi_decode_seeded_v(
+        &self,
+        k: usize,
+        v: &Value,
+        windows: usize,
+        cfg: &JacobiConfig,
+        z0: Option<Value>,
+    ) -> Result<(Value, GsJacobiStats)> {
+        let z0 = self.resolve_z0(cfg, z0)?;
         gs_jacobi_decode_block_v(
             self.engine,
             &self.art_jstep_win,
@@ -569,7 +692,21 @@ impl<'e, B: Backend> Sampler<'e, B> {
         chunk: usize,
         cfg: &JacobiConfig,
     ) -> Result<(Value, GsJacobiStats)> {
-        let z0 = self.pooled_zero_init(cfg)?;
+        self.gs_jacobi_decode_fused_seeded_v(k, v, windows, chunk, cfg, None)
+    }
+
+    /// [`Sampler::gs_jacobi_decode_fused_v`] with an explicit speculative
+    /// z⁰ (see [`Sampler::jacobi_decode_seeded_v`]).
+    pub fn gs_jacobi_decode_fused_seeded_v(
+        &self,
+        k: usize,
+        v: &Value,
+        windows: usize,
+        chunk: usize,
+        cfg: &JacobiConfig,
+        z0: Option<Value>,
+    ) -> Result<(Value, GsJacobiStats)> {
+        let z0 = self.resolve_z0(cfg, z0)?;
         gs_jacobi_decode_block_fused_v(
             self.engine,
             &self.art_jstep_win_fuse,
@@ -664,6 +801,37 @@ impl<'e, B: Backend> Sampler<'e, B> {
         v: &Value,
         opts: &SampleOptions,
     ) -> Result<(Value, BlockTrace)> {
+        self.decode_block_at_init(pos, v, opts, None)
+    }
+
+    /// [`Sampler::decode_block_at`] with an externally supplied speculative
+    /// z⁰ — the pipeline's cross-stage init edge and the draft-then-refine
+    /// driver enter here. `Some` wins over the strategy-resolved provider.
+    pub fn decode_block_at_init(
+        &self,
+        pos: usize,
+        v: &Value,
+        opts: &SampleOptions,
+        z0: Option<Value>,
+    ) -> Result<(Value, BlockTrace)> {
+        let (u, trace) = self.decode_block_inner(pos, v, opts, z0)?;
+        let k = self.meta.blocks - 1 - pos;
+        // h_k = P_k(u): reversal for odd k.
+        let z = if k % 2 == 1 { self.reverse_tokens_v(&u)? } else { u };
+        Ok((z, trace))
+    }
+
+    /// The un-permuted block decode: returns `u = A_k^{-1}(v)` *before* the
+    /// inter-block permutation, which is exactly the state the speculative
+    /// providers traffic in (a warm-cache entry or a draft state seeds the
+    /// next decode's iterate, whose fixed point is `u`, not `P_k u`).
+    fn decode_block_inner(
+        &self,
+        pos: usize,
+        v: &Value,
+        opts: &SampleOptions,
+        ext_z0: Option<Value>,
+    ) -> Result<(Value, BlockTrace)> {
         let kk = self.meta.blocks;
         debug_assert!(pos < kk);
         let k = kk - 1 - pos; // block index in flow order
@@ -671,6 +839,59 @@ impl<'e, B: Backend> Sampler<'e, B> {
         let mode = self.effective_block_mode(opts.policy.block_mode(pos, kk), opts.mask_o);
         let mut cfg = opts.jacobi.clone();
         cfg.seed = opts.seed.wrapping_add(pos as u64);
+
+        // Resolve the speculative z⁰ before the decode dispatch: an external
+        // seed (pipeline edge / draft driver) wins, then the provider named
+        // by the init strategy. Everything here stays device-resident — the
+        // projection artifact chains device→device, warm entries are stored
+        // device handles, and a host `v` is uploaded exactly once and reused
+        // for both the projection and the decode itself.
+        let is_jacobi_mode = mode != BlockDecode::Sequential;
+        let mut spec_hit = false;
+        let mut spec_cost = 0usize;
+        let v_up;
+        let v: &Value = if is_jacobi_mode
+            && ext_z0.is_none()
+            && cfg.init == InitStrategy::Proj
+            && self.has_init_proj_artifact()
+        {
+            match v {
+                Value::Device(_) => v,
+                Value::Host(h) => {
+                    v_up = self.engine.to_device(h)?;
+                    &v_up
+                }
+            }
+        } else {
+            v
+        };
+        let z0 = if !is_jacobi_mode {
+            None
+        } else {
+            match ext_z0 {
+                Some(z) => {
+                    spec_hit = true;
+                    Some(z)
+                }
+                None => match cfg.init {
+                    InitStrategy::Proj if self.has_init_proj_artifact() => {
+                        // One projected update: L positions written once.
+                        spec_hit = true;
+                        spec_cost = self.meta.seq_len;
+                        Some(self.project_init_v(k, v)?)
+                    }
+                    InitStrategy::Warm => match self.pool.warm_get(opts.seed, pos) {
+                        Some(z) => {
+                            spec_hit = true;
+                            Some(z)
+                        }
+                        None => None, // cold: fall through to the Zeros init
+                    },
+                    _ => None,
+                },
+            }
+        };
+
         let jacobi_trace = |stats: JacobiStats, wall: Duration| BlockTrace {
             block: k,
             position: pos,
@@ -681,6 +902,9 @@ impl<'e, B: Backend> Sampler<'e, B> {
             wall,
             jacobi: Some(stats),
             gs: None,
+            init: cfg.init,
+            spec_hit,
+            spec_cost_updates: spec_cost,
         };
         let gs_trace = |stats: GsJacobiStats, wall: Duration| BlockTrace {
             block: k,
@@ -692,25 +916,29 @@ impl<'e, B: Backend> Sampler<'e, B> {
             wall,
             jacobi: None,
             gs: Some(stats),
+            init: cfg.init,
+            spec_hit,
+            spec_cost_updates: spec_cost,
         };
         let (u, trace) = match mode {
             BlockDecode::Jacobi => {
-                let (u, stats) = self.jacobi_decode_v(k, v, &cfg, opts.mask_o)?;
+                let (u, stats) = self.jacobi_decode_seeded_v(k, v, &cfg, opts.mask_o, z0)?;
                 let trace = jacobi_trace(stats, t0.elapsed());
                 (u, trace)
             }
             BlockDecode::Fused { chunk } => {
-                let (u, stats) = self.jacobi_decode_fused_v(k, v, chunk, &cfg)?;
+                let (u, stats) = self.jacobi_decode_fused_seeded_v(k, v, chunk, &cfg, z0)?;
                 let trace = jacobi_trace(stats, t0.elapsed());
                 (u, trace)
             }
             BlockDecode::GsJacobi { windows } => {
-                let (u, stats) = self.gs_jacobi_decode_v(k, v, windows, &cfg)?;
+                let (u, stats) = self.gs_jacobi_decode_seeded_v(k, v, windows, &cfg, z0)?;
                 let trace = gs_trace(stats, t0.elapsed());
                 (u, trace)
             }
             BlockDecode::GsFused { windows, chunk } => {
-                let (u, stats) = self.gs_jacobi_decode_fused_v(k, v, windows, chunk, &cfg)?;
+                let (u, stats) =
+                    self.gs_jacobi_decode_fused_seeded_v(k, v, windows, chunk, &cfg, z0)?;
                 let trace = gs_trace(stats, t0.elapsed());
                 (u, trace)
             }
@@ -744,13 +972,28 @@ impl<'e, B: Backend> Sampler<'e, B> {
                         wall,
                         jacobi: None,
                         gs: None,
+                        init: cfg.init,
+                        spec_hit: false,
+                        spec_cost_updates: 0,
                     },
                 )
             }
         };
-        // h_k = P_k(u): reversal for odd k.
-        let z = if k % 2 == 1 { self.reverse_tokens_v(&u)? } else { u };
-        Ok((z, trace))
+        // Warm-start upkeep: a converged, device-resident iterate is the
+        // perfect z⁰ for the next decode of the same (seed, position) — one
+        // resid-0 verify iteration instead of a full solve.
+        if is_jacobi_mode && cfg.init == InitStrategy::Warm {
+            let converged = trace
+                .jacobi
+                .as_ref()
+                .map(|s| s.converged)
+                .or_else(|| trace.gs.as_ref().map(|s| s.converged))
+                .unwrap_or(false);
+            if converged && u.is_device() {
+                self.pool.warm_put(opts.seed, pos, u.clone());
+            }
+        }
+        Ok((u, trace))
     }
 
     /// Full decode: latent tokens (B, L, D) → data tokens h_0 (B, L, D),
@@ -763,6 +1006,9 @@ impl<'e, B: Backend> Sampler<'e, B> {
     /// (`coordinator::pipeline`) walks the same per-block stages with ≥2
     /// batches in flight.
     pub fn decode_tokens(&self, z_latent: HostTensor, opts: &SampleOptions) -> Result<SampleOutput> {
+        if opts.jacobi.init == InitStrategy::Draft {
+            return self.decode_tokens_draft(z_latent, opts);
+        }
         let t_start = Instant::now();
         let kk = self.meta.blocks;
         let mut traces = Vec::with_capacity(kk);
@@ -777,6 +1023,69 @@ impl<'e, B: Backend> Sampler<'e, B> {
             decode_wall += trace.wall;
             traces.push(trace);
             z = z_next;
+        }
+
+        let tokens = self.engine.to_host(z)?;
+        let total_wall = t_start.elapsed();
+        Ok(SampleOutput {
+            tokens,
+            traces,
+            total_wall,
+            other_wall: total_wall.saturating_sub(decode_wall),
+        })
+    }
+
+    /// Draft-then-refine decode ([`InitStrategy::Draft`]): a cheap draft
+    /// pass — the fused family at a coarse chunk with a relaxed τ — produces
+    /// a full-sequence guess, whose per-block converged states then seed the
+    /// exact refine pass as z⁰. Prop 3.2 makes the refine output bit-equal
+    /// to a Zeros decode at τ = 0 regardless of draft quality; the draft
+    /// states stay device-resident end to end (pre-permutation `u`, exactly
+    /// the refine iterate's fixed-point frame).
+    ///
+    /// Accounting stays honest and the trace vector stays length K: each
+    /// refine trace absorbs its position's draft cost
+    /// ([`BlockTrace::spec_cost_updates`], draft host syncs folded into
+    /// [`BlockTrace::host_syncs`]) — a draft pass that doesn't shrink
+    /// refine work shows up as negative savings, which is what lets the
+    /// tuner revert a bucket to Zeros.
+    fn decode_tokens_draft(&self, z_latent: HostTensor, opts: &SampleOptions) -> Result<SampleOutput> {
+        let t_start = Instant::now();
+        let kk = self.meta.blocks;
+
+        // Draft pass: Zeros-from-pool init, coarse fused chunks, relaxed τ.
+        let mut draft_opts = opts.clone();
+        draft_opts.jacobi.init = InitStrategy::Zeros;
+        draft_opts.jacobi.tau = (opts.jacobi.tau * 4.0).max(0.5);
+        draft_opts.policy = DecodePolicy::Fused { chunk: DEFAULT_FUSE_CHUNK };
+        let mut drafts: Vec<Option<Value>> = Vec::with_capacity(kk);
+        let mut draft_traces = Vec::with_capacity(kk);
+        let mut decode_wall = Duration::ZERO;
+        let mut z: Value = Value::Host(z_latent.clone());
+        for pos in 0..kk {
+            let (u, trace) = self.decode_block_inner(pos, &z, &draft_opts, None)?;
+            decode_wall += trace.wall;
+            draft_traces.push(trace);
+            let k = kk - 1 - pos;
+            drafts.push(Some(u.clone()));
+            z = if k % 2 == 1 { self.reverse_tokens_v(&u)? } else { u };
+        }
+
+        // Refine pass: the exact policy/τ, seeded per block from the draft.
+        let mut traces = Vec::with_capacity(kk);
+        let mut z: Value = Value::Host(z_latent);
+        for pos in 0..kk {
+            let z0 = drafts[pos].take();
+            let (u, mut trace) = self.decode_block_inner(pos, &z, opts, z0)?;
+            decode_wall += trace.wall;
+            trace.init = InitStrategy::Draft;
+            trace.spec_hit = trace.used_jacobi;
+            trace.spec_cost_updates = draft_traces[pos].position_updates;
+            trace.host_syncs += draft_traces[pos].host_syncs;
+            trace.wall += draft_traces[pos].wall;
+            traces.push(trace);
+            let k = kk - 1 - pos;
+            z = if k % 2 == 1 { self.reverse_tokens_v(&u)? } else { u };
         }
 
         let tokens = self.engine.to_host(z)?;

@@ -12,6 +12,20 @@ use std::cell::RefCell;
 /// unbounded device memory.
 pub const SCALAR_CACHE_CAP: usize = 64;
 
+/// Capacity of the [`BufferPool::device_init`] cache of seeded initial
+/// iterates (`InitStrategy::Normal` z⁰ tensors, keyed by shape + seed).
+/// A sampler re-decodes the same few (shape, seed) combinations across
+/// blocks and requests, but per-request seeds form an unbounded stream —
+/// the cap keeps a pathological seed-per-request workload from pinning one
+/// (B, L, D) device buffer per seed forever.
+pub const INIT_CACHE_CAP: usize = 16;
+
+/// Capacity of the per-pool warm-start cache ([`BufferPool::warm_put`]):
+/// converged block latents keyed by (seed family, decode position),
+/// LRU-bounded exactly like the scalar cache. Entries are full (B, L, D)
+/// tensors, so the cap is deliberately small.
+pub const WARM_CACHE_CAP: usize = 32;
+
 /// A pool of reusable zeroed f32 buffers keyed by shape, used for the KV
 /// cache tensors of the sequential decode path. Sequential decode consumes
 /// two (NL, B, L, Dm) caches per block; pooling keeps the hot loop
@@ -37,6 +51,21 @@ pub struct BufferPool {
     /// step counts over a server's lifetime, and an uncapped cache would
     /// pin one device buffer per value forever.
     device_scalars: RefCell<Vec<(i32, Value)>>,
+    /// Immutable device-resident seeded initial iterates keyed by
+    /// (shape, seed) — the `InitStrategy::Normal` z⁰ tensors, which are
+    /// deterministic in their seed and therefore as reusable as the zero
+    /// cache above. LRU-bounded at [`INIT_CACHE_CAP`].
+    device_inits: RefCell<Vec<((Vec<usize>, u64), Value)>>,
+    /// Warm-start cache: converged block latents keyed by
+    /// (seed family, decode position), LRU-bounded at [`WARM_CACHE_CAP`].
+    /// Unlike the caches above these are *predictions*, not constants — a
+    /// hit seeds the next Jacobi solve of the same (seed, position) pair,
+    /// which at τ=0 verifies it in one residual-0 iteration.
+    warm_starts: RefCell<Vec<((u64, usize), Value)>>,
+    /// Configured warm-start capacity; 0 means "unset" and resolves to
+    /// [`WARM_CACHE_CAP`] (the `Default` derive zero-initializes this — see
+    /// [`BufferPool::set_warm_cap`] / the `warm:N` init-policy spelling).
+    warm_cap: std::cell::Cell<usize>,
     /// High-water mark of host bytes handed out simultaneously.
     peak_bytes: RefCell<usize>,
     live_bytes: RefCell<usize>,
@@ -143,6 +172,99 @@ impl BufferPool {
     /// [`SCALAR_CACHE_CAP`].
     pub fn scalar_cache_len(&self) -> usize {
         self.device_scalars.borrow().len()
+    }
+
+    /// A device-resident seeded initial iterate for (shape, seed), built and
+    /// uploaded at most once per key via `make` while it stays among the
+    /// [`INIT_CACHE_CAP`] most recently used keys. Same immutability
+    /// contract as [`BufferPool::device_zeroed`] — `InitStrategy::Normal`'s
+    /// z⁰ is a pure function of (shape, seed), so repeated block decodes
+    /// reuse one upload instead of rebuilding and re-uploading each time.
+    pub fn device_init(
+        &self,
+        shape: &[usize],
+        seed: u64,
+        make: impl FnOnce() -> anyhow::Result<Value>,
+    ) -> anyhow::Result<Value> {
+        {
+            let mut cache = self.device_inits.borrow_mut();
+            if let Some(idx) =
+                cache.iter().position(|((s, sd), _)| s.as_slice() == shape && *sd == seed)
+            {
+                // Refresh recency: MRU at the back, evictions pop the front.
+                let entry = cache.remove(idx);
+                let val = entry.1.clone();
+                cache.push(entry);
+                return Ok(val);
+            }
+        }
+        let val = make()?;
+        let numel: usize = shape.iter().product();
+        let mut cache = self.device_inits.borrow_mut();
+        if cache.len() >= INIT_CACHE_CAP {
+            let ((old_shape, _), _) = cache.remove(0);
+            *self.device_bytes.borrow_mut() -=
+                old_shape.iter().product::<usize>() * 4;
+        }
+        *self.device_bytes.borrow_mut() += numel * 4;
+        cache.push(((shape.to_vec(), seed), val.clone()));
+        Ok(val)
+    }
+
+    /// Distinct seeded inits currently pinned — always `<=`
+    /// [`INIT_CACHE_CAP`].
+    pub fn init_cache_len(&self) -> usize {
+        self.device_inits.borrow().len()
+    }
+
+    /// Look up a warm-start latent for (seed family, decode position); a hit
+    /// refreshes the entry's LRU recency. The returned value is a converged
+    /// iterate cached by [`BufferPool::warm_put`] — device-resident on real
+    /// backends, so seeding a decode from it costs zero host traffic.
+    pub fn warm_get(&self, seed: u64, pos: usize) -> Option<Value> {
+        let mut cache = self.warm_starts.borrow_mut();
+        let idx = cache.iter().position(|((s, p), _)| *s == seed && *p == pos)?;
+        let entry = cache.remove(idx);
+        let val = entry.1.clone();
+        cache.push(entry);
+        Some(val)
+    }
+
+    /// Bound the warm-start cache at `cap` entries (the `N` of the
+    /// `warm:N` init-policy spelling); unset pools use [`WARM_CACHE_CAP`].
+    /// Shrinking below the current population evicts from the LRU front on
+    /// the next [`BufferPool::warm_put`].
+    pub fn set_warm_cap(&self, cap: usize) {
+        self.warm_cap.set(cap.max(1));
+    }
+
+    /// Cache a converged block latent under (seed family, decode position),
+    /// replacing any previous entry for the key and evicting least recently
+    /// used entries once the configured capacity ([`WARM_CACHE_CAP`] unless
+    /// [`BufferPool::set_warm_cap`] overrode it) is pinned.
+    pub fn warm_put(&self, seed: u64, pos: usize, v: Value) {
+        let cap = match self.warm_cap.get() {
+            0 => WARM_CACHE_CAP,
+            c => c,
+        };
+        let bytes = v.shape().iter().product::<usize>() * 4;
+        let mut cache = self.warm_starts.borrow_mut();
+        if let Some(idx) = cache.iter().position(|((s, p), _)| *s == seed && *p == pos) {
+            let ((_, _), old) = cache.remove(idx);
+            *self.device_bytes.borrow_mut() -= old.shape().iter().product::<usize>() * 4;
+            drop(old);
+        }
+        while cache.len() >= cap {
+            let (_, old) = cache.remove(0);
+            *self.device_bytes.borrow_mut() -= old.shape().iter().product::<usize>() * 4;
+        }
+        *self.device_bytes.borrow_mut() += bytes;
+        cache.push(((seed, pos), v));
+    }
+
+    /// Warm-start entries currently pinned — always `<=` [`WARM_CACHE_CAP`].
+    pub fn warm_cache_len(&self) -> usize {
+        self.warm_starts.borrow().len()
     }
 
     pub fn peak_bytes(&self) -> usize {
@@ -306,6 +428,106 @@ mod tests {
         assert_eq!(uploads.get(), before, "refreshed value must still be cached");
         pool.device_scalar_i32(1, mk).unwrap();
         assert_eq!(uploads.get(), before + 1, "stale value must have been evicted");
+    }
+
+    #[test]
+    fn init_cache_builds_once_per_shape_and_seed() {
+        let pool = BufferPool::new();
+        let builds = std::cell::Cell::new(0usize);
+        let mk = |shape: &[usize]| {
+            builds.set(builds.get() + 1);
+            let numel: usize = shape.iter().product();
+            Ok(Value::Host(HostTensor::f32(shape, vec![1.0; numel])))
+        };
+        let a = pool.device_init(&[2, 4], 7, || mk(&[2, 4])).unwrap();
+        let b = pool.device_init(&[2, 4], 7, || mk(&[2, 4])).unwrap();
+        pool.device_init(&[2, 4], 8, || mk(&[2, 4])).unwrap();
+        pool.device_init(&[3], 7, || mk(&[3])).unwrap();
+        assert_eq!(builds.get(), 3, "one build per distinct (shape, seed)");
+        assert_eq!(a.shape(), &[2, 4]);
+        assert_eq!(b.shape(), &[2, 4]);
+        assert_eq!(pool.init_cache_len(), 3);
+    }
+
+    #[test]
+    fn init_cache_is_bounded_with_lru_eviction() {
+        let pool = BufferPool::new();
+        let builds = std::cell::Cell::new(0usize);
+        let mk = || {
+            builds.set(builds.get() + 1);
+            Ok(Value::Host(HostTensor::f32(&[2], vec![0.0; 2])))
+        };
+        for seed in 0..(INIT_CACHE_CAP + 4) as u64 {
+            pool.device_init(&[2], seed, mk).unwrap();
+        }
+        assert_eq!(builds.get(), INIT_CACHE_CAP + 4);
+        assert_eq!(pool.init_cache_len(), INIT_CACHE_CAP);
+        // Oldest seeds evicted — rebuilding seed 0 is a miss; the newest
+        // survived — seed INIT_CACHE_CAP+3 is a hit.
+        pool.device_init(&[2], 0, mk).unwrap();
+        assert_eq!(builds.get(), INIT_CACHE_CAP + 5);
+        pool.device_init(&[2], (INIT_CACHE_CAP + 3) as u64, mk).unwrap();
+        assert_eq!(builds.get(), INIT_CACHE_CAP + 5);
+        assert_eq!(pool.init_cache_len(), INIT_CACHE_CAP);
+    }
+
+    #[test]
+    fn warm_cache_round_trips_and_replaces() {
+        let pool = BufferPool::new();
+        assert!(pool.warm_get(1, 0).is_none());
+        let v = Value::Host(HostTensor::f32(&[2, 2], vec![1.0; 4]));
+        pool.warm_put(1, 0, v);
+        let hit = pool.warm_get(1, 0).expect("warm hit");
+        assert_eq!(hit.as_host().unwrap().as_f32().unwrap(), &[1.0; 4]);
+        // Same key replaces in place — no duplicate entries, updated value.
+        pool.warm_put(1, 0, Value::Host(HostTensor::f32(&[2, 2], vec![2.0; 4])));
+        assert_eq!(pool.warm_cache_len(), 1);
+        let hit = pool.warm_get(1, 0).unwrap();
+        assert_eq!(hit.as_host().unwrap().as_f32().unwrap(), &[2.0; 4]);
+        assert_eq!(pool.device_cache_bytes(), 16);
+        // Different position under the same seed is a distinct key.
+        assert!(pool.warm_get(1, 1).is_none());
+    }
+
+    #[test]
+    fn warm_cache_is_bounded_with_lru_eviction() {
+        let pool = BufferPool::new();
+        let v = || Value::Host(HostTensor::f32(&[2], vec![0.5; 2]));
+        for seed in 0..(WARM_CACHE_CAP + 5) as u64 {
+            pool.warm_put(seed, 0, v());
+        }
+        assert_eq!(pool.warm_cache_len(), WARM_CACHE_CAP);
+        assert_eq!(pool.device_cache_bytes(), WARM_CACHE_CAP * 8);
+        // Oldest evicted, newest retained.
+        assert!(pool.warm_get(0, 0).is_none());
+        assert!(pool.warm_get((WARM_CACHE_CAP + 4) as u64, 0).is_some());
+        // A get refreshes recency: touch the current LRU entry, insert one
+        // more, and the eviction must skip the refreshed key.
+        let lru = 5u64; // seeds 0..=4 already evicted above
+        assert!(pool.warm_get(lru, 0).is_some());
+        pool.warm_put(1000, 0, v());
+        assert!(pool.warm_get(lru, 0).is_some(), "refreshed entry must survive");
+        assert!(pool.warm_get(6, 0).is_none(), "stale entry must be evicted");
+    }
+
+    #[test]
+    fn warm_cache_respects_configured_cap() {
+        let pool = BufferPool::new();
+        pool.set_warm_cap(2);
+        let v = || Value::Host(HostTensor::f32(&[2], vec![0.5; 2]));
+        for seed in 0..5u64 {
+            pool.warm_put(seed, 0, v());
+        }
+        assert_eq!(pool.warm_cache_len(), 2, "configured cap bounds the cache");
+        assert!(pool.warm_get(2, 0).is_none());
+        assert!(pool.warm_get(3, 0).is_some());
+        assert!(pool.warm_get(4, 0).is_some());
+        // Shrinking evicts down to the new cap on the next put.
+        pool.set_warm_cap(1);
+        pool.warm_put(9, 0, v());
+        assert_eq!(pool.warm_cache_len(), 1);
+        assert!(pool.warm_get(9, 0).is_some());
+        assert_eq!(pool.device_cache_bytes(), 8);
     }
 
     #[test]

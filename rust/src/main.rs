@@ -23,9 +23,10 @@ use anyhow::{bail, Context, Result};
 use sjd::cli::Command;
 use sjd::configx::{CValue, Config};
 use sjd::coordinator::batcher::Batcher;
-use sjd::coordinator::jacobi::{InitStrategy, JacobiConfig};
+use sjd::coordinator::jacobi::JacobiConfig;
 use sjd::coordinator::policy::{
-    calibrate, calibrate_chunks, calibrate_windows, DecodePolicy, PolicyTuner, TunerConfig,
+    calibrate, calibrate_chunks, calibrate_windows, DecodePolicy, InitPolicy, PolicyTuner,
+    TunerConfig,
 };
 use sjd::coordinator::router::{Router, RouterConfig};
 use sjd::coordinator::sampler::{SampleOptions, Sampler};
@@ -52,7 +53,7 @@ fn cli() -> Command {
                 .opt("policy", "selective", "sequential|ujd|selective[:N]|gs[:W]|fuse[:S]|@file.json")
                 .opt("policy-file", "", "calibrated policy JSON (overrides --policy)")
                 .opt("tau", "0.5", "Jacobi stopping threshold")
-                .opt("init", "zeros", "zeros|normal|prev")
+                .opt("init", "zeros", "zeros|normal|prev|proj|warm[:N]|draft")
                 .opt("seed", "0", "RNG seed")
                 .switch(
                     "tune",
@@ -86,7 +87,7 @@ fn cli() -> Command {
                 .opt("policy", "selective", "sequential|ujd|selective[:N]|gs[:W]|fuse[:S]|@file.json")
                 .opt("policy-file", "", "calibrated policy JSON (overrides --policy)")
                 .opt("tau", "0.5", "Jacobi stopping threshold")
-                .opt("init", "zeros", "zeros|normal|prev")
+                .opt("init", "zeros", "zeros|normal|prev|proj|warm[:N]|draft")
                 .opt("seed", "0", "RNG seed")
                 .opt("out", "samples.png", "output PNG path"),
         )
@@ -98,7 +99,7 @@ fn cli() -> Command {
                 .opt("policy", "selective", "sequential|ujd|selective[:N]|gs[:W]|fuse[:S]|@file.json")
                 .opt("policy-file", "", "calibrated policy JSON (overrides --policy)")
                 .opt("tau", "0.5", "Jacobi stopping threshold")
-                .opt("init", "zeros", "zeros|normal|prev")
+                .opt("init", "zeros", "zeros|normal|prev|proj|warm[:N]|draft")
                 .opt("seed", "0", "RNG seed"),
         )
         .sub(
@@ -107,6 +108,7 @@ fn cli() -> Command {
                 .opt("model", "tf10", "model name")
                 .opt("batch", "8", "batch size")
                 .opt("tau", "0.5", "Jacobi stopping threshold")
+                .opt("init", "zeros", "zeros|normal|prev|proj|warm[:N]|draft")
                 .opt("windows", "8", "max GS-Jacobi windows the calibration may assign")
                 .switch(
                     "chunks",
@@ -130,11 +132,45 @@ fn cli() -> Command {
         )
 }
 
-fn jacobi_config(p: &sjd::cli::Parsed) -> JacobiConfig {
+/// The policy file a command references, if any: `--policy-file <path>`
+/// wins, else the `--policy @file.json` spelling.
+fn policy_file_path<'p>(p: &'p sjd::cli::Parsed) -> Option<&'p str> {
+    match p.str("policy-file") {
+        "" => p.str("policy").strip_prefix('@'),
+        path => Some(path),
+    }
+}
+
+/// Strict `--init` resolution (see [`InitPolicy::parse`]): a spelling that
+/// does not parse is an **error**, never silently zeros — an operator who
+/// typed `--init wurm` meant something. A non-default CLI spelling wins;
+/// otherwise a calibrated policy file's embedded `init` section (written by
+/// `sjd calibrate --init ...`) applies, so the whole decode recipe
+/// round-trips through one JSON file.
+fn init_policy(p: &sjd::cli::Parsed) -> Result<InitPolicy> {
+    let spec = p.str("init");
+    let cli = InitPolicy::parse(spec).ok_or_else(|| {
+        anyhow::anyhow!("bad --init '{spec}' (expected zeros|normal|prev|proj|warm[:N]|draft)")
+    })?;
+    if cli != InitPolicy::default() {
+        return Ok(cli);
+    }
+    if let Some(path) = policy_file_path(p) {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading policy file {path}"))?;
+        if let Some(init) = sjd::jsonx::parse(&text)?.get("init") {
+            return InitPolicy::from_json(init)
+                .with_context(|| format!("bad init section in policy file {path}"));
+        }
+    }
+    Ok(cli)
+}
+
+fn jacobi_config(p: &sjd::cli::Parsed, init: &InitPolicy) -> JacobiConfig {
     JacobiConfig {
         tau: p.f64("tau").unwrap_or(0.5) as f32,
         max_iters: None,
-        init: InitStrategy::parse(p.str("init")).unwrap_or(InitStrategy::Zeros),
+        init: init.strategy,
         seed: p.usize("seed").unwrap_or(0) as u64,
     }
 }
@@ -182,9 +218,10 @@ fn cmd_serve(p: &sjd::cli::Parsed) -> Result<()> {
 
     let pol = policy(p)?;
     let policy_label = pol.label();
+    let init = init_policy(p)?;
     let options = SampleOptions {
         policy: pol.clone(),
-        jacobi: jacobi_config(p),
+        jacobi: jacobi_config(p, &init),
         mask_o: 0,
         fused_sequential: false,
         seed: 0,
@@ -208,7 +245,12 @@ fn cmd_serve(p: &sjd::cli::Parsed) -> Result<()> {
         let meta = manifest.model(&model)?;
         let s_max = fused_history_len(&manifest, &model, max_bucket);
         let cfg = TunerConfig { s_max, ..Default::default() };
-        Some(Arc::new(PolicyTuner::new(meta.blocks, meta.seq_len, pol.clone(), cfg)))
+        // The tuner owns init gating: it serves the requested provider per
+        // bucket and reverts to zeros where realized savings go negative.
+        Some(Arc::new(
+            PolicyTuner::new(meta.blocks, meta.seq_len, pol.clone(), cfg)
+                .with_init(init.strategy),
+        ))
     } else {
         None
     };
@@ -228,14 +270,17 @@ fn cmd_serve(p: &sjd::cli::Parsed) -> Result<()> {
             pipeline_depth: p.usize("pipeline-depth")?,
             stage_threads: p.usize("stage-threads")?,
             tuner: tuner.clone(),
+            warm_cap: init.warm_cap,
         },
         batcher.clone(),
         registry.clone(),
     )?;
     println!(
-        "serving model {model} on {} ({} workers, buckets {buckets:?}, policy {policy_label}{})",
+        "serving model {model} on {} ({} workers, buckets {buckets:?}, policy {policy_label}, \
+         init {}{})",
         p.str("addr"),
         p.usize("workers")?,
+        init.label(),
         if tuner.is_some() { ", tuned" } else { "" },
     );
     let server = Server::with_config(
@@ -244,7 +289,19 @@ fn cmd_serve(p: &sjd::cli::Parsed) -> Result<()> {
         registry,
         ServerConfig {
             conn_threads: p.usize("http-threads")?,
-            policy: Some(PolicySource { configured: pol.to_json(), tuner: tuner.clone() }),
+            policy: Some(PolicySource {
+                configured: {
+                    // Like the calibrate output: the configured policy JSON
+                    // carries the init section so `/policy` shows the whole
+                    // decode recipe.
+                    let mut json = pol.to_json();
+                    if let sjd::jsonx::Value::Obj(o) = &mut json {
+                        o.insert("init".into(), init.to_json());
+                    }
+                    json
+                },
+                tuner: tuner.clone(),
+            }),
             ..Default::default()
         },
     );
@@ -333,6 +390,15 @@ fn cmd_policy_show(p: &sjd::cli::Parsed) -> Result<()> {
         bail!("--blocks must be >= 1");
     }
     println!("policy: {}", pol.label());
+    // A calibrated file may carry an embedded init section — show it, so
+    // the operator sees the whole decode recipe the file encodes.
+    if let Some(path) = policy_file_path(p) {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading policy file {path}"))?;
+        if let Some(init) = sjd::jsonx::parse(&text)?.get("init") {
+            println!("init:   {}", InitPolicy::from_json(init)?.label());
+        }
+    }
     println!("{:<5} {:<6} mode", "pos", "block");
     for stage in sjd::coordinator::pipeline::stage_plan(&pol, blocks) {
         println!("{:<5} {:<6} {}", stage.position, stage.block, stage.mode.describe());
@@ -372,11 +438,16 @@ fn parse_buckets(spec: &str) -> Result<Vec<usize>> {
 }
 
 fn cmd_sample(p: &sjd::cli::Parsed) -> Result<()> {
+    // Flags fail fast, before any artifact loading: a typo'd --init is a
+    // usage error, not a backend error.
+    let init = init_policy(p)?;
+    let pol = policy(p)?;
     let engine = Engine::new(p.str("artifacts"))?;
     let sampler = Sampler::new(&engine, p.str("model"), p.usize("batch")?)?;
+    sampler.set_warm_cap(init.warm_cap);
     let opts = SampleOptions {
-        policy: policy(p)?,
-        jacobi: jacobi_config(p),
+        policy: pol,
+        jacobi: jacobi_config(p, &init),
         mask_o: 0,
         fused_sequential: false,
         seed: p.usize("seed")? as u64,
@@ -410,6 +481,8 @@ fn cmd_sample(p: &sjd::cli::Parsed) -> Result<()> {
 }
 
 fn cmd_recon(p: &sjd::cli::Parsed) -> Result<()> {
+    let init = init_policy(p)?;
+    let pol = policy(p)?;
     let engine = Engine::new(p.str("artifacts"))?;
     let sampler = Sampler::new(&engine, p.str("model"), p.usize("batch")?)?;
     let mut rng = Pcg64::seed(p.usize("seed")? as u64);
@@ -417,8 +490,9 @@ fn cmd_recon(p: &sjd::cli::Parsed) -> Result<()> {
     // "Real" images (model samples stand in for dataset images on the rust
     // side) → encode → SJD decode → MSE (paper §E.4).
     let b = p.usize("batch")?;
-    let mut opts = SampleOptions { policy: policy(p)?, ..Default::default() };
-    opts.jacobi = jacobi_config(p);
+    sampler.set_warm_cap(init.warm_cap);
+    let mut opts = SampleOptions { policy: pol, ..Default::default() };
+    opts.jacobi = jacobi_config(p, &init);
     let (reals, _) = sampler.sample_images(
         &SampleOptions { policy: DecodePolicy::Sequential, ..Default::default() },
         &mut rng,
@@ -445,8 +519,10 @@ fn cmd_calibrate(p: &sjd::cli::Parsed) -> Result<()> {
     if max_windows == 0 {
         bail!("--windows must be >= 1 (1 = plain Jacobi, more enables GS windowing)");
     }
+    let init = init_policy(p)?;
     let engine = Engine::new(p.str("artifacts"))?;
     let sampler = Sampler::new(&engine, p.str("model"), p.usize("batch")?)?;
+    sampler.set_warm_cap(init.warm_cap);
     let mut rng = Pcg64::seed(7);
     let kk = sampler.meta.blocks;
     let tau = p.f64("tau")? as f32;
@@ -461,7 +537,7 @@ fn cmd_calibrate(p: &sjd::cli::Parsed) -> Result<()> {
         let t0 = std::time::Instant::now();
         let (u_seq, _) = sampler.sequential_decode_block(k, &h)?;
         seq_walls.push(t0.elapsed());
-        let cfg = JacobiConfig { tau, ..Default::default() };
+        let cfg = JacobiConfig { tau, init: init.strategy, ..Default::default() };
         let (_u_j, stats) = sampler.jacobi_decode(k, &h, &cfg, 0)?;
         jstats.push(stats);
         h = if k % 2 == 1 { sampler.reverse_tokens(&u_seq)? } else { u_seq };
@@ -496,7 +572,15 @@ fn cmd_calibrate(p: &sjd::cli::Parsed) -> Result<()> {
         "" => format!("{}_policy.json", p.str("model")),
         path => path.to_string(),
     };
-    std::fs::write(&out, sjd::jsonx::to_string_pretty(&pol.to_json()))?;
+    // Embed the init policy so the whole decode recipe round-trips through
+    // one file: `serve --policy-file` picks the section up unless an
+    // explicit `--init` overrides it. `DecodePolicy::from_json` keys off
+    // `kind` alone, so older readers ignore the extra field.
+    let mut json = pol.to_json();
+    if let sjd::jsonx::Value::Obj(o) = &mut json {
+        o.insert("init".into(), init.to_json());
+    }
+    std::fs::write(&out, sjd::jsonx::to_string_pretty(&json))?;
     println!("wrote {out} (use with --policy-file {out})");
     Ok(())
 }

@@ -350,10 +350,13 @@ impl Manifest {
 }
 
 /// Decode-family roles a bucket may lack and still be routable: optional
-/// fast paths with a documented per-iteration fallback in the coordinator
-/// (`Sampler::decode_tokens`). Keep in sync with the fused-artifact
-/// lowering in `python/compile/aot.py`.
-pub const OPTIONAL_DECODE_ROLES: &[&str] = &["block_jstep_fuse", "block_jstep_win_fuse"];
+/// fast paths with a documented fallback in the coordinator — the fused
+/// steps degrade to their per-iteration artifacts, and the speculative-init
+/// projection degrades to the Zeros initialization
+/// (`Sampler::decode_tokens`). Keep in sync with the optional-artifact
+/// lowerings in `python/compile/aot.py`.
+pub const OPTIONAL_DECODE_ROLES: &[&str] =
+    &["block_jstep_fuse", "block_jstep_win_fuse", "init_proj"];
 
 #[cfg(test)]
 mod tests {
@@ -448,10 +451,10 @@ mod tests {
                      "inputs": [], "outputs": []}}"#
             )
         };
-        // Bucket 1 predates the fused artifacts, bucket 2 has them: BOTH
-        // are routable (the fused steps are probed fast paths with a
-        // per-iteration fallback, not required roles). Bucket 4 carries
-        // only fused roles and misses required ones → excluded.
+        // Bucket 1 predates the fused/init-proj artifacts, bucket 2 has
+        // them: BOTH are routable (optional roles are probed fast paths
+        // with documented fallbacks, not required roles). Bucket 4 carries
+        // only optional roles and misses required ones → excluded.
         let arts: Vec<String> = [
             "m1_block_jstep_b1",
             "m1_block_seqstep_b1",
@@ -459,7 +462,9 @@ mod tests {
             "m1_block_seqstep_b2",
             "m1_block_jstep_fuse_b2",
             "m1_block_jstep_win_fuse_b2",
+            "m1_init_proj_b2",
             "m1_block_jstep_fuse_b4",
+            "m1_init_proj_b4",
         ]
         .iter()
         .map(|n| art(n))

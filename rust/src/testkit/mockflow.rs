@@ -252,6 +252,15 @@ impl MockFlow {
         (u_tok, kv_k, kv_v)
     }
 
+    /// Speculative z⁰ projection (the `{m}_init_proj_b{B}` analog): one
+    /// exact Jacobi update evaluated at `z = y` — Alg 1's body with the
+    /// iterate pinned to the right-hand side, no residual output. From this
+    /// seed positions 0 *and* 1 are already exact, so a τ=0 refine needs
+    /// strictly fewer iterations than a Zeros-init decode.
+    pub fn init_proj(&self, k: usize, y: &[f32], batch: usize) -> Vec<f32> {
+        self.jstep(k, y, y, 0, batch).0
+    }
+
     /// Token reversal along the sequence axis (the device-side `P_k` gather).
     pub fn reverse(&self, t: &[f32], batch: usize) -> Vec<f32> {
         let (l, d) = (self.l, self.d);
@@ -312,6 +321,12 @@ impl MockFlow {
             let o = inputs[3].as_i32()?[0] as usize;
             let (zn, r) = self.jstep(k, z, y, o, batch);
             Ok(vec![HostTensor::f32(inputs[1].shape(), zn), HostTensor::f32(&[batch], r)])
+        } else if name.contains("init_proj") {
+            // Single output, like the untupled lowering: a chainable leaf.
+            let batch = inputs[1].shape()[0];
+            let k = inputs[0].as_i32()?[0] as usize;
+            let y = inputs[1].as_f32()?;
+            Ok(vec![HostTensor::f32(inputs[1].shape(), self.init_proj(k, y, batch))])
         } else if name.contains("block_fwd") {
             let batch = inputs[1].shape()[0];
             let k = inputs[0].as_i32()?[0] as usize;
@@ -460,7 +475,8 @@ impl Backend for MockServeBackend {
         }
         self.ledger.bump(name);
         let host: Vec<HostTensor> = inputs.iter().map(Self::host).collect::<Result<_>>()?;
-        let decode_call = name.contains("jstep") || name.contains("seqstep");
+        let decode_call =
+            name.contains("jstep") || name.contains("seqstep") || name.contains("init_proj");
         if decode_call && !self.call_overhead.is_zero() {
             std::thread::sleep(self.call_overhead);
         }
@@ -563,6 +579,39 @@ mod tests {
             assert_eq!(&whist[i * batch..(i + 1) * batch], &r[..]);
         }
         assert_eq!(zw_f, zw);
+    }
+
+    #[test]
+    fn init_proj_seed_beats_zeros_on_iterations() {
+        let f = MockFlow::standard();
+        let (batch, n) = (2usize, 2 * f.l * f.d);
+        let u: Vec<f32> = (0..n).map(|i| ((i * 31 + 7) % 19) as f32 / 19.0 - 0.5).collect();
+        let y = f.fwd(2, &u, batch);
+        let seed = f.init_proj(2, &y, batch);
+        // Positions 0 and 1 are already exact from the projected seed.
+        for b in 0..batch {
+            for li in 0..2 {
+                for di in 0..f.d {
+                    let idx = (b * f.l + li) * f.d + di;
+                    assert!((seed[idx] - u[idx]).abs() < 1e-5, "pos {li} must be exact");
+                }
+            }
+        }
+        // τ=0 refine iterations until the bit-exact fixed point verifies
+        // (residual exactly 0): the projected seed must need strictly fewer.
+        let iters = |mut z: Vec<f32>| {
+            for it in 1..=f.l + 2 {
+                let (zn, r) = f.jstep(2, &z, &y, 0, batch);
+                z = zn;
+                if r.iter().all(|&x| x == 0.0) {
+                    return it;
+                }
+            }
+            panic!("must converge within L+2 iterations")
+        };
+        let from_proj = iters(seed);
+        let from_zeros = iters(vec![0.0f32; n]);
+        assert!(from_proj < from_zeros, "proj {from_proj} vs zeros {from_zeros}");
     }
 
     #[test]

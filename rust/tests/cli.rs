@@ -69,6 +69,45 @@ fn policy_show_prints_mode_table_without_artifacts() {
 }
 
 #[test]
+fn bad_init_is_rejected_not_defaulted() {
+    // A typo'd --init used to silently decode from zeros; it must be a
+    // usage error on every command that takes the flag — and it must fail
+    // before any artifact loading, so no artifacts are needed here.
+    for cmd in [&["sample"][..], &["recon"][..], &["calibrate"][..], &["serve"][..]] {
+        let mut args: Vec<&str> = cmd.to_vec();
+        args.extend_from_slice(&["--init", "wurm"]);
+        let (ok, text) = run(&args);
+        assert!(!ok, "{cmd:?} accepted bad --init:\n{text}");
+        assert!(text.contains("bad --init"), "{cmd:?}:\n{text}");
+    }
+    // Malformed warm caps are errors too ("warm:0" bounds nothing).
+    let (ok, text) = run(&["sample", "--init", "warm:0"]);
+    assert!(!ok, "{text}");
+    let (ok, text) = run(&["sample", "--init", "warm:x"]);
+    assert!(!ok, "{text}");
+}
+
+#[test]
+fn policy_show_prints_embedded_init_section() {
+    // Calibrated files may carry the init policy; `policy show` surfaces it
+    // and a malformed section is an error, not a silent default.
+    let path = std::env::temp_dir().join("sjd_cli_policy_init.json");
+    std::fs::write(
+        &path,
+        r#"{"kind": "ujd", "init": {"strategy": "warm", "warm_cap": 4}}"#,
+    )
+    .unwrap();
+    let (ok, text) = run(&["policy", "show", "--policy-file", path.to_str().unwrap()]);
+    assert!(ok, "{text}");
+    assert!(text.contains("init:   warm:4"), "{text}");
+
+    let bad = std::env::temp_dir().join("sjd_cli_policy_init_bad.json");
+    std::fs::write(&bad, r#"{"kind": "ujd", "init": {"strategy": "wurm"}}"#).unwrap();
+    let (ok, text) = run(&["policy", "show", "--policy-file", bad.to_str().unwrap()]);
+    assert!(!ok, "{text}");
+}
+
+#[test]
 fn unknown_subcommand_fails() {
     let (ok, text) = run(&["frobnicate"]);
     assert!(!ok);

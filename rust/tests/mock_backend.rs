@@ -68,6 +68,10 @@ struct MockBackend {
     /// (`{m}_block_jstep_fuse_b{B}` / `{m}_block_jstep_win_fuse_b{B}`);
     /// false models a pre-fusion artifact dir → per-iteration fallback.
     fused_jstep: bool,
+    /// Expose the optional `{m}_init_proj_b{B}` cross-block extrapolation
+    /// artifact; false models a pre-speculation artifact dir → `--init proj`
+    /// must silently fall back to the Zeros init.
+    init_proj: bool,
 }
 
 /// Mint a mock device value: the payload is just an `Rc`'d host tensor.
@@ -97,6 +101,7 @@ impl MockBackend {
             device_reverse: false,
             windowed_jstep: true,
             fused_jstep: true,
+            init_proj: true,
         }
     }
 
@@ -110,6 +115,10 @@ impl MockBackend {
 
     fn without_fuse() -> Self {
         MockBackend { fused_jstep: false, ..MockBackend::new() }
+    }
+
+    fn without_init_proj() -> Self {
+        MockBackend { init_proj: false, ..MockBackend::new() }
     }
 
     fn count(&self, name: &str) -> usize {
@@ -173,6 +182,9 @@ impl Backend for MockBackend {
         }
         if name.contains("fuse") {
             return self.fused_jstep;
+        }
+        if name.contains("init_proj") {
+            return self.init_proj;
         }
         if name.contains("jstep_win") {
             return self.windowed_jstep;
@@ -1241,7 +1253,7 @@ fn pipeline_bit_exact_with_monolithic_decode() {
         opts.jacobi.tau = 0.0; // exactness sweeps — the bit-exact regime
 
         // Pipelined decode over the shared serve mock (host-only values).
-        let cfg = PipelineConfig { depth: 2, stage_threads: 0 };
+        let cfg = PipelineConfig { depth: 2, stage_threads: 0, warm_cap: 0 };
         let factory = move |_stage: usize| {
             Ok(MockServeBackend::new(&[2], std::time::Duration::ZERO, MockLedger::new()))
         };
@@ -1293,7 +1305,7 @@ fn pipeline_bit_exact_with_monolithic_decode() {
 
 #[test]
 fn pipeline_reports_stage_metrics_and_inflight_bound() {
-    let cfg = PipelineConfig { depth: 1, stage_threads: 2 };
+    let cfg = PipelineConfig { depth: 1, stage_threads: 2, warm_cap: 0 };
     let factory = move |_stage: usize| {
         Ok(MockServeBackend::new(&[2], std::time::Duration::ZERO, MockLedger::new()))
     };
@@ -1332,7 +1344,7 @@ fn pipeline_startup_failure_errors_without_leaking_stages() {
     // One stage's backend fails to build: start() must surface the error
     // AND join the already-spawned healthy stages (this test hangs if a
     // stage is left blocked on its queue).
-    let cfg = PipelineConfig { depth: 2, stage_threads: 0 };
+    let cfg = PipelineConfig { depth: 2, stage_threads: 0, warm_cap: 0 };
     let factory = move |stage: usize| {
         if stage == 2 {
             anyhow::bail!("stage 2 backend exploded");
@@ -1460,4 +1472,199 @@ fn legacy_call_shim_matches_call_v() {
         assert!(v.is_device(), "mock outputs are device-resident");
         assert_eq!(*h, be.to_host(v).unwrap());
     }
+}
+
+// ---------------------------------------------------------------------------
+// Speculative initialization providers (`--init`)
+// ---------------------------------------------------------------------------
+
+/// Exact-decode options: a vanishing τ makes convergence mean "the iterate
+/// is the bit-exact fixed point" (the mock's residual is exactly 0 there
+/// and positive everywhere else), and the +1 iteration budget lets the
+/// from-zeros solve reach its resid-0 verify iteration (position i of the
+/// triangular mock needs i+1 updates, so full exactness lands at L and the
+/// driver observes it at L+1).
+fn exact_opts() -> SampleOptions {
+    let mut opts = SampleOptions { policy: DecodePolicy::UniformJacobi, ..Default::default() };
+    opts.jacobi.tau = 1e-9;
+    opts.jacobi.max_iters = Some(L + 1);
+    opts.seed = 11;
+    opts
+}
+
+/// Decode `z` exactly with the given init strategy and return the output.
+fn decode_with_init(
+    sampler: &Sampler<'_, MockBackend>,
+    z: &HostTensor,
+    init: InitStrategy,
+) -> sjd::coordinator::sampler::SampleOutput {
+    let mut opts = exact_opts();
+    opts.jacobi.init = init;
+    sampler.decode_tokens(z.clone(), &opts).unwrap()
+}
+
+#[test]
+fn init_providers_bit_exact_and_no_costlier_at_tau0() {
+    // Prop 3.2: the τ=0 fixed point is independent of z⁰, so every init
+    // provider must reproduce the Zeros output bit-for-bit. The projected
+    // seed additionally must not *cost* more than it saves: with its one
+    // speculative update charged (`total_updates_with_spec`), it stays ≤
+    // the Zeros total.
+    let be = MockBackend::new();
+    let sampler = mk_sampler(&be);
+    let z = randn(&[2, L, D], 42);
+    let base = decode_with_init(&sampler, &z, InitStrategy::Zeros);
+    assert_eq!(base.spec_hits(), 0);
+
+    for init in [InitStrategy::Normal, InitStrategy::PrevLayer, InitStrategy::Proj] {
+        let out = decode_with_init(&sampler, &z, init);
+        assert_eq!(
+            out.tokens.as_f32().unwrap(),
+            base.tokens.as_f32().unwrap(),
+            "{init:?} must be bit-exact at tau=0"
+        );
+        assert!(
+            out.total_updates_with_spec() <= base.total_updates_with_spec(),
+            "{init:?}: {} > zeros {}",
+            out.total_updates_with_spec(),
+            base.total_updates_with_spec()
+        );
+    }
+
+    // The projection seeds every Jacobi block and converges strictly faster
+    // (the mock's projected seed lands positions 0 and 1 exactly).
+    let proj = decode_with_init(&sampler, &z, InitStrategy::Proj);
+    assert_eq!(proj.spec_hits(), K, "every block takes the projected z⁰");
+    assert!(
+        proj.total_position_updates() < base.total_position_updates(),
+        "projection must shrink the refine itself"
+    );
+    assert!(proj.total_host_syncs() < base.total_host_syncs());
+}
+
+#[test]
+fn draft_then_refine_bit_exact_with_draft_cost_accounted() {
+    let be = MockBackend::new();
+    let sampler = mk_sampler(&be);
+    let z = randn(&[2, L, D], 43);
+    let base = decode_with_init(&sampler, &z, InitStrategy::Zeros);
+    let draft = decode_with_init(&sampler, &z, InitStrategy::Draft);
+    assert_eq!(
+        draft.tokens.as_f32().unwrap(),
+        base.tokens.as_f32().unwrap(),
+        "draft-then-refine must be bit-exact at tau=0"
+    );
+    // Every refine block was seeded from a draft state…
+    assert_eq!(draft.spec_hits(), K);
+    // …which makes the exact refine itself cheaper than a cold solve, but
+    // the draft pass's own updates are charged as speculation cost — on the
+    // mock flow the full bill is *not* a win (the tuner's job is to notice
+    // exactly this and fall back to Zeros).
+    assert!(draft.total_position_updates() < base.total_position_updates());
+    let spec_cost: usize = draft.traces.iter().map(|t| t.spec_cost_updates).sum();
+    assert!(spec_cost > 0, "draft pass must be accounted, not hidden");
+}
+
+#[test]
+fn warm_start_pays_on_repeat_seed_and_stays_bit_exact() {
+    let be = MockBackend::new();
+    let sampler = mk_sampler(&be);
+    let z = randn(&[2, L, D], 44);
+    let base = decode_with_init(&sampler, &z, InitStrategy::Zeros);
+
+    // Cold pass: every (seed, position) misses, falls back to Zeros.
+    let cold = decode_with_init(&sampler, &z, InitStrategy::Warm);
+    assert_eq!(cold.spec_hits(), 0, "first decode has nothing cached");
+    assert_eq!(cold.tokens.as_f32().unwrap(), base.tokens.as_f32().unwrap());
+
+    // Repeat pass (same seed, same latent): every block hits the cached
+    // converged iterate and verifies in one residual-0 iteration.
+    let warm = decode_with_init(&sampler, &z, InitStrategy::Warm);
+    assert_eq!(warm.spec_hits(), K, "every block must hit the warm cache");
+    assert_eq!(warm.tokens.as_f32().unwrap(), base.tokens.as_f32().unwrap());
+    assert!(
+        warm.total_updates_with_spec() < base.total_updates_with_spec(),
+        "warm {} vs zeros {}",
+        warm.total_updates_with_spec(),
+        base.total_updates_with_spec()
+    );
+    assert!(warm.total_host_syncs() < base.total_host_syncs());
+}
+
+#[test]
+fn warm_cache_cap_bounds_entries_lru() {
+    // `--init warm:N` bounds the cache: with room for exactly one decode's
+    // K entries, a second seed evicts the first (LRU), and re-decoding the
+    // evicted seed gets zero hits while the resident seed still hits.
+    let be = MockBackend::new();
+    let sampler = mk_sampler(&be);
+    sampler.set_warm_cap(K);
+    let z = randn(&[2, L, D], 45);
+    let mut opts = exact_opts();
+    opts.jacobi.init = InitStrategy::Warm;
+
+    opts.seed = 1;
+    let _ = sampler.decode_tokens(z.clone(), &opts).unwrap();
+    opts.seed = 2;
+    let _ = sampler.decode_tokens(z.clone(), &opts).unwrap(); // evicts seed 1
+    let hit = sampler.decode_tokens(z.clone(), &opts).unwrap();
+    assert_eq!(hit.spec_hits(), K, "resident seed must hit");
+    opts.seed = 1;
+    let miss = sampler.decode_tokens(z.clone(), &opts).unwrap();
+    assert_eq!(miss.spec_hits(), 0, "evicted seed must miss");
+}
+
+#[test]
+fn normal_init_uploads_each_block_seed_once() {
+    // Satellite bugfix: `InitStrategy::Normal` used to re-upload its seeded
+    // z⁰ on every decode. The pool's (shape, seed) init cache pins each
+    // block's z⁰ once; a second identical decode uploads only the latent.
+    let be = MockBackend::with_device_reverse();
+    let sampler = mk_sampler(&be);
+    let z = randn(&[2, L, D], 46);
+    let mut opts = exact_opts();
+    opts.jacobi.init = InitStrategy::Normal;
+    opts.seed = 30;
+
+    let _ = sampler.decode_tokens(z.clone(), &opts).unwrap();
+    // One latent upload + one seeded z⁰ per block (cfg.seed varies by
+    // decode position, so the K inits are distinct cache entries).
+    assert_eq!(be.uploads_of(&[2, L, D]), 1 + K);
+    let _ = sampler.decode_tokens(z.clone(), &opts).unwrap();
+    // Pre-fix this was 2 + 2K: every block re-uploaded its init.
+    assert_eq!(be.uploads_of(&[2, L, D]), 2 + K, "cached inits must not re-upload");
+}
+
+#[test]
+fn proj_init_stays_device_resident() {
+    // ISSUE residency rule: the speculative path must not bounce through
+    // the host. The projection consumes the already-uploaded y and a pooled
+    // device scalar — zero host-arg promotions — and the only [B,L,D] sync
+    // of the whole decode is the final token fetch.
+    let be = MockBackend::with_device_reverse();
+    let sampler = mk_sampler(&be);
+    let z = randn(&[2, L, D], 47);
+    let _ = decode_with_init(&sampler, &z, InitStrategy::Proj);
+    assert_eq!(be.count("mock_init_proj_b2"), K);
+    assert_eq!(be.promoted("mock_init_proj_b2"), 0, "projection inputs must be device-resident");
+    assert_eq!(be.syncs_of(&[2, L, D]), 1, "tokens fetched once at the end");
+    // The latent uploads once; no pooled zero init is ever built (the
+    // projection replaces it for every block).
+    assert_eq!(be.uploads_of(&[2, L, D]), 1);
+}
+
+#[test]
+fn proj_falls_back_to_zeros_without_artifact() {
+    // Pre-speculation artifact dirs don't ship `{m}_init_proj_b{B}`:
+    // `--init proj` must degrade to the Zeros init, not fail.
+    let be = MockBackend::without_init_proj();
+    let sampler = mk_sampler(&be);
+    assert!(!sampler.has_init_proj_artifact());
+    let z = randn(&[2, L, D], 48);
+    let base = decode_with_init(&sampler, &z, InitStrategy::Zeros);
+    let out = decode_with_init(&sampler, &z, InitStrategy::Proj);
+    assert_eq!(be.count("mock_init_proj_b2"), 0);
+    assert_eq!(out.spec_hits(), 0, "no artifact ⇒ no speculation");
+    assert_eq!(out.tokens.as_f32().unwrap(), base.tokens.as_f32().unwrap());
+    assert_eq!(out.total_position_updates(), base.total_position_updates());
 }

@@ -6,7 +6,7 @@
 //! tests over real TCP + PJRT that skip when artifacts are missing.
 
 use sjd::coordinator::batcher::Batcher;
-use sjd::coordinator::jacobi::{JacobiConfig, JacobiStats};
+use sjd::coordinator::jacobi::{InitStrategy, JacobiConfig, JacobiStats};
 use sjd::coordinator::policy::{
     calibrate_chunks, BlockDecode, DecodePolicy, PolicyTuner, TunerConfig,
 };
@@ -87,6 +87,7 @@ fn mock_router(
             pipeline_depth: 1,
             stage_threads: 0,
             tuner: None,
+            warm_cap: 0,
         },
         batcher.clone(),
         registry.clone(),
@@ -333,6 +334,7 @@ fn pipelined_router_matches_monolithic_images() {
                 pipeline_depth: depth,
                 stage_threads: 0,
                 tuner: None,
+                warm_cap: 0,
             },
             batcher.clone(),
             registry.clone(),
@@ -435,6 +437,7 @@ fn tuned_router_converges_to_offline_calibration() {
             pipeline_depth: 2,
             stage_threads: 0,
             tuner: Some(tuner.clone()),
+            warm_cap: 0,
         },
         batcher.clone(),
         registry.clone(),
@@ -470,6 +473,68 @@ fn tuned_router_converges_to_offline_calibration() {
             want[pos]
         );
     }
+}
+
+#[test]
+fn tuned_router_reverts_unpaying_init_provider_to_zeros() {
+    // Draft-then-refine can never pay on the mock flow: the coarse draft
+    // pass costs at least as many position updates as it saves the refine
+    // pass (triangular dependence makes zeros-init already optimal per
+    // iteration). A --tune'd router must notice that from its own traces,
+    // revert the bucket to zeros, and export the realized overspend.
+    let tuner = Arc::new(
+        PolicyTuner::new(
+            4,
+            8,
+            DecodePolicy::UniformJacobi,
+            TunerConfig { min_obs: 2, probe_every: 64, ..Default::default() },
+        )
+        .with_init(InitStrategy::Draft),
+    );
+    let registry = Registry::new();
+    let batcher = Batcher::new(1, Duration::from_millis(2));
+    let ledger = MockLedger::new();
+    let router = Router::start_with(
+        RouterConfig {
+            artifacts_dir: "unused-by-mock".into(),
+            model: "mock".into(),
+            buckets: Vec::new(),
+            workers: 1,
+            options: SampleOptions { policy: DecodePolicy::UniformJacobi, ..Default::default() },
+            pipeline_depth: 1, // monolithic: the pipelined path demotes draft
+            stage_threads: 0,
+            tuner: Some(tuner.clone()),
+            warm_cap: 0,
+        },
+        batcher.clone(),
+        registry.clone(),
+        move |_| Ok(MockServeBackend::new(&[1], Duration::ZERO, ledger.clone())),
+    )
+    .expect("tuned router");
+    for seed in 0..10u64 {
+        batcher.submit(seed, seed).unwrap().wait().expect("image");
+    }
+    router.shutdown();
+
+    // The draft decodes really speculated — and really overspent.
+    assert!(
+        registry.counter("sjd_spec_init_hits").get() > 0,
+        "draft decodes must record speculative hits"
+    );
+    assert!(
+        registry.counter("sjd_spec_wasted_updates").get() > 0,
+        "draft overspend must surface as sjd_spec_wasted_updates"
+    );
+    // The bucket reverted: the tuner's /policy JSON reports it inactive
+    // while still recording what the operator requested.
+    let v = tuner.to_json();
+    let init = v.get("init").expect("tuner json carries init state");
+    assert_eq!(init.req_str("requested").unwrap(), "draft");
+    let b = init.get("buckets").and_then(|b| b.get("1")).expect("bucket 1 init state");
+    assert_eq!(b.get("active").and_then(|a| a.as_bool()), Some(false), "{v:?}");
+    // And the serving decision follows: the bucket's next decode runs
+    // zeros, not the provider.
+    assert_eq!(tuner.init_for(1), InitStrategy::Zeros);
 }
 
 #[test]
@@ -553,6 +618,7 @@ fn serve_generate_and_metrics_end_to_end() {
             pipeline_depth: 1,
             stage_threads: 0,
             tuner: None,
+            warm_cap: 0,
         },
         batcher.clone(),
         registry.clone(),
@@ -658,6 +724,7 @@ fn batcher_groups_concurrent_requests() {
             pipeline_depth: 1,
             stage_threads: 0,
             tuner: None,
+            warm_cap: 0,
         },
         batcher.clone(),
         registry.clone(),
