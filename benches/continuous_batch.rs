@@ -1,0 +1,280 @@
+//! Continuous-batching benchmark over the **mock backend** — no artifacts
+//! needed, so it runs everywhere (including the CI smoke step).
+//!
+//! Drives the batcher → router path directly (no HTTP) with a bursty
+//! arrival trace shaped to expose what `serve --refill` buys: episodes of
+//! a 3-request burst (covered by bucket 4, so one padded row) in which one
+//! client disconnects mid-decode.
+//!
+//! * **held-batch** — the `refill: false` monolithic worker: the batch
+//!   that formed is the batch that decodes, end to end. The padded row
+//!   and the disconnected client's row ride all K = 4 blocks at bucket 4.
+//! * **continuous** — `refill: true`: the cancelled slot is swept at the
+//!   next block boundary, the wave compacts through the slot-remap gather
+//!   and migrates to bucket 2, so blocks 1..K decode two live rows with
+//!   zero padding.
+//!
+//! The mock's decode cost scales with the *bucket* batch size, so both the
+//! padded row and the dead row burn real wall time. Gates (exit non-zero
+//! on failure):
+//! * every surviving request's image is **bit-identical** to its solo
+//!   serial decode (τ = 0) in both configurations,
+//! * continuous p99 beats held-batch p99 by ≥ 1.3×,
+//! * continuous decodes strictly fewer padded slot-blocks than the
+//!   held-batch baseline (whose formation pads ride all K blocks),
+//! * at least one mid-flight bucket migration actually happened.
+//!
+//! ```bash
+//! cargo bench --bench continuous_batch            # full run (32 episodes)
+//! cargo bench --bench continuous_batch -- --quick # CI smoke (12 episodes)
+//! ```
+
+use anyhow::Result;
+use sjd::coordinator::batcher::Batcher;
+use sjd::coordinator::policy::DecodePolicy;
+use sjd::coordinator::router::{Router, RouterConfig};
+use sjd::coordinator::sampler::{SampleOptions, Sampler};
+use sjd::metrics::Registry;
+use sjd::testkit::mockflow::{MockLedger, MockServeBackend};
+use std::time::{Duration, Instant};
+
+/// Per-slot artificial decode cost (per jstep/seqstep call, × batch size).
+const SLOT_DELAY: Duration = Duration::from_micros(300);
+/// Flow blocks in `MockFlow::standard()` — the held-batch baseline decodes
+/// every formation-time padded slot through all of them.
+const BLOCKS: u64 = 4;
+/// Distinct request seeds (kept small so solo references are cached).
+const SEED_SPACE: u64 = 6;
+
+fn quick() -> bool {
+    std::env::args().any(|a| a == "--quick") || std::env::var("SJD_QUICK").is_ok()
+}
+
+fn pct(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    sorted[((sorted.len() as f64 - 1.0) * q) as usize]
+}
+
+fn opts() -> SampleOptions {
+    let mut o =
+        SampleOptions { policy: DecodePolicy::UniformJacobi, ..Default::default() };
+    o.jacobi.tau = 0.0;
+    o
+}
+
+/// Solo serial decode of one seed at bucket 1 — the bit-exactness oracle.
+fn solo_reference(seed: u64) -> Result<Vec<f32>> {
+    let be = MockServeBackend::new(&[1, 2, 4], Duration::ZERO, MockLedger::new());
+    let sampler = Sampler::new(&be, "mock", 1)?;
+    let z = sampler.sample_prior_slots(&[seed]);
+    let out = sampler.decode_tokens(z, &opts())?;
+    Ok(sampler.unpatchify(&out.tokens)?[0].data().to_vec())
+}
+
+struct RunStats {
+    label: &'static str,
+    wall: Duration,
+    ok: u64,
+    latencies_ms: Vec<f64>,
+    padded_slot_blocks: u64,
+    migrations: u64,
+    refills: u64,
+}
+
+impl RunStats {
+    fn p50(&self) -> f64 {
+        pct(&self.latencies_ms, 0.50)
+    }
+
+    fn p99(&self) -> f64 {
+        pct(&self.latencies_ms, 0.99)
+    }
+}
+
+fn run_config(
+    label: &'static str,
+    refill: bool,
+    episodes: usize,
+    solo: &[Vec<f32>],
+) -> Result<RunStats> {
+    let registry = Registry::new();
+    let batcher = Batcher::new(4, Duration::from_millis(2));
+    let ledger = MockLedger::new();
+    let router = Router::start_with(
+        RouterConfig {
+            artifacts_dir: "mock".into(),
+            model: "mock".into(),
+            buckets: Vec::new(),
+            workers: 1,
+            options: opts(),
+            pipeline_depth: 1,
+            stage_threads: 0,
+            refill,
+            tuner: None,
+            warm_cap: 0,
+        },
+        batcher.clone(),
+        registry.clone(),
+        {
+            let ledger = ledger.clone();
+            move |_| Ok(MockServeBackend::new(&[1, 2, 4], SLOT_DELAY, ledger.clone()))
+        },
+    )?;
+
+    // Bursty open-loop trace: per episode a 3-burst arrives at once, one of
+    // the three disconnects ~3 ms in (mid block 0 under either config), and
+    // the line goes quiet before the next burst. Each surviving request
+    // gets a waiter thread so its latency is stamped the moment the slot
+    // resolves, not when the trace finishes.
+    let solo = std::sync::Arc::new(solo.to_vec());
+    let results: std::sync::Arc<std::sync::Mutex<Vec<(f64, u8)>>> =
+        std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+    const OK_EXACT: u8 = 0;
+    const OK_MISMATCH: u8 = 1;
+    const ERRORED: u8 = 2;
+    const HUNG: u8 = 3;
+    let t0 = Instant::now();
+    let mut waiters = Vec::new();
+    let mut cancelled = Vec::new();
+    for e in 0..episodes as u64 {
+        let seeds = [(3 * e) % SEED_SPACE, (3 * e + 1) % SEED_SPACE, (3 * e + 2) % SEED_SPACE];
+        let handles: Vec<_> = seeds
+            .iter()
+            .enumerate()
+            .map(|(j, &s)| batcher.submit_slot(100 * e + j as u64, s))
+            .collect::<anyhow::Result<_>>()?;
+        let mut handles = handles.into_iter();
+        for &seed in &seeds[..2] {
+            let h = handles.next().unwrap();
+            let submitted = Instant::now();
+            let solo = solo.clone();
+            let results = results.clone();
+            waiters.push(std::thread::spawn(move || {
+                let status = match h.done.wait_timeout(Duration::from_secs(60)) {
+                    Some(Ok(img)) if img.data() == &solo[seed as usize][..] => OK_EXACT,
+                    Some(Ok(_)) => {
+                        eprintln!("seed {seed}: output differs from solo decode");
+                        OK_MISMATCH
+                    }
+                    Some(Err(msg)) => {
+                        eprintln!("seed {seed}: decode error: {msg}");
+                        ERRORED
+                    }
+                    None => {
+                        eprintln!("seed {seed}: request hung");
+                        HUNG
+                    }
+                };
+                let latency = submitted.elapsed().as_secs_f64() * 1e3;
+                results.lock().unwrap().push((latency, status));
+            }));
+        }
+        std::thread::sleep(Duration::from_millis(3));
+        let dropped = handles.next().unwrap();
+        dropped.cancel();
+        cancelled.push(dropped);
+        std::thread::sleep(Duration::from_millis(47));
+    }
+
+    for w in waiters {
+        let _ = w.join();
+    }
+    let mut hung = false;
+    // Disconnected clients must still *resolve* (held-batch decodes them to
+    // the end; continuous sweeps them into an error) — never hang.
+    for h in &cancelled {
+        if h.done.wait_timeout(Duration::from_secs(60)).is_none() {
+            eprintln!("[{label}] cancelled slot hung");
+            hung = true;
+        }
+    }
+    let wall = t0.elapsed();
+    router.shutdown();
+
+    let results = results.lock().unwrap();
+    let ok = results.iter().filter(|(_, s)| *s == OK_EXACT).count() as u64;
+    if hung || results.iter().any(|(_, s)| *s != OK_EXACT) {
+        anyhow::bail!("[{label}] per-request outputs must be bit-exact and never hang");
+    }
+    let mut latencies: Vec<f64> = results.iter().map(|(l, _)| *l).collect();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Ok(RunStats {
+        label,
+        wall,
+        ok,
+        latencies_ms: latencies,
+        // The held-batch worker only records formation-time padded slots;
+        // each one rides all K blocks, so normalise both runs to decoded
+        // padded slot-blocks.
+        padded_slot_blocks: if refill {
+            registry.counter("sjd_padded_slot_blocks").get()
+        } else {
+            registry.counter("sjd_padded_slots").get() * BLOCKS
+        },
+        migrations: registry.counter("sjd_bucket_migrations").get(),
+        refills: registry.counter("sjd_batch_refills").get(),
+    })
+}
+
+fn report(s: &RunStats, survivors: usize) {
+    println!(
+        "[{}] {} ok / {} survivors in {:.2}s | client ms p50 {:.1} p99 {:.1} \
+         | padded slot-blocks {} | migrations {} | refills {}",
+        s.label,
+        s.ok,
+        survivors,
+        s.wall.as_secs_f64(),
+        s.p50(),
+        s.p99(),
+        s.padded_slot_blocks,
+        s.migrations,
+        s.refills,
+    );
+}
+
+fn main() -> Result<()> {
+    let episodes = if quick() { 12 } else { 32 };
+    let survivors = 2 * episodes;
+    println!(
+        "=== continuous_batch: {episodes} episodes of burst-3 + mid-decode disconnect \
+         (mock backend) ==="
+    );
+
+    let solo: Vec<Vec<f32>> =
+        (0..SEED_SPACE).map(solo_reference).collect::<Result<_>>()?;
+
+    let held = run_config("held-batch", false, episodes, &solo)?;
+    report(&held, survivors);
+    let cont = run_config("continuous", true, episodes, &solo)?;
+    report(&cont, survivors);
+
+    let p99_gain = held.p99() / cont.p99().max(1e-9);
+    println!("\n=== summary ===");
+    println!(
+        "p99 {:.1} → {:.1} ms ({p99_gain:.2}x) | padded slot-blocks {} → {} | \
+         migrations {} | refills {}",
+        held.p99(),
+        cont.p99(),
+        held.padded_slot_blocks,
+        cont.padded_slot_blocks,
+        cont.migrations,
+        cont.refills,
+    );
+
+    let all_ok = held.ok == survivors as u64 && cont.ok == survivors as u64;
+    let p99_ok = p99_gain >= 1.3;
+    let pad_ok = cont.padded_slot_blocks < held.padded_slot_blocks;
+    let migrated = cont.migrations >= 1;
+    if all_ok && p99_ok && pad_ok && migrated {
+        println!("PASS: continuous batching dominates the held-batch baseline");
+        Ok(())
+    } else {
+        println!(
+            "FAIL: all_ok={all_ok} p99_ok={p99_ok} (need ≥1.3x) pad_ok={pad_ok} \
+             migrated={migrated}"
+        );
+        std::process::exit(1);
+    }
+}

@@ -74,8 +74,7 @@ fn run(depth: usize, n_batches: u64) -> Result<RunStats> {
     for seed in 0..n_batches {
         let results = results.clone();
         let job = PipelineJob {
-            seed,
-            n: 2,
+            seeds: vec![seed, seed.wrapping_add(100)],
             opts: opts.clone(),
             done: Box::new(move |res| {
                 let (_imgs, out) = res.expect("pipeline decode");

@@ -124,6 +124,7 @@ fn run_config(
             },
             pipeline_depth: 1,
             stage_threads: 0,
+            refill: false,
             tuner: None,
             warm_cap: 0,
         },

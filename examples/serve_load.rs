@@ -110,6 +110,7 @@ fn serve_and_measure(
             options: SampleOptions { policy, ..Default::default() },
             pipeline_depth: 1,
             stage_threads: 0,
+            refill: false,
             tuner: None,
             warm_cap: 0,
         },

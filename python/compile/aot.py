@@ -309,6 +309,20 @@ def lower_tarflow(w: ArtifactWriter, cfg: tarflow.TarFlowConfig, params, batches
             model=cfg.name,
             untupled=True,
         )
+        # Device-side slot remap for continuous batching (`serve --refill`):
+        # gathers whole batch rows by index so a wave that lost slots at a
+        # block boundary compacts live rows to the front (pad indices
+        # re-point at row 0) without a host round-trip, then migrates to a
+        # smaller covering bucket. Optional role, untupled like `reverse` so
+        # the remapped tokens chain straight into the next block's inputs.
+        w.lower(
+            f"{cfg.name}_slot_gather_b{b}",
+            lambda t, idx: t[idx],
+            [((b, L, D), jnp.float32), ((b,), I32)],
+            ["t", "idx"],
+            model=cfg.name,
+            untupled=True,
+        )
         w.lower(
             f"{cfg.name}_block_seqstep_b{b}",
             lambda k, up, vt, pos, kk, kv: tarflow.block_seq_step(

@@ -71,7 +71,8 @@ class TestArtifactWriter:
             "tiny_fwd_b1", "tiny_block_fwd_b1", "tiny_block_jstep_b1",
             "tiny_block_jstep_win_b1", "tiny_block_jstep_fuse_b1",
             "tiny_block_jstep_win_fuse_b1", "tiny_init_proj_b1",
-            "tiny_block_seqfull_b1", "tiny_block_seqstep_b1", "tiny_reverse_b1"}
+            "tiny_block_seqfull_b1", "tiny_block_seqstep_b1", "tiny_reverse_b1",
+            "tiny_slot_gather_b1"}
         for a in manifest["artifacts"]:
             assert (tmp_path / a["file"]).exists()
             assert all("shape" in t and "dtype" in t for t in a["inputs"])
@@ -141,6 +142,29 @@ class TestArtifactWriter:
             [1, cfg.seq_len, cfg.token_dim]]
         assert proj["untupled_outputs"] is True
 
+    def test_slot_gather_signature_and_semantics(self, tiny_tf, tmp_path):
+        """The continuous-batching slot remap: (t[B,L,D], idx[B] i32) →
+        t[idx], single output and lowered untupled so the compacted wave
+        chains straight into the next block with no host round-trip. The
+        gather semantics (row permutation, pads re-pointed at row 0) are
+        asserted on the traced function itself."""
+        cfg, params = tiny_tf
+        w = aot.ArtifactWriter(tmp_path)
+        aot.lower_tarflow(w, cfg, params, [2])
+        g = next(e for e in w.entries if e["name"].endswith("slot_gather_b2"))
+        assert [i["name"] for i in g["inputs"]] == ["t", "idx"]
+        assert [i["dtype"] for i in g["inputs"]] == ["f32", "i32"]
+        assert g["inputs"][1]["shape"] == [2]
+        assert [o["shape"] for o in g["outputs"]] == [
+            [2, cfg.seq_len, cfg.token_dim]]
+        assert g["untupled_outputs"] is True
+        t = jax.random.normal(jax.random.PRNGKey(3),
+                              (2, cfg.seq_len, cfg.token_dim))
+        out = np.asarray(jax.jit(lambda t, idx: t[idx])(
+            t, jnp.asarray([1, 0], dtype=jnp.int32)))
+        np.testing.assert_array_equal(out[0], np.asarray(t)[1])
+        np.testing.assert_array_equal(out[1], np.asarray(t)[0])
+
 
 class TestBatchBuckets:
     def test_parse_batch_sizes(self):
@@ -166,7 +190,7 @@ class TestBatchBuckets:
         names = {a["name"] for a in manifest["artifacts"]}
         roles = ["fwd", "block_fwd", "block_jstep", "block_jstep_win",
                  "block_jstep_fuse", "block_jstep_win_fuse", "init_proj",
-                 "block_seqfull", "block_seqstep", "reverse"]
+                 "block_seqfull", "block_seqstep", "reverse", "slot_gather"]
         for b in (1, 2):
             for role in roles:
                 assert f"tiny_{role}_b{b}" in names, f"missing {role} for bucket {b}"

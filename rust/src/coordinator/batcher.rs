@@ -8,11 +8,18 @@
 //! smallest bucket covering the formed batch and pads only the gap to *that*
 //! bucket (tracked in the `sjd_padded_slots` counter), so an `n=1` request
 //! served by a `{1,2,4,8}` bucket set decodes zero throwaway slots.
+//!
+//! Continuous batching (`serve --refill`) adds two verbs on top: a
+//! non-blocking [`Batcher::take_upto`] drain that tops a decoding wave up to
+//! the largest bucket at every block boundary, and a per-slot cancellation
+//! flag ([`SlotHandle::cancel`]) that lets an abandoned request leave the
+//! wave at the next boundary instead of decoding to the end.
 
 use crate::exec::OneShot;
 use crate::tensor::Tensor;
 use anyhow::{bail, Result};
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -28,7 +35,37 @@ pub struct Slot {
     pub seed: u64,
     /// Completion channel: receives the image or the decode error.
     pub done: OneShot<SlotResult>,
+    /// Cooperative cancellation flag (client disconnected): the continuous
+    /// path sweeps cancelled slots out at the next block boundary instead
+    /// of decoding them to the end; monolithic workers ignore it (the slot
+    /// still completes, its result is simply discarded).
+    pub cancel: Arc<AtomicBool>,
     pub enqueued: Instant,
+}
+
+impl Slot {
+    /// Whether the submitter abandoned this slot (see [`SlotHandle::cancel`]).
+    pub fn cancelled(&self) -> bool {
+        self.cancel.load(Ordering::Relaxed)
+    }
+}
+
+/// The submitter's side of a slot: the completion channel plus the
+/// cancellation flag. Cancelling is advisory — the slot still resolves
+/// (with an error if it was swept before decoding), so a waiter never
+/// hangs.
+#[derive(Clone)]
+pub struct SlotHandle {
+    pub done: OneShot<SlotResult>,
+    cancel: Arc<AtomicBool>,
+}
+
+impl SlotHandle {
+    /// Flag the slot as abandoned; the continuous decode path drops it at
+    /// the next block boundary.
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::Relaxed);
+    }
 }
 
 /// A formed batch handed to a worker: between 1 and `max_batch` real slots.
@@ -70,8 +107,22 @@ impl Batcher {
     /// late slot would otherwise sit in the queue forever and its completion
     /// handle would never fire.
     pub fn submit(&self, request_id: u64, seed: u64) -> Result<OneShot<SlotResult>> {
+        Ok(self.submit_slot(request_id, seed)?.done)
+    }
+
+    /// [`Self::submit`] returning the full [`SlotHandle`] (completion +
+    /// cancellation); the HTTP layer cancels a request's remaining slots
+    /// when the client disconnects mid-decode.
+    pub fn submit_slot(&self, request_id: u64, seed: u64) -> Result<SlotHandle> {
         let done = OneShot::new();
-        let slot = Slot { request_id, seed, done: done.clone(), enqueued: Instant::now() };
+        let cancel = Arc::new(AtomicBool::new(false));
+        let slot = Slot {
+            request_id,
+            seed,
+            done: done.clone(),
+            cancel: cancel.clone(),
+            enqueued: Instant::now(),
+        };
         let (m, cv) = &*self.inner;
         {
             let mut q = m.lock().unwrap();
@@ -81,7 +132,7 @@ impl Batcher {
             q.slots.push_back(slot);
         }
         cv.notify_all();
-        Ok(done)
+        Ok(SlotHandle { done, cancel })
     }
 
     pub fn queued(&self) -> usize {
@@ -126,6 +177,21 @@ impl Batcher {
         let take = q.slots.len().min(self.max_batch);
         let slots: Vec<Slot> = q.slots.drain(..take).collect();
         Some(Batch { slots, formed: Instant::now() })
+    }
+
+    /// Non-blocking drain of up to `n` queued slots — the continuous-batching
+    /// refill: a wave entering stage 0 tops itself up to the largest bucket
+    /// from whatever is queued *right now*, without waiting out `max_wait`.
+    /// Drains even after [`Self::close`] so a shutdown that lands mid-refill
+    /// still flushes every accepted slot to a worker (which then completes
+    /// each with an error or an image — never a hang).
+    pub fn take_upto(&self, n: usize) -> Vec<Slot> {
+        if n == 0 {
+            return Vec::new();
+        }
+        let mut q = self.inner.0.lock().unwrap();
+        let take = q.slots.len().min(n);
+        q.slots.drain(..take).collect()
     }
 }
 
@@ -210,6 +276,43 @@ mod tests {
         let b1 = b.next_batch().unwrap();
         assert_eq!(b1.slots.len(), 2);
         assert_eq!(b.queued(), 3);
+    }
+
+    #[test]
+    fn take_upto_is_nonblocking_and_bounded() {
+        let b = Batcher::new(8, Duration::from_secs(30));
+        assert!(b.take_upto(4).is_empty()); // empty queue: returns immediately
+        for i in 0..3 {
+            b.submit(i, 0).unwrap();
+        }
+        let got = b.take_upto(2);
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].request_id, 0);
+        assert_eq!(b.queued(), 1);
+        assert!(b.take_upto(0).is_empty());
+        assert_eq!(b.queued(), 1);
+    }
+
+    #[test]
+    fn take_upto_drains_after_close() {
+        // Shutdown-during-refill: slots accepted before close() must still
+        // reach a worker so their completion handles fire.
+        let b = Batcher::new(8, Duration::from_secs(30));
+        b.submit(1, 0).unwrap();
+        b.close();
+        assert_eq!(b.take_upto(8).len(), 1);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn cancel_flag_crosses_to_worker_slot() {
+        let b = Batcher::new(1, Duration::from_secs(1));
+        let h = b.submit_slot(1, 0).unwrap();
+        h.cancel();
+        let batch = b.next_batch().unwrap();
+        assert!(batch.slots[0].cancelled());
+        batch.slots[0].done.put(Err("cancelled".into()));
+        assert!(h.done.wait().is_err());
     }
 
     #[test]

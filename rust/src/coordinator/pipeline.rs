@@ -80,12 +80,14 @@
 //! occupancy reads `0..=N` and `sjd_stage_wait` pools every worker's
 //! queue waits.
 
+use super::batcher::{Batcher, Slot};
 use super::jacobi::InitStrategy;
 use super::policy::{BlockDecode, DecodePolicy};
-use super::sampler::{BlockTrace, SampleOptions, SampleOutput, SamplerSet};
-use crate::metrics::Registry;
+use super::sampler::{covering_bucket, BlockTrace, SampleOptions, SampleOutput, SamplerSet};
+use super::state::slot_composition_seed;
+use crate::metrics::{Counter, Histogram, Registry};
 use crate::runtime::{Backend, HostTensor, Value};
-use crate::tensor::{Pcg64, Tensor};
+use crate::tensor::Tensor;
 use anyhow::Result;
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
@@ -161,12 +163,14 @@ pub type DoneFn = Box<dyn FnOnce(PipelineResult) + Send + 'static>;
 
 /// One batch submitted to the pipeline.
 pub struct PipelineJob {
-    /// Seed of the batch RNG stream (`Pcg64::seed_stream(seed, 1)`, the
-    /// router's fixed-stream convention) — stage 0 draws the prior from it.
-    pub seed: u64,
-    /// Real slots in the batch; stages route it to the smallest covering
-    /// bucket exactly like a monolithic worker.
-    pub n: usize,
+    /// Per-slot request seeds, in batch-row order: stage 0 draws row `i`'s
+    /// prior from `Pcg64::seed_stream(seeds[i], 1)` — the same stream a
+    /// solo `b=1` decode of that request uses, so a slot's image is a pure
+    /// function of its own seed, never of its batch position (see
+    /// `Sampler::sample_prior_slots`). Stages route the batch to the
+    /// smallest bucket covering `seeds.len()` exactly like a monolithic
+    /// worker.
+    pub seeds: Vec<u64>,
     pub opts: SampleOptions,
     /// Completion callback, invoked on the final stage's thread (keep it
     /// light — it runs on the decode path).
@@ -175,8 +179,7 @@ pub struct PipelineJob {
 
 /// A batch moving through the stage graph.
 struct InFlight {
-    seed: u64,
-    n: usize,
+    seeds: Vec<u64>,
     opts: SampleOptions,
     done: DoneFn,
     /// Host tokens between stage spans (`None` until stage 0 draws the
@@ -244,6 +247,19 @@ impl<T> StageQueue<T> {
             }
             g = self.cv.wait(g).unwrap();
         }
+    }
+
+    /// Non-blocking receive — the continuous path's straggler probe: a
+    /// stage that just picked up a wave checks for another one already
+    /// queued at the same boundary (hence at the same decode position) and
+    /// merges it instead of decoding two padded fragments.
+    fn try_recv(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        let item = g.q.pop_front();
+        if item.is_some() {
+            self.cv.notify_all();
+        }
+        item
     }
 
     fn close(&self) {
@@ -414,8 +430,7 @@ impl DecodePipeline {
             opts.jacobi.init = InitStrategy::Zeros;
         }
         let item = InFlight {
-            seed: job.seed,
-            n: job.n,
+            seeds: job.seeds,
             opts,
             done: job.done,
             tokens: None,
@@ -429,7 +444,7 @@ impl DecodePipeline {
             Ok(()) => Ok(()),
             Err(item) => {
                 self.gate.release();
-                Err(PipelineJob { seed: item.seed, n: item.n, opts: item.opts, done: item.done })
+                Err(PipelineJob { seeds: item.seeds, opts: item.opts, done: item.done })
             }
         }
     }
@@ -514,20 +529,20 @@ where
     }
 }
 
-/// Run one span of decode positions over one batch. Stage 0 draws the
-/// prior from the job's seeded stream; every span chains device-resident
-/// values internally and syncs to host once at its end (the cross-thread
-/// handoff contract).
+/// Run one span of decode positions over one batch. Stage 0 draws each
+/// slot's prior from that slot's own seed stream (per-slot RNG — batch
+/// position can never change a request's image); every span chains
+/// device-resident values internally and syncs to host once at its end
+/// (the cross-thread handoff contract).
 fn run_span<B: Backend>(
     set: &SamplerSet<'_, B>,
     (lo, hi): (usize, usize),
     item: &mut InFlight,
 ) -> std::result::Result<(), String> {
-    let sampler = set.select(item.n);
+    let sampler = set.select(item.seeds.len());
     if lo == 0 {
         item.started = Some(Instant::now());
-        let mut rng = Pcg64::seed_stream(item.seed, 1);
-        item.tokens = Some(sampler.sample_prior(&mut rng));
+        item.tokens = Some(sampler.sample_prior_slots(&item.seeds));
     }
     let mut z = Value::Host(item.tokens.take().expect("pipeline handoff carries tokens"));
     for pos in lo..hi {
@@ -554,7 +569,7 @@ fn run_span<B: Backend>(
 /// p99 gate measures); `other_wall` excludes those waits so it keeps its
 /// documented meaning (prior draw, permutations, handoff syncs).
 fn finish<B: Backend>(set: &SamplerSet<'_, B>, mut item: InFlight, gate: &Arc<DepthGate>) {
-    let sampler = set.select(item.n);
+    let sampler = set.select(item.seeds.len());
     let tokens = item.tokens.take().expect("completed batch has tokens");
     let total_wall = item.started.map(|s| s.elapsed()).unwrap_or_default();
     let busy = total_wall.saturating_sub(item.queued);
@@ -570,6 +585,556 @@ fn finish<B: Backend>(set: &SamplerSet<'_, B>, mut item: InFlight, gate: &Arc<De
         Err(e) => done(Err(format!("unpatchify failed: {e:#}"))),
     }
     gate.release();
+}
+
+// ---------------------------------------------------------------------------
+// Continuous batching: waves that change membership at block boundaries.
+// ---------------------------------------------------------------------------
+
+/// One request riding a continuous wave: the batcher slot plus its own
+/// per-block trace history (traces survive remap/migration because they
+/// travel with the slot, not with the wave).
+struct LiveSlot {
+    slot: Slot,
+    traces: Vec<BlockTrace>,
+}
+
+/// A batch whose membership is open at every block boundary: row `i` of
+/// `tokens` is `slots[i]`'s latent; rows past `slots.len()` (up to
+/// `bucket`) are padding. Formed at stage 0 from the batcher queue, topped
+/// up there by the non-blocking refill drain, swept/compacted/migrated at
+/// every stage entry, and resolved per-slot at the final stage.
+struct Wave {
+    slots: Vec<LiveSlot>,
+    /// Host tokens `[bucket, L, D]` between stage spans (the same
+    /// cross-thread handoff contract as [`InFlight::tokens`]).
+    tokens: HostTensor,
+    /// The covering bucket `tokens` is currently shaped for.
+    bucket: usize,
+    /// Per-wave decode options; `opts.seed` is the slot-composition hash
+    /// ([`slot_composition_seed`]), recomputed after every membership
+    /// change so warm-cache keys can never alias a different composition.
+    opts: SampleOptions,
+    /// When the wave entered its current stage queue (stage-wait metric).
+    enqueued: Instant,
+}
+
+/// Continuous-batching metric handles, resolved once per stage thread.
+struct ContMetrics {
+    refills: Arc<Counter>,
+    migrations: Arc<Counter>,
+    merges: Arc<Counter>,
+    cancelled: Arc<Counter>,
+    padded: Arc<Counter>,
+    padded_blocks: Arc<Counter>,
+    images: Arc<Counter>,
+    batches: Arc<Counter>,
+    errors: Arc<Counter>,
+    latency: Arc<Histogram>,
+    queue_wait: Arc<Histogram>,
+    batch_fill: Arc<Histogram>,
+    block_iters: Arc<Histogram>,
+    host_syncs: Arc<Histogram>,
+    stage_wait: Arc<Histogram>,
+}
+
+impl ContMetrics {
+    fn new(registry: &Registry) -> Self {
+        ContMetrics {
+            refills: registry.counter("sjd_batch_refills"),
+            migrations: registry.counter("sjd_bucket_migrations"),
+            merges: registry.counter("sjd_straggler_merges"),
+            cancelled: registry.counter("sjd_slots_cancelled"),
+            padded: registry.counter("sjd_padded_slots"),
+            padded_blocks: registry.counter("sjd_padded_slot_blocks"),
+            images: registry.counter("sjd_images_generated"),
+            batches: registry.counter("sjd_batches_processed"),
+            errors: registry.counter("sjd_worker_errors"),
+            latency: registry.histogram("sjd_request_latency"),
+            queue_wait: registry.histogram("sjd_queue_wait"),
+            batch_fill: registry.histogram("sjd_batch_fill"),
+            block_iters: registry.histogram("sjd_block_iters"),
+            host_syncs: registry.histogram("sjd_host_syncs"),
+            stage_wait: registry.histogram("sjd_stage_wait"),
+        }
+    }
+}
+
+/// Stage-graph pipeline with **continuous batching**: requests enter and
+/// exit a decode at block boundaries instead of riding one fixed batch end
+/// to end.
+///
+/// Differences from [`DecodePipeline`]:
+///
+/// * **Stage 0 owns the batcher.** There is no submit path and no depth
+///   gate — stage 0 pulls a batch with `Batcher::next_batch`, then tops it
+///   up to the largest bucket with the non-blocking
+///   [`Batcher::take_upto`] drain (`sjd_batch_refills`), so a request
+///   arriving while a wave forms rides *this* wave instead of waiting a
+///   full pipeline traversal. In-flight depth is bounded by the stage
+///   queues (capacity [`CONT_QUEUE_CAP`] each).
+/// * **Membership is per-slot, not per-batch.** At every stage entry the
+///   wave sweeps out cancelled slots (`sjd_slots_cancelled`, each
+///   completed with an error so its waiter never hangs), compacts the
+///   survivors' rows with the slot-remap gather
+///   ([`super::sampler::Sampler::gather_slots_v`], the device-side
+///   `{m}_slot_gather_b{B}` artifact when lowered), and **migrates** to
+///   the smaller covering bucket when one exists
+///   (`sjd_bucket_migrations`) — a shrinking wave stops paying the big
+///   bucket's padded-row decode cost mid-flight.
+/// * **Stragglers merge instead of padding.** A stage that picks up a
+///   wave probes its queue for another wave already parked at the same
+///   boundary (necessarily at the same decode position — stages are
+///   position-pinned) and adopts its slots while the combined wave fits
+///   the largest bucket (`sjd_straggler_merges`), so two half-empty waves
+///   decode as one fuller one.
+/// * **Completion is per-slot.** The final stage resolves each slot's own
+///   completion channel with its own image; `sjd_request_latency` is
+///   per-slot, submit → image.
+///
+/// τ=0 bit-exactness survives all of it: each slot's prior comes from its
+/// own seed stream ([`super::sampler::Sampler::sample_prior_slots`]), the
+/// per-block fixed point is independent of the iterate's starting point
+/// and of padding rows (Prop 3.2), and the remap gather only permutes
+/// whole rows — so a request's output equals its solo serial decode no
+/// matter which waves it rode through (`rust/tests/continuous.rs` pins
+/// this over randomized join/leave/migrate schedules).
+pub struct ContinuousPipeline {
+    threads: Vec<JoinHandle<()>>,
+    /// Bucket sizes the stage samplers serve, ascending.
+    pub buckets: Vec<usize>,
+    /// Flow blocks `K` (= number of stages in the graph).
+    pub blocks: usize,
+}
+
+/// Per-stage queue capacity of the continuous pipeline: 2, so a stage can
+/// hold a parked wave *and* still have one arriving — the straggler-merge
+/// window — while keeping total in-flight waves (and therefore memory)
+/// bounded at `O(stages)`.
+const CONT_QUEUE_CAP: usize = 2;
+
+/// Everything one continuous stage-executor thread needs besides its
+/// backend factory.
+struct ContStageArgs {
+    idx: usize,
+    /// Decode positions `[lo, hi)` this stage runs.
+    span: (usize, usize),
+    model: String,
+    buckets: Vec<usize>,
+    /// Stage 0 pulls from the batcher; later stages from their queue.
+    batcher: Option<Batcher>,
+    rx: Option<Arc<StageQueue<Wave>>>,
+    tx: Option<Arc<StageQueue<Wave>>>,
+    registry: Registry,
+    /// Base decode options; each wave clones them and overrides `seed`
+    /// with its composition hash.
+    options: SampleOptions,
+    warm_cap: usize,
+    ready: std::sync::mpsc::Sender<Result<Vec<usize>>>,
+}
+
+impl ContinuousPipeline {
+    /// Spawn the continuous stage threads. Same factory/readiness contract
+    /// as [`DecodePipeline::start`]; `batcher` is the shared request queue
+    /// stage 0 pulls and refills from. The pipeline runs until the batcher
+    /// is closed and drained, then shuts itself down stage by stage —
+    /// every slot accepted before close still resolves.
+    ///
+    /// [`PipelineConfig::depth`] is ignored: in-flight depth is the stage
+    /// count times [`CONT_QUEUE_CAP`], bounded by construction.
+    pub fn start<B, F>(
+        model: &str,
+        buckets: &[usize],
+        cfg: PipelineConfig,
+        registry: Registry,
+        batcher: Batcher,
+        options: SampleOptions,
+        factory: F,
+    ) -> Result<Self>
+    where
+        B: Backend,
+        F: Fn(usize) -> Result<B> + Send + Clone + 'static,
+    {
+        let blocks = factory(0)?.model_meta(model)?.blocks;
+        let n_threads = if cfg.stage_threads == 0 {
+            blocks
+        } else {
+            cfg.stage_threads.clamp(1, blocks)
+        };
+        let spans: Vec<(usize, usize)> = super::jacobi::window_partition(blocks, n_threads)
+            .into_iter()
+            .map(|(off, len)| (off, off + len))
+            .collect();
+        // Queue i feeds stage i (stage 0 has none — it pulls the batcher).
+        let queues: Vec<Arc<StageQueue<Wave>>> =
+            (1..spans.len()).map(|_| StageQueue::new(CONT_QUEUE_CAP)).collect();
+        let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<Vec<usize>>>();
+
+        let mut threads = Vec::with_capacity(spans.len());
+        for (idx, &span) in spans.iter().enumerate() {
+            let args = ContStageArgs {
+                idx,
+                span,
+                model: model.to_string(),
+                buckets: buckets.to_vec(),
+                batcher: if idx == 0 { Some(batcher.clone()) } else { None },
+                rx: if idx == 0 { None } else { Some(queues[idx - 1].clone()) },
+                tx: queues.get(idx).cloned(),
+                registry: registry.clone(),
+                options: options.clone(),
+                warm_cap: cfg.warm_cap,
+                ready: ready_tx.clone(),
+            };
+            let factory = factory.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("sjd-cont-stage-{idx}"))
+                    .spawn(move || cont_stage_main(args, factory))
+                    .expect("spawn continuous stage thread"),
+            );
+        }
+        drop(ready_tx);
+        let mut bucket_set = Vec::new();
+        let mut startup_err = None;
+        for _ in &spans {
+            match ready_rx.recv().expect("continuous stage startup signal") {
+                Ok(buckets) => bucket_set = buckets,
+                Err(e) => startup_err = Some(e),
+            }
+        }
+        if let Some(e) = startup_err {
+            // Unblock stage 0 (parked on the batcher) and the downstream
+            // queues, then join everything — a failed startup never leaves
+            // a thread pinning a backend behind.
+            batcher.close();
+            for q in &queues {
+                q.close();
+            }
+            for t in threads.drain(..) {
+                let _ = t.join();
+            }
+            return Err(e);
+        }
+        Ok(ContinuousPipeline { threads, buckets: bucket_set, blocks })
+    }
+
+    /// Wait for the pipeline to drain and exit (the batcher must have been
+    /// closed — stage 0 runs until `next_batch` returns `None`).
+    pub fn join(mut self) {
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// One continuous stage-executor thread (see [`ContinuousPipeline`]).
+fn cont_stage_main<B, F>(args: ContStageArgs, factory: F)
+where
+    B: Backend,
+    F: Fn(usize) -> Result<B>,
+{
+    let ContStageArgs {
+        idx,
+        span,
+        model,
+        buckets,
+        batcher,
+        rx,
+        tx,
+        registry,
+        options,
+        warm_cap,
+        ready,
+    } = args;
+    let engine = match factory(idx) {
+        Ok(e) => e,
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    let set = match SamplerSet::new(&engine, &model, &buckets) {
+        Ok(s) => s,
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    set.set_warm_cap(warm_cap);
+    let _ = ready.send(Ok(set.buckets()));
+
+    let m = ContMetrics::new(&registry);
+    let occupancy = registry.gauge(&format!("sjd_stage_{idx}_occupancy"));
+
+    if let Some(batcher) = batcher {
+        // Stage 0: form waves from the batcher, refill, decode, forward.
+        while let Some(batch) = batcher.next_batch() {
+            let mut slots = batch.slots;
+            let room = set.max_bucket().saturating_sub(slots.len());
+            let extra = batcher.take_upto(room);
+            m.refills.add(extra.len() as u64);
+            slots.extend(extra);
+            let Some(mut wave) = form_wave(&set, slots, &options, &m) else {
+                continue; // everything was already cancelled
+            };
+            occupancy.add(1);
+            let outcome = cont_decode_span(&set, span, &mut wave, &m);
+            occupancy.add(-1);
+            forward_or_finish(&set, span, wave, outcome, &tx, &m);
+        }
+        if let Some(tx) = &tx {
+            tx.close();
+        }
+        return;
+    }
+
+    let rx = rx.expect("non-zero continuous stage has an input queue");
+    while let Some(mut wave) = rx.recv() {
+        m.stage_wait.record_duration(wave.enqueued.elapsed());
+        // Straggler merge: adopt waves already parked at this boundary
+        // (same decode position by construction) while the union fits the
+        // largest bucket — two half-empty waves decode as one fuller one.
+        while let Some(extra) = rx.try_recv() {
+            if wave.slots.len() + extra.slots.len() > set.max_bucket() {
+                // Doesn't fit: hand it back? The queue is FIFO and we're
+                // its only consumer — decode it next iteration instead.
+                let requeue = extra;
+                process_wave(&set, span, requeue, &tx, &m, &occupancy);
+                break;
+            }
+            m.merges.inc();
+            merge_waves(&set, &mut wave, extra);
+        }
+        process_wave(&set, span, wave, &tx, &m, &occupancy);
+    }
+    if let Some(tx) = &tx {
+        tx.close();
+    }
+}
+
+/// Sweep + remap + decode + forward one wave through this stage's span.
+fn process_wave<B: Backend>(
+    set: &SamplerSet<'_, B>,
+    span: (usize, usize),
+    mut wave: Wave,
+    tx: &Option<Arc<StageQueue<Wave>>>,
+    m: &ContMetrics,
+    occupancy: &Arc<crate::metrics::Gauge>,
+) {
+    match sweep_and_remap(set, &mut wave, m) {
+        Err(msg) => {
+            fail_wave(wave, &msg, m);
+            return;
+        }
+        Ok(false) => return, // every slot left; nothing to decode
+        Ok(true) => {}
+    }
+    occupancy.add(1);
+    let outcome = cont_decode_span(set, span, &mut wave, m);
+    occupancy.add(-1);
+    forward_or_finish(set, span, wave, outcome, tx, m);
+}
+
+/// Stage-0 wave formation: sweep slots already cancelled in the queue,
+/// record queue-wait/fill/padding, draw each slot's prior from its own
+/// seed stream.
+fn form_wave<B: Backend>(
+    set: &SamplerSet<'_, B>,
+    slots: Vec<Slot>,
+    options: &SampleOptions,
+    m: &ContMetrics,
+) -> Option<Wave> {
+    let mut live = Vec::with_capacity(slots.len());
+    for s in slots {
+        if s.cancelled() {
+            m.cancelled.inc();
+            s.done.put(Err("request cancelled (client disconnected)".into()));
+        } else {
+            live.push(s);
+        }
+    }
+    if live.is_empty() {
+        return None;
+    }
+    for s in &live {
+        m.queue_wait.record_duration(s.enqueued.elapsed());
+    }
+    let bucket = covering_bucket(&set.buckets(), live.len()).expect("non-empty bucket set");
+    let sampler = set.select(live.len());
+    m.batch_fill.record(live.len() as u64);
+    m.padded.add((bucket - live.len().min(bucket)) as u64);
+    let seeds: Vec<u64> = live.iter().map(|s| s.seed).collect();
+    let mut opts = options.clone();
+    opts.seed = slot_composition_seed(&seeds);
+    let tokens = sampler.sample_prior_slots(&seeds);
+    Some(Wave {
+        slots: live.into_iter().map(|slot| LiveSlot { slot, traces: Vec::new() }).collect(),
+        tokens,
+        bucket,
+        opts,
+        enqueued: Instant::now(),
+    })
+}
+
+/// Concatenate `extra`'s live rows onto `wave` (same decode position by
+/// construction), re-bucket, and recompute the composition seed. Slots
+/// carry their traces with them.
+fn merge_waves<B: Backend>(set: &SamplerSet<'_, B>, wave: &mut Wave, extra: Wave) {
+    let (na, nb) = (wave.slots.len(), extra.slots.len());
+    let total = na + nb;
+    let bucket = covering_bucket(&set.buckets(), total).expect("non-empty bucket set");
+    let shape = wave.tokens.shape().to_vec();
+    let (l, d) = (shape[1], shape[2]);
+    let row = l * d;
+    let mut data = vec![0.0f32; bucket * row];
+    let a = wave.tokens.as_f32().expect("wave tokens are f32");
+    let b = extra.tokens.as_f32().expect("wave tokens are f32");
+    data[..na * row].copy_from_slice(&a[..na * row]);
+    data[na * row..total * row].copy_from_slice(&b[..nb * row]);
+    wave.tokens = HostTensor::f32(&[bucket, l, d], data);
+    wave.bucket = bucket;
+    wave.slots.extend(extra.slots);
+    let seeds: Vec<u64> = wave.slots.iter().map(|s| s.slot.seed).collect();
+    wave.opts.seed = slot_composition_seed(&seeds);
+}
+
+/// Block-boundary membership pass: complete cancelled slots with an error,
+/// compact the survivors' rows via the slot-remap gather, and migrate to
+/// the smaller covering bucket when the wave shrank out of its current
+/// one. Returns `Ok(false)` when no live slots remain.
+fn sweep_and_remap<B: Backend>(
+    set: &SamplerSet<'_, B>,
+    wave: &mut Wave,
+    m: &ContMetrics,
+) -> std::result::Result<bool, String> {
+    let any_cancelled = wave.slots.iter().any(|s| s.slot.cancelled());
+    if !any_cancelled {
+        return Ok(true);
+    }
+    let mut live_idx: Vec<i32> = Vec::with_capacity(wave.slots.len());
+    let mut kept = Vec::with_capacity(wave.slots.len());
+    for (i, ls) in wave.slots.drain(..).enumerate() {
+        if ls.slot.cancelled() {
+            m.cancelled.inc();
+            ls.slot.done.put(Err("request cancelled (client disconnected)".into()));
+        } else {
+            live_idx.push(i as i32);
+            kept.push(ls);
+        }
+    }
+    if kept.is_empty() {
+        return Ok(false);
+    }
+    // Compact rows so row i ↔ kept[i], through the device-side gather
+    // artifact when the model ships one (pad rows re-point at row 0 —
+    // their content is decoded but discarded, and a valid index keeps the
+    // gather total).
+    let old_sampler = set.select(wave.bucket);
+    let mut idx = live_idx;
+    idx.resize(wave.bucket, 0);
+    let gathered = old_sampler
+        .gather_slots_v(&Value::Host(wave.tokens.clone()), &idx)
+        .map_err(|e| format!("slot remap gather failed: {e:#}"))?;
+    let mut tokens = old_sampler
+        .engine()
+        .to_host(gathered)
+        .map_err(|e| format!("slot remap sync failed: {e:#}"))?;
+    // Migrate: a strictly smaller covering bucket exists now that the
+    // wave shrank — slice the host rows down (the handoff is host data
+    // anyway) and decode the rest of the flow in the small bucket.
+    let new_bucket = covering_bucket(&set.buckets(), kept.len()).expect("non-empty bucket set");
+    if new_bucket < wave.bucket {
+        m.migrations.inc();
+        let shape = tokens.shape().to_vec();
+        let row = shape[1] * shape[2];
+        let src = tokens.as_f32().map_err(|e| format!("wave tokens: {e:#}"))?;
+        tokens = HostTensor::f32(
+            &[new_bucket, shape[1], shape[2]],
+            src[..new_bucket * row].to_vec(),
+        );
+        wave.bucket = new_bucket;
+    }
+    wave.tokens = tokens;
+    wave.slots = kept;
+    let seeds: Vec<u64> = wave.slots.iter().map(|s| s.slot.seed).collect();
+    wave.opts.seed = slot_composition_seed(&seeds);
+    Ok(true)
+}
+
+/// Decode this stage's span over the wave; padding accounting is per block
+/// position (`sjd_padded_slot_blocks` — the quantity refill/migration/merge
+/// exist to minimize).
+fn cont_decode_span<B: Backend>(
+    set: &SamplerSet<'_, B>,
+    (lo, hi): (usize, usize),
+    wave: &mut Wave,
+    m: &ContMetrics,
+) -> std::result::Result<(), String> {
+    let sampler = set.select(wave.slots.len());
+    let mut z = Value::Host(wave.tokens.clone());
+    for pos in lo..hi {
+        let (z_next, trace) = sampler
+            .decode_block_at(pos, &z, &wave.opts)
+            .map_err(|e| format!("decode failed at position {pos}: {e:#}"))?;
+        m.padded_blocks.add((wave.bucket - wave.slots.len().min(wave.bucket)) as u64);
+        m.block_iters.record(trace.steps as u64);
+        m.host_syncs.record(trace.host_syncs as u64);
+        for ls in &mut wave.slots {
+            ls.traces.push(trace.clone());
+        }
+        z = z_next;
+    }
+    wave.tokens = sampler
+        .engine()
+        .to_host(z)
+        .map_err(|e| format!("stage handoff sync failed: {e:#}"))?;
+    Ok(())
+}
+
+/// Send the wave downstream, or resolve every slot at the last stage.
+fn forward_or_finish<B: Backend>(
+    set: &SamplerSet<'_, B>,
+    _span: (usize, usize),
+    mut wave: Wave,
+    outcome: std::result::Result<(), String>,
+    tx: &Option<Arc<StageQueue<Wave>>>,
+    m: &ContMetrics,
+) {
+    if let Err(msg) = outcome {
+        fail_wave(wave, &msg, m);
+        return;
+    }
+    match tx {
+        Some(tx) => {
+            wave.enqueued = Instant::now();
+            if let Err(wave) = tx.send(wave) {
+                // Downstream closed: complete the slots so nothing hangs.
+                fail_wave(wave, "pipeline shut down mid-decode", m);
+            }
+        }
+        None => {
+            let sampler = set.select(wave.slots.len());
+            match sampler.unpatchify(&wave.tokens) {
+                Ok(images) => {
+                    for (i, ls) in wave.slots.into_iter().enumerate() {
+                        m.latency.record_duration(ls.slot.enqueued.elapsed());
+                        m.images.inc();
+                        ls.slot.done.put(Ok(images[i].clone()));
+                    }
+                    m.batches.inc();
+                }
+                Err(e) => fail_wave(wave, &format!("unpatchify failed: {e:#}"), m),
+            }
+        }
+    }
+}
+
+/// Complete every slot of a failed wave with its own copy of the error.
+fn fail_wave(wave: Wave, msg: &str, m: &ContMetrics) {
+    m.errors.inc();
+    for ls in wave.slots {
+        ls.slot.done.put(Err(msg.to_string()));
+    }
 }
 
 #[cfg(test)]

@@ -25,6 +25,15 @@
 //! completion then happens on the pipeline's final-stage thread via the
 //! job's completion callback. Output bits are identical either way.
 //!
+//! With [`RouterConfig::refill`] (`serve --refill`) the worker instead runs
+//! a `coordinator::pipeline::ContinuousPipeline`: batch membership opens at
+//! every block boundary — stage 0 refills drained slots from the queue,
+//! boundaries sweep cancelled slots and migrate shrinking waves to smaller
+//! buckets, and straggler waves merge instead of padding. Output bits are
+//! *still* identical: each slot's prior comes from its own seed stream, so
+//! its τ=0 image equals a solo serial decode regardless of which waves it
+//! rode through.
+//!
 //! ## Online tuning (`RouterConfig::tuner`)
 //!
 //! With a [`PolicyTuner`] attached (`serve --tune`), every batch decodes
@@ -57,12 +66,14 @@
 //! per bucket when realized savings go negative.
 
 use super::batcher::{Batcher, Slot};
-use super::pipeline::{DecodePipeline, PipelineConfig, PipelineJob, PipelineResult};
+use super::jacobi::InitStrategy;
+use super::pipeline::{
+    ContinuousPipeline, DecodePipeline, PipelineConfig, PipelineJob, PipelineResult,
+};
 use super::policy::PolicyTuner;
 use super::sampler::{SampleOptions, SamplerSet};
 use crate::metrics::{Counter, Gauge, Histogram, Registry};
 use crate::runtime::{Backend, Engine, Manifest};
-use crate::tensor::Pcg64;
 use anyhow::Result;
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -95,6 +106,15 @@ pub struct RouterConfig {
     /// Warm-start cache bound per sampler (`--init warm:N`); `0` keeps the
     /// buffer pool's built-in default.
     pub warm_cap: usize,
+    /// Continuous batching (`serve --refill`): workers run a
+    /// [`ContinuousPipeline`] — waves refill drained slots from the queue
+    /// at stage 0, sweep cancelled slots and migrate to smaller buckets at
+    /// every block boundary, and merge straggler waves instead of padding
+    /// them. Takes precedence over `pipeline_depth`'s feeder mode (the
+    /// continuous pipeline is inherently multi-in-flight); the tuner is
+    /// not consulted (wave membership changes mid-decode, so there is no
+    /// stable per-batch bucket to tune against).
+    pub refill: bool,
 }
 
 /// Running worker fleet.
@@ -137,6 +157,7 @@ impl Router {
         let mut workers = Vec::with_capacity(cfg.workers);
         let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<()>>();
 
+        let refill = cfg.refill;
         let pipelined = cfg.pipeline_depth >= 2;
         for widx in 0..cfg.workers.max(1) {
             let cfg = cfg.clone();
@@ -145,7 +166,9 @@ impl Router {
             let ready = ready_tx.clone();
             let factory = factory.clone();
             let body = move || {
-                if pipelined {
+                if refill {
+                    worker_continuous(widx, cfg, batcher, registry, ready, factory)
+                } else if pipelined {
                     worker_pipelined(widx, cfg, batcher, registry, ready, factory)
                 } else {
                     worker_main(widx, cfg, batcher, registry, ready, factory)
@@ -239,11 +262,12 @@ fn worker_main<B, F>(
             for slot in &chunk {
                 queue_wait.record_duration(slot.enqueued.elapsed());
             }
-            // Derive the batch RNG from the first slot's seed alone (fixed
-            // stream) so identical requests reproduce identical images
-            // regardless of which worker picks up the batch.
-            let seed = chunk.first().map(|s| s.seed).unwrap_or(0);
-            let mut rng = Pcg64::seed_stream(seed, 1);
+            // Per-slot RNG streams: row i's prior comes from slot i's own
+            // seed (`Sampler::sample_prior_slots`), so a request's image is
+            // a pure function of its seed — batch position, padding, which
+            // worker picked it up, or a later refill/migration can never
+            // change which image a request gets.
+            let seeds: Vec<u64> = chunk.iter().map(|s| s.seed).collect();
             // Live-tuned policy (serve --tune): decode this batch under the
             // tuner's current per-block modes for its bucket; the traces
             // feed back below — the measurement is the decode itself.
@@ -255,7 +279,10 @@ fn worker_main<B, F>(
                 options.jacobi.init = tuner.init_for(sampler.batch);
             }
             let t_decode = Instant::now();
-            match sampler.sample_images(&options, &mut rng) {
+            let decoded = sampler
+                .decode_tokens(sampler.sample_prior_slots(&seeds), &options)
+                .and_then(|out| Ok((sampler.unpatchify(&out.tokens)?, out)));
+            match decoded {
                 Ok((imgs, trace)) => {
                     decode_time.record_duration(t_decode.elapsed());
                     spec_hits.add(trace.spec_hits() as u64);
@@ -366,7 +393,9 @@ fn worker_pipelined<B, F>(
                 .unwrap_or(max_bucket);
             padded.add(bucket.saturating_sub(chunk.len()) as u64);
             registry.counter(&format!("sjd_bucket_{bucket}_batches")).inc();
-            let seed = chunk.first().map(|s| s.seed).unwrap_or(0);
+            // Per-slot RNG streams (see `worker_main`): the job carries every
+            // slot's own seed, and stage 0 draws row i's prior from seed i.
+            let seeds: Vec<u64> = chunk.iter().map(|s| s.seed).collect();
             let enqueued: Vec<Instant> = chunk.iter().map(|s| s.enqueued).collect();
             let mut opts = cfg.options.clone();
             if let Some(tuner) = &cfg.tuner {
@@ -374,9 +403,8 @@ fn worker_pipelined<B, F>(
                 opts.jacobi.init = tuner.init_for(bucket);
             }
             metrics.inflight.add(1);
-            let n = chunk.len();
             let done = completion(widx, bucket, chunk, cfg.tuner.clone(), metrics.clone());
-            let job = PipelineJob { seed, n, opts, done };
+            let job = PipelineJob { seeds, opts, done };
             match pipeline.submit(job) {
                 Ok(()) => {
                     // Recorded *after* submit so the histogram covers the
@@ -394,6 +422,57 @@ fn worker_pipelined<B, F>(
     // Drain the in-flight tail (completion callbacks fire during join),
     // then tear the stage threads down.
     pipeline.shutdown();
+}
+
+/// Continuous-batching worker (`serve --refill`): the
+/// [`ContinuousPipeline`]'s stage 0 owns the batcher pull + refill loop, so
+/// this thread only supervises startup and then waits for the pipeline to
+/// drain (which happens when [`Router::shutdown`] closes the batcher).
+/// Several workers share the one batcher safely — `next_batch` and
+/// `take_upto` are atomic drains of the same queue.
+fn worker_continuous<B, F>(
+    widx: usize,
+    cfg: RouterConfig,
+    batcher: Batcher,
+    registry: Registry,
+    ready: std::sync::mpsc::Sender<Result<()>>,
+    factory: F,
+) where
+    B: Backend,
+    F: Fn(usize) -> Result<B> + Send + Clone + 'static,
+{
+    let stage_factory = {
+        let factory = factory.clone();
+        move |_stage: usize| factory(widx)
+    };
+    let pipeline_cfg = PipelineConfig {
+        depth: cfg.pipeline_depth.max(1),
+        stage_threads: cfg.stage_threads,
+        warm_cap: cfg.warm_cap,
+    };
+    let mut options = cfg.options.clone();
+    // Same demotion rule as `DecodePipeline::submit`: draft-then-refine
+    // needs a full-sequence pass no stage span can run.
+    if options.jacobi.init == InitStrategy::Draft {
+        options.jacobi.init = InitStrategy::Zeros;
+    }
+    let pipeline = match ContinuousPipeline::start(
+        &cfg.model,
+        &cfg.buckets,
+        pipeline_cfg,
+        registry.clone(),
+        batcher,
+        options,
+        stage_factory,
+    ) {
+        Ok(p) => p,
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    let _ = ready.send(Ok(()));
+    pipeline.join();
 }
 
 /// Completion-side metric handles of the pipelined worker, resolved once

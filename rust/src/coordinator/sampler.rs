@@ -43,6 +43,11 @@
 //! * `{m}_reverse_b{B}`     : `(t[B,L,D]) → t_rev[B,L,D]` — **optional**
 //!   device-side token reversal (the gather for `P_k`). Probed via
 //!   `Backend::has_artifact`; absent ⇒ the host fallback below.
+//! * `{m}_slot_gather_b{B}` : `(t[B,L,D], idx[B]i32) → t[idx][B,L,D]` —
+//!   **optional** device-side batch-row gather for continuous batching's
+//!   slot remap (compact cancelled slots, straggler merge, bucket
+//!   migration). Same untupled single-output pattern as the reversal
+//!   gather; absent ⇒ host row permute fallback.
 //!
 //! ## Value lifecycle (device residency)
 //!
@@ -297,6 +302,7 @@ pub struct Sampler<'e, B: Backend> {
     art_seqfull: String,
     art_reverse: String,
     art_init_proj: String,
+    art_slot_gather: String,
     pool: BufferPool,
 }
 
@@ -323,6 +329,7 @@ impl<'e, B: Backend> Sampler<'e, B> {
             art_seqfull: format!("{model}_block_seqfull_b{batch}"),
             art_reverse: format!("{model}_reverse_b{batch}"),
             art_init_proj: format!("{model}_init_proj_b{batch}"),
+            art_slot_gather: format!("{model}_slot_gather_b{batch}"),
             pool: BufferPool::new(),
         })
     }
@@ -403,6 +410,30 @@ impl<'e, B: Backend> Sampler<'e, B> {
         HostTensor::f32(&[b, l, d], t.into_data())
     }
 
+    /// Draw the prior with **one RNG stream per slot**: row `i` comes from
+    /// `Pcg64::seed_stream(seeds[i], 1)` drawing a `[1, L, D]` block — the
+    /// exact draw sequence a solo `b=1` decode of that request performs, so
+    /// a slot's noise (and hence its τ=0 output, Prop 3.2) is a pure
+    /// function of its own seed, independent of batch position, padding, or
+    /// which batches it later rides through under refill/migration. Rows
+    /// past `seeds.len()` (padding up to the bucket) are zeros — their
+    /// output is discarded, and zeros keep the pad rows' Jacobi residuals
+    /// trivially convergent.
+    ///
+    /// Panics if `seeds.len() > self.batch` (the caller routes through
+    /// [`covering_bucket`], which guarantees coverage).
+    pub fn sample_prior_slots(&self, seeds: &[u64]) -> HostTensor {
+        let (b, l, d) = (self.batch, self.meta.seq_len, self.meta.token_dim);
+        assert!(seeds.len() <= b, "{} slot seeds exceed bucket {b}", seeds.len());
+        let mut data = vec![0.0f32; b * l * d];
+        for (i, &seed) in seeds.iter().enumerate() {
+            let mut rng = Pcg64::seed_stream(seed, 1);
+            let row = Tensor::randn(&[1, l, d], &mut rng);
+            data[i * l * d..(i + 1) * l * d].copy_from_slice(row.data());
+        }
+        HostTensor::f32(&[b, l, d], data)
+    }
+
     /// Token reversal along the sequence axis — the inter-block permutation.
     pub fn reverse_tokens(&self, t: &HostTensor) -> Result<HostTensor> {
         let shape = t.shape().to_vec();
@@ -436,6 +467,47 @@ impl<'e, B: Backend> Sampler<'e, B> {
             Value::Device(_) => self.reverse_tokens(&self.engine.to_host(t.clone())?)?,
         };
         Ok(Value::Host(host))
+    }
+
+    /// Whether the model ships the slot-remap gather artifact
+    /// (`{m}_slot_gather_b{B}`); without it [`Sampler::gather_slots_v`]
+    /// falls back to a host row permute.
+    pub fn has_slot_gather_artifact(&self) -> bool {
+        self.engine.has_artifact(&self.art_slot_gather)
+    }
+
+    /// Slot remap: reorder/compact the batch rows of `t` ([B, L, D]) so row
+    /// `i` of the output is row `idx[i]` of the input — the continuous
+    /// batching handoff's gather (drop cancelled slots, close holes before a
+    /// bucket migration or straggler merge). Uses the device-side
+    /// `{m}_slot_gather_b{B}` artifact when lowered (same untupled pattern
+    /// as the reversal gather: the result is a chainable device leaf);
+    /// otherwise the documented host path. `idx` entries may repeat (pad
+    /// rows duplicate a live row) and must be `< B`.
+    pub fn gather_slots_v(&self, t: &Value, idx: &[i32]) -> Result<Value> {
+        if idx.len() != self.batch {
+            bail!("slot gather wants {} indices for bucket {}", idx.len(), self.batch);
+        }
+        if self.engine.has_artifact(&self.art_slot_gather) {
+            let idx_t = HostTensor::i32(&[self.batch], idx.to_vec());
+            let outs = self.engine.call_v(&self.art_slot_gather, &[t.clone(), Value::Host(idx_t)])?;
+            return outs.into_iter().next().context("slot_gather output");
+        }
+        let host = match t {
+            Value::Host(h) => h.clone(),
+            Value::Device(_) => self.engine.to_host(t.clone())?,
+        };
+        let (b, l, d) = (self.batch, self.meta.seq_len, self.meta.token_dim);
+        let src = host.as_f32()?;
+        let mut out = vec![0.0f32; b * l * d];
+        for (i, &s) in idx.iter().enumerate() {
+            let s = s as usize;
+            if s >= b {
+                bail!("slot gather index {s} out of range for bucket {b}");
+            }
+            out[i * l * d..(i + 1) * l * d].copy_from_slice(&src[s * l * d..(s + 1) * l * d]);
+        }
+        Ok(Value::Host(HostTensor::f32(&[b, l, d], out)))
     }
 
     /// Decode one block sequentially with the KV cache (paper's baseline

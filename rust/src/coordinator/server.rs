@@ -40,7 +40,7 @@
 //! emitter so they stay valid JSON whatever the message contains, and
 //! malformed requests (400) are distinguished from internal failures (500).
 
-use super::batcher::Batcher;
+use super::batcher::{Batcher, SlotHandle};
 use super::policy::PolicyTuner;
 use crate::exec::ThreadPool;
 use crate::imageio::{self, Image};
@@ -503,7 +503,7 @@ fn handle_request(
                 inner.registry.counter("sjd_http_errors").inc();
                 write_response(stream, 400, "application/json", error_json(&e).as_bytes(), keep)
             }
-            Ok((n, seed)) => match generate(inner, n, seed) {
+            Ok((n, seed)) => match generate(inner, n, seed, stream) {
                 Ok(json) => write_response(stream, 200, "application/json", json.as_bytes(), keep),
                 // Internal failure (batcher, encode, ...): ours.
                 Err(e) => {
@@ -516,23 +516,63 @@ fn handle_request(
     }
 }
 
+/// How often a `/generate` handler waiting on a decode re-checks its
+/// transport for a client disconnect (see [`client_gone`]).
+const DISCONNECT_POLL: Duration = Duration::from_millis(50);
+
+/// Whether the peer has closed the connection, probed without consuming
+/// bytes: a non-blocking `peek` returning `Ok(0)` is EOF; pending bytes
+/// (e.g. a pipelined next request) or `WouldBlock` mean the peer is alive.
+fn client_gone(stream: &TcpStream) -> bool {
+    if stream.set_nonblocking(true).is_err() {
+        return true;
+    }
+    let mut first = [0u8; 1];
+    let gone = match stream.peek(&mut first) {
+        Ok(0) => true,
+        Ok(_) => false,
+        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => false,
+        Err(_) => true,
+    };
+    // Restore blocking mode; handle_conn re-arms read timeouts per request.
+    let _ = stream.set_nonblocking(false);
+    gone
+}
+
 /// Submit all `n` slots up front (so the batcher can group them), then wait
 /// for each image **on this request's thread** and hand it to the encode
 /// pool as a pure-CPU PNG+base64 job. Encoding image `i` overlaps decoding
 /// image `i+1`, and encode-pool threads never block on decode — so one
 /// still-queued request cannot head-of-line-block another request's
 /// already-decoded images out of the encoder.
-fn generate(inner: &Arc<ServerState>, n: usize, seed: u64) -> Result<String> {
+///
+/// While waiting on a decode the handler polls the transport every
+/// [`DISCONNECT_POLL`]: if the client is gone it cancels the request's
+/// remaining slots — the continuous decode path (`serve --refill`) sweeps
+/// them out at the next block boundary instead of decoding work nobody will
+/// read — and errors out (the 500 write is best-effort, the peer is gone).
+fn generate(inner: &Arc<ServerState>, n: usize, seed: u64, stream: &TcpStream) -> Result<String> {
     let rid = inner.next_request_id.fetch_add(1, Ordering::SeqCst);
     let encode_time = inner.registry.histogram("sjd_encode_time");
 
-    let handles: Vec<_> = (0..n)
-        .map(|i| inner.batcher.submit(rid, seed.wrapping_add(i as u64)))
+    let handles: Vec<SlotHandle> = (0..n)
+        .map(|i| inner.batcher.submit_slot(rid, seed.wrapping_add(i as u64)))
         .collect::<Result<_>>()?;
     let mut jobs = Vec::with_capacity(n);
-    for handle in handles {
+    for (i, handle) in handles.iter().enumerate() {
         // A decode failure completes the slot with its error → 500.
-        let img_t = handle.wait().map_err(|msg| anyhow::anyhow!(msg))?;
+        let result = loop {
+            if let Some(r) = handle.done.wait_timeout(DISCONNECT_POLL) {
+                break r;
+            }
+            if client_gone(stream) {
+                for h in &handles[i..] {
+                    h.cancel();
+                }
+                bail!("client disconnected mid-request; cancelled {} slot(s)", n - i);
+            }
+        };
+        let img_t = result.map_err(|msg| anyhow::anyhow!(msg))?;
         let encode_time = encode_time.clone();
         jobs.push(inner.encode_pool.spawn_result(move || -> Result<String> {
             let t0 = Instant::now();

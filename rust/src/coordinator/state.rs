@@ -281,6 +281,25 @@ impl BufferPool {
     }
 }
 
+/// The warm-cache/RNG "seed family" of a slot composition: an FNV-1a fold
+/// over the live slots' request seeds, in row order. Continuous-batching
+/// waves key their per-wave decode config (`SampleOptions::seed`, and
+/// through it the warm-start cache) by this value, recomputed after every
+/// refill/migration/merge — identical compositions share warm entries,
+/// any change to membership or order misses instead of serving a stale
+/// iterate. τ=0 bit-exactness never depends on it (Prop 3.2: the z⁰ only
+/// steers iteration count, not the fixed point).
+pub fn slot_composition_seed(seeds: &[u64]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &s in seeds {
+        for b in s.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+    }
+    h
+}
+
 /// Estimated working-set sizes (bytes) of the two decode strategies for a
 /// block — the §D memory comparison. `nl` layers, batch `b`, sequence `l`,
 /// model width `dm`, token dim `d`.
@@ -528,6 +547,15 @@ mod tests {
         assert_eq!(pool.warm_cache_len(), 1);
         assert!(pool.warm_get(9, 0).is_some());
         assert_eq!(pool.device_cache_bytes(), 8);
+    }
+
+    #[test]
+    fn composition_seed_depends_on_membership_and_order() {
+        let a = slot_composition_seed(&[1, 2, 3]);
+        assert_eq!(a, slot_composition_seed(&[1, 2, 3]), "deterministic");
+        assert_ne!(a, slot_composition_seed(&[1, 2]), "membership changes the key");
+        assert_ne!(a, slot_composition_seed(&[3, 2, 1]), "order changes the key");
+        assert_ne!(slot_composition_seed(&[]), slot_composition_seed(&[0]));
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //! sjd serve   --model tf10 --addr 127.0.0.1:8471 --workers 2 --policy selective
 //! sjd serve   --model tf10 --batch-sizes 1,2,4,8 --http-threads 8
 //! sjd serve   --model tf10 --tune --pipeline-depth 2
+//! sjd serve   --model tf10 --refill
 //! sjd sample  --model tf10 --batch 8 --policy gs:4 --tau 0.5 --out samples.png
 //! sjd recon   --model tf10 --batch 8
 //! sjd calibrate --model tf10 --batch 8 --windows 8 --out tf10_policy.json
@@ -77,6 +78,13 @@ fn cli() -> Command {
                     "0",
                     "stage threads per pipelined worker (0 = one per flow block; \
                      fewer bounds the engine count at coarser overlap)",
+                )
+                .switch(
+                    "refill",
+                    "continuous batching: refill drained slots from the queue at \
+                     block boundaries, migrate shrinking batches to smaller \
+                     buckets, sweep disconnected requests (overrides the \
+                     depth-gated feeder; per-request outputs stay bit-identical)",
                 ),
         )
         .sub(
@@ -269,6 +277,7 @@ fn cmd_serve(p: &sjd::cli::Parsed) -> Result<()> {
             options,
             pipeline_depth: p.usize("pipeline-depth")?,
             stage_threads: p.usize("stage-threads")?,
+            refill: p.flag("refill"),
             tuner: tuner.clone(),
             warm_cap: init.warm_cap,
         },

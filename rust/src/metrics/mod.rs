@@ -24,6 +24,11 @@
 //! | `sjd_host_syncs`          | histogram | router worker, blocking host syncs per block (`⌈iters/S⌉` on the fused decode path) |
 //! | `sjd_stage_{t}_occupancy` | gauge     | stage thread `t` of the decode pipeline: batches being processed (0/1 per pipeline; summed across workers when several pipelines share the registry) |
 //! | `sjd_stage_wait`          | histogram | decode pipeline, time a batch waited in a stage queue before its stage picked it up (pooled across workers) |
+//! | `sjd_batch_refills`       | counter   | continuous batcher: queued slots pulled into a forming wave by the stage-0 refill drain |
+//! | `sjd_bucket_migrations`   | counter   | continuous batcher: waves re-gathered into a smaller covering bucket after slots left mid-flight |
+//! | `sjd_straggler_merges`    | counter   | continuous batcher: straggler waves adopted by a peer wave at a block boundary instead of decoding padded |
+//! | `sjd_slots_cancelled`     | counter   | continuous batcher: abandoned slots swept out of a wave at a block boundary |
+//! | `sjd_padded_slot_blocks`  | counter   | continuous batcher: padded rows decoded, summed per block position — the quantity refill/migration/merge exists to minimize (`sjd_padded_slots` keeps its formation-time meaning) |
 
 mod histogram;
 mod registry;

@@ -351,12 +351,14 @@ impl Manifest {
 
 /// Decode-family roles a bucket may lack and still be routable: optional
 /// fast paths with a documented fallback in the coordinator — the fused
-/// steps degrade to their per-iteration artifacts, and the speculative-init
+/// steps degrade to their per-iteration artifacts, the speculative-init
 /// projection degrades to the Zeros initialization
-/// (`Sampler::decode_tokens`). Keep in sync with the optional-artifact
-/// lowerings in `python/compile/aot.py`.
+/// (`Sampler::decode_tokens`), and the continuous-batching slot-remap
+/// gather degrades to a host row permute (`Sampler::gather_slots_v`). Keep
+/// in sync with the optional-artifact lowerings in
+/// `python/compile/aot.py`.
 pub const OPTIONAL_DECODE_ROLES: &[&str] =
-    &["block_jstep_fuse", "block_jstep_win_fuse", "init_proj"];
+    &["block_jstep_fuse", "block_jstep_win_fuse", "init_proj", "slot_gather"];
 
 #[cfg(test)]
 mod tests {

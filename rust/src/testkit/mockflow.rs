@@ -261,6 +261,23 @@ impl MockFlow {
         self.jstep(k, y, y, 0, batch).0
     }
 
+    /// Slot remap along the batch axis (the device-side
+    /// `{m}_slot_gather_b{B}` analog): `out[b] = t[idx[b]]`. The continuous
+    /// batcher uses it to compact surviving slots to the front of a wave
+    /// after a cancellation sweep; pad rows re-point at row 0.
+    pub fn gather_slots(&self, t: &[f32], idx: &[i32], batch: usize) -> Result<Vec<f32>> {
+        let row = self.l * self.d;
+        let mut out = vec![0.0f32; t.len()];
+        for (b, &src) in idx.iter().enumerate().take(batch) {
+            let src = src as usize;
+            if src >= batch {
+                bail!("slot gather index {src} out of bucket {batch}");
+            }
+            out[b * row..(b + 1) * row].copy_from_slice(&t[src * row..(src + 1) * row]);
+        }
+        Ok(out)
+    }
+
     /// Token reversal along the sequence axis (the device-side `P_k` gather).
     pub fn reverse(&self, t: &[f32], batch: usize) -> Vec<f32> {
         let (l, d) = (self.l, self.d);
@@ -332,6 +349,12 @@ impl MockFlow {
             let k = inputs[0].as_i32()?[0] as usize;
             let u = inputs[1].as_f32()?;
             Ok(vec![HostTensor::f32(inputs[1].shape(), self.fwd(k, u, batch))])
+        } else if name.contains("_slot_gather_") {
+            // Untupled single output, like `_reverse_`: chainable device-side.
+            let batch = inputs[0].shape()[0];
+            let t = inputs[0].as_f32()?;
+            let idx = inputs[1].as_i32()?;
+            Ok(vec![HostTensor::f32(inputs[0].shape(), self.gather_slots(t, idx, batch)?)])
         } else if name.contains("_reverse_") {
             let batch = inputs[0].shape()[0];
             let t = inputs[0].as_f32()?;
@@ -612,6 +635,25 @@ mod tests {
         let from_proj = iters(seed);
         let from_zeros = iters(vec![0.0f32; n]);
         assert!(from_proj < from_zeros, "proj {from_proj} vs zeros {from_zeros}");
+    }
+
+    #[test]
+    fn slot_gather_permutes_batch_rows() {
+        let f = MockFlow::standard();
+        let (batch, row) = (4usize, f.l * f.d);
+        let t: Vec<f32> = (0..batch * row).map(|i| (i / row) as f32).collect();
+        // Compact rows {2, 3} to the front; pad rows re-point at row 0.
+        let out = f.gather_slots(&t, &[2, 3, 0, 0], batch).unwrap();
+        assert!(out[..row].iter().all(|&v| v == 2.0));
+        assert!(out[row..2 * row].iter().all(|&v| v == 3.0));
+        assert!(out[2 * row..].iter().all(|&v| v == 0.0));
+        assert!(f.gather_slots(&t, &[4, 0, 0, 0], batch).is_err());
+        // Exec dispatch: single untupled output with the input shape.
+        let ht = HostTensor::f32(&[batch, f.l, f.d], t);
+        let idx = HostTensor::i32(&[batch], vec![1, 0, 2, 3]);
+        let outs = f.exec("mock_slot_gather_b4", &[ht, idx]).unwrap();
+        assert_eq!(outs.len(), 1);
+        assert_eq!(outs[0].shape(), &[batch, f.l, f.d]);
     }
 
     #[test]

@@ -1,0 +1,313 @@
+//! Continuous-batching correctness harness.
+//!
+//! The contract under test (ISSUE 7 / ROADMAP "continuous batching"): with
+//! `RouterConfig::refill` on, requests enter and leave a decode at block
+//! boundaries — stage 0 refills drained slots from the queue, shrinking
+//! waves migrate to smaller covering buckets through the slot-remap gather,
+//! and cancelled slots are swept out mid-flight — and **none of it may
+//! change a single output bit at τ = 0**. Every request's image must equal
+//! its solo serial decode regardless of which waves it rode through
+//! (Prop 3.2: the per-block fixed point is independent of the starting
+//! iterate, and the remap gather only permutes whole batch rows).
+//!
+//! Three tiers:
+//! * a deterministic mid-flight migration regression (per-slot RNG streams
+//!   derived from request seeds, not batch positions),
+//! * a 300-schedule pseudo-random join/leave/migrate property sweep, and
+//! * a padding monotonicity check against the held-batch baseline.
+
+use sjd::coordinator::batcher::Batcher;
+use sjd::coordinator::policy::{BlockDecode, DecodePolicy};
+use sjd::coordinator::router::{Router, RouterConfig};
+use sjd::coordinator::sampler::{SampleOptions, Sampler};
+use sjd::metrics::Registry;
+use sjd::testkit::mockflow::{MockLedger, MockServeBackend};
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Deterministic PCG-style stream: the 300 schedules must replay
+/// identically on every run (no OS entropy).
+struct ScheduleRng(u64);
+
+impl ScheduleRng {
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        self.0 >> 33
+    }
+}
+
+/// τ = 0 decode options for one policy.
+fn opts(policy: &DecodePolicy) -> SampleOptions {
+    let mut o = SampleOptions { policy: policy.clone(), ..Default::default() };
+    o.jacobi.tau = 0.0;
+    o
+}
+
+/// The ground truth each request is held to: a bucket-1 solo decode of the
+/// same seed on a fresh backend — no batching, no refill, no migration.
+fn solo_reference(policy: &DecodePolicy, seed: u64) -> Vec<f32> {
+    let be = MockServeBackend::new(&[1, 2, 4], Duration::ZERO, MockLedger::new());
+    let sampler = Sampler::new(&be, "mock", 1).expect("solo sampler");
+    let z = sampler.sample_prior_slots(&[seed]);
+    let out = sampler.decode_tokens(z, &opts(policy)).expect("solo decode");
+    sampler.unpatchify(&out.tokens).expect("solo unpatchify")[0].data().to_vec()
+}
+
+/// Boot a single-worker continuous (`refill: true`) or held-batch router.
+fn start_router(
+    refill: bool,
+    options: SampleOptions,
+    slot_delay: Duration,
+    batcher: &Batcher,
+    registry: &Registry,
+    ledger: &Arc<MockLedger>,
+) -> Router {
+    let ledger = ledger.clone();
+    Router::start_with(
+        RouterConfig {
+            artifacts_dir: "unused-by-mock".into(),
+            model: "mock".into(),
+            buckets: Vec::new(),
+            workers: 1,
+            options,
+            pipeline_depth: 1,
+            stage_threads: 0,
+            refill,
+            tuner: None,
+            warm_cap: 0,
+        },
+        batcher.clone(),
+        registry.clone(),
+        move |_| Ok(MockServeBackend::new(&[1, 2, 4], slot_delay, ledger.clone())),
+    )
+    .expect("router")
+}
+
+#[test]
+fn slot_rng_streams_survive_mid_flight_migration() {
+    // Satellite regression: each slot's prior must come from its own
+    // request-seed RNG stream, not its batch position — the bug this pins
+    // was batch RNG seeded from the first slot's seed. Two runs over the
+    // same four seeds: one rides a full wave end to end, one loses two
+    // slots mid-flight (sweep → remap gather → bucket 4 → 2 migration).
+    // Every surviving slot must be bit-identical to its solo decode — and
+    // therefore to itself across the two runs.
+    let policy = DecodePolicy::UniformJacobi;
+    let seeds = [11u64, 12, 13, 14];
+    let want: Vec<Vec<f32>> = seeds.iter().map(|&s| solo_reference(&policy, s)).collect();
+
+    // Run 1: undisturbed full wave.
+    let registry = Registry::new();
+    let batcher = Batcher::new(4, Duration::from_millis(200));
+    let ledger = MockLedger::new();
+    let router =
+        start_router(true, opts(&policy), Duration::ZERO, &batcher, &registry, &ledger);
+    let handles: Vec<_> =
+        seeds.iter().map(|&s| batcher.submit_slot(s, s).expect("submit")).collect();
+    for (i, h) in handles.iter().enumerate() {
+        let img = h.done.wait_timeout(Duration::from_secs(30)).expect("resolves").expect("image");
+        assert_eq!(
+            img.data(),
+            &want[i][..],
+            "slot {i}: batch position must not leak into the RNG stream"
+        );
+    }
+    router.shutdown();
+    assert_eq!(registry.counter("sjd_bucket_migrations").get(), 0);
+
+    // Run 2: slots 1 and 2 cancel mid-decode; the wave sweeps them at the
+    // next block boundary, compacts rows through the slot-remap gather and
+    // migrates bucket 4 → 2. A 2 ms per-slot decode delay stretches stage 0
+    // to ≥ 60 ms so the cancellation provably lands mid-flight (gated on
+    // the ledger seeing the first decode call).
+    let registry = Registry::new();
+    let batcher = Batcher::new(4, Duration::from_millis(200));
+    let ledger = MockLedger::new();
+    let router = start_router(
+        true,
+        opts(&policy),
+        Duration::from_millis(2),
+        &batcher,
+        &registry,
+        &ledger,
+    );
+    let handles: Vec<_> =
+        seeds.iter().map(|&s| batcher.submit_slot(s, s).expect("submit")).collect();
+    let t0 = Instant::now();
+    while ledger.count_containing("_jstep") == 0 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "decode never started");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    handles[1].cancel();
+    handles[2].cancel();
+    for (i, h) in handles.iter().enumerate() {
+        let res = h.done.wait_timeout(Duration::from_secs(30)).expect("resolves");
+        if i == 1 || i == 2 {
+            let msg = res.expect_err("cancelled slot completes with an error");
+            assert!(msg.contains("cancelled"), "{msg}");
+        } else {
+            let img = res.expect("surviving slot decodes");
+            assert_eq!(
+                img.data(),
+                &want[i][..],
+                "slot {i}: migration must not change a single output bit"
+            );
+        }
+    }
+    router.shutdown();
+    assert_eq!(registry.counter("sjd_slots_cancelled").get(), 2);
+    assert!(
+        registry.counter("sjd_bucket_migrations").get() >= 1,
+        "the shrunken wave must migrate to the smaller covering bucket"
+    );
+    assert!(
+        ledger.count_containing("_slot_gather_") >= 1,
+        "the sweep must compact rows through the slot-remap gather artifact"
+    );
+}
+
+#[test]
+fn property_300_schedules_bit_exact_with_no_lost_slots() {
+    // Satellite property sweep: 300 pseudo-random join/leave schedules over
+    // the continuous router. Invariants, per schedule:
+    // * every submitted slot resolves exactly once (no drops, no hangs),
+    // * every delivered image is bit-identical to its solo decode at τ = 0,
+    //   whatever waves/buckets/merges/migrations it rode through,
+    // * only slots this test cancelled may resolve with an error,
+    // * the queue is empty after shutdown.
+    let policies: Vec<DecodePolicy> = vec![
+        DecodePolicy::UniformJacobi,
+        DecodePolicy::Selective { seq_blocks: 1 },
+        DecodePolicy::PerBlock {
+            modes: vec![
+                BlockDecode::Sequential,
+                BlockDecode::GsFused { windows: 2, chunk: 2 },
+                BlockDecode::Fused { chunk: 3 },
+                BlockDecode::GsJacobi { windows: 4 },
+            ],
+        },
+    ];
+    // Solo references are deterministic per (policy, seed): cache them.
+    let mut solo: HashMap<(usize, u64), Vec<f32>> = HashMap::new();
+
+    for schedule in 0..300u64 {
+        let pidx = (schedule as usize) % policies.len();
+        let mut rng = ScheduleRng(schedule.wrapping_mul(0x9e37_79b9_7f4a_7c15) | 1);
+        let registry = Registry::new();
+        let batcher = Batcher::new(4, Duration::from_millis(2));
+        let ledger = MockLedger::new();
+        let router = start_router(
+            true,
+            opts(&policies[pidx]),
+            Duration::ZERO,
+            &batcher,
+            &registry,
+            &ledger,
+        );
+
+        let mut submitted: Vec<(u64, sjd::coordinator::batcher::SlotHandle, bool)> = Vec::new();
+        for _event in 0..(rng.next() % 5 + 2) {
+            if rng.next() % 3 < 2 {
+                // Join: a burst of 1..=4 new requests.
+                for _ in 0..(rng.next() % 4 + 1) {
+                    let seed = rng.next() % 12;
+                    let h = batcher.submit_slot(seed, seed).expect("submit");
+                    submitted.push((seed, h, false));
+                }
+            } else if !submitted.is_empty() {
+                // Leave: cancel a random slot — it may already be decoded
+                // (delivers Ok), be mid-wave (swept at the next boundary)
+                // or still be queued (swept at formation).
+                let i = (rng.next() as usize) % submitted.len();
+                submitted[i].1.cancel();
+                submitted[i].2 = true;
+            }
+            if rng.next() % 2 == 0 {
+                std::thread::sleep(Duration::from_micros(rng.next() % 1500));
+            }
+        }
+        router.shutdown();
+
+        let (mut ok, mut errs) = (0usize, 0usize);
+        for (seed, h, cancelled) in &submitted {
+            let res = h
+                .done
+                .wait_timeout(Duration::from_secs(30))
+                .expect("every slot resolves — no drops, no hangs");
+            match res {
+                Ok(img) => {
+                    ok += 1;
+                    let want = solo
+                        .entry((pidx, *seed))
+                        .or_insert_with(|| solo_reference(&policies[pidx], *seed));
+                    assert_eq!(
+                        img.data(),
+                        &want[..],
+                        "schedule {schedule}: seed {seed} must be bit-exact with solo decode"
+                    );
+                }
+                Err(msg) => {
+                    errs += 1;
+                    assert!(
+                        *cancelled,
+                        "schedule {schedule}: only cancelled slots may error: {msg}"
+                    );
+                    assert!(msg.contains("cancelled"), "{msg}");
+                }
+            }
+        }
+        assert_eq!(ok + errs, submitted.len(), "schedule {schedule}: double/missing completion");
+        assert_eq!(batcher.queued(), 0, "schedule {schedule}: queue must drain on close");
+    }
+}
+
+#[test]
+fn refill_padding_never_exceeds_held_batch_baseline() {
+    // Padding monotonicity on cancel-free deterministic schedules: prefill
+    // the queue before the router starts (full waves first, one partial
+    // tail), then compare the continuous path's per-block padded rows
+    // against the held-batch baseline, which decodes each padded slot
+    // through all K = 4 blocks.
+    const BLOCKS: u64 = 4;
+    for n in 1..=10usize {
+        let run = |refill: bool| -> (u64, u64) {
+            let registry = Registry::new();
+            let batcher = Batcher::new(4, Duration::from_millis(2));
+            let handles: Vec<_> = (0..n as u64)
+                .map(|s| batcher.submit_slot(s, 100 + s).expect("submit"))
+                .collect();
+            let ledger = MockLedger::new();
+            let router = start_router(
+                refill,
+                opts(&DecodePolicy::UniformJacobi),
+                Duration::ZERO,
+                &batcher,
+                &registry,
+                &ledger,
+            );
+            for h in handles {
+                h.done
+                    .wait_timeout(Duration::from_secs(30))
+                    .expect("resolves")
+                    .expect("image");
+            }
+            router.shutdown();
+            (
+                registry.counter("sjd_padded_slots").get(),
+                registry.counter("sjd_padded_slot_blocks").get(),
+            )
+        };
+        let (base_slots, _) = run(false);
+        let (cont_slots, cont_blocks) = run(true);
+        assert!(
+            cont_blocks <= base_slots * BLOCKS,
+            "n={n}: continuous decoded {cont_blocks} padded slot-blocks, held-batch baseline {}",
+            base_slots * BLOCKS
+        );
+        assert!(
+            cont_slots <= base_slots,
+            "n={n}: formation-time padding must not regress ({cont_slots} > {base_slots})"
+        );
+    }
+}

@@ -1265,8 +1265,7 @@ fn pipeline_bit_exact_with_monolithic_decode() {
         for seed in 0..4u64 {
             let results = results.clone();
             let job = PipelineJob {
-                seed,
-                n: 2,
+                seeds: vec![seed, seed.wrapping_add(100)],
                 opts: opts.clone(),
                 done: Box::new(move |res| {
                     results.lock().unwrap().insert(seed, res.expect("pipeline decode"));
@@ -1278,12 +1277,11 @@ fn pipeline_bit_exact_with_monolithic_decode() {
         let results = results.lock().unwrap();
         assert_eq!(results.len(), 4);
 
-        // Monolithic reference, same RNG convention as pipeline stage 0.
+        // Monolithic reference, same per-slot RNG convention as stage 0.
         let be = MockServeBackend::new(&[2], std::time::Duration::ZERO, MockLedger::new());
         let sampler = Sampler::new(&be, "mock", 2).unwrap();
         for seed in 0..4u64 {
-            let mut rng = Pcg64::seed_stream(seed, 1);
-            let z = sampler.sample_prior(&mut rng);
+            let z = sampler.sample_prior_slots(&[seed, seed.wrapping_add(100)]);
             let want = sampler.decode_tokens(z, &opts).unwrap();
             let want_imgs = sampler.unpatchify(&want.tokens).unwrap();
             let (imgs, out) = &results[&seed];
@@ -1316,8 +1314,7 @@ fn pipeline_reports_stage_metrics_and_inflight_bound() {
     for seed in 0..3u64 {
         let done = done.clone();
         let job = PipelineJob {
-            seed,
-            n: 2,
+            seeds: vec![seed, seed.wrapping_add(100)],
             opts: SampleOptions::default(),
             done: Box::new(move |res| {
                 res.expect("pipeline decode");

@@ -86,6 +86,7 @@ fn mock_router(
             options: SampleOptions { policy, ..Default::default() },
             pipeline_depth: 1,
             stage_threads: 0,
+            refill: false,
             tuner: None,
             warm_cap: 0,
         },
@@ -333,6 +334,7 @@ fn pipelined_router_matches_monolithic_images() {
                 options: SampleOptions::default(),
                 pipeline_depth: depth,
                 stage_threads: 0,
+                refill: false,
                 tuner: None,
                 warm_cap: 0,
             },
@@ -436,6 +438,7 @@ fn tuned_router_converges_to_offline_calibration() {
             options: SampleOptions { policy: DecodePolicy::UniformJacobi, ..Default::default() },
             pipeline_depth: 2,
             stage_threads: 0,
+            refill: false,
             tuner: Some(tuner.clone()),
             warm_cap: 0,
         },
@@ -503,6 +506,7 @@ fn tuned_router_reverts_unpaying_init_provider_to_zeros() {
             options: SampleOptions { policy: DecodePolicy::UniformJacobi, ..Default::default() },
             pipeline_depth: 1, // monolithic: the pipelined path demotes draft
             stage_threads: 0,
+            refill: false,
             tuner: Some(tuner.clone()),
             warm_cap: 0,
         },
@@ -599,6 +603,182 @@ fn policy_endpoint_serves_static_and_tuner_state() {
 }
 
 // ---------------------------------------------------------------------------
+// Continuous-batching chaos/soak harness + HTTP front-door robustness
+// ---------------------------------------------------------------------------
+
+/// Deterministic PCG-style stream for the chaos schedule — the test must
+/// replay the same bursts/gaps every run (no OS entropy).
+struct ChaosRng(u64);
+
+impl ChaosRng {
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        self.0 >> 33
+    }
+}
+
+#[test]
+fn chaos_soak_every_slot_resolves_and_queues_drain() {
+    // The serving chaos harness over the continuous (`refill: true`) stack:
+    // bursty arrivals, clients vanishing mid-decode, and a shutdown racing
+    // the refill drain. Invariants: every well-behaved request is answered
+    // 200/500 (never a hang), every directly-submitted slot resolves, and
+    // the queue is empty once the router is down.
+    let addr = "127.0.0.1:8521";
+    let registry = Registry::new();
+    let batcher = Batcher::new(4, Duration::from_millis(5));
+    let ledger = MockLedger::new();
+    let router = Router::start_with(
+        RouterConfig {
+            artifacts_dir: "unused-by-mock".into(),
+            model: "mock".into(),
+            buckets: Vec::new(),
+            workers: 1,
+            options: SampleOptions { policy: DecodePolicy::UniformJacobi, ..Default::default() },
+            pipeline_depth: 1,
+            stage_threads: 0,
+            refill: true,
+            tuner: None,
+            warm_cap: 0,
+        },
+        batcher.clone(),
+        registry.clone(),
+        {
+            let ledger = ledger.clone();
+            move |_| {
+                Ok(MockServeBackend::new(&[1, 2, 4], Duration::from_micros(300), ledger.clone()))
+            }
+        },
+    )
+    .expect("refill router");
+    let server = Server::with_config(
+        addr,
+        batcher.clone(),
+        registry.clone(),
+        ServerConfig { conn_threads: 8, ..Default::default() },
+    );
+    let (stop, t) = start_server(server);
+
+    let mut rng = ChaosRng(0x5eed);
+    let mut clients = Vec::new();
+    for _burst in 0..6 {
+        // A Poisson-ish burst of well-behaved clients ...
+        for _ in 0..(rng.next() % 3 + 1) {
+            let seed = rng.next();
+            clients.push(std::thread::spawn(move || {
+                post(addr, "/generate", &format!("{{\"n\": {}, \"seed\": {seed}}}", seed % 2 + 1))
+            }));
+        }
+        // ... plus one that submits a 4-slot request and vanishes without
+        // reading the response — the handler's disconnect poll must cancel
+        // the remaining slots so the wave sweeps them at a block boundary.
+        let mut s = TcpStream::connect(addr).expect("connect");
+        write!(s, "POST /generate HTTP/1.1\r\nHost: t\r\nContent-Length: 8\r\n\r\n{{\"n\":4}}")
+            .unwrap();
+        std::thread::sleep(Duration::from_millis(rng.next() % 10 + 1));
+        drop(s); // mid-decode disconnect
+        std::thread::sleep(Duration::from_millis(rng.next() % 20 + 5));
+    }
+    for c in clients {
+        let resp = c.join().expect("client thread must not hang or panic");
+        assert!(
+            resp.starts_with("HTTP/1.1 200") || resp.starts_with("HTTP/1.1 500"),
+            "every request resolves with a response: {resp}"
+        );
+    }
+
+    // Shutdown-during-refill: slots land right before close; the stage-0
+    // drain must still flush each one to a resolution (image or error).
+    let direct: Vec<_> = (0..8).filter_map(|i| batcher.submit_slot(9000 + i, i).ok()).collect();
+    assert!(!direct.is_empty());
+    stop_server(addr, stop, t);
+    router.shutdown();
+    for h in &direct {
+        assert!(
+            h.done.wait_timeout(Duration::from_secs(30)).is_some(),
+            "slot must resolve after shutdown, never hang"
+        );
+    }
+    assert_eq!(batcher.queued(), 0, "queues must drain on close");
+    assert!(batcher.submit(1, 1).is_err(), "closed batcher fails fast");
+    // The fleet really decoded work, and only through lowered buckets.
+    assert!(ledger.count_containing("_jstep") > 0);
+    assert!(registry.counter("sjd_images_generated").get() > 0);
+    assert_eq!(ledger.count_containing("_b8"), 0, "no unlowered bucket was touched");
+}
+
+#[test]
+fn http_front_door_survives_partial_and_pipelined_requests() {
+    // No router needed: these exercise the connection loop's defensive
+    // paths. A panicked conn-pool thread would hang the server's drop/join,
+    // so the test completing at all is part of the assertion.
+    let addr = "127.0.0.1:8522";
+    let registry = Registry::new();
+    let server = Server::new(addr, Batcher::new(1, Duration::from_millis(5)), registry.clone());
+    let (stop, t) = start_server(server);
+
+    // Truncated request line then EOF: answered best-effort 400 / closed.
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(b"POST /gene").unwrap();
+    drop(s);
+
+    // Mid-body disconnect: headers promise 100 bytes, 10 arrive, then EOF.
+    // A benign transport death — nothing to answer, no thread panic.
+    let mut s = TcpStream::connect(addr).unwrap();
+    write!(s, "POST /generate HTTP/1.1\r\nHost: t\r\nContent-Length: 100\r\n\r\n0123456789")
+        .unwrap();
+    drop(s);
+
+    // Header section over the byte cap: answered 400, not a silent reset.
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut req = String::from("GET /healthz HTTP/1.1\r\nX-Big: ");
+    req.push_str(&"a".repeat(64 << 10));
+    req.push_str("\r\n\r\n");
+    s.write_all(req.as_bytes()).unwrap();
+    let mut out = String::new();
+    let _ = s.read_to_string(&mut out);
+    assert!(out.starts_with("HTTP/1.1 400"), "{out}");
+
+    // A fat-but-legal header section still under the cap: served normally.
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut req = String::from("GET /healthz HTTP/1.1\r\nHost: t\r\nX-Big: ");
+    req.push_str(&"a".repeat(32 << 10));
+    req.push_str("\r\nConnection: close\r\n\r\n");
+    s.write_all(req.as_bytes()).unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).unwrap();
+    assert!(out.starts_with("HTTP/1.1 200"), "{out}");
+
+    // Pipelined keep-alive: two requests in one write, two responses read
+    // back off the same connection — the buffered-request path must not
+    // park on an idle peek between them.
+    let s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut writer = s.try_clone().unwrap();
+    writer
+        .write_all(
+            b"GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n\
+              GET /metrics HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n",
+        )
+        .unwrap();
+    let mut reader = BufReader::new(s);
+    let first = read_response(&mut reader);
+    assert!(first.starts_with("HTTP/1.1 200"), "{first}");
+    let second = read_response(&mut reader);
+    assert!(second.starts_with("HTTP/1.1 200"), "{second}");
+    assert!(second.contains("sjd_http_requests"), "{second}");
+
+    // The pool survived all of it: a plain request still answers, and the
+    // malformed-framing counter moved.
+    let h = get(addr, "/healthz");
+    assert!(h.starts_with("HTTP/1.1 200"), "{h}");
+    assert!(registry.counter("sjd_http_errors").get() >= 1);
+    stop_server(addr, stop, t);
+}
+
+// ---------------------------------------------------------------------------
 // Artifact-driven end-to-end tests (skip without artifacts)
 // ---------------------------------------------------------------------------
 
@@ -617,6 +797,7 @@ fn serve_generate_and_metrics_end_to_end() {
             options: SampleOptions::default(),
             pipeline_depth: 1,
             stage_threads: 0,
+            refill: false,
             tuner: None,
             warm_cap: 0,
         },
@@ -723,6 +904,7 @@ fn batcher_groups_concurrent_requests() {
             options: SampleOptions::default(),
             pipeline_depth: 1,
             stage_threads: 0,
+            refill: false,
             tuner: None,
             warm_cap: 0,
         },
