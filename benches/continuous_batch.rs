@@ -114,6 +114,7 @@ fn run_config(
             refill,
             tuner: None,
             warm_cap: 0,
+            governor: None,
         },
         batcher.clone(),
         registry.clone(),

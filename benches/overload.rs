@@ -1,0 +1,301 @@
+//! Overload benchmark over the **mock backend** — no artifacts needed, so
+//! it runs everywhere (including the CI smoke step).
+//!
+//! Drives the full serving front door (HTTP → batcher → refill router) with
+//! a 2×-oversubscribed burst trace against a capped queue, plus QoS
+//! deadlines, with the quality-elastic governor attached (`--elastic`
+//! equivalent). The property under test is **shed-instead-of-collapse**:
+//! admission control and the degradation ladder keep *accepted* requests
+//! fast while the excess is refused honestly, instead of every request
+//! getting slow together.
+//!
+//! Gates (exit non-zero on failure):
+//! * accepted-request p99 under the 2× burst stays within 2× of the
+//!   uncontended baseline p99 on the same stack,
+//! * at least one request was shed with HTTP 429 (admission control
+//!   engaged),
+//! * at least one deadline actually expired (HTTP 504 answered and
+//!   `sjd_deadline_expired` advanced — queued purge or mid-flight block-
+//!   boundary sweep),
+//! * the governor stepped **up** the degradation ladder under pressure and
+//!   stepped back **down to level 0** once the line went quiet,
+//! * with the governor idle (level 0, τ = 0), per-request outputs are
+//!   **bit-identical** to solo serial decodes — before the storm and again
+//!   after recovery.
+//!
+//! ```bash
+//! cargo bench --bench overload            # full run (6 burst rounds)
+//! cargo bench --bench overload -- --quick # CI smoke (4 burst rounds)
+//! ```
+
+use anyhow::Result;
+use sjd::coordinator::batcher::Batcher;
+use sjd::coordinator::policy::{DecodePolicy, GovernorConfig, OverloadGovernor};
+use sjd::coordinator::router::{Router, RouterConfig};
+use sjd::coordinator::sampler::{SampleOptions, Sampler};
+use sjd::coordinator::server::{Server, ServerConfig};
+use sjd::metrics::Registry;
+use sjd::testkit::mockflow::{MockLedger, MockServeBackend};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Per-slot artificial decode cost (per jstep/seqstep call, × batch size).
+const SLOT_DELAY: Duration = Duration::from_micros(300);
+/// Queue cap: in-flight wave (max batch 4) + this = total standing capacity.
+const QUEUE_CAP: usize = 4;
+/// Burst size: 2× the standing capacity (wave 4 + queue 4), so every round
+/// must shed if admission control works at all.
+const BURST: usize = 16;
+/// Distinct request seeds (kept small so solo references are cached).
+const SEED_SPACE: u64 = 6;
+
+fn quick() -> bool {
+    std::env::args().any(|a| a == "--quick") || std::env::var("SJD_QUICK").is_ok()
+}
+
+fn pct(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    sorted[((sorted.len() as f64 - 1.0) * q) as usize]
+}
+
+fn opts() -> SampleOptions {
+    let mut o = SampleOptions { policy: DecodePolicy::UniformJacobi, ..Default::default() };
+    o.jacobi.tau = 0.0;
+    o
+}
+
+/// Solo serial decode of one seed at bucket 1 — the bit-exactness oracle.
+fn solo_reference(seed: u64) -> Result<Vec<f32>> {
+    let be = MockServeBackend::new(&[1, 2, 4], Duration::ZERO, MockLedger::new());
+    let sampler = Sampler::new(&be, "mock", 1)?;
+    let z = sampler.sample_prior_slots(&[seed]);
+    let out = sampler.decode_tokens(z, &opts())?;
+    Ok(sampler.unpatchify(&out.tokens)?[0].data().to_vec())
+}
+
+/// One-shot POST with optional extra header lines (each `\r\n`-terminated);
+/// returns the raw response text.
+fn post(addr: &str, extra_headers: &str, body: &str) -> String {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    write!(
+        s,
+        "POST /generate HTTP/1.1\r\nHost: b\r\nConnection: close\r\n{extra_headers}Content-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    let mut out = String::new();
+    let _ = s.read_to_string(&mut out);
+    out
+}
+
+fn status(resp: &str) -> u16 {
+    resp.split(' ').nth(1).and_then(|s| s.parse().ok()).unwrap_or(0)
+}
+
+struct Stack {
+    registry: Registry,
+    batcher: Batcher,
+    router: Router,
+    stop: Arc<AtomicBool>,
+    server_thread: std::thread::JoinHandle<anyhow::Result<()>>,
+    addr: &'static str,
+}
+
+fn start_stack(addr: &'static str) -> Result<Stack> {
+    let registry = Registry::new();
+    let batcher = Batcher::with_cap(4, Duration::from_millis(2), QUEUE_CAP);
+    batcher.bind_metrics(&registry);
+    // The `serve --elastic --fidelity-budget 0.3` configuration: queue
+    // signal at cap/2, tuner-style dwell, ladder ending at τ = 0.3.
+    let governor = Arc::new(OverloadGovernor::new(
+        4, // MockFlow::standard() blocks
+        GovernorConfig {
+            alpha: 0.4,
+            queue_high: QUEUE_CAP as f64 / 2.0,
+            dwell: 2,
+            base_tau: 0.0,
+            fidelity_budget: 0.3,
+            s_max: 4,
+            ..Default::default()
+        },
+        &registry,
+    ));
+    let ledger = MockLedger::new();
+    let router = Router::start_with(
+        RouterConfig {
+            artifacts_dir: "mock".into(),
+            model: "mock".into(),
+            buckets: Vec::new(),
+            workers: 1,
+            options: opts(),
+            pipeline_depth: 1,
+            stage_threads: 0,
+            refill: true,
+            tuner: None,
+            warm_cap: 0,
+            governor: Some(governor),
+        },
+        batcher.clone(),
+        registry.clone(),
+        move |_| Ok(MockServeBackend::new(&[1, 2, 4], SLOT_DELAY, ledger.clone())),
+    )?;
+    let server = Server::with_config(
+        addr,
+        batcher.clone(),
+        registry.clone(),
+        ServerConfig { conn_threads: 24, ..Default::default() },
+    );
+    let stop = server.stop_flag();
+    let server_thread = std::thread::spawn(move || server.run());
+    for _ in 0..100 {
+        if TcpStream::connect(addr).is_ok() {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    Ok(Stack { registry, batcher, router, stop, server_thread, addr })
+}
+
+impl Stack {
+    fn level(&self) -> i64 {
+        self.registry.gauge("sjd_degrade_level").get()
+    }
+
+    fn shutdown(self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+        let _ = self.server_thread.join();
+        self.router.shutdown();
+    }
+}
+
+/// Direct-submission bit-exactness probe: every seed decoded through the
+/// live stack must match its solo reference byte-for-byte (τ = 0 and the
+/// governor at level 0 — Prop 3.2 exactness survives the serving machinery).
+fn assert_bit_exact(stack: &Stack, solo: &[Vec<f32>], phase: &str) -> Result<()> {
+    for (seed, want) in solo.iter().enumerate() {
+        let img = stack
+            .batcher
+            .submit(7000 + seed as u64, seed as u64)
+            .map_err(|e| anyhow::anyhow!("{phase}: submit: {e}"))?
+            .wait()
+            .map_err(|e| anyhow::anyhow!("{phase}: decode: {e}"))?;
+        if img.data() != &want[..] {
+            anyhow::bail!("{phase}: seed {seed} output differs from solo decode");
+        }
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let rounds = if quick() { 4 } else { 6 };
+    let baseline_n = if quick() { 8 } else { 16 };
+    println!(
+        "=== overload: {rounds} rounds of {BURST}-burst against queue cap {QUEUE_CAP} \
+         (elastic governor, mock backend) ==="
+    );
+
+    let solo: Vec<Vec<f32>> = (0..SEED_SPACE).map(solo_reference).collect::<Result<_>>()?;
+    let stack = start_stack("127.0.0.1:8541")?;
+
+    // --- Phase 1: uncontended baseline (governor idle at level 0). -------
+    assert_bit_exact(&stack, &solo, "baseline")?;
+    let mut base_lat = Vec::new();
+    for i in 0..baseline_n {
+        let t0 = Instant::now();
+        let resp = post(stack.addr, "", &format!("{{\"n\": 1, \"seed\": {}}}", i % SEED_SPACE));
+        anyhow::ensure!(status(&resp) == 200, "uncontended request failed: {resp}");
+        base_lat.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    base_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let base_p99 = pct(&base_lat, 0.99);
+    anyhow::ensure!(stack.level() == 0, "governor must stay idle uncontended");
+
+    // --- Phase 2: 2× burst rounds with mixed deadlines. ------------------
+    let mut accepted = Vec::new();
+    let (mut shed_429, mut expired_504, mut other) = (0u64, 0u64, 0u64);
+    let mut max_level = 0i64;
+    for round in 0..rounds {
+        let mut clients = Vec::new();
+        for j in 0..BURST {
+            let addr = stack.addr;
+            let seed = (round * BURST + j) as u64 % SEED_SPACE;
+            // A quarter of each burst is latency-bounded: a 6 ms deadline
+            // under ~10 ms of queue+decode expires some of them for real.
+            let headers: &'static str =
+                if j % 4 == 3 { "X-SJD-Deadline-Ms: 6\r\n" } else { "" };
+            clients.push(std::thread::spawn(move || {
+                let t0 = Instant::now();
+                let resp = post(addr, headers, &format!("{{\"n\": 1, \"seed\": {seed}}}"));
+                (status(&resp), t0.elapsed().as_secs_f64() * 1e3)
+            }));
+        }
+        for c in clients {
+            let (code, ms) = c.join().expect("client thread");
+            match code {
+                200 => accepted.push(ms),
+                429 => shed_429 += 1,
+                504 => expired_504 += 1,
+                _ => other += 1,
+            }
+        }
+        max_level = max_level.max(stack.level());
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    accepted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let burst_p99 = pct(&accepted, 0.99);
+    let expired_total = stack.registry.counter("sjd_deadline_expired").get();
+
+    // --- Phase 3: pressure clears → ladder walks back to level 0. --------
+    let mut recovered = false;
+    for i in 0..60u64 {
+        let resp = post(stack.addr, "", &format!("{{\"n\": 1, \"seed\": {}}}", i % SEED_SPACE));
+        let _ = status(&resp);
+        if stack.level() == 0 && i >= 4 {
+            recovered = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(3));
+    }
+    let elastic_tau = stack.registry.gauge("sjd_elastic_tau").get();
+
+    // --- Phase 4: back at level 0, outputs are exact again. --------------
+    let exact_after = assert_bit_exact(&stack, &solo, "post-recovery");
+
+    println!("\n=== summary ===");
+    println!(
+        "baseline p99 {base_p99:.1} ms | burst accepted p99 {burst_p99:.1} ms \
+         ({:.2}x, {} accepted) | 429 shed {shed_429} | 504 expired {expired_504} \
+         (counter {expired_total}) | other {other} | max ladder level {max_level} \
+         | recovered level {} (tau gauge {elastic_tau})",
+        burst_p99 / base_p99.max(1e-9),
+        accepted.len(),
+        stack.level(),
+    );
+    stack.shutdown();
+
+    let p99_ok = burst_p99 <= 2.0 * base_p99 && !accepted.is_empty();
+    let shed_ok = shed_429 >= 1;
+    let deadline_ok = expired_504 >= 1 && expired_total >= 1;
+    let gov_ok = max_level >= 1 && recovered && elastic_tau == 0;
+    let exact_ok = exact_after.is_ok() && other == 0;
+    if let Err(e) = &exact_after {
+        eprintln!("exactness: {e:#}");
+    }
+    if p99_ok && shed_ok && deadline_ok && gov_ok && exact_ok {
+        println!("PASS: overload sheds and degrades instead of collapsing, then recovers exactly");
+        Ok(())
+    } else {
+        println!(
+            "FAIL: p99_ok={p99_ok} (need ≤2x) shed_ok={shed_ok} deadline_ok={deadline_ok} \
+             gov_ok={gov_ok} exact_ok={exact_ok}"
+        );
+        std::process::exit(1);
+    }
+}

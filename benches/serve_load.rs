@@ -127,6 +127,7 @@ fn run_config(
             refill: false,
             tuner: None,
             warm_cap: 0,
+            governor: None,
         },
         batcher.clone(),
         registry.clone(),

@@ -113,6 +113,7 @@ fn serve_and_measure(
             refill: false,
             tuner: None,
             warm_cap: 0,
+            governor: None,
         },
         batcher.clone(),
         registry.clone(),

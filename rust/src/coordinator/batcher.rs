@@ -14,10 +14,28 @@
 //! the largest bucket at every block boundary, and a per-slot cancellation
 //! flag ([`SlotHandle::cancel`]) that lets an abandoned request leave the
 //! wave at the next boundary instead of decoding to the end.
+//!
+//! ## Admission control & QoS
+//!
+//! The queue is bounded (`serve --queue-cap`, 0 = unbounded): a submit
+//! against a full queue fails fast with the typed [`QueueFull`] marker
+//! error, which the HTTP layer maps to 429 + `Retry-After` — overload sheds
+//! at the door instead of queueing to death. Submitting after
+//! [`Batcher::close`] fails with the typed [`BatcherClosed`] marker (HTTP
+//! 503). Each slot may carry a QoS envelope ([`SubmitOpts`]): an absolute
+//! deadline — expired slots are resolved with a
+//! [`DEADLINE_EXPIRED_MSG`]-prefixed error (HTTP 504) at every drain point
+//! instead of being handed to a worker — and a [`Priority`] class. The
+//! drain verbs ([`Batcher::next_batch`] / [`Batcher::take_upto`]) prefer
+//! high-priority slots with bounded normal starvation: after every
+//! [`HIGH_PICKS_PER_NORMAL`] consecutive high picks one normal slot drains,
+//! so high-priority queue wait stays short under load while normal traffic
+//! keeps progressing. All-normal traffic remains strict FIFO.
 
 use crate::exec::OneShot;
+use crate::metrics::{Counter, Gauge, Registry};
 use crate::tensor::Tensor;
-use anyhow::{bail, Result};
+use anyhow::Result;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -28,6 +46,68 @@ use std::time::{Duration, Instant};
 /// gets its own copy) — the HTTP layer turns it into a 500 instead of
 /// returning a silently-black 200.
 pub type SlotResult = std::result::Result<Tensor, String>;
+
+/// Error-message prefix for a slot resolved because its deadline passed
+/// (while queued, or swept out of a wave at a block boundary). The HTTP
+/// layer maps results carrying this prefix to 504 Gateway Timeout; keeping
+/// it a single shared constant is what makes that mapping reliable.
+pub const DEADLINE_EXPIRED_MSG: &str = "deadline expired";
+
+/// Consecutive high-priority drains allowed before one queued normal slot
+/// is picked — bounds normal-class starvation under sustained high load.
+pub const HIGH_PICKS_PER_NORMAL: u32 = 3;
+
+/// Typed marker error for a submit rejected by admission control (queue at
+/// `queue_cap`). The HTTP layer checks `err.is::<QueueFull>()` and answers
+/// 429 Too Many Requests with a `Retry-After` hint.
+#[derive(Debug, Clone, Copy)]
+pub struct QueueFull {
+    pub cap: usize,
+}
+
+impl std::fmt::Display for QueueFull {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "queue full (admission cap {} reached)", self.cap)
+    }
+}
+
+impl std::error::Error for QueueFull {}
+
+/// Typed marker error for a submit after [`Batcher::close`]. The HTTP layer
+/// checks `err.is::<BatcherClosed>()` and answers 503 Service Unavailable —
+/// shutdown is not an internal failure, so it must not surface as 500.
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherClosed;
+
+impl std::fmt::Display for BatcherClosed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "batcher is closed (server shutting down)")
+    }
+}
+
+impl std::error::Error for BatcherClosed {}
+
+/// Priority class of a slot (`X-SJD-Priority` header). High-priority slots
+/// drain ahead of normal ones with bounded starvation (see
+/// [`HIGH_PICKS_PER_NORMAL`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Priority {
+    #[default]
+    Normal,
+    High,
+}
+
+/// Per-submit QoS envelope: an absolute completion deadline and a priority
+/// class. `Default` is the pre-QoS behavior (no deadline, normal priority).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SubmitOpts {
+    /// Absolute deadline: the slot is resolved with a
+    /// [`DEADLINE_EXPIRED_MSG`] error (HTTP 504) if it has not completed by
+    /// this instant — enforced at every queue drain and at every block
+    /// boundary of the continuous decode path.
+    pub deadline: Option<Instant>,
+    pub priority: Priority,
+}
 
 /// One image slot of a request.
 pub struct Slot {
@@ -41,12 +121,27 @@ pub struct Slot {
     /// still completes, its result is simply discarded).
     pub cancel: Arc<AtomicBool>,
     pub enqueued: Instant,
+    /// Absolute completion deadline (see [`SubmitOpts::deadline`]).
+    pub deadline: Option<Instant>,
+    pub priority: Priority,
 }
 
 impl Slot {
     /// Whether the submitter abandoned this slot (see [`SlotHandle::cancel`]).
     pub fn cancelled(&self) -> bool {
         self.cancel.load(Ordering::Relaxed)
+    }
+
+    /// Whether this slot's deadline has passed — it should be resolved with
+    /// a [`DEADLINE_EXPIRED_MSG`] error instead of (further) decoding.
+    pub fn expired(&self) -> bool {
+        self.deadline.is_some_and(|d| Instant::now() >= d)
+    }
+
+    /// Resolve this slot as deadline-expired (the 504 path). `where_` names
+    /// the enforcement point ("queued" / "block boundary") for the client.
+    pub fn resolve_expired(&self, where_: &str) {
+        self.done.put(Err(format!("{DEADLINE_EXPIRED_MSG} ({where_})")));
     }
 }
 
@@ -76,8 +171,76 @@ pub struct Batch {
 }
 
 struct QueueInner {
-    slots: VecDeque<Slot>,
+    high: VecDeque<Slot>,
+    normal: VecDeque<Slot>,
     closed: bool,
+    /// Consecutive high-priority picks since the last normal pick — the
+    /// starvation bound's state (see [`HIGH_PICKS_PER_NORMAL`]).
+    high_streak: u32,
+    /// Optional observability instruments (see [`Batcher::bind_metrics`]).
+    depth: Option<Arc<Gauge>>,
+    expired: Option<Arc<Counter>>,
+}
+
+impl QueueInner {
+    fn len(&self) -> usize {
+        self.high.len() + self.normal.len()
+    }
+
+    /// Enqueue time of the oldest queued slot across both classes — drives
+    /// the partial-batch flush deadline.
+    fn oldest(&self) -> Option<Instant> {
+        match (self.high.front(), self.normal.front()) {
+            (Some(h), Some(n)) => Some(h.enqueued.min(n.enqueued)),
+            (Some(h), None) => Some(h.enqueued),
+            (None, Some(n)) => Some(n.enqueued),
+            (None, None) => None,
+        }
+    }
+
+    /// Resolve and remove every queued slot whose deadline has passed, so
+    /// dead slots neither reach a worker nor hold admission-cap space.
+    fn purge_expired(&mut self) {
+        for q in [&mut self.high, &mut self.normal] {
+            let before = q.len();
+            q.retain(|s| {
+                if s.expired() {
+                    s.resolve_expired("queued");
+                    false
+                } else {
+                    true
+                }
+            });
+            if let Some(c) = &self.expired {
+                c.add((before - q.len()) as u64);
+            }
+        }
+        self.publish_depth();
+    }
+
+    /// Weighted drain of one slot: high priority first, but after
+    /// [`HIGH_PICKS_PER_NORMAL`] consecutive high picks one normal slot
+    /// drains. All-normal traffic is strict FIFO.
+    fn pick(&mut self) -> Option<Slot> {
+        let slot = if self.high.is_empty() {
+            self.normal.pop_front()
+        } else if self.normal.is_empty() || self.high_streak < HIGH_PICKS_PER_NORMAL {
+            self.high_streak += 1;
+            return self.high.pop_front();
+        } else {
+            self.normal.pop_front()
+        };
+        if slot.is_some() {
+            self.high_streak = 0;
+        }
+        slot
+    }
+
+    fn publish_depth(&self) {
+        if let Some(g) = &self.depth {
+            g.set(self.len() as i64);
+        }
+    }
 }
 
 /// Shared batching queue.
@@ -87,19 +250,49 @@ pub struct Batcher {
     /// Largest batch a worker will be handed (= the largest decode bucket).
     pub max_batch: usize,
     pub max_wait: Duration,
+    /// Admission bound on the queue (`serve --queue-cap`); 0 = unbounded.
+    /// A submit against a full queue fails with [`QueueFull`] (HTTP 429).
+    pub queue_cap: usize,
 }
 
 impl Batcher {
     pub fn new(max_batch: usize, max_wait: Duration) -> Self {
+        Self::with_cap(max_batch, max_wait, 0)
+    }
+
+    /// [`Self::new`] with an admission cap on the queue (0 = unbounded).
+    pub fn with_cap(max_batch: usize, max_wait: Duration, queue_cap: usize) -> Self {
         assert!(max_batch > 0);
         Batcher {
             inner: Arc::new((
-                Mutex::new(QueueInner { slots: VecDeque::new(), closed: false }),
+                Mutex::new(QueueInner {
+                    high: VecDeque::new(),
+                    normal: VecDeque::new(),
+                    closed: false,
+                    high_streak: 0,
+                    depth: None,
+                    expired: None,
+                }),
                 Condvar::new(),
             )),
             max_batch,
             max_wait,
+            queue_cap,
         }
+    }
+
+    /// Attach queue observability: `sjd_queue_depth` (live queue length),
+    /// `sjd_queue_cap` (the admission bound, 0 = unbounded) and
+    /// `sjd_deadline_expired` (slots resolved 504 while queued) — shed
+    /// decisions become visible next to the counters they trigger.
+    pub fn bind_metrics(&self, registry: &Registry) {
+        registry.gauge("sjd_queue_cap").set(self.queue_cap as i64);
+        let depth = registry.gauge("sjd_queue_depth");
+        let expired = registry.counter("sjd_deadline_expired");
+        let mut q = self.inner.0.lock().unwrap();
+        depth.set(q.len() as i64);
+        q.depth = Some(depth);
+        q.expired = Some(expired);
     }
 
     /// Enqueue one slot; returns its completion handle. Fails fast once the
@@ -114,6 +307,18 @@ impl Batcher {
     /// cancellation); the HTTP layer cancels a request's remaining slots
     /// when the client disconnects mid-decode.
     pub fn submit_slot(&self, request_id: u64, seed: u64) -> Result<SlotHandle> {
+        self.submit_slot_opts(request_id, seed, SubmitOpts::default())
+    }
+
+    /// [`Self::submit_slot`] with a QoS envelope: deadline + priority.
+    /// Admission control happens here — a full queue rejects with the typed
+    /// [`QueueFull`] error, a closed queue with [`BatcherClosed`].
+    pub fn submit_slot_opts(
+        &self,
+        request_id: u64,
+        seed: u64,
+        opts: SubmitOpts,
+    ) -> Result<SlotHandle> {
         let done = OneShot::new();
         let cancel = Arc::new(AtomicBool::new(false));
         let slot = Slot {
@@ -122,21 +327,32 @@ impl Batcher {
             done: done.clone(),
             cancel: cancel.clone(),
             enqueued: Instant::now(),
+            deadline: opts.deadline,
+            priority: opts.priority,
         };
         let (m, cv) = &*self.inner;
         {
             let mut q = m.lock().unwrap();
             if q.closed {
-                bail!("batcher is closed (server shutting down)");
+                return Err(anyhow::Error::new(BatcherClosed));
             }
-            q.slots.push_back(slot);
+            // Dead slots must not hold cap space against live admissions.
+            q.purge_expired();
+            if self.queue_cap > 0 && q.len() >= self.queue_cap {
+                return Err(anyhow::Error::new(QueueFull { cap: self.queue_cap }));
+            }
+            match slot.priority {
+                Priority::High => q.high.push_back(slot),
+                Priority::Normal => q.normal.push_back(slot),
+            }
+            q.publish_depth();
         }
         cv.notify_all();
         Ok(SlotHandle { done, cancel })
     }
 
     pub fn queued(&self) -> usize {
-        self.inner.0.lock().unwrap().slots.len()
+        self.inner.0.lock().unwrap().len()
     }
 
     /// Close the queue: new [`Self::submit`]s fail fast, waiting workers
@@ -148,19 +364,22 @@ impl Batcher {
 
     /// Worker side: block until a full `max_batch` is available or the
     /// oldest slot has waited `max_wait`, then return the batch. `None`
-    /// after [`Self::close`] once the queue is drained.
+    /// after [`Self::close`] once the queue is drained. Slots whose
+    /// deadline passed while queued are resolved 504 here instead of being
+    /// handed out; high-priority slots drain first (bounded starvation).
     pub fn next_batch(&self) -> Option<Batch> {
         let (m, cv) = &*self.inner;
         let mut q = m.lock().unwrap();
         loop {
-            if q.slots.len() >= self.max_batch {
+            q.purge_expired();
+            if q.len() >= self.max_batch {
                 break;
             }
-            if !q.slots.is_empty() {
+            if q.len() > 0 {
                 if q.closed {
                     break; // flush the tail immediately on shutdown
                 }
-                let oldest = q.slots.front().unwrap().enqueued;
+                let oldest = q.oldest().unwrap();
                 let waited = oldest.elapsed();
                 if waited >= self.max_wait {
                     break; // flush partial batch
@@ -174,8 +393,9 @@ impl Batcher {
             }
             q = cv.wait(q).unwrap();
         }
-        let take = q.slots.len().min(self.max_batch);
-        let slots: Vec<Slot> = q.slots.drain(..take).collect();
+        let take = q.len().min(self.max_batch);
+        let slots: Vec<Slot> = (0..take).filter_map(|_| q.pick()).collect();
+        q.publish_depth();
         Some(Batch { slots, formed: Instant::now() })
     }
 
@@ -184,14 +404,18 @@ impl Batcher {
     /// from whatever is queued *right now*, without waiting out `max_wait`.
     /// Drains even after [`Self::close`] so a shutdown that lands mid-refill
     /// still flushes every accepted slot to a worker (which then completes
-    /// each with an error or an image — never a hang).
+    /// each with an error or an image — never a hang). Applies the same
+    /// expiry purge and priority weighting as [`Self::next_batch`].
     pub fn take_upto(&self, n: usize) -> Vec<Slot> {
         if n == 0 {
             return Vec::new();
         }
         let mut q = self.inner.0.lock().unwrap();
-        let take = q.slots.len().min(n);
-        q.slots.drain(..take).collect()
+        q.purge_expired();
+        let take = q.len().min(n);
+        let slots: Vec<Slot> = (0..take).filter_map(|_| q.pick()).collect();
+        q.publish_depth();
+        slots
     }
 }
 
@@ -232,11 +456,13 @@ mod tests {
     #[test]
     fn submit_after_close_fails_fast() {
         // A slot accepted after close() could never complete (workers have
-        // drained and exited): the submission itself must error.
+        // drained and exited): the submission itself must error — with the
+        // typed marker the HTTP layer maps to 503, not 500.
         let b = Batcher::new(4, Duration::from_millis(5));
         b.close();
-        let err = b.submit(1, 0).unwrap_err().to_string();
-        assert!(err.contains("closed"), "{err}");
+        let err = b.submit(1, 0).unwrap_err();
+        assert!(err.is::<BatcherClosed>());
+        assert!(err.to_string().contains("closed"), "{err}");
         // Nothing was enqueued and workers still see a clean end-of-queue.
         assert_eq!(b.queued(), 0);
         assert!(b.next_batch().is_none());
@@ -328,5 +554,99 @@ mod tests {
         });
         let img = h.wait().unwrap();
         assert_eq!(img.data()[0], 7.0);
+    }
+
+    #[test]
+    fn queue_cap_rejects_with_typed_queue_full() {
+        let b = Batcher::with_cap(8, Duration::from_secs(1), 2);
+        b.submit(0, 0).unwrap();
+        b.submit(1, 0).unwrap();
+        let err = b.submit(2, 0).unwrap_err();
+        assert!(err.is::<QueueFull>(), "{err}");
+        assert!(err.to_string().contains("queue full"), "{err}");
+        // Draining frees cap space for new admissions.
+        assert_eq!(b.take_upto(2).len(), 2);
+        b.submit(3, 0).unwrap();
+    }
+
+    #[test]
+    fn high_priority_drains_first_with_bounded_starvation() {
+        let b = Batcher::new(8, Duration::from_secs(1));
+        for i in 0..4 {
+            b.submit(i, 0).unwrap(); // normal class, ids 0..4
+        }
+        for i in 10..14 {
+            b.submit_slot_opts(i, 0, SubmitOpts { priority: Priority::High, ..Default::default() })
+                .unwrap();
+        }
+        let batch = b.next_batch().unwrap();
+        let ids: Vec<u64> = batch.slots.iter().map(|s| s.request_id).collect();
+        // Three high picks, then one normal (the starvation bound), then the
+        // remaining high, then normals in FIFO order.
+        assert_eq!(ids, vec![10, 11, 12, 0, 13, 1, 2, 3]);
+    }
+
+    #[test]
+    fn expired_slot_resolves_504_at_drain_and_live_slot_survives() {
+        let b = Batcher::new(8, Duration::from_millis(10));
+        let dead = b
+            .submit_slot_opts(
+                1,
+                0,
+                SubmitOpts {
+                    deadline: Some(Instant::now() + Duration::from_millis(2)),
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        let _live = b.submit(2, 0).unwrap();
+        std::thread::sleep(Duration::from_millis(5));
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.slots.len(), 1);
+        assert_eq!(batch.slots[0].request_id, 2);
+        let err = dead.done.wait().unwrap_err();
+        assert!(err.starts_with(DEADLINE_EXPIRED_MSG), "{err}");
+    }
+
+    #[test]
+    fn expired_slot_does_not_hold_cap_space() {
+        let b = Batcher::with_cap(8, Duration::from_secs(1), 1);
+        b.submit_slot_opts(
+            1,
+            0,
+            SubmitOpts {
+                deadline: Some(Instant::now() + Duration::from_millis(2)),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(b.submit(2, 0).unwrap_err().is::<QueueFull>());
+        std::thread::sleep(Duration::from_millis(5));
+        // The expired slot is purged at admission time, freeing its slot.
+        b.submit(3, 0).unwrap();
+    }
+
+    #[test]
+    fn bind_metrics_tracks_depth_cap_and_expiry() {
+        let b = Batcher::with_cap(8, Duration::from_millis(10), 5);
+        let r = Registry::new();
+        b.bind_metrics(&r);
+        assert_eq!(r.gauge("sjd_queue_cap").get(), 5);
+        b.submit(1, 0).unwrap();
+        b.submit_slot_opts(
+            2,
+            0,
+            SubmitOpts {
+                deadline: Some(Instant::now() + Duration::from_millis(2)),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(r.gauge("sjd_queue_depth").get(), 2);
+        std::thread::sleep(Duration::from_millis(5));
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.slots.len(), 1);
+        assert_eq!(r.gauge("sjd_queue_depth").get(), 0);
+        assert_eq!(r.counter("sjd_deadline_expired").get(), 1);
     }
 }

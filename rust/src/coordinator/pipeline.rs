@@ -82,7 +82,7 @@
 
 use super::batcher::{Batcher, Slot};
 use super::jacobi::InitStrategy;
-use super::policy::{BlockDecode, DecodePolicy};
+use super::policy::{BlockDecode, DecodePolicy, OverloadGovernor};
 use super::sampler::{covering_bucket, BlockTrace, SampleOptions, SampleOutput, SamplerSet};
 use super::state::slot_composition_seed;
 use crate::metrics::{Counter, Histogram, Registry};
@@ -625,6 +625,10 @@ struct ContMetrics {
     migrations: Arc<Counter>,
     merges: Arc<Counter>,
     cancelled: Arc<Counter>,
+    /// Slots resolved 504 at a block boundary (deadline passed mid-flight).
+    /// Same counter the batcher's queued-expiry purge increments — one
+    /// `sjd_deadline_expired` series covers every enforcement point.
+    deadline_expired: Arc<Counter>,
     padded: Arc<Counter>,
     padded_blocks: Arc<Counter>,
     images: Arc<Counter>,
@@ -645,6 +649,7 @@ impl ContMetrics {
             migrations: registry.counter("sjd_bucket_migrations"),
             merges: registry.counter("sjd_straggler_merges"),
             cancelled: registry.counter("sjd_slots_cancelled"),
+            deadline_expired: registry.counter("sjd_deadline_expired"),
             padded: registry.counter("sjd_padded_slots"),
             padded_blocks: registry.counter("sjd_padded_slot_blocks"),
             images: registry.counter("sjd_images_generated"),
@@ -730,6 +735,10 @@ struct ContStageArgs {
     /// with its composition hash.
     options: SampleOptions,
     warm_cap: usize,
+    /// Quality-elastic overload governor (`serve --elastic`): stage 0 feeds
+    /// it queue depth and applies its degradation ladder to each freshly
+    /// formed wave; the final stage feeds it per-slot completion latency.
+    governor: Option<Arc<OverloadGovernor>>,
     ready: std::sync::mpsc::Sender<Result<Vec<usize>>>,
 }
 
@@ -749,6 +758,29 @@ impl ContinuousPipeline {
         registry: Registry,
         batcher: Batcher,
         options: SampleOptions,
+        factory: F,
+    ) -> Result<Self>
+    where
+        B: Backend,
+        F: Fn(usize) -> Result<B> + Send + Clone + 'static,
+    {
+        Self::start_with_governor(model, buckets, cfg, registry, batcher, options, None, factory)
+    }
+
+    /// [`Self::start`] with an optional [`OverloadGovernor`]: stage 0
+    /// observes queue depth and rewrites wave options through the
+    /// degradation ladder at formation; the final stage feeds completion
+    /// latencies back. With the governor at level 0 (or absent) the applied
+    /// options are the configured ones — bit-exact at τ=0.
+    #[allow(clippy::too_many_arguments)]
+    pub fn start_with_governor<B, F>(
+        model: &str,
+        buckets: &[usize],
+        cfg: PipelineConfig,
+        registry: Registry,
+        batcher: Batcher,
+        options: SampleOptions,
+        governor: Option<Arc<OverloadGovernor>>,
         factory: F,
     ) -> Result<Self>
     where
@@ -783,6 +815,7 @@ impl ContinuousPipeline {
                 registry: registry.clone(),
                 options: options.clone(),
                 warm_cap: cfg.warm_cap,
+                governor: governor.clone(),
                 ready: ready_tx.clone(),
             };
             let factory = factory.clone();
@@ -844,6 +877,7 @@ where
         registry,
         options,
         warm_cap,
+        governor,
         ready,
     } = args;
     let engine = match factory(idx) {
@@ -874,13 +908,18 @@ where
             let extra = batcher.take_upto(room);
             m.refills.add(extra.len() as u64);
             slots.extend(extra);
-            let Some(mut wave) = form_wave(&set, slots, &options, &m) else {
-                continue; // everything was already cancelled
+            // Pressure sample at wave cadence: what is still queued after
+            // this wave drained everything it could carry.
+            if let Some(gov) = &governor {
+                gov.observe(batcher.queued(), None);
+            }
+            let Some(mut wave) = form_wave(&set, slots, &options, governor.as_deref(), &m) else {
+                continue; // everything was already cancelled or expired
             };
             occupancy.add(1);
             let outcome = cont_decode_span(&set, span, &mut wave, &m);
             occupancy.add(-1);
-            forward_or_finish(&set, span, wave, outcome, &tx, &m);
+            forward_or_finish(&set, span, wave, outcome, &tx, &governor, &m);
         }
         if let Some(tx) = &tx {
             tx.close();
@@ -899,13 +938,13 @@ where
                 // Doesn't fit: hand it back? The queue is FIFO and we're
                 // its only consumer — decode it next iteration instead.
                 let requeue = extra;
-                process_wave(&set, span, requeue, &tx, &m, &occupancy);
+                process_wave(&set, span, requeue, &tx, &governor, &m, &occupancy);
                 break;
             }
             m.merges.inc();
             merge_waves(&set, &mut wave, extra);
         }
-        process_wave(&set, span, wave, &tx, &m, &occupancy);
+        process_wave(&set, span, wave, &tx, &governor, &m, &occupancy);
     }
     if let Some(tx) = &tx {
         tx.close();
@@ -918,6 +957,7 @@ fn process_wave<B: Backend>(
     span: (usize, usize),
     mut wave: Wave,
     tx: &Option<Arc<StageQueue<Wave>>>,
+    governor: &Option<Arc<OverloadGovernor>>,
     m: &ContMetrics,
     occupancy: &Arc<crate::metrics::Gauge>,
 ) {
@@ -932,16 +972,18 @@ fn process_wave<B: Backend>(
     occupancy.add(1);
     let outcome = cont_decode_span(set, span, &mut wave, m);
     occupancy.add(-1);
-    forward_or_finish(set, span, wave, outcome, tx, m);
+    forward_or_finish(set, span, wave, outcome, tx, governor, m);
 }
 
-/// Stage-0 wave formation: sweep slots already cancelled in the queue,
-/// record queue-wait/fill/padding, draw each slot's prior from its own
-/// seed stream.
+/// Stage-0 wave formation: sweep slots already cancelled or expired in the
+/// queue, record queue-wait/fill/padding, apply the overload governor's
+/// current ladder level to the wave's decode options, and draw each slot's
+/// prior from its own seed stream.
 fn form_wave<B: Backend>(
     set: &SamplerSet<'_, B>,
     slots: Vec<Slot>,
     options: &SampleOptions,
+    governor: Option<&OverloadGovernor>,
     m: &ContMetrics,
 ) -> Option<Wave> {
     let mut live = Vec::with_capacity(slots.len());
@@ -949,6 +991,9 @@ fn form_wave<B: Backend>(
         if s.cancelled() {
             m.cancelled.inc();
             s.done.put(Err("request cancelled (client disconnected)".into()));
+        } else if s.expired() {
+            m.deadline_expired.inc();
+            s.resolve_expired("wave formation");
         } else {
             live.push(s);
         }
@@ -964,7 +1009,13 @@ fn form_wave<B: Backend>(
     m.batch_fill.record(live.len() as u64);
     m.padded.add((bucket - live.len().min(bucket)) as u64);
     let seeds: Vec<u64> = live.iter().map(|s| s.seed).collect();
-    let mut opts = options.clone();
+    // Ladder level is sampled once per wave, at formation — every stage the
+    // wave traverses decodes with the same options, so a mid-flight level
+    // change can never split one request's decode across two τ values.
+    let mut opts = match governor {
+        Some(gov) => gov.apply(options),
+        None => options.clone(),
+    };
     opts.seed = slot_composition_seed(&seeds);
     let tokens = sampler.sample_prior_slots(&seeds);
     Some(Wave {
@@ -998,17 +1049,18 @@ fn merge_waves<B: Backend>(set: &SamplerSet<'_, B>, wave: &mut Wave, extra: Wave
     wave.opts.seed = slot_composition_seed(&seeds);
 }
 
-/// Block-boundary membership pass: complete cancelled slots with an error,
-/// compact the survivors' rows via the slot-remap gather, and migrate to
-/// the smaller covering bucket when the wave shrank out of its current
-/// one. Returns `Ok(false)` when no live slots remain.
+/// Block-boundary membership pass: complete cancelled slots with an error
+/// and expired slots with the 504 deadline error, compact the survivors'
+/// rows via the slot-remap gather, and migrate to the smaller covering
+/// bucket when the wave shrank out of its current one. Returns `Ok(false)`
+/// when no live slots remain.
 fn sweep_and_remap<B: Backend>(
     set: &SamplerSet<'_, B>,
     wave: &mut Wave,
     m: &ContMetrics,
 ) -> std::result::Result<bool, String> {
-    let any_cancelled = wave.slots.iter().any(|s| s.slot.cancelled());
-    if !any_cancelled {
+    let any_leaving = wave.slots.iter().any(|s| s.slot.cancelled() || s.slot.expired());
+    if !any_leaving {
         return Ok(true);
     }
     let mut live_idx: Vec<i32> = Vec::with_capacity(wave.slots.len());
@@ -1017,6 +1069,9 @@ fn sweep_and_remap<B: Backend>(
         if ls.slot.cancelled() {
             m.cancelled.inc();
             ls.slot.done.put(Err("request cancelled (client disconnected)".into()));
+        } else if ls.slot.expired() {
+            m.deadline_expired.inc();
+            ls.slot.resolve_expired("block boundary");
         } else {
             live_idx.push(i as i32);
             kept.push(ls);
@@ -1098,6 +1153,7 @@ fn forward_or_finish<B: Backend>(
     mut wave: Wave,
     outcome: std::result::Result<(), String>,
     tx: &Option<Arc<StageQueue<Wave>>>,
+    governor: &Option<Arc<OverloadGovernor>>,
     m: &ContMetrics,
 ) {
     if let Err(msg) = outcome {
@@ -1117,7 +1173,13 @@ fn forward_or_finish<B: Backend>(
             match sampler.unpatchify(&wave.tokens) {
                 Ok(images) => {
                     for (i, ls) in wave.slots.into_iter().enumerate() {
-                        m.latency.record_duration(ls.slot.enqueued.elapsed());
+                        let latency = ls.slot.enqueued.elapsed();
+                        m.latency.record_duration(latency);
+                        // Completion side of the governor feedback loop:
+                        // accepted-request latency EWMA.
+                        if let Some(gov) = governor {
+                            gov.observe_latency(latency);
+                        }
                         m.images.inc();
                         ls.slot.done.put(Ok(images[i].clone()));
                     }

@@ -15,9 +15,10 @@
 //! them back).
 
 use super::jacobi::{InitStrategy, JacobiStats};
-use super::sampler::SampleOutput;
+use super::sampler::{SampleOptions, SampleOutput};
 use std::collections::BTreeMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 /// Default window count for the `"gs"` policy shorthand.
 pub const DEFAULT_GS_WINDOWS: usize = 4;
@@ -939,10 +940,272 @@ impl PolicyTuner {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Quality-elastic overload governor
+// ---------------------------------------------------------------------------
+
+/// Number of τ steps on the degradation ladder above the mode-coarsening
+/// levels — the ladder interpolates from `base_tau` to `fidelity_budget`
+/// in this many increments.
+const GOVERNOR_TAU_STEPS: usize = 3;
+
+/// Configuration for the [`OverloadGovernor`] degradation ladder and its
+/// pressure detector. A threshold of `0` disables that signal.
+#[derive(Clone, Copy, Debug)]
+pub struct GovernorConfig {
+    /// EWMA smoothing factor for both pressure signals (tuner-style).
+    pub alpha: f64,
+    /// Queue-depth EWMA above which the batcher counts as overloaded
+    /// (0 = signal disabled). Pressure clears below `queue_high / 2` —
+    /// the hysteresis band that prevents threshold flapping.
+    pub queue_high: f64,
+    /// Accepted-request latency EWMA (milliseconds) above which decode
+    /// counts as overloaded (0 = signal disabled); clears below half.
+    pub latency_high_ms: f64,
+    /// Consecutive over- (under-) pressure observations required before the
+    /// ladder steps up (down) one level — the PolicyTuner dwell idiom.
+    pub dwell: usize,
+    /// The configured τ the service runs at when healthy; the governor
+    /// steps back to exactly this value when pressure clears, so the τ=0
+    /// bit-exactness contract survives any number of overload episodes.
+    pub base_tau: f32,
+    /// Upper bound on elastic τ (`--fidelity-budget`). Must exceed
+    /// `base_tau` for the τ rungs to exist; otherwise the ladder tops out
+    /// at mode coarsening.
+    pub fidelity_budget: f32,
+    /// Device fused-chunk cap: the chunk size "force maximal fused chunks"
+    /// coarsens to.
+    pub s_max: usize,
+}
+
+impl Default for GovernorConfig {
+    fn default() -> Self {
+        GovernorConfig {
+            alpha: 0.25,
+            queue_high: 0.0,
+            latency_high_ms: 0.0,
+            dwell: 3,
+            base_tau: 0.0,
+            fidelity_budget: 0.0,
+            s_max: DEFAULT_FUSE_CHUNK,
+        }
+    }
+}
+
+/// Mutable governor state, guarded by one mutex (observe is called at block
+/// cadence, never in a per-token loop).
+struct GovState {
+    queue_ewma: Option<f64>,
+    lat_ewma_ms: Option<f64>,
+    over: usize,
+    under: usize,
+    level: usize,
+}
+
+/// Quality-elastic overload governor (`serve --elastic`): watches
+/// queue-depth and accepted-latency EWMAs and walks a degradation ladder,
+/// trading reconstruction fidelity for throughput *only while pressure
+/// lasts*:
+///
+/// | level | action |
+/// |-------|--------|
+/// | 0 | passthrough — decode options untouched, τ = `base_tau`, bit-exact |
+/// | 1 | force maximal fused chunks (`S = s_max`) on every Jacobi-family block |
+/// | 2 | additionally halve GS window counts (fewer, coarser sweeps) |
+/// | 3.. | raise τ in [`GOVERNOR_TAU_STEPS`] increments toward `fidelity_budget` |
+///
+/// Levels 1–2 are *free* fidelity-wise at τ=0 (Prop 3.2: the per-block fixed
+/// point is independent of sweep schedule), they only trade per-iteration
+/// sync cadence for convergence slack; τ rungs genuinely spend quality and
+/// are bounded by `--fidelity-budget`. Steps require `dwell` consecutive
+/// over/under observations (tuner-style hysteresis), and the under
+/// threshold is half the over threshold so the ladder never flaps across
+/// one boundary. When pressure clears the governor walks back to level 0,
+/// whose applied options are the exact configured ones.
+///
+/// Exported state: `sjd_degrade_level` and `sjd_elastic_tau` (τ × 1e6,
+/// gauges are integers) move on every ladder step.
+pub struct OverloadGovernor {
+    cfg: GovernorConfig,
+    /// Flow blocks `K` — ladder levels expand the configured policy into an
+    /// explicit [`DecodePolicy::PerBlock`] over all decode positions.
+    blocks: usize,
+    state: Mutex<GovState>,
+    level_gauge: Arc<crate::metrics::Gauge>,
+    tau_gauge: Arc<crate::metrics::Gauge>,
+}
+
+impl std::fmt::Debug for OverloadGovernor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("OverloadGovernor")
+            .field("cfg", &self.cfg)
+            .field("blocks", &self.blocks)
+            .field("level", &self.level())
+            .finish()
+    }
+}
+
+impl OverloadGovernor {
+    /// Build a governor for a `blocks`-block flow and publish its initial
+    /// (healthy) state to `registry`.
+    pub fn new(blocks: usize, cfg: GovernorConfig, registry: &crate::metrics::Registry) -> Self {
+        let g = OverloadGovernor {
+            cfg,
+            blocks,
+            state: Mutex::new(GovState {
+                queue_ewma: None,
+                lat_ewma_ms: None,
+                over: 0,
+                under: 0,
+                level: 0,
+            }),
+            level_gauge: registry.gauge("sjd_degrade_level"),
+            tau_gauge: registry.gauge("sjd_elastic_tau"),
+        };
+        g.publish(0);
+        g
+    }
+
+    /// Highest ladder level: two mode-coarsening rungs, plus the τ rungs
+    /// when the budget actually allows raising τ.
+    fn max_level(&self) -> usize {
+        2 + if self.cfg.fidelity_budget > self.cfg.base_tau { GOVERNOR_TAU_STEPS } else { 0 }
+    }
+
+    /// The τ the ladder runs at `level`. Level 0 returns `base_tau`
+    /// *exactly* (no arithmetic), preserving bit-exactness on recovery.
+    fn tau_at(&self, level: usize) -> f32 {
+        if level <= 2 {
+            return self.cfg.base_tau;
+        }
+        let frac = (level - 2) as f32 / GOVERNOR_TAU_STEPS as f32;
+        self.cfg.base_tau + (self.cfg.fidelity_budget - self.cfg.base_tau) * frac
+    }
+
+    /// Current ladder level (0 = healthy passthrough).
+    pub fn level(&self) -> usize {
+        self.state.lock().unwrap().level
+    }
+
+    /// The τ decodes currently run at.
+    pub fn effective_tau(&self) -> f32 {
+        self.tau_at(self.level())
+    }
+
+    fn publish(&self, level: usize) {
+        self.level_gauge.set(level as i64);
+        self.tau_gauge.set((self.tau_at(level) as f64 * 1e6).round() as i64);
+    }
+
+    /// Feed one pressure observation: the batcher queue depth now, and the
+    /// latency of a just-completed accepted request (if one completed).
+    /// Steps the ladder at most one level per call, after `dwell`
+    /// consecutive same-direction observations.
+    pub fn observe(&self, queue_depth: usize, latency: Option<Duration>) {
+        self.observe_inner(Some(queue_depth as f64), latency.map(|l| l.as_secs_f64() * 1e3));
+    }
+
+    /// Latency-only observation — the completion side of the feedback loop
+    /// (final pipeline stage), which sees request latencies but not the
+    /// batcher queue.
+    pub fn observe_latency(&self, latency: Duration) {
+        self.observe_inner(None, Some(latency.as_secs_f64() * 1e3));
+    }
+
+    fn observe_inner(&self, queue_depth: Option<f64>, latency_ms: Option<f64>) {
+        let a = self.cfg.alpha;
+        let fold = |prev: Option<f64>, x: f64| prev.map_or(x, |p| p + a * (x - p));
+        let mut s = self.state.lock().unwrap();
+        if let Some(depth) = queue_depth {
+            s.queue_ewma = Some(fold(s.queue_ewma, depth));
+        }
+        if let Some(lat) = latency_ms {
+            s.lat_ewma_ms = Some(fold(s.lat_ewma_ms, lat));
+        }
+        let mut over = false;
+        let mut under = true;
+        if self.cfg.queue_high > 0.0 {
+            // No depth sample yet is neutral, like the latency signal below.
+            if let Some(q) = s.queue_ewma {
+                over |= q > self.cfg.queue_high;
+                under &= q <= self.cfg.queue_high / 2.0;
+            }
+        }
+        if self.cfg.latency_high_ms > 0.0 {
+            // No latency sample yet is neutral, not "healthy": only an
+            // actual below-band EWMA argues for stepping down.
+            if let Some(l) = s.lat_ewma_ms {
+                over |= l > self.cfg.latency_high_ms;
+                under &= l <= self.cfg.latency_high_ms / 2.0;
+            }
+        }
+        if self.cfg.queue_high <= 0.0 && self.cfg.latency_high_ms <= 0.0 {
+            return; // both signals disabled: the governor never engages
+        }
+        if over {
+            s.over += 1;
+            s.under = 0;
+            if s.over >= self.cfg.dwell && s.level < self.max_level() {
+                s.level += 1;
+                s.over = 0;
+                self.publish(s.level);
+            }
+        } else if under {
+            s.under += 1;
+            s.over = 0;
+            if s.under >= self.cfg.dwell && s.level > 0 {
+                s.level -= 1;
+                s.under = 0;
+                self.publish(s.level);
+            }
+        } else {
+            // Inside the hysteresis band: hold the level, reset streaks.
+            s.over = 0;
+            s.under = 0;
+        }
+    }
+
+    /// Rewrite decode options for the current ladder level. Level 0 is a
+    /// plain clone — callers on the healthy path pay nothing and decode the
+    /// exact configured options.
+    pub fn apply(&self, options: &SampleOptions) -> SampleOptions {
+        let level = self.level();
+        if level == 0 {
+            return options.clone();
+        }
+        let mut out = options.clone();
+        let modes = (0..self.blocks)
+            .map(|pos| degrade_mode(options.policy.block_mode(pos, self.blocks), level, self.cfg.s_max))
+            .collect();
+        out.policy = DecodePolicy::PerBlock { modes };
+        if level > 2 {
+            out.jacobi.tau = self.tau_at(level);
+        }
+        out
+    }
+}
+
+/// One block mode coarsened to a ladder level (level ≥ 1). Sequential blocks
+/// stay sequential — they are pinned for correctness (paper §3.5 low-
+/// redundancy layers), not a throughput choice the governor may override.
+fn degrade_mode(mode: BlockDecode, level: usize, s_max: usize) -> BlockDecode {
+    let s = s_max.max(1);
+    let windows = |w: usize| if level >= 2 { (w / 2).max(1) } else { w };
+    match mode {
+        BlockDecode::Sequential => BlockDecode::Sequential,
+        BlockDecode::Jacobi | BlockDecode::Fused { .. } => BlockDecode::Fused { chunk: s },
+        BlockDecode::GsJacobi { windows: w } | BlockDecode::GsFused { windows: w, .. } => {
+            match windows(w) {
+                1 => BlockDecode::Fused { chunk: s },
+                w => BlockDecode::GsFused { windows: w, chunk: s },
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::time::Duration;
 
     #[test]
     fn parse_variants() {
@@ -1619,5 +1882,214 @@ mod tests {
         assert_eq!(rows.len(), 2);
         assert_eq!(rows[0].req_usize("observations").unwrap(), 2);
         assert!(rows[0].get("ewma_iters").and_then(crate::jsonx::Value::as_f64).is_some());
+    }
+
+    // -- OverloadGovernor ----------------------------------------------------
+
+    use super::super::jacobi::JacobiConfig;
+
+    fn gov_opts() -> SampleOptions {
+        SampleOptions {
+            policy: DecodePolicy::Selective { seq_blocks: 1 },
+            jacobi: JacobiConfig { tau: 0.0, ..JacobiConfig::default() },
+            mask_o: 0,
+            fused_sequential: false,
+            seed: 7,
+        }
+    }
+
+    fn gov_cfg() -> GovernorConfig {
+        GovernorConfig {
+            alpha: 1.0, // instant EWMA: tests drive raw signals
+            queue_high: 8.0,
+            latency_high_ms: 0.0,
+            dwell: 2,
+            base_tau: 0.0,
+            fidelity_budget: 0.3,
+            s_max: 8,
+        }
+    }
+
+    #[test]
+    fn governor_idle_is_exact_passthrough() {
+        let reg = crate::metrics::Registry::new();
+        let g = OverloadGovernor::new(4, gov_cfg(), &reg);
+        let opts = gov_opts();
+        let applied = g.apply(&opts);
+        assert_eq!(applied.policy, opts.policy, "level 0 must not rewrite the policy");
+        assert_eq!(applied.jacobi.tau.to_bits(), opts.jacobi.tau.to_bits());
+        assert_eq!(applied.seed, opts.seed);
+        assert_eq!(applied.mask_o, opts.mask_o);
+        assert_eq!(applied.fused_sequential, opts.fused_sequential);
+        assert_eq!(reg.gauge("sjd_degrade_level").get(), 0);
+        assert_eq!(reg.gauge("sjd_elastic_tau").get(), 0);
+    }
+
+    #[test]
+    fn governor_steps_up_ladder_and_back_to_exact_base() {
+        let reg = crate::metrics::Registry::new();
+        let g = OverloadGovernor::new(4, gov_cfg(), &reg);
+        // Sustained pressure: each dwell=2 pair of over-threshold
+        // observations climbs one rung, to the top of the ladder (2 mode
+        // rungs + 3 τ rungs) and no further.
+        for expect in 1..=5usize {
+            g.observe(32, None);
+            g.observe(32, None);
+            assert_eq!(g.level(), expect);
+        }
+        for _ in 0..4 {
+            g.observe(32, None);
+        }
+        assert_eq!(g.level(), 5, "ladder is capped at max level");
+        assert_eq!(reg.gauge("sjd_degrade_level").get(), 5);
+        assert_eq!(reg.gauge("sjd_elastic_tau").get(), 300_000, "τ = budget at the top");
+        assert!((g.effective_tau() - 0.3).abs() < 1e-6);
+        // Pressure clears: walk all the way back down; the recovered τ is
+        // bit-identical to the configured base (no float residue).
+        while g.level() > 0 {
+            g.observe(0, None);
+        }
+        assert_eq!(g.effective_tau().to_bits(), 0.0f32.to_bits());
+        assert_eq!(reg.gauge("sjd_degrade_level").get(), 0);
+        assert_eq!(reg.gauge("sjd_elastic_tau").get(), 0);
+        let opts = gov_opts();
+        assert_eq!(g.apply(&opts).policy, opts.policy, "recovered governor is passthrough");
+    }
+
+    #[test]
+    fn governor_ladder_coarsens_modes_and_raises_tau() {
+        let reg = crate::metrics::Registry::new();
+        let g = OverloadGovernor::new(4, gov_cfg(), &reg);
+        let mut opts = gov_opts();
+        opts.policy = DecodePolicy::PerBlock {
+            modes: vec![
+                BlockDecode::Sequential,
+                BlockDecode::Jacobi,
+                BlockDecode::GsJacobi { windows: 4 },
+                BlockDecode::GsFused { windows: 2, chunk: 2 },
+            ],
+        };
+        // Level 1: maximal fused chunks, window counts untouched,
+        // sequential blocks pinned.
+        g.observe(32, None);
+        g.observe(32, None);
+        assert_eq!(g.level(), 1);
+        let DecodePolicy::PerBlock { modes } = g.apply(&opts).policy else { unreachable!() };
+        assert_eq!(
+            modes,
+            vec![
+                BlockDecode::Sequential,
+                BlockDecode::Fused { chunk: 8 },
+                BlockDecode::GsFused { windows: 4, chunk: 8 },
+                BlockDecode::GsFused { windows: 2, chunk: 8 },
+            ]
+        );
+        assert_eq!(g.apply(&opts).jacobi.tau.to_bits(), 0.0f32.to_bits(), "τ untouched below level 3");
+        // Level 2: windows halve (a 2-window block collapses to plain fused).
+        g.observe(32, None);
+        g.observe(32, None);
+        assert_eq!(g.level(), 2);
+        let DecodePolicy::PerBlock { modes } = g.apply(&opts).policy else { unreachable!() };
+        assert_eq!(
+            modes,
+            vec![
+                BlockDecode::Sequential,
+                BlockDecode::Fused { chunk: 8 },
+                BlockDecode::GsFused { windows: 2, chunk: 8 },
+                BlockDecode::Fused { chunk: 8 },
+            ]
+        );
+        // Level 3: first τ rung — base + (budget − base)/3.
+        g.observe(32, None);
+        g.observe(32, None);
+        assert_eq!(g.level(), 3);
+        assert!((g.apply(&opts).jacobi.tau - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn governor_dwell_prevents_flapping() {
+        let reg = crate::metrics::Registry::new();
+        let g = OverloadGovernor::new(2, gov_cfg(), &reg);
+        // Alternating over/under never accumulates a dwell streak.
+        for _ in 0..10 {
+            g.observe(32, None);
+            g.observe(0, None);
+        }
+        assert_eq!(g.level(), 0);
+        // Mid-band observations (between high/2 and high) hold the level.
+        g.observe(32, None);
+        g.observe(32, None);
+        assert_eq!(g.level(), 1);
+        for _ in 0..10 {
+            g.observe(6, None); // 4 < 6 ≤ 8: inside the hysteresis band
+        }
+        assert_eq!(g.level(), 1, "hysteresis band holds the ladder");
+    }
+
+    #[test]
+    fn governor_without_budget_stops_at_mode_coarsening() {
+        let reg = crate::metrics::Registry::new();
+        let cfg = GovernorConfig { fidelity_budget: 0.0, ..gov_cfg() };
+        let g = OverloadGovernor::new(2, cfg, &reg);
+        for _ in 0..20 {
+            g.observe(32, None);
+        }
+        assert_eq!(g.level(), 2, "no τ rungs without fidelity budget");
+        assert_eq!(g.effective_tau().to_bits(), 0.0f32.to_bits());
+    }
+
+    #[test]
+    fn governor_latency_signal_engages_ladder() {
+        let reg = crate::metrics::Registry::new();
+        let cfg = GovernorConfig { queue_high: 0.0, latency_high_ms: 50.0, ..gov_cfg() };
+        let g = OverloadGovernor::new(2, cfg, &reg);
+        // Queue signal disabled; depth alone must not engage.
+        g.observe(1000, None);
+        g.observe(1000, None);
+        assert_eq!(g.level(), 0);
+        g.observe(0, Some(Duration::from_millis(200)));
+        g.observe(0, Some(Duration::from_millis(200)));
+        assert_eq!(g.level(), 1);
+        g.observe(0, Some(Duration::from_millis(1)));
+        g.observe(0, Some(Duration::from_millis(1)));
+        assert_eq!(g.level(), 0);
+    }
+
+    /// Satellite contract: fuzz the policy parsers ≥10k cases — no panics,
+    /// and any JSON the parser accepts as a policy must round-trip.
+    #[test]
+    fn fuzz_policy_parsers_never_panic() {
+        use crate::testkit::fuzz::fuzz_cases;
+        let corpus: &[&[u8]] = &[
+            b"sequential",
+            b"selective:2",
+            b"gs:8",
+            b"fuse:4",
+            br#"{"kind": "gs", "windows": 4}"#,
+            br#"{"kind": "per_block", "modes": [{"mode": "gs_fuse", "windows": 8, "chunk": 4}]}"#,
+            br#"{"strategy": "warm", "warm_cap": 8}"#,
+        ];
+        let dict: &[&[u8]] = &[
+            b"kind", b"mode", b"modes", b"windows", b"chunk", b"per_block", b"gs_fuse",
+            b"selective", b"jacobi_mask", b"strategy", b"warm_cap", b":", b"0", b"-1",
+            b"18446744073709551615", b"1e308",
+        ];
+        fuzz_cases(corpus, dict, 12_000, 0x5EED, |case| {
+            if let Ok(s) = std::str::from_utf8(case) {
+                // String spellings: parse-or-reject, never panic.
+                let _ = DecodePolicy::parse(s);
+                let _ = InitPolicy::parse(s);
+                // JSON spellings: anything jsonx accepts must either load as
+                // a policy and round-trip, or reject with an error.
+                if let Ok(v) = crate::jsonx::parse(s) {
+                    if let Ok(p) = DecodePolicy::from_json(&v) {
+                        assert_eq!(DecodePolicy::from_json(&p.to_json()).unwrap(), p);
+                    }
+                    if let Ok(ip) = InitPolicy::from_json(&v) {
+                        assert_eq!(InitPolicy::from_json(&ip.to_json()).unwrap(), ip);
+                    }
+                }
+            }
+        });
     }
 }

@@ -70,7 +70,7 @@ use super::jacobi::InitStrategy;
 use super::pipeline::{
     ContinuousPipeline, DecodePipeline, PipelineConfig, PipelineJob, PipelineResult,
 };
-use super::policy::PolicyTuner;
+use super::policy::{OverloadGovernor, PolicyTuner};
 use super::sampler::{SampleOptions, SamplerSet};
 use crate::metrics::{Counter, Gauge, Histogram, Registry};
 use crate::runtime::{Backend, Engine, Manifest};
@@ -115,6 +115,13 @@ pub struct RouterConfig {
     /// not consulted (wave membership changes mid-decode, so there is no
     /// stable per-batch bucket to tune against).
     pub refill: bool,
+    /// Quality-elastic overload governor (`serve --elastic`), shared by
+    /// every worker: each decode observes queue depth and completion
+    /// latency, and decodes under the governor's current degradation-ladder
+    /// options ([`OverloadGovernor::apply`] — a passthrough clone at level
+    /// 0, so the healthy path stays bit-exact). Composes with the tuner:
+    /// the ladder coarsens whatever policy the tuner picked.
+    pub governor: Option<Arc<OverloadGovernor>>,
 }
 
 /// Running worker fleet.
@@ -241,6 +248,7 @@ fn worker_main<B, F>(
     let inflight = registry.gauge("sjd_batches_inflight");
     let spec_hits = registry.counter("sjd_spec_init_hits");
     let spec_wasted = registry.counter("sjd_spec_wasted_updates");
+    let deadline_expired = registry.counter("sjd_deadline_expired");
 
     // Workers exit when the closed queue drains (`next_batch` → None), so a
     // shutdown never abandons an accepted slot.
@@ -253,6 +261,21 @@ fn worker_main<B, F>(
         // the slots the zip below would not cover.
         let mut slots = batch.slots;
         while !slots.is_empty() {
+            // Deadline enforcement at chunk formation: a slot whose
+            // deadline passed while earlier chunks decoded resolves 504
+            // here instead of burning a decode it can no longer use.
+            slots.retain(|s| {
+                if s.expired() {
+                    deadline_expired.inc();
+                    s.resolve_expired("batch formation");
+                    false
+                } else {
+                    true
+                }
+            });
+            if slots.is_empty() {
+                break;
+            }
             let take = slots.len().min(set.max_bucket());
             let chunk: Vec<_> = slots.drain(..take).collect();
             // Smallest lowered bucket covering the chunk; pad only up to it.
@@ -277,6 +300,11 @@ fn worker_main<B, F>(
                 // Tuner-gated speculation: the bucket's init provider, or
                 // zeros while the bucket is reverted / being baselined.
                 options.jacobi.init = tuner.init_for(sampler.batch);
+            }
+            // Overload governor (serve --elastic): decode this chunk at the
+            // ladder's current level — a passthrough clone when healthy.
+            if let Some(gov) = &cfg.governor {
+                options = gov.apply(&options);
             }
             let t_decode = Instant::now();
             let decoded = sampler
@@ -312,6 +340,12 @@ fn worker_main<B, F>(
                         slot.done.put(Err(msg.clone()));
                     }
                 }
+            }
+            // Governor feedback at chunk cadence: what is queued behind
+            // this worker, and the worst accepted latency it just produced.
+            if let Some(gov) = &cfg.governor {
+                let worst = chunk.iter().map(|s| s.enqueued.elapsed()).max();
+                gov.observe(batcher.queued(), worst);
             }
         }
         inflight.add(-1);
@@ -364,6 +398,7 @@ fn worker_pipelined<B, F>(
     let queue_wait = registry.histogram("sjd_queue_wait");
     let batch_fill = registry.histogram("sjd_batch_fill");
     let padded = registry.counter("sjd_padded_slots");
+    let deadline_expired = registry.counter("sjd_deadline_expired");
     // Completion-side handles resolved once, off the submit hot path; each
     // chunk's callback clones the Arcs.
     let metrics = ChunkMetrics {
@@ -384,6 +419,19 @@ fn worker_pipelined<B, F>(
         batch_fill.record(batch.slots.len() as u64);
         let mut slots = batch.slots;
         while !slots.is_empty() {
+            // Same chunk-formation deadline enforcement as `worker_main`.
+            slots.retain(|s| {
+                if s.expired() {
+                    deadline_expired.inc();
+                    s.resolve_expired("batch formation");
+                    false
+                } else {
+                    true
+                }
+            });
+            if slots.is_empty() {
+                break;
+            }
             let take = slots.len().min(max_bucket);
             let chunk: Vec<Slot> = slots.drain(..take).collect();
             // Smallest lowered bucket covering the chunk (the same
@@ -402,8 +450,15 @@ fn worker_pipelined<B, F>(
                 opts.policy = tuner.policy_for(bucket);
                 opts.jacobi.init = tuner.init_for(bucket);
             }
+            if let Some(gov) = &cfg.governor {
+                // Submit-side half of the feedback loop: sample queue
+                // pressure here; the completion callback reports latency.
+                gov.observe(batcher.queued(), None);
+                opts = gov.apply(&opts);
+            }
             metrics.inflight.add(1);
-            let done = completion(widx, bucket, chunk, cfg.tuner.clone(), metrics.clone());
+            let done =
+                completion(widx, bucket, chunk, cfg.tuner.clone(), cfg.governor.clone(), metrics.clone());
             let job = PipelineJob { seeds, opts, done };
             match pipeline.submit(job) {
                 Ok(()) => {
@@ -456,13 +511,14 @@ fn worker_continuous<B, F>(
     if options.jacobi.init == InitStrategy::Draft {
         options.jacobi.init = InitStrategy::Zeros;
     }
-    let pipeline = match ContinuousPipeline::start(
+    let pipeline = match ContinuousPipeline::start_with_governor(
         &cfg.model,
         &cfg.buckets,
         pipeline_cfg,
         registry.clone(),
         batcher,
         options,
+        cfg.governor.clone(),
         stage_factory,
     ) {
         Ok(p) => p,
@@ -499,6 +555,7 @@ fn completion(
     bucket: usize,
     chunk: Vec<Slot>,
     tuner: Option<Arc<PolicyTuner>>,
+    governor: Option<Arc<OverloadGovernor>>,
     m: ChunkMetrics,
 ) -> Box<dyn FnOnce(PipelineResult) + Send + 'static> {
     Box::new(move |result: PipelineResult| {
@@ -523,6 +580,12 @@ fn completion(
                     m.lat.record_duration(slot.enqueued.elapsed());
                     slot.done.put(Ok(img));
                     m.images.inc();
+                }
+                // Completion half of the governor feedback loop.
+                if let (Some(gov), Some(worst)) =
+                    (&governor, chunk.iter().map(|s| s.enqueued.elapsed()).max())
+                {
+                    gov.observe_latency(worst);
                 }
                 m.batches.inc();
             }

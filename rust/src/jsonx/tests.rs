@@ -74,6 +74,62 @@ fn accessor_helpers() {
 }
 
 #[test]
+fn nesting_depth_is_bounded() {
+    // 128 levels parse; beyond that the parser must *error*, not recurse —
+    // a stack overflow aborts the process, so depth has to be data, not
+    // call stack.
+    let ok = format!("{}1{}", "[".repeat(128), "]".repeat(128));
+    assert!(parse(&ok).is_ok());
+    let deep = format!("{}1{}", "[".repeat(20_000), "]".repeat(20_000));
+    let e = parse(&deep).unwrap_err();
+    assert!(e.msg.contains("nesting too deep"), "{e}");
+    // Mixed containers count against the same budget.
+    let mixed = "{\"k\": ".repeat(10_000) + "1" + &"}".repeat(10_000);
+    assert!(parse(&mixed).is_err());
+}
+
+#[test]
+fn fuzz_json_parser_never_panics_and_roundtrips() {
+    // Structure-aware fuzz of the full grammar: `parse` must reject or
+    // accept, never panic; any accepted document with finite numbers must
+    // round-trip bit-for-bit through the emitter. (Non-finite f64s — e.g.
+    // "1e999" → inf — are accepted by `parse` but have no JSON spelling,
+    // so they are excluded from the round-trip leg.)
+    fn finite(v: &Value) -> bool {
+        match v {
+            Value::Num(n) => n.is_finite(),
+            Value::Arr(a) => a.iter().all(finite),
+            Value::Obj(o) => o.values().all(finite),
+            _ => true,
+        }
+    }
+    let corpus: &[&[u8]] = &[
+        br#"{"arr": [1, 2.5, "s"], "nested": {"x": true, "y": null}, "z": -7}"#,
+        br#"{"kind": "per_block", "modes": [{"mode": "gs", "windows": 4}]}"#,
+        br#"[[[{"a": "😀 A"}], -0.5e-3], "héllo", []]"#,
+        br#""tab\t nl\n quote\" back\\ slash\/ done""#,
+        b"12345678901234567890.000001",
+        b"null",
+    ];
+    let dict: &[&[u8]] = &[
+        b"{", b"}", b"[", b"]", b":", b",", b"\"", b"\\u", b"\\", b"null", b"true", b"false",
+        b"-", b"e+", b"1e999", b"\"init\"",
+    ];
+    crate::testkit::fuzz::fuzz_cases(corpus, dict, 12_000, 0x15_0BAD, |case| {
+        let Ok(text) = std::str::from_utf8(case) else { return };
+        if let Ok(v) = parse(text) {
+            if finite(&v) {
+                let emitted = to_string_pretty(&v);
+                let re = parse(&emitted).unwrap_or_else(|e| {
+                    panic!("emitted JSON failed to reparse: {e}\n{emitted}")
+                });
+                assert_eq!(v, re, "round-trip changed the document");
+            }
+        }
+    });
+}
+
+#[test]
 fn big_document() {
     // Stress the parser with a generated document.
     let mut src = String::from("[");

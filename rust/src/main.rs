@@ -26,8 +26,8 @@ use sjd::configx::{CValue, Config};
 use sjd::coordinator::batcher::Batcher;
 use sjd::coordinator::jacobi::JacobiConfig;
 use sjd::coordinator::policy::{
-    calibrate, calibrate_chunks, calibrate_windows, DecodePolicy, InitPolicy, PolicyTuner,
-    TunerConfig,
+    calibrate, calibrate_chunks, calibrate_windows, DecodePolicy, GovernorConfig, InitPolicy,
+    OverloadGovernor, PolicyTuner, TunerConfig,
 };
 use sjd::coordinator::router::{Router, RouterConfig};
 use sjd::coordinator::sampler::{SampleOptions, Sampler};
@@ -85,6 +85,34 @@ fn cli() -> Command {
                      block boundaries, migrate shrinking batches to smaller \
                      buckets, sweep disconnected requests (overrides the \
                      depth-gated feeder; per-request outputs stay bit-identical)",
+                )
+                .opt(
+                    "queue-cap",
+                    "0",
+                    "admission control: max queued requests before /generate \
+                     sheds with 429 + Retry-After (0 = unbounded)",
+                )
+                .opt(
+                    "default-deadline",
+                    "0",
+                    "per-request decode deadline in ms when the client sends no \
+                     X-SJD-Deadline-Ms header; expired requests answer 504 and \
+                     are swept mid-flight at block boundaries (0 = none)",
+                )
+                .switch(
+                    "elastic",
+                    "quality-elastic overload governor: under sustained queue/\
+                     latency pressure, walk a degradation ladder (maximal fused \
+                     chunks, coarser GS windows, then raised tau within \
+                     --fidelity-budget) and step back to the exact configured \
+                     policy when pressure clears",
+                )
+                .opt(
+                    "fidelity-budget",
+                    "0",
+                    "max tau --elastic may degrade to under overload (0 = mode \
+                     coarsening only, never raises tau; at tau 0 coarsening \
+                     stays bit-exact)",
                 ),
         )
         .sub(
@@ -264,10 +292,39 @@ fn cmd_serve(p: &sjd::cli::Parsed) -> Result<()> {
     };
 
     let registry = Registry::new();
-    let batcher = Batcher::new(
+    let queue_cap = p.usize("queue-cap")?;
+    let batcher = Batcher::with_cap(
         max_bucket,
         Duration::from_millis(p.usize("batch-wait-ms")? as u64),
+        queue_cap,
     );
+    batcher.bind_metrics(&registry);
+    // Quality-elastic overload governor (--elastic): degrades the decode
+    // schedule under sustained pressure and steps back to the exact
+    // configured policy when it clears. The queue-pressure threshold tracks
+    // admission control when a cap is set, else a multiple of the largest
+    // bucket (a healthy serve drains a bucket per batch wait).
+    let governor = if p.flag("elastic") {
+        let blocks = manifest.model(&model)?.blocks;
+        let queue_high = if queue_cap > 0 {
+            (queue_cap as f64 / 2.0).max(1.0)
+        } else {
+            (4 * max_bucket) as f64
+        };
+        Some(Arc::new(OverloadGovernor::new(
+            blocks,
+            GovernorConfig {
+                queue_high,
+                base_tau: options.jacobi.tau,
+                fidelity_budget: p.f64("fidelity-budget").unwrap_or(0.0) as f32,
+                s_max: fused_history_len(&manifest, &model, max_bucket),
+                ..Default::default()
+            },
+            &registry,
+        )))
+    } else {
+        None
+    };
     let router = Router::start(
         RouterConfig {
             artifacts_dir,
@@ -280,6 +337,7 @@ fn cmd_serve(p: &sjd::cli::Parsed) -> Result<()> {
             refill: p.flag("refill"),
             tuner: tuner.clone(),
             warm_cap: init.warm_cap,
+            governor,
         },
         batcher.clone(),
         registry.clone(),
@@ -298,6 +356,10 @@ fn cmd_serve(p: &sjd::cli::Parsed) -> Result<()> {
         registry,
         ServerConfig {
             conn_threads: p.usize("http-threads")?,
+            default_deadline: match p.usize("default-deadline")? {
+                0 => None,
+                ms => Some(Duration::from_millis(ms as u64)),
+            },
             policy: Some(PolicySource {
                 configured: {
                     // Like the calibrate output: the configured policy JSON

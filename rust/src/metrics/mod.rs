@@ -29,6 +29,13 @@
 //! | `sjd_straggler_merges`    | counter   | continuous batcher: straggler waves adopted by a peer wave at a block boundary instead of decoding padded |
 //! | `sjd_slots_cancelled`     | counter   | continuous batcher: abandoned slots swept out of a wave at a block boundary |
 //! | `sjd_padded_slot_blocks`  | counter   | continuous batcher: padded rows decoded, summed per block position — the quantity refill/migration/merge exists to minimize (`sjd_padded_slots` keeps its formation-time meaning) |
+//! | `sjd_queue_depth`         | gauge     | batcher: queued slots right now (both priority classes; published under the queue lock) |
+//! | `sjd_queue_cap`           | gauge     | batcher: the `--queue-cap` admission bound (0 = unbounded) |
+//! | `sjd_shed_total{reason="queue_full"}` | counter | HTTP layer: `/generate` requests shed 429 at admission |
+//! | `sjd_shed_total{reason="shutdown"}` | counter | HTTP layer: `/generate` requests answered 503 during drain |
+//! | `sjd_deadline_expired`    | counter   | slots resolved past their deadline, at any enforcement point: queue purge, wave formation, block-boundary sweep, batch formation, handler wait |
+//! | `sjd_degrade_level`       | gauge     | elastic governor: current degradation-ladder level (0 = exact configured policy) |
+//! | `sjd_elastic_tau`         | gauge     | elastic governor: currently applied τ × 1e6 (0 whenever the ladder is at or below mode coarsening) |
 
 mod histogram;
 mod registry;

@@ -1,0 +1,190 @@
+//! Deterministic structure-aware fuzzing (cargo-fuzz substitute — crates.io
+//! and libFuzzer are unreachable in this environment, so the fuzz sweeps
+//! run *inside* `cargo test -q` instead of as a separate fuzz target).
+//!
+//! The model is classic mutation-based fuzzing: start from a small corpus
+//! of well-formed inputs, apply a random stack of byte- and token-level
+//! mutations (bit flips, splices, truncations, duplications, dictionary
+//! token insertion), and feed each mutant to the system under test. The
+//! PRNG is the repo's own seeded [`Pcg64`], so every sweep is exactly
+//! reproducible from its `(seed, case)` pair — a failing case panics with
+//! both, and re-running the test replays it.
+//!
+//! The harness checks *robustness*, not correctness: the property closure
+//! must not panic (parse-or-reject); any stronger invariant (round-trip,
+//! caps) is the caller's to assert inside the closure.
+
+use crate::tensor::Pcg64;
+
+/// Hard bound on a mutant's size, so duplication stacking can't balloon a
+/// case into allocation-bound territory.
+const MAX_CASE_BYTES: usize = 1 << 16;
+
+/// A seeded corpus mutator: byte- and token-level transforms over an input.
+pub struct Mutator<'a> {
+    rng: Pcg64,
+    /// Interesting tokens spliced in whole (header names, keywords,
+    /// boundary numerals) — this is what makes the fuzzing structure-aware
+    /// rather than pure byte soup.
+    dict: &'a [&'a [u8]],
+}
+
+impl<'a> Mutator<'a> {
+    pub fn new(seed: u64, dict: &'a [&'a [u8]]) -> Self {
+        Mutator { rng: Pcg64::seed(seed), dict }
+    }
+
+    /// Apply 1..=8 random mutations to `base` and return the mutant.
+    pub fn mutate(&mut self, base: &[u8]) -> Vec<u8> {
+        let mut v = base.to_vec();
+        let rounds = 1 + self.rng.next_below(8);
+        for _ in 0..rounds {
+            self.mutate_once(&mut v);
+        }
+        v.truncate(MAX_CASE_BYTES);
+        v
+    }
+
+    fn mutate_once(&mut self, v: &mut Vec<u8>) {
+        match self.rng.next_below(8) {
+            // Flip one bit.
+            0 if !v.is_empty() => {
+                let i = self.rng.next_below(v.len());
+                v[i] ^= 1 << self.rng.next_below(8);
+            }
+            // Overwrite one byte with an interesting value.
+            1 if !v.is_empty() => {
+                const INTERESTING: &[u8] = &[0, 1, 9, 10, 13, 32, 58, 127, 128, 255];
+                let i = self.rng.next_below(v.len());
+                v[i] = INTERESTING[self.rng.next_below(INTERESTING.len())];
+            }
+            // Truncate at a random point.
+            2 if !v.is_empty() => {
+                let i = self.rng.next_below(v.len());
+                v.truncate(i);
+            }
+            // Delete a random span.
+            3 if !v.is_empty() => {
+                let a = self.rng.next_below(v.len());
+                let b = (a + 1 + self.rng.next_below(16)).min(v.len());
+                v.drain(a..b);
+            }
+            // Duplicate a random span in place.
+            4 if !v.is_empty() => {
+                let a = self.rng.next_below(v.len());
+                let b = (a + 1 + self.rng.next_below(32)).min(v.len());
+                let span: Vec<u8> = v[a..b].to_vec();
+                let at = self.rng.next_below(v.len() + 1);
+                v.splice(at..at, span);
+            }
+            // Insert a dictionary token (the structure-aware move).
+            5 if !self.dict.is_empty() => {
+                let tok = self.dict[self.rng.next_below(self.dict.len())];
+                let at = self.rng.next_below(v.len() + 1);
+                v.splice(at..at, tok.iter().copied());
+            }
+            // Insert 1..=8 random bytes.
+            6 => {
+                let at = self.rng.next_below(v.len() + 1);
+                let n = 1 + self.rng.next_below(8);
+                let bytes: Vec<u8> = (0..n).map(|_| self.rng.next_below(256) as u8).collect();
+                v.splice(at..at, bytes);
+            }
+            // Swap two random bytes.
+            _ if v.len() >= 2 => {
+                let i = self.rng.next_below(v.len());
+                let j = self.rng.next_below(v.len());
+                v.swap(i, j);
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Run `n` fuzz cases against `f`: each case is a corpus entry (cases cycle
+/// through the corpus so every seed input is exercised) mutated by a
+/// seeded [`Mutator`]. The first ~corpus-length cases are the *unmutated*
+/// corpus itself, so a harness that can't even handle its own well-formed
+/// seeds fails immediately and obviously. A panic inside `f` is caught and
+/// re-raised with the `(seed, case)` pair and a byte dump of the mutant, so
+/// any failure is replayable.
+pub fn fuzz_cases(
+    corpus: &[&[u8]],
+    dict: &[&[u8]],
+    n: usize,
+    seed: u64,
+    f: impl Fn(&[u8]) + std::panic::RefUnwindSafe,
+) {
+    assert!(!corpus.is_empty(), "fuzz corpus must not be empty");
+    let mut mutator = Mutator::new(seed, dict);
+    for case in 0..n {
+        let base = corpus[case % corpus.len()];
+        let input = if case < corpus.len() { base.to_vec() } else { mutator.mutate(base) };
+        let r = std::panic::catch_unwind(|| f(&input));
+        if let Err(payload) = r {
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "fuzz case panicked (seed {seed:#x}, case {case}/{n})\n  panic: {msg}\n  input ({} bytes): {:?}",
+                input.len(),
+                String::from_utf8_lossy(&input)
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mutations_are_deterministic_per_seed() {
+        let dict: &[&[u8]] = &[b"tok", b"\r\n"];
+        let mut a = Mutator::new(42, dict);
+        let mut b = Mutator::new(42, dict);
+        for _ in 0..100 {
+            assert_eq!(a.mutate(b"hello world"), b.mutate(b"hello world"));
+        }
+        // A different seed diverges somewhere within a few cases.
+        let mut c = Mutator::new(43, dict);
+        let mut a = Mutator::new(42, dict);
+        let diverged = (0..10).any(|_| a.mutate(b"hello world") != c.mutate(b"hello world"));
+        assert!(diverged);
+    }
+
+    #[test]
+    fn mutants_stay_bounded() {
+        let mut m = Mutator::new(7, &[b"AAAAAAAAAAAAAAAA"]);
+        let base = vec![b'x'; 1024];
+        for _ in 0..1000 {
+            assert!(m.mutate(&base).len() <= MAX_CASE_BYTES);
+        }
+    }
+
+    #[test]
+    fn fuzz_cases_replays_corpus_first_and_reports_failures() {
+        // The unmutated corpus is always fed through first.
+        let seen = std::sync::Mutex::new(Vec::new());
+        fuzz_cases(&[b"alpha", b"beta"], &[], 10, 1, |case| {
+            seen.lock().unwrap().push(case.to_vec());
+        });
+        let seen = seen.lock().unwrap();
+        assert_eq!(&seen[0], b"alpha");
+        assert_eq!(&seen[1], b"beta");
+        assert_eq!(seen.len(), 10);
+
+        // A panicking property surfaces as a replayable report.
+        let r = std::panic::catch_unwind(|| {
+            fuzz_cases(&[b"x"], &[], 5, 9, |_case| panic!("boom"));
+        });
+        let msg = match r {
+            Err(p) => p.downcast_ref::<String>().cloned().unwrap_or_default(),
+            Ok(()) => panic!("expected failure"),
+        };
+        assert!(msg.contains("seed 0x9") || msg.contains("seed 9"), "{msg}");
+        assert!(msg.contains("case"), "{msg}");
+    }
+}

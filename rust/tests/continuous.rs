@@ -76,6 +76,7 @@ fn start_router(
             refill,
             tuner: None,
             warm_cap: 0,
+            governor: None,
         },
         batcher.clone(),
         registry.clone(),

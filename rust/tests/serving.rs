@@ -5,7 +5,7 @@
 //! concurrent request handling, keep-alive — and artifact-driven end-to-end
 //! tests over real TCP + PJRT that skip when artifacts are missing.
 
-use sjd::coordinator::batcher::Batcher;
+use sjd::coordinator::batcher::{Batcher, Priority, SubmitOpts, DEADLINE_EXPIRED_MSG};
 use sjd::coordinator::jacobi::{InitStrategy, JacobiConfig, JacobiStats};
 use sjd::coordinator::policy::{
     calibrate_chunks, BlockDecode, DecodePolicy, PolicyTuner, TunerConfig,
@@ -42,6 +42,22 @@ fn post(addr: &str, path: &str, body: &str) -> String {
     write!(
         s,
         "POST {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).unwrap();
+    out
+}
+
+/// [`post`] with extra raw header lines (QoS: deadline / priority), each
+/// ending in `\r\n`.
+fn post_with(addr: &str, path: &str, extra_headers: &str, body: &str) -> String {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    write!(
+        s,
+        "POST {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n{extra_headers}Content-Length: {}\r\n\r\n{body}",
         body.len()
     )
     .unwrap();
@@ -89,6 +105,7 @@ fn mock_router(
             refill: false,
             tuner: None,
             warm_cap: 0,
+            governor: None,
         },
         batcher.clone(),
         registry.clone(),
@@ -297,10 +314,12 @@ fn keepalive_connection_serves_multiple_requests() {
 }
 
 #[test]
-fn generate_after_shutdown_returns_500_not_hang() {
-    // Post-close submissions fail fast (Batcher::submit), so a /generate
-    // racing shutdown gets an immediate 500 instead of waiting forever on a
-    // slot no worker will ever decode.
+fn generate_after_shutdown_returns_503_not_500() {
+    // Post-close submissions fail fast (Batcher::submit), and the HTTP
+    // layer must classify them as 503 Service Unavailable — the server is
+    // draining, the client did nothing wrong and a retry elsewhere is
+    // correct — not a generic 500, and never a hang on a slot no worker
+    // will ever decode.
     let addr = "127.0.0.1:8504";
     let registry = Registry::new();
     let batcher = Batcher::new(4, Duration::from_millis(5));
@@ -309,10 +328,12 @@ fn generate_after_shutdown_returns_500_not_hang() {
 
     batcher.close(); // simulates router.shutdown() while the listener lives
     let resp = post(addr, "/generate", r#"{"n": 1}"#);
-    assert!(resp.starts_with("HTTP/1.1 500"), "{resp}");
+    assert!(resp.starts_with("HTTP/1.1 503"), "{resp}");
     let body = resp.split("\r\n\r\n").nth(1).unwrap();
     let v = sjd::jsonx::parse(body).expect("error body is JSON");
     assert!(v.get("error").is_some());
+    let m = get(addr, "/metrics");
+    assert!(m.contains("sjd_shed_total{reason=\"shutdown\"} 1"), "{m}");
     stop_server(addr, stop, t);
 }
 
@@ -337,6 +358,7 @@ fn pipelined_router_matches_monolithic_images() {
                 refill: false,
                 tuner: None,
                 warm_cap: 0,
+                governor: None,
             },
             batcher.clone(),
             registry.clone(),
@@ -441,6 +463,7 @@ fn tuned_router_converges_to_offline_calibration() {
             refill: false,
             tuner: Some(tuner.clone()),
             warm_cap: 0,
+            governor: None,
         },
         batcher.clone(),
         registry.clone(),
@@ -509,6 +532,7 @@ fn tuned_router_reverts_unpaying_init_provider_to_zeros() {
             refill: false,
             tuner: Some(tuner.clone()),
             warm_cap: 0,
+            governor: None,
         },
         batcher.clone(),
         registry.clone(),
@@ -640,6 +664,7 @@ fn chaos_soak_every_slot_resolves_and_queues_drain() {
             refill: true,
             tuner: None,
             warm_cap: 0,
+            governor: None,
         },
         batcher.clone(),
         registry.clone(),
@@ -682,7 +707,9 @@ fn chaos_soak_every_slot_resolves_and_queues_drain() {
     for c in clients {
         let resp = c.join().expect("client thread must not hang or panic");
         assert!(
-            resp.starts_with("HTTP/1.1 200") || resp.starts_with("HTTP/1.1 500"),
+            resp.starts_with("HTTP/1.1 200")
+                || resp.starts_with("HTTP/1.1 500")
+                || resp.starts_with("HTTP/1.1 503"),
             "every request resolves with a response: {resp}"
         );
     }
@@ -779,6 +806,193 @@ fn http_front_door_survives_partial_and_pipelined_requests() {
 }
 
 // ---------------------------------------------------------------------------
+// Overload & QoS: admission control, deadlines, priorities
+// ---------------------------------------------------------------------------
+
+#[test]
+fn queue_full_sheds_429_with_retry_after() {
+    // Admission control: with the queue at its cap and no worker draining,
+    // a /generate must be shed *at submit* with 429 + Retry-After — fail
+    // fast, never park the client behind a queue that cannot make its
+    // deadline anyway.
+    let addr = "127.0.0.1:8531";
+    let registry = Registry::new();
+    let batcher = Batcher::with_cap(1, Duration::from_millis(50), 2);
+    batcher.bind_metrics(&registry);
+    let server = Server::new(addr, batcher.clone(), registry.clone());
+    let (stop, t) = start_server(server);
+
+    // Fill the bounded queue directly (no router: nothing drains it).
+    let _held: Vec<_> = (0..2).map(|i| batcher.submit(i, i).unwrap()).collect();
+    assert_eq!(batcher.queued(), 2);
+
+    let resp = post(addr, "/generate", r#"{"n": 1}"#);
+    assert!(resp.starts_with("HTTP/1.1 429"), "{resp}");
+    assert!(resp.contains("Retry-After:"), "429 must carry Retry-After: {resp}");
+    let body = resp.split("\r\n\r\n").nth(1).unwrap();
+    let v = sjd::jsonx::parse(body).expect("shed body is JSON");
+    assert!(v.req_str("error").unwrap().contains("full"), "{body}");
+
+    let m = get(addr, "/metrics");
+    assert!(m.contains("sjd_shed_total{reason=\"queue_full\"} 1"), "{m}");
+    assert!(m.contains("sjd_queue_cap 2"), "{m}");
+    assert!(m.contains("sjd_queue_depth 2"), "{m}");
+    stop_server(addr, stop, t);
+}
+
+#[test]
+fn deadline_expired_request_answers_504() {
+    // A request whose X-SJD-Deadline-Ms lapses while its slots sit in the
+    // queue (no worker here) must resolve 504 Gateway Timeout at the
+    // deadline — not block until shutdown.
+    let addr = "127.0.0.1:8532";
+    let registry = Registry::new();
+    let batcher = Batcher::new(4, Duration::from_millis(5));
+    let server = Server::new(addr, batcher.clone(), registry.clone());
+    let (stop, t) = start_server(server);
+
+    let t0 = Instant::now();
+    let resp = post_with(addr, "/generate", "X-SJD-Deadline-Ms: 60\r\n", r#"{"n": 1}"#);
+    let wall = t0.elapsed();
+    assert!(resp.starts_with("HTTP/1.1 504"), "{resp}");
+    assert!(wall < Duration::from_secs(10), "504 must arrive at the deadline, took {wall:?}");
+    let body = resp.split("\r\n\r\n").nth(1).unwrap();
+    let v = sjd::jsonx::parse(body).expect("timeout body is JSON");
+    assert!(v.req_str("error").unwrap().contains(DEADLINE_EXPIRED_MSG), "{body}");
+    assert!(registry.counter("sjd_deadline_expired").get() >= 1);
+
+    // A malformed deadline header is a client error, not a served request.
+    let bad = post_with(addr, "/generate", "X-SJD-Deadline-Ms: soon\r\n", r#"{"n": 1}"#);
+    assert!(bad.starts_with("HTTP/1.1 400"), "{bad}");
+    stop_server(addr, stop, t);
+}
+
+#[test]
+fn overload_chaos_soak_qos_statuses_and_bounded_queue() {
+    // The overload chaos harness: a capped queue under ~2× oversubscription
+    // with mixed priorities, deadlines, and mid-decode disconnects, over the
+    // continuous (refill) stack. Invariants: every well-behaved request
+    // resolves exactly once with a *classified* status — 200 (served), 429
+    // (shed at admission), 503 (shutting down), 504 (deadline) — never a
+    // bare 500 or a hang; the queue never exceeds its cap; the queue drains
+    // on shutdown.
+    let addr = "127.0.0.1:8533";
+    let registry = Registry::new();
+    let cap = 4usize;
+    let batcher = Batcher::with_cap(4, Duration::from_millis(5), cap);
+    batcher.bind_metrics(&registry);
+    let ledger = MockLedger::new();
+    let router = Router::start_with(
+        RouterConfig {
+            artifacts_dir: "unused-by-mock".into(),
+            model: "mock".into(),
+            buckets: Vec::new(),
+            workers: 1,
+            options: SampleOptions { policy: DecodePolicy::UniformJacobi, ..Default::default() },
+            pipeline_depth: 1,
+            stage_threads: 0,
+            refill: true,
+            tuner: None,
+            warm_cap: 0,
+            governor: None,
+        },
+        batcher.clone(),
+        registry.clone(),
+        {
+            let ledger = ledger.clone();
+            move |_| {
+                Ok(MockServeBackend::new(&[1, 2, 4], Duration::from_millis(1), ledger.clone()))
+            }
+        },
+    )
+    .expect("refill router");
+    let server = Server::with_config(
+        addr,
+        batcher.clone(),
+        registry.clone(),
+        ServerConfig { conn_threads: 16, ..Default::default() },
+    );
+    let (stop, t) = start_server(server);
+
+    let mut rng = ChaosRng(0xD05_0DE);
+    let mut clients = Vec::new();
+    for _burst in 0..5 {
+        for _ in 0..(rng.next() % 4 + 3) {
+            let seed = rng.next();
+            let kind = rng.next() % 4;
+            clients.push(std::thread::spawn(move || {
+                let body = format!("{{\"n\": {}, \"seed\": {seed}}}", seed % 2 + 1);
+                match kind {
+                    // Plain normal-priority request.
+                    0 => post(addr, "/generate", &body),
+                    // Latency-sensitive: high priority, generous deadline.
+                    1 => post_with(
+                        addr,
+                        "/generate",
+                        "X-SJD-Priority: high\r\nX-SJD-Deadline-Ms: 30000\r\n",
+                        &body,
+                    ),
+                    // Tight deadline: may be served or 504, never hang.
+                    2 => post_with(addr, "/generate", "X-SJD-Deadline-Ms: 4\r\n", &body),
+                    // Explicit normal-priority spelling.
+                    _ => post_with(addr, "/generate", "X-SJD-Priority: normal\r\n", &body),
+                }
+            }));
+        }
+        // One client that submits and vanishes without reading — its slots
+        // are cancelled and swept at a block boundary like any other chaos.
+        let mut s = TcpStream::connect(addr).expect("connect");
+        write!(s, "POST /generate HTTP/1.1\r\nHost: t\r\nContent-Length: 8\r\n\r\n{{\"n\":2}}")
+            .unwrap();
+        std::thread::sleep(Duration::from_millis(rng.next() % 8 + 1));
+        drop(s);
+        // Admission control holds mid-storm: depth (gauge and queue) ≤ cap.
+        assert!(batcher.queued() <= cap, "queue depth {} > cap {cap}", batcher.queued());
+        let depth = registry.gauge("sjd_queue_depth").get();
+        assert!(depth <= cap as i64, "sjd_queue_depth {depth} > cap {cap}");
+        std::thread::sleep(Duration::from_millis(rng.next() % 12 + 3));
+    }
+    let mut served = 0usize;
+    for c in clients {
+        let resp = c.join().expect("client thread must not hang or panic");
+        let status_ok = resp.starts_with("HTTP/1.1 200")
+            || resp.starts_with("HTTP/1.1 429")
+            || resp.starts_with("HTTP/1.1 503")
+            || resp.starts_with("HTTP/1.1 504");
+        assert!(status_ok, "overload responses must be classified: {resp}");
+        if resp.starts_with("HTTP/1.1 200") {
+            served += 1;
+        }
+    }
+    assert!(served > 0, "a capped queue must still serve traffic under overload");
+
+    // Deterministic deadline enforcement on the queue: a slot submitted
+    // already-expired is resolved 504-style by the next drain's purge, and
+    // counted once.
+    let expired_before = registry.counter("sjd_deadline_expired").get();
+    let h = batcher
+        .submit_slot_opts(
+            424242,
+            7,
+            SubmitOpts { deadline: Some(Instant::now()), priority: Priority::High },
+        )
+        .expect("submit with expired deadline is accepted, then swept");
+    match h.done.wait_timeout(Duration::from_secs(10)) {
+        Some(Err(e)) => assert!(e.contains(DEADLINE_EXPIRED_MSG), "{e}"),
+        Some(Ok(_)) => panic!("expired slot must resolve as an error"),
+        None => panic!("expired slot must resolve, not hang"),
+    }
+    assert!(registry.counter("sjd_deadline_expired").get() > expired_before);
+
+    stop_server(addr, stop, t);
+    router.shutdown();
+    assert_eq!(batcher.queued(), 0, "queues must drain on close");
+    assert_eq!(registry.gauge("sjd_queue_depth").get(), 0);
+    assert!(registry.counter("sjd_images_generated").get() > 0);
+    assert_eq!(ledger.count_containing("_b8"), 0, "no unlowered bucket was touched");
+}
+
+// ---------------------------------------------------------------------------
 // Artifact-driven end-to-end tests (skip without artifacts)
 // ---------------------------------------------------------------------------
 
@@ -800,6 +1014,7 @@ fn serve_generate_and_metrics_end_to_end() {
             refill: false,
             tuner: None,
             warm_cap: 0,
+            governor: None,
         },
         batcher.clone(),
         registry.clone(),
@@ -907,6 +1122,7 @@ fn batcher_groups_concurrent_requests() {
             refill: false,
             tuner: None,
             warm_cap: 0,
+            governor: None,
         },
         batcher.clone(),
         registry.clone(),
