@@ -115,6 +115,7 @@ fn run_config(
             tuner: None,
             warm_cap: 0,
             governor: None,
+            fault: Default::default(),
         },
         batcher.clone(),
         registry.clone(),

@@ -1,0 +1,349 @@
+//! Fault-recovery benchmark over the **mock backend** — no artifacts needed,
+//! so it runs everywhere (including the CI smoke step).
+//!
+//! Drives the serving front door (HTTP → batcher → router worker) twice with
+//! the same request trace: once fault-free (the goodput baseline) and once
+//! against a deterministic seeded fault plan that injects ~5% transient
+//! backend faults, permanently poisons the fused-step artifact, and kills
+//! the worker once mid-soak. The property under test is
+//! **degrade-and-recover instead of corrupt-or-hang**: every fault is either
+//! absorbed (retry, quarantine reroute, supervised respawn) or surfaced as
+//! an honest classified error, and whatever the stack serves is
+//! bit-identical to a fault-free solo decode.
+//!
+//! Gates (exit non-zero on failure):
+//! * every request resolves exactly once with a classified status — 200 or
+//!   500, never a hang and never a silently-wrong 200,
+//! * at least one injected transient fault was retried to success
+//!   (`sjd_backend_retries` advanced while the request still answered 200),
+//! * the poisoned fused artifact tripped its breaker
+//!   (`sjd_artifact_quarantined`) and the very next requests were served by
+//!   the degradation reroute (fused → plain Jacobi) — bit-exactly,
+//! * the mid-soak worker kill was supervised: `sjd_worker_panics` and
+//!   `sjd_worker_restarts` advanced, the in-flight request answered 500,
+//!   and the fleet ended healthy (`/healthz` 200, not degraded),
+//! * goodput under injected faults stays ≥ 90% of the fault-free baseline,
+//! * post-recovery, per-request outputs are **bit-identical** to solo serial
+//!   decodes at τ = 0 (Prop 3.2: the fixed point does not care how many
+//!   retries, reroutes, or respawns the road there took).
+//!
+//! ```bash
+//! cargo bench --bench fault_recovery            # full run (80-request soak)
+//! cargo bench --bench fault_recovery -- --quick # CI smoke (40 requests)
+//! ```
+
+use anyhow::Result;
+use sjd::coordinator::batcher::Batcher;
+use sjd::coordinator::fault::FaultPolicy;
+use sjd::coordinator::policy::DecodePolicy;
+use sjd::coordinator::router::{Router, RouterConfig};
+use sjd::coordinator::sampler::{SampleOptions, Sampler};
+use sjd::coordinator::server::{Server, ServerConfig};
+use sjd::metrics::Registry;
+use sjd::runtime::{Backend, FaultClass};
+use sjd::tensor::Pcg64;
+use sjd::testkit::fault::{FaultPlan, FaultyBackend};
+use sjd::testkit::mockflow::{MockLedger, MockServeBackend};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Per-slot artificial decode cost (per jstep/seqstep call, × batch size).
+const SLOT_DELAY: Duration = Duration::from_micros(100);
+/// Distinct request seeds (kept small so solo references are cached).
+const SEED_SPACE: u64 = 4;
+/// Plain-jstep call index at which the worker is killed: the quarantine
+/// trips after 2 poisoned requests, so by index 100 several rerouted
+/// (plain-Jacobi) requests have already been served — the kill lands
+/// mid-soak, after the reroute is witnessed.
+const KILL_INDEX: usize = 100;
+
+fn quick() -> bool {
+    std::env::args().any(|a| a == "--quick") || std::env::var("SJD_QUICK").is_ok()
+}
+
+/// τ = 0 fused decode: exercises the jstep_fuse artifact (the quarantine
+/// target) on every block, with plain Jacobi as its degradation reroute.
+fn opts() -> SampleOptions {
+    let mut o =
+        SampleOptions { policy: DecodePolicy::Fused { chunk: 4 }, ..Default::default() };
+    o.jacobi.tau = 0.0;
+    o
+}
+
+/// Solo serial decode of one seed at bucket 1 — the bit-exactness oracle.
+fn solo_reference(seed: u64) -> Result<Vec<f32>> {
+    let be = MockServeBackend::new(&[1, 2, 4], Duration::ZERO, MockLedger::new());
+    let sampler = Sampler::new(&be, "mock", 1)?;
+    let z = sampler.sample_prior_slots(&[seed]);
+    let out = sampler.decode_tokens(z, &opts())?;
+    Ok(sampler.unpatchify(&out.tokens)?[0].data().to_vec())
+}
+
+/// Append scattered transient faults over the *plain* step artifacts only
+/// (`jstep_b…`, never `jstep_fuse…` — the fused role is reserved for the
+/// poison rule) to `plan`. Safe to replay on every worker incarnation: the
+/// retry layer absorbs each one. The explicit index-1 rule guarantees at
+/// least one transient fires early no matter what the seed scatters.
+fn with_transients(mut plan: FaultPlan, seed: u64, rate: f64, horizon: usize) -> FaultPlan {
+    let mut rng = Pcg64::seed(seed);
+    plan = plan.fail_once("jstep_b", 1, FaultClass::Transient);
+    for role in ["jstep_b", "seqstep"] {
+        for idx in 0..horizon {
+            if rng.next_f64() < rate {
+                plan = plan.fail_once(role, idx, FaultClass::Transient);
+            }
+        }
+    }
+    plan
+}
+
+/// One-shot POST; returns the raw response text.
+fn post(addr: &str, body: &str) -> String {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    write!(
+        s,
+        "POST /generate HTTP/1.1\r\nHost: b\r\nConnection: close\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    let mut out = String::new();
+    let _ = s.read_to_string(&mut out);
+    out
+}
+
+fn get(addr: &str, path: &str) -> String {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    write!(s, "GET {path} HTTP/1.1\r\nHost: b\r\nConnection: close\r\n\r\n").unwrap();
+    let mut out = String::new();
+    let _ = s.read_to_string(&mut out);
+    out
+}
+
+fn status(resp: &str) -> u16 {
+    resp.split(' ').nth(1).and_then(|s| s.parse().ok()).unwrap_or(0)
+}
+
+struct Stack {
+    registry: Registry,
+    batcher: Batcher,
+    router: Router,
+    stop: Arc<AtomicBool>,
+    server_thread: std::thread::JoinHandle<anyhow::Result<()>>,
+    addr: &'static str,
+}
+
+fn start_stack<B, F>(addr: &'static str, fault: FaultPolicy, factory: F) -> Result<Stack>
+where
+    B: Backend,
+    F: Fn(usize) -> Result<B> + Send + Clone + 'static,
+{
+    let registry = Registry::new();
+    let batcher = Batcher::new(4, Duration::from_millis(2));
+    batcher.bind_metrics(&registry);
+    let router = Router::start_with(
+        RouterConfig {
+            artifacts_dir: "mock".into(),
+            model: "mock".into(),
+            buckets: Vec::new(),
+            workers: 1,
+            options: opts(),
+            pipeline_depth: 1,
+            stage_threads: 0,
+            refill: false,
+            tuner: None,
+            warm_cap: 0,
+            governor: None,
+            fault,
+        },
+        batcher.clone(),
+        registry.clone(),
+        factory,
+    )?;
+    let server = Server::with_config(
+        addr,
+        batcher.clone(),
+        registry.clone(),
+        ServerConfig { conn_threads: 8, fleet: Some(router.fleet()), ..Default::default() },
+    );
+    let stop = server.stop_flag();
+    let server_thread = std::thread::spawn(move || server.run());
+    for _ in 0..100 {
+        if TcpStream::connect(addr).is_ok() {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    Ok(Stack { registry, batcher, router, stop, server_thread, addr })
+}
+
+impl Stack {
+    fn counter(&self, name: &str) -> u64 {
+        self.registry.counter(name).get()
+    }
+
+    fn shutdown(self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+        let _ = self.server_thread.join();
+        self.router.shutdown();
+    }
+}
+
+/// Sequential request trace: returns the per-request status codes. Each
+/// request either answers or trips the 60 s read timeout (status 0 → the
+/// exactly-once gate fails), so a hang can never pass.
+fn drive(stack: &Stack, n: usize) -> Vec<u16> {
+    (0..n)
+        .map(|i| {
+            let body = format!("{{\"n\": 1, \"seed\": {}}}", i as u64 % SEED_SPACE);
+            status(&post(stack.addr, &body))
+        })
+        .collect()
+}
+
+/// Direct-submission bit-exactness probe: every seed decoded through the
+/// live stack must match its solo reference byte-for-byte.
+fn assert_bit_exact(stack: &Stack, solo: &[Vec<f32>], phase: &str) -> Result<()> {
+    for (seed, want) in solo.iter().enumerate() {
+        let img = stack
+            .batcher
+            .submit(9000 + seed as u64, seed as u64)
+            .map_err(|e| anyhow::anyhow!("{phase}: submit: {e}"))?
+            .wait()
+            .map_err(|e| anyhow::anyhow!("{phase}: decode: {e}"))?;
+        if img.data() != &want[..] {
+            anyhow::bail!("{phase}: seed {seed} output differs from solo decode");
+        }
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let soak_n = if quick() { 40 } else { 80 };
+    println!(
+        "=== fault_recovery: {soak_n}-request soak, ~5% transient faults + poisoned fused \
+         artifact + one worker kill (mock backend) ==="
+    );
+
+    let solo: Vec<Vec<f32>> = (0..SEED_SPACE).map(solo_reference).collect::<Result<_>>()?;
+
+    // --- Phase 1: fault-free goodput baseline. ---------------------------
+    let ledger = MockLedger::new();
+    let base = start_stack("127.0.0.1:8547", FaultPolicy::default(), {
+        let ledger = ledger.clone();
+        move |_| Ok(MockServeBackend::new(&[1, 2, 4], SLOT_DELAY, ledger.clone()))
+    })?;
+    let t0 = Instant::now();
+    let base_statuses = drive(&base, soak_n);
+    let base_wall = t0.elapsed();
+    let base_served = base_statuses.iter().filter(|&&s| s == 200).count();
+    assert_bit_exact(&base, &solo, "baseline")?;
+    base.shutdown();
+    anyhow::ensure!(base_served == soak_n, "fault-free baseline must serve everything");
+
+    // --- Phase 2: the same trace against the fault plan. -----------------
+    // Incarnation 0 gets transients + a permanently poisoned fused artifact
+    // + a mid-soak kill; supervised respawns get the (replay-safe)
+    // transient-only plan. Rule order matters: the poison rule is first, so
+    // no transient rule can shadow a fused call.
+    let rate = 0.05;
+    let transients = with_transients(FaultPlan::none(), 0xFA57_0001, rate, 256);
+    let plan0 = with_transients(
+        FaultPlan::none()
+            .fail_n("jstep_fuse", 0, usize::MAX, FaultClass::Poison)
+            .panic_at("jstep_b", KILL_INDEX),
+        0xFA57_0001,
+        rate,
+        256,
+    );
+    let fault = FaultPolicy {
+        backoff_base: Duration::from_micros(200),
+        backoff_cap: Duration::from_millis(2),
+        quarantine_after: 2,
+        probe_interval: Duration::from_secs(300),
+        ..Default::default()
+    };
+    let incarnation = Arc::new(AtomicUsize::new(0));
+    let faulty = start_stack("127.0.0.1:8548", fault, {
+        let ledger = MockLedger::new();
+        let plan0 = plan0.clone();
+        let transients = transients.clone();
+        let incarnation = incarnation.clone();
+        move |_| {
+            let plan = if incarnation.fetch_add(1, Ordering::SeqCst) == 0 {
+                plan0.clone()
+            } else {
+                transients.clone()
+            };
+            Ok(FaultyBackend::new(
+                MockServeBackend::new(&[1, 2, 4], SLOT_DELAY, ledger.clone()),
+                plan,
+            ))
+        }
+    })?;
+    let t1 = Instant::now();
+    let statuses = drive(&faulty, soak_n);
+    let faulty_wall = t1.elapsed();
+
+    // --- Phase 3: recovery — fleet healthy, outputs exact. ---------------
+    let healthz = get(faulty.addr, "/healthz");
+    let exact_after = assert_bit_exact(&faulty, &solo, "post-recovery");
+
+    let served = statuses.iter().filter(|&&s| s == 200).count();
+    let failed = statuses.iter().filter(|&&s| s == 500).count();
+    let unclassified = statuses.iter().filter(|&&s| s != 200 && s != 500).count();
+    let retries = faulty.counter("sjd_backend_retries");
+    let quarantined = faulty.counter("sjd_artifact_quarantined");
+    let panics = faulty.counter("sjd_worker_panics");
+    let restarts = faulty.counter("sjd_worker_restarts");
+    let degraded = faulty.router.fleet().degraded();
+    let goodput = served as f64 / soak_n as f64;
+
+    println!("\n=== summary ===");
+    println!(
+        "baseline {base_served}/{soak_n} in {base_wall:?} | faulty {served}/{soak_n} \
+         in {faulty_wall:?} (goodput {:.1}%, {failed} honest 500s, {unclassified} \
+         unclassified) | injected: {} incarnation-0 + {} transient-only | retries \
+         {retries} | quarantined {quarantined} | panics {panics} restarts {restarts} \
+         degraded {degraded}",
+        goodput * 100.0,
+        plan0.injected(),
+        transients.injected(),
+    );
+    faulty.shutdown();
+
+    // Exactly-once, classified: every request answered 200 or an honest 500.
+    let once_ok = unclassified == 0;
+    // The first two requests hit the poisoned fused artifact (no retry for
+    // poison), the breaker trips, and the *next* requests are served by the
+    // plain-Jacobi reroute.
+    let reroute_ok =
+        quarantined >= 1 && statuses[0] == 500 && statuses[1] == 500 && statuses[2] == 200;
+    let retry_ok = retries >= 1;
+    let respawn_ok = panics >= 1 && restarts >= 1 && !degraded;
+    let health_ok = healthz.starts_with("HTTP/1.1 200");
+    let goodput_ok = goodput >= 0.90 * (base_served as f64 / soak_n as f64);
+    let exact_ok = exact_after.is_ok();
+    if let Err(e) = &exact_after {
+        eprintln!("exactness: {e:#}");
+    }
+    if once_ok && reroute_ok && retry_ok && respawn_ok && health_ok && goodput_ok && exact_ok {
+        println!(
+            "PASS: faults are retried, quarantined, or supervised away; goodput holds \
+             and recovery is bit-exact"
+        );
+        Ok(())
+    } else {
+        println!(
+            "FAIL: once_ok={once_ok} reroute_ok={reroute_ok} retry_ok={retry_ok} \
+             respawn_ok={respawn_ok} health_ok={health_ok} goodput_ok={goodput_ok} \
+             exact_ok={exact_ok}"
+        );
+        std::process::exit(1);
+    }
+}

@@ -140,6 +140,7 @@ fn start_stack(addr: &'static str) -> Result<Stack> {
             tuner: None,
             warm_cap: 0,
             governor: Some(governor),
+            fault: Default::default(),
         },
         batcher.clone(),
         registry.clone(),

@@ -58,7 +58,7 @@ fn pct(sorted: &[f64], q: f64) -> f64 {
 
 fn run(depth: usize, n_batches: u64) -> Result<RunStats> {
     let registry = Registry::new();
-    let cfg = PipelineConfig { depth, stage_threads: 0, warm_cap: 0 };
+    let cfg = PipelineConfig { depth, stage_threads: 0, warm_cap: 0, ..Default::default() };
     let factory =
         move |_stage: usize| Ok(MockServeBackend::new(&[2], SLOT_DELAY, MockLedger::new()));
     let pipeline = DecodePipeline::start("mock", &[2], cfg, registry.clone(), factory)?;

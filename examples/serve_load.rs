@@ -114,6 +114,7 @@ fn serve_and_measure(
             tuner: None,
             warm_cap: 0,
             governor: None,
+            fault: Default::default(),
         },
         batcher.clone(),
         registry.clone(),

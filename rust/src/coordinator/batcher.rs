@@ -53,6 +53,12 @@ pub type SlotResult = std::result::Result<Tensor, String>;
 /// it a single shared constant is what makes that mapping reliable.
 pub const DEADLINE_EXPIRED_MSG: &str = "deadline expired";
 
+/// Error-message prefix for a slot resolved by the completion guard
+/// ([`Slot`]'s `Drop`) because its holder failed without resolving it —
+/// worker panic, discarded wave, dead stage. Surfaces as HTTP 500: the
+/// request genuinely failed, but the waiter is never stranded.
+pub const WORKER_FAILED_MSG: &str = "worker failed mid-decode";
+
 /// Consecutive high-priority drains allowed before one queued normal slot
 /// is picked — bounds normal-class starvation under sustained high load.
 pub const HIGH_PICKS_PER_NORMAL: u32 = 3;
@@ -140,8 +146,24 @@ impl Slot {
 
     /// Resolve this slot as deadline-expired (the 504 path). `where_` names
     /// the enforcement point ("queued" / "block boundary") for the client.
+    /// Idempotent: a slot already resolved elsewhere keeps its first result.
     pub fn resolve_expired(&self, where_: &str) {
-        self.done.put(Err(format!("{DEADLINE_EXPIRED_MSG} ({where_})")));
+        self.done.put_once(Err(format!("{DEADLINE_EXPIRED_MSG} ({where_})")));
+    }
+}
+
+/// Completion guard: a slot that is dropped without ever being resolved —
+/// a worker panicked mid-decode, a wave was discarded, a pipeline stage
+/// died — resolves `Err` here instead of stranding its waiter forever at
+/// `OneShot::wait`. `put_once` makes this race-free against concurrent
+/// resolvers (worker result, deadline sweep, watchdog): whoever runs first
+/// wins, everyone else is a no-op, so every slot resolves exactly once.
+impl Drop for Slot {
+    fn drop(&mut self) {
+        self.done.put_once(Err(format!(
+            "{WORKER_FAILED_MSG} (slot for request {} dropped unresolved)",
+            self.request_id
+        )));
     }
 }
 
@@ -624,6 +646,54 @@ mod tests {
         std::thread::sleep(Duration::from_millis(5));
         // The expired slot is purged at admission time, freeing its slot.
         b.submit(3, 0).unwrap();
+    }
+
+    #[test]
+    fn dropped_slot_resolves_err_instead_of_stranding_waiter() {
+        // Completion guard regression: a worker that takes a batch and dies
+        // (unwinds, or simply drops the slots without resolving them) must
+        // not strand the submitter at `OneShot::wait` forever.
+        let b = Batcher::new(4, Duration::from_secs(1));
+        let h1 = b.submit(1, 0).unwrap();
+        let h2 = b.submit(2, 0).unwrap();
+        let b2 = b.clone();
+        std::thread::spawn(move || {
+            let batch = b2.next_batch().unwrap();
+            drop(batch); // worker "dies" holding the whole wave
+        })
+        .join()
+        .unwrap();
+        let e1 = h1.wait().unwrap_err();
+        assert!(e1.starts_with(WORKER_FAILED_MSG), "{e1}");
+        assert!(h2.wait().unwrap_err().starts_with(WORKER_FAILED_MSG));
+    }
+
+    #[test]
+    fn guard_never_overwrites_a_real_resolution() {
+        // A slot resolved Ok keeps its result when later dropped: the guard
+        // races through put_once, so exactly the first resolution wins.
+        let b = Batcher::new(1, Duration::from_secs(1));
+        let h = b.submit(1, 9).unwrap();
+        let batch = b.next_batch().unwrap();
+        batch.slots[0].done.put(Ok(Tensor::full(&[1, 1, 3], 9.0)));
+        drop(batch);
+        assert_eq!(h.wait().unwrap().data()[0], 9.0);
+    }
+
+    #[test]
+    fn unwinding_worker_resolves_its_chunk_via_guard() {
+        // Panic-on-unwind flavor of the guard test: the slots live on the
+        // panicking thread's stack and their Drop (not any catch site) is
+        // what resolves the waiters.
+        let b = Batcher::new(2, Duration::from_secs(1));
+        let h = b.submit(7, 0).unwrap();
+        let b2 = b.clone();
+        let worker = std::thread::spawn(move || {
+            let _batch = b2.next_batch().unwrap();
+            panic!("injected worker panic");
+        });
+        assert!(worker.join().is_err());
+        assert!(h.wait().unwrap_err().starts_with(WORKER_FAILED_MSG));
     }
 
     #[test]

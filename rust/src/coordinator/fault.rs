@@ -1,0 +1,657 @@
+//! Fault-tolerant execution layer: retry, circuit breaker, watchdog.
+//!
+//! Sits between the dispatch loops (router workers, pipeline stages) and
+//! any [`Backend`], turning the typed fault taxonomy of
+//! [`runtime::fault`](crate::runtime::FaultClass) into recovery behavior:
+//!
+//! * **Retry** — [`FaultTolerantBackend`] retries `Transient` faults of
+//!   `call_v`/`to_device`/`to_host` with capped exponential backoff,
+//!   budgeted against the live slot deadline (a retry that could not
+//!   finish before the wave's earliest deadline is not attempted), counted
+//!   in `sjd_backend_retries`. Retrying is *bit-safe* at τ = 0: by Prop
+//!   3.2 the Jacobi fixed point is independent of the starting iterate, so
+//!   a re-dispatched step converges to the same output.
+//! * **Circuit breaker** — `quarantine_after` *consecutive* `Poison`
+//!   failures of one artifact quarantine it for `probe_interval`
+//!   (`sjd_artifact_quarantined`). While quarantined the wrapper's
+//!   [`has_artifact`](Backend::has_artifact) answers `false`, which the
+//!   sampler's `effective_block_mode` consults live on every block decode
+//!   — so optional-role artifacts (`jstep_fuse`, `jstep_win`,
+//!   `jstep_win_fuse`, `init_proj`, `slot_gather`) reroute through the
+//!   existing degradation chain (gs_fuse → gs → jacobi) with zero sampler
+//!   changes. After the probe interval one probe call is let through: a
+//!   success closes the breaker, another poison re-quarantines. Required
+//!   artifacts (base `jstep`/`seqstep`/`reverse`) have no chain below them;
+//!   their quarantine fails dispatches fast instead of re-executing a
+//!   known-poisoned program.
+//! * **Watchdog** — a [`Watchdog`] monitor thread arms one [`WatchGuard`]
+//!   per dispatch (wave granularity: synchronous backend calls cannot be
+//!   aborted mid-flight). If the guard's timeout lapses before the
+//!   dispatch returns, the wave's slots resolve `Err` via `put_once`
+//!   (exactly-once against the worker's own completion) and the guard is
+//!   marked fired; the dispatcher checks [`WatchGuard::fired`] on return,
+//!   discards the late result, and treats the episode as `DeviceLost` so
+//!   supervision replaces the engine. A dispatch that *never* returns
+//!   wedges its thread, but its requests are answered and the fleet health
+//!   endpoint shows the loss.
+//!
+//! Worker supervision itself (respawn budgets, panic accounting) lives in
+//! [`router`](crate::coordinator::router); this module provides the pieces
+//! it composes.
+
+use crate::coordinator::batcher::SlotResult;
+use crate::exec::OneShot;
+use crate::metrics::{Counter, Registry};
+use crate::runtime::{classify, Backend, FaultClass, HostTensor, ModelMeta, Value};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Recovery knobs, one copy per worker (`serve --retry-budget
+/// --quarantine-after --worker-restarts`).
+#[derive(Clone, Debug)]
+pub struct FaultPolicy {
+    /// Max retries of one dispatch after a `Transient` fault (0 disables).
+    pub retry_budget: usize,
+    /// First-retry backoff; doubles per attempt up to [`backoff_cap`](Self::backoff_cap).
+    pub backoff_base: Duration,
+    /// Ceiling on a single backoff sleep.
+    pub backoff_cap: Duration,
+    /// Consecutive `Poison` failures of one artifact that trip its breaker
+    /// (0 disables quarantine).
+    pub quarantine_after: usize,
+    /// How long a tripped artifact stays quarantined before one probe call
+    /// is allowed through.
+    pub probe_interval: Duration,
+    /// Per-dispatch watchdog timeout (`None` disables the watchdog).
+    pub watchdog: Option<Duration>,
+    /// Times a panicked/device-lost worker is respawned with a fresh
+    /// engine before it is retired (enforced by the router's supervisor).
+    pub worker_restarts: usize,
+}
+
+impl Default for FaultPolicy {
+    fn default() -> Self {
+        FaultPolicy {
+            retry_budget: 3,
+            backoff_base: Duration::from_millis(5),
+            backoff_cap: Duration::from_millis(100),
+            quarantine_after: 3,
+            probe_interval: Duration::from_secs(2),
+            watchdog: Some(Duration::from_secs(30)),
+            worker_restarts: 2,
+        }
+    }
+}
+
+/// Shared, updatable view of "the earliest deadline among the slots this
+/// backend is currently decoding". Workers set it per wave/chunk; the
+/// fault-tolerant wrapper reads it to decide whether a retry (backoff +
+/// re-dispatch) can still meet the wave's promise.
+#[derive(Clone, Default)]
+pub struct DeadlineCell {
+    inner: Arc<Mutex<Option<Instant>>>,
+}
+
+impl DeadlineCell {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Set the active deadline for the in-flight wave (`None` = none).
+    pub fn set(&self, d: Option<Instant>) {
+        *self.inner.lock().unwrap() = d;
+    }
+
+    pub fn clear(&self) {
+        self.set(None);
+    }
+
+    /// Time left before the active deadline (`None` = unbounded).
+    pub fn remaining(&self) -> Option<Duration> {
+        self.inner
+            .lock()
+            .unwrap()
+            .map(|d| d.saturating_duration_since(Instant::now()))
+    }
+}
+
+/// Per-artifact circuit-breaker state.
+#[derive(Default)]
+struct Breaker {
+    /// Consecutive `Poison` failures since the last success.
+    consecutive: usize,
+    /// While set and in the future: quarantined. A call arriving after the
+    /// instant passed is the probe.
+    quarantined_until: Option<Instant>,
+}
+
+/// [`Backend`] wrapper adding retry, breaker-quarantine and fault
+/// accounting. One per engine (it is as thread-pinned as the engine it
+/// wraps); the [`DeadlineCell`] is the worker's channel for deadline
+/// budgets, shareable across the worker's dispatch loop.
+pub struct FaultTolerantBackend<B> {
+    inner: B,
+    policy: FaultPolicy,
+    deadline: DeadlineCell,
+    breakers: Mutex<HashMap<String, Breaker>>,
+    m_retries: Arc<Counter>,
+    m_quarantined: Arc<Counter>,
+}
+
+impl<B: Backend> FaultTolerantBackend<B> {
+    pub fn new(inner: B, policy: FaultPolicy, registry: &Registry) -> Self {
+        FaultTolerantBackend {
+            inner,
+            policy,
+            deadline: DeadlineCell::new(),
+            breakers: Mutex::new(HashMap::new()),
+            m_retries: registry.counter("sjd_backend_retries"),
+            m_quarantined: registry.counter("sjd_artifact_quarantined"),
+        }
+    }
+
+    /// The deadline cell dispatch loops should update per wave.
+    pub fn deadline_cell(&self) -> DeadlineCell {
+        self.deadline.clone()
+    }
+
+    pub fn inner(&self) -> &B {
+        &self.inner
+    }
+
+    /// Whether `name` is currently quarantined (probe window not yet open).
+    pub fn quarantined(&self, name: &str) -> bool {
+        let breakers = self.breakers.lock().unwrap();
+        breakers
+            .get(name)
+            .and_then(|b| b.quarantined_until)
+            .is_some_and(|until| Instant::now() < until)
+    }
+
+    /// Record a dispatch success: the artifact's breaker closes fully.
+    fn note_success(&self, name: &str) {
+        let mut breakers = self.breakers.lock().unwrap();
+        if let Some(b) = breakers.get_mut(name) {
+            b.consecutive = 0;
+            b.quarantined_until = None;
+        }
+    }
+
+    /// Record a `Poison` failure; trips the breaker at the policy
+    /// threshold. Returns whether this failure newly quarantined the
+    /// artifact.
+    fn note_poison(&self, name: &str) -> bool {
+        if self.policy.quarantine_after == 0 {
+            return false;
+        }
+        let mut breakers = self.breakers.lock().unwrap();
+        let b = breakers.entry(name.to_string()).or_default();
+        b.consecutive += 1;
+        if b.consecutive >= self.policy.quarantine_after {
+            // (Re-)quarantine: also the probe-failed path, where
+            // `consecutive` is already at/over threshold.
+            let was_open = b
+                .quarantined_until
+                .is_some_and(|until| Instant::now() < until);
+            b.quarantined_until = Some(Instant::now() + self.policy.probe_interval);
+            if !was_open {
+                self.m_quarantined.inc();
+                log::warn!(
+                    "artifact '{name}' quarantined after {} consecutive poison faults \
+                     (probe in {:?})",
+                    b.consecutive,
+                    self.policy.probe_interval
+                );
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Whether a retry sleeping `backoff` can still matter: either there
+    /// is no active deadline, or enough budget remains to back off *and*
+    /// plausibly re-run.
+    fn retry_fits_deadline(&self, backoff: Duration) -> bool {
+        match self.deadline.remaining() {
+            None => true,
+            Some(rem) => rem > backoff * 2,
+        }
+    }
+
+    /// Run `op` under the transient-retry loop. `what` names the operation
+    /// for logs; `artifact` keys breaker accounting (transfers pass `None`
+    /// — there is no program to quarantine).
+    fn with_retries<T>(
+        &self,
+        what: &str,
+        artifact: Option<&str>,
+        mut op: impl FnMut() -> anyhow::Result<T>,
+    ) -> anyhow::Result<T> {
+        let mut backoff = self.policy.backoff_base;
+        let mut attempt = 0usize;
+        loop {
+            match op() {
+                Ok(v) => {
+                    if let Some(name) = artifact {
+                        self.note_success(name);
+                    }
+                    return Ok(v);
+                }
+                Err(e) => match classify(&e) {
+                    FaultClass::Transient
+                        if attempt < self.policy.retry_budget
+                            && self.retry_fits_deadline(backoff) =>
+                    {
+                        attempt += 1;
+                        self.m_retries.inc();
+                        log::warn!(
+                            "transient fault in {what} (attempt {attempt}/{}): {e:#}; \
+                             retrying in {backoff:?}",
+                            self.policy.retry_budget
+                        );
+                        std::thread::sleep(backoff);
+                        backoff = (backoff * 2).min(self.policy.backoff_cap);
+                    }
+                    FaultClass::Transient => {
+                        return Err(e.context(format!(
+                            "{what}: transient fault persisted past the retry budget \
+                             ({attempt}/{})",
+                            self.policy.retry_budget
+                        )));
+                    }
+                    FaultClass::DeviceLost => return Err(e),
+                    FaultClass::Poison => {
+                        if let Some(name) = artifact {
+                            self.note_poison(name);
+                        }
+                        return Err(e);
+                    }
+                },
+            }
+        }
+    }
+}
+
+impl<B: Backend> Backend for FaultTolerantBackend<B> {
+    fn call_v(&self, name: &str, inputs: &[Value]) -> anyhow::Result<Vec<Value>> {
+        // Fail fast on a quarantined artifact instead of re-executing a
+        // known-poisoned program. Dispatch loops normally never get here —
+        // `has_artifact` already steered `effective_block_mode` away — so
+        // this covers required roles with no degradation chain below them.
+        if self.quarantined(name) {
+            return Err(crate::runtime::Fault::poison(name)
+                .context(format!("artifact '{name}' is quarantined")));
+        }
+        self.with_retries(name, Some(name), || self.inner.call_v(name, inputs))
+    }
+
+    fn model_meta(&self, model: &str) -> anyhow::Result<ModelMeta> {
+        self.inner.model_meta(model)
+    }
+
+    fn to_device(&self, t: &HostTensor) -> anyhow::Result<Value> {
+        self.with_retries("to_device", None, || self.inner.to_device(t))
+    }
+
+    fn to_host(&self, v: Value) -> anyhow::Result<HostTensor> {
+        // `to_host` consumes its value, so the retry closure re-clones.
+        self.with_retries("to_host", None, || self.inner.to_host(v.clone()))
+    }
+
+    /// Quarantine seam: a quarantined artifact reads as absent, which the
+    /// sampler's live `effective_block_mode` lookup turns into a
+    /// degradation-chain reroute (gs_fuse → gs → jacobi) on the very next
+    /// block decode. Once the probe window opens the artifact reappears.
+    fn has_artifact(&self, name: &str) -> bool {
+        !self.quarantined(name) && self.inner.has_artifact(name)
+    }
+}
+
+/// Message prefix of a slot resolved by the dispatch watchdog.
+pub const WATCHDOG_FIRED_MSG: &str = "dispatch watchdog fired";
+
+/// Best-effort human-readable panic payload (panics carry `&str` or
+/// `String` in practice). Shared by the router supervisor and the pipeline
+/// stage guards.
+pub(crate) fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+struct WatchEntry {
+    id: u64,
+    deadline: Instant,
+    /// Completion channels of the wave's slots; resolved `Err` via
+    /// `put_once` when the timer fires (exactly-once vs the dispatcher).
+    failers: Vec<OneShot<SlotResult>>,
+    fired: Arc<AtomicBool>,
+}
+
+#[derive(Default)]
+struct WatchState {
+    entries: Vec<WatchEntry>,
+    shutdown: bool,
+}
+
+struct WatchShared {
+    state: Mutex<WatchState>,
+    cv: Condvar,
+}
+
+/// Monitor for hung dispatches: one background thread, any number of
+/// concurrently armed [`WatchGuard`]s (one per in-flight wave dispatch).
+pub struct Watchdog {
+    shared: Arc<WatchShared>,
+    next_id: AtomicU64,
+    m_fired: Arc<Counter>,
+    monitor: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl Watchdog {
+    pub fn new(registry: &Registry) -> Arc<Self> {
+        let shared = Arc::new(WatchShared {
+            state: Mutex::new(WatchState::default()),
+            cv: Condvar::new(),
+        });
+        let m_fired = registry.counter("sjd_watchdog_fired");
+        let monitor = {
+            let shared = shared.clone();
+            let m_fired = m_fired.clone();
+            std::thread::Builder::new()
+                .name("sjd-watchdog".into())
+                .spawn(move || monitor_main(shared, m_fired))
+                .expect("spawn watchdog monitor")
+        };
+        Arc::new(Watchdog {
+            shared,
+            next_id: AtomicU64::new(1),
+            m_fired,
+            monitor: Mutex::new(Some(monitor)),
+        })
+    }
+
+    /// Arm a guard for one dispatch: if it is still armed after `timeout`,
+    /// every failer resolves `Err` and [`WatchGuard::fired`] turns true.
+    pub fn guard(
+        self: &Arc<Self>,
+        timeout: Duration,
+        failers: Vec<OneShot<SlotResult>>,
+    ) -> WatchGuard {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let fired = Arc::new(AtomicBool::new(false));
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.entries.push(WatchEntry {
+                id,
+                deadline: Instant::now() + timeout,
+                failers,
+                fired: fired.clone(),
+            });
+        }
+        self.shared.cv.notify_all();
+        WatchGuard { dog: self.clone(), id, fired }
+    }
+
+    /// Total dispatches the monitor has failed.
+    pub fn fired_total(&self) -> u64 {
+        self.m_fired.get()
+    }
+
+    /// Stop the monitor thread. Armed guards stop being enforced; pending
+    /// waves still resolve through the normal dispatcher paths (or the
+    /// slot completion guard).
+    pub fn shutdown(&self) {
+        let handle = {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.cv.notify_all();
+            self.monitor.lock().unwrap().take()
+        };
+        if let Some(h) = handle {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Watchdog {
+    /// Dispatch loops shut the watchdog down explicitly on their exit
+    /// funnels; this covers the unwind path (a worker panic drops its
+    /// `Arc<Watchdog>` mid-flight) so the monitor thread never leaks.
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn monitor_main(shared: Arc<WatchShared>, m_fired: Arc<Counter>) {
+    let mut st = shared.state.lock().unwrap();
+    loop {
+        if st.shutdown {
+            return;
+        }
+        let now = Instant::now();
+        // Fire everything due, keep the rest.
+        let mut due = Vec::new();
+        st.entries.retain_mut(|e| {
+            if e.deadline <= now {
+                due.push((std::mem::take(&mut e.failers), e.fired.clone()));
+                false
+            } else {
+                true
+            }
+        });
+        let next = st.entries.iter().map(|e| e.deadline).min();
+        if !due.is_empty() {
+            drop(st);
+            for (failers, fired) in due {
+                fired.store(true, Ordering::SeqCst);
+                m_fired.inc();
+                log::error!(
+                    "dispatch watchdog fired: failing a hung wave of {} slot(s)",
+                    failers.len()
+                );
+                for f in failers {
+                    f.put_once(Err(format!("{WATCHDOG_FIRED_MSG} (dispatch hung)")));
+                }
+            }
+            st = shared.state.lock().unwrap();
+            continue;
+        }
+        st = match next {
+            Some(deadline) => {
+                let wait = deadline.saturating_duration_since(now);
+                shared.cv.wait_timeout(st, wait).unwrap().0
+            }
+            None => shared.cv.wait(st).unwrap(),
+        };
+    }
+}
+
+/// RAII handle for one watched dispatch; disarm by dropping.
+pub struct WatchGuard {
+    dog: Arc<Watchdog>,
+    id: u64,
+    fired: Arc<AtomicBool>,
+}
+
+impl WatchGuard {
+    /// Whether the monitor fired (and resolved the wave's slots) before
+    /// the dispatch returned — the dispatcher must then discard its late
+    /// result and treat the episode as `DeviceLost`.
+    pub fn fired(&self) -> bool {
+        self.fired.load(Ordering::SeqCst)
+    }
+}
+
+impl Drop for WatchGuard {
+    fn drop(&mut self) {
+        let mut st = self.dog.shared.state.lock().unwrap();
+        st.entries.retain(|e| e.id != self.id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Fault;
+    use std::sync::atomic::AtomicUsize;
+
+    /// Backend failing the first `fail` calls of each artifact with the
+    /// given class, then succeeding with an empty output.
+    struct Flaky {
+        fail: usize,
+        class: FaultClass,
+        calls: Mutex<HashMap<String, usize>>,
+        total: AtomicUsize,
+    }
+
+    impl Flaky {
+        fn new(fail: usize, class: FaultClass) -> Self {
+            Flaky { fail, class, calls: Mutex::new(HashMap::new()), total: AtomicUsize::new(0) }
+        }
+    }
+
+    impl Backend for Flaky {
+        fn call_v(&self, name: &str, _inputs: &[Value]) -> anyhow::Result<Vec<Value>> {
+            self.total.fetch_add(1, Ordering::SeqCst);
+            let mut calls = self.calls.lock().unwrap();
+            let n = calls.entry(name.to_string()).or_insert(0);
+            *n += 1;
+            if *n <= self.fail {
+                return Err(Fault::new(self.class, name).context("injected"));
+            }
+            Ok(vec![])
+        }
+
+        fn model_meta(&self, _model: &str) -> anyhow::Result<ModelMeta> {
+            anyhow::bail!("no meta")
+        }
+
+        fn has_artifact(&self, _name: &str) -> bool {
+            true
+        }
+    }
+
+    fn policy_fast() -> FaultPolicy {
+        FaultPolicy {
+            retry_budget: 3,
+            backoff_base: Duration::from_micros(100),
+            backoff_cap: Duration::from_millis(1),
+            quarantine_after: 2,
+            probe_interval: Duration::from_millis(30),
+            watchdog: None,
+            worker_restarts: 2,
+        }
+    }
+
+    #[test]
+    fn transient_faults_retry_within_budget() {
+        let r = Registry::new();
+        let ft = FaultTolerantBackend::new(Flaky::new(2, FaultClass::Transient), policy_fast(), &r);
+        assert!(ft.call_v("m_jstep_b1", &[]).is_ok());
+        assert_eq!(r.counter("sjd_backend_retries").get(), 2);
+        // Budget exhausted: 3 retries cannot cover 4 failures.
+        let ft = FaultTolerantBackend::new(Flaky::new(4, FaultClass::Transient), policy_fast(), &r);
+        let err = ft.call_v("m_jstep_b1", &[]).unwrap_err();
+        assert_eq!(classify(&err), FaultClass::Transient);
+        assert!(format!("{err:#}").contains("retry budget"), "{err:#}");
+    }
+
+    #[test]
+    fn deadline_budget_suppresses_retries() {
+        let r = Registry::new();
+        let ft = FaultTolerantBackend::new(Flaky::new(1, FaultClass::Transient), policy_fast(), &r);
+        ft.deadline_cell().set(Some(Instant::now())); // already due: no room
+        assert!(ft.call_v("m_jstep_b1", &[]).is_err());
+        assert_eq!(r.counter("sjd_backend_retries").get(), 0);
+        ft.deadline_cell().clear();
+        assert!(ft.call_v("m_jstep_b1", &[]).is_ok()); // second call succeeds anyway
+    }
+
+    #[test]
+    fn poison_streak_quarantines_and_probe_recovers() {
+        let r = Registry::new();
+        // Fails twice (= quarantine_after), then healthy.
+        let ft = FaultTolerantBackend::new(Flaky::new(2, FaultClass::Poison), policy_fast(), &r);
+        assert!(ft.has_artifact("m_jstep_fuse_b4"));
+        assert!(ft.call_v("m_jstep_fuse_b4", &[]).is_err());
+        assert!(!ft.quarantined("m_jstep_fuse_b4"), "one poison must not trip");
+        assert!(ft.call_v("m_jstep_fuse_b4", &[]).is_err());
+        assert!(ft.quarantined("m_jstep_fuse_b4"), "streak at threshold trips");
+        assert!(!ft.has_artifact("m_jstep_fuse_b4"), "quarantined reads as absent");
+        assert_eq!(r.counter("sjd_artifact_quarantined").get(), 1);
+        // Other artifacts are untouched.
+        assert!(ft.has_artifact("m_jstep_b4"));
+        // Quarantined calls fail fast without reaching the backend.
+        let before = ft.inner().total.load(Ordering::SeqCst);
+        let err = ft.call_v("m_jstep_fuse_b4", &[]).unwrap_err();
+        assert!(format!("{err:#}").contains("quarantined"), "{err:#}");
+        assert_eq!(ft.inner().total.load(Ordering::SeqCst), before);
+        // After the probe interval the artifact reappears and the probe
+        // call (now healthy) closes the breaker for good.
+        std::thread::sleep(Duration::from_millis(35));
+        assert!(ft.has_artifact("m_jstep_fuse_b4"));
+        assert!(ft.call_v("m_jstep_fuse_b4", &[]).is_ok());
+        assert!(!ft.quarantined("m_jstep_fuse_b4"));
+    }
+
+    #[test]
+    fn failed_probe_requarantines_without_recounting() {
+        let r = Registry::new();
+        // Poisoned forever: every probe fails and re-opens the breaker.
+        let ft =
+            FaultTolerantBackend::new(Flaky::new(usize::MAX, FaultClass::Poison), policy_fast(), &r);
+        assert!(ft.call_v("m_gather_b2", &[]).is_err());
+        assert!(ft.call_v("m_gather_b2", &[]).is_err());
+        assert!(ft.quarantined("m_gather_b2"));
+        assert_eq!(r.counter("sjd_artifact_quarantined").get(), 1);
+        std::thread::sleep(Duration::from_millis(35));
+        assert!(!ft.quarantined("m_gather_b2"), "probe window open");
+        assert!(ft.call_v("m_gather_b2", &[]).is_err()); // failed probe
+        assert!(ft.quarantined("m_gather_b2"), "failed probe re-quarantines");
+        assert_eq!(
+            r.counter("sjd_artifact_quarantined").get(),
+            2,
+            "a re-quarantine after an open probe window counts again"
+        );
+    }
+
+    #[test]
+    fn device_lost_is_never_retried() {
+        let r = Registry::new();
+        let ft =
+            FaultTolerantBackend::new(Flaky::new(1, FaultClass::DeviceLost), policy_fast(), &r);
+        let err = ft.call_v("m_jstep_b1", &[]).unwrap_err();
+        assert_eq!(classify(&err), FaultClass::DeviceLost);
+        assert_eq!(r.counter("sjd_backend_retries").get(), 0);
+        assert_eq!(ft.inner().total.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn watchdog_fails_hung_wave_and_spares_fast_ones() {
+        let r = Registry::new();
+        let dog = Watchdog::new(&r);
+        // Fast dispatch: guard dropped before the timeout, nothing fires.
+        let fast: OneShot<SlotResult> = OneShot::new();
+        {
+            let _g = dog.guard(Duration::from_millis(50), vec![fast.clone()]);
+        }
+        // Hung dispatch: the guard stays armed past its timeout.
+        let hung: OneShot<SlotResult> = OneShot::new();
+        let g = dog.guard(Duration::from_millis(10), vec![hung.clone()]);
+        let res = hung.wait_timeout(Duration::from_secs(2)).expect("watchdog resolves slot");
+        assert!(res.unwrap_err().starts_with(WATCHDOG_FIRED_MSG));
+        assert!(g.fired());
+        assert!(!fast.filled(), "fast wave untouched");
+        assert_eq!(r.counter("sjd_watchdog_fired").get(), 1);
+        // Late worker result loses the race (exactly-once).
+        assert!(!hung.put_once(Ok(crate::tensor::Tensor::zeros(&[1]))));
+        dog.shutdown();
+    }
+}

@@ -23,6 +23,10 @@
 //!   different stages (inter-batch block overlap with per-stage queues,
 //!   backpressure and `sjd_stage_*` metrics).
 //! * [`batcher`] — dynamic request batching up to the largest bucket.
+//! * [`fault`] — fault-tolerant execution: transient-fault retry with
+//!   capped backoff budgeted against slot deadlines, per-artifact circuit
+//!   breakers whose quarantine reroutes through the degradation chain,
+//!   and the hung-dispatch watchdog (worker respawn lives in [`router`]).
 //! * [`router`] — multi-worker dispatch (one engine per worker thread,
 //!   or one per *stage* thread under `--pipeline-depth ≥ 2`); each batch
 //!   decodes via the smallest bucket covering it, padding only the gap to
@@ -35,6 +39,7 @@
 //! * [`state`] — per-request decode state & KV-cache buffers.
 
 pub mod batcher;
+pub mod fault;
 pub mod jacobi;
 pub mod maf;
 pub mod pipeline;
@@ -44,6 +49,7 @@ pub mod sampler;
 pub mod server;
 pub mod state;
 
+pub use fault::{DeadlineCell, FaultPolicy, FaultTolerantBackend, WatchGuard, Watchdog};
 pub use jacobi::{
     ChunkScheduler, GsJacobiStats, InitStrategy, JacobiConfig, JacobiStats, WindowStats,
 };

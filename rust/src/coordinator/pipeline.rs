@@ -80,16 +80,20 @@
 //! occupancy reads `0..=N` and `sjd_stage_wait` pools every worker's
 //! queue waits.
 
-use super::batcher::{Batcher, Slot};
+use super::batcher::{Batcher, Slot, WORKER_FAILED_MSG};
+use super::fault::{
+    panic_msg, DeadlineCell, FaultPolicy, FaultTolerantBackend, Watchdog, WATCHDOG_FIRED_MSG,
+};
 use super::jacobi::InitStrategy;
 use super::policy::{BlockDecode, DecodePolicy, OverloadGovernor};
 use super::sampler::{covering_bucket, BlockTrace, SampleOptions, SampleOutput, SamplerSet};
 use super::state::slot_composition_seed;
 use crate::metrics::{Counter, Histogram, Registry};
-use crate::runtime::{Backend, HostTensor, Value};
+use crate::runtime::{classify, Backend, FaultClass, HostTensor, Value};
 use crate::tensor::Tensor;
 use anyhow::Result;
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -144,11 +148,21 @@ pub struct PipelineConfig {
     /// thread owns its own cache, so the effective pipeline-wide bound is
     /// `stage_threads × warm_cap` entries.
     pub warm_cap: usize,
+    /// Fault-tolerance policy: each stage's backend is wrapped in a
+    /// [`FaultTolerantBackend`] (transient retry, per-artifact quarantine);
+    /// the continuous path additionally budgets retries against the wave's
+    /// earliest slot deadline and arms the hung-dispatch watchdog per span.
+    pub fault: FaultPolicy,
 }
 
 impl Default for PipelineConfig {
     fn default() -> Self {
-        PipelineConfig { depth: 2, stage_threads: 0, warm_cap: 0 }
+        PipelineConfig {
+            depth: 2,
+            stage_threads: 0,
+            warm_cap: 0,
+            fault: FaultPolicy::default(),
+        }
     }
 }
 
@@ -305,6 +319,10 @@ pub struct DecodePipeline {
     entry: Arc<StageQueue<InFlight>>,
     gate: Arc<DepthGate>,
     threads: Vec<JoinHandle<()>>,
+    /// Set by a stage that panicked or lost its device: the pipeline can no
+    /// longer make progress and must be torn down + respawned (the feeding
+    /// worker checks this and exits `DeviceLost`).
+    lost: Arc<AtomicBool>,
     /// Bucket sizes the stage samplers serve, ascending.
     pub buckets: Vec<usize>,
     /// Flow blocks `K` (= number of stages in the graph).
@@ -324,6 +342,10 @@ struct StageArgs {
     registry: Registry,
     /// Warm-start cache bound for this stage's samplers (0 = default).
     warm_cap: usize,
+    /// Retry/quarantine policy for this stage's backend wrapper.
+    fault: FaultPolicy,
+    /// Shared lost-pipeline flag (see [`DecodePipeline::lost`]).
+    lost: Arc<AtomicBool>,
     ready: std::sync::mpsc::Sender<Result<Vec<usize>>>,
 }
 
@@ -365,6 +387,7 @@ impl DecodePipeline {
         let queues: Vec<Arc<StageQueue<InFlight>>> =
             spans.iter().map(|_| StageQueue::new(1)).collect();
         let gate = DepthGate::new(cfg.depth);
+        let lost = Arc::new(AtomicBool::new(false));
         let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<Vec<usize>>>();
 
         let mut threads = Vec::with_capacity(spans.len());
@@ -379,6 +402,8 @@ impl DecodePipeline {
                 gate: gate.clone(),
                 registry: registry.clone(),
                 warm_cap: cfg.warm_cap,
+                fault: cfg.fault.clone(),
+                lost: lost.clone(),
                 ready: ready_tx.clone(),
             };
             let factory = factory.clone();
@@ -411,7 +436,21 @@ impl DecodePipeline {
             }
             return Err(e);
         }
-        Ok(DecodePipeline { entry: queues[0].clone(), gate, threads, buckets: bucket_set, blocks })
+        Ok(DecodePipeline {
+            entry: queues[0].clone(),
+            gate,
+            threads,
+            lost,
+            buckets: bucket_set,
+            blocks,
+        })
+    }
+
+    /// Whether a stage panicked or lost its device: the pipeline must be
+    /// shut down and respawned (its queues are already closing; in-flight
+    /// batches resolve `Err` on their way out).
+    pub fn lost(&self) -> bool {
+        self.lost.load(Ordering::SeqCst)
     }
 
     /// Submit a batch, blocking while [`PipelineConfig::depth`] batches are
@@ -471,9 +510,13 @@ where
     B: Backend,
     F: Fn(usize) -> Result<B>,
 {
-    let StageArgs { idx, span, model, buckets, rx, tx, gate, registry, warm_cap, ready } = args;
+    let StageArgs { idx, span, model, buckets, rx, tx, gate, registry, warm_cap, fault, lost, ready } =
+        args;
+    // Stage backends get the same fault-tolerant wrapper as monolithic
+    // workers: transient retries and per-artifact quarantine (the stage's
+    // samplers consult the wrapper's `has_artifact` live per block decode).
     let engine = match factory(idx) {
-        Ok(e) => e,
+        Ok(e) => FaultTolerantBackend::new(e, fault.clone(), &registry),
         Err(e) => {
             let _ = ready.send(Err(e));
             return;
@@ -491,6 +534,7 @@ where
 
     let occupancy = registry.gauge(&format!("sjd_stage_{idx}_occupancy"));
     let stage_wait = registry.histogram("sjd_stage_wait");
+    let m_panics = registry.counter("sjd_worker_panics");
 
     while let Some(mut item) = rx.recv() {
         let waited = item.enqueued.elapsed();
@@ -501,15 +545,34 @@ where
             item.queued += waited;
         }
         occupancy.add(1);
-        let outcome = run_span(&set, span, &mut item);
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_span(&set, span, &mut item)
+        }));
         occupancy.add(-1);
         match outcome {
-            Err(msg) => {
-                // Fail the batch here; downstream stages never see it.
-                (item.done)(Err(msg));
+            Err(p) => {
+                // A panic mid-decode means the engine state is suspect:
+                // fail the batch, mark the pipeline lost, and exit so the
+                // feeding worker tears the whole pipeline down for respawn.
+                m_panics.inc();
+                log::error!("stage {idx} panicked mid-decode: {}", panic_msg(&p));
+                (item.done)(Err(format!("{WORKER_FAILED_MSG}: stage {idx} panicked")));
                 gate.release();
+                lost.store(true, Ordering::SeqCst);
+                rx.close();
+                break;
             }
-            Ok(()) => match &tx {
+            Ok(Err(fail)) => {
+                // Fail the batch here; downstream stages never see it.
+                (item.done)(Err(fail.msg));
+                gate.release();
+                if fail.device_lost {
+                    lost.store(true, Ordering::SeqCst);
+                    rx.close();
+                    break;
+                }
+            }
+            Ok(Ok(())) => match &tx {
                 Some(tx) => {
                     item.enqueued = Instant::now();
                     if let Err(item) = tx.send(item) {
@@ -529,6 +592,23 @@ where
     }
 }
 
+/// A failed span: the error message for the batch's slots, plus whether
+/// the failure was `DeviceLost`-classified — the stage must then shut down
+/// so the whole pipeline is respawned with fresh engines.
+struct SpanFail {
+    msg: String,
+    device_lost: bool,
+}
+
+impl SpanFail {
+    fn new(context: &str, e: &anyhow::Error) -> Self {
+        SpanFail {
+            msg: format!("{context}: {e:#}"),
+            device_lost: classify(e) == FaultClass::DeviceLost,
+        }
+    }
+}
+
 /// Run one span of decode positions over one batch. Stage 0 draws each
 /// slot's prior from that slot's own seed stream (per-slot RNG — batch
 /// position can never change a request's image); every span chains
@@ -538,7 +618,7 @@ fn run_span<B: Backend>(
     set: &SamplerSet<'_, B>,
     (lo, hi): (usize, usize),
     item: &mut InFlight,
-) -> std::result::Result<(), String> {
+) -> std::result::Result<(), SpanFail> {
     let sampler = set.select(item.seeds.len());
     if lo == 0 {
         item.started = Some(Instant::now());
@@ -548,7 +628,7 @@ fn run_span<B: Backend>(
     for pos in lo..hi {
         let (z_next, trace) = sampler
             .decode_block_at(pos, &z, &item.opts)
-            .map_err(|e| format!("decode failed at position {pos}: {e:#}"))?;
+            .map_err(|e| SpanFail::new(&format!("decode failed at position {pos}"), &e))?;
         item.decode_wall += trace.wall;
         item.traces.push(trace);
         z = z_next;
@@ -556,7 +636,7 @@ fn run_span<B: Backend>(
     let host = sampler
         .engine()
         .to_host(z)
-        .map_err(|e| format!("stage handoff sync failed: {e:#}"))?;
+        .map_err(|e| SpanFail::new("stage handoff sync failed", &e))?;
     item.tokens = Some(host);
     Ok(())
 }
@@ -706,6 +786,14 @@ impl ContMetrics {
 /// this over randomized join/leave/migrate schedules).
 pub struct ContinuousPipeline {
     threads: Vec<JoinHandle<()>>,
+    /// Set by a stage that panicked, lost its device, or hung past the
+    /// watchdog: stages cascade their queue closes and exit, `join`
+    /// returns, and the supervising worker respawns the whole pipeline.
+    lost: Arc<AtomicBool>,
+    /// Shared hung-dispatch monitor (one thread per pipeline), armed by
+    /// every stage around its decode span; `None` when the policy disables
+    /// the watchdog.
+    dog: Option<Arc<Watchdog>>,
     /// Bucket sizes the stage samplers serve, ascending.
     pub buckets: Vec<usize>,
     /// Flow blocks `K` (= number of stages in the graph).
@@ -739,6 +827,12 @@ struct ContStageArgs {
     /// it queue depth and applies its degradation ladder to each freshly
     /// formed wave; the final stage feeds it per-slot completion latency.
     governor: Option<Arc<OverloadGovernor>>,
+    /// Retry/quarantine/watchdog policy for this stage's backend wrapper.
+    fault: FaultPolicy,
+    /// Shared lost-pipeline flag (see [`ContinuousPipeline::lost_flag`]).
+    lost: Arc<AtomicBool>,
+    /// Shared hung-dispatch monitor (`None` = watchdog disabled).
+    dog: Option<Arc<Watchdog>>,
     ready: std::sync::mpsc::Sender<Result<Vec<usize>>>,
 }
 
@@ -800,6 +894,8 @@ impl ContinuousPipeline {
         // Queue i feeds stage i (stage 0 has none — it pulls the batcher).
         let queues: Vec<Arc<StageQueue<Wave>>> =
             (1..spans.len()).map(|_| StageQueue::new(CONT_QUEUE_CAP)).collect();
+        let lost = Arc::new(AtomicBool::new(false));
+        let dog = cfg.fault.watchdog.map(|_| Watchdog::new(&registry));
         let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<Vec<usize>>>();
 
         let mut threads = Vec::with_capacity(spans.len());
@@ -816,6 +912,9 @@ impl ContinuousPipeline {
                 options: options.clone(),
                 warm_cap: cfg.warm_cap,
                 governor: governor.clone(),
+                fault: cfg.fault.clone(),
+                lost: lost.clone(),
+                dog: dog.clone(),
                 ready: ready_tx.clone(),
             };
             let factory = factory.clone();
@@ -846,18 +945,44 @@ impl ContinuousPipeline {
             for t in threads.drain(..) {
                 let _ = t.join();
             }
+            if let Some(d) = &dog {
+                d.shutdown();
+            }
             return Err(e);
         }
-        Ok(ContinuousPipeline { threads, buckets: bucket_set, blocks })
+        Ok(ContinuousPipeline { threads, lost, dog, buckets: bucket_set, blocks })
     }
 
-    /// Wait for the pipeline to drain and exit (the batcher must have been
-    /// closed — stage 0 runs until `next_batch` returns `None`).
+    /// Shared lost-pipeline flag, readable after [`Self::join`] consumed the
+    /// pipeline: `true` means a stage panicked, lost its device, or hung
+    /// past the watchdog, and the supervising worker must respawn.
+    pub fn lost_flag(&self) -> Arc<AtomicBool> {
+        self.lost.clone()
+    }
+
+    /// Wait for the pipeline to drain and exit. That happens when the
+    /// batcher is closed (stage 0 runs until `next_batch` returns `None`)
+    /// — or, with the batcher still open, when a stage was lost and the
+    /// queue closes cascaded (check [`Self::lost_flag`]).
     pub fn join(mut self) {
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
+        if let Some(d) = &self.dog {
+            d.shutdown();
+        }
     }
+}
+
+/// Per-stage fault context of the continuous path: the backend wrapper's
+/// deadline cell, the shared watchdog + lost flag, and panic accounting.
+struct StageFaults {
+    idx: usize,
+    deadline: DeadlineCell,
+    dog: Option<Arc<Watchdog>>,
+    timeout: Option<Duration>,
+    lost: Arc<AtomicBool>,
+    m_panics: Arc<Counter>,
 }
 
 /// One continuous stage-executor thread (see [`ContinuousPipeline`]).
@@ -878,10 +1003,16 @@ where
         options,
         warm_cap,
         governor,
+        fault,
+        lost,
+        dog,
         ready,
     } = args;
+    // Same fault-tolerant wrapper as monolithic workers: transient retry,
+    // per-artifact quarantine (live `has_artifact` reroute), deadline-
+    // budgeted backoff through the cell below.
     let engine = match factory(idx) {
-        Ok(e) => e,
+        Ok(e) => FaultTolerantBackend::new(e, fault.clone(), &registry),
         Err(e) => {
             let _ = ready.send(Err(e));
             return;
@@ -899,10 +1030,27 @@ where
 
     let m = ContMetrics::new(&registry);
     let occupancy = registry.gauge(&format!("sjd_stage_{idx}_occupancy"));
+    let faults = StageFaults {
+        idx,
+        deadline: engine.deadline_cell(),
+        dog,
+        timeout: fault.watchdog,
+        lost,
+        m_panics: registry.counter("sjd_worker_panics"),
+    };
 
     if let Some(batcher) = batcher {
         // Stage 0: form waves from the batcher, refill, decode, forward.
         while let Some(batch) = batcher.next_batch() {
+            // A lost pipeline cannot decode this batch: fail it fast (the
+            // respawned pipeline serves whatever arrives next) and exit so
+            // `join` returns and the supervisor respawns everything.
+            if faults.lost.load(Ordering::SeqCst) {
+                for s in batch.slots {
+                    s.done.put_once(Err(format!("{WORKER_FAILED_MSG}: pipeline stage lost")));
+                }
+                break;
+            }
             let mut slots = batch.slots;
             let room = set.max_bucket().saturating_sub(slots.len());
             let extra = batcher.take_upto(room);
@@ -917,9 +1065,22 @@ where
                 continue; // everything was already cancelled or expired
             };
             occupancy.add(1);
-            let outcome = cont_decode_span(&set, span, &mut wave, &m);
+            let outcome = cont_decode_guarded(&set, span, &mut wave, &m, &faults);
             occupancy.add(-1);
-            forward_or_finish(&set, span, wave, outcome, &tx, &governor, &m);
+            match outcome {
+                Ok(()) => forward_or_finish(&set, span, wave, &tx, &governor, &m),
+                Err((msg, lost_now)) => {
+                    fail_wave(wave, &msg, &m);
+                    if lost_now {
+                        break;
+                    }
+                }
+            }
+            // A downstream stage was lost while this wave was in flight:
+            // exit now instead of waiting for the next batch to notice.
+            if faults.lost.load(Ordering::SeqCst) {
+                break;
+            }
         }
         if let Some(tx) = &tx {
             tx.close();
@@ -928,7 +1089,7 @@ where
     }
 
     let rx = rx.expect("non-zero continuous stage has an input queue");
-    while let Some(mut wave) = rx.recv() {
+    'recv: while let Some(mut wave) = rx.recv() {
         m.stage_wait.record_duration(wave.enqueued.elapsed());
         // Straggler merge: adopt waves already parked at this boundary
         // (same decode position by construction) while the union fits the
@@ -938,13 +1099,19 @@ where
                 // Doesn't fit: hand it back? The queue is FIFO and we're
                 // its only consumer — decode it next iteration instead.
                 let requeue = extra;
-                process_wave(&set, span, requeue, &tx, &governor, &m, &occupancy);
+                if !process_wave(&set, span, requeue, &tx, &governor, &m, &occupancy, &faults) {
+                    rx.close();
+                    break 'recv;
+                }
                 break;
             }
             m.merges.inc();
             merge_waves(&set, &mut wave, extra);
         }
-        process_wave(&set, span, wave, &tx, &governor, &m, &occupancy);
+        if !process_wave(&set, span, wave, &tx, &governor, &m, &occupancy, &faults) {
+            rx.close();
+            break 'recv;
+        }
     }
     if let Some(tx) = &tx {
         tx.close();
@@ -952,6 +1119,9 @@ where
 }
 
 /// Sweep + remap + decode + forward one wave through this stage's span.
+/// Returns `false` when the stage was lost (panic, device loss, or a fired
+/// watchdog) and must shut down for respawn.
+#[allow(clippy::too_many_arguments)]
 fn process_wave<B: Backend>(
     set: &SamplerSet<'_, B>,
     span: (usize, usize),
@@ -960,19 +1130,76 @@ fn process_wave<B: Backend>(
     governor: &Option<Arc<OverloadGovernor>>,
     m: &ContMetrics,
     occupancy: &Arc<crate::metrics::Gauge>,
-) {
+    faults: &StageFaults,
+) -> bool {
     match sweep_and_remap(set, &mut wave, m) {
         Err(msg) => {
             fail_wave(wave, &msg, m);
-            return;
+            return true;
         }
-        Ok(false) => return, // every slot left; nothing to decode
+        Ok(false) => return true, // every slot left; nothing to decode
         Ok(true) => {}
     }
     occupancy.add(1);
-    let outcome = cont_decode_span(set, span, &mut wave, m);
+    let outcome = cont_decode_guarded(set, span, &mut wave, m, faults);
     occupancy.add(-1);
-    forward_or_finish(set, span, wave, outcome, tx, governor, m);
+    match outcome {
+        Ok(()) => {
+            forward_or_finish(set, span, wave, tx, governor, m);
+            true
+        }
+        Err((msg, lost_now)) => {
+            fail_wave(wave, &msg, m);
+            !lost_now
+        }
+    }
+}
+
+/// Decode one span under the stage's fault context: publish the wave's
+/// earliest slot deadline (the retry layer budgets backoff against it), arm
+/// the hung-dispatch watchdog with the wave's completion channels, and
+/// catch panics. `Err((msg, lost))` fails the wave; `lost` additionally
+/// marks the pipeline lost so the worker supervisor respawns it.
+fn cont_decode_guarded<B: Backend>(
+    set: &SamplerSet<'_, B>,
+    span: (usize, usize),
+    wave: &mut Wave,
+    m: &ContMetrics,
+    f: &StageFaults,
+) -> std::result::Result<(), (String, bool)> {
+    f.deadline.set(wave.slots.iter().filter_map(|ls| ls.slot.deadline).min());
+    let guard = f.dog.as_ref().zip(f.timeout).map(|(d, t)| {
+        d.guard(t, wave.slots.iter().map(|ls| ls.slot.done.clone()).collect())
+    });
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        cont_decode_span(set, span, wave, m)
+    }));
+    f.deadline.clear();
+    let fired = guard.as_ref().is_some_and(|g| g.fired());
+    drop(guard);
+    match outcome {
+        Err(p) => {
+            f.m_panics.inc();
+            let msg = panic_msg(&p);
+            log::error!("continuous stage {} panicked mid-decode: {msg}", f.idx);
+            f.lost.store(true, Ordering::SeqCst);
+            Err((format!("{WORKER_FAILED_MSG}: stage {} panicked", f.idx), true))
+        }
+        Ok(_) if fired => {
+            // The monitor already resolved the wave's slots; a result this
+            // late is untrustworthy — replace the engine.
+            log::error!("continuous stage {} dispatch hung past the watchdog", f.idx);
+            f.lost.store(true, Ordering::SeqCst);
+            Err((format!("{WATCHDOG_FIRED_MSG} (dispatch hung)"), true))
+        }
+        Ok(Err(fail)) => {
+            if fail.device_lost {
+                f.lost.store(true, Ordering::SeqCst);
+            }
+            Err((fail.msg, fail.device_lost))
+        }
+        Ok(Ok(())) => Ok(()),
+    }
 }
 
 /// Stage-0 wave formation: sweep slots already cancelled or expired in the
@@ -990,7 +1217,7 @@ fn form_wave<B: Backend>(
     for s in slots {
         if s.cancelled() {
             m.cancelled.inc();
-            s.done.put(Err("request cancelled (client disconnected)".into()));
+            s.done.put_once(Err("request cancelled (client disconnected)".into()));
         } else if s.expired() {
             m.deadline_expired.inc();
             s.resolve_expired("wave formation");
@@ -1068,7 +1295,7 @@ fn sweep_and_remap<B: Backend>(
     for (i, ls) in wave.slots.drain(..).enumerate() {
         if ls.slot.cancelled() {
             m.cancelled.inc();
-            ls.slot.done.put(Err("request cancelled (client disconnected)".into()));
+            ls.slot.done.put_once(Err("request cancelled (client disconnected)".into()));
         } else if ls.slot.expired() {
             m.deadline_expired.inc();
             ls.slot.resolve_expired("block boundary");
@@ -1124,13 +1351,13 @@ fn cont_decode_span<B: Backend>(
     (lo, hi): (usize, usize),
     wave: &mut Wave,
     m: &ContMetrics,
-) -> std::result::Result<(), String> {
+) -> std::result::Result<(), SpanFail> {
     let sampler = set.select(wave.slots.len());
     let mut z = Value::Host(wave.tokens.clone());
     for pos in lo..hi {
         let (z_next, trace) = sampler
             .decode_block_at(pos, &z, &wave.opts)
-            .map_err(|e| format!("decode failed at position {pos}: {e:#}"))?;
+            .map_err(|e| SpanFail::new(&format!("decode failed at position {pos}"), &e))?;
         m.padded_blocks.add((wave.bucket - wave.slots.len().min(wave.bucket)) as u64);
         m.block_iters.record(trace.steps as u64);
         m.host_syncs.record(trace.host_syncs as u64);
@@ -1142,7 +1369,7 @@ fn cont_decode_span<B: Backend>(
     wave.tokens = sampler
         .engine()
         .to_host(z)
-        .map_err(|e| format!("stage handoff sync failed: {e:#}"))?;
+        .map_err(|e| SpanFail::new("stage handoff sync failed", &e))?;
     Ok(())
 }
 
@@ -1151,15 +1378,10 @@ fn forward_or_finish<B: Backend>(
     set: &SamplerSet<'_, B>,
     _span: (usize, usize),
     mut wave: Wave,
-    outcome: std::result::Result<(), String>,
     tx: &Option<Arc<StageQueue<Wave>>>,
     governor: &Option<Arc<OverloadGovernor>>,
     m: &ContMetrics,
 ) {
-    if let Err(msg) = outcome {
-        fail_wave(wave, &msg, m);
-        return;
-    }
     match tx {
         Some(tx) => {
             wave.enqueued = Instant::now();
@@ -1181,7 +1403,7 @@ fn forward_or_finish<B: Backend>(
                             gov.observe_latency(latency);
                         }
                         m.images.inc();
-                        ls.slot.done.put(Ok(images[i].clone()));
+                        ls.slot.done.put_once(Ok(images[i].clone()));
                     }
                     m.batches.inc();
                 }
@@ -1192,10 +1414,12 @@ fn forward_or_finish<B: Backend>(
 }
 
 /// Complete every slot of a failed wave with its own copy of the error.
+/// `put_once` keeps this exactly-once against the watchdog having already
+/// resolved the wave (the slot keeps whichever error landed first).
 fn fail_wave(wave: Wave, msg: &str, m: &ContMetrics) {
     m.errors.inc();
     for ls in wave.slots {
-        ls.slot.done.put(Err(msg.to_string()));
+        ls.slot.done.put_once(Err(msg.to_string()));
     }
 }
 

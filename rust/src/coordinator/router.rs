@@ -66,6 +66,7 @@
 //! per bucket when realized savings go negative.
 
 use super::batcher::{Batcher, Slot};
+use super::fault::{panic_msg, FaultPolicy, FaultTolerantBackend, Watchdog};
 use super::jacobi::InitStrategy;
 use super::pipeline::{
     ContinuousPipeline, DecodePipeline, PipelineConfig, PipelineJob, PipelineResult,
@@ -73,9 +74,10 @@ use super::pipeline::{
 use super::policy::{OverloadGovernor, PolicyTuner};
 use super::sampler::{SampleOptions, SamplerSet};
 use crate::metrics::{Counter, Gauge, Histogram, Registry};
-use crate::runtime::{Backend, Engine, Manifest};
+use crate::runtime::{classify, Backend, Engine, FaultClass, Manifest};
 use anyhow::Result;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -122,6 +124,45 @@ pub struct RouterConfig {
     /// 0, so the healthy path stays bit-exact). Composes with the tuner:
     /// the ladder coarsens whatever policy the tuner picked.
     pub governor: Option<Arc<OverloadGovernor>>,
+    /// Fault-tolerance policy: every worker's backend is wrapped in a
+    /// [`FaultTolerantBackend`] (transient-fault retry with capped backoff
+    /// budgeted against slot deadlines, per-artifact quarantine breakers),
+    /// hung dispatches are failed by a per-call [`Watchdog`], and panicked
+    /// or device-lost workers are respawned with a fresh engine up to
+    /// `fault.worker_restarts` times (see the supervisor in `start_with`).
+    pub fault: FaultPolicy,
+}
+
+/// Live-vs-configured worker accounting, surfaced by `/healthz` (a degraded
+/// fleet — fewer live workers than configured — answers non-200 so load
+/// balancers can drain the replica before it wedges). `live` counts
+/// supervisor threads, so a worker mid-respawn still counts as live; only a
+/// *retired* worker (restart budget exhausted, or startup failure) drops it.
+#[derive(Clone)]
+pub struct FleetStatus {
+    configured: usize,
+    live: Arc<AtomicUsize>,
+}
+
+impl FleetStatus {
+    fn new(configured: usize) -> Self {
+        FleetStatus { configured, live: Arc::new(AtomicUsize::new(0)) }
+    }
+
+    /// Workers the router was started with.
+    pub fn configured(&self) -> usize {
+        self.configured
+    }
+
+    /// Worker supervisors currently running (== configured when healthy).
+    pub fn live(&self) -> usize {
+        self.live.load(Ordering::SeqCst)
+    }
+
+    /// True when at least one worker has been permanently lost.
+    pub fn degraded(&self) -> bool {
+        self.live() < self.configured
+    }
 }
 
 /// Running worker fleet.
@@ -129,6 +170,22 @@ pub struct Router {
     pub batcher: Batcher,
     pub registry: Registry,
     workers: Vec<JoinHandle<()>>,
+    fleet: FleetStatus,
+}
+
+/// Why a worker body returned. The supervisor loop in [`Router::start_with`]
+/// maps these (plus caught panics) to respawn-or-retire decisions.
+enum WorkerExit {
+    /// The closed queue drained — normal shutdown.
+    Drained,
+    /// Engine/sampler construction failed. On first startup the error was
+    /// reported through the readiness channel (and `start_with` fails); on a
+    /// respawn it consumes restart budget like any other loss.
+    StartupFailed,
+    /// The engine is gone or untrustworthy (a `DeviceLost`-classified decode
+    /// error, a fired watchdog, or a lost pipeline stage): every in-flight
+    /// slot has been resolved `Err`; respawn with a fresh engine.
+    DeviceLost,
 }
 
 impl Router {
@@ -163,6 +220,7 @@ impl Router {
     {
         let mut workers = Vec::with_capacity(cfg.workers);
         let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<()>>();
+        let fleet = FleetStatus::new(cfg.workers.max(1));
 
         let refill = cfg.refill;
         let pipelined = cfg.pipeline_depth >= 2;
@@ -172,14 +230,63 @@ impl Router {
             let registry = registry.clone();
             let ready = ready_tx.clone();
             let factory = factory.clone();
+            let live = fleet.live.clone();
+            // Supervisor loop: run the worker body under `catch_unwind`; a
+            // panic or a DeviceLost exit respawns the body — the factory
+            // runs again inside this same thread, building a fresh engine —
+            // up to `fault.worker_restarts` times. In-flight slots of the
+            // lost incarnation are already resolved `Err` (the completion
+            // guard on `Slot` fires during unwind), so a respawn never
+            // strands a waiter. Readiness is reported exactly once, from the
+            // first incarnation.
             let body = move || {
-                if refill {
-                    worker_continuous(widx, cfg, batcher, registry, ready, factory)
-                } else if pipelined {
-                    worker_pipelined(widx, cfg, batcher, registry, ready, factory)
-                } else {
-                    worker_main(widx, cfg, batcher, registry, ready, factory)
+                live.fetch_add(1, Ordering::SeqCst);
+                let m_panics = registry.counter("sjd_worker_panics");
+                let m_restarts = registry.counter("sjd_worker_restarts");
+                let mut ready = Some(ready);
+                let mut restarts_left = cfg.fault.worker_restarts;
+                let mut first = true;
+                loop {
+                    let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        if refill {
+                            worker_continuous(widx, &cfg, &batcher, &registry, &mut ready, &factory)
+                        } else if pipelined {
+                            worker_pipelined(widx, &cfg, &batcher, &registry, &mut ready, &factory)
+                        } else {
+                            worker_main(widx, &cfg, &batcher, &registry, &mut ready, &factory)
+                        }
+                    }));
+                    let exit = match run {
+                        Ok(exit) => exit,
+                        Err(p) => {
+                            m_panics.inc();
+                            log::error!("worker {widx} panicked mid-decode: {}", panic_msg(&p));
+                            WorkerExit::DeviceLost
+                        }
+                    };
+                    match exit {
+                        WorkerExit::Drained => break,
+                        // First-start failure already failed `start_with`
+                        // through the readiness channel; nothing to respawn.
+                        WorkerExit::StartupFailed if first => break,
+                        WorkerExit::StartupFailed | WorkerExit::DeviceLost => {
+                            if restarts_left == 0 {
+                                log::error!(
+                                    "worker {widx} retired: restart budget ({}) exhausted",
+                                    cfg.fault.worker_restarts
+                                );
+                                break;
+                            }
+                            restarts_left -= 1;
+                            m_restarts.inc();
+                            log::warn!(
+                                "worker {widx} respawning with a fresh engine ({restarts_left} restarts left)"
+                            );
+                        }
+                    }
+                    first = false;
                 }
+                live.fetch_sub(1, Ordering::SeqCst);
             };
             workers.push(
                 std::thread::Builder::new()
@@ -192,48 +299,80 @@ impl Router {
         for _ in 0..cfg.workers.max(1) {
             ready_rx.recv().expect("worker startup signal")?;
         }
-        Ok(Router { batcher, registry, workers })
+        Ok(Router { batcher, registry, workers, fleet })
+    }
+
+    /// Live-vs-configured worker accounting for `/healthz`.
+    pub fn fleet(&self) -> FleetStatus {
+        self.fleet.clone()
     }
 
     /// Stop workers: close the queue (new submissions fail fast, see
     /// [`Batcher::submit`]), let workers drain what is already queued, then
-    /// join them.
+    /// join them. A worker thread that died on an escaped panic (the
+    /// supervisor catches decode-path panics, so this is the supervisor
+    /// itself failing) is logged and counted in `sjd_worker_panics` instead
+    /// of being silently swallowed.
     pub fn shutdown(mut self) {
         self.batcher.close();
         for w in self.workers.drain(..) {
-            let _ = w.join();
+            if let Err(p) = w.join() {
+                self.registry.counter("sjd_worker_panics").inc();
+                log::error!("worker thread died on an escaped panic: {}", panic_msg(&p));
+            }
         }
+    }
+}
+
+
+/// Report startup failure through the (one-shot) readiness channel.
+fn ready_err(ready: &mut Option<std::sync::mpsc::Sender<Result<()>>>, e: anyhow::Error) {
+    if let Some(tx) = ready.take() {
+        let _ = tx.send(Err(e));
+    } else {
+        // Respawn startup failure: `start_with` returned long ago; the
+        // supervisor's restart budget decides what happens next.
+        log::error!("worker respawn startup failed: {e:#}");
     }
 }
 
 fn worker_main<B, F>(
     widx: usize,
-    cfg: RouterConfig,
-    batcher: Batcher,
-    registry: Registry,
-    ready: std::sync::mpsc::Sender<Result<()>>,
-    factory: F,
-) where
+    cfg: &RouterConfig,
+    batcher: &Batcher,
+    registry: &Registry,
+    ready: &mut Option<std::sync::mpsc::Sender<Result<()>>>,
+    factory: &F,
+) -> WorkerExit
+where
     B: Backend,
     F: Fn(usize) -> Result<B>,
 {
     // Build the thread-pinned backend + per-bucket samplers; report readiness.
+    // The engine is wrapped in the fault-tolerant layer: transient retries,
+    // per-artifact quarantine (its `has_artifact` is what the samplers'
+    // live `effective_block_mode` lookups consult), deadline-budgeted
+    // backoff through the shared cell below.
     let engine = match factory(widx) {
-        Ok(e) => e,
+        Ok(e) => FaultTolerantBackend::new(e, cfg.fault.clone(), registry),
         Err(e) => {
-            let _ = ready.send(Err(e));
-            return;
+            ready_err(ready, e);
+            return WorkerExit::StartupFailed;
         }
     };
+    let deadline = engine.deadline_cell();
     let set = match SamplerSet::new(&engine, &cfg.model, &cfg.buckets) {
         Ok(s) => s,
         Err(e) => {
-            let _ = ready.send(Err(e));
-            return;
+            ready_err(ready, e);
+            return WorkerExit::StartupFailed;
         }
     };
     set.set_warm_cap(cfg.warm_cap);
-    let _ = ready.send(Ok(()));
+    if let Some(tx) = ready.take() {
+        let _ = tx.send(Ok(()));
+    }
+    let dog = cfg.fault.watchdog.map(|_| Watchdog::new(registry));
 
     let lat = registry.histogram("sjd_request_latency");
     let queue_wait = registry.histogram("sjd_queue_wait");
@@ -251,7 +390,10 @@ fn worker_main<B, F>(
     let deadline_expired = registry.counter("sjd_deadline_expired");
 
     // Workers exit when the closed queue drains (`next_batch` → None), so a
-    // shutdown never abandons an accepted slot.
+    // shutdown never abandons an accepted slot. The loop lives in an
+    // immediately-invoked closure so every exit path (drain, watchdog fire,
+    // device loss) funnels through the single watchdog teardown below.
+    let exit = (|| {
     while let Some(batch) = batcher.next_batch() {
         inflight.add(1);
         batch_fill.record(batch.slots.len() as u64);
@@ -307,9 +449,27 @@ fn worker_main<B, F>(
                 options = gov.apply(&options);
             }
             let t_decode = Instant::now();
+            // Publish the chunk's earliest deadline (the retry layer budgets
+            // backoff against it) and arm the hung-dispatch watchdog with
+            // the chunk's completion channels.
+            deadline.set(chunk.iter().filter_map(|s| s.deadline).min());
+            let guard = dog.as_ref().zip(cfg.fault.watchdog).map(|(d, t)| {
+                d.guard(t, chunk.iter().map(|s| s.done.clone()).collect())
+            });
             let decoded = sampler
                 .decode_tokens(sampler.sample_prior_slots(&seeds), &options)
                 .and_then(|out| Ok((sampler.unpatchify(&out.tokens)?, out)));
+            deadline.clear();
+            if guard.as_ref().is_some_and(|g| g.fired()) {
+                // The monitor already resolved every slot of this chunk
+                // `Err`; a result arriving this late is untrustworthy, so
+                // discard it and hand the engine back for replacement.
+                errors.inc();
+                log::error!("worker {widx} dispatch hung past the watchdog; respawning");
+                inflight.add(-1);
+                return WorkerExit::DeviceLost;
+            }
+            drop(guard);
             match decoded {
                 Ok((imgs, trace)) => {
                     decode_time.record_duration(t_decode.elapsed());
@@ -323,21 +483,32 @@ fn worker_main<B, F>(
                         host_syncs.record(t.host_syncs as u64);
                     }
                     // Padded images (if any) fall off the end of the zip.
+                    // `put_once` keeps resolution exactly-once against the
+                    // watchdog/deadline sweeps racing this completion.
                     for (slot, img) in chunk.iter().zip(imgs.into_iter()) {
                         lat.record_duration(slot.enqueued.elapsed());
-                        slot.done.put(Ok(img));
+                        slot.done.put_once(Ok(img));
                         images.inc();
                     }
                     batches.inc();
                 }
                 Err(e) => {
                     errors.inc();
+                    let lost = classify(&e) == FaultClass::DeviceLost;
                     log::error!("worker {widx} sample failed: {e:#}");
                     // Complete slots with the error so clients get a 500
                     // instead of hanging (or a silently-black 200).
                     let msg = format!("decode failed: {e:#}");
                     for slot in &chunk {
-                        slot.done.put(Err(msg.clone()));
+                        slot.done.put_once(Err(msg.clone()));
+                    }
+                    if lost {
+                        // The device is gone: stop pulling work on this
+                        // engine and let the supervisor respawn it. Slots
+                        // still in `slots` resolve `Err` through their
+                        // completion guard when they drop here.
+                        inflight.add(-1);
+                        return WorkerExit::DeviceLost;
                     }
                 }
             }
@@ -350,6 +521,12 @@ fn worker_main<B, F>(
         }
         inflight.add(-1);
     }
+    WorkerExit::Drained
+    })();
+    if let Some(d) = &dog {
+        d.shutdown();
+    }
+    exit
 }
 
 /// Pipelined worker (depth ≥ 2): a feeder loop over a stage-graph
@@ -360,12 +537,13 @@ fn worker_main<B, F>(
 /// batches while earlier ones are still mid-decode.
 fn worker_pipelined<B, F>(
     widx: usize,
-    cfg: RouterConfig,
-    batcher: Batcher,
-    registry: Registry,
-    ready: std::sync::mpsc::Sender<Result<()>>,
-    factory: F,
-) where
+    cfg: &RouterConfig,
+    batcher: &Batcher,
+    registry: &Registry,
+    ready: &mut Option<std::sync::mpsc::Sender<Result<()>>>,
+    factory: &F,
+) -> WorkerExit
+where
     B: Backend,
     F: Fn(usize) -> Result<B> + Send + Clone + 'static,
 {
@@ -379,6 +557,7 @@ fn worker_pipelined<B, F>(
         depth: cfg.pipeline_depth,
         stage_threads: cfg.stage_threads,
         warm_cap: cfg.warm_cap,
+        fault: cfg.fault.clone(),
     };
     let pipeline = match DecodePipeline::start(
         &cfg.model,
@@ -389,11 +568,13 @@ fn worker_pipelined<B, F>(
     ) {
         Ok(p) => p,
         Err(e) => {
-            let _ = ready.send(Err(e));
-            return;
+            ready_err(ready, e);
+            return WorkerExit::StartupFailed;
         }
     };
-    let _ = ready.send(Ok(()));
+    if let Some(tx) = ready.take() {
+        let _ = tx.send(Ok(()));
+    }
 
     let queue_wait = registry.histogram("sjd_queue_wait");
     let batch_fill = registry.histogram("sjd_batch_fill");
@@ -415,7 +596,7 @@ fn worker_pipelined<B, F>(
     };
     let max_bucket = pipeline.buckets.last().copied().unwrap_or(1);
 
-    while let Some(batch) = batcher.next_batch() {
+    'feed: while let Some(batch) = batcher.next_batch() {
         batch_fill.record(batch.slots.len() as u64);
         let mut slots = batch.slots;
         while !slots.is_empty() {
@@ -472,11 +653,24 @@ fn worker_pipelined<B, F>(
                 // The completion callback owns the inflight decrement.
                 Err(job) => (job.done)(Err("pipeline shut down".into())),
             }
+            // A lost stage (panic or device loss) closed the stage queues:
+            // stop feeding and hand the whole pipeline back for respawn.
+            // Undelivered slots resolve `Err` through their completion
+            // guard when `slots` drops.
+            if pipeline.lost() {
+                break 'feed;
+            }
         }
     }
     // Drain the in-flight tail (completion callbacks fire during join),
     // then tear the stage threads down.
+    let lost = pipeline.lost();
     pipeline.shutdown();
+    if lost {
+        WorkerExit::DeviceLost
+    } else {
+        WorkerExit::Drained
+    }
 }
 
 /// Continuous-batching worker (`serve --refill`): the
@@ -487,12 +681,13 @@ fn worker_pipelined<B, F>(
 /// `take_upto` are atomic drains of the same queue.
 fn worker_continuous<B, F>(
     widx: usize,
-    cfg: RouterConfig,
-    batcher: Batcher,
-    registry: Registry,
-    ready: std::sync::mpsc::Sender<Result<()>>,
-    factory: F,
-) where
+    cfg: &RouterConfig,
+    batcher: &Batcher,
+    registry: &Registry,
+    ready: &mut Option<std::sync::mpsc::Sender<Result<()>>>,
+    factory: &F,
+) -> WorkerExit
+where
     B: Backend,
     F: Fn(usize) -> Result<B> + Send + Clone + 'static,
 {
@@ -504,6 +699,7 @@ fn worker_continuous<B, F>(
         depth: cfg.pipeline_depth.max(1),
         stage_threads: cfg.stage_threads,
         warm_cap: cfg.warm_cap,
+        fault: cfg.fault.clone(),
     };
     let mut options = cfg.options.clone();
     // Same demotion rule as `DecodePipeline::submit`: draft-then-refine
@@ -516,19 +712,31 @@ fn worker_continuous<B, F>(
         &cfg.buckets,
         pipeline_cfg,
         registry.clone(),
-        batcher,
+        batcher.clone(),
         options,
         cfg.governor.clone(),
         stage_factory,
     ) {
         Ok(p) => p,
         Err(e) => {
-            let _ = ready.send(Err(e));
-            return;
+            ready_err(ready, e);
+            return WorkerExit::StartupFailed;
         }
     };
-    let _ = ready.send(Ok(()));
+    if let Some(tx) = ready.take() {
+        let _ = tx.send(Ok(()));
+    }
+    // A lost stage (panic, device loss, or a fired watchdog) exits its loop
+    // and cascades queue closes, so `join` returns with the batcher still
+    // open — the supervisor then respawns this whole pipeline with fresh
+    // engines and serving resumes.
+    let lost = pipeline.lost_flag();
     pipeline.join();
+    if lost.load(Ordering::SeqCst) {
+        WorkerExit::DeviceLost
+    } else {
+        WorkerExit::Drained
+    }
 }
 
 /// Completion-side metric handles of the pipelined worker, resolved once
@@ -578,7 +786,7 @@ fn completion(
                 // Padded images (if any) fall off the end of the zip.
                 for (slot, img) in chunk.iter().zip(imgs.into_iter()) {
                     m.lat.record_duration(slot.enqueued.elapsed());
-                    slot.done.put(Ok(img));
+                    slot.done.put_once(Ok(img));
                     m.images.inc();
                 }
                 // Completion half of the governor feedback loop.
@@ -593,7 +801,7 @@ fn completion(
                 m.errors.inc();
                 log::error!("worker {widx} pipelined decode failed: {msg}");
                 for slot in &chunk {
-                    slot.done.put(Err(msg.clone()));
+                    slot.done.put_once(Err(msg.clone()));
                 }
             }
         }

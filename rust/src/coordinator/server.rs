@@ -3,7 +3,8 @@
 //! Routes:
 //! * `POST /generate` — body `{"n": 4, "seed": 7}` → JSON with base64 PNGs.
 //! * `GET /metrics`   — text exposition of the metrics registry.
-//! * `GET /healthz`   — liveness.
+//! * `GET /healthz`   — liveness; 503 once the worker fleet is degraded
+//!   (a worker retired after exhausting its restart budget).
 //! * `GET /policy`    — the effective decode policy as JSON: the live
 //!   [`PolicyTuner`] state under `serve --tune`, else the static configured
 //!   policy (404 when no [`PolicySource`] was wired in). `sjd policy show
@@ -58,6 +59,7 @@ use super::batcher::{
     Batcher, BatcherClosed, Priority, QueueFull, SlotHandle, SubmitOpts, DEADLINE_EXPIRED_MSG,
 };
 use super::policy::PolicyTuner;
+use super::router::FleetStatus;
 use crate::exec::ThreadPool;
 use crate::imageio::{self, Image};
 use crate::jsonx::{self, Value};
@@ -343,6 +345,11 @@ pub struct ServerConfig {
     /// `X-SJD-Deadline-Ms` header (`serve --default-deadline`); `None`
     /// leaves headerless requests deadline-free.
     pub default_deadline: Option<Duration>,
+    /// Live/configured worker counts from `Router::fleet`. When set and the
+    /// fleet is degraded (a worker retired after exhausting its restart
+    /// budget), `/healthz` answers 503 so load balancers rotate the replica
+    /// out. `None` keeps `/healthz` unconditionally 200.
+    pub fleet: Option<FleetStatus>,
 }
 
 impl Default for ServerConfig {
@@ -353,6 +360,7 @@ impl Default for ServerConfig {
             keepalive_timeout: Duration::from_secs(5),
             policy: None,
             default_deadline: None,
+            fleet: None,
         }
     }
 }
@@ -372,6 +380,7 @@ struct ServerState {
     keepalive_timeout: Duration,
     policy: Option<PolicySource>,
     default_deadline: Option<Duration>,
+    fleet: Option<FleetStatus>,
 }
 
 /// Serving front end bound to a batcher + metrics registry.
@@ -402,6 +411,7 @@ impl Server {
                 keepalive_timeout: cfg.keepalive_timeout,
                 policy: cfg.policy,
                 default_deadline: cfg.default_deadline,
+                fleet: cfg.fleet,
             }),
             conn_pool: ThreadPool::new(cfg.conn_threads),
         }
@@ -545,7 +555,17 @@ fn handle_request(
 ) -> Result<()> {
     inner.registry.counter("sjd_http_requests").inc();
     match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/healthz") => write_response(stream, 200, "text/plain", b"ok", keep),
+        ("GET", "/healthz") => match &inner.fleet {
+            // Degraded fleet (a worker retired after exhausting its restart
+            // budget): non-200 so load balancers rotate this replica out.
+            // Mid-respawn workers still count as live — only permanent loss
+            // degrades health.
+            Some(fleet) if fleet.degraded() => {
+                let body = format!("degraded: {}/{} workers live", fleet.live(), fleet.configured());
+                write_response(stream, 503, "text/plain", body.as_bytes(), keep)
+            }
+            _ => write_response(stream, 200, "text/plain", b"ok", keep),
+        },
         ("GET", "/metrics") => {
             let text = inner.registry.render_text();
             write_response(stream, 200, "text/plain", text.as_bytes(), keep)

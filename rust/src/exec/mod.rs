@@ -124,8 +124,20 @@ impl Drop for ThreadPool {
 
 /// One-shot result slot: a worker fills it, the requester blocks on `wait`.
 /// (std::sync::mpsc oneshot with a friendlier API and timeout support.)
+///
+/// Waiters *take* the value, so an empty slot cannot distinguish "never
+/// produced" from "already consumed" — the separate `filled` flag records
+/// whether a value was EVER put, which is what completion guards and
+/// [`put_once`](OneShot::put_once) key on for exactly-once resolution.
 pub struct OneShot<T> {
-    inner: Arc<(Mutex<Option<T>>, Condvar)>,
+    inner: Arc<(Mutex<OneShotState<T>>, Condvar)>,
+}
+
+struct OneShotState<T> {
+    value: Option<T>,
+    /// True once any `put`/`put_once` has run, even after `wait` consumed
+    /// the value.
+    filled: bool,
 }
 
 impl<T> Clone for OneShot<T> {
@@ -142,20 +154,46 @@ impl<T> Default for OneShot<T> {
 
 impl<T> OneShot<T> {
     pub fn new() -> Self {
-        OneShot { inner: Arc::new((Mutex::new(None), Condvar::new())) }
+        OneShot {
+            inner: Arc::new((Mutex::new(OneShotState { value: None, filled: false }), Condvar::new())),
+        }
     }
 
     pub fn put(&self, v: T) {
         let (m, cv) = &*self.inner;
-        *m.lock().unwrap() = Some(v);
+        let mut g = m.lock().unwrap();
+        g.value = Some(v);
+        g.filled = true;
+        drop(g);
         cv.notify_all();
+    }
+
+    /// Fill the slot only if nothing was ever put before; returns whether
+    /// this call won. Concurrent resolvers (worker, watchdog, completion
+    /// guard) race through this so a slot resolves exactly once.
+    pub fn put_once(&self, v: T) -> bool {
+        let (m, cv) = &*self.inner;
+        let mut g = m.lock().unwrap();
+        if g.filled {
+            return false;
+        }
+        g.value = Some(v);
+        g.filled = true;
+        drop(g);
+        cv.notify_all();
+        true
+    }
+
+    /// Whether a value was ever put (true even after a waiter consumed it).
+    pub fn filled(&self) -> bool {
+        self.inner.0.lock().unwrap().filled
     }
 
     pub fn wait(&self) -> T {
         let (m, cv) = &*self.inner;
         let mut g = m.lock().unwrap();
         loop {
-            if let Some(v) = g.take() {
+            if let Some(v) = g.value.take() {
                 return v;
             }
             g = cv.wait(g).unwrap();
@@ -167,7 +205,7 @@ impl<T> OneShot<T> {
         let deadline = std::time::Instant::now() + d;
         let mut g = m.lock().unwrap();
         loop {
-            if let Some(v) = g.take() {
+            if let Some(v) = g.value.take() {
                 return Some(v);
             }
             let now = std::time::Instant::now();
@@ -177,7 +215,7 @@ impl<T> OneShot<T> {
             let (ng, timeout) = cv.wait_timeout(g, deadline - now).unwrap();
             g = ng;
             if timeout.timed_out() {
-                return g.take();
+                return g.value.take();
             }
         }
     }
@@ -235,5 +273,19 @@ mod tests {
         assert_eq!(slot.wait_timeout(std::time::Duration::from_millis(10)), None);
         slot.put(1);
         assert_eq!(slot.wait_timeout(std::time::Duration::from_millis(10)), Some(1));
+    }
+
+    #[test]
+    fn oneshot_put_once_resolves_exactly_once() {
+        let slot: OneShot<i32> = OneShot::new();
+        assert!(!slot.filled());
+        assert!(slot.put_once(1));
+        assert!(slot.filled());
+        assert!(!slot.put_once(2), "second put_once must lose");
+        assert_eq!(slot.wait(), 1);
+        // `filled` survives consumption: a completion guard checking after
+        // the waiter took the value must still see the slot as resolved.
+        assert!(slot.filled());
+        assert!(!slot.put_once(3));
     }
 }

@@ -24,6 +24,7 @@ use anyhow::{bail, Context, Result};
 use sjd::cli::Command;
 use sjd::configx::{CValue, Config};
 use sjd::coordinator::batcher::Batcher;
+use sjd::coordinator::fault::FaultPolicy;
 use sjd::coordinator::jacobi::JacobiConfig;
 use sjd::coordinator::policy::{
     calibrate, calibrate_chunks, calibrate_windows, DecodePolicy, GovernorConfig, InitPolicy,
@@ -113,6 +114,27 @@ fn cli() -> Command {
                     "max tau --elastic may degrade to under overload (0 = mode \
                      coarsening only, never raises tau; at tau 0 coarsening \
                      stays bit-exact)",
+                )
+                .opt(
+                    "retry-budget",
+                    "3",
+                    "max redispatches of a decode step after a transient backend \
+                     fault (capped exponential backoff, budgeted against the \
+                     request deadline; 0 = fail fast)",
+                )
+                .opt(
+                    "quarantine-after",
+                    "3",
+                    "consecutive poison faults on one artifact before it is \
+                     quarantined and decodes reroute through the degradation \
+                     chain (gs_fuse -> gs -> jacobi); probed for recovery",
+                )
+                .opt(
+                    "worker-restarts",
+                    "2",
+                    "times a panicked or device-lost worker is respawned with a \
+                     fresh engine before being retired; a degraded fleet turns \
+                     /healthz non-200",
                 ),
         )
         .sub(
@@ -338,6 +360,12 @@ fn cmd_serve(p: &sjd::cli::Parsed) -> Result<()> {
             tuner: tuner.clone(),
             warm_cap: init.warm_cap,
             governor,
+            fault: FaultPolicy {
+                retry_budget: p.usize("retry-budget")?,
+                quarantine_after: p.usize("quarantine-after")?,
+                worker_restarts: p.usize("worker-restarts")?,
+                ..Default::default()
+            },
         },
         batcher.clone(),
         registry.clone(),
@@ -373,6 +401,7 @@ fn cmd_serve(p: &sjd::cli::Parsed) -> Result<()> {
                 },
                 tuner: tuner.clone(),
             }),
+            fleet: Some(router.fleet()),
             ..Default::default()
         },
     );

@@ -36,6 +36,11 @@
 //! | `sjd_deadline_expired`    | counter   | slots resolved past their deadline, at any enforcement point: queue purge, wave formation, block-boundary sweep, batch formation, handler wait |
 //! | `sjd_degrade_level`       | gauge     | elastic governor: current degradation-ladder level (0 = exact configured policy) |
 //! | `sjd_elastic_tau`         | gauge     | elastic governor: currently applied τ × 1e6 (0 whenever the ladder is at or below mode coarsening) |
+//! | `sjd_backend_retries`     | counter   | fault-tolerant backend: dispatches re-driven after a transient fault (capped backoff, budgeted against the wave's earliest deadline) |
+//! | `sjd_artifact_quarantined` | counter  | fault-tolerant backend: artifact circuit breakers tripped by consecutive poison faults (decodes reroute via the degradation chain until a probe heals the artifact) |
+//! | `sjd_watchdog_fired`      | counter   | per-dispatch watchdog: hung dispatches whose slots were failed over; the worker incarnation is retired like a device loss |
+//! | `sjd_worker_panics`       | counter   | router supervisor: worker bodies that panicked (in-flight slots resolve `Err` exactly once via the slot-drop completion guard) |
+//! | `sjd_worker_restarts`     | counter   | router supervisor: panicked/device-lost workers respawned with a fresh engine; past `--worker-restarts` the fleet degrades and `/healthz` turns 503 |
 
 mod histogram;
 mod registry;

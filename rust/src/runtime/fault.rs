@@ -1,0 +1,137 @@
+//! Typed fault taxonomy for backend execution errors.
+//!
+//! Every failure of [`Backend::call_v`](super::Backend::call_v) or a
+//! transfer (`to_device`/`to_host`) falls into one of three recovery
+//! classes, carried through `anyhow` context chains as a typed [`Fault`]
+//! marker (same downcast pattern as the batcher's `QueueFull`):
+//!
+//! | class | meaning | recovery |
+//! |-------|---------|----------|
+//! | [`Transient`](FaultClass::Transient) | momentary glitch (device busy, spurious transfer failure) — the same call can succeed | retry with capped exponential backoff, budgeted against the slot deadline |
+//! | [`DeviceLost`](FaultClass::DeviceLost) | the executing device/engine is gone — *no* call on this engine can succeed | fail the wave, respawn the worker with a fresh `Engine` |
+//! | [`Poison`](FaultClass::Poison) | deterministic failure pinned to one artifact (miscompiled program, bad lowering) — retrying reproduces it | count against the artifact's circuit breaker; quarantine reroutes through the degradation chain |
+//!
+//! **Unmarked errors classify as Poison.** An error nobody tagged is by
+//! definition not known to be retryable, and treating it as deterministic
+//! is the safe default: no retry storm, and repeated failures of one
+//! artifact trip its breaker instead of looping forever. Producers that
+//! *know* a failure is momentary or fatal-to-the-engine must say so by
+//! attaching a marker via [`Fault::transient`] / [`Fault::device_lost`].
+//!
+//! Classification looks through `anyhow` context chains (`classify` walks
+//! the chain), so wrapping a marked error in `.context(..)` preserves its
+//! class — the same property the server relies on for `QueueFull` → 429.
+
+use std::fmt;
+
+/// Recovery class of a backend execution fault. See the [module
+/// docs](self) for the taxonomy table.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultClass {
+    /// Momentary; the identical call may succeed on retry.
+    Transient,
+    /// The engine/device is unusable; only a fresh engine can recover.
+    DeviceLost,
+    /// Deterministic, pinned to the artifact; retrying reproduces it.
+    Poison,
+}
+
+impl fmt::Display for FaultClass {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FaultClass::Transient => write!(f, "transient"),
+            FaultClass::DeviceLost => write!(f, "device-lost"),
+            FaultClass::Poison => write!(f, "poison"),
+        }
+    }
+}
+
+/// Typed marker error carrying a [`FaultClass`] through `anyhow` chains.
+///
+/// Constructed via [`Fault::transient`] / [`Fault::device_lost`] /
+/// [`Fault::poison`] and recovered with [`classify`]; the `artifact` names
+/// the program whose dispatch failed so circuit breakers key on it even
+/// after the error crossed several context frames.
+#[derive(Clone, Debug)]
+pub struct Fault {
+    pub class: FaultClass,
+    /// Artifact whose dispatch produced the fault (breaker key).
+    pub artifact: String,
+}
+
+impl Fault {
+    pub fn new(class: FaultClass, artifact: impl Into<String>) -> anyhow::Error {
+        anyhow::Error::new(Fault { class, artifact: artifact.into() })
+    }
+
+    /// A retryable fault of `artifact`.
+    pub fn transient(artifact: impl Into<String>) -> anyhow::Error {
+        Self::new(FaultClass::Transient, artifact)
+    }
+
+    /// A fault that invalidates the whole engine.
+    pub fn device_lost(artifact: impl Into<String>) -> anyhow::Error {
+        Self::new(FaultClass::DeviceLost, artifact)
+    }
+
+    /// A deterministic per-artifact fault.
+    pub fn poison(artifact: impl Into<String>) -> anyhow::Error {
+        Self::new(FaultClass::Poison, artifact)
+    }
+}
+
+impl fmt::Display for Fault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} fault in artifact '{}'", self.class, self.artifact)
+    }
+}
+
+impl std::error::Error for Fault {}
+
+/// The fault class of an error: the marker's class if one is anywhere in
+/// the `anyhow` chain, else [`FaultClass::Poison`] (see module docs for
+/// why unmarked defaults to the non-retryable class).
+pub fn classify(e: &anyhow::Error) -> FaultClass {
+    match e.downcast_ref::<Fault>() {
+        Some(f) => f.class,
+        None => FaultClass::Poison,
+    }
+}
+
+/// The artifact a marked fault is pinned to, when the chain carries one.
+pub fn fault_artifact(e: &anyhow::Error) -> Option<&str> {
+    e.downcast_ref::<Fault>().map(|f| f.artifact.as_str())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use anyhow::Context;
+
+    #[test]
+    fn classify_reads_marker_through_context_chain() {
+        let e = Fault::transient("tf10_block_jstep_b4").context("dispatching block 3");
+        assert_eq!(classify(&e), FaultClass::Transient);
+        assert_eq!(fault_artifact(&e), Some("tf10_block_jstep_b4"));
+
+        let e = Fault::device_lost("tf10_reverse_b1")
+            .context("decode")
+            .context("wave 7");
+        assert_eq!(classify(&e), FaultClass::DeviceLost);
+    }
+
+    #[test]
+    fn unmarked_errors_classify_poison() {
+        let e = anyhow::anyhow!("mock: artifact 'x' is not lowered");
+        assert_eq!(classify(&e), FaultClass::Poison);
+        assert_eq!(fault_artifact(&e), None);
+    }
+
+    #[test]
+    fn display_names_class_and_artifact() {
+        let e = Fault::poison("m_seqstep_b2");
+        let s = format!("{e}");
+        assert!(s.contains("poison"), "{s}");
+        assert!(s.contains("m_seqstep_b2"), "{s}");
+    }
+}

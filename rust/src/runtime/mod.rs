@@ -55,11 +55,13 @@
 //! working unchanged.
 
 mod engine;
+mod fault;
 mod host;
 mod manifest;
 mod value;
 
 pub use engine::{CallStats, Engine, TransferStats};
+pub use fault::{classify, fault_artifact, Fault, FaultClass};
 pub use host::HostTensor;
 pub use manifest::{
     ArtifactMeta, DType, DatasetMeta, Manifest, ModelMeta, TensorSpec, OPTIONAL_DECODE_ROLES,

@@ -1,0 +1,314 @@
+//! Deterministic, seedable fault injection over the mock serving backend.
+//!
+//! A [`FaultPlan`] is an ordered list of [`FaultRule`]s — *(artifact
+//! pattern × per-artifact call-index window) → action* — evaluated by a
+//! [`FaultyBackend`] wrapping [`MockServeBackend`]. Call indices are
+//! counted **per artifact name**, so "fail the 3rd dispatch of
+//! `mock_block_jstep_b4`" is expressible and exactly reproducible; plans
+//! built by [`FaultPlan::random`] derive from the repo's seeded `Pcg64`,
+//! so every chaos soak replays from its seed. All injection happens at the
+//! `Backend::call_v` boundary — exactly where the fault-tolerant layer
+//! ([`coordinator::fault`](crate::coordinator::fault)) installs its
+//! recovery — which makes every recovery path testable without artifacts
+//! or devices.
+//!
+//! Actions mirror the taxonomy plus two things no error type reports:
+//!
+//! * [`Fail`](FaultAction::Fail) — typed [`Fault`] of any class
+//!   (fail-once / fail-N via the rule's index window).
+//! * [`Hang`](FaultAction::Hang) — sleep before delegating: a stalled
+//!   dispatch, the watchdog's prey.
+//! * [`CorruptOutput`](FaultAction::CorruptOutput) — delegate, then
+//!   NaN-poison the first output. Deliberately *silent*: it pins the
+//!   taxonomy boundary that fault tolerance recovers **reported** faults,
+//!   while silent corruption is only caught by end-to-end bit-exactness
+//!   checks (which is why the chaos gates compare against solo decodes).
+//! * [`Panic`](FaultAction::Panic) — panic mid-dispatch: a worker kill,
+//!   exercising the completion guard + supervised respawn path.
+
+use super::mockflow::MockServeBackend;
+use crate::runtime::{Backend, Fault, FaultClass, HostTensor, ModelMeta, Value};
+use crate::tensor::Pcg64;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// What an armed [`FaultRule`] does to a matching call.
+#[derive(Clone, Debug)]
+pub enum FaultAction {
+    /// Fail with a typed [`Fault`] of this class, *before* the inner
+    /// backend runs (the call never happens — a retry can succeed).
+    Fail(FaultClass),
+    /// Sleep this long, then delegate — a hung-but-alive dispatch.
+    Hang(Duration),
+    /// Delegate, then overwrite the first output with NaNs (silent
+    /// corruption; see module docs).
+    CorruptOutput,
+    /// Panic mid-dispatch (simulated worker kill).
+    Panic,
+}
+
+/// One injection rule: fire `action` on calls whose artifact name contains
+/// `artifact` and whose per-artifact call index falls in
+/// `[from, from + count)`.
+#[derive(Clone, Debug)]
+pub struct FaultRule {
+    /// Substring match on the artifact name (`""` matches every call).
+    pub artifact: String,
+    /// First per-artifact call index (0-based) the rule fires on.
+    pub from: usize,
+    /// How many consecutive indices it fires on (`usize::MAX` = forever).
+    pub count: usize,
+    pub action: FaultAction,
+}
+
+impl FaultRule {
+    fn matches(&self, name: &str, index: usize) -> bool {
+        name.contains(self.artifact.as_str())
+            && index >= self.from
+            && index - self.from < self.count
+    }
+}
+
+/// A deterministic fault schedule. Cloning shares the injection counter
+/// (but not call-index state, which lives in the [`FaultyBackend`]), so a
+/// multi-worker test can hand each worker the same plan and still read one
+/// fleet-wide injected-fault total.
+#[derive(Clone, Default)]
+pub struct FaultPlan {
+    rules: Vec<FaultRule>,
+    injected: Arc<AtomicUsize>,
+}
+
+impl FaultPlan {
+    /// The empty plan (injects nothing).
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn rule(mut self, r: FaultRule) -> Self {
+        self.rules.push(r);
+        self
+    }
+
+    /// Fail the `index`-th call of artifacts matching `artifact`, once.
+    pub fn fail_once(self, artifact: &str, index: usize, class: FaultClass) -> Self {
+        self.fail_n(artifact, index, 1, class)
+    }
+
+    /// Fail `count` consecutive calls starting at per-artifact index
+    /// `from`.
+    pub fn fail_n(self, artifact: &str, from: usize, count: usize, class: FaultClass) -> Self {
+        self.rule(FaultRule {
+            artifact: artifact.into(),
+            from,
+            count,
+            action: FaultAction::Fail(class),
+        })
+    }
+
+    /// Stall the `index`-th matching call for `d` before it proceeds.
+    pub fn hang_for(self, artifact: &str, index: usize, d: Duration) -> Self {
+        self.rule(FaultRule { artifact: artifact.into(), from: index, count: 1, action: FaultAction::Hang(d) })
+    }
+
+    /// NaN-poison the output of the `index`-th matching call.
+    pub fn corrupt_output(self, artifact: &str, index: usize) -> Self {
+        self.rule(FaultRule {
+            artifact: artifact.into(),
+            from: index,
+            count: 1,
+            action: FaultAction::CorruptOutput,
+        })
+    }
+
+    /// Panic inside the `index`-th matching call (worker kill).
+    pub fn panic_at(self, artifact: &str, index: usize) -> Self {
+        self.rule(FaultRule { artifact: artifact.into(), from: index, count: 1, action: FaultAction::Panic })
+    }
+
+    /// A seeded random plan for chaos soaks: ~`rate` of decode dispatches
+    /// fail `Transient` (expressed as scattered fail-once rules over the
+    /// first `horizon` per-artifact call indices of `jstep`/`seqstep`
+    /// calls). Only *recoverable* faults are generated — the soak's
+    /// bit-exactness gate is the proof that recovery, not luck, answered
+    /// the requests.
+    pub fn random(seed: u64, rate: f64, horizon: usize) -> Self {
+        let mut rng = Pcg64::seed(seed);
+        let mut plan = FaultPlan::none();
+        for role in ["jstep", "seqstep"] {
+            for idx in 0..horizon {
+                if rng.next_f64() < rate {
+                    plan = plan.fail_once(role, idx, FaultClass::Transient);
+                }
+            }
+        }
+        plan
+    }
+
+    /// Total faults this plan (all clones) has injected so far.
+    pub fn injected(&self) -> usize {
+        self.injected.load(Ordering::SeqCst)
+    }
+}
+
+/// [`MockServeBackend`] plus a [`FaultPlan`]: the deterministic
+/// fault-injection harness. Implements [`Backend`] by evaluating the plan
+/// at every `call_v`, so it slots anywhere the mock does — under
+/// [`FaultTolerantBackend`](crate::coordinator::fault::FaultTolerantBackend)
+/// in recovery tests, or bare to pin unrecovered behavior.
+pub struct FaultyBackend {
+    inner: MockServeBackend,
+    plan: FaultPlan,
+    /// Per-artifact dispatch counts (the rule index space).
+    calls: Mutex<HashMap<String, usize>>,
+}
+
+impl FaultyBackend {
+    pub fn new(inner: MockServeBackend, plan: FaultPlan) -> Self {
+        FaultyBackend { inner, plan, calls: Mutex::new(HashMap::new()) }
+    }
+
+    pub fn inner(&self) -> &MockServeBackend {
+        &self.inner
+    }
+
+    /// Total faults injected through this backend's plan (shared across
+    /// plan clones).
+    pub fn injected(&self) -> usize {
+        self.plan.injected()
+    }
+
+    /// The action armed for this call, if any. Counts the call index.
+    fn armed(&self, name: &str) -> Option<FaultAction> {
+        let mut calls = self.calls.lock().unwrap();
+        let idx = calls.entry(name.to_string()).or_insert(0);
+        let index = *idx;
+        *idx += 1;
+        drop(calls);
+        self.plan
+            .rules
+            .iter()
+            .find(|r| r.matches(name, index))
+            .map(|r| r.action.clone())
+    }
+}
+
+impl Backend for FaultyBackend {
+    fn call_v(&self, name: &str, inputs: &[Value]) -> anyhow::Result<Vec<Value>> {
+        match self.armed(name) {
+            None => self.inner.call_v(name, inputs),
+            Some(FaultAction::Fail(class)) => {
+                self.plan.injected.fetch_add(1, Ordering::SeqCst);
+                Err(Fault::new(class, name).context("injected fault"))
+            }
+            Some(FaultAction::Hang(d)) => {
+                self.plan.injected.fetch_add(1, Ordering::SeqCst);
+                std::thread::sleep(d);
+                self.inner.call_v(name, inputs)
+            }
+            Some(FaultAction::CorruptOutput) => {
+                self.plan.injected.fetch_add(1, Ordering::SeqCst);
+                let mut out = self.inner.call_v(name, inputs)?;
+                if let Some(Value::Host(t)) = out.first() {
+                    let shape = t.shape().to_vec();
+                    let n = t.len();
+                    out[0] = Value::Host(HostTensor::f32(&shape, vec![f32::NAN; n]));
+                }
+                Ok(out)
+            }
+            Some(FaultAction::Panic) => {
+                self.plan.injected.fetch_add(1, Ordering::SeqCst);
+                panic!("injected fault: worker kill during '{name}'");
+            }
+        }
+    }
+
+    fn model_meta(&self, model: &str) -> anyhow::Result<ModelMeta> {
+        self.inner.model_meta(model)
+    }
+
+    fn has_artifact(&self, name: &str) -> bool {
+        self.inner.has_artifact(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::mockflow::MockLedger;
+
+    fn backend(plan: FaultPlan) -> FaultyBackend {
+        let ledger = MockLedger::new();
+        FaultyBackend::new(MockServeBackend::new(&[1, 4], Duration::ZERO, ledger), plan)
+    }
+
+    /// A real jstep call at bucket 1: (k, z, y, mask) with [1, L, D] data.
+    fn jstep_inputs() -> Vec<Value> {
+        let n = 8 * 3; // L × D of MockFlow::standard at batch 1
+        vec![
+            Value::Host(HostTensor::scalar_i32(0)),
+            Value::Host(HostTensor::f32(&[1, 8, 3], vec![0.0; n])),
+            Value::Host(HostTensor::f32(&[1, 8, 3], vec![0.1; n])),
+            Value::Host(HostTensor::scalar_i32(0)),
+        ]
+    }
+
+    #[test]
+    fn fail_once_hits_exactly_its_call_index() {
+        let be = backend(FaultPlan::none().fail_once("jstep", 1, FaultClass::Transient));
+        assert!(be.call_v("mock_block_jstep_b1", &jstep_inputs()).is_ok(), "index 0 clean");
+        let err = be.call_v("mock_block_jstep_b1", &jstep_inputs()).unwrap_err();
+        assert_eq!(crate::runtime::classify(&err), FaultClass::Transient);
+        assert!(be.call_v("mock_block_jstep_b1", &jstep_inputs()).is_ok(), "index 2 clean");
+        assert_eq!(be.injected(), 1);
+    }
+
+    #[test]
+    fn call_indices_are_counted_per_artifact() {
+        let be = backend(FaultPlan::none().fail_once("_b1", 0, FaultClass::Poison));
+        // The reverse artifact's index 0 fires independently of jstep's.
+        let n = 8 * 3;
+        let rev = vec![Value::Host(HostTensor::f32(&[1, 8, 3], vec![0.0; n]))];
+        assert!(be.call_v("mock_reverse_b1", &rev).is_err());
+        assert!(be.call_v("mock_block_jstep_b1", &jstep_inputs()).is_err(), "own index 0");
+        assert!(be.call_v("mock_block_jstep_b1", &jstep_inputs()).is_ok());
+        assert!(be.call_v("mock_reverse_b1", &rev).is_ok());
+    }
+
+    #[test]
+    fn random_plans_are_reproducible_per_seed() {
+        let a = FaultPlan::random(7, 0.3, 16);
+        let b = FaultPlan::random(7, 0.3, 16);
+        let sig = |p: &FaultPlan| {
+            p.rules.iter().map(|r| (r.artifact.clone(), r.from)).collect::<Vec<_>>()
+        };
+        assert_eq!(sig(&a), sig(&b));
+        assert!(!a.rules.is_empty(), "rate 0.3 over 32 slots must arm something");
+        let c = FaultPlan::random(8, 0.3, 16);
+        assert_ne!(sig(&a), sig(&c), "different seed, different plan");
+    }
+
+    #[test]
+    fn corrupt_output_is_silent_but_not_bit_exact() {
+        // The taxonomy boundary: corruption doesn't error — only an
+        // end-to-end reference comparison can catch it.
+        let be = backend(FaultPlan::none().corrupt_output("jstep", 0));
+        let out = be.call_v("mock_block_jstep_b1", &jstep_inputs()).unwrap();
+        let Value::Host(t) = &out[0] else { panic!("host output") };
+        assert!(t.as_f32().unwrap().iter().all(|v| v.is_nan()));
+        assert_eq!(be.injected(), 1);
+    }
+
+    #[test]
+    fn panic_action_panics_with_artifact_name() {
+        let be = backend(FaultPlan::none().panic_at("jstep", 0));
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = be.call_v("mock_block_jstep_b1", &jstep_inputs());
+        }));
+        let msg = *res.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("worker kill"), "{msg}");
+        assert!(msg.contains("mock_block_jstep_b1"), "{msg}");
+    }
+}

@@ -14,6 +14,7 @@
 //! });
 //! ```
 
+pub mod fault;
 pub mod fuzz;
 pub mod http;
 pub mod mockflow;

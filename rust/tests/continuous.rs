@@ -77,6 +77,7 @@ fn start_router(
             tuner: None,
             warm_cap: 0,
             governor: None,
+            fault: Default::default(),
         },
         batcher.clone(),
         registry.clone(),

@@ -1253,7 +1253,7 @@ fn pipeline_bit_exact_with_monolithic_decode() {
         opts.jacobi.tau = 0.0; // exactness sweeps — the bit-exact regime
 
         // Pipelined decode over the shared serve mock (host-only values).
-        let cfg = PipelineConfig { depth: 2, stage_threads: 0, warm_cap: 0 };
+        let cfg = PipelineConfig { depth: 2, stage_threads: 0, warm_cap: 0, ..Default::default() };
         let factory = move |_stage: usize| {
             Ok(MockServeBackend::new(&[2], std::time::Duration::ZERO, MockLedger::new()))
         };
@@ -1303,7 +1303,7 @@ fn pipeline_bit_exact_with_monolithic_decode() {
 
 #[test]
 fn pipeline_reports_stage_metrics_and_inflight_bound() {
-    let cfg = PipelineConfig { depth: 1, stage_threads: 2, warm_cap: 0 };
+    let cfg = PipelineConfig { depth: 1, stage_threads: 2, warm_cap: 0, ..Default::default() };
     let factory = move |_stage: usize| {
         Ok(MockServeBackend::new(&[2], std::time::Duration::ZERO, MockLedger::new()))
     };
@@ -1341,7 +1341,7 @@ fn pipeline_startup_failure_errors_without_leaking_stages() {
     // One stage's backend fails to build: start() must surface the error
     // AND join the already-spawned healthy stages (this test hangs if a
     // stage is left blocked on its queue).
-    let cfg = PipelineConfig { depth: 2, stage_threads: 0, warm_cap: 0 };
+    let cfg = PipelineConfig { depth: 2, stage_threads: 0, warm_cap: 0, ..Default::default() };
     let factory = move |stage: usize| {
         if stage == 2 {
             anyhow::bail!("stage 2 backend exploded");

@@ -5,20 +5,24 @@
 //! concurrent request handling, keep-alive — and artifact-driven end-to-end
 //! tests over real TCP + PJRT that skip when artifacts are missing.
 
-use sjd::coordinator::batcher::{Batcher, Priority, SubmitOpts, DEADLINE_EXPIRED_MSG};
+use sjd::coordinator::batcher::{Batcher, Priority, SubmitOpts, DEADLINE_EXPIRED_MSG, WORKER_FAILED_MSG};
+use sjd::coordinator::fault::FaultPolicy;
 use sjd::coordinator::jacobi::{InitStrategy, JacobiConfig, JacobiStats};
 use sjd::coordinator::policy::{
-    calibrate_chunks, BlockDecode, DecodePolicy, PolicyTuner, TunerConfig,
+    calibrate_chunks, BlockDecode, DecodePolicy, GovernorConfig, OverloadGovernor, PolicyTuner,
+    TunerConfig,
 };
 use sjd::coordinator::router::{Router, RouterConfig};
 use sjd::coordinator::sampler::{SampleOptions, Sampler};
 use sjd::coordinator::server::{PolicySource, Server, ServerConfig};
 use sjd::metrics::Registry;
+use sjd::runtime::FaultClass;
 use sjd::tensor::Pcg64;
+use sjd::testkit::fault::{FaultPlan, FaultyBackend};
 use sjd::testkit::mockflow::{MockLedger, MockServeBackend};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -106,6 +110,7 @@ fn mock_router(
             tuner: None,
             warm_cap: 0,
             governor: None,
+            fault: Default::default(),
         },
         batcher.clone(),
         registry.clone(),
@@ -359,6 +364,7 @@ fn pipelined_router_matches_monolithic_images() {
                 tuner: None,
                 warm_cap: 0,
                 governor: None,
+                fault: Default::default(),
             },
             batcher.clone(),
             registry.clone(),
@@ -464,6 +470,7 @@ fn tuned_router_converges_to_offline_calibration() {
             tuner: Some(tuner.clone()),
             warm_cap: 0,
             governor: None,
+            fault: Default::default(),
         },
         batcher.clone(),
         registry.clone(),
@@ -533,6 +540,7 @@ fn tuned_router_reverts_unpaying_init_provider_to_zeros() {
             tuner: Some(tuner.clone()),
             warm_cap: 0,
             governor: None,
+            fault: Default::default(),
         },
         batcher.clone(),
         registry.clone(),
@@ -665,6 +673,7 @@ fn chaos_soak_every_slot_resolves_and_queues_drain() {
             tuner: None,
             warm_cap: 0,
             governor: None,
+            fault: Default::default(),
         },
         batcher.clone(),
         registry.clone(),
@@ -895,6 +904,7 @@ fn overload_chaos_soak_qos_statuses_and_bounded_queue() {
             tuner: None,
             warm_cap: 0,
             governor: None,
+            fault: Default::default(),
         },
         batcher.clone(),
         registry.clone(),
@@ -993,6 +1003,400 @@ fn overload_chaos_soak_qos_statuses_and_bounded_queue() {
 }
 
 // ---------------------------------------------------------------------------
+// Fault tolerance: retry, quarantine, worker respawn, degraded health
+// ---------------------------------------------------------------------------
+
+/// τ = 0 decode options for one policy — retry/reroute/respawn bit-exactness
+/// is a τ = 0 property (the Jacobi fixed point does not depend on how many
+/// times the road to it was re-driven).
+fn tau0(policy: &DecodePolicy) -> SampleOptions {
+    let mut o = SampleOptions { policy: policy.clone(), ..Default::default() };
+    o.jacobi.tau = 0.0;
+    o
+}
+
+/// Ground truth for the bit-exactness gates: a bucket-1 solo decode of the
+/// same seed over a healthy backend — no faults, no retries, no reroutes.
+fn fault_free_reference(policy: &DecodePolicy, seed: u64) -> Vec<f32> {
+    let be = MockServeBackend::new(&[1, 2, 4], Duration::ZERO, MockLedger::new());
+    let sampler = Sampler::new(&be, "mock", 1).expect("solo sampler");
+    let z = sampler.sample_prior_slots(&[seed]);
+    let out = sampler.decode_tokens(z, &tau0(policy)).expect("solo decode");
+    sampler.unpatchify(&out.tokens).expect("solo unpatchify")[0].data().to_vec()
+}
+
+/// Single-worker RouterConfig over the mock backend with an explicit fault
+/// policy.
+fn fault_config(refill: bool, options: SampleOptions, fault: FaultPolicy) -> RouterConfig {
+    RouterConfig {
+        artifacts_dir: "unused-by-mock".into(),
+        model: "mock".into(),
+        buckets: Vec::new(),
+        workers: 1,
+        options,
+        pipeline_depth: 1,
+        stage_threads: 0,
+        refill,
+        tuner: None,
+        warm_cap: 0,
+        governor: None,
+        fault,
+    }
+}
+
+/// Test-speed recovery knobs: microsecond backoffs so retries are cheap, and
+/// a probe interval far beyond the test horizon so a tripped quarantine
+/// cannot silently heal mid-assertion.
+fn fast_fault() -> FaultPolicy {
+    FaultPolicy {
+        backoff_base: Duration::from_micros(200),
+        backoff_cap: Duration::from_millis(2),
+        probe_interval: Duration::from_secs(120),
+        ..Default::default()
+    }
+}
+
+/// Backend factory that hands `plan` to the first engine built and a healthy
+/// backend to every later one. Fault-plan call indices are per-instance, so
+/// without this a supervised respawn would replay one-shot panic/hang rules
+/// from index 0 and burn the whole restart budget on the same injected
+/// fault.
+fn faulty_once_factory(
+    ledger: &Arc<MockLedger>,
+    plan: FaultPlan,
+) -> impl Fn(usize) -> anyhow::Result<FaultyBackend> + Send + Clone + 'static {
+    let ledger = ledger.clone();
+    let built = Arc::new(AtomicUsize::new(0));
+    move |_widx| {
+        let p = if built.fetch_add(1, Ordering::SeqCst) == 0 {
+            plan.clone()
+        } else {
+            FaultPlan::none()
+        };
+        Ok(FaultyBackend::new(MockServeBackend::new(&[1, 2, 4], Duration::ZERO, ledger.clone()), p))
+    }
+}
+
+#[test]
+fn transient_faults_are_retried_and_bit_exact() {
+    // Three injected transient faults across both step roles; every decode
+    // must succeed anyway and the retries must be invisible in the output
+    // bits. Slots are submitted one at a time so every decode runs at bucket
+    // 1 and the per-artifact call indices are deterministic.
+    let policy = DecodePolicy::Selective { seq_blocks: 1 };
+    let registry = Registry::new();
+    let batcher = Batcher::new(4, Duration::from_millis(2));
+    let ledger = MockLedger::new();
+    let plan = FaultPlan::none()
+        .fail_once("seqstep", 0, FaultClass::Transient)
+        .fail_once("jstep", 0, FaultClass::Transient)
+        .fail_once("jstep", 2, FaultClass::Transient);
+    let router = Router::start_with(
+        fault_config(false, tau0(&policy), fast_fault()),
+        batcher.clone(),
+        registry.clone(),
+        faulty_once_factory(&ledger, plan.clone()),
+    )
+    .expect("faulty router");
+
+    for seed in [21u64, 22, 23] {
+        let h = batcher.submit_slot(seed, seed).expect("submit");
+        let img = h
+            .done
+            .wait_timeout(Duration::from_secs(30))
+            .expect("slot must resolve")
+            .expect("retried decode must succeed");
+        let want = fault_free_reference(&policy, seed);
+        assert_eq!(img.data(), &want[..], "seed {seed}: retries must be invisible in the bits");
+    }
+    assert_eq!(plan.injected(), 3, "all three armed faults must fire");
+    assert_eq!(registry.counter("sjd_backend_retries").get(), 3);
+    assert_eq!(
+        registry.counter("sjd_worker_errors").get(),
+        0,
+        "no request may observe a retried transient fault"
+    );
+    assert!(!router.fleet().degraded());
+    router.shutdown();
+    assert_eq!(batcher.queued(), 0);
+}
+
+#[test]
+fn poisoned_artifact_is_quarantined_and_rerouted() {
+    // Every fused-step call fails with a Poison fault. The first two
+    // requests fail honestly (no retry — poison is deterministic); the
+    // second trips the artifact breaker, and from then on
+    // `effective_block_mode` reroutes fused blocks through plain Jacobi —
+    // which at τ = 0 lands on the same fixed point, so the degraded decodes
+    // are bit-identical to healthy fused ones.
+    let policy = DecodePolicy::Fused { chunk: 4 };
+    let registry = Registry::new();
+    let batcher = Batcher::new(4, Duration::from_millis(2));
+    let ledger = MockLedger::new();
+    let plan = FaultPlan::none().fail_n("jstep_fuse", 0, usize::MAX, FaultClass::Poison);
+    let fault = FaultPolicy { quarantine_after: 2, ..fast_fault() };
+    let router = Router::start_with(
+        fault_config(false, tau0(&policy), fault),
+        batcher.clone(),
+        registry.clone(),
+        faulty_once_factory(&ledger, plan.clone()),
+    )
+    .expect("faulty router");
+
+    for seed in [41u64, 42] {
+        let h = batcher.submit_slot(seed, seed).expect("submit");
+        let res = h.done.wait_timeout(Duration::from_secs(30)).expect("slot must resolve");
+        assert!(res.is_err(), "poisoned decode before quarantine must fail, not corrupt");
+    }
+    assert_eq!(registry.counter("sjd_artifact_quarantined").get(), 1, "breaker trips once");
+
+    // Post-quarantine: the fused artifact reads as absent, blocks fall back
+    // to Jacobi, decodes succeed and stay bit-exact with the *fused* solo
+    // reference on a healthy backend.
+    for seed in [43u64, 44] {
+        let h = batcher.submit_slot(seed, seed).expect("submit");
+        let img = h
+            .done
+            .wait_timeout(Duration::from_secs(30))
+            .expect("slot must resolve")
+            .expect("rerouted decode must succeed");
+        let want = fault_free_reference(&policy, seed);
+        assert_eq!(img.data(), &want[..], "seed {seed}: degraded reroute must be bit-exact");
+    }
+    assert!(plan.injected() >= 2, "the poison rule must actually fire");
+    // Poison never costs a worker: same incarnation the whole way through.
+    assert_eq!(registry.counter("sjd_worker_restarts").get(), 0);
+    assert!(!router.fleet().degraded());
+    router.shutdown();
+}
+
+#[test]
+fn worker_panic_resolves_slot_500_then_respawns() {
+    // A mid-decode panic: the in-flight request must resolve exactly once
+    // as an HTTP 500 (the slot-drop completion guard — never a hang), the
+    // supervisor must respawn the worker with a fresh engine, and the
+    // respawned fleet must serve bit-exact decodes with /healthz back at
+    // 200.
+    let addr = "127.0.0.1:8543";
+    let policy = DecodePolicy::UniformJacobi;
+    let registry = Registry::new();
+    let batcher = Batcher::new(4, Duration::from_millis(2));
+    let ledger = MockLedger::new();
+    let plan = FaultPlan::none().panic_at("jstep", 1);
+    let router = Router::start_with(
+        fault_config(false, tau0(&policy), fast_fault()),
+        batcher.clone(),
+        registry.clone(),
+        faulty_once_factory(&ledger, plan.clone()),
+    )
+    .expect("faulty router");
+    let server = Server::with_config(
+        addr,
+        batcher.clone(),
+        registry.clone(),
+        ServerConfig { fleet: Some(router.fleet()), ..Default::default() },
+    );
+    let (stop, t) = start_server(server);
+
+    let resp = post(addr, "/generate", "{\"n\": 1, \"seed\": 51}");
+    assert!(resp.starts_with("HTTP/1.1 500"), "panicked decode must 500, not hang: {resp}");
+    assert!(resp.contains(WORKER_FAILED_MSG), "completion guard message expected: {resp}");
+    assert_eq!(plan.injected(), 1);
+
+    // The respawned incarnation (healthy backend) keeps serving, bit-exact.
+    let h = batcher.submit_slot(52, 52).expect("submit after respawn");
+    let img = h
+        .done
+        .wait_timeout(Duration::from_secs(30))
+        .expect("post-respawn slot must resolve")
+        .expect("post-respawn decode must succeed");
+    assert_eq!(img.data(), &fault_free_reference(&policy, 52)[..]);
+
+    assert!(registry.counter("sjd_worker_panics").get() >= 1);
+    assert!(registry.counter("sjd_worker_restarts").get() >= 1);
+    assert!(!router.fleet().degraded(), "respawn must restore the fleet");
+    let h = get(addr, "/healthz");
+    assert!(h.starts_with("HTTP/1.1 200"), "healthy fleet must be 200: {h}");
+
+    stop_server(addr, stop, t);
+    router.shutdown();
+    assert_eq!(batcher.queued(), 0);
+}
+
+#[test]
+fn exhausted_restart_budget_degrades_healthz() {
+    // A permanently device-lost worker with a zero restart budget retires;
+    // the fleet goes degraded and /healthz flips to 503 so orchestration
+    // stops routing new traffic here.
+    let addr = "127.0.0.1:8544";
+    let registry = Registry::new();
+    let batcher = Batcher::new(4, Duration::from_millis(2));
+    let ledger = MockLedger::new();
+    // Every backend call fails DeviceLost — permanent hardware death.
+    let plan = FaultPlan::none().fail_n("", 0, usize::MAX, FaultClass::DeviceLost);
+    let fault = FaultPolicy { worker_restarts: 0, ..fast_fault() };
+    let router = Router::start_with(
+        fault_config(false, tau0(&DecodePolicy::UniformJacobi), fault),
+        batcher.clone(),
+        registry.clone(),
+        {
+            let ledger = ledger.clone();
+            move |_| {
+                Ok(FaultyBackend::new(
+                    MockServeBackend::new(&[1, 2, 4], Duration::ZERO, ledger.clone()),
+                    plan.clone(),
+                ))
+            }
+        },
+    )
+    .expect("dying router");
+    let server = Server::with_config(
+        addr,
+        batcher.clone(),
+        registry.clone(),
+        ServerConfig { fleet: Some(router.fleet()), ..Default::default() },
+    );
+    let (stop, t) = start_server(server);
+
+    // The request that kills the worker still resolves — exactly once, as
+    // an error — before the worker exits.
+    let resp = post(addr, "/generate", "{\"n\": 1, \"seed\": 61}");
+    assert!(resp.starts_with("HTTP/1.1 500"), "device-lost decode must 500: {resp}");
+
+    let mut h = String::new();
+    for _ in 0..150 {
+        h = get(addr, "/healthz");
+        if h.starts_with("HTTP/1.1 503") {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(h.starts_with("HTTP/1.1 503"), "degraded fleet must answer non-200: {h}");
+    assert!(h.contains("degraded: 0/1"), "degradation detail expected: {h}");
+    assert!(router.fleet().degraded());
+    assert_eq!(registry.counter("sjd_worker_restarts").get(), 0, "budget was zero");
+
+    stop_server(addr, stop, t);
+    router.shutdown();
+    assert_eq!(batcher.queued(), 0);
+}
+
+#[test]
+fn fault_chaos_soak_classified_statuses_and_bit_exact_recovery() {
+    // Chaos soak over the full continuous + elastic stack with a seeded
+    // random transient-fault plan shared by every pipeline stage.
+    // Invariants: every request resolves exactly once with a classified
+    // status (200/429/500/503/504 — never a hang), faults genuinely fire
+    // and are retried, decodes that survive the chaos are bit-identical to
+    // fault-free solo references (τ = 0, fidelity budget 0 keeps the
+    // governor ladder bit-exact), and the queues drain on shutdown.
+    let addr = "127.0.0.1:8545";
+    let policy = DecodePolicy::UniformJacobi;
+    let registry = Registry::new();
+    let cap = 8usize;
+    let batcher = Batcher::with_cap(4, Duration::from_millis(5), cap);
+    batcher.bind_metrics(&registry);
+    let ledger = MockLedger::new();
+    // Transient-only plans are safe to replay on every stage backend — the
+    // retry layer absorbs each injection. The extra index-0 rule guarantees
+    // the plan fires on the very first step call.
+    let plan = FaultPlan::random(0xFA57, 0.05, 64).fail_once("jstep", 0, FaultClass::Transient);
+    let mut cfg = fault_config(true, tau0(&policy), fast_fault());
+    cfg.governor = Some(Arc::new(OverloadGovernor::new(
+        4,
+        GovernorConfig { queue_high: 4.0, fidelity_budget: 0.0, s_max: 4, ..Default::default() },
+        &registry,
+    )));
+    let router = Router::start_with(cfg, batcher.clone(), registry.clone(), {
+        let ledger = ledger.clone();
+        let plan = plan.clone();
+        move |_| {
+            Ok(FaultyBackend::new(
+                MockServeBackend::new(&[1, 2, 4], Duration::from_micros(200), ledger.clone()),
+                plan.clone(),
+            ))
+        }
+    })
+    .expect("chaos router");
+    let server = Server::with_config(
+        addr,
+        batcher.clone(),
+        registry.clone(),
+        ServerConfig { conn_threads: 12, fleet: Some(router.fleet()), ..Default::default() },
+    );
+    let (stop, t) = start_server(server);
+
+    let mut rng = ChaosRng(0xFA_057);
+    let mut clients = Vec::new();
+    for _burst in 0..4 {
+        for _ in 0..(rng.next() % 4 + 2) {
+            let seed = rng.next();
+            let kind = rng.next() % 3;
+            clients.push(std::thread::spawn(move || {
+                let body = format!("{{\"n\": {}, \"seed\": {seed}}}", seed % 2 + 1);
+                match kind {
+                    0 => post(addr, "/generate", &body),
+                    1 => post_with(
+                        addr,
+                        "/generate",
+                        "X-SJD-Priority: high\r\nX-SJD-Deadline-Ms: 30000\r\n",
+                        &body,
+                    ),
+                    // Tight deadline under injected faults: served or 504,
+                    // never a hang, never silent corruption.
+                    _ => post_with(addr, "/generate", "X-SJD-Deadline-Ms: 5\r\n", &body),
+                }
+            }));
+        }
+        std::thread::sleep(Duration::from_millis(rng.next() % 12 + 3));
+    }
+    let mut served = 0usize;
+    for c in clients {
+        let resp = c.join().expect("client thread must not hang or panic");
+        let classified = ["200", "429", "500", "503", "504"]
+            .iter()
+            .any(|s| resp.starts_with(&format!("HTTP/1.1 {s}")));
+        assert!(classified, "chaos responses must be classified: {resp}");
+        if resp.starts_with("HTTP/1.1 200") {
+            served += 1;
+        }
+    }
+    assert!(served > 0, "the fleet must keep serving under injected faults");
+
+    // Recovery bit-exactness: decodes that ran *through* retried transient
+    // faults must equal their fault-free solo references.
+    let seeds = [71u64, 72, 73, 74];
+    let handles: Vec<_> =
+        seeds.iter().map(|&s| batcher.submit_slot(s, s).expect("submit")).collect();
+    for (i, h) in handles.iter().enumerate() {
+        match h.done.wait_timeout(Duration::from_secs(30)).expect("slot must resolve") {
+            Ok(img) => {
+                let want = fault_free_reference(&policy, seeds[i]);
+                assert_eq!(
+                    img.data(),
+                    &want[..],
+                    "seed {}: recovery must be bit-exact",
+                    seeds[i]
+                );
+            }
+            // Retry-budget exhaustion inside a dense injected burst is an
+            // honest error — allowed; silent corruption is not.
+            Err(e) => assert!(!e.is_empty()),
+        }
+    }
+
+    assert!(plan.injected() > 0, "the chaos plan must actually fire");
+    assert!(
+        registry.counter("sjd_backend_retries").get() >= 1,
+        "transient faults must be retried, not surfaced"
+    );
+    stop_server(addr, stop, t);
+    router.shutdown();
+    assert_eq!(batcher.queued(), 0, "queues must drain on shutdown");
+    assert_eq!(registry.gauge("sjd_queue_depth").get(), 0);
+}
+
+// ---------------------------------------------------------------------------
 // Artifact-driven end-to-end tests (skip without artifacts)
 // ---------------------------------------------------------------------------
 
@@ -1015,6 +1419,7 @@ fn serve_generate_and_metrics_end_to_end() {
             tuner: None,
             warm_cap: 0,
             governor: None,
+            fault: Default::default(),
         },
         batcher.clone(),
         registry.clone(),
@@ -1123,6 +1528,7 @@ fn batcher_groups_concurrent_requests() {
             tuner: None,
             warm_cap: 0,
             governor: None,
+            fault: Default::default(),
         },
         batcher.clone(),
         registry.clone(),
