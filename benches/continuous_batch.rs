@@ -116,6 +116,8 @@ fn run_config(
             warm_cap: 0,
             governor: None,
             fault: Default::default(),
+            replicas: 1,
+            devices: 1,
         },
         batcher.clone(),
         registry.clone(),

@@ -159,6 +159,8 @@ where
             warm_cap: 0,
             governor: None,
             fault,
+            replicas: 1,
+            devices: 1,
         },
         batcher.clone(),
         registry.clone(),

@@ -141,6 +141,8 @@ fn start_stack(addr: &'static str) -> Result<Stack> {
             warm_cap: 0,
             governor: Some(governor),
             fault: Default::default(),
+            replicas: 1,
+            devices: 1,
         },
         batcher.clone(),
         registry.clone(),

@@ -9,6 +9,10 @@
 //!   thread (serial accept).
 //! * **bucketed** — buckets {1, 2, 4, 8} with bucket-covering dispatch and
 //!   a pooled connection handler.
+//! * **replicated** — the bucketed stack with `replicas: 2`: two
+//!   independent worker pipelines behind the one batcher, waves dispatched
+//!   least-loaded. Reported for context (the replica scaling *gates* live
+//!   in `benches/capacity.rs`); here it only has to complete cleanly.
 //!
 //! The mock's decode cost scales with the *bucket* batch size (each
 //! jstep/seqstep call sleeps `slot_delay × B`), so padded slots burn real
@@ -96,11 +100,15 @@ fn generate_once(
     Ok(head.starts_with("HTTP/1.1 200"))
 }
 
+#[allow(clippy::too_many_arguments)] // bench config knobs, not an API
 fn run_config(
     label: &'static str,
     addr: &'static str,
     buckets: &[usize],
     conn_threads: usize,
+    // Replica tier (≥ 2 = independent pipelines behind the one batcher,
+    // least-loaded wave dispatch); 1 = the classic two-worker fleet.
+    replicas: usize,
     // Baseline clients mimic the pre-bucketing stack (one request per
     // connection); bucketed clients hold keep-alive connections.
     keep_alive: bool,
@@ -129,6 +137,8 @@ fn run_config(
             warm_cap: 0,
             governor: None,
             fault: Default::default(),
+            replicas,
+            devices: 1,
         },
         batcher.clone(),
         registry.clone(),
@@ -257,6 +267,7 @@ fn main() -> Result<()> {
         "127.0.0.1:8511",
         &[8],
         1,
+        1,
         false,
         n_requests,
         rps,
@@ -268,11 +279,24 @@ fn main() -> Result<()> {
         "127.0.0.1:8512",
         &[1, 2, 4, 8],
         8,
+        1,
         true,
         n_requests,
         rps,
     )?;
     report(&bucketed, n_requests);
+
+    let replicated = run_config(
+        "replicated buckets{1,2,4,8} 2-replica",
+        "127.0.0.1:8513",
+        &[1, 2, 4, 8],
+        8,
+        2,
+        true,
+        n_requests,
+        rps,
+    )?;
+    report(&replicated, n_requests);
 
     let thr_gain = bucketed.throughput() / baseline.throughput();
     let p99_gain = baseline.p99() / bucketed.p99().max(1e-9);
@@ -288,7 +312,9 @@ fn main() -> Result<()> {
         bucketed.padded_slots,
     );
 
-    let all_ok = baseline.ok == n_requests as u64 && bucketed.ok == n_requests as u64;
+    let all_ok = baseline.ok == n_requests as u64
+        && bucketed.ok == n_requests as u64
+        && replicated.ok == n_requests as u64;
     let faster = bucketed.throughput() > baseline.throughput() && bucketed.p99() < baseline.p99();
     if all_ok && faster {
         println!("PASS: bucketed serving beats the single-bucket serial baseline");

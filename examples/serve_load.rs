@@ -115,6 +115,8 @@ fn serve_and_measure(
             warm_cap: 0,
             governor: None,
             fault: Default::default(),
+            replicas: 1,
+            devices: 1,
         },
         batcher.clone(),
         registry.clone(),

@@ -300,6 +300,14 @@ impl<B: Backend> Backend for FaultTolerantBackend<B> {
         self.with_retries("to_host", None, || self.inner.to_host(v.clone()))
     }
 
+    fn device_ordinal(&self) -> usize {
+        self.inner.device_ordinal()
+    }
+
+    fn to_ordinal(&self, v: &Value, ordinal: usize) -> anyhow::Result<Value> {
+        self.with_retries("to_ordinal", None, || self.inner.to_ordinal(v, ordinal))
+    }
+
     /// Quarantine seam: a quarantined artifact reads as absent, which the
     /// sampler's live `effective_block_mode` lookup turns into a
     /// degradation-chain reroute (gs_fuse → gs → jacobi) on the very next

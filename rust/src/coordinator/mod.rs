@@ -53,6 +53,6 @@ pub use fault::{DeadlineCell, FaultPolicy, FaultTolerantBackend, WatchGuard, Wat
 pub use jacobi::{
     ChunkScheduler, GsJacobiStats, InitStrategy, JacobiConfig, JacobiStats, WindowStats,
 };
-pub use pipeline::{BlockStage, DecodePipeline, PipelineConfig, PipelineJob};
+pub use pipeline::{device_placement, BlockStage, DecodePipeline, PipelineConfig, PipelineJob};
 pub use policy::{BlockDecode, DecodePolicy, PolicyTuner, TunerConfig};
 pub use sampler::{SampleOptions, Sampler, SamplerSet};

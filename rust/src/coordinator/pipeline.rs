@@ -68,6 +68,22 @@
 //!   it to `zeros` explicitly (documented, not silent) rather than letting
 //!   the per-block resolver quietly ignore it.
 //!
+//! ## Multi-device placement
+//!
+//! With [`PipelineConfig::devices`] > 1 the stage graph is **sharded across
+//! device ordinals**: contiguous stage spans map onto distinct ordinals via
+//! [`device_placement`] (the same partition law as the spans themselves, so
+//! K blocks stream across N devices with at most one device difference in
+//! stage count). Each stage-executor thread hands its assigned ordinal to
+//! the backend factory — the real-engine factory builds
+//! `Engine::new_on(dir, ordinal)`, so the stage's executables and minted
+//! buffers are pinned to that device and the per-ordinal aliasing guards
+//! hold. Placement changes *where* a span computes, never *what* it
+//! computes: the cross-thread handoff is host data either way (exactly one
+//! documented sync per span boundary, `sjd_handoff_syncs`), so τ=0 decodes
+//! stay bit-exact under every placement (`rust/tests/multidevice.rs` pins
+//! this with per-ordinal mock ledgers).
+//!
 //! ## Metrics
 //!
 //! Per stage thread `t`: `sjd_stage_{t}_occupancy` (gauge, batches being
@@ -78,7 +94,10 @@
 //! share one registry (`serve --workers N --pipeline-depth ≥2` runs one
 //! pipeline per worker), both metrics aggregate across them: stage `t`'s
 //! occupancy reads `0..=N` and `sjd_stage_wait` pools every worker's
-//! queue waits.
+//! queue waits. Per device ordinal `d`: `sjd_device_{d}_busy` (gauge,
+//! stages on that ordinal currently decoding — its time-average is the
+//! device's utilization, the number the capacity bench exists to raise)
+//! and the shared `sjd_handoff_syncs` counter (cross-span host handoffs).
 
 use super::batcher::{Batcher, Slot, WORKER_FAILED_MSG};
 use super::fault::{
@@ -132,6 +151,24 @@ pub fn stage_plan(policy: &DecodePolicy, blocks: usize) -> Vec<BlockStage> {
         .collect()
 }
 
+/// Map `stages` stage indices onto `devices` device ordinals: contiguous,
+/// as-even-as-possible groups (the same partition law as
+/// [`super::jacobi::window_partition`], which it reuses), so adjacent
+/// decode positions share a device and every cross-device edge is a span
+/// boundary that was already paying the host handoff. `devices` clamps to
+/// `[1, stages]`; entry `i` is stage `i`'s ordinal, non-decreasing from 0.
+pub fn device_placement(stages: usize, devices: usize) -> Vec<usize> {
+    let mut placement = vec![0usize; stages];
+    for (ordinal, (off, len)) in
+        super::jacobi::window_partition(stages, devices.max(1)).into_iter().enumerate()
+    {
+        for slot in placement.iter_mut().skip(off).take(len) {
+            *slot = ordinal;
+        }
+    }
+    placement
+}
+
 /// Pipeline shape knobs.
 #[derive(Clone, Debug)]
 pub struct PipelineConfig {
@@ -148,6 +185,13 @@ pub struct PipelineConfig {
     /// thread owns its own cache, so the effective pipeline-wide bound is
     /// `stage_threads × warm_cap` entries.
     pub warm_cap: usize,
+    /// Device ordinals to shard the stage graph across (`serve --devices`).
+    /// Contiguous stage spans map onto ordinals `0..devices` via
+    /// [`device_placement`]; each stage's backend factory receives its
+    /// stage's ordinal. `0` and `1` both mean single-device (every stage on
+    /// ordinal 0 — the legacy layout); values above the stage count clamp
+    /// down to it (a device without a stage would sit idle).
+    pub devices: usize,
     /// Fault-tolerance policy: each stage's backend is wrapped in a
     /// [`FaultTolerantBackend`] (transient retry, per-artifact quarantine);
     /// the continuous path additionally budgets retries against the wave's
@@ -161,6 +205,7 @@ impl Default for PipelineConfig {
             depth: 2,
             stage_threads: 0,
             warm_cap: 0,
+            devices: 1,
             fault: FaultPolicy::default(),
         }
     }
@@ -340,6 +385,9 @@ struct StageArgs {
     tx: Option<Arc<StageQueue<InFlight>>>,
     gate: Arc<DepthGate>,
     registry: Registry,
+    /// Device ordinal this stage is placed on ([`device_placement`]); handed
+    /// to the backend factory and the `sjd_device_{d}_busy` gauge.
+    device: usize,
     /// Warm-start cache bound for this stage's samplers (0 = default).
     warm_cap: usize,
     /// Retry/quarantine policy for this stage's backend wrapper.
@@ -351,8 +399,12 @@ struct StageArgs {
 
 impl DecodePipeline {
     /// Spawn the stage-executor threads. `factory` runs inside each stage
-    /// thread (backends may be thread-pinned) and is also invoked once on
-    /// the calling thread to discover the model geometry; like
+    /// thread (backends may be thread-pinned) with the stage's **device
+    /// ordinal** from [`device_placement`] as its argument — the real-engine
+    /// factory opens `Engine::new_on(dir, ordinal)`, mocks key per-ordinal
+    /// ledgers off it, and single-device factories may ignore it (every
+    /// ordinal is 0 when `cfg.devices ≤ 1`). It is also invoked once on the
+    /// calling thread, with ordinal 0, to discover the model geometry; like
     /// `Router::start_with`, every stage validates its backend + samplers
     /// before this returns (fail-fast on bad artifacts).
     pub fn start<B, F>(
@@ -384,6 +436,7 @@ impl DecodePipeline {
             .into_iter()
             .map(|(off, len)| (off, off + len))
             .collect();
+        let placement = device_placement(spans.len(), cfg.devices);
         let queues: Vec<Arc<StageQueue<InFlight>>> =
             spans.iter().map(|_| StageQueue::new(1)).collect();
         let gate = DepthGate::new(cfg.depth);
@@ -401,6 +454,7 @@ impl DecodePipeline {
                 tx: queues.get(idx + 1).cloned(),
                 gate: gate.clone(),
                 registry: registry.clone(),
+                device: placement[idx],
                 warm_cap: cfg.warm_cap,
                 fault: cfg.fault.clone(),
                 lost: lost.clone(),
@@ -510,12 +564,26 @@ where
     B: Backend,
     F: Fn(usize) -> Result<B>,
 {
-    let StageArgs { idx, span, model, buckets, rx, tx, gate, registry, warm_cap, fault, lost, ready } =
-        args;
+    let StageArgs {
+        idx,
+        span,
+        model,
+        buckets,
+        rx,
+        tx,
+        gate,
+        registry,
+        device,
+        warm_cap,
+        fault,
+        lost,
+        ready,
+    } = args;
     // Stage backends get the same fault-tolerant wrapper as monolithic
     // workers: transient retries and per-artifact quarantine (the stage's
     // samplers consult the wrapper's `has_artifact` live per block decode).
-    let engine = match factory(idx) {
+    // The factory receives this stage's device ordinal (the placement seam).
+    let engine = match factory(device) {
         Ok(e) => FaultTolerantBackend::new(e, fault.clone(), &registry),
         Err(e) => {
             let _ = ready.send(Err(e));
@@ -533,7 +601,9 @@ where
     let _ = ready.send(Ok(set.buckets()));
 
     let occupancy = registry.gauge(&format!("sjd_stage_{idx}_occupancy"));
+    let device_busy = registry.gauge(&format!("sjd_device_{device}_busy"));
     let stage_wait = registry.histogram("sjd_stage_wait");
+    let m_handoffs = registry.counter("sjd_handoff_syncs");
     let m_panics = registry.counter("sjd_worker_panics");
 
     while let Some(mut item) = rx.recv() {
@@ -545,10 +615,12 @@ where
             item.queued += waited;
         }
         occupancy.add(1);
+        device_busy.add(1);
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             run_span(&set, span, &mut item)
         }));
         occupancy.add(-1);
+        device_busy.add(-1);
         match outcome {
             Err(p) => {
                 // A panic mid-decode means the engine state is suspect:
@@ -574,6 +646,9 @@ where
             }
             Ok(Ok(())) => match &tx {
                 Some(tx) => {
+                    // The span just ended with its one documented host sync
+                    // and the batch crosses a span boundary: count it.
+                    m_handoffs.inc();
                     item.enqueued = Instant::now();
                     if let Err(item) = tx.send(item) {
                         // Downstream closed mid-shutdown: complete the batch
@@ -720,6 +795,9 @@ struct ContMetrics {
     block_iters: Arc<Histogram>,
     host_syncs: Arc<Histogram>,
     stage_wait: Arc<Histogram>,
+    /// Cross-span host handoffs (one per wave per span boundary — the same
+    /// `sjd_handoff_syncs` series the non-continuous pipeline charges).
+    handoffs: Arc<Counter>,
 }
 
 impl ContMetrics {
@@ -741,6 +819,7 @@ impl ContMetrics {
             block_iters: registry.histogram("sjd_block_iters"),
             host_syncs: registry.histogram("sjd_host_syncs"),
             stage_wait: registry.histogram("sjd_stage_wait"),
+            handoffs: registry.counter("sjd_handoff_syncs"),
         }
     }
 }
@@ -822,6 +901,8 @@ struct ContStageArgs {
     /// Base decode options; each wave clones them and overrides `seed`
     /// with its composition hash.
     options: SampleOptions,
+    /// Device ordinal this stage is placed on ([`device_placement`]).
+    device: usize,
     warm_cap: usize,
     /// Quality-elastic overload governor (`serve --elastic`): stage 0 feeds
     /// it queue depth and applies its degradation ladder to each freshly
@@ -891,6 +972,7 @@ impl ContinuousPipeline {
             .into_iter()
             .map(|(off, len)| (off, off + len))
             .collect();
+        let placement = device_placement(spans.len(), cfg.devices);
         // Queue i feeds stage i (stage 0 has none — it pulls the batcher).
         let queues: Vec<Arc<StageQueue<Wave>>> =
             (1..spans.len()).map(|_| StageQueue::new(CONT_QUEUE_CAP)).collect();
@@ -910,6 +992,7 @@ impl ContinuousPipeline {
                 tx: queues.get(idx).cloned(),
                 registry: registry.clone(),
                 options: options.clone(),
+                device: placement[idx],
                 warm_cap: cfg.warm_cap,
                 governor: governor.clone(),
                 fault: cfg.fault.clone(),
@@ -1001,6 +1084,7 @@ where
         tx,
         registry,
         options,
+        device,
         warm_cap,
         governor,
         fault,
@@ -1010,8 +1094,9 @@ where
     } = args;
     // Same fault-tolerant wrapper as monolithic workers: transient retry,
     // per-artifact quarantine (live `has_artifact` reroute), deadline-
-    // budgeted backoff through the cell below.
-    let engine = match factory(idx) {
+    // budgeted backoff through the cell below. The factory receives this
+    // stage's device ordinal (the placement seam).
+    let engine = match factory(device) {
         Ok(e) => FaultTolerantBackend::new(e, fault.clone(), &registry),
         Err(e) => {
             let _ = ready.send(Err(e));
@@ -1030,6 +1115,7 @@ where
 
     let m = ContMetrics::new(&registry);
     let occupancy = registry.gauge(&format!("sjd_stage_{idx}_occupancy"));
+    let device_busy = registry.gauge(&format!("sjd_device_{device}_busy"));
     let faults = StageFaults {
         idx,
         deadline: engine.deadline_cell(),
@@ -1065,8 +1151,10 @@ where
                 continue; // everything was already cancelled or expired
             };
             occupancy.add(1);
+            device_busy.add(1);
             let outcome = cont_decode_guarded(&set, span, &mut wave, &m, &faults);
             occupancy.add(-1);
+            device_busy.add(-1);
             match outcome {
                 Ok(()) => forward_or_finish(&set, span, wave, &tx, &governor, &m),
                 Err((msg, lost_now)) => {
@@ -1099,7 +1187,8 @@ where
                 // Doesn't fit: hand it back? The queue is FIFO and we're
                 // its only consumer — decode it next iteration instead.
                 let requeue = extra;
-                if !process_wave(&set, span, requeue, &tx, &governor, &m, &occupancy, &faults) {
+                if !process_wave(&set, span, requeue, &tx, &governor, &m, &occupancy, &device_busy, &faults)
+                {
                     rx.close();
                     break 'recv;
                 }
@@ -1108,7 +1197,7 @@ where
             m.merges.inc();
             merge_waves(&set, &mut wave, extra);
         }
-        if !process_wave(&set, span, wave, &tx, &governor, &m, &occupancy, &faults) {
+        if !process_wave(&set, span, wave, &tx, &governor, &m, &occupancy, &device_busy, &faults) {
             rx.close();
             break 'recv;
         }
@@ -1130,6 +1219,7 @@ fn process_wave<B: Backend>(
     governor: &Option<Arc<OverloadGovernor>>,
     m: &ContMetrics,
     occupancy: &Arc<crate::metrics::Gauge>,
+    device_busy: &Arc<crate::metrics::Gauge>,
     faults: &StageFaults,
 ) -> bool {
     match sweep_and_remap(set, &mut wave, m) {
@@ -1141,8 +1231,10 @@ fn process_wave<B: Backend>(
         Ok(true) => {}
     }
     occupancy.add(1);
+    device_busy.add(1);
     let outcome = cont_decode_guarded(set, span, &mut wave, m, faults);
     occupancy.add(-1);
+    device_busy.add(-1);
     match outcome {
         Ok(()) => {
             forward_or_finish(set, span, wave, tx, governor, m);
@@ -1384,6 +1476,9 @@ fn forward_or_finish<B: Backend>(
 ) {
     match tx {
         Some(tx) => {
+            // The span's one documented host sync just happened and the
+            // wave crosses a span boundary: count the handoff.
+            m.handoffs.inc();
             wave.enqueued = Instant::now();
             if let Err(wave) = tx.send(wave) {
                 // Downstream closed: complete the slots so nothing hangs.
@@ -1442,6 +1537,24 @@ mod tests {
         assert_eq!(plan[3].position, 3);
         assert_eq!(plan[3].block, 0);
         assert!(!plan[3].reversed);
+    }
+
+    #[test]
+    fn device_placement_contiguous_and_clamped() {
+        // 4 stages on 2 devices: two contiguous halves.
+        assert_eq!(device_placement(4, 2), vec![0, 0, 1, 1]);
+        // Uneven split leans early, like window_partition.
+        assert_eq!(device_placement(5, 2), vec![0, 0, 0, 1, 1]);
+        assert_eq!(device_placement(4, 3), vec![0, 0, 1, 2]);
+        // Single device (0 and 1 alike) is the legacy layout.
+        assert_eq!(device_placement(4, 1), vec![0; 4]);
+        assert_eq!(device_placement(4, 0), vec![0; 4]);
+        // More devices than stages clamps: one stage per device, none idle.
+        assert_eq!(device_placement(2, 8), vec![0, 1]);
+        // Ordinals are non-decreasing and dense from 0.
+        let p = device_placement(7, 3);
+        assert!(p.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(p.iter().copied().max(), Some(2));
     }
 
     #[test]

@@ -34,6 +34,22 @@
 //! its τ=0 image equals a solo serial decode regardless of which waves it
 //! rode through.
 //!
+//! ## Replica tier & device spread (`RouterConfig::replicas` / `devices`)
+//!
+//! With `serve --replicas R` (R ≥ 2) the router runs R **independent
+//! pipelines** behind the one bounded [`Batcher`]: one supervised worker per
+//! replica, each with its own engines, gated by a shared [`DispatchBoard`]
+//! so the replica with the fewest waves in flight pulls the next batch —
+//! least-loaded dispatch weighted by actual in-flight work, not round-robin,
+//! so a slow replica sheds load to its peers instead of head-of-line
+//! blocking the queue. A replica lost past the restart budget is retired
+//! from the board and drains through the existing [`FleetStatus`] /
+//! `/healthz` path. `serve --devices N` spreads work across addressable
+//! device ordinals: pipelined stage spans are placed contiguously via
+//! [`super::pipeline::device_placement`], while monolithic workers (and
+//! replicas) round-robin whole engines across ordinals. Per-replica load is
+//! exported as `sjd_replica_{r}_inflight`.
+//!
 //! ## Online tuning (`RouterConfig::tuner`)
 //!
 //! With a [`PolicyTuner`] attached (`serve --tune`), every batch decodes
@@ -131,6 +147,148 @@ pub struct RouterConfig {
     /// or device-lost workers are respawned with a fresh engine up to
     /// `fault.worker_restarts` times (see the supervisor in `start_with`).
     pub fault: FaultPolicy,
+    /// Independent decode pipelines behind the one bounded batcher
+    /// (`serve --replicas R`): ≤ 1 is the classic worker fleet; ≥ 2 spawns
+    /// one supervised worker per replica (overriding `workers`) and gates
+    /// batcher pulls through a least-loaded [`DispatchBoard`] — the replica
+    /// with the fewest waves in flight pulls next (in-flight-weighted, not
+    /// round-robin). A replica retired past the restart budget leaves the
+    /// board and drains via [`FleetStatus`]/`/healthz`. Under `refill` the
+    /// continuous pipelines self-balance through their bounded stage-0
+    /// queues instead of the board.
+    pub replicas: usize,
+    /// Addressable device ordinals to spread work across (`serve --devices
+    /// N`): pipelined stage spans are placed contiguously onto ordinals via
+    /// [`super::pipeline::device_placement`]; monolithic workers (and
+    /// replicas) round-robin whole engines across ordinals (`widx %
+    /// devices`). ≤ 1 keeps everything on ordinal 0, the legacy
+    /// single-device layout. Ordinals beyond what the platform actually
+    /// exposes fail fast at engine construction.
+    pub devices: usize,
+}
+
+/// Least-loaded replica dispatch (`RouterConfig::replicas` ≥ 2): each
+/// replica's batcher pulls are gated on it being among the least-loaded
+/// *live* replicas by waves in flight. Ties proceed, so a fresh fleet
+/// starts pulling immediately, and because the minimum is always attained
+/// by some live replica, at least one replica can always pull — the gate
+/// cannot deadlock the queue. Retired replicas (restart budget exhausted,
+/// or drained at shutdown) leave the minimum computation so an idle corpse
+/// cannot pin it at zero.
+pub(crate) struct DispatchBoard {
+    state: std::sync::Mutex<BoardState>,
+    wake: std::sync::Condvar,
+}
+
+struct BoardState {
+    inflight: Vec<usize>,
+    dead: Vec<bool>,
+}
+
+impl DispatchBoard {
+    fn new(replicas: usize) -> Arc<Self> {
+        Arc::new(DispatchBoard {
+            state: std::sync::Mutex::new(BoardState {
+                inflight: vec![0; replicas],
+                dead: vec![false; replicas],
+            }),
+            wake: std::sync::Condvar::new(),
+        })
+    }
+
+    /// Block until replica `r` is least-loaded among live replicas (ties
+    /// proceed). The timeout re-check keeps the wait robust to a wake
+    /// racing a queue close — the caller's next `next_batch` resolves
+    /// shutdown either way.
+    fn wait_turn(&self, r: usize) {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            let min = st
+                .inflight
+                .iter()
+                .zip(&st.dead)
+                .filter(|(_, dead)| !**dead)
+                .map(|(n, _)| *n)
+                .min();
+            match min {
+                Some(m) if !st.dead[r] && st.inflight[r] > m => {
+                    st = self
+                        .wake
+                        .wait_timeout(st, Duration::from_millis(50))
+                        .unwrap()
+                        .0;
+                }
+                _ => return,
+            }
+        }
+    }
+
+    fn wave_started(&self, r: usize) {
+        self.state.lock().unwrap().inflight[r] += 1;
+    }
+
+    fn wave_done(&self, r: usize) {
+        let mut st = self.state.lock().unwrap();
+        st.inflight[r] = st.inflight[r].saturating_sub(1);
+        drop(st);
+        self.wake.notify_all();
+    }
+
+    fn retire(&self, r: usize) {
+        let mut st = self.state.lock().unwrap();
+        st.dead[r] = true;
+        drop(st);
+        self.wake.notify_all();
+    }
+}
+
+/// One replica's handle onto the shared [`DispatchBoard`], plus its
+/// `sjd_replica_{r}_inflight` gauge. Cloned into pipelined completion
+/// callbacks so the wave decrement runs wherever the wave actually
+/// finishes (the final-stage thread), not where it was submitted.
+#[derive(Clone)]
+pub(crate) struct ReplicaSlot {
+    board: Arc<DispatchBoard>,
+    r: usize,
+    gauge: Arc<Gauge>,
+}
+
+impl ReplicaSlot {
+    fn wait_turn(&self) {
+        self.board.wait_turn(self.r);
+    }
+
+    fn started(&self) {
+        self.board.wave_started(self.r);
+        self.gauge.add(1);
+    }
+
+    fn done(&self) {
+        self.board.wave_done(self.r);
+        self.gauge.add(-1);
+    }
+
+    fn retire(&self) {
+        self.board.retire(self.r);
+    }
+}
+
+/// RAII wave accounting for the monolithic worker: the decrement fires on
+/// every exit path — including the unwind the supervisor catches — so a
+/// lost incarnation never leaves its replica looking loaded on the board.
+struct WaveGuard<'a>(&'a ReplicaSlot);
+
+impl<'a> WaveGuard<'a> {
+    fn begin(slot: &'a ReplicaSlot) -> Self {
+        slot.started();
+        WaveGuard(slot)
+    }
+}
+
+impl Drop for WaveGuard<'_> {
+    fn drop(&mut self) {
+        self.0.done();
+    }
 }
 
 /// Live-vs-configured worker accounting, surfaced by `/healthz` (a degraded
@@ -200,14 +358,17 @@ impl Router {
             cfg.buckets = manifest.decode_buckets(&cfg.model);
         }
         let dir = cfg.artifacts_dir.clone();
-        Self::start_with(cfg, batcher, registry, move |_widx| Engine::new(&dir))
+        Self::start_with_devices(cfg, batcher, registry, move |_widx, ordinal| {
+            Engine::new_on(&dir, ordinal)
+        })
     }
 
     /// Spawn workers over any backend. The factory runs *inside* each worker
     /// thread (backends may be thread-pinned, like the PJRT engine), so it
     /// must be `Send + Clone` but the backend itself need not be `Send`.
     /// This is the seam the mock-backend serving tests and the load bench
-    /// plug into.
+    /// plug into. The factory sees only the worker index; backends that care
+    /// about device placement use [`Router::start_with_devices`] instead.
     pub fn start_with<B, F>(
         cfg: RouterConfig,
         batcher: Batcher,
@@ -218,19 +379,46 @@ impl Router {
         B: Backend,
         F: Fn(usize) -> Result<B> + Send + Clone + 'static,
     {
-        let mut workers = Vec::with_capacity(cfg.workers);
+        Self::start_with_devices(cfg, batcher, registry, move |widx, _ordinal| factory(widx))
+    }
+
+    /// Spawn workers over any backend, with device placement: the factory
+    /// receives `(worker index, device ordinal)` — the ordinal is the
+    /// placement the backend instance should pin to (a pipelined worker
+    /// calls it once per stage thread with that span's placed ordinal; a
+    /// monolithic worker calls it once with `widx % devices`). This is the
+    /// primary entry; [`Router::start_with`] and [`Router::start`] are thin
+    /// wrappers over it.
+    pub fn start_with_devices<B, F>(
+        cfg: RouterConfig,
+        batcher: Batcher,
+        registry: Registry,
+        factory: F,
+    ) -> Result<Self>
+    where
+        B: Backend,
+        F: Fn(usize, usize) -> Result<B> + Send + Clone + 'static,
+    {
+        // Replica tier: R ≥ 2 overrides the worker count — one supervised
+        // worker per replica — and (outside continuous mode, which
+        // self-balances through its bounded stage-0 queues) gates batcher
+        // pulls through the least-loaded dispatch board.
+        let nworkers = if cfg.replicas >= 2 { cfg.replicas } else { cfg.workers.max(1) };
+        let board = (cfg.replicas >= 2 && !cfg.refill).then(|| DispatchBoard::new(nworkers));
+        let mut workers = Vec::with_capacity(nworkers);
         let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<()>>();
-        let fleet = FleetStatus::new(cfg.workers.max(1));
+        let fleet = FleetStatus::new(nworkers);
 
         let refill = cfg.refill;
         let pipelined = cfg.pipeline_depth >= 2;
-        for widx in 0..cfg.workers.max(1) {
+        for widx in 0..nworkers {
             let cfg = cfg.clone();
             let batcher = batcher.clone();
             let registry = registry.clone();
             let ready = ready_tx.clone();
             let factory = factory.clone();
             let live = fleet.live.clone();
+            let board = board.clone();
             // Supervisor loop: run the worker body under `catch_unwind`; a
             // panic or a DeviceLost exit respawns the body — the factory
             // runs again inside this same thread, building a fresh engine —
@@ -243,6 +431,14 @@ impl Router {
                 live.fetch_add(1, Ordering::SeqCst);
                 let m_panics = registry.counter("sjd_worker_panics");
                 let m_restarts = registry.counter("sjd_worker_restarts");
+                // Replica handle onto the dispatch board (replicas ≥ 2
+                // only): gates this worker's batcher pulls on it being
+                // least-loaded, and exports `sjd_replica_{r}_inflight`.
+                let replica = board.as_ref().map(|b| ReplicaSlot {
+                    board: b.clone(),
+                    r: widx,
+                    gauge: registry.gauge(&format!("sjd_replica_{widx}_inflight")),
+                });
                 let mut ready = Some(ready);
                 let mut restarts_left = cfg.fault.worker_restarts;
                 let mut first = true;
@@ -251,9 +447,13 @@ impl Router {
                         if refill {
                             worker_continuous(widx, &cfg, &batcher, &registry, &mut ready, &factory)
                         } else if pipelined {
-                            worker_pipelined(widx, &cfg, &batcher, &registry, &mut ready, &factory)
+                            worker_pipelined(
+                                widx, &cfg, &batcher, &registry, &mut ready, &factory, &replica,
+                            )
                         } else {
-                            worker_main(widx, &cfg, &batcher, &registry, &mut ready, &factory)
+                            worker_main(
+                                widx, &cfg, &batcher, &registry, &mut ready, &factory, &replica,
+                            )
                         }
                     }));
                     let exit = match run {
@@ -286,6 +486,13 @@ impl Router {
                     }
                     first = false;
                 }
+                // Retire from the dispatch board on every permanent exit —
+                // budget exhaustion AND a clean drain — so an idle ex-replica
+                // never pins the board minimum at zero while peers still
+                // have waves to finish.
+                if let Some(rep) = &replica {
+                    rep.retire();
+                }
                 live.fetch_sub(1, Ordering::SeqCst);
             };
             workers.push(
@@ -296,7 +503,7 @@ impl Router {
             );
         }
         drop(ready_tx);
-        for _ in 0..cfg.workers.max(1) {
+        for _ in 0..nworkers {
             ready_rx.recv().expect("worker startup signal")?;
         }
         Ok(Router { batcher, registry, workers, fleet })
@@ -343,17 +550,23 @@ fn worker_main<B, F>(
     registry: &Registry,
     ready: &mut Option<std::sync::mpsc::Sender<Result<()>>>,
     factory: &F,
+    replica: &Option<ReplicaSlot>,
 ) -> WorkerExit
 where
     B: Backend,
-    F: Fn(usize) -> Result<B>,
+    F: Fn(usize, usize) -> Result<B>,
 {
     // Build the thread-pinned backend + per-bucket samplers; report readiness.
     // The engine is wrapped in the fault-tolerant layer: transient retries,
     // per-artifact quarantine (its `has_artifact` is what the samplers'
     // live `effective_block_mode` lookups consult), deadline-budgeted
     // backoff through the shared cell below.
-    let engine = match factory(widx) {
+    //
+    // Monolithic workers own one whole engine, so device spread is at
+    // engine granularity: worker/replica `widx` pins to ordinal
+    // `widx % devices` (stage-span placement is the pipelined paths' job).
+    let ordinal = if cfg.devices > 1 { widx % cfg.devices } else { 0 };
+    let engine = match factory(widx, ordinal) {
         Ok(e) => FaultTolerantBackend::new(e, cfg.fault.clone(), registry),
         Err(e) => {
             ready_err(ready, e);
@@ -394,7 +607,14 @@ where
     // immediately-invoked closure so every exit path (drain, watchdog fire,
     // device loss) funnels through the single watchdog teardown below.
     let exit = (|| {
-    while let Some(batch) = batcher.next_batch() {
+    loop {
+        // Replica tier: pull only while least-loaded (ties proceed). The
+        // wave guard balances the board on every exit path below.
+        if let Some(rep) = replica {
+            rep.wait_turn();
+        }
+        let Some(batch) = batcher.next_batch() else { break };
+        let _wave = replica.as_ref().map(WaveGuard::begin);
         inflight.add(1);
         batch_fill.record(batch.slots.len() as u64);
         // Every slot MUST complete: an oversized batch (a batcher formed
@@ -542,22 +762,26 @@ fn worker_pipelined<B, F>(
     registry: &Registry,
     ready: &mut Option<std::sync::mpsc::Sender<Result<()>>>,
     factory: &F,
+    replica: &Option<ReplicaSlot>,
 ) -> WorkerExit
 where
     B: Backend,
-    F: Fn(usize) -> Result<B> + Send + Clone + 'static,
+    F: Fn(usize, usize) -> Result<B> + Send + Clone + 'static,
 {
-    // Stage threads of this worker share its factory index, so a
-    // per-worker factory seam (tests, engine caches) behaves as before.
+    // Stage threads of this worker share its factory index; the pipeline
+    // hands each stage thread its span's placed device ordinal (see
+    // `device_placement`), which flows through to the factory so each
+    // stage's engine pins to the right device.
     let stage_factory = {
         let factory = factory.clone();
-        move |_stage: usize| factory(widx)
+        move |ordinal: usize| factory(widx, ordinal)
     };
     let pipeline_cfg = PipelineConfig {
         depth: cfg.pipeline_depth,
         stage_threads: cfg.stage_threads,
         warm_cap: cfg.warm_cap,
         fault: cfg.fault.clone(),
+        devices: cfg.devices,
     };
     let pipeline = match DecodePipeline::start(
         &cfg.model,
@@ -596,7 +820,14 @@ where
     };
     let max_bucket = pipeline.buckets.last().copied().unwrap_or(1);
 
-    'feed: while let Some(batch) = batcher.next_batch() {
+    'feed: loop {
+        // Replica tier: the feeder pulls only while least-loaded. Waves
+        // finish on the final-stage thread, so the board decrement lives in
+        // the completion callback, not here.
+        if let Some(rep) = replica {
+            rep.wait_turn();
+        }
+        let Some(batch) = batcher.next_batch() else { break };
         batch_fill.record(batch.slots.len() as u64);
         let mut slots = batch.slots;
         while !slots.is_empty() {
@@ -638,8 +869,18 @@ where
                 opts = gov.apply(&opts);
             }
             metrics.inflight.add(1);
-            let done =
-                completion(widx, bucket, chunk, cfg.tuner.clone(), cfg.governor.clone(), metrics.clone());
+            if let Some(rep) = replica {
+                rep.started();
+            }
+            let done = completion(
+                widx,
+                bucket,
+                chunk,
+                cfg.tuner.clone(),
+                cfg.governor.clone(),
+                metrics.clone(),
+                replica.clone(),
+            );
             let job = PipelineJob { seeds, opts, done };
             match pipeline.submit(job) {
                 Ok(()) => {
@@ -689,17 +930,23 @@ fn worker_continuous<B, F>(
 ) -> WorkerExit
 where
     B: Backend,
-    F: Fn(usize) -> Result<B> + Send + Clone + 'static,
+    F: Fn(usize, usize) -> Result<B> + Send + Clone + 'static,
 {
+    // Same ordinal flow as `worker_pipelined`: the continuous pipeline
+    // hands each stage thread its span's placed device ordinal. Replica
+    // balancing needs no board here — R continuous pipelines sharing the
+    // batcher self-balance through their bounded stage-0 queues (a busy
+    // replica simply stops pulling when its queue caps out).
     let stage_factory = {
         let factory = factory.clone();
-        move |_stage: usize| factory(widx)
+        move |ordinal: usize| factory(widx, ordinal)
     };
     let pipeline_cfg = PipelineConfig {
         depth: cfg.pipeline_depth.max(1),
         stage_threads: cfg.stage_threads,
         warm_cap: cfg.warm_cap,
         fault: cfg.fault.clone(),
+        devices: cfg.devices,
     };
     let mut options = cfg.options.clone();
     // Same demotion rule as `DecodePipeline::submit`: draft-then-refine
@@ -765,6 +1012,7 @@ fn completion(
     tuner: Option<Arc<PolicyTuner>>,
     governor: Option<Arc<OverloadGovernor>>,
     m: ChunkMetrics,
+    replica: Option<ReplicaSlot>,
 ) -> Box<dyn FnOnce(PipelineResult) + Send + 'static> {
     Box::new(move |result: PipelineResult| {
         match result {
@@ -806,5 +1054,10 @@ fn completion(
             }
         }
         m.inflight.add(-1);
+        // Replica tier: this wave is off the board — wake any peer (or
+        // this replica's own feeder) waiting to become least-loaded.
+        if let Some(rep) = &replica {
+            rep.done();
+        }
     })
 }

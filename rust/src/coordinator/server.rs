@@ -54,6 +54,14 @@
 //! `sjd_shed_total{reason="queue_full"}` / `sjd_shed_total{reason="shutdown"}`.
 //! `X-SJD-Priority: high` routes a request into the batcher's high-priority
 //! class (see `Batcher` weighted drain).
+//!
+//! With `serve --client-rate R` each client — identified by its
+//! `X-SJD-Client` header, headerless requests pooled under `"-"` — gets a
+//! token bucket refilling at R requests/second (burst of one second's
+//! worth, floor 1). An over-quota `/generate` is shed **before** it touches
+//! the batcher: 429 with a `Retry-After` hint sized to the bucket's actual
+//! refill, counted in `sjd_shed_total{reason="quota"}` — so one greedy
+//! client exhausts its own budget, not the shared admission queue.
 
 use super::batcher::{
     Batcher, BatcherClosed, Priority, QueueFull, SlotHandle, SubmitOpts, DEADLINE_EXPIRED_MSG,
@@ -65,10 +73,11 @@ use crate::imageio::{self, Image};
 use crate::jsonx::{self, Value};
 use crate::metrics::Registry;
 use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Total bytes allowed for the request line + all headers.
@@ -77,6 +86,11 @@ const MAX_HEADER_BYTES: usize = 64 << 10;
 const MAX_HEADERS: usize = 128;
 /// Maximum request body size.
 const MAX_BODY_BYTES: usize = 64 << 20;
+/// Maximum `X-SJD-Client` identity length (identities key a shared map).
+const MAX_CLIENT_ID_BYTES: usize = 128;
+/// Distinct client identities tracked before idle buckets are evicted — a
+/// bound on quota-map memory against identity-spraying clients.
+const MAX_QUOTA_CLIENTS: usize = 4096;
 
 /// A parsed HTTP request.
 #[derive(Debug)]
@@ -94,6 +108,10 @@ pub struct HttpRequest {
     pub deadline_ms: Option<u64>,
     /// `X-SJD-Priority` header (`high` | `normal`, default normal).
     pub priority: Priority,
+    /// `X-SJD-Client` header: the caller's identity for per-client quota
+    /// accounting (`serve --client-rate`). `None` (no header) pools the
+    /// request under the shared anonymous identity.
+    pub client: Option<String>,
 }
 
 /// Marker error for a connection that closed cleanly before sending a
@@ -109,6 +127,23 @@ impl std::fmt::Display for ConnectionClosed {
 }
 
 impl std::error::Error for ConnectionClosed {}
+
+/// Marker error for a per-client quota shed (`serve --client-rate`):
+/// `/generate` answers 429 with a `Retry-After` sized to the bucket's
+/// actual refill and counts the shed in `sjd_shed_total{reason="quota"}`.
+#[derive(Debug)]
+pub struct QuotaExceeded {
+    /// Whole seconds until the client's bucket holds a token again (≥ 1).
+    pub retry_after: u64,
+}
+
+impl std::fmt::Display for QuotaExceeded {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "client over quota (retry after {}s)", self.retry_after)
+    }
+}
+
+impl std::error::Error for QuotaExceeded {}
 
 /// Read one `\n`-terminated line without buffering more than `max` bytes.
 ///
@@ -171,6 +206,7 @@ pub fn parse_request(reader: &mut impl BufRead) -> Result<HttpRequest> {
     let mut content_length = 0usize;
     let mut deadline_ms: Option<u64> = None;
     let mut priority = Priority::Normal;
+    let mut client: Option<String> = None;
     let mut n_headers = 0usize;
     loop {
         if budget == 0 {
@@ -207,6 +243,16 @@ pub fn parse_request(reader: &mut impl BufRead) -> Result<HttpRequest> {
                 } else {
                     bail!("bad x-sjd-priority {v:?} (expected high|normal)");
                 }
+            } else if k.eq_ignore_ascii_case("x-sjd-client") {
+                let v = v.trim();
+                // Identities key a shared map, so cap their size; an empty
+                // value is the same as no header (anonymous pool).
+                if v.len() > MAX_CLIENT_ID_BYTES {
+                    bail!("x-sjd-client exceeds {MAX_CLIENT_ID_BYTES} bytes");
+                }
+                if !v.is_empty() {
+                    client = Some(v.to_string());
+                }
             }
         }
     }
@@ -215,7 +261,7 @@ pub fn parse_request(reader: &mut impl BufRead) -> Result<HttpRequest> {
     }
     let mut body = vec![0u8; content_length];
     reader.read_exact(&mut body)?;
-    Ok(HttpRequest { method, path, body, keep_alive, deadline_ms, priority })
+    Ok(HttpRequest { method, path, body, keep_alive, deadline_ms, priority, client })
 }
 
 /// Serialize an HTTP response; `keep_alive` picks the `Connection` header.
@@ -327,6 +373,62 @@ impl PolicySource {
     }
 }
 
+/// One client's token bucket: continuous refill, burst capacity of one
+/// second's worth of rate (floor 1 so a rate < 1 req/s still ever admits).
+struct TokenBucket {
+    tokens: f64,
+    last: Instant,
+}
+
+/// Per-client admission quotas (`serve --client-rate`), keyed by the
+/// `X-SJD-Client` identity. One lock around a small map: the charge is a
+/// handful of float ops on the request path, orders of magnitude under the
+/// decode it gates.
+pub struct ClientQuotas {
+    rate: f64,
+    burst: f64,
+    buckets: Mutex<HashMap<String, TokenBucket>>,
+}
+
+impl ClientQuotas {
+    pub fn new(rate: f64) -> Self {
+        ClientQuotas { rate, burst: rate.max(1.0), buckets: Mutex::new(HashMap::new()) }
+    }
+
+    /// Charge one request to `client`'s bucket. `Err` carries the whole
+    /// seconds until the bucket holds a token again (the `Retry-After`
+    /// hint).
+    pub fn admit(&self, client: &str) -> std::result::Result<(), u64> {
+        let mut buckets = self.buckets.lock().unwrap();
+        let now = Instant::now();
+        if !buckets.contains_key(client) && buckets.len() >= MAX_QUOTA_CLIENTS {
+            // Cap reached by identity spraying: evict buckets that have
+            // idled back to full — they hold no throttling state. If every
+            // bucket is mid-charge (a genuine 4096-client storm), the new
+            // identity is shed rather than growing the map.
+            let rate = self.rate;
+            let burst = self.burst;
+            buckets.retain(|_, b| {
+                (b.tokens + now.duration_since(b.last).as_secs_f64() * rate) < burst
+            });
+            if buckets.len() >= MAX_QUOTA_CLIENTS {
+                return Err(1);
+            }
+        }
+        let b = buckets
+            .entry(client.to_string())
+            .or_insert(TokenBucket { tokens: self.burst, last: now });
+        b.tokens = (b.tokens + now.duration_since(b.last).as_secs_f64() * self.rate).min(self.burst);
+        b.last = now;
+        if b.tokens >= 1.0 {
+            b.tokens -= 1.0;
+            Ok(())
+        } else {
+            Err((((1.0 - b.tokens) / self.rate).ceil() as u64).max(1))
+        }
+    }
+}
+
 /// Server tuning knobs.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
@@ -350,6 +452,10 @@ pub struct ServerConfig {
     /// budget), `/healthz` answers 503 so load balancers rotate the replica
     /// out. `None` keeps `/healthz` unconditionally 200.
     pub fleet: Option<FleetStatus>,
+    /// Per-client admission quota in requests/second (`serve
+    /// --client-rate`), keyed by the `X-SJD-Client` header (headerless
+    /// requests pool under `"-"`). `0.0` disables quota enforcement.
+    pub client_rate: f64,
 }
 
 impl Default for ServerConfig {
@@ -361,6 +467,7 @@ impl Default for ServerConfig {
             policy: None,
             default_deadline: None,
             fleet: None,
+            client_rate: 0.0,
         }
     }
 }
@@ -381,6 +488,7 @@ struct ServerState {
     policy: Option<PolicySource>,
     default_deadline: Option<Duration>,
     fleet: Option<FleetStatus>,
+    quotas: Option<ClientQuotas>,
 }
 
 /// Serving front end bound to a batcher + metrics registry.
@@ -412,6 +520,7 @@ impl Server {
                 policy: cfg.policy,
                 default_deadline: cfg.default_deadline,
                 fleet: cfg.fleet,
+                quotas: (cfg.client_rate > 0.0).then(|| ClientQuotas::new(cfg.client_rate)),
             }),
             conn_pool: ThreadPool::new(cfg.conn_threads),
         }
@@ -586,6 +695,15 @@ fn handle_request(
                 write_response(stream, 400, "application/json", error_json(&e).as_bytes(), keep)
             }
             Ok((n, seed)) => {
+                // Per-client quota, charged before the request touches the
+                // batcher: an over-quota client is shed out of its own
+                // budget, not out of the shared admission queue.
+                if let Some(quotas) = &inner.quotas {
+                    if let Err(retry_after) = quotas.admit(req.client.as_deref().unwrap_or("-")) {
+                        let e = anyhow::Error::new(QuotaExceeded { retry_after });
+                        return write_generate_error(inner, &e, stream, keep);
+                    }
+                }
                 // Per-request QoS: header deadline wins over the configured
                 // default; both are absolute from this point.
                 let deadline = req
@@ -618,6 +736,18 @@ fn write_generate_error(
     keep: bool,
 ) -> Result<()> {
     let body = error_json(e);
+    if let Some(q) = e.downcast_ref::<QuotaExceeded>() {
+        inner.registry.counter("sjd_shed_total{reason=\"quota\"}").inc();
+        let retry = q.retry_after.to_string();
+        return write_response_extra(
+            stream,
+            429,
+            "application/json",
+            &[("Retry-After", &retry)],
+            body.as_bytes(),
+            keep,
+        );
+    }
     if e.is::<QueueFull>() {
         inner.registry.counter("sjd_shed_total{reason=\"queue_full\"}").inc();
         // Retry-After: one batch window is the natural backoff quantum.
@@ -966,6 +1096,61 @@ mod tests {
     }
 
     #[test]
+    fn parse_client_header() {
+        let raw = b"POST /generate HTTP/1.1\r\nX-SJD-Client: tenant-a\r\n\r\n";
+        let mut r = std::io::BufReader::new(&raw[..]);
+        assert_eq!(parse_request(&mut r).unwrap().client.as_deref(), Some("tenant-a"));
+
+        // No header, and an empty value, both pool as anonymous.
+        let raw = b"POST /generate HTTP/1.1\r\n\r\n";
+        let mut r = std::io::BufReader::new(&raw[..]);
+        assert_eq!(parse_request(&mut r).unwrap().client, None);
+        let raw = b"POST /generate HTTP/1.1\r\nx-sjd-client:   \r\n\r\n";
+        let mut r = std::io::BufReader::new(&raw[..]);
+        assert_eq!(parse_request(&mut r).unwrap().client, None);
+
+        // Oversized identities are the client's fault (400), not a
+        // silently-truncated map key.
+        let raw = format!(
+            "POST /generate HTTP/1.1\r\nX-SJD-Client: {}\r\n\r\n",
+            "c".repeat(MAX_CLIENT_ID_BYTES + 1)
+        );
+        let mut r = std::io::BufReader::new(raw.as_bytes());
+        assert!(parse_request(&mut r).is_err());
+    }
+
+    #[test]
+    fn quota_bucket_burst_and_isolation() {
+        // rate 2 req/s → burst 2: two immediate admits, the third sheds
+        // with a refill-sized Retry-After.
+        let q = ClientQuotas::new(2.0);
+        assert!(q.admit("a").is_ok());
+        assert!(q.admit("a").is_ok());
+        let wait = q.admit("a").unwrap_err();
+        assert!(wait >= 1, "Retry-After must be at least a second, got {wait}");
+        // Another client's bucket is untouched by a's exhaustion.
+        assert!(q.admit("b").is_ok());
+        // Sub-1 rates still get a one-token burst (floor), so a polite
+        // low-rate client is admitted at all.
+        let slow = ClientQuotas::new(0.25);
+        assert!(slow.admit("c").is_ok());
+        let wait = slow.admit("c").unwrap_err();
+        assert!(wait >= 4, "0.25 req/s refills a token in 4s, got {wait}");
+    }
+
+    #[test]
+    fn quota_map_bounded_under_identity_spray() {
+        // Spraying distinct identities cannot grow the map past the cap:
+        // idle-full buckets are evicted to make room, so fresh identities
+        // keep being admitted while the map stays bounded.
+        let q = ClientQuotas::new(1000.0);
+        for i in 0..(MAX_QUOTA_CLIENTS + 500) {
+            let _ = q.admit(&format!("spray-{i}"));
+        }
+        assert!(q.buckets.lock().unwrap().len() <= MAX_QUOTA_CLIENTS);
+    }
+
+    #[test]
     fn fuzz_http_parser_never_panics() {
         // Structure-aware fuzz sweep over the request parser: mutated/spliced
         // byte soups must parse-or-reject, never panic or loop. A parsed
@@ -975,6 +1160,7 @@ mod tests {
             b"GET /healthz HTTP/1.1\r\n\r\n",
             b"GET /metrics HTTP/1.0\r\nConnection: Keep-Alive\r\n\r\n",
             b"POST /generate HTTP/1.1\r\nX-SJD-Deadline-Ms: 250\r\nX-SJD-Priority: high\r\n\r\n",
+            b"POST /generate HTTP/1.1\r\nX-SJD-Client: tenant-a\r\n\r\n",
             b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n",
         ];
         let dict: &[&[u8]] = &[
@@ -982,6 +1168,7 @@ mod tests {
             b"Connection:",
             b"X-SJD-Deadline-Ms:",
             b"X-SJD-Priority:",
+            b"X-SJD-Client:",
             b"HTTP/1.1",
             b"HTTP/1.0",
             b"\r\n",

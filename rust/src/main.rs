@@ -5,6 +5,7 @@
 //! sjd serve   --model tf10 --batch-sizes 1,2,4,8 --http-threads 8
 //! sjd serve   --model tf10 --tune --pipeline-depth 2
 //! sjd serve   --model tf10 --refill
+//! sjd serve   --model tf10 --devices auto --replicas 2 --client-rate 5
 //! sjd sample  --model tf10 --batch 8 --policy gs:4 --tau 0.5 --out samples.png
 //! sjd recon   --model tf10 --batch 8
 //! sjd calibrate --model tf10 --batch 8 --windows 8 --out tf10_policy.json
@@ -135,6 +136,29 @@ fn cli() -> Command {
                     "times a panicked or device-lost worker is respawned with a \
                      fresh engine before being retired; a degraded fleet turns \
                      /healthz non-200",
+                )
+                .opt(
+                    "devices",
+                    "1",
+                    "addressable device ordinals to spread work across ('auto' = \
+                     all the platform exposes): pipelined stage spans place \
+                     contiguously onto ordinals; monolithic workers/replicas \
+                     round-robin whole engines",
+                )
+                .opt(
+                    "replicas",
+                    "1",
+                    "independent decode pipelines behind the one batcher; >=2 \
+                     overrides --workers and dispatches each wave to the \
+                     least-loaded replica (a replica retired past \
+                     --worker-restarts drains via /healthz)",
+                )
+                .opt(
+                    "client-rate",
+                    "0",
+                    "per-client admission quota in requests/second, keyed by the \
+                     X-SJD-Client header (headerless requests pool together); \
+                     over-quota requests shed 429 + Retry-After (0 = off)",
                 ),
         )
         .sub(
@@ -347,6 +371,20 @@ fn cmd_serve(p: &sjd::cli::Parsed) -> Result<()> {
     } else {
         None
     };
+    // Device spread (--devices N|auto): 'auto' probes the platform through a
+    // throwaway ordinal-0 engine — the same client the workers will build —
+    // so the resolved count is exactly what their engines will see.
+    let devices = match p.str("devices") {
+        "auto" => {
+            let n = Engine::new(&artifacts_dir)?.device_count();
+            println!("devices auto: platform exposes {n} addressable device(s)");
+            n
+        }
+        spec => spec.parse::<usize>().map_err(|_| {
+            anyhow::anyhow!("bad --devices '{spec}' (expected a count or 'auto')")
+        })?,
+    };
+    let replicas = p.usize("replicas")?;
     let router = Router::start(
         RouterConfig {
             artifacts_dir,
@@ -366,15 +404,22 @@ fn cmd_serve(p: &sjd::cli::Parsed) -> Result<()> {
                 worker_restarts: p.usize("worker-restarts")?,
                 ..Default::default()
             },
+            replicas,
+            devices,
         },
         batcher.clone(),
         registry.clone(),
     )?;
     println!(
-        "serving model {model} on {} ({} workers, buckets {buckets:?}, policy {policy_label}, \
-         init {}{})",
+        "serving model {model} on {} ({}, buckets {buckets:?}, {} device(s), policy \
+         {policy_label}, init {}{})",
         p.str("addr"),
-        p.usize("workers")?,
+        if replicas >= 2 {
+            format!("{replicas} replicas")
+        } else {
+            format!("{} workers", p.usize("workers")?)
+        },
+        devices.max(1),
         init.label(),
         if tuner.is_some() { ", tuned" } else { "" },
     );
@@ -402,6 +447,7 @@ fn cmd_serve(p: &sjd::cli::Parsed) -> Result<()> {
                 tuner: tuner.clone(),
             }),
             fleet: Some(router.fleet()),
+            client_rate: p.f64("client-rate")?,
             ..Default::default()
         },
     );

@@ -7,6 +7,12 @@
 //! serving (see `coordinator::router`) gives each worker thread its own
 //! `Engine`; requests/results cross threads as [`HostTensor`]s, which are
 //! plain `Send` data.
+//!
+//! Each engine is additionally **device-pinned**: construction resolves one
+//! of the client's addressable devices ([`Engine::new_on`]) and every minted
+//! buffer is stamped with that ordinal, so a multi-device deployment (stage
+//! sharding in `coordinator::pipeline`) can run one engine per ordinal with
+//! hard aliasing guards between them.
 
 use super::manifest::{ArtifactMeta, DType, Manifest};
 use super::value::DeviceValue;
@@ -44,13 +50,22 @@ pub struct CallStats {
 }
 
 /// Engine-wide explicit transfer statistics ([`Engine::to_device`] /
-/// [`Engine::to_host`]), outside any one artifact's ledger.
+/// [`Engine::to_host`] / [`Engine::to_ordinal`]), outside any one artifact's
+/// ledger.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct TransferStats {
     pub uploads: u64,
     pub upload_time: Duration,
     pub syncs: u64,
     pub sync_time: Duration,
+    /// Ordinal this engine is pinned to — every upload/sync above happened
+    /// against this device, so stats from engines on different ordinals can
+    /// be told apart after the fact.
+    pub device_ordinal: usize,
+    /// Cross-ordinal moves that stayed on the device fabric
+    /// ([`Engine::to_ordinal`] via PJRT device→device copy — no host hop).
+    pub device_copies: u64,
+    pub device_copy_time: Duration,
 }
 
 struct Compiled {
@@ -89,9 +104,12 @@ fn literal_to_host_outputs(
     parts.iter().map(HostTensor::from_literal).collect()
 }
 
-/// Device-side payload of a [`Value::Device`] minted by this engine.
+/// Device-side payload of a [`Value::Device`] minted by this engine. The
+/// ordinal stamp is the aliasing guard: a buffer living on ordinal `a` can
+/// never be executed or synced through an engine pinned to ordinal `b ≠ a`.
 struct EngineBuffer {
     buf: xla::PjRtBuffer,
+    ordinal: usize,
 }
 
 /// Loads HLO-text artifacts on demand, validates signatures, executes.
@@ -101,26 +119,64 @@ pub struct Engine {
     cache: RefCell<HashMap<String, Rc<Compiled>>>,
     stats: RefCell<HashMap<String, CallStats>>,
     transfer: RefCell<TransferStats>,
+    /// Ordinal into the client's addressable devices this engine is pinned
+    /// to; every minted buffer carries it (see [`EngineBuffer`]).
+    device_ordinal: usize,
+    /// Addressable-device count, snapshotted at construction.
+    device_count: usize,
     /// When true, input shapes/dtypes are checked against the manifest on
     /// every call (cheap; disabled only in the innermost perf benches).
     pub validate_calls: bool,
 }
 
 impl Engine {
-    /// Create an engine over `artifacts/manifest.json` in `artifacts_dir`.
+    /// Create an engine over `artifacts/manifest.json` in `artifacts_dir`,
+    /// pinned to device ordinal 0 (the runtime's default placement).
     pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        Self::new_on(artifacts_dir, 0)
+    }
+
+    /// Create an engine pinned to one of the client's addressable devices.
+    /// Fails fast on an out-of-range ordinal rather than silently aliasing
+    /// device 0.
+    pub fn new_on(artifacts_dir: impl AsRef<Path>, device_ordinal: usize) -> Result<Self> {
         let manifest = Manifest::load(artifacts_dir.as_ref().join("manifest.json"))?;
-        Self::with_manifest(manifest)
+        Self::with_manifest_on(manifest, device_ordinal)
     }
 
     pub fn with_manifest(manifest: Manifest) -> Result<Self> {
+        Self::with_manifest_on(manifest, 0)
+    }
+
+    pub fn with_manifest_on(manifest: Manifest, device_ordinal: usize) -> Result<Self> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let devices = client.addressable_devices();
+        let device_count = devices.len();
+        if device_ordinal >= device_count {
+            bail!(
+                "device ordinal {device_ordinal} out of range: platform '{}' has \
+                 {device_count} addressable device(s)",
+                client.platform_name()
+            );
+        }
+        log::info!(
+            "engine: platform '{}', pinned to device ordinal {device_ordinal}/{device_count} \
+             (device id {})",
+            client.platform_name(),
+            devices[device_ordinal].id()
+        );
+        drop(devices);
         Ok(Engine {
             client,
             manifest,
             cache: RefCell::new(HashMap::new()),
             stats: RefCell::new(HashMap::new()),
-            transfer: RefCell::new(TransferStats::default()),
+            transfer: RefCell::new(TransferStats {
+                device_ordinal,
+                ..TransferStats::default()
+            }),
+            device_ordinal,
+            device_count,
             validate_calls: true,
         })
     }
@@ -131,6 +187,39 @@ impl Engine {
 
     pub fn platform(&self) -> String {
         self.client.platform_name()
+    }
+
+    /// Ordinal (into the client's addressable devices) this engine is pinned
+    /// to.
+    pub fn device_ordinal(&self) -> usize {
+        self.device_ordinal
+    }
+
+    /// Number of addressable devices on this engine's client.
+    pub fn device_count(&self) -> usize {
+        self.device_count
+    }
+
+    /// Resolve an addressable device by ordinal. The `Vec` detour is the
+    /// only enumeration xla-rs exposes; devices are cheap handles.
+    fn resolve_device(&self, ordinal: usize) -> Result<xla::PjRtDevice<'_>> {
+        let mut devices = self.client.addressable_devices();
+        if ordinal >= devices.len() {
+            bail!("device ordinal {ordinal} out of range ({} addressable)", devices.len());
+        }
+        Ok(devices.swap_remove(ordinal))
+    }
+
+    /// Upload one literal onto an ordinal's device. Ordinal 0 keeps the
+    /// legacy `None` (runtime default placement) fast path byte-for-byte;
+    /// any other ordinal passes the resolved device explicitly.
+    fn upload_literal(&self, lit: &xla::Literal, ordinal: usize) -> Result<xla::PjRtBuffer> {
+        if ordinal == 0 {
+            Ok(self.client.buffer_from_host_literal(None, lit)?)
+        } else {
+            let dev = self.resolve_device(ordinal)?;
+            Ok(self.client.buffer_from_host_literal(Some(&dev), lit)?)
+        }
     }
 
     /// Compile (or fetch from cache) an artifact by name.
@@ -303,8 +392,7 @@ impl Engine {
                     let tm0 = Instant::now();
                     let lit = t.to_literal()?;
                     let buf = self
-                        .client
-                        .buffer_from_host_literal(None, &lit)
+                        .upload_literal(&lit, self.device_ordinal)
                         .with_context(|| format!("promoting host input for '{name}'"))?;
                     marshal_in += tm0.elapsed();
                     Some(buf)
@@ -323,6 +411,14 @@ impl Engine {
                             "artifact '{name}': device input was not minted by this engine"
                         )
                     })?;
+                    if eb.ordinal != self.device_ordinal {
+                        bail!(
+                            "artifact '{name}': device input was not minted by this engine's \
+                             device (buffer lives on ordinal {}, engine is pinned to ordinal {})",
+                            eb.ordinal,
+                            self.device_ordinal
+                        );
+                    }
                     &eb.buf
                 }
             });
@@ -350,7 +446,7 @@ impl Engine {
                     Value::Device(DeviceValue::new(
                         spec.shape.clone(),
                         spec.dtype,
-                        Rc::new(EngineBuffer { buf }),
+                        Rc::new(EngineBuffer { buf, ordinal: self.device_ordinal }),
                     ))
                 })
                 .collect()
@@ -389,14 +485,16 @@ impl Engine {
         Ok(outs)
     }
 
-    /// Upload a host tensor to the device once, for reuse across calls.
+    /// Upload a host tensor to this engine's pinned device once, for reuse
+    /// across calls.
     pub fn to_device(&self, t: &HostTensor) -> Result<Value> {
+        self.upload_to_ordinal(t, self.device_ordinal)
+    }
+
+    fn upload_to_ordinal(&self, t: &HostTensor, ordinal: usize) -> Result<Value> {
         let tm0 = Instant::now();
         let lit = t.to_literal()?;
-        let buf = self
-            .client
-            .buffer_from_host_literal(None, &lit)
-            .context("uploading host tensor")?;
+        let buf = self.upload_literal(&lit, ordinal).context("uploading host tensor")?;
         let dtype = match t {
             HostTensor::F32 { .. } => DType::F32,
             HostTensor::I32 { .. } => DType::I32,
@@ -407,7 +505,7 @@ impl Engine {
         Ok(Value::Device(DeviceValue::new(
             t.shape().to_vec(),
             dtype,
-            Rc::new(EngineBuffer { buf }),
+            Rc::new(EngineBuffer { buf, ordinal }),
         )))
     }
 
@@ -419,6 +517,14 @@ impl Engine {
                 let eb = d
                     .downcast::<EngineBuffer>()
                     .context("device value was not minted by this engine")?;
+                if eb.ordinal != self.device_ordinal {
+                    bail!(
+                        "device value was not minted by this engine's device (buffer lives \
+                         on ordinal {}, engine is pinned to ordinal {})",
+                        eb.ordinal,
+                        self.device_ordinal
+                    );
+                }
                 let tm0 = Instant::now();
                 let lit = eb.buf.to_literal_sync().context("syncing device buffer")?;
                 let t = HostTensor::from_literal(&lit)?;
@@ -426,6 +532,69 @@ impl Engine {
                 xfer.syncs += 1;
                 xfer.sync_time += tm0.elapsed();
                 Ok(t)
+            }
+        }
+    }
+
+    /// Move a value onto addressable-device `ordinal` of this engine's
+    /// client.
+    ///
+    /// Same-ordinal device values come back as cheap handle clones — no
+    /// transfer, nothing charged. A cross-ordinal move tries the PJRT
+    /// device→device copy first (charged to [`TransferStats::device_copies`],
+    /// no host round-trip); where the runtime rejects the copy it falls back
+    /// to the documented host hop — one blocking sync plus one upload,
+    /// truthfully charged to `syncs`/`uploads` like any other host crossing.
+    /// Host values are plain uploads to the target ordinal.
+    ///
+    /// The result is stamped with `ordinal`, so only an engine pinned there
+    /// may execute or sync it. This moves values across *devices*, never
+    /// across engines or threads — the client stays thread-pinned, and
+    /// cross-thread span handoff remains host-mediated (module docs).
+    pub fn to_ordinal(&self, v: &Value, ordinal: usize) -> Result<Value> {
+        if ordinal >= self.device_count {
+            bail!("device ordinal {ordinal} out of range ({} addressable)", self.device_count);
+        }
+        let d = match v {
+            Value::Host(t) => return self.upload_to_ordinal(t, ordinal),
+            Value::Device(d) => d,
+        };
+        let eb = d
+            .downcast::<EngineBuffer>()
+            .context("device value was not minted by this engine")?;
+        if eb.ordinal == ordinal {
+            return Ok(v.clone());
+        }
+        let t0 = Instant::now();
+        let target = self.resolve_device(ordinal)?;
+        match eb.buf.copy_to_device(target) {
+            Ok(buf) => {
+                let mut xfer = self.transfer.borrow_mut();
+                xfer.device_copies += 1;
+                xfer.device_copy_time += t0.elapsed();
+                Ok(Value::Device(DeviceValue::new(
+                    v.shape().to_vec(),
+                    v.dtype(),
+                    Rc::new(EngineBuffer { buf, ordinal }),
+                )))
+            }
+            Err(e) => {
+                // Fallback: the documented host hop, charged where it really
+                // happens (one sync, one upload) so TransferStats never
+                // under-reports the cost of a runtime without fabric copies.
+                log::debug!(
+                    "device→device copy {}→{ordinal} unsupported ({e}); host fallback",
+                    eb.ordinal
+                );
+                let tm0 = Instant::now();
+                let lit = eb.buf.to_literal_sync().context("syncing device buffer")?;
+                let t = HostTensor::from_literal(&lit)?;
+                {
+                    let mut xfer = self.transfer.borrow_mut();
+                    xfer.syncs += 1;
+                    xfer.sync_time += tm0.elapsed();
+                }
+                self.upload_to_ordinal(&t, ordinal)
             }
         }
     }
@@ -450,6 +619,7 @@ impl Engine {
             s.host_marshals = 0;
             s.output_syncs = 0;
         }
-        *self.transfer.borrow_mut() = TransferStats::default();
+        *self.transfer.borrow_mut() =
+            TransferStats { device_ordinal: self.device_ordinal, ..TransferStats::default() };
     }
 }

@@ -49,6 +49,16 @@
 //!   (see `coordinator::router`) gives each worker its own engine; anything
 //!   crossing threads must be synced to a plain `Send` [`HostTensor`] first.
 //!   Dropping the last clone of a device value frees its buffer.
+//! * **Device ordinals**: a client may expose several addressable devices. An
+//!   [`Engine`] is pinned to one ordinal at construction and stamps every
+//!   buffer it mints with that ordinal; feeding a buffer minted on ordinal
+//!   `a` to an engine pinned to `b ≠ a` is a hard error (the aliasing guard —
+//!   two engines can no longer silently share device 0). Within one engine,
+//!   [`Backend::to_ordinal`] is the sanctioned cross-ordinal move: a PJRT
+//!   device→device copy where the runtime supports it, the documented host
+//!   hop (one sync + one upload) otherwise, both truthfully charged in
+//!   [`TransferStats`]. Ordinal pinning never relaxes thread pinning: values
+//!   still cannot cross threads, whatever their ordinal.
 //!
 //! The legacy host-tensor [`Backend::call`] survives as a default-method shim
 //! over `call_v` + `to_host` so the long tail of benches and examples keeps
@@ -102,6 +112,30 @@ pub trait Backend {
         }
     }
 
+    /// The addressable-device ordinal this backend's minted values live on.
+    /// Host-only backends are ordinal 0 by definition; the real [`Engine`]
+    /// reports the ordinal it was pinned to at construction, and multi-device
+    /// placement (`coordinator::pipeline`) keys its per-device metrics off it.
+    fn device_ordinal(&self) -> usize {
+        0
+    }
+
+    /// Move a value onto addressable-device `ordinal`, staying on the device
+    /// fabric where the runtime supports it (see [`Engine::to_ordinal`]).
+    ///
+    /// The host-only default passes host values through unchanged — host
+    /// tensors carry no device identity — and rejects foreign device values,
+    /// mirroring [`Backend::to_host`].
+    fn to_ordinal(&self, v: &Value, _ordinal: usize) -> anyhow::Result<Value> {
+        match v {
+            Value::Host(_) => Ok(v.clone()),
+            Value::Device(d) => anyhow::bail!(
+                "backend cannot move a device value (shape {:?}) — was it minted by a different backend?",
+                d.shape()
+            ),
+        }
+    }
+
     /// Whether an artifact is available, for optional fast paths (e.g. the
     /// device-side token-reversal gather). Backends default to `false`, which
     /// routes callers to their documented host fallback.
@@ -135,6 +169,14 @@ impl Backend for Engine {
 
     fn to_host(&self, v: Value) -> anyhow::Result<HostTensor> {
         Engine::to_host(self, v)
+    }
+
+    fn device_ordinal(&self) -> usize {
+        Engine::device_ordinal(self)
+    }
+
+    fn to_ordinal(&self, v: &Value, ordinal: usize) -> anyhow::Result<Value> {
+        Engine::to_ordinal(self, v, ordinal)
     }
 
     fn has_artifact(&self, name: &str) -> bool {

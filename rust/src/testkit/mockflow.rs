@@ -446,6 +446,11 @@ pub struct MockServeBackend {
     /// match exactly on the `_{role}_b` segment, so hiding
     /// `block_jstep_win` leaves `block_jstep_win_fuse` visible.
     pub missing: Vec<(String, Option<usize>)>,
+    /// The device ordinal this backend claims its values live on
+    /// ([`Backend::device_ordinal`]). Multi-device placement tests give the
+    /// factory one ledger *per ordinal* and pin which ordinal's backend
+    /// executed which calls; the values themselves stay host-only.
+    pub ordinal: usize,
     pub ledger: Arc<MockLedger>,
 }
 
@@ -457,8 +462,17 @@ impl MockServeBackend {
             slot_delay,
             call_overhead: Duration::ZERO,
             missing: Vec::new(),
+            ordinal: 0,
             ledger,
         }
+    }
+
+    /// Builder: claim this backend's values live on device `ordinal` (the
+    /// mock analog of `Engine::new_on`). Placement tests pair it with a
+    /// per-ordinal ledger.
+    pub fn on_ordinal(mut self, ordinal: usize) -> Self {
+        self.ordinal = ordinal;
+        self
     }
 
     /// Builder: set the per-call dispatch/sync overhead.
@@ -514,6 +528,23 @@ impl Backend for MockServeBackend {
             std::thread::sleep(self.slot_delay * (batch * steps) as u32);
         }
         Ok(self.flow.exec(name, &host)?.into_iter().map(Value::Host).collect())
+    }
+
+    fn device_ordinal(&self) -> usize {
+        self.ordinal
+    }
+
+    fn to_host(&self, v: Value) -> Result<HostTensor> {
+        let t = Self::host(&v)?;
+        // Record latent-tensor syncs per ordinal: a stage span ends in
+        // exactly one rank-3 ([B, L, D]) host sync — the cross-span handoff
+        // — so placement tests can see which ordinal paid it. Rank-1/2
+        // syncs (residuals, histories, per-token rows) are decode-internal
+        // and not interesting here.
+        if t.shape().len() == 3 {
+            self.ledger.bump(&format!("host_sync_latent_ord{}", self.ordinal));
+        }
+        Ok(t)
     }
 
     fn has_artifact(&self, name: &str) -> bool {

@@ -78,6 +78,8 @@ fn start_router(
             warm_cap: 0,
             governor: None,
             fault: Default::default(),
+            replicas: 1,
+            devices: 1,
         },
         batcher.clone(),
         registry.clone(),

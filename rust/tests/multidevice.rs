@@ -1,0 +1,274 @@
+//! Multi-device placement + replica-tier correctness harness.
+//!
+//! The contract under test (ISSUE 10 / ROADMAP "multi-device"): sharding
+//! the stage graph across device ordinals and fanning waves out across
+//! replicas changes *where* a decode runs — never *what* it computes.
+//! Per-slot RNG streams are derived from request seeds, so at τ = 0 every
+//! image must be bit-identical to its solo serial decode under **every**
+//! span×device×replica placement. The cross-span handoff cost model must
+//! also stay truthful: exactly one host sync per wave per span boundary,
+//! charged on `sjd_handoff_syncs` and visible in the per-ordinal mock
+//! ledgers.
+//!
+//! Three tiers:
+//! * a placement sweep (devices × replicas) holding every output to the
+//!   solo oracle while proving each mapped ordinal actually decoded,
+//! * an exact handoff-sync count over the raw `DecodePipeline`, and
+//! * a least-loaded dispatch check: a slow replica must receive fewer
+//!   waves than its fast peer, with outputs still bit-exact.
+
+use sjd::coordinator::batcher::Batcher;
+use sjd::coordinator::pipeline::{DecodePipeline, PipelineConfig, PipelineJob};
+use sjd::coordinator::policy::DecodePolicy;
+use sjd::coordinator::router::{Router, RouterConfig};
+use sjd::coordinator::sampler::{SampleOptions, Sampler};
+use sjd::metrics::Registry;
+use sjd::runtime::HostTensor;
+use sjd::testkit::mockflow::{MockLedger, MockServeBackend};
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Flow blocks in `MockFlow::standard()` — the stage count when
+/// `stage_threads: 0` asks for one thread per block.
+const STAGES: usize = 4;
+
+/// τ = 0 decode options: full exactness sweep, bit-comparable everywhere.
+fn opts() -> SampleOptions {
+    let mut o = SampleOptions { policy: DecodePolicy::UniformJacobi, ..Default::default() };
+    o.jacobi.tau = 0.0;
+    o
+}
+
+/// The ground truth each request is held to: a bucket-1 solo decode of the
+/// same seed on a fresh single-device backend — no batching, no placement.
+fn solo_reference(seed: u64) -> Vec<f32> {
+    let be = MockServeBackend::new(&[1, 2, 4], Duration::ZERO, MockLedger::new());
+    let sampler = Sampler::new(&be, "mock", 1).expect("solo sampler");
+    let z = sampler.sample_prior_slots(&[seed]);
+    let out = sampler.decode_tokens(z, &opts()).expect("solo decode");
+    sampler.unpatchify(&out.tokens).expect("solo unpatchify")[0].data().to_vec()
+}
+
+#[test]
+fn tau0_bit_exact_across_span_device_replica_placements() {
+    // Placement sweep: (devices, replicas) over the pipelined router. Per
+    // configuration, every delivered image must equal its solo decode, the
+    // ordinals named by `device_placement(STAGES, devices)` must all have
+    // decoded (their per-ordinal ledgers saw jstep calls), no ordinal
+    // beyond the placement may have been touched, and every span boundary
+    // must have charged the handoff counter (3 boundaries per wave at
+    // 4 stages, so the total is a positive multiple of 3).
+    let seeds: Vec<u64> = (0..10).collect();
+    let want: Vec<Vec<f32>> = seeds.iter().map(|&s| solo_reference(s)).collect();
+
+    for (devices, replicas) in [(1usize, 1usize), (2, 1), (3, 1), (2, 2)] {
+        let registry = Registry::new();
+        let batcher = Batcher::new(4, Duration::from_millis(2));
+        // One ledger per *ordinal* (shared across replicas): the placement
+        // evidence is "this device decoded", not "this replica decoded".
+        let ledgers: Vec<Arc<MockLedger>> = (0..STAGES).map(|_| MockLedger::new()).collect();
+        let lgs = ledgers.clone();
+        let router = Router::start_with_devices(
+            RouterConfig {
+                artifacts_dir: "unused-by-mock".into(),
+                model: "mock".into(),
+                buckets: Vec::new(),
+                workers: 1,
+                options: opts(),
+                pipeline_depth: 2,
+                stage_threads: 0,
+                refill: false,
+                tuner: None,
+                warm_cap: 0,
+                governor: None,
+                fault: Default::default(),
+                replicas,
+                devices,
+            },
+            batcher.clone(),
+            registry.clone(),
+            move |_widx, ordinal| {
+                Ok(MockServeBackend::new(&[1, 2, 4], Duration::ZERO, lgs[ordinal].clone())
+                    .on_ordinal(ordinal))
+            },
+        )
+        .expect("router");
+
+        let handles: Vec<_> =
+            seeds.iter().map(|&s| batcher.submit_slot(s, s).expect("submit")).collect();
+        for (i, h) in handles.iter().enumerate() {
+            let img =
+                h.done.wait_timeout(Duration::from_secs(30)).expect("resolves").expect("image");
+            assert_eq!(
+                img.data(),
+                &want[i][..],
+                "devices={devices} replicas={replicas}: seed {i} must be bit-exact with solo"
+            );
+        }
+        router.shutdown();
+
+        // Placement proof: exactly the mapped ordinals decoded. The
+        // geometry probe (`factory(_, 0)`) never decodes, so an untouched
+        // ledger really means "no stage ran here".
+        let mapped = devices.clamp(1, STAGES);
+        for (ord, ledger) in ledgers.iter().enumerate() {
+            let jsteps = ledger.count_containing("_jstep");
+            if ord < mapped {
+                assert!(
+                    jsteps > 0,
+                    "devices={devices} replicas={replicas}: ordinal {ord} was placed a span \
+                     but never decoded"
+                );
+            } else {
+                assert_eq!(
+                    jsteps, 0,
+                    "devices={devices} replicas={replicas}: ordinal {ord} is outside the \
+                     placement but decoded anyway"
+                );
+            }
+        }
+        let handoffs = registry.counter("sjd_handoff_syncs").get();
+        assert!(
+            handoffs > 0 && handoffs % (STAGES as u64 - 1) == 0,
+            "devices={devices} replicas={replicas}: handoffs ({handoffs}) must be one per \
+             wave per span boundary ({} boundaries)",
+            STAGES - 1
+        );
+    }
+}
+
+#[test]
+fn exactly_one_handoff_sync_per_span_boundary() {
+    // Raw `DecodePipeline` (one submitted job = one wave, no batcher
+    // timing) so the handoff count is exact: J jobs × (STAGES − 1)
+    // boundaries. Run single-device and dual-device; tokens must match
+    // bit-for-bit and both runs must charge the identical handoff bill —
+    // placement moves spans across ordinals without adding syncs.
+    const JOBS: u64 = 5;
+    let run = |devices: usize| -> (BTreeMap<u64, HostTensor>, u64, Vec<Arc<MockLedger>>) {
+        let registry = Registry::new();
+        let ledgers: Vec<Arc<MockLedger>> = (0..STAGES).map(|_| MockLedger::new()).collect();
+        let lgs = ledgers.clone();
+        let cfg = PipelineConfig {
+            depth: 2,
+            stage_threads: 0,
+            warm_cap: 0,
+            devices,
+            ..Default::default()
+        };
+        let pipeline = DecodePipeline::start("mock", &[2], cfg, registry.clone(), move |ord| {
+            Ok(MockServeBackend::new(&[2], Duration::ZERO, lgs[ord].clone()).on_ordinal(ord))
+        })
+        .expect("pipeline");
+        let results: Arc<Mutex<BTreeMap<u64, HostTensor>>> = Arc::new(Mutex::new(BTreeMap::new()));
+        for seed in 0..JOBS {
+            let results = results.clone();
+            let job = PipelineJob {
+                seeds: vec![seed, seed + 100],
+                opts: opts(),
+                done: Box::new(move |res| {
+                    let (_imgs, out) = res.expect("pipeline decode");
+                    results.lock().unwrap().insert(seed, out.tokens);
+                }),
+            };
+            assert!(pipeline.submit(job).is_ok(), "pipeline rejected a submission");
+        }
+        pipeline.shutdown();
+        let tokens = Arc::try_unwrap(results).ok().expect("callbacks done").into_inner().unwrap();
+        assert_eq!(tokens.len(), JOBS as usize, "every job must complete");
+        (tokens, registry.counter("sjd_handoff_syncs").get(), ledgers)
+    };
+
+    let (solo_tokens, solo_handoffs, _) = run(1);
+    let (dual_tokens, dual_handoffs, dual_ledgers) = run(2);
+
+    assert_eq!(solo_tokens, dual_tokens, "dual-device τ=0 tokens diverged from single-device");
+    let expect = JOBS * (STAGES as u64 - 1);
+    assert_eq!(solo_handoffs, expect, "single-device: one handoff per wave per boundary");
+    assert_eq!(dual_handoffs, expect, "dual-device: placement must not add handoff syncs");
+
+    // Per-ordinal ledger evidence of the latent crossing hosts: with
+    // placement [0, 0, 1, 1], stages 0–1 forward from ordinal 0 and stage 2
+    // forwards from ordinal 1 (stage 3's sync is the output, same series),
+    // so both ordinals record rank-3 host syncs at least once per job.
+    for ord in 0..2 {
+        assert!(
+            dual_ledgers[ord].count(&format!("host_sync_latent_ord{ord}")) >= JOBS as usize,
+            "ordinal {ord} must sync its span output to host once per wave"
+        );
+    }
+}
+
+#[test]
+fn least_loaded_dispatch_skews_waves_away_from_slow_replica() {
+    // Two pipelined replicas behind one batcher, one decoding ~40× slower
+    // per jstep. The dispatch board gates each replica's batcher pulls on
+    // being least-loaded (in-flight-weighted), so the wave stream must skew
+    // to the fast replica — round-robin would split 50/50 and every second
+    // request would eat the slow replica's latency. Outputs stay bit-exact:
+    // routing is placement, not math.
+    let seeds: Vec<u64> = (0..24).collect();
+    let want: Vec<Vec<f32>> = seeds.iter().map(|&s| solo_reference(s)).collect();
+
+    let registry = Registry::new();
+    // Bucket-1 waves: one request per wave, so per-replica jstep counts
+    // read directly as "waves routed here".
+    let batcher = Batcher::new(1, Duration::from_millis(1));
+    let ledgers: Vec<Arc<MockLedger>> = (0..2).map(|_| MockLedger::new()).collect();
+    let lgs = ledgers.clone();
+    let router = Router::start_with_devices(
+        RouterConfig {
+            artifacts_dir: "unused-by-mock".into(),
+            model: "mock".into(),
+            buckets: Vec::new(),
+            workers: 1,
+            options: opts(),
+            pipeline_depth: 2,
+            stage_threads: 0,
+            refill: false,
+            tuner: None,
+            warm_cap: 0,
+            governor: None,
+            fault: Default::default(),
+            replicas: 2,
+            devices: 1,
+        },
+        batcher.clone(),
+        registry.clone(),
+        move |widx, _ordinal| {
+            let delay =
+                if widx == 0 { Duration::from_millis(4) } else { Duration::from_micros(100) };
+            Ok(MockServeBackend::new(&[1], delay, lgs[widx].clone()))
+        },
+    )
+    .expect("router");
+
+    let handles: Vec<_> =
+        seeds.iter().map(|&s| batcher.submit_slot(s, s).expect("submit")).collect();
+    for (i, h) in handles.iter().enumerate() {
+        let img = h.done.wait_timeout(Duration::from_secs(60)).expect("resolves").expect("image");
+        assert_eq!(
+            img.data(),
+            &want[i][..],
+            "seed {i}: replica routing must not change a single output bit"
+        );
+    }
+    router.shutdown();
+
+    let slow = ledgers[0].count_containing("_jstep");
+    let fast = ledgers[1].count_containing("_jstep");
+    assert!(
+        fast > slow,
+        "least-loaded dispatch must skew waves to the fast replica (fast {fast} jsteps vs \
+         slow {slow})"
+    );
+    // Both inflight gauges were registered (and have drained back to 0).
+    for r in 0..2 {
+        assert_eq!(
+            registry.gauge(&format!("sjd_replica_{r}_inflight")).get(),
+            0,
+            "replica {r} in-flight accounting must balance to zero after drain"
+        );
+    }
+}

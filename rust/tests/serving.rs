@@ -111,6 +111,8 @@ fn mock_router(
             warm_cap: 0,
             governor: None,
             fault: Default::default(),
+            replicas: 1,
+            devices: 1,
         },
         batcher.clone(),
         registry.clone(),
@@ -365,6 +367,8 @@ fn pipelined_router_matches_monolithic_images() {
                 warm_cap: 0,
                 governor: None,
                 fault: Default::default(),
+                replicas: 1,
+                devices: 1,
             },
             batcher.clone(),
             registry.clone(),
@@ -471,6 +475,8 @@ fn tuned_router_converges_to_offline_calibration() {
             warm_cap: 0,
             governor: None,
             fault: Default::default(),
+            replicas: 1,
+            devices: 1,
         },
         batcher.clone(),
         registry.clone(),
@@ -541,6 +547,8 @@ fn tuned_router_reverts_unpaying_init_provider_to_zeros() {
             warm_cap: 0,
             governor: None,
             fault: Default::default(),
+            replicas: 1,
+            devices: 1,
         },
         batcher.clone(),
         registry.clone(),
@@ -674,6 +682,8 @@ fn chaos_soak_every_slot_resolves_and_queues_drain() {
             warm_cap: 0,
             governor: None,
             fault: Default::default(),
+            replicas: 1,
+            devices: 1,
         },
         batcher.clone(),
         registry.clone(),
@@ -905,6 +915,8 @@ fn overload_chaos_soak_qos_statuses_and_bounded_queue() {
             warm_cap: 0,
             governor: None,
             fault: Default::default(),
+            replicas: 1,
+            devices: 1,
         },
         batcher.clone(),
         registry.clone(),
@@ -1041,6 +1053,8 @@ fn fault_config(refill: bool, options: SampleOptions, fault: FaultPolicy) -> Rou
         warm_cap: 0,
         governor: None,
         fault,
+        replicas: 1,
+        devices: 1,
     }
 }
 
@@ -1420,6 +1434,8 @@ fn serve_generate_and_metrics_end_to_end() {
             warm_cap: 0,
             governor: None,
             fault: Default::default(),
+            replicas: 1,
+            devices: 1,
         },
         batcher.clone(),
         registry.clone(),
@@ -1529,6 +1545,8 @@ fn batcher_groups_concurrent_requests() {
             warm_cap: 0,
             governor: None,
             fault: Default::default(),
+            replicas: 1,
+            devices: 1,
         },
         batcher.clone(),
         registry.clone(),
